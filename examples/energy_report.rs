@@ -1,0 +1,24 @@
+//! Full hardware-energy report for any supported network — the Table V /
+//! Table VI / Eq. 12 / Fig. 2 pipeline in one binary.
+//!
+//! Run with: `cargo run --release --example energy_report -- [network] [batch]`
+//! Networks: resnet18 resnet34 resnet20 vgg16 googlenet resnet_t cnn_s
+
+use mls_train::hw::report;
+use mls_train::hw::units::EnergyModel;
+use mls_train::mls::format::EmFormat;
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().collect();
+    let net = args.get(1).cloned().unwrap_or_else(|| "resnet34".to_string());
+    let batch: usize = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(64);
+    let em = EnergyModel::fitted();
+    let fmt = EmFormat::new(2, 4);
+
+    println!("{}", report::table5(&em));
+    println!("{}", report::table6(&net, batch, fmt, &em)?);
+    println!("{}", report::eq12(&em, fmt));
+    println!("{}", report::fig2(&net, batch, fmt, &em, None)?);
+    println!("{}", report::ratios(batch, fmt, &em)?);
+    Ok(())
+}

@@ -1,0 +1,85 @@
+//! Quickstart: the 60-second tour of the framework.
+//!
+//! 1. quantize a tensor to the MLS format and inspect it,
+//! 2. run the bit-accurate integer-path convolution vs the float path,
+//! 3. load an AOT train-step artifact and take a few real training steps,
+//! 4. print the headline energy numbers.
+//!
+//! Run with: `cargo run --release --example quickstart`
+//! (needs `make artifacts` for step 3; steps 1-2 and 4 work without).
+
+use mls_train::arith::conv::{conv2d_f32, lowbit_conv};
+use mls_train::data::{streams, SynthCifar};
+use mls_train::hw::report;
+use mls_train::hw::units::EnergyModel;
+use mls_train::mls::format::EmFormat;
+use mls_train::mls::quantizer::{quantize, QuantConfig, Rounding};
+use mls_train::runtime::Engine;
+use mls_train::util::rng::Pcg32;
+use mls_train::util::stats;
+
+fn main() -> anyhow::Result<()> {
+    println!("== 1. MLS dynamic quantization (paper Alg. 2) ==");
+    let mut rng = Pcg32::seeded(42);
+    let shape = [8usize, 16, 5, 5];
+    let x = mls_train::util::prop::grouped_tensor(&mut rng, shape);
+    let cfg = QuantConfig::default(); // <2,4> elements, <8,1> groups, nc
+    let offsets = rng.rounding_offsets(x.len());
+    let t = quantize(&x, &shape, &cfg, &offsets);
+    let q = t.dequantize();
+    println!(
+        "  {} elements as {}: {} bits/elem, {:.2}x smaller than f32, ARE {:.4}",
+        t.len(),
+        cfg.name(),
+        cfg.element_bits(),
+        t.compression_ratio(),
+        stats::average_relative_error(&x, &q),
+    );
+
+    println!("\n== 2. integer-path convolution (paper Eq. 6-8) ==");
+    let wshape = [8usize, 16, 3, 3];
+    let w = mls_train::util::prop::grouped_tensor(&mut rng, wshape);
+    let mut ncfg = cfg;
+    ncfg.rounding = Rounding::Nearest;
+    let tw = quantize(&w, &wshape, &ncfg, &[]);
+    let ta = quantize(&x, &shape, &ncfg, &[]);
+    let out = lowbit_conv(&tw, &ta, 1, 1);
+    let (zf, _) = conv2d_f32(&tw.dequantize(), wshape, &ta.dequantize(), shape, 1, 1);
+    let max_rel = out
+        .z
+        .iter()
+        .zip(&zf)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max)
+        / zf.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+    println!(
+        "  integer datapath == float path within {:.2e}; peak accumulator {} bits \
+         (paper: i32 suffices for <2,4>)",
+        max_rel, out.peak_acc_bits
+    );
+
+    println!("\n== 3. real training steps through the AOT artifact ==");
+    match Engine::from_dir("artifacts") {
+        Ok(mut engine) => {
+            let model = "resnet_t";
+            let cfg_name = "e2m4_gnc_eg8mg1_sr";
+            let ds = SynthCifar::new(Default::default());
+            let batch = engine.manifest.model(model)?.batch;
+            let mut state = engine.manifest.load_init(model)?;
+            for step in 0..5 {
+                let (images, labels) = ds.batch(batch, streams::TRAIN, step);
+                let out = engine.train_step(
+                    model, cfg_name, &mut state, &images, &labels, step as i32, 0.05,
+                )?;
+                println!("  step {step}: loss {:.4} acc {:.2}", out.loss, out.acc);
+            }
+        }
+        Err(e) => println!("  (skipped: {e:#})"),
+    }
+
+    println!("\n== 4. energy headline (paper Eq. 12 / Table VI) ==");
+    let em = EnergyModel::fitted();
+    print!("{}", report::eq12(&em, EmFormat::new(2, 4)));
+    print!("{}", report::ratios(64, EmFormat::new(2, 4), &em)?);
+    Ok(())
+}

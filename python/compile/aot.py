@@ -1,0 +1,243 @@
+"""AOT compile path: lower every (model, quant-config) step function to HLO
+text + emit the artifact manifest and initial-state blobs.
+
+Run once by `make artifacts`; Python never runs on the request path.
+
+Interchange format is HLO **text** (not a serialized HloModuleProto): jax
+>= 0.5 emits protos with 64-bit instruction ids that xla_extension 0.5.1
+(the version behind the published `xla` 0.1.6 crate) rejects
+(`proto.id() <= INT_MAX`); the text parser reassigns ids and round-trips
+cleanly. Lowering recipe follows /opt/xla-example/gen_hlo.py:
+
+    lowered = jax.jit(fn).lower(*specs)
+    mlir    = lowered.compiler_ir("stablehlo")
+    comp    = xc._xla.mlir.mlir_module_to_xla_computation(
+                  str(mlir), use_tuple_args=False, return_tuple=True)
+    text    = comp.as_hlo_text()
+
+Artifact sets
+-------------
+  core  (default): the variants used by the quickstart, the e2e example,
+        Table II / III and Fig. 6 / 7 — two CNNs x the headline configs.
+  full  (--full):  adds the Table IV ablation grid (grouping x M_g x E_x
+        x M_x on resnet_t).
+
+Each artifact is accompanied by a manifest entry recording the exact input
+and output signature, the flat-state layout, and the quant config, so the
+Rust coordinator is fully metadata-driven.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import hashlib
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+try:
+    from compile.qconfig import QuantConfig, NAMED
+    from compile import model as M
+except ImportError:  # script-style
+    from qconfig import QuantConfig, NAMED  # type: ignore
+    import model as M  # type: ignore
+
+BATCH = 32  # training batch size baked into the artifacts
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants is ESSENTIAL: the default printer elides big
+    # literals as `constant({...})`, which the downstream HLO text parser
+    # silently reads back as zeros — e.g. the SGD bn-stat mask vector,
+    # which would freeze every parameter update.
+    opts = xc._xla.HloPrintOptions()
+    opts.print_large_constants = True
+    # this jaxlib's printer emits source_end_line/... metadata attributes
+    # that xla_extension 0.5.1's text parser rejects — drop metadata.
+    opts.print_metadata = False
+    text = comp.get_hlo_module().to_string(opts)
+    assert "{...}" not in text, "elided constant survived printing"
+    return text
+
+
+def _sig(shapes_dtypes):
+    return [{"name": n, "shape": list(map(int, s)), "dtype": d}
+            for n, s, d in shapes_dtypes]
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+# ---------------------------------------------------------------------------
+# Ablation grid (paper Table IV rows: grouping x M_g x E_x, each x M_x)
+# ---------------------------------------------------------------------------
+
+def table4_grid():
+    rows = [
+        # (#group, M_g, E_x) following Table IV; grouping "none" drops S_g.
+        ("none", None, 0),
+        ("second", 0, 0),     # grouped by c (2nd dim of activations/weights)
+        ("first", 0, 0),      # grouped by n (1st dim)
+        ("both", 0, 0),       # n x c
+        ("both", 1, 0),
+        ("none", None, 1),
+        ("none", None, 2),
+        ("both", 1, 1),
+        ("both", 1, 2),
+    ]
+    cfgs = []
+    for grouping, m_g, e_x in rows:
+        for m_x in (4, 3, 2, 1):
+            cfgs.append(QuantConfig(
+                e_x=e_x, m_x=m_x,
+                e_g=8, m_g=(m_g if m_g is not None else 0),
+                grouping=grouping,
+            ))
+    return cfgs
+
+
+def core_configs():
+    return [NAMED[k] for k in ("fp32", "e2m4", "e2m1", "e1m1", "int4", "int2", "e2m3")]
+
+
+# ---------------------------------------------------------------------------
+# Artifact emission
+# ---------------------------------------------------------------------------
+
+def emit_model(out_dir: str, model_name: str, cfgs, probes_for, manifest: dict,
+               skip_unchanged: bool = True):
+    built_meta = None
+    for cfg in cfgs:
+        store, init, fns, meta = M.build_model(model_name, cfg, BATCH)
+        if built_meta is None:
+            built_meta = meta
+            manifest["models"][model_name] = meta
+            init_file = f"{model_name}_init.bin"
+            with open(os.path.join(out_dir, init_file), "wb") as f:
+                f.write(np.asarray(init, np.float32).tobytes())
+            manifest["init"][model_name] = {
+                "file": init_file, "dim": int(init.size)}
+
+        sd, b = meta["state_dim"], meta["batch"]
+        img = tuple(meta["img_shape"])
+        in_train = [
+            ("state", (sd,), "f32"), ("images", (b,) + img, "f32"),
+            ("labels", (b,), "i32"), ("seed", (), "i32"), ("lr", (), "f32"),
+        ]
+        out_train = [("state", (sd,), "f32"), ("loss", (), "f32"), ("acc", (), "f32")]
+        name = f"{model_name}__{cfg.name()}__train"
+        _lower_and_write(
+            out_dir, name, fns["train_step"],
+            [_spec((sd,)), _spec((b,) + img), _spec((b,), jnp.int32),
+             _spec((), jnp.int32), _spec((), jnp.float32)],
+            manifest, model_name, cfg, "train_step",
+            _sig(in_train), _sig(out_train), skip_unchanged)
+
+        if cfg.name() == "fp32":
+            in_eval = [("state", (sd,), "f32"), ("images", (b,) + img, "f32"),
+                       ("labels", (b,), "i32")]
+            out_eval = [("loss", (), "f32"), ("acc", (), "f32")]
+            _lower_and_write(
+                out_dir, f"{model_name}__eval", fns["eval_step"],
+                [_spec((sd,)), _spec((b,) + img), _spec((b,), jnp.int32)],
+                manifest, model_name, cfg, "eval_step",
+                _sig(in_eval), _sig(out_eval), skip_unchanged)
+
+        if cfg.name() in probes_for:
+            pn = meta["probe_names"]
+            outs = (
+                [(f"A.{n}", tuple(meta["probe_a_shapes"][n]), "f32") for n in pn]
+                + [(f"E.{n}", tuple(meta["probe_e_shapes"][n]), "f32") for n in pn]
+                + [(f"W.{n}", tuple(next(s for s in meta["specs"]
+                                         if s["name"] == f"{n}.w")["shape"]), "f32")
+                   for n in pn]
+            )
+            in_probe = [("state", (sd,), "f32"), ("images", (b,) + img, "f32"),
+                        ("labels", (b,), "i32"), ("seed", (), "i32")]
+            _lower_and_write(
+                out_dir, f"{model_name}__{cfg.name()}__probe", fns["probe_step"],
+                [_spec((sd,)), _spec((b,) + img), _spec((b,), jnp.int32),
+                 _spec((), jnp.int32)],
+                manifest, model_name, cfg, "probe_step",
+                _sig(in_probe), _sig(outs), skip_unchanged)
+
+
+def _lower_and_write(out_dir, name, fn, specs, manifest, model_name, cfg,
+                     fn_kind, inputs, outputs, skip_unchanged):
+    path = os.path.join(out_dir, f"{name}.hlo.txt")
+    entry = {
+        "name": name, "file": f"{name}.hlo.txt", "fn": fn_kind,
+        "model": model_name, "cfg": cfg.to_dict(),
+        "inputs": inputs, "outputs": outputs,
+    }
+    manifest["artifacts"].append(entry)
+    if skip_unchanged and os.path.exists(path):
+        print(f"  [skip] {name}")
+        return
+    t0 = time.time()
+    # keep_unused=True: the fp32 variants ignore `seed`, but the artifact
+    # signature must stay identical across configs (the runtime feeds a
+    # fixed 5-input train-step contract).
+    text = to_hlo_text(jax.jit(fn, keep_unused=True).lower(*specs))
+    with open(path, "w") as f:
+        f.write(text)
+    print(f"  [lower] {name}: {len(text)/1e6:.1f} MB in {time.time()-t0:.1f}s")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--full", action="store_true",
+                    help="also emit the Table IV ablation grid")
+    ap.add_argument("--quant-impl", default="pallas", choices=["pallas", "ref"])
+    ap.add_argument("--models", default="resnet_t,cnn_s")
+    args = ap.parse_args()
+
+    M.set_quant_impl(args.quant_impl)
+    out_dir = args.out
+    os.makedirs(out_dir, exist_ok=True)
+    os.makedirs(os.path.join(out_dir, "golden"), exist_ok=True)
+
+    manifest = {
+        "version": 1,
+        "batch": BATCH,
+        "img_shape": list(M.IMG_SHAPE),
+        "num_classes": M.NUM_CLASSES,
+        "quant_impl": args.quant_impl,
+        "models": {},
+        "init": {},
+        "artifacts": [],
+    }
+
+    models = args.models.split(",")
+    for model_name in models:
+        print(f"model {model_name}")
+        cfgs = core_configs()
+        if args.full and model_name == "resnet_t":
+            seen = {c.name() for c in cfgs}
+            for c in table4_grid():
+                if c.name() not in seen:
+                    cfgs.append(c)
+                    seen.add(c.name())
+        probes_for = {NAMED["e2m4"].name()} if model_name == "resnet_t" else set()
+        emit_model(out_dir, model_name, cfgs, probes_for, manifest)
+
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote {os.path.join(out_dir, 'manifest.json')} "
+          f"({len(manifest['artifacts'])} artifacts)")
+
+
+if __name__ == "__main__":
+    main()

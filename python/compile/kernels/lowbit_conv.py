@@ -1,0 +1,132 @@
+"""Pallas kernel: low-bit tensor convolution arithmetic (Eq. 6-8).
+
+Demonstrates, in-kernel, the paper's hardware datapath on the *stored
+integer fields* of two MLS tensors:
+
+  intra-group (Eq. 7):  (M+1)-bit integer fraction products, aligned by a
+      <= 2*(2^E - 2)-bit shift, accumulated in an INTEGER register whose
+      width is the Sec. V-C analysis (2M + 2^{E+1} - 2 product bits plus
+      log2(L) accumulation headroom);
+  group scale (Eq. 8):  S_p = S_g^w * S_g^a is a <E, 2> value whose fraction
+      is one of {1, 1.5, 2.25} = {4, 6, 9} / 4 -- applied as exact
+      shift-adds (integer multiply by 4/6/9, then a power-of-two exponent);
+  inter-group:          floating-point adder tree (the only FloatAdd the
+      datapath keeps -- Table VI row "Conv / FloatAdd").
+
+The kernel computes dot products between a weight block and a batch of
+activation patches laid out im2col-style:
+
+  weights:    fields of shape (G, L)      -- G groups (ci), L = K*K taps
+  activation: fields of shape (X, G, L)   -- X output positions
+  output:     z of shape (X,)             -- one output channel's pixels
+
+and is validated against the float fake-quant path in pytest. The training
+graph itself uses fake-quant + XLA conv (exactly the paper's GPU
+simulation); this kernel plus rust/src/arith/ carry the hardware-exactness
+claims.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+try:
+    from compile.qconfig import QuantConfig
+except ImportError:  # script-style import
+    from qconfig import QuantConfig  # type: ignore
+
+
+def _lowbit_dot_kernel(
+    wf_ref, we_ref, ws_ref, wg_ref,
+    af_ref, ae_ref, as_ref, ag_ref,
+    z_ref, *, cfg: QuantConfig,
+):
+    """One grid step: X_b output positions against the full (G, L) weights.
+
+    Field refs: f = integer fraction (man, plus implicit bit info in e),
+    e = exponent code, s = sign, g = packed group-scale codes (exp_code*4 +
+    man combined at trace time -- see pack_group_codes).
+    """
+    emin = 1 - 2 ** cfg.e_x
+    two_m = 2 ** cfg.m_x
+
+    w_man, w_code, w_sign = wf_ref[...], we_ref[...], ws_ref[...]        # (G, L)
+    a_man, a_code, a_sign = af_ref[...], ae_ref[...], as_ref[...]        # (X_b, G, L)
+
+    def frac_int(man, code):
+        return jnp.where(code >= 1, man + two_m, man)
+
+    def exp_val(code):
+        return jnp.where(code >= 1, -code, emin)
+
+    fw = frac_int(w_man, w_code)[None, :, :]          # (1, G, L)
+    fa = frac_int(a_man, a_code)
+    shift = (exp_val(w_code)[None, :, :] - emin) + (exp_val(a_code) - emin)
+    prod = (w_sign[None, :, :] * a_sign) * fw * fa
+    # Intra-group integer MAC (Eq. 7): int32 accumulator, exactly the
+    # hardware's LocalACC register.
+    p = jnp.sum(prod * jnp.left_shift(jnp.int32(1), shift), axis=2)      # (X_b, G)
+
+    # Group scale unit (Eq. 8): S_p = S_g^w * S_g^a as <E, 2>;
+    # integer fraction F in {4, 6, 9} (= {1, 1.5, 2.25} * 4), plus the code
+    # sum as the power-of-two exponent. P * F is two shift-adds in hardware
+    # (F = 4 + 2*(mw + ma) + mw*ma); here the integer multiply is exact.
+    wg = wg_ref[...]                                   # (G, 2): [exp_code, man]
+    ag = ag_ref[...]                                   # (G, 2)
+    f_scale = 4 + 2 * (wg[:, 1] + ag[:, 1]) + wg[:, 1] * ag[:, 1]        # (G,)
+    code_sum = wg[:, 0] + ag[:, 0]                                        # (G,)
+    pf = (p * f_scale[None, :]).astype(jnp.float32)
+    contrib = pf * jnp.exp2(-code_sum.astype(jnp.float32))[None, :]
+
+    # Inter-group adder tree: the one floating-point accumulation kept.
+    fixed_point = jnp.float32(2.0 ** (2 * emin - 2 * cfg.m_x - 2))
+    z_ref[...] = jnp.sum(contrib, axis=1) * fixed_point
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def lowbit_conv_dot(w_fields, a_fields, cfg: QuantConfig):
+    """Eq. 6-8 on stored fields. w_fields: dict of (G, L) arrays
+    {x_man, x_exp_code, sign, sg_exp_code, sg_man} (group scales (G,));
+    a_fields: same with leading X axis for positions, group scales (G,).
+
+    Returns z (X,) -- NOT yet multiplied by S_t^w * S_t^a (the paper defers
+    the tensor scale to the next layer, Sec. V-B "can usually be omitted").
+    """
+    x_pos, g, l = a_fields["x_man"].shape
+    xb = 8 if x_pos % 8 == 0 else 1
+
+    wg = jnp.stack([w_fields["sg_exp_code"], w_fields["sg_man"]], axis=1).astype(jnp.int32)
+    ag = jnp.stack([a_fields["sg_exp_code"], a_fields["sg_man"]], axis=1).astype(jnp.int32)
+
+    kernel = functools.partial(_lowbit_dot_kernel, cfg=cfg)
+    z = pl.pallas_call(
+        kernel,
+        grid=(x_pos // xb,),
+        in_specs=[
+            pl.BlockSpec((g, l), lambda i: (0, 0)),
+            pl.BlockSpec((g, l), lambda i: (0, 0)),
+            pl.BlockSpec((g, l), lambda i: (0, 0)),
+            pl.BlockSpec((g, 2), lambda i: (0, 0)),
+            pl.BlockSpec((xb, g, l), lambda i: (i, 0, 0)),
+            pl.BlockSpec((xb, g, l), lambda i: (i, 0, 0)),
+            pl.BlockSpec((xb, g, l), lambda i: (i, 0, 0)),
+            pl.BlockSpec((g, 2), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((xb,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((x_pos,), jnp.float32),
+        interpret=True,
+    )(
+        w_fields["x_man"].astype(jnp.int32),
+        w_fields["x_exp_code"].astype(jnp.int32),
+        w_fields["sign"].astype(jnp.int32),
+        wg,
+        a_fields["x_man"].astype(jnp.int32),
+        a_fields["x_exp_code"].astype(jnp.int32),
+        a_fields["sign"].astype(jnp.int32),
+        ag,
+    )
+    return z

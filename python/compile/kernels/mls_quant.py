@@ -1,0 +1,149 @@
+"""Pallas kernel: MLS dynamic quantization (Alg. 2) -- the L1 hot-spot.
+
+The kernel fake-quantizes one 2-D view ``(groups, elements-per-group)`` of a
+tensor. The grid iterates over group blocks; each program:
+
+  1. loads a ``(G_b, L)`` block of the tensor plus the matching rounding
+     offsets into VMEM,
+  2. reduces the per-group maxima ``S_r`` (row max),
+  3. derives the hardware group scale ``S_g`` in <E_g, M_g> (ceil-rounded
+     fraction, carry into the clipped exponent -- Alg. 2 lines 4-8),
+  4. quantizes every element to <E_x, M_x> with stochastic rounding and
+     IEEE-754 gradual underflow (lines 9-16),
+  5. writes the dequantized block and the per-group scales.
+
+The tensor-wise scale ``S_t`` (a single fp32 max, Alg. 2 line 3) is computed
+outside the kernel -- it is a whole-tensor reduction that XLA fuses into the
+producer; its cost is part of the DQ overhead row of Table VI either way.
+
+TPU mapping (DESIGN.md "Hardware adaptation"): one group block = one VMEM
+tile (the adder-tree unit's local buffer analog); the row-max + quantize is
+VPU element work; BlockSpec expresses the HBM->VMEM schedule the paper's
+accelerator realises with its local accumulators. ``interpret=True``
+everywhere: the CPU PJRT plugin cannot run Mosaic custom-calls, and all
+correctness claims are made on the interpret path.
+
+VMEM budget (<= 4 MiB per block, documented per DESIGN.md "Perf"): with the
+default block of 8 groups x L <= 16384 elements x 3 resident f32 planes
+(x, r, q) the footprint is 8*16384*4*3 = 1.5 MiB.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+try:
+    from compile.qconfig import QuantConfig
+    from compile.kernels import ref
+except ImportError:  # script-style import
+    from qconfig import QuantConfig  # type: ignore
+    import ref  # type: ignore
+
+# Upper bound on groups handled by one program (tuned in the perf pass; see
+# EXPERIMENTS.md section Perf for the block-shape iteration log). On the CPU
+# interpret path a single whole-tensor block both avoids the per-grid-step
+# while-loop (5x faster XLA compile of the artifact) and runs fastest; the
+# largest tensor in the shipped models is 512 groups x 256 elements = 512 KiB
+# per resident f32 plane, comfortably within the 4 MiB VMEM budget the
+# DESIGN.md TPU mapping assumes.
+MAX_GROUP_BLOCK = 4096
+
+
+def _quant_block_kernel(x_ref, r_ref, st_ref, q_ref, sg_ref, *, cfg: QuantConfig):
+    """One grid step: fake-quantize a (G_b, L) block of grouped values."""
+    x = x_ref[...]
+    r = r_ref[...]
+    s_t = st_ref[0, 0]
+    s_t_safe = jnp.where(s_t > 0, s_t, jnp.float32(1.0))
+
+    sign = jnp.sign(x)
+    s_r = jnp.max(jnp.abs(x), axis=1, keepdims=True)          # (G_b, 1)
+    sgf = s_r / s_t_safe
+    s_g = ref.quantize_group_scale(sgf, cfg.e_g, cfg.m_g)      # (G_b, 1)
+    xf = jnp.abs(x) / (s_g * s_t_safe)
+    xbar = ref.quantize_element(xf, cfg.e_x, cfg.m_x, r)
+    q = sign * s_t_safe * s_g * xbar
+    q = jnp.where(s_t > 0, q, jnp.zeros_like(q))
+
+    q_ref[...] = q.astype(jnp.float32)
+    sg_ref[...] = s_g.astype(jnp.float32)
+
+
+def _pick_group_block(n_groups: int) -> int:
+    """Largest divisor of n_groups that is <= MAX_GROUP_BLOCK."""
+    for gb in range(min(MAX_GROUP_BLOCK, n_groups), 0, -1):
+        if n_groups % gb == 0:
+            return gb
+    return 1
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def mls_fake_quant_2d(x2d, r2d, cfg: QuantConfig):
+    """Pallas fake-quant over a pre-grouped 2-D view (groups, group_len).
+
+    Returns (q2d, s_g) where s_g has shape (groups, 1).
+    """
+    n_groups, group_len = x2d.shape
+    gb = _pick_group_block(n_groups)
+    s_t = jnp.max(jnp.abs(x2d)).reshape(1, 1)
+
+    kernel = functools.partial(_quant_block_kernel, cfg=cfg)
+    q2d, sg = pl.pallas_call(
+        kernel,
+        grid=(n_groups // gb,),
+        in_specs=[
+            pl.BlockSpec((gb, group_len), lambda i: (i, 0)),
+            pl.BlockSpec((gb, group_len), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((gb, group_len), lambda i: (i, 0)),
+            pl.BlockSpec((gb, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n_groups, group_len), jnp.float32),
+            jax.ShapeDtypeStruct((n_groups, 1), jnp.float32),
+        ],
+        interpret=True,
+    )(x2d.astype(jnp.float32), r2d.astype(jnp.float32), s_t)
+    return q2d, sg
+
+
+def _to_grouped_2d(x, grouping: str):
+    """Reshape/transpose an N-D tensor to (groups, group_len) plus the
+    callable that undoes it. Grouping follows ref.group_axes semantics."""
+    shape = x.shape
+    if grouping == "none":
+        flat = x.reshape(1, -1)
+        return flat, lambda q: q.reshape(shape)
+    if grouping == "first":
+        flat = x.reshape(shape[0], -1)
+        return flat, lambda q: q.reshape(shape)
+    if grouping == "second":
+        perm = (1, 0) + tuple(range(2, x.ndim))
+        xt = jnp.transpose(x, perm)
+        tshape = xt.shape
+        flat = xt.reshape(shape[1], -1)
+        return flat, lambda q: jnp.transpose(q.reshape(tshape), perm)
+    if grouping == "both":
+        flat = x.reshape(shape[0] * shape[1], -1)
+        return flat, lambda q: q.reshape(shape)
+    raise ValueError(f"unknown grouping {grouping!r}")
+
+
+def mls_fake_quant(x, cfg: QuantConfig, r=None):
+    """N-D fake-quant through the Pallas kernel; drop-in replacement for
+    ref.mls_fake_quant (bit-exact on identical inputs)."""
+    if not cfg.enabled:
+        return jnp.asarray(x, jnp.float32)
+    x = jnp.asarray(x, jnp.float32)
+    if r is None or cfg.rounding == "nearest":
+        r = jnp.zeros_like(x)
+    x2d, undo = _to_grouped_2d(x, cfg.grouping)
+    r2d, _ = _to_grouped_2d(jnp.asarray(r, jnp.float32), cfg.grouping)
+    q2d, _sg = mls_fake_quant_2d(x2d, r2d, cfg)
+    return undo(q2d)

@@ -1,0 +1,352 @@
+"""Pure-jnp reference (oracle) for the MLS tensor format.
+
+This file is the CANONICAL numerics spec of the repo. Three implementations
+must agree with it bit-exactly on the same inputs:
+
+  1. the Pallas kernel (kernels/mls_quant.py), checked by pytest,
+  2. the Rust bit-accurate quantizer (rust/src/mls/), checked against
+     golden vectors emitted by python/tests/test_golden.py,
+  3. the integer-path convolution arithmetic (kernels/lowbit_conv.py and
+     rust/src/arith/), checked against the float fake-quant path.
+
+Format definition (paper Sec. IV + V-C, Alg. 2) — <E, M> with no sign bit:
+
+  exponent code c in [0, 2^E - 1]
+    c >= 1  (normal):     value = (1 + man / 2^M) * 2^(-c)
+    c == 0  (subnormal):  value = (     man / 2^M) * 2^(emin)
+  where emin = 1 - 2^E is the minimum normal exponent. This yields
+  2^E - 1 normal levels (exponents -1 .. 1-2^E) plus a gradual-underflow
+  level, exactly the "minimum value of exponent represents underflow"
+  convention of Sec. V-C. Mantissa rounding saturates within its exponent
+  level (Alg. 2 line 13: Clip(SRound(.), 0, 2^M - 1)) -- no carry, mirroring
+  the paper's float simulation and the hardware's truncate-clip datapath.
+
+  NearestRound(x) is floor(x + 0.5) (round-half-up) so that the stochastic
+  rounding SRound(x, r) = NearestRound(x + r), r ~ U[-1/2, 1/2), is a pure
+  add-then-floor -- identical in jnp, Pallas and Rust.
+
+Exponent/fraction extraction uses the IEEE-754 bit pattern directly
+(the paper: "in the hardware design, the exponent and mantissa are obtained
+directly"), which is exact, and which both jnp and Rust reproduce verbatim.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+try:  # package-style import (pytest from python/)
+    from compile.qconfig import QuantConfig
+except ImportError:  # script-style import
+    from qconfig import QuantConfig  # type: ignore
+
+
+# --------------------------------------------------------------------------
+# IEEE-754 f32 field extraction (exact, branch-free, jnp + pallas friendly)
+# --------------------------------------------------------------------------
+
+def f32_exponent(x):
+    """Unbiased exponent e of |x| = f * 2^e with f in [1, 2).
+
+    f32 denormals and zero map to e = -127 which is always below any MLS
+    emin, i.e. they take the gradual-underflow path.
+    """
+    bits = jnp.asarray(x, jnp.float32).view(jnp.uint32)
+    return (jnp.right_shift(bits, jnp.uint32(23)) & jnp.uint32(0xFF)).astype(jnp.int32) - 127
+
+
+def f32_fraction(x):
+    """Fraction f in [1, 2) of |x| (garbage for zero/denormal inputs; callers
+    must select the underflow branch for those)."""
+    bits = jnp.asarray(x, jnp.float32).view(jnp.uint32)
+    frac_bits = (bits & jnp.uint32(0x007FFFFF)) | jnp.uint32(0x3F800000)
+    return frac_bits.view(jnp.float32)
+
+
+
+def exp2i(k):
+    """EXACT 2^k for integer k (vectorized), built from the IEEE-754 bit
+    pattern. XLA lowers exp2 to a polynomial approximation on CPU that can
+    be off by several ulp even for integer arguments (e.g. 2^-15), which
+    would break bit-exactness against the Rust mirror (format::exp2i).
+    Handles the normal range via the exponent field and [-149, -127] via
+    subnormal bits; inputs are clipped to [-149, 127] (all call sites stay
+    within that range by construction)."""
+    k = jnp.asarray(k, jnp.int32)
+    kn = jnp.clip(k, -126, 127)
+    normal = jnp.left_shift((kn + 127).astype(jnp.uint32), jnp.uint32(23)).view(jnp.float32)
+    sub_shift = jnp.clip(k + 149, 0, 22).astype(jnp.uint32)
+    sub = jnp.left_shift(jnp.uint32(1), sub_shift).view(jnp.float32)
+    return jnp.where(k >= -126, normal, jnp.where(k >= -149, sub, jnp.float32(0.0)))
+
+
+# --------------------------------------------------------------------------
+# Element quantization  (Alg. 2 lines 9-16)
+# --------------------------------------------------------------------------
+
+def quantize_element(xf, e_x: int, m_x: int, r):
+    """Quantize xf (>= 0, already divided by S_t * S_g, so xf <= 1) to the
+    <E_x, M_x> element format. ``r`` is the rounding offset tensor:
+    zeros for nearest rounding, U[-1/2, 1/2) for stochastic rounding.
+
+    Returns the dequantized float value (the paper's float simulation).
+    """
+    xf = jnp.asarray(xf, jnp.float32)
+    emin = 1 - 2 ** e_x          # minimum normal exponent
+    two_m = np.float32(2.0 ** m_x)
+
+    exp = f32_exponent(xf)
+
+    # Normal path: clip exponent to [emin, -1] (Alg. 2 line 15), recompute
+    # the fraction against the clipped exponent so that overflow (xf == 1.0,
+    # exponent 0) saturates via the mantissa clip below.
+    exp_cl = jnp.clip(exp, emin, -1)
+    y = xf * exp2i(-exp_cl)       # xf / 2^exp_cl
+    man_n = jnp.floor((y - 1.0) * two_m + r + 0.5)
+    man_n = jnp.clip(man_n, 0.0, two_m - 1.0)
+    q_n = (1.0 + man_n / two_m) * exp2i(exp_cl)
+
+    # Gradual-underflow path (Alg. 2 lines 11-14): xf < 2^emin is encoded
+    # with an implicit leading 0 at level emin.
+    man_s = jnp.floor(xf * np.float32(2.0 ** (m_x - emin)) + r + 0.5)
+    man_s = jnp.clip(man_s, 0.0, two_m - 1.0)
+    q_s = man_s * np.float32(2.0 ** (emin - m_x))
+
+    # E == 0 has no normal levels (2^E - 1 == 0): everything is fixed point
+    # (the paper's "single number" rows). Otherwise IEEE-style underflow.
+    if e_x == 0:
+        return q_s.astype(jnp.float32)
+    underflow = xf < np.float32(2.0 ** emin)
+    return jnp.where(underflow, q_s, q_n).astype(jnp.float32)
+
+
+def element_codes(xf, e_x: int, m_x: int, r):
+    """Same as quantize_element but returns the stored integer fields
+    (exponent code c in [0, 2^E - 1], mantissa in [0, 2^M - 1]) used by the
+    integer-path arithmetic and the golden cross-layer tests."""
+    xf = jnp.asarray(xf, jnp.float32)
+    emin = 1 - 2 ** e_x
+    two_m = np.float32(2.0 ** m_x)
+
+    exp = f32_exponent(xf)
+    exp_cl = jnp.clip(exp, emin, -1)
+    y = xf * exp2i(-exp_cl)
+    man_n = jnp.clip(jnp.floor((y - 1.0) * two_m + r + 0.5), 0.0, two_m - 1.0)
+    man_s = jnp.clip(
+        jnp.floor(xf * np.float32(2.0 ** (m_x - emin)) + r + 0.5), 0.0, two_m - 1.0
+    )
+
+    if e_x == 0:  # fixed point: all codes 0 (see quantize_element)
+        return jnp.zeros_like(exp_cl), man_s.astype(jnp.int32)
+    underflow = xf < np.float32(2.0 ** emin)
+    code = jnp.where(underflow, 0, -exp_cl).astype(jnp.int32)  # c = -exp (normal), 0 (sub)
+    man = jnp.where(underflow, man_s, man_n).astype(jnp.int32)
+    return code, man
+
+
+def decode_element(code, man, e_x: int, m_x: int):
+    """Inverse of element_codes: stored fields -> float value."""
+    emin = 1 - 2 ** e_x
+    two_m = np.float32(2.0 ** m_x)
+    code = jnp.asarray(code, jnp.int32)
+    man_f = jnp.asarray(man, jnp.float32)
+    normal = code >= 1
+    q_n = (1.0 + man_f / two_m) * exp2i(-code)
+    q_s = man_f * np.float32(2.0 ** (emin - m_x))
+    return jnp.where(normal, q_n, q_s).astype(jnp.float32)
+
+
+# --------------------------------------------------------------------------
+# Group-scale quantization  (Alg. 2 lines 4-8)
+# --------------------------------------------------------------------------
+
+def quantize_group_scale(sgf, e_g: int, m_g: int):
+    """Quantize sgf = S_r / S_t in [0, 1] to the <E_g, M_g> group format.
+
+    Ceil-rounds the fraction (Alg. 2 line 7) with carry into the exponent so
+    that S_g >= sgf always holds (dominance: elements never exceed 1 after
+    group scaling). Exponent range is [1 - 2^E_g, 0] (Alg. 2 line 6; 0 is
+    reachable because the max group has sgf == 1). All-zero groups get the
+    smallest scale so the element divide stays finite.
+    """
+    sgf = jnp.asarray(sgf, jnp.float32)
+    egmin = 1 - 2 ** e_g
+    two_mg = np.float32(2.0 ** m_g)
+
+    exp = f32_exponent(sgf)
+    exp_cl = jnp.clip(exp, egmin, 0)
+    y = sgf * exp2i(-exp_cl)
+    man = jnp.ceil((y - 1.0) * two_mg)
+    # Carry: man == 2^M_g means the fraction hit 2.0 -> bump the exponent.
+    carry = man >= two_mg
+    man = jnp.where(carry, 0.0, jnp.clip(man, 0.0, two_mg - 1.0))
+    exp_cl = jnp.clip(exp_cl + carry.astype(jnp.int32), egmin, 0)
+    sg = (1.0 + man / two_mg) * exp2i(exp_cl)
+    # Zero / below-minimum groups: pin to the smallest representable scale.
+    # The pin is clamped to a normal f32 (2^-126) so the float simulation
+    # never divides by a flushed-to-zero 2^egmin (egmin is -255 for E_g=8);
+    # such groups hold only zeros/denormals, which quantize to 0 anyway.
+    egpin = max(egmin, -126)
+    tiny = sgf <= np.float32(2.0 ** egpin)
+    sg = jnp.where(tiny, np.float32(2.0 ** egpin), sg)
+    return sg.astype(jnp.float32)
+
+
+def group_scale_codes(sgf, e_g: int, m_g: int):
+    """Stored fields (exponent code in [0, 2^E_g - 1] meaning 2^-c, mantissa)
+    of the group scale; used by the shift-add unit (Eq. 8) and goldens."""
+    sgf = jnp.asarray(sgf, jnp.float32)
+    egmin = 1 - 2 ** e_g
+    two_mg = np.float32(2.0 ** m_g)
+    exp = f32_exponent(sgf)
+    exp_cl = jnp.clip(exp, egmin, 0)
+    y = sgf * exp2i(-exp_cl)
+    man = jnp.ceil((y - 1.0) * two_mg)
+    carry = man >= two_mg
+    man = jnp.where(carry, 0.0, jnp.clip(man, 0.0, two_mg - 1.0))
+    exp_cl = jnp.clip(exp_cl + carry.astype(jnp.int32), egmin, 0)
+    egpin = max(egmin, -126)
+    tiny = sgf <= np.float32(2.0 ** egpin)
+    exp_cl = jnp.where(tiny, egpin, exp_cl)
+    man = jnp.where(tiny, jnp.zeros_like(man), man)
+    return (-exp_cl).astype(jnp.int32), man.astype(jnp.int32)
+
+
+# --------------------------------------------------------------------------
+# Grouping helpers
+# --------------------------------------------------------------------------
+
+def group_axes(grouping: str, ndim: int):
+    """Axes reduced when computing the group max of an ndim tensor."""
+    if grouping == "none":
+        return tuple(range(ndim))
+    if grouping == "first":
+        return tuple(range(1, ndim))
+    if grouping == "second":
+        return (0,) + tuple(range(2, ndim))
+    if grouping == "both":
+        return tuple(range(2, ndim))
+    raise ValueError(f"unknown grouping {grouping!r}")
+
+
+def group_max(x, grouping: str):
+    """Per-group maximum of |x| with keepdims (broadcastable over x)."""
+    axes = group_axes(grouping, x.ndim)
+    return jnp.max(jnp.abs(x), axis=axes, keepdims=True)
+
+
+# --------------------------------------------------------------------------
+# Full dynamic quantization (Alg. 2) -- fake-quant (dequantized) output
+# --------------------------------------------------------------------------
+
+def mls_fake_quant(x, cfg: QuantConfig, r=None):
+    """DynamicQuantization + dequantize: the float-simulation the paper runs
+    on GPU. Returns a tensor of the same shape as x.
+
+    r: rounding-offset tensor with the same shape as x (U[-1/2, 1/2) for
+    stochastic rounding). None = nearest rounding (zeros).
+    """
+    if not cfg.enabled:
+        return jnp.asarray(x, jnp.float32)
+    x = jnp.asarray(x, jnp.float32)
+    if r is None or cfg.rounding == "nearest":
+        r = jnp.zeros_like(x)
+
+    sign = jnp.sign(x)
+    s_r = group_max(x, cfg.grouping)                 # per-group max, keepdims
+    s_t = jnp.max(s_r)                               # tensor scale (fp32)
+    s_t_safe = jnp.where(s_t > 0, s_t, jnp.float32(1.0))
+    sgf = s_r / s_t_safe
+    s_g = quantize_group_scale(sgf, cfg.e_g, cfg.m_g)
+    xf = jnp.abs(x) / (s_g * s_t_safe)
+    xbar = quantize_element(xf, cfg.e_x, cfg.m_x, r)
+    q = sign * s_t_safe * s_g * xbar
+    return jnp.where(s_t > 0, q, jnp.zeros_like(q)).astype(jnp.float32)
+
+
+def mls_quantize_fields(x, cfg: QuantConfig, r=None):
+    """Full decomposition into stored fields, for goldens / integer path.
+
+    Returns dict with: sign (in {-1,0,1}), s_t (scalar f32), s_g (group f32),
+    sg_exp_code / sg_man (group-shaped int32), x_exp_code / x_man
+    (element-shaped int32), and q (dequantized f32, == mls_fake_quant).
+    """
+    x = jnp.asarray(x, jnp.float32)
+    if r is None or cfg.rounding == "nearest":
+        r = jnp.zeros_like(x)
+    sign = jnp.sign(x).astype(jnp.int32)
+    s_r = group_max(x, cfg.grouping)
+    s_t = jnp.max(s_r)
+    s_t_safe = jnp.where(s_t > 0, s_t, jnp.float32(1.0))
+    sgf = s_r / s_t_safe
+    sg_exp, sg_man = group_scale_codes(sgf, cfg.e_g, cfg.m_g)
+    s_g = quantize_group_scale(sgf, cfg.e_g, cfg.m_g)
+    xf = jnp.abs(x) / (s_g * s_t_safe)
+    x_exp, x_man = element_codes(xf, cfg.e_x, cfg.m_x, r)
+    xbar = decode_element(x_exp, x_man, cfg.e_x, cfg.m_x)
+    q = sign.astype(jnp.float32) * s_t_safe * s_g * xbar
+    q = jnp.where(s_t > 0, q, jnp.zeros_like(q))
+    return {
+        "sign": sign,
+        "s_t": jnp.where(s_t > 0, s_t, jnp.float32(0.0)),
+        "s_g": s_g,
+        "sg_exp_code": sg_exp,
+        "sg_man": sg_man,
+        "x_exp_code": x_exp,
+        "x_man": x_man,
+        "q": q.astype(jnp.float32),
+    }
+
+
+# --------------------------------------------------------------------------
+# Quantization-error metric (Fig. 7)
+# --------------------------------------------------------------------------
+
+def average_relative_error(x, cfg: QuantConfig):
+    """ARE = mean|q(x) - x| / mean|x| (nearest rounding), the per-layer
+    quantization-error statistic plotted in Fig. 7."""
+    import dataclasses as _dc
+
+    x = jnp.asarray(x, jnp.float32)
+    q = mls_fake_quant(x, _dc.replace(cfg, rounding="nearest"))
+    denom = jnp.mean(jnp.abs(x))
+    denom = jnp.where(denom > 0, denom, jnp.float32(1.0))
+    return jnp.mean(jnp.abs(q - x)) / denom
+
+
+# --------------------------------------------------------------------------
+# Reference integer-path arithmetic (Eq. 7) on grouped blocks
+# --------------------------------------------------------------------------
+
+def intra_group_mac_ref(w_fields, a_fields, e_x: int, m_x: int):
+    """Integer intra-group MAC (Eq. 7) over the last axis.
+
+    w_fields / a_fields: dicts with sign (+-1/0), x_exp_code, x_man arrays
+    of shape (..., L); the group axis is everything but the last. Returns
+    the integer partial sums P (int32 -- jax runs without x64 here; the
+    Rust simulator re-runs the same MAC in i64 to verify headroom) and the
+    fixed-point position: P_real = P * 2^(scale_log2).
+
+    Caller must ensure product_bits + ceil(log2(L)) + 1 <= 31 (true for all
+    paper configs: <2,4> -> 14 bits + K*K sums).
+    """
+    emin = 1 - 2 ** e_x
+    two_m = 2 ** m_x
+
+    def frac_int(f):
+        # (M+1)-bit integer fraction: man + 2^M implicit bit when normal.
+        return jnp.where(f["x_exp_code"] >= 1, f["x_man"] + two_m, f["x_man"]).astype(jnp.int32)
+
+    def exp_val(f):
+        # actual exponent: -code (normal), emin (subnormal)
+        return jnp.where(f["x_exp_code"] >= 1, -f["x_exp_code"], emin).astype(jnp.int32)
+
+    fw, fa = frac_int(w_fields), frac_int(a_fields)
+    ew, ea = exp_val(w_fields), exp_val(a_fields)
+    sw = w_fields["sign"].astype(jnp.int32)
+    sa = a_fields["sign"].astype(jnp.int32)
+    shift = (ew - emin) + (ea - emin)          # in [0, 2*(2^E - 2)]
+    prod = sw * sa * fw * fa * jnp.left_shift(jnp.int32(1), shift)
+    p = jnp.sum(prod, axis=-1)
+    scale_log2 = 2 * emin - 2 * m_x
+    return p, scale_log2

@@ -1,0 +1,529 @@
+"""L2: JAX model zoo + the MLS low-bit training step (paper Alg. 1).
+
+Everything here is build-time only: `aot.py` lowers the jitted functions to
+HLO text once, and the Rust coordinator replays the artifacts through PJRT.
+
+Key design points
+-----------------
+* **Flat state vector.** Parameters, SGD momentum and BN running statistics
+  live in ONE f32 vector, so the Rust hot loop moves exactly one state
+  literal per step (plus images/labels/seed/lr). The layout is recorded in
+  the artifact manifest and reproduced by `rust/src/coordinator/spec.rs`.
+
+* **`mls_conv` is a `jax.custom_vjp`** implementing Alg. 1 exactly:
+      forward:   Z = Conv(q(W), q(A))
+      backward:  G  = Conv(q(E), q(A))        (weight gradient)
+                 dA = Conv^T(q(E), q(W))      (error back-propagation)
+  with STE through the quantizers. The rounding-offset tensors R (Alg. 2's
+  offline-generated U[-1/2,1/2) noise) are explicit primal inputs derived
+  from the per-step seed, so fwd and bwd see the exact noise the paper's
+  procedure prescribes and the artifact stays a pure function.
+
+* **Quantization implementation** is selectable (`set_quant_impl`): the
+  Pallas kernel (used for all shipped artifacts) or the jnp reference
+  (used to cross-check lowering). Both are bit-exact to each other.
+
+* The first conv and the final FC stay unquantized (paper Sec. VI-A), and
+  BN / SGD update run in fp32 (paper Sec. III-A).
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+try:
+    from compile.qconfig import QuantConfig
+    from compile.kernels import mls_quant, ref
+except ImportError:  # script-style import
+    from qconfig import QuantConfig  # type: ignore
+    from kernels import mls_quant, ref  # type: ignore
+
+# --------------------------------------------------------------------------
+# Quantizer selection (build-time switch; artifacts ship the pallas path)
+# --------------------------------------------------------------------------
+
+_QUANT_IMPL = "pallas"
+
+
+def set_quant_impl(name: str) -> None:
+    global _QUANT_IMPL
+    if name not in ("pallas", "ref"):
+        raise ValueError(name)
+    _QUANT_IMPL = name
+
+
+def _fake_quant(x, cfg: QuantConfig, r):
+    if _QUANT_IMPL == "pallas":
+        return mls_quant.mls_fake_quant(x, cfg, r)
+    return ref.mls_fake_quant(x, cfg, r)
+
+
+# --------------------------------------------------------------------------
+# MLS convolution with the Alg. 1 backward (custom_vjp)
+# --------------------------------------------------------------------------
+
+
+def _conv(w, a, stride, padding):
+    return jax.lax.conv_general_dilated(
+        a, w,
+        window_strides=(stride, stride),
+        padding=[(padding, padding), (padding, padding)],
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5, 6, 7))
+def mls_conv(w, a, r_w, r_a, r_e, cfg: QuantConfig, stride: int, padding: int):
+    """Quantized convolution: Z = Conv(q(W), q(A)) with Alg. 1 backward."""
+    qw = _fake_quant(w, cfg, r_w)
+    qa = _fake_quant(a, cfg, r_a)
+    return _conv(qw, qa, stride, padding)
+
+
+def _mls_conv_fwd(w, a, r_w, r_a, r_e, cfg, stride, padding):
+    qw = _fake_quant(w, cfg, r_w)
+    qa = _fake_quant(a, cfg, r_a)
+    z = _conv(qw, qa, stride, padding)
+    return z, (qw, qa, r_e)
+
+
+def _mls_conv_bwd(cfg, stride, padding, res, e):
+    qw, qa, r_e = res
+    qe = _fake_quant(e, cfg, r_e)           # quantize the error (Alg. 1 l.12)
+    _, vjp = jax.vjp(lambda w_, a_: _conv(w_, a_, stride, padding), qw, qa)
+    dw, da = vjp(qe)                        # G = Conv(qE, qA); dA = Conv^T(qE, qW)
+    # STE through the quantizers; rounding offsets get zero cotangents.
+    return dw, da, jnp.zeros_like(qw), jnp.zeros_like(qa), jnp.zeros_like(qe)
+
+
+mls_conv.defvjp(_mls_conv_fwd, _mls_conv_bwd)
+
+
+# --------------------------------------------------------------------------
+# Flat-state parameter registry
+# --------------------------------------------------------------------------
+
+
+@dataclass
+class VarSpec:
+    name: str
+    shape: tuple
+    kind: str  # "param" | "bn_stat"
+
+    @property
+    def size(self) -> int:
+        return int(np.prod(self.shape))
+
+
+@dataclass
+class Store:
+    """Declaration-order registry of model variables backed by a flat vector.
+
+    Pass 1 (flat=None): records specs and returns numpy initializers.
+    Pass 2 (flat=jnp vector): returns slices of the flat vector.
+    Updates (BN running stats, SGD results) are collected with `set` and
+    re-packed with `pack_updates`.
+    """
+
+    flat: object = None
+    seed: int = 0
+    specs: list = field(default_factory=list)
+    offsets: dict = field(default_factory=dict)
+    cursor: int = 0
+    updates: dict = field(default_factory=dict)
+    _rng: object = None
+
+    def __post_init__(self):
+        self._rng = np.random.default_rng(self.seed)
+
+    def get(self, name: str, shape: tuple, kind: str = "param", init: str = "zeros"):
+        shape = tuple(int(s) for s in shape)
+        if name not in self.offsets:
+            self.specs.append(VarSpec(name, shape, kind))
+            self.offsets[name] = self.cursor
+            self.cursor += int(np.prod(shape))
+        off = self.offsets[name]
+        n = int(np.prod(shape))
+        if self.flat is None:
+            if init == "zeros":
+                return np.zeros(shape, np.float32)
+            if init == "ones":
+                return np.ones(shape, np.float32)
+            if init == "he":
+                fan_in = int(np.prod(shape[1:])) if len(shape) > 1 else shape[0]
+                std = np.sqrt(2.0 / max(fan_in, 1))
+                return (self._rng.normal(0.0, std, size=shape)).astype(np.float32)
+            raise ValueError(init)
+        return jax.lax.dynamic_slice(self.flat, (off,), (n,)).reshape(shape)
+
+    def set(self, name: str, value) -> None:
+        self.updates[name] = value
+
+    def init_vector(self, forward_fn, *fwd_args) -> np.ndarray:
+        """Run the shape pass and return the packed initial vector."""
+        inits = {}
+
+        real_get = self.get
+
+        def recording_get(name, shape, kind="param", init="zeros"):
+            v = real_get(name, shape, kind, init)
+            inits[name] = v
+            return v
+
+        self.get = recording_get  # type: ignore
+        forward_fn(*fwd_args)
+        self.get = real_get  # type: ignore
+        out = np.zeros(self.cursor, np.float32)
+        for spec in self.specs:
+            off = self.offsets[spec.name]
+            out[off: off + spec.size] = np.asarray(inits[spec.name], np.float32).ravel()
+        return out
+
+    def apply_updates(self, flat):
+        """Scatter collected updates back into a copy of the flat vector."""
+        out = flat
+        for name, val in self.updates.items():
+            off = self.offsets[name]
+            out = jax.lax.dynamic_update_slice(out, val.reshape(-1).astype(jnp.float32), (off,))
+        return out
+
+    def manifest(self) -> list:
+        return [
+            {"name": s.name, "shape": list(s.shape), "kind": s.kind,
+             "offset": self.offsets[s.name]}
+            for s in self.specs
+        ]
+
+
+# --------------------------------------------------------------------------
+# Layers
+# --------------------------------------------------------------------------
+
+
+def _hash_uniform(seed, salt: int, shape):
+    """Counter-based uniform noise in [-1/2, 1/2) from (seed, salt, index).
+
+    A murmur3-finalizer hash over an iota keeps the lowered HLO tiny --
+    jax.random's threefry added ~100 s of XLA compile time per artifact on
+    the PJRT CPU backend (see EXPERIMENTS.md section Perf). The paper only
+    requires R ~ U[-1/2, 1/2) "generated offline"; distribution quality of
+    a murmur mix is ample for rounding offsets.
+    """
+    n = int(np.prod(shape)) if shape else 1
+    idx = jax.lax.iota(jnp.uint32, max(n, 1))
+    h = idx * np.uint32(2654435761)
+    h = h + seed.astype(jnp.uint32) * np.uint32(0x9E3779B9)
+    h = h + np.uint32((salt * 0x85EBCA6B) & 0xFFFFFFFF)
+    h = h ^ (h >> np.uint32(16))
+    h = h * np.uint32(0x85EBCA6B)
+    h = h ^ (h >> np.uint32(13))
+    h = h * np.uint32(0xC2B2AE35)
+    h = h ^ (h >> np.uint32(16))
+    u = h.astype(jnp.float32) * np.float32(1.0 / 4294967296.0) - np.float32(0.5)
+    return u.reshape(shape)
+
+
+class Ctx:
+    """Per-forward context: quant config, seed for rounding offsets, probe
+    taps, BN mode."""
+
+    def __init__(self, store: Store, cfg: QuantConfig, seed, train: bool,
+                 taps: dict | None = None, collect: dict | None = None):
+        self.store = store
+        self.cfg = cfg
+        self.seed = seed            # traced int32 scalar (or None: nearest)
+        self.train = train
+        self.taps = taps            # name -> tensor added to conv output (for E probes)
+        self.collect = collect      # dict filled with {"A.<name>": act, ...}
+        self.layer_idx = 0
+
+    def next_salts(self, n: int):
+        base = self.layer_idx * 16
+        self.layer_idx += 1
+        return [base + i for i in range(n)]
+
+    def rounding(self, salt: int, shape):
+        if self.seed is None or self.cfg.rounding == "nearest" or not self.cfg.enabled:
+            return jnp.zeros(shape, jnp.float32)
+        return _hash_uniform(self.seed, salt, shape)
+
+
+def conv2d(ctx: Ctx, name: str, x, cout: int, k: int = 3, stride: int = 1,
+           padding: int | None = None, quant: bool = True):
+    cin = x.shape[1]
+    padding = (k // 2) if padding is None else padding
+    w = ctx.store.get(f"{name}.w", (cout, cin, k, k), init="he")
+    if quant and ctx.cfg.enabled:
+        kw, ka, ke = ctx.next_salts(3)
+        out_shape = jax.eval_shape(
+            lambda w_, x_: _conv(w_, x_, stride, padding), w, x).shape
+        z = mls_conv(
+            w, x,
+            ctx.rounding(kw, w.shape),
+            ctx.rounding(ka, x.shape),
+            ctx.rounding(ke, out_shape),
+            ctx.cfg, stride, padding,
+        )
+    else:
+        z = _conv(w, x, stride, padding)
+    if ctx.collect is not None and quant:
+        ctx.collect[f"A.{name}"] = x
+    if ctx.taps is not None and quant and f"E.{name}" in ctx.taps:
+        z = z + ctx.taps[f"E.{name}"]
+    return z
+
+
+def batchnorm(ctx: Ctx, name: str, x, momentum: float = 0.1, eps: float = 5e-5):
+    c = x.shape[1]
+    gamma = ctx.store.get(f"{name}.gamma", (c,), init="ones")
+    beta = ctx.store.get(f"{name}.beta", (c,))
+    run_mean = ctx.store.get(f"{name}.run_mean", (c,), kind="bn_stat")
+    run_var = ctx.store.get(f"{name}.run_var", (c,), kind="bn_stat", init="ones")
+    if ctx.train:
+        mean = jnp.mean(x, axis=(0, 2, 3))
+        var = jnp.var(x, axis=(0, 2, 3))
+        ctx.store.set(f"{name}.run_mean",
+                      (1 - momentum) * run_mean + momentum * jax.lax.stop_gradient(mean))
+        ctx.store.set(f"{name}.run_var",
+                      (1 - momentum) * run_var + momentum * jax.lax.stop_gradient(var))
+    else:
+        mean, var = run_mean, run_var
+    inv = jax.lax.rsqrt(var + eps)
+    return (x - mean[None, :, None, None]) * (gamma * inv)[None, :, None, None] \
+        + beta[None, :, None, None]
+
+
+def fc(ctx: Ctx, name: str, x, dout: int):
+    din = x.shape[-1]
+    w = ctx.store.get(f"{name}.w", (din, dout), init="he")
+    b = ctx.store.get(f"{name}.b", (dout,))
+    return x @ w + b
+
+
+def global_avg_pool(x):
+    return jnp.mean(x, axis=(2, 3))
+
+
+# --------------------------------------------------------------------------
+# Model zoo (scaled-down counterparts of the paper's CNNs; see DESIGN.md
+# substitution table). Input: NCHW f32, IMG_SHAPE; output: logits (B, 10).
+# --------------------------------------------------------------------------
+
+NUM_CLASSES = 10
+IMG_SHAPE = (3, 16, 16)
+
+
+def mlp_forward(ctx: Ctx, x):
+    h = x.reshape(x.shape[0], -1)
+    h = jax.nn.relu(fc(ctx, "fc1", h, 128))
+    h = jax.nn.relu(fc(ctx, "fc2", h, 128))
+    return fc(ctx, "head", h, NUM_CLASSES)
+
+
+def cnn_s_forward(ctx: Ctx, x):
+    """VGG-style plain CNN (the paper's VGG-16 analog, scaled)."""
+    h = jax.nn.relu(batchnorm(ctx, "bn0", conv2d(ctx, "conv0", x, 16, quant=False)))
+    h = jax.nn.relu(batchnorm(ctx, "bn1", conv2d(ctx, "conv1", h, 32, stride=2)))
+    h = jax.nn.relu(batchnorm(ctx, "bn2", conv2d(ctx, "conv2", h, 32)))
+    h = jax.nn.relu(batchnorm(ctx, "bn3", conv2d(ctx, "conv3", h, 64, stride=2)))
+    h = jax.nn.relu(batchnorm(ctx, "bn4", conv2d(ctx, "conv4", h, 64)))
+    return fc(ctx, "head", global_avg_pool(h), NUM_CLASSES)
+
+
+def _basic_block(ctx: Ctx, name: str, x, cout: int, stride: int):
+    """ResNet basic block (two 3x3 quantized convs + projection shortcut)."""
+    h = jax.nn.relu(batchnorm(ctx, f"{name}.bn1",
+                              conv2d(ctx, f"{name}.conv1", x, cout, stride=stride)))
+    h = batchnorm(ctx, f"{name}.bn2", conv2d(ctx, f"{name}.conv2", h, cout))
+    if stride != 1 or x.shape[1] != cout:
+        x = batchnorm(ctx, f"{name}.bns",
+                      conv2d(ctx, f"{name}.convs", x, cout, k=1, stride=stride, padding=0))
+    return jax.nn.relu(h + x)
+
+
+def resnet_t_forward(ctx: Ctx, x):
+    """3-stage residual CNN (the paper's ResNet-20 analog, scaled)."""
+    h = jax.nn.relu(batchnorm(ctx, "bn0", conv2d(ctx, "stem", x, 16, quant=False)))
+    h = _basic_block(ctx, "s1b1", h, 16, 1)
+    h = _basic_block(ctx, "s2b1", h, 32, 2)
+    h = _basic_block(ctx, "s3b1", h, 64, 2)
+    return fc(ctx, "head", global_avg_pool(h), NUM_CLASSES)
+
+
+MODELS = {
+    "mlp": mlp_forward,
+    "cnn_s": cnn_s_forward,
+    "resnet_t": resnet_t_forward,
+}
+
+
+# --------------------------------------------------------------------------
+# Loss / steps
+# --------------------------------------------------------------------------
+
+
+def _loss_acc(logits, labels):
+    logp = jax.nn.log_softmax(logits)
+    loss = -jnp.mean(jnp.take_along_axis(logp, labels[:, None], axis=1))
+    acc = jnp.mean((jnp.argmax(logits, axis=1) == labels).astype(jnp.float32))
+    return loss, acc
+
+
+def build_model(model: str, cfg: QuantConfig, batch: int, seed: int = 0):
+    """Construct the store + step functions for one (model, config) pair.
+
+    Returns (store, init_state, fns) where fns has train_step / eval_step /
+    probe_step ready for jit/lowering. State = [params | momentum]; BN
+    running stats are 'bn_stat' params updated in the forward pass.
+    """
+    fwd = MODELS[model]
+    store = Store(seed=seed)
+
+    x0 = np.zeros((batch,) + IMG_SHAPE, np.float32)
+    ctx0 = Ctx(store, cfg, None, train=True)
+    var_init = store.init_vector(lambda x: fwd(ctx0, x), x0)
+    n_var = var_init.size
+
+    # momentum buffer appended after the variables
+    state_init = np.concatenate([var_init, np.zeros(n_var, np.float32)])
+
+    momentum, weight_decay = 0.9, 5e-4  # paper Sec. VI-A
+
+    def split_state(state):
+        return state[:n_var], state[n_var:]
+
+    def train_step(state, images, labels, seed_step, lr):
+        """One SGD-with-momentum step of Alg. 1. Returns (state', loss, acc)."""
+        var, mom = split_state(state)
+
+        def loss_fn(v):
+            s = Store(flat=v)
+            s.specs, s.offsets, s.cursor = store.specs, store.offsets, store.cursor
+            ctx = Ctx(s, cfg, seed_step, train=True)
+            logits = fwd(ctx, images)
+            loss, acc = _loss_acc(logits, labels)
+            # aux must be a pytree (dict of arrays), not the Store object
+            return loss, (acc, s.updates)
+
+        (loss, (acc, updates)), grads = jax.value_and_grad(loss_fn, has_aux=True)(var)
+        # BN running stats are data updates, not gradient updates.
+        var_bn = var
+        for uname, uval in updates.items():
+            off = store.offsets[uname]
+            var_bn = jax.lax.dynamic_update_slice(
+                var_bn, uval.reshape(-1).astype(jnp.float32), (off,))
+        # zero the gradient of bn_stat slots (they are not trained)
+        mask = np.ones(n_var, np.float32)
+        for spec in store.specs:
+            if spec.kind == "bn_stat":
+                off = store.offsets[spec.name]
+                mask[off: off + spec.size] = 0.0
+        g = grads * mask + weight_decay * var_bn * mask
+        new_mom = momentum * mom + g
+        new_var = var_bn - lr * new_mom
+        new_state = jnp.concatenate([new_var, new_mom])
+        return new_state, loss, acc
+
+    def eval_step(state, images, labels):
+        """Eval with running BN stats; quantization disabled (the learned
+        float weights are evaluated at full precision, as in the paper)."""
+        var, _ = split_state(state)
+        s = Store(flat=var)
+        s.specs, s.offsets, s.cursor = store.specs, store.offsets, store.cursor
+        ctx = Ctx(s, QuantConfig(enabled=False), None, train=False)
+        logits = fwd(ctx, images)
+        loss, acc = _loss_acc(logits, labels)
+        return loss, acc
+
+    # names of quantized convs, declaration order (for probes)
+    probe_names = [s.name[:-2] for s in store.specs
+                   if s.name.endswith(".w") and len(s.shape) == 4
+                   and s.name not in ("conv0.w", "stem.w")]
+
+    # Static shapes of conv inputs (A) and outputs (E taps), recorded once
+    # at build time with an abstract forward pass.
+    a_shapes, tap_shapes = {}, {}
+
+    def _shape_pass(var, images):
+        s = Store(flat=var)
+        s.specs, s.offsets, s.cursor = store.specs, store.offsets, store.cursor
+        collect = {}
+        ctx = Ctx(s, cfg, None, train=True, collect=collect)
+        fwd(ctx, images)
+        return collect
+
+    collected = jax.eval_shape(_shape_pass,
+                               jax.ShapeDtypeStruct((n_var,), jnp.float32),
+                               jax.ShapeDtypeStruct((batch,) + IMG_SHAPE, jnp.float32))
+    for name in probe_names:
+        a_shapes[name] = tuple(collected[f"A.{name}"].shape)
+        spec = next(sp for sp in store.specs if sp.name == f"{name}.w")
+        stride = _STRIDES.get((model, name), 1)
+        pad = spec.shape[2] // 2
+        z = jax.eval_shape(
+            lambda w_, a_, s_=stride, p_=pad: _conv(w_, a_, s_, p_),
+            jax.ShapeDtypeStruct(spec.shape, jnp.float32),
+            jax.ShapeDtypeStruct(a_shapes[name], jnp.float32))
+        tap_shapes[name] = tuple(z.shape)
+
+    def probe_step(state, images, labels, seed_step):
+        """Capture per-layer A (conv inputs), E (conv-output errors) and W
+        for Fig. 6 / Fig. 7. Returns tuple(A_1..A_k, E_1..E_k, W_1..W_k)."""
+        var, _ = split_state(state)
+
+        def reader():
+            s = Store(flat=var)
+            s.specs, s.offsets, s.cursor = store.specs, store.offsets, store.cursor
+            return s
+
+        def loss_with_taps(taps):
+            c = Ctx(reader(), cfg, seed_step, train=True, taps=taps, collect={})
+            lg = fwd(c, images)
+            loss, _ = _loss_acc(lg, labels)
+            return loss, c.collect
+
+        taps0 = {f"E.{n}": jnp.zeros(tap_shapes[n], jnp.float32) for n in probe_names}
+        (_loss, acts), gtaps = jax.value_and_grad(loss_with_taps, has_aux=True)(taps0)
+
+        outs = [acts[f"A.{n}"] for n in probe_names]
+        outs += [gtaps[f"E.{n}"] for n in probe_names]
+        s = reader()
+        for n in probe_names:
+            spec = next(sp for sp in store.specs if sp.name == f"{n}.w")
+            outs.append(s.get(f"{n}.w", spec.shape))
+        return tuple(outs)
+
+    fns = {
+        "train_step": train_step,
+        "eval_step": eval_step,
+        "probe_step": probe_step,
+    }
+    meta = {
+        "model": model,
+        "n_var": int(n_var),
+        "state_dim": int(state_init.size),
+        "batch": int(batch),
+        "img_shape": list(IMG_SHAPE),
+        "num_classes": NUM_CLASSES,
+        "probe_names": probe_names,
+        "probe_a_shapes": {n: list(a_shapes[n]) for n in probe_names},
+        "probe_e_shapes": {n: list(tap_shapes[n]) for n in probe_names},
+        "specs": store.manifest(),
+    }
+    return store, state_init, fns, meta
+
+
+# static stride table for probe-shape recovery (model, conv-name) -> stride
+_STRIDES = {
+    ("cnn_s", "conv1"): 2,
+    ("cnn_s", "conv3"): 2,
+    ("resnet_t", "s2b1.conv1"): 2,
+    ("resnet_t", "s2b1.convs"): 2,
+    ("resnet_t", "s3b1.conv1"): 2,
+    ("resnet_t", "s3b1.convs"): 2,
+}

@@ -1,0 +1,118 @@
+"""Quantization configuration for the MLS (multi-level scaling) tensor format.
+
+This mirrors the paper's ablation axes (Table IV):
+  - element format  <E_x, M_x>   (element-wise exponent + mantissa, no sign bit)
+  - group format    <E_g, M_g>   (hardware-friendly group scale, M_g in {0, 1})
+  - grouping dims   none | first | second | both  (paper: 1 / c or co / n / nc)
+  - rounding        stochastic (paper default, Alg. 2) | nearest
+
+The same field names and semantics are used by the Rust coordinator
+(rust/src/mls/) and by the artifact manifest, so a config round-trips
+unchanged across the three layers.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+
+GROUPINGS = ("none", "first", "second", "both")
+ROUNDINGS = ("stochastic", "nearest")
+
+
+@dataclass(frozen=True)
+class QuantConfig:
+    """Configuration of one MLS quantizer (applied to W, A and E alike).
+
+    The paper uses the same bit-width for weight / activation / error
+    ("we adopt the same quantization bit-width for weight, activation and
+    error for a simpler hardware design", Sec. VI-A), so one config object
+    describes all three operand quantizers. ``enabled`` turns the whole
+    quantization off (fp32 baseline).
+    """
+
+    e_x: int = 2          # element exponent bits  (paper: 2)
+    m_x: int = 4          # element mantissa bits  (paper: 4 on ImageNet, 1 on CIFAR)
+    e_g: int = 8          # group-scale exponent bits (paper: 8)
+    m_g: int = 1          # group-scale mantissa bits (paper: 1; 0 = power of two)
+    grouping: str = "both"  # "none" | "first" | "second" | "both"
+    rounding: str = "stochastic"
+    enabled: bool = True
+
+    def __post_init__(self) -> None:
+        if self.grouping not in GROUPINGS:
+            raise ValueError(f"grouping must be one of {GROUPINGS}, got {self.grouping!r}")
+        if self.rounding not in ROUNDINGS:
+            raise ValueError(f"rounding must be one of {ROUNDINGS}, got {self.rounding!r}")
+        if not (0 <= self.e_x <= 8):
+            raise ValueError(f"e_x out of range [0, 8]: {self.e_x}")
+        if not (0 <= self.m_x <= 23):
+            raise ValueError(f"m_x out of range [0, 23]: {self.m_x}")
+        if not (0 <= self.e_g <= 8):
+            raise ValueError(f"e_g out of range [0, 8]: {self.e_g}")
+        if self.m_g not in (0, 1):
+            # The hardware group-scale unit (Eq. 8) only supports <E_g, 0>
+            # (pure shift) and <E_g, 1> (shift + shifted add).
+            raise ValueError(f"m_g must be 0 or 1 (hardware shift-add unit), got {self.m_g}")
+
+    # -- derived quantities used by the bit-width analysis (Sec. V-C) -----
+    @property
+    def product_bits(self) -> int:
+        """Bit-width of one element x element product: 2M + 2^(E+1) - 2."""
+        return 2 * self.m_x + 2 ** (self.e_x + 1) - 2
+
+    @property
+    def accumulator_bits(self) -> int:
+        """Smallest power-of-two-width integer accumulator that holds the
+        intra-group partial sums: product bits + 4 bits of K*K=9
+        accumulation headroom (paper Table II: 8 for <1,1>, 16 for <2,1>,
+        32 for <2,4>). Mirrored by rust QuantConfig::accumulator_bits."""
+        for w in (8, 16, 32, 64):
+            if self.product_bits + 4 <= w:
+                return w
+        return 64
+
+    @property
+    def element_bits(self) -> int:
+        """Stored bits per element: sign + exponent code + mantissa."""
+        return 1 + self.e_x + self.m_x
+
+    def name(self) -> str:
+        """Stable short name used in artifact file names and manifests."""
+        if not self.enabled:
+            return "fp32"
+        g = {"none": "g1", "first": "gf", "second": "gs", "both": "gnc"}[self.grouping]
+        r = "sr" if self.rounding == "stochastic" else "nr"
+        return f"e{self.e_x}m{self.m_x}_{g}_eg{self.e_g}mg{self.m_g}_{r}"
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @staticmethod
+    def from_dict(d: dict) -> "QuantConfig":
+        return QuantConfig(**d)
+
+
+# Named configs referenced throughout the repo (tables, artifacts, tests).
+FP32 = QuantConfig(enabled=False)
+# Paper's ImageNet headline config: <2,4> elements, <8,1> group scale, n x c groups.
+E2M4 = QuantConfig(e_x=2, m_x=4)
+# Paper's CIFAR headline config: <2,1> elements.
+E2M1 = QuantConfig(e_x=2, m_x=1)
+# <1,1> row of Table II (VGG-16, 8-bit accumulation).
+E1M1 = QuantConfig(e_x=1, m_x=1)
+# Fixed-point rows of Table II / IV ("single number" = M_x bits, E_x = 0).
+INT4 = QuantConfig(e_x=0, m_x=4)
+INT2 = QuantConfig(e_x=0, m_x=2)
+# 6-bit sensitivity config of Table III (<2,3> is 6 stored bits: 1+2+3).
+E2M3 = QuantConfig(e_x=2, m_x=3)
+
+NAMED = {
+    "fp32": FP32,
+    "e2m4": E2M4,
+    "e2m1": E2M1,
+    "e1m1": E1M1,
+    "int4": INT4,
+    "int2": INT2,
+    "e2m3": E2M3,
+}

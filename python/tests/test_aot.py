@@ -1,0 +1,73 @@
+"""AOT path tests: config registry, HLO-text emission, manifest integrity."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import aot
+from compile import model as M
+from compile.qconfig import NAMED, QuantConfig
+
+
+def test_table4_grid_matches_paper_rows():
+    cfgs = aot.table4_grid()
+    # 9 rows x 4 mantissa widths
+    assert len(cfgs) == 36
+    names = {c.name() for c in cfgs}
+    assert len(names) == 36, "grid configs must be distinct"
+    # the paper's headline ablation cells exist
+    assert QuantConfig(e_x=0, m_x=1, grouping="both", m_g=1).name() in names
+    assert QuantConfig(e_x=2, m_x=1, grouping="both", m_g=1).name() in names
+    assert QuantConfig(e_x=2, m_x=4, grouping="none", m_g=0).name() in names
+
+
+def test_core_configs_unique_and_named():
+    cfgs = aot.core_configs()
+    assert cfgs[0].name() == "fp32"
+    assert len({c.name() for c in cfgs}) == len(cfgs)
+
+
+def test_hlo_text_emission_smoke():
+    """Lower the cheapest model and verify the HLO text parses as HLO."""
+    M.set_quant_impl("ref")
+    try:
+        store, init, fns, meta = M.build_model("mlp", NAMED["fp32"], 4)
+        sd, b = meta["state_dim"], meta["batch"]
+        text = aot.to_hlo_text(jax.jit(fns["eval_step"]).lower(
+            aot._spec((sd,)), aot._spec((b, 3, 16, 16)), aot._spec((b,), jnp.int32)))
+        assert text.startswith("HloModule")
+        assert "ENTRY" in text
+    finally:
+        M.set_quant_impl("pallas")
+
+
+def test_manifest_exists_and_is_consistent():
+    """After `make artifacts`, the manifest must describe real files."""
+    adir = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+    mpath = os.path.join(adir, "manifest.json")
+    if not os.path.exists(mpath):
+        pytest.skip("run `make artifacts` first")
+    m = json.load(open(mpath))
+    assert m["artifacts"], "no artifacts listed"
+    for a in m["artifacts"]:
+        path = os.path.join(adir, a["file"])
+        assert os.path.exists(path), f"missing {a['file']}"
+        # config round-trips through its name
+        cfg = QuantConfig.from_dict(a["cfg"])
+        assert cfg.name() in a["file"] or not cfg.enabled
+    for name, meta in m["models"].items():
+        init = os.path.join(adir, m["init"][name]["file"])
+        assert os.path.getsize(init) == meta["state_dim"] * 4
+        # spec layout tiles [0, n_var)
+        specs = sorted(meta["specs"], key=lambda s: s["offset"])
+        cursor = 0
+        for s in specs:
+            assert s["offset"] == cursor, s
+            size = 1
+            for d in s["shape"]:
+                size *= d
+            cursor += size
+        assert cursor == meta["n_var"]

@@ -1,0 +1,213 @@
+"""Unit tests for the canonical <E, M> format numerics in kernels/ref.py.
+
+These pin down the bit-level behaviour the whole repo depends on: exponent
+ranges, gradual underflow, saturation, group-scale ceil/carry/dominance.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from compile.qconfig import QuantConfig
+from compile.kernels import ref
+
+
+def q_elem(x, e, m, r=None):
+    x = np.asarray(x, np.float32)
+    rr = np.zeros_like(x) if r is None else np.asarray(r, np.float32)
+    return np.asarray(ref.quantize_element(jnp.asarray(x), e, m, jnp.asarray(rr)))
+
+
+class TestF32Fields:
+    def test_exponent_of_powers(self):
+        x = np.array([1.0, 2.0, 0.5, 0.25, 4.0], np.float32)
+        assert list(np.asarray(ref.f32_exponent(jnp.asarray(x)))) == [0, 1, -1, -2, 2]
+
+    def test_fraction(self):
+        x = np.array([1.5, 3.0, 0.75], np.float32)
+        np.testing.assert_allclose(np.asarray(ref.f32_fraction(jnp.asarray(x))), [1.5, 1.5, 1.5])
+
+    def test_zero_maps_below_any_emin(self):
+        assert int(np.asarray(ref.f32_exponent(jnp.asarray(np.float32(0.0))))) == -127
+
+
+class TestElementQuantization:
+    def test_exact_values_survive(self):
+        # representable <2,2> values: exp in {-1,-2,-3}, man in {0..3}
+        for exp in (-1, -2, -3):
+            for man in range(4):
+                v = (1 + man / 4.0) * 2.0 ** exp
+                assert q_elem(v, 2, 2) == np.float32(v), (exp, man)
+
+    def test_max_representable_saturation(self):
+        # xf == 1.0 (the group max) saturates to (2 - 2^-M) / 2
+        for m in (1, 2, 4):
+            expect = (2.0 - 2.0 ** -m) / 2.0
+            assert q_elem(1.0, 2, m) == np.float32(expect)
+
+    def test_subnormal_level(self):
+        # <2,2>: emin = -3; subnormals are man/4 * 2^-3, man in 0..3
+        e, m = 2, 2
+        emin = 1 - 2 ** e
+        for man in range(4):
+            v = man / 4.0 * 2.0 ** emin
+            assert q_elem(v, e, m) == np.float32(v)
+
+    def test_underflow_to_zero(self):
+        # below half the smallest subnormal step -> rounds to 0
+        e, m = 2, 2
+        tiny = 0.2 * 2.0 ** (1 - 2 ** e) / 2 ** m
+        assert q_elem(tiny, e, m) == 0.0
+
+    def test_zero(self):
+        assert q_elem(0.0, 2, 4) == 0.0
+
+    def test_nearest_rounding_half_up(self):
+        # value halfway between man=0 and man=1 at exp=-1 rounds up
+        e, m = 2, 2
+        v = (1 + 0.5 / 4.0) * 0.5  # man_f = 0.5 -> floor(0.5+0.5)=1
+        assert q_elem(v, e, m) == np.float32((1 + 1 / 4.0) * 0.5)
+
+    def test_stochastic_rounding_bounds(self):
+        rng = np.random.default_rng(0)
+        x = rng.uniform(0, 1, 512).astype(np.float32)
+        r = rng.uniform(-0.5, 0.5, 512).astype(np.float32)
+        q = q_elem(x, 2, 3, r)
+        # stochastic result is one of the two neighbours of the nearest grid
+        qn = q_elem(x, 2, 3)
+        step = 2.0 ** -3 * 2.0 ** -1  # largest grid step (exp=-1)
+        assert np.all(np.abs(q - qn) <= step + 1e-7)
+
+    def test_stochastic_rounding_unbiased(self):
+        rng = np.random.default_rng(1)
+        x = np.full(20000, 0.6, np.float32)
+        r = rng.uniform(-0.5, 0.5, 20000).astype(np.float32)
+        q = q_elem(x, 2, 2, r)
+        assert abs(float(q.mean()) - 0.6) < 2e-3
+
+    def test_monotonic(self):
+        x = np.sort(np.random.default_rng(2).uniform(0, 1, 256).astype(np.float32))
+        q = q_elem(x, 2, 3)
+        assert np.all(np.diff(q) >= 0)
+
+    def test_e0_is_fixed_point(self):
+        # E=0: emin = 0 -- every value < 1 underflows to man/2^M (plain
+        # fixed point), matching the paper's "single number" rows.
+        x = np.array([0.3, 0.7, 0.99], np.float32)
+        q = q_elem(x, 0, 4)
+        np.testing.assert_allclose(
+            q, np.minimum(np.floor(x * 16 + 0.5), 15) / 16, atol=1e-7)
+
+
+class TestGroupScale:
+    def qg(self, s, e, m):
+        return float(np.asarray(ref.quantize_group_scale(jnp.asarray(np.float32(s)), e, m)))
+
+    def test_dominance(self):
+        rng = np.random.default_rng(3)
+        s = rng.uniform(0, 1, 1024).astype(np.float32)
+        sg = np.asarray(ref.quantize_group_scale(jnp.asarray(s), 8, 1))
+        assert np.all(sg >= s - 1e-7)
+
+    def test_max_group_is_one(self):
+        assert self.qg(1.0, 8, 1) == 1.0
+
+    def test_power_of_two_format(self):
+        # <E,0>: result is the next power of two >= s
+        for s in (0.3, 0.5, 0.6, 0.9):
+            got = self.qg(s, 8, 0)
+            assert got >= s and np.log2(got) == np.floor(np.log2(got))
+
+    def test_eg1_shift_add_values(self):
+        # <E,1>: fractions are 1 or 1.5 (Eq. 4)
+        for s in (0.26, 0.3, 0.4, 0.55, 0.8):
+            got = self.qg(s, 8, 1)
+            frac = got / 2.0 ** np.floor(np.log2(got))
+            assert frac in (1.0, 1.5), (s, got, frac)
+
+    def test_ceil_carry(self):
+        # s slightly above 1.5 * 2^-1 must carry to 1.0 (frac 2.0 -> exp+1)
+        assert self.qg(0.76, 8, 1) == 1.0
+
+    def test_zero_group_pinned(self):
+        got = self.qg(0.0, 8, 1)
+        assert got == 2.0 ** -126  # pinned normal-f32 floor (DESIGN.md)
+
+    def test_codes_roundtrip(self):
+        rng = np.random.default_rng(4)
+        s = rng.uniform(0.001, 1.0, 256).astype(np.float32)
+        code, man = map(np.asarray, ref.group_scale_codes(jnp.asarray(s), 8, 1))
+        sg = np.asarray(ref.quantize_group_scale(jnp.asarray(s), 8, 1))
+        rebuilt = (1 + man / 2.0) * 2.0 ** (-code.astype(np.float64))
+        np.testing.assert_allclose(rebuilt, sg, rtol=1e-6)
+
+
+class TestFakeQuant:
+    def test_error_bound_nearest(self):
+        # |q - x| <= S_t * S_g * 2^{-1} / 2^M  (half ulp at the top level)
+        rng = np.random.default_rng(5)
+        x = rng.normal(size=(4, 8, 3, 3)).astype(np.float32)
+        cfg = QuantConfig(e_x=2, m_x=4, rounding="nearest")
+        f = {k: np.asarray(v) for k, v in ref.mls_quantize_fields(x, cfg).items()}
+        bound = float(f["s_t"]) * f["s_g"] * 0.5 * 2.0 ** -4
+        assert np.all(np.abs(f["q"] - x) <= bound + 1e-7)
+
+    def test_requantization_is_contraction(self):
+        # True idempotence does not hold (the saturated max element shifts
+        # S_t on the second pass), but re-quantization must stay within the
+        # one-step error bound: |q2 - q1| <= |q1 - x| envelope.
+        rng = np.random.default_rng(6)
+        x = rng.normal(size=(4, 4, 3, 3)).astype(np.float32)
+        cfg = QuantConfig(e_x=2, m_x=3, rounding="nearest")
+        q1 = np.asarray(ref.mls_fake_quant(x, cfg))
+        q2 = np.asarray(ref.mls_fake_quant(q1, cfg))
+        err1 = np.abs(q1 - x).max()
+        assert np.abs(q2 - q1).max() <= err1 + 1e-7
+        # and with scales already aligned (elements exactly representable
+        # against the same S_t), element-level idempotence does hold:
+        q3 = np.asarray(ref.mls_fake_quant(q2, cfg))
+        assert np.abs(q3 - q2).max() <= np.abs(q2 - q1).max() + 1e-7
+
+    def test_sign_symmetry(self):
+        rng = np.random.default_rng(7)
+        x = rng.normal(size=(4, 4, 3, 3)).astype(np.float32)
+        cfg = QuantConfig(e_x=2, m_x=2, rounding="nearest")
+        q_pos = np.asarray(ref.mls_fake_quant(x, cfg))
+        q_neg = np.asarray(ref.mls_fake_quant(-x, cfg))
+        np.testing.assert_array_equal(q_pos, -q_neg)
+
+    def test_zero_tensor(self):
+        z = np.zeros((2, 3, 4, 4), np.float32)
+        assert np.all(np.asarray(ref.mls_fake_quant(z, QuantConfig())) == 0)
+
+    def test_disabled_is_identity(self):
+        rng = np.random.default_rng(8)
+        x = rng.normal(size=(2, 3, 4, 4)).astype(np.float32)
+        q = np.asarray(ref.mls_fake_quant(x, QuantConfig(enabled=False)))
+        np.testing.assert_array_equal(q, x)
+
+    @pytest.mark.parametrize("grouping", ["none", "first", "second", "both"])
+    def test_grouping_reduces_error(self, grouping):
+        # per-group scaled error should never exceed ungrouped error by much
+        rng = np.random.default_rng(9)
+        x = (rng.normal(size=(8, 8, 4, 4)) * np.exp(rng.normal(size=(8, 8, 1, 1)) * 2)).astype(np.float32)
+        cfg_g = QuantConfig(e_x=0, m_x=3, grouping=grouping, rounding="nearest")
+        cfg_n = QuantConfig(e_x=0, m_x=3, grouping="none", rounding="nearest")
+        are_g = float(ref.average_relative_error(x, cfg_g))
+        are_n = float(ref.average_relative_error(x, cfg_n))
+        if grouping == "both":
+            assert are_g < are_n
+
+    def test_more_mantissa_less_error(self):
+        rng = np.random.default_rng(10)
+        x = rng.normal(size=(8, 8, 3, 3)).astype(np.float32)
+        ares = [float(ref.average_relative_error(x, QuantConfig(e_x=2, m_x=m)))
+                for m in (1, 2, 3, 4)]
+        assert all(a >= b - 1e-9 for a, b in zip(ares, ares[1:]))
+
+    def test_more_exponent_less_error_ungrouped(self):
+        rng = np.random.default_rng(11)
+        x = (rng.normal(size=(8, 8, 3, 3)) * np.exp(rng.normal(size=(8, 8, 1, 1)))).astype(np.float32)
+        ares = [float(ref.average_relative_error(
+            x, QuantConfig(e_x=e, m_x=3, grouping="none"))) for e in (0, 1, 2)]
+        assert ares[2] < ares[0]

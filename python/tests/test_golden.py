@@ -1,0 +1,114 @@
+"""Golden-vector emission for the Rust bit-accurate MLS implementation.
+
+Writes artifacts/golden/*.json; `cargo test --test golden` parses these and
+must reproduce every stored field BIT-EXACTLY (same IEEE-754 decomposition,
+same round-half-up, same clip/carry behaviour). The test here re-checks
+self-consistency so a stale golden never silently passes.
+"""
+
+import dataclasses
+import json
+import os
+
+import numpy as np
+import jax.numpy as jnp
+
+from compile.qconfig import QuantConfig, NAMED
+from compile.kernels import ref
+
+GOLDEN_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts", "golden")
+
+CASES = [
+    ("e2m4_nc", NAMED["e2m4"], (3, 4, 3, 3), 0),
+    ("e2m1_nc", NAMED["e2m1"], (3, 4, 3, 3), 1),
+    ("e1m1", NAMED["e1m1"], (2, 5, 2, 2), 2),
+    ("int4", NAMED["int4"], (3, 4, 3, 3), 3),
+    ("int2", NAMED["int2"], (4, 2, 3, 3), 4),
+    ("e2m3_first", dataclasses.replace(NAMED["e2m3"], grouping="first"), (4, 3, 2, 2), 5),
+    ("e2m4_second", dataclasses.replace(NAMED["e2m4"], grouping="second"), (4, 3, 2, 2), 6),
+    ("e2m4_none", dataclasses.replace(NAMED["e2m4"], grouping="none"), (3, 3, 2, 2), 7),
+    ("e2m4_mg0", dataclasses.replace(NAMED["e2m4"], m_g=0), (3, 4, 3, 3), 8),
+    ("e2m4_nearest", dataclasses.replace(NAMED["e2m4"], rounding="nearest"), (3, 4, 3, 3), 9),
+    ("e4m3_wide", QuantConfig(e_x=4, m_x=3), (3, 3, 3, 3), 10),
+    ("e2m4_eg4", dataclasses.replace(NAMED["e2m4"], e_g=4), (3, 4, 3, 3), 11),
+]
+
+
+def _make_input(shape, seed):
+    rng = np.random.default_rng(seed)
+    x = (rng.normal(size=shape) * np.exp(rng.normal(size=shape[:2] + (1, 1)) * 2)).astype(np.float32)
+    # sprinkle exact zeros, powers of two, denormal-feeders
+    flat = x.reshape(-1)
+    flat[:: max(len(flat) // 7, 1)] = 0.0
+    flat[1:: max(len(flat) // 5, 1)] *= 1e-30
+    r = rng.uniform(-0.5, 0.5, shape).astype(np.float32)
+    return x, r
+
+
+def test_emit_goldens():
+    os.makedirs(GOLDEN_DIR, exist_ok=True)
+    index = []
+    for name, cfg, shape, seed in CASES:
+        x, r = _make_input(shape, seed)
+        fields = {k: np.asarray(v)
+                  for k, v in ref.mls_quantize_fields(jnp.asarray(x), cfg, jnp.asarray(r)).items()}
+        # self-consistency: q == fake_quant
+        q2 = np.asarray(ref.mls_fake_quant(jnp.asarray(x), cfg, jnp.asarray(r)))
+        np.testing.assert_array_equal(fields["q"], q2)
+        # ARE as an extra scalar the rust side reproduces
+        are = float(ref.average_relative_error(jnp.asarray(x), cfg))
+        doc = {
+            "name": name,
+            "cfg": cfg.to_dict(),
+            "shape": list(shape),
+            "x": [float(v) for v in x.reshape(-1)],
+            "r": [float(v) for v in r.reshape(-1)],
+            "q": [float(v) for v in fields["q"].reshape(-1)],
+            "s_t": float(fields["s_t"]),
+            "s_g": [float(v) for v in fields["s_g"].reshape(-1)],
+            "sg_exp_code": [int(v) for v in fields["sg_exp_code"].reshape(-1)],
+            "sg_man": [int(v) for v in fields["sg_man"].reshape(-1)],
+            "x_exp_code": [int(v) for v in fields["x_exp_code"].reshape(-1)],
+            "x_man": [int(v) for v in fields["x_man"].reshape(-1)],
+            "sign": [int(v) for v in fields["sign"].reshape(-1)],
+            "are_nearest": are,
+        }
+        path = os.path.join(GOLDEN_DIR, f"{name}.json")
+        with open(path, "w") as f:
+            json.dump(doc, f)
+        index.append(f"{name}.json")
+    with open(os.path.join(GOLDEN_DIR, "index.json"), "w") as f:
+        json.dump(index, f)
+    assert len(index) == len(CASES)
+
+
+def test_emit_mac_golden():
+    """Golden for the integer intra-group MAC (rust/src/arith)."""
+    os.makedirs(GOLDEN_DIR, exist_ok=True)
+    cfg = NAMED["e2m4"]
+    rng = np.random.default_rng(42)
+    g, l = 6, 9
+    w = (rng.normal(size=(g, l)) * np.exp(rng.normal(size=(g, 1)))).astype(np.float32)
+    a = (rng.normal(size=(g, l)) * np.exp(rng.normal(size=(g, 1)))).astype(np.float32)
+    wcfg = dataclasses.replace(cfg, grouping="first", rounding="nearest")
+    wf = {k: np.asarray(v) for k, v in ref.mls_quantize_fields(jnp.asarray(w), wcfg).items()}
+    af = {k: np.asarray(v) for k, v in ref.mls_quantize_fields(jnp.asarray(a), wcfg).items()}
+    p, scale_log2 = ref.intra_group_mac_ref(
+        {"x_man": wf["x_man"], "x_exp_code": wf["x_exp_code"], "sign": wf["sign"]},
+        {"x_man": af["x_man"], "x_exp_code": af["x_exp_code"], "sign": af["sign"]},
+        cfg.e_x, cfg.m_x)
+    doc = {
+        "cfg": cfg.to_dict(),
+        "g": g, "l": l,
+        "w": [float(v) for v in w.reshape(-1)],
+        "a": [float(v) for v in a.reshape(-1)],
+        "w_q": [float(v) for v in wf["q"].reshape(-1)],
+        "a_q": [float(v) for v in af["q"].reshape(-1)],
+        "w_st": float(wf["s_t"]), "a_st": float(af["s_t"]),
+        "w_sg": [float(v) for v in wf["s_g"].reshape(-1)],
+        "a_sg": [float(v) for v in af["s_g"].reshape(-1)],
+        "p": [int(v) for v in np.asarray(p).reshape(-1)],
+        "scale_log2": int(scale_log2),
+    }
+    with open(os.path.join(GOLDEN_DIR, "mac_e2m4.json"), "w") as f:
+        json.dump(doc, f)

@@ -1,0 +1,96 @@
+"""Pallas kernel vs pure-jnp oracle: the CORE correctness signal.
+
+The Pallas quantizer must be BIT-EXACT against ref.mls_fake_quant on
+identical inputs, across shapes, groupings and bit-width configs --
+including a hypothesis sweep over random shapes/configs.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.qconfig import QuantConfig, NAMED
+from compile.kernels import ref, mls_quant
+
+
+def _rand(shape, seed, scale_axes=None):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=shape).astype(np.float32)
+    if scale_axes:
+        s = np.exp(rng.normal(size=tuple(
+            d if i in scale_axes else 1 for i, d in enumerate(shape))) * 2)
+        x = (x * s).astype(np.float32)
+    return x
+
+
+def _check(x, cfg, seed=0):
+    rng = np.random.default_rng(seed + 1000)
+    r = rng.uniform(-0.5, 0.5, x.shape).astype(np.float32)
+    q_ref = np.asarray(ref.mls_fake_quant(jnp.asarray(x), cfg, jnp.asarray(r)))
+    q_pal = np.asarray(mls_quant.mls_fake_quant(jnp.asarray(x), cfg, jnp.asarray(r)))
+    np.testing.assert_array_equal(q_ref, q_pal)
+
+
+@pytest.mark.parametrize("cfg_name", list(NAMED))
+def test_named_configs_bit_exact(cfg_name):
+    x = _rand((4, 8, 5, 5), 0, scale_axes=(0, 1))
+    _check(x, NAMED[cfg_name])
+
+
+@pytest.mark.parametrize("grouping", ["none", "first", "second", "both"])
+def test_groupings_bit_exact(grouping):
+    x = _rand((6, 10, 3, 3), 1, scale_axes=(0, 1))
+    _check(x, QuantConfig(grouping=grouping))
+
+
+@pytest.mark.parametrize("shape", [(1, 1, 1, 1), (2, 3, 1, 7), (16, 16, 3, 3),
+                                   (32, 16, 8, 8), (5, 7, 4, 4)])
+def test_shapes_bit_exact(shape):
+    x = _rand(shape, 2)
+    _check(x, QuantConfig())
+
+
+def test_2d_tensor():
+    # FC-style 2-D tensors must also group correctly
+    x = _rand((12, 40), 3)
+    for grouping in ("none", "first", "second", "both"):
+        _check(x, QuantConfig(grouping=grouping))
+
+
+def test_zero_tensor():
+    z = np.zeros((3, 4, 2, 2), np.float32)
+    _check(z, QuantConfig())
+
+
+def test_huge_dynamic_range():
+    x = _rand((4, 4, 3, 3), 4)
+    x[0, 0] *= 1e8
+    x[1, 1] *= 1e-8
+    _check(x, QuantConfig())
+
+
+def test_group_scales_match_ref():
+    x = _rand((4, 6, 3, 3), 5, scale_axes=(0, 1))
+    cfg = QuantConfig(rounding="nearest")
+    x2d = jnp.asarray(x).reshape(24, 9)
+    r2d = jnp.zeros_like(x2d)
+    _q, sg = mls_quant.mls_fake_quant_2d(x2d, r2d, cfg)
+    fields = ref.mls_quantize_fields(jnp.asarray(x), cfg)
+    sg_ref = np.asarray(fields["s_g"]).reshape(24, 1)
+    np.testing.assert_array_equal(np.asarray(sg), sg_ref)
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    n=st.integers(1, 8), c=st.integers(1, 8),
+    h=st.integers(1, 6), w=st.integers(1, 6),
+    e_x=st.integers(0, 3), m_x=st.integers(1, 5),
+    e_g=st.sampled_from([4, 8]), m_g=st.integers(0, 1),
+    grouping=st.sampled_from(["none", "first", "second", "both"]),
+    seed=st.integers(0, 2 ** 16),
+)
+def test_hypothesis_sweep(n, c, h, w, e_x, m_x, e_g, m_g, grouping, seed):
+    cfg = QuantConfig(e_x=e_x, m_x=m_x, e_g=e_g, m_g=m_g, grouping=grouping)
+    x = _rand((n, c, h, w), seed, scale_axes=(0, 1))
+    _check(x, cfg, seed)

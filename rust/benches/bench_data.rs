@@ -1,0 +1,19 @@
+//! Bench: synthcifar batch generation — it sits on the training hot loop
+//! ahead of every PJRT step, so it must stay far below the step time.
+
+use std::time::Duration;
+
+use mls_train::data::{streams, DatasetConfig, SynthCifar};
+use mls_train::util::bench::{bench, black_box};
+
+fn main() {
+    let ds = SynthCifar::new(DatasetConfig::default());
+    println!("# bench_data — synthcifar generation");
+    for batch in [32usize, 128] {
+        let res = bench(&format!("batch/{batch}"), Duration::from_secs(2), || {
+            black_box(ds.batch(batch, streams::TRAIN, 7));
+        });
+        let imgs_per_s = res.throughput_items(batch as u64);
+        println!("  -> {:.0} images/s", imgs_per_s);
+    }
+}

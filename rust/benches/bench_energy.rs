@@ -1,0 +1,24 @@
+//! Bench: whole-network energy accounting (the Table VI generator) — must
+//! stay trivially cheap since the ablation harness calls it in loops.
+
+use std::time::Duration;
+
+use mls_train::hw::counter::training_energy;
+use mls_train::hw::units::{Arithmetic, EnergyModel};
+use mls_train::mls::format::EmFormat;
+use mls_train::nn::zoo::network;
+use mls_train::util::bench::{bench, black_box};
+
+fn main() {
+    let em = EnergyModel::fitted();
+    println!("# bench_energy — Table VI pipeline per network");
+    for name in ["resnet18", "resnet34", "vgg16", "googlenet"] {
+        let net = network(name).unwrap();
+        bench(&format!("training_energy/{name}"), Duration::from_secs(1), || {
+            black_box(training_energy(&net, 64, Arithmetic::Mls(EmFormat::new(2, 4)), &em));
+        });
+    }
+    bench("network_build/googlenet", Duration::from_secs(1), || {
+        black_box(network("googlenet").unwrap());
+    });
+}

@@ -1,0 +1,42 @@
+//! Bench: MLS dynamic quantization throughput (the DQ overhead row of
+//! Table VI — 4 muls + 2 adds per element on the paper's hardware; here we
+//! measure the software simulator's elements/s on the L3 hot path).
+
+use std::time::Duration;
+
+use mls_train::mls::quantizer::{fake_quant, quantize, QuantConfig, Rounding};
+use mls_train::mls::Grouping;
+use mls_train::util::bench::{bench, black_box};
+use mls_train::util::rng::Pcg32;
+
+fn main() {
+    let mut rng = Pcg32::seeded(1);
+    let shape = [32usize, 64, 16, 16]; // a typical activation tensor
+    let n: usize = shape.iter().product();
+    let x = mls_train::util::prop::grouped_tensor(&mut rng, shape);
+    let r = rng.rounding_offsets(n);
+
+    println!("# bench_quantize — {n} elements ({}x{}x{}x{})", shape[0], shape[1], shape[2], shape[3]);
+
+    for (name, cfg) in [
+        ("e2m4_nc_stochastic", QuantConfig::default()),
+        ("e2m4_nc_nearest", QuantConfig { rounding: Rounding::Nearest, ..Default::default() }),
+        ("e2m1_nc_stochastic", QuantConfig::new(2, 1)),
+        ("e2m4_none", QuantConfig { grouping: Grouping::None, ..Default::default() }),
+        ("int4_nc", QuantConfig::new(0, 4)),
+    ] {
+        let res = bench(&format!("quantize/{name}"), Duration::from_secs(2), || {
+            black_box(quantize(&x, &shape, &cfg, &r));
+        });
+        println!(
+            "  -> {:.1} Melem/s",
+            res.throughput_items(n as u64) / 1e6
+        );
+    }
+
+    let cfg = QuantConfig::default();
+    let res = bench("fake_quant/e2m4_nc", Duration::from_secs(2), || {
+        black_box(fake_quant(&x, &shape, &cfg, &r));
+    });
+    println!("  -> {:.1} Melem/s", res.throughput_items(n as u64) / 1e6);
+}

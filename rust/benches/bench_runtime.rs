@@ -1,0 +1,67 @@
+//! Bench: PJRT train-step dispatch — the end-to-end driver hot loop
+//! (compile once, then measure steady-state step latency for the fp32 and
+//! the Pallas-quantized MLS artifacts).
+//!
+//! Requires `make artifacts`. Skips gracefully when artifacts are missing
+//! so `cargo bench` stays green on a fresh checkout.
+
+use std::time::Duration;
+
+use mls_train::data::{streams, SynthCifar};
+use mls_train::runtime::Engine;
+use mls_train::util::bench::{bench, black_box};
+
+fn main() {
+    println!("# bench_runtime — PJRT step latency");
+    let mut engine = match Engine::from_dir("artifacts") {
+        Ok(e) => e,
+        Err(e) => {
+            println!("skipped: {e:#}");
+            return;
+        }
+    };
+    let model = "resnet_t";
+    let meta = match engine.manifest.model(model) {
+        Ok(m) => m.clone(),
+        Err(e) => {
+            println!("skipped: {e:#}");
+            return;
+        }
+    };
+    let ds = SynthCifar::new(Default::default());
+    let (images, labels) = ds.batch(meta.batch, streams::TRAIN, 0);
+    let init = engine.manifest.load_init(model).unwrap();
+
+    for cfg in ["fp32", "e2m4_gnc_eg8mg1_sr", "e2m1_gnc_eg8mg1_sr"] {
+        if engine.manifest.find(model, "train_step", cfg).is_err() {
+            println!("skipping {cfg}: artifact missing");
+            continue;
+        }
+        // compile outside the measured region
+        let mut state = init.clone();
+        engine.train_step(model, cfg, &mut state, &images, &labels, 0, 0.05).unwrap();
+        let mut step = 0;
+        let res = bench(&format!("train_step/{model}/{cfg}"), Duration::from_secs(5), || {
+            step += 1;
+            black_box(
+                engine
+                    .train_step(model, cfg, &mut state, &images, &labels, step, 0.05)
+                    .unwrap(),
+            );
+        });
+        println!(
+            "  -> {:.1} images/s (batch {})",
+            meta.batch as f64 / res.median.as_secs_f64(),
+            meta.batch
+        );
+    }
+
+    // eval-step latency
+    let state = init.clone();
+    if engine.manifest.find(model, "eval_step", "fp32").is_ok() {
+        engine.eval_step(model, &state, &images, &labels).unwrap();
+        bench(&format!("eval_step/{model}"), Duration::from_secs(3), || {
+            black_box(engine.eval_step(model, &state, &images, &labels).unwrap());
+        });
+    }
+}

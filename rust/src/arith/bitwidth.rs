@@ -1,0 +1,101 @@
+//! Accumulation bit-width analysis (paper Sec. V-C).
+//!
+//! For an `<E, M>` element format the product of two values spans
+//! `2M + 2^{E+1} - 2` bits; accumulating `L` of them needs
+//! `product_bits + ceil(log2(L)) + 1` (sign) bits. The analysis drives the
+//! accumulator sizing of the energy model (integer vs floating local
+//! accumulation is THE energy win of the paper) and is asserted against
+//! the simulator's observed peaks in tests.
+
+use crate::mls::format::EmFormat;
+
+/// One row of the analysis table.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct BitwidthRow {
+    pub fmt: EmFormat,
+    pub product_bits: u32,
+    /// required accumulator bits for a group of `group_len` products
+    pub required_acc_bits: u32,
+    /// the power-of-two register the hardware would instantiate
+    pub register_bits: u32,
+    /// whether an integer accumulator suffices (vs FP8's float accum)
+    pub integer_accumulation: bool,
+}
+
+/// Required accumulator bits for `group_len` accumulated products.
+pub fn required_acc_bits(fmt: EmFormat, group_len: usize) -> u32 {
+    let log_l = (usize::BITS - group_len.max(1).leading_zeros()) as u32;
+    fmt.product_bits() + log_l + 1
+}
+
+/// The register width the design instantiates (paper: 16 for <2,1>,
+/// 32 for <2,4>; FP-accumulation flagged when even 64 would not pay off).
+pub fn register_bits(fmt: EmFormat, group_len: usize) -> u32 {
+    let need = required_acc_bits(fmt, group_len);
+    for w in [8u32, 16, 32, 64] {
+        if need <= w {
+            return w;
+        }
+    }
+    64
+}
+
+/// Integer accumulation is practical when the product fits a 32-bit
+/// register with accumulation headroom — the paper's criterion separating
+/// the MLS format (E=2) from FP8 (E=5, 64+-bit dynamic range).
+pub fn integer_accumulation_ok(fmt: EmFormat, group_len: usize) -> bool {
+    required_acc_bits(fmt, group_len) <= 32
+}
+
+/// Build the analysis table for a list of formats at a given group length
+/// (K*K = 9 for the 3x3 convolutions the paper evaluates).
+pub fn analysis(formats: &[EmFormat], group_len: usize) -> Vec<BitwidthRow> {
+    formats
+        .iter()
+        .map(|&fmt| BitwidthRow {
+            fmt,
+            product_bits: fmt.product_bits(),
+            required_acc_bits: required_acc_bits(fmt, group_len),
+            register_bits: register_bits(fmt, group_len),
+            integer_accumulation: integer_accumulation_ok(fmt, group_len),
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_configs() {
+        // <2,4>: 14-bit products (paper Sec. V-C), 32-bit register
+        let f24 = EmFormat::new(2, 4);
+        assert_eq!(f24.product_bits(), 14);
+        assert_eq!(register_bits(f24, 9), 32);
+        assert!(integer_accumulation_ok(f24, 9));
+
+        // <2,1>: 8-bit products, 16-bit register (Table II "ACCUM 16")
+        let f21 = EmFormat::new(2, 1);
+        assert_eq!(f21.product_bits(), 8);
+        assert_eq!(register_bits(f21, 9), 16);
+
+        // FP8 <5,2>: 2*2 + 2^6 - 2 = 66-bit products -> no integer accum
+        let fp8 = EmFormat::new(5, 2);
+        assert_eq!(fp8.product_bits(), 66);
+        assert!(!integer_accumulation_ok(fp8, 9));
+    }
+
+    #[test]
+    fn register_monotone_in_group_len() {
+        let fmt = EmFormat::new(2, 4);
+        assert!(register_bits(fmt, 9) <= register_bits(fmt, 1 << 20));
+    }
+
+    #[test]
+    fn analysis_table_shape() {
+        let rows = analysis(&[EmFormat::new(2, 1), EmFormat::new(2, 4), EmFormat::new(5, 2)], 9);
+        assert_eq!(rows.len(), 3);
+        assert!(rows[0].integer_accumulation);
+        assert!(!rows[2].integer_accumulation);
+    }
+}

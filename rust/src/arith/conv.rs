@@ -1,0 +1,252 @@
+//! Full low-bit tensor convolution on the integer datapath (Eq. 6), the
+//! composition intra-MAC -> group scale -> adder tree, plus the float
+//! reference path used to validate it.
+//!
+//! Layouts follow the paper: weights `[Co, Ci, K, K]` grouped `(co, ci)`,
+//! activations `[N, Ci, H, W]` grouped `(n, ci)`; the intra-group MAC runs
+//! over the K x K window, the tree reduces over Ci.
+
+use super::group_scale::GroupScaleFactor;
+use super::intra::{intra_group_mac, Element};
+use super::tree::tree_sum;
+use crate::mls::{Grouping, MlsTensor};
+
+/// Outcome of an integer-path convolution, with hardware-audit counters.
+pub struct ConvOutput {
+    /// [N, Co, Ho, Wo] in row-major order
+    pub z: Vec<f32>,
+    pub shape: [usize; 4],
+    /// peak intra-group accumulator magnitude observed (bit-width audit)
+    pub peak_acc_bits: u32,
+    /// operation counters for the energy model
+    pub mul_ops: u64,
+    pub int_add_ops: u64,
+    pub float_add_ops: u64,
+    pub group_scale_ops: u64,
+}
+
+/// `Conv(qW, qA)` on the integer path. `stride`/`pad` as usual; the result
+/// INCLUDES the tensor scales `S_t^w * S_t^a` so it is directly comparable
+/// with a float convolution of the dequantized tensors.
+pub fn lowbit_conv(w: &MlsTensor, a: &MlsTensor, stride: usize, pad: usize) -> ConvOutput {
+    assert_eq!(w.shape.len(), 4, "weights must be [Co, Ci, K, K]");
+    assert_eq!(a.shape.len(), 4, "activations must be [N, Ci, H, W]");
+    assert_eq!(w.cfg.grouping, Grouping::Both);
+    assert_eq!(a.cfg.grouping, Grouping::Both);
+    assert_eq!(w.cfg.element, a.cfg.element, "operand formats must match");
+    let [co_n, ci_n, kh, kw] = [w.shape[0], w.shape[1], w.shape[2], w.shape[3]];
+    let [n_n, a_ci, h, wi] = [a.shape[0], a.shape[1], a.shape[2], a.shape[3]];
+    assert_eq!(ci_n, a_ci);
+    let ho = (h + 2 * pad - kh) / stride + 1;
+    let wo = (wi + 2 * pad - kw) / stride + 1;
+
+    let fmt = w.cfg.element;
+    let st = w.s_t * a.s_t;
+    let mut z = vec![0.0f32; n_n * co_n * ho * wo];
+    let mut peak_bits = 0u32;
+    let (mut muls, mut iadds, mut fadds, mut gscales) = (0u64, 0u64, 0u64, 0u64);
+
+    // pre-extract element planes for cache-friendly access
+    let elem = |t: &MlsTensor, idx: usize| Element {
+        sign: t.sign[idx],
+        exp_code: t.exp_code[idx],
+        man: t.man[idx],
+    };
+
+    let mut contribs = vec![0.0f32; ci_n];
+    let mut wbuf: Vec<Element> = Vec::with_capacity(kh * kw);
+    let mut abuf: Vec<Element> = Vec::with_capacity(kh * kw);
+
+    for n in 0..n_n {
+        for co in 0..co_n {
+            for oy in 0..ho {
+                for ox in 0..wo {
+                    for (ci, contrib) in contribs.iter_mut().enumerate() {
+                        wbuf.clear();
+                        abuf.clear();
+                        for i in 0..kh {
+                            for j in 0..kw {
+                                let iy = (oy * stride + i) as isize - pad as isize;
+                                let ix = (ox * stride + j) as isize - pad as isize;
+                                if iy < 0 || ix < 0 || iy >= h as isize || ix >= wi as isize {
+                                    continue; // zero padding contributes nothing
+                                }
+                                let widx = ((co * ci_n + ci) * kh + i) * kw + j;
+                                let aidx =
+                                    ((n * ci_n + ci) * h + iy as usize) * wi + ix as usize;
+                                wbuf.push(elem(w, widx));
+                                abuf.push(elem(a, aidx));
+                            }
+                        }
+                        let ps = intra_group_mac(&wbuf, &abuf, fmt);
+                        peak_bits = peak_bits.max(ps.peak_bits());
+                        muls += wbuf.len() as u64;
+                        iadds += wbuf.len() as u64;
+                        let wg = co * ci_n + ci;
+                        let ag = n * ci_n + ci;
+                        let factor = GroupScaleFactor::combine(
+                            w.sg_exp[wg],
+                            w.sg_man[wg],
+                            a.sg_exp[ag],
+                            a.sg_man[ag],
+                        );
+                        gscales += 1;
+                        *contrib = factor.apply(ps.p, ps.scale_log2);
+                    }
+                    fadds += (ci_n - 1) as u64;
+                    let zi = ((n * co_n + co) * ho + oy) * wo + ox;
+                    z[zi] = st * tree_sum(&contribs);
+                }
+            }
+        }
+    }
+
+    ConvOutput {
+        z,
+        shape: [n_n, co_n, ho, wo],
+        peak_acc_bits: peak_bits,
+        mul_ops: muls,
+        int_add_ops: iadds,
+        float_add_ops: fadds,
+        group_scale_ops: gscales,
+    }
+}
+
+/// Reference: plain f32 convolution (NCHW x OIHW), used for the float path
+/// (conv of dequantized tensors) and by the data/nn substrates.
+pub fn conv2d_f32(
+    w: &[f32],
+    wshape: [usize; 4],
+    a: &[f32],
+    ashape: [usize; 4],
+    stride: usize,
+    pad: usize,
+) -> (Vec<f32>, [usize; 4]) {
+    let [co_n, ci_n, kh, kw] = wshape;
+    let [n_n, a_ci, h, wi] = ashape;
+    assert_eq!(ci_n, a_ci);
+    let ho = (h + 2 * pad - kh) / stride + 1;
+    let wo = (wi + 2 * pad - kw) / stride + 1;
+    let mut z = vec![0.0f32; n_n * co_n * ho * wo];
+    for n in 0..n_n {
+        for co in 0..co_n {
+            for oy in 0..ho {
+                for ox in 0..wo {
+                    let mut acc = 0.0f64;
+                    for ci in 0..ci_n {
+                        for i in 0..kh {
+                            for j in 0..kw {
+                                let iy = (oy * stride + i) as isize - pad as isize;
+                                let ix = (ox * stride + j) as isize - pad as isize;
+                                if iy < 0 || ix < 0 || iy >= h as isize || ix >= wi as isize {
+                                    continue;
+                                }
+                                let widx = ((co * ci_n + ci) * kh + i) * kw + j;
+                                let aidx =
+                                    ((n * ci_n + ci) * h + iy as usize) * wi + ix as usize;
+                                acc += w[widx] as f64 * a[aidx] as f64;
+                            }
+                        }
+                    }
+                    z[((n * co_n + co) * ho + oy) * wo + ox] = acc as f32;
+                }
+            }
+        }
+    }
+    (z, [n_n, co_n, ho, wo])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mls::quantizer::{quantize, QuantConfig, Rounding};
+    use crate::util::rng::Pcg32;
+
+    fn rand_nchw(rng: &mut Pcg32, shape: [usize; 4]) -> Vec<f32> {
+        crate::util::prop::grouped_tensor(rng, shape)
+    }
+
+    fn check_cfg(cfg: QuantConfig, seed: u64) {
+        let mut rng = Pcg32::seeded(seed);
+        let wshape = [4usize, 3, 3, 3];
+        let ashape = [2usize, 3, 6, 6];
+        let wf = rand_nchw(&mut rng, wshape);
+        let af = rand_nchw(&mut rng, ashape);
+        let tw = quantize(&wf, &wshape, &cfg, &[]);
+        let ta = quantize(&af, &ashape, &cfg, &[]);
+        let out = lowbit_conv(&tw, &ta, 1, 1);
+        let (zf, zshape) = conv2d_f32(&tw.dequantize(), wshape, &ta.dequantize(), ashape, 1, 1);
+        assert_eq!(out.shape, zshape);
+        let scale = zf.iter().fold(0.0f32, |m, v| m.max(v.abs())).max(1e-9);
+        for (i, (a, b)) in out.z.iter().zip(&zf).enumerate() {
+            assert!(
+                (a - b).abs() / scale < 1e-5,
+                "idx {i}: int {a} vs float {b} (cfg {})",
+                cfg.name()
+            );
+        }
+    }
+
+    #[test]
+    fn integer_path_matches_float_path_e2m4() {
+        let mut cfg = QuantConfig::new(2, 4);
+        cfg.rounding = Rounding::Nearest;
+        check_cfg(cfg, 20);
+    }
+
+    #[test]
+    fn integer_path_matches_float_path_e2m1() {
+        let mut cfg = QuantConfig::new(2, 1);
+        cfg.rounding = Rounding::Nearest;
+        check_cfg(cfg, 21);
+    }
+
+    #[test]
+    fn integer_path_matches_float_path_int4() {
+        let mut cfg = QuantConfig::new(0, 4);
+        cfg.rounding = Rounding::Nearest;
+        check_cfg(cfg, 22);
+    }
+
+    #[test]
+    fn accumulator_stays_within_analysis() {
+        let mut rng = Pcg32::seeded(23);
+        let mut cfg = QuantConfig::new(2, 4);
+        cfg.rounding = Rounding::Nearest;
+        let wshape = [4usize, 4, 3, 3];
+        let ashape = [2usize, 4, 5, 5];
+        let tw = quantize(&rand_nchw(&mut rng, wshape), &wshape, &cfg, &[]);
+        let ta = quantize(&rand_nchw(&mut rng, ashape), &ashape, &cfg, &[]);
+        let out = lowbit_conv(&tw, &ta, 1, 1);
+        // <2,4>: 14-bit products, 9 accumulations -> must fit the paper's
+        // 32-bit integer accumulator with lots of headroom
+        assert!(out.peak_acc_bits <= 14 + 4 + 1, "peak {}", out.peak_acc_bits);
+        assert!(out.peak_acc_bits <= 32);
+    }
+
+    #[test]
+    fn op_counters_match_geometry() {
+        let mut rng = Pcg32::seeded(24);
+        let cfg = QuantConfig { rounding: Rounding::Nearest, ..QuantConfig::new(2, 4) };
+        let wshape = [2usize, 3, 3, 3];
+        let ashape = [1usize, 3, 4, 4];
+        let tw = quantize(&rand_nchw(&mut rng, wshape), &wshape, &cfg, &[]);
+        let ta = quantize(&rand_nchw(&mut rng, ashape), &ashape, &cfg, &[]);
+        let out = lowbit_conv(&tw, &ta, 1, 1);
+        // ho=wo=4, n=1, co=2, ci=3: group scale ops = 1*2*16*3
+        assert_eq!(out.group_scale_ops, 96);
+        assert_eq!(out.float_add_ops, (3 - 1) * 2 * 16);
+        // mul ops < full 3x3 window count because padding clips windows
+        assert!(out.mul_ops <= 96 * 9);
+    }
+
+    #[test]
+    fn conv2d_f32_identity_kernel() {
+        // 1x1 identity kernel reproduces the input
+        let w = vec![1.0f32];
+        let a: Vec<f32> = (0..16).map(|v| v as f32).collect();
+        let (z, shape) = conv2d_f32(&w, [1, 1, 1, 1], &a, [1, 1, 4, 4], 1, 0);
+        assert_eq!(shape, [1, 1, 4, 4]);
+        assert_eq!(z, a);
+    }
+}

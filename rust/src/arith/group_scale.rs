@@ -1,0 +1,112 @@
+//! Group-wise scale unit (paper Eq. 8).
+//!
+//! `S_p = S_g^w * S_g^a` where both factors are `<E_g, 1>` values, so the
+//! product is an `<E_g+1, 2>` value whose fraction is one of
+//! `{1, 1.5, 2.25} = {4, 6, 9} / 4`. The hardware applies it to the integer
+//! partial sum `P` with at most two shift-adds:
+//!
+//! ```text
+//! man = 00 :  P                      << (-exp)        (F = 4)
+//! man = 01 :  P + (P >> 1)                            (F = 6)
+//! man = 11 :  (P << 1) + (P >> 2)                     (F = 9)
+//! ```
+//!
+//! We simulate it exactly as `P * F` (an exact small-integer multiply)
+//! carrying the `-2` in the fixed-point exponent, which is the same number
+//! the shift-add network produces.
+
+use crate::mls::format::{exp2i, EmFormat};
+
+/// The scale factor of one group pair in `(F, k)` form: `S_p = F/4 * 2^-k`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct GroupScaleFactor {
+    /// integer fraction x4: one of {4, 6, 9} for M_g = 1 (or {4} for M_g=0)
+    pub f: i64,
+    /// exponent code sum (shift amount)
+    pub k: u32,
+}
+
+impl GroupScaleFactor {
+    /// Combine two stored group scales (exp codes + mantissas, M_g <= 1).
+    pub fn combine(w_exp: u8, w_man: u32, a_exp: u8, a_man: u32) -> Self {
+        debug_assert!(w_man <= 1 && a_man <= 1, "hardware unit supports M_g <= 1");
+        // (1 + mw/2)(1 + ma/2) * 4 = 4 + 2(mw + ma) + mw*ma
+        let f = 4 + 2 * (w_man + a_man) as i64 + (w_man * a_man) as i64;
+        GroupScaleFactor { f, k: w_exp as u32 + a_exp as u32 }
+    }
+
+    /// The float value of this scale factor.
+    pub fn value(&self) -> f32 {
+        self.f as f32 * 0.25 * exp2i(-(self.k as i32))
+    }
+
+    /// Apply to an integer partial sum: returns the float contribution
+    /// `P * S_p * 2^(p_scale_log2)` exactly as the shift-add + tree input.
+    pub fn apply(&self, p: i64, p_scale_log2: i32) -> f32 {
+        // P * F is exact in i64 (F <= 9, |P| < 2^40 in any paper config);
+        // the power-of-two scale merges the fixed point, the /4 and 2^-k.
+        (p * self.f) as f32 * exp2i(p_scale_log2 - 2 - self.k as i32)
+    }
+
+    /// Number of adder operations the shift-add network needs (0, 1 or 2
+    /// extra adds; used by the energy model — paper counts it as one
+    /// LocalACC-class op).
+    pub fn shift_add_ops(&self) -> u32 {
+        match self.f {
+            4 => 0,
+            6 => 1,
+            9 => 1,
+            _ => 2,
+        }
+    }
+}
+
+/// Element-format product fixed-point helper: for partial sums produced by
+/// [`crate::arith::intra::intra_group_mac`] with element format `fmt`.
+pub fn apply_group_scale(p: i64, fmt: EmFormat, factor: GroupScaleFactor) -> f32 {
+    factor.apply(p, 2 * fmt.emin() - 2 * fmt.m as i32)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mls::format::{group_scale_value, quantize_group_scale};
+
+    #[test]
+    fn fraction_table() {
+        assert_eq!(GroupScaleFactor::combine(0, 0, 0, 0).f, 4); // 1 * 1
+        assert_eq!(GroupScaleFactor::combine(0, 1, 0, 0).f, 6); // 1.5 * 1
+        assert_eq!(GroupScaleFactor::combine(0, 0, 0, 1).f, 6);
+        assert_eq!(GroupScaleFactor::combine(0, 1, 0, 1).f, 9); // 1.5 * 1.5
+    }
+
+    #[test]
+    fn value_matches_product_of_scales() {
+        let fmt = EmFormat::new(8, 1);
+        for sw in [0.3f32, 0.55, 0.8, 1.0] {
+            for sa in [0.26f32, 0.5, 0.95] {
+                let (cw, mw) = quantize_group_scale(sw, fmt);
+                let (ca, ma) = quantize_group_scale(sa, fmt);
+                let f = GroupScaleFactor::combine(cw, mw, ca, ma);
+                let expect = group_scale_value(cw, mw, fmt) * group_scale_value(ca, ma, fmt);
+                assert!((f.value() - expect).abs() < 1e-7, "{sw} {sa}");
+            }
+        }
+    }
+
+    #[test]
+    fn apply_is_exact_shift_add() {
+        let f = GroupScaleFactor { f: 9, k: 3 };
+        // P * 9 / 4 / 8 at fixed point 2^-14
+        let got = f.apply(1000, -14);
+        let expect = 1000.0 * 2.25 / 8.0 * 2.0f32.powi(-14);
+        assert_eq!(got, expect);
+    }
+
+    #[test]
+    fn shift_add_op_counts() {
+        assert_eq!(GroupScaleFactor { f: 4, k: 0 }.shift_add_ops(), 0);
+        assert_eq!(GroupScaleFactor { f: 6, k: 0 }.shift_add_ops(), 1);
+        assert_eq!(GroupScaleFactor { f: 9, k: 0 }.shift_add_ops(), 1);
+    }
+}

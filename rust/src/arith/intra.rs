@@ -1,0 +1,175 @@
+//! Intra-group integer MAC (paper Eq. 7).
+//!
+//! One group's partial sum:
+//!
+//! ```text
+//! P = sum_i  s_i^w s_i^a * Frac_i^w * Frac_i^a * 2^(shift_i)
+//! shift_i = (exp_i^w - emin) + (exp_i^a - emin)   in [0, 2*(2^E - 2)]
+//! ```
+//!
+//! with `Frac` the (M+1)-bit integer fraction (mantissa plus implicit bit)
+//! and the result aligned at the fixed point `2^(2*emin - 2M)`. The
+//! accumulator is a plain signed integer — the paper's headline hardware
+//! win over FP8's floating-point local accumulation.
+
+use crate::mls::format::EmFormat;
+
+/// Stored fields of one element, as the hardware sees them.
+#[derive(Clone, Copy, Debug)]
+pub struct Element {
+    pub sign: i8,
+    pub exp_code: u8,
+    pub man: u32,
+}
+
+impl Element {
+    /// (M+1)-bit integer fraction: man + 2^M when normal, man when subnormal.
+    #[inline]
+    pub fn frac_int(&self, fmt: EmFormat) -> i64 {
+        if self.exp_code >= 1 {
+            (self.man + (1 << fmt.m)) as i64
+        } else {
+            self.man as i64
+        }
+    }
+
+    /// Actual exponent: -code (normal), emin (subnormal).
+    #[inline]
+    pub fn exp_val(&self, fmt: EmFormat) -> i32 {
+        if self.exp_code >= 1 {
+            -(self.exp_code as i32)
+        } else {
+            fmt.emin()
+        }
+    }
+}
+
+/// Result of an intra-group MAC: integer partial sum + fixed-point position.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct PartialSum {
+    /// integer accumulator value
+    pub p: i64,
+    /// P_real = p * 2^scale_log2 (scale_log2 = 2*emin - 2*M)
+    pub scale_log2: i32,
+    /// maximum |accumulator| observed while summing (bit-width audit)
+    pub peak_abs: i64,
+}
+
+impl PartialSum {
+    pub fn value(&self) -> f32 {
+        self.p as f32 * crate::mls::format::exp2i(self.scale_log2)
+    }
+
+    /// Bits needed for the peak accumulator value (plus sign bit).
+    pub fn peak_bits(&self) -> u32 {
+        64 - self.peak_abs.unsigned_abs().leading_zeros() + 1
+    }
+}
+
+/// MAC over one group of element pairs (Eq. 7).
+pub fn intra_group_mac(w: &[Element], a: &[Element], fmt: EmFormat) -> PartialSum {
+    assert_eq!(w.len(), a.len());
+    let emin = fmt.emin();
+    let mut acc: i64 = 0;
+    let mut peak: i64 = 0;
+    for (we, ae) in w.iter().zip(a) {
+        let sign = (we.sign as i64) * (ae.sign as i64);
+        if sign == 0 {
+            continue;
+        }
+        let prod = we.frac_int(fmt) * ae.frac_int(fmt);
+        let shift = (we.exp_val(fmt) - emin) + (ae.exp_val(fmt) - emin);
+        debug_assert!((0..=2 * ((1 << fmt.e) - 2)).contains(&shift), "shift {shift}");
+        acc += sign * (prod << shift);
+        peak = peak.max(acc.abs());
+    }
+    PartialSum { p: acc, scale_log2: 2 * emin - 2 * fmt.m as i32, peak_abs: peak }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mls::format;
+    use crate::mls::quantizer::{quantize, QuantConfig, Rounding};
+    use crate::util::rng::Pcg32;
+
+    fn elems(t: &crate::mls::MlsTensor) -> Vec<Element> {
+        (0..t.len())
+            .map(|i| Element { sign: t.sign[i], exp_code: t.exp_code[i], man: t.man[i] })
+            .collect()
+    }
+
+    #[test]
+    fn single_product_exact() {
+        let fmt = EmFormat::new(2, 4);
+        // w = (1 + 3/16) * 2^-1, a = (1 + 5/16) * 2^-2
+        let w = Element { sign: 1, exp_code: 1, man: 3 };
+        let a = Element { sign: -1, exp_code: 2, man: 5 };
+        let ps = intra_group_mac(&[w], &[a], fmt);
+        let expect = -(1.0 + 3.0 / 16.0) * 0.5 * (1.0 + 5.0 / 16.0) * 0.25;
+        assert!((ps.value() - expect as f32).abs() < 1e-7);
+    }
+
+    #[test]
+    fn zero_elements_skip() {
+        let fmt = EmFormat::new(2, 4);
+        let w = Element { sign: 0, exp_code: 0, man: 0 };
+        let a = Element { sign: 1, exp_code: 1, man: 7 };
+        let ps = intra_group_mac(&[w], &[a], fmt);
+        assert_eq!(ps.p, 0);
+    }
+
+    #[test]
+    fn matches_float_path_on_random_groups() {
+        let mut rng = Pcg32::seeded(11);
+        let mut cfg = QuantConfig::new(2, 4);
+        cfg.grouping = crate::mls::Grouping::First;
+        cfg.rounding = Rounding::Nearest;
+        let shape = [6usize, 9];
+        let w: Vec<f32> = rng.normal_vec(54, 1.0);
+        let a: Vec<f32> = rng.normal_vec(54, 1.0);
+        let tw = quantize(&w, &shape, &cfg, &[]);
+        let ta = quantize(&a, &shape, &cfg, &[]);
+        let ew = elems(&tw);
+        let ea = elems(&ta);
+        for g in 0..6 {
+            let ps = intra_group_mac(&ew[g * 9..(g + 1) * 9], &ea[g * 9..(g + 1) * 9], cfg.element);
+            // float path: sum of xbar_w * xbar_a (no scales)
+            let mut expect = 0.0f64;
+            for i in g * 9..(g + 1) * 9 {
+                let vw = tw.sign[i] as f64
+                    * tw.cfg.element.decode(tw.exp_code[i], tw.man[i]) as f64;
+                let va = ta.sign[i] as f64
+                    * ta.cfg.element.decode(ta.exp_code[i], ta.man[i]) as f64;
+                expect += vw * va;
+            }
+            assert!((ps.value() as f64 - expect).abs() < 1e-6, "group {g}");
+        }
+    }
+
+    #[test]
+    fn accumulator_respects_analysis() {
+        // peak bits <= product_bits + ceil(log2(len)) + 1
+        let mut rng = Pcg32::seeded(12);
+        let fmt = EmFormat::new(2, 4);
+        let n = 64;
+        let mk = |rng: &mut Pcg32| Element {
+            sign: if rng.uniform() < 0.5 { 1 } else { -1 },
+            exp_code: rng.below(4) as u8,
+            man: rng.below(16),
+        };
+        let w: Vec<Element> = (0..n).map(|_| mk(&mut rng)).collect();
+        let a: Vec<Element> = (0..n).map(|_| mk(&mut rng)).collect();
+        let ps = intra_group_mac(&w, &a, fmt);
+        let bound = fmt.product_bits() + 6 + 1;
+        assert!(ps.peak_bits() <= bound, "{} > {}", ps.peak_bits(), bound);
+    }
+
+    #[test]
+    fn fixed_point_position() {
+        let fmt = EmFormat::new(2, 4); // emin=-3, M=4
+        let ps = intra_group_mac(&[], &[], fmt);
+        assert_eq!(ps.scale_log2, -14);
+        assert_eq!(format::exp2i(ps.scale_log2), 2.0f32.powi(-14));
+    }
+}

@@ -1,0 +1,21 @@
+//! Low-bit tensor convolution arithmetic (paper Sec. V-B, Eq. 6-8) — a
+//! bit-accurate simulator of the customized hardware unit of Fig. 1 (b):
+//!
+//! ```text
+//!   low-bit MUL -> integer LocalACC (intra-group, Eq. 7)
+//!              -> group-wise scale unit (shift-add, Eq. 8)
+//!              -> inter-group adder tree (the only FloatAdd kept)
+//! ```
+//!
+//! [`intra`] implements the integer MAC with shift alignment and tracks the
+//! live accumulator range; [`group_scale`] applies `S_p = S_g^w * S_g^a` as
+//! exact shift-adds; [`tree`] is the floating-point adder tree;
+//! [`conv`] composes them into a full `Conv(qW, qA)` over NCHW tensors and
+//! cross-checks against the dequantized float path; [`bitwidth`] carries
+//! the Sec. V-C accumulation-width analysis.
+
+pub mod bitwidth;
+pub mod conv;
+pub mod group_scale;
+pub mod intra;
+pub mod tree;

@@ -1,0 +1,51 @@
+//! Inter-group adder tree — the only floating-point accumulation the MLS
+//! datapath keeps (paper Fig. 1 (b), Table VI "Conv / FloatAdd" row).
+//!
+//! Simulated as a balanced pairwise reduction, which is both what the RTL
+//! tree does and a numerically stable order (matching the XLA reduction
+//! closely enough that conv.rs validates against the float path at 1e-5).
+
+/// Balanced pairwise sum, the adder-tree reduction order.
+pub fn tree_sum(xs: &[f32]) -> f32 {
+    match xs.len() {
+        0 => 0.0,
+        1 => xs[0],
+        n => {
+            let mid = n / 2;
+            tree_sum(&xs[..mid]) + tree_sum(&xs[mid..])
+        }
+    }
+}
+
+/// Number of adder ops a tree reduction of n inputs performs.
+pub fn tree_add_ops(n: usize) -> u64 {
+    n.saturating_sub(1) as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    #[test]
+    fn sums_exactly_small() {
+        assert_eq!(tree_sum(&[]), 0.0);
+        assert_eq!(tree_sum(&[2.5]), 2.5);
+        assert_eq!(tree_sum(&[1.0, 2.0, 3.0, 4.0]), 10.0);
+    }
+
+    #[test]
+    fn close_to_f64_reference() {
+        let mut rng = Pcg32::seeded(13);
+        let xs = rng.normal_vec(1024, 1.0);
+        let exact: f64 = xs.iter().map(|&v| v as f64).sum();
+        let got = tree_sum(&xs) as f64;
+        assert!((got - exact).abs() < 1e-3, "{got} vs {exact}");
+    }
+
+    #[test]
+    fn op_count() {
+        assert_eq!(tree_add_ops(1), 0);
+        assert_eq!(tree_add_ops(64), 63);
+    }
+}

@@ -1,0 +1,139 @@
+//! Run configuration: defaults + `key=value` overrides (CLI or file).
+//!
+//! The format is a flat `key=value` list (one per line in a file, or
+//! repeated `--set key=value` on the CLI) — dependency-free and diffable.
+
+use anyhow::{anyhow, Result};
+
+use crate::data::DatasetConfig;
+
+/// Learning-rate schedule: the paper's step decay (x0.1 at milestones).
+#[derive(Clone, Debug, PartialEq)]
+pub struct LrSchedule {
+    pub base: f32,
+    /// steps (not epochs — we are step-based) at which lr decays by 10
+    pub milestones: Vec<u64>,
+}
+
+impl LrSchedule {
+    pub fn at(&self, step: u64) -> f32 {
+        let decays = self.milestones.iter().filter(|&&m| step >= m).count();
+        self.base * 0.1f32.powi(decays as i32)
+    }
+}
+
+/// One training run.
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    pub model: String,
+    /// quant config name as in the manifest (e.g. "e2m4_gnc_eg8mg1_sr", "fp32")
+    pub cfg_name: String,
+    pub steps: u64,
+    pub eval_every: u64,
+    pub eval_batches: u64,
+    pub lr: LrSchedule,
+    pub seed: u64,
+    pub data: DatasetConfig,
+    /// where to write metrics CSV / checkpoints (None = no files)
+    pub out_dir: Option<String>,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            model: "resnet_t".to_string(),
+            cfg_name: "e2m4_gnc_eg8mg1_sr".to_string(),
+            steps: 300,
+            eval_every: 50,
+            eval_batches: 16,
+            lr: LrSchedule { base: 0.05, milestones: vec![150, 250] },
+            seed: 0,
+            data: DatasetConfig::default(),
+            out_dir: None,
+        }
+    }
+}
+
+impl TrainConfig {
+    /// Apply one `key=value` override.
+    pub fn set(&mut self, kv: &str) -> Result<()> {
+        let (k, v) = kv
+            .split_once('=')
+            .ok_or_else(|| anyhow!("override must be key=value, got {kv:?}"))?;
+        match k {
+            "model" => self.model = v.to_string(),
+            "cfg" | "cfg_name" => self.cfg_name = v.to_string(),
+            "steps" => self.steps = v.parse()?,
+            "eval_every" => self.eval_every = v.parse()?,
+            "eval_batches" => self.eval_batches = v.parse()?,
+            "lr" => self.lr.base = v.parse()?,
+            "milestones" => {
+                self.lr.milestones = v
+                    .split(',')
+                    .filter(|s| !s.is_empty())
+                    .map(|s| s.parse().map_err(|e| anyhow!("milestone {s:?}: {e}")))
+                    .collect::<Result<Vec<u64>>>()?
+            }
+            "seed" => self.seed = v.parse()?,
+            "noise" => self.data.noise = v.parse()?,
+            "label_noise" => self.data.label_noise = v.parse()?,
+            "data_seed" => self.data.seed = v.parse()?,
+            "out_dir" => self.out_dir = Some(v.to_string()),
+            _ => anyhow::bail!("unknown config key {k:?}"),
+        }
+        Ok(())
+    }
+
+    /// Parse a config file of key=value lines ('#' comments allowed).
+    pub fn load_file(&mut self, path: &str) -> Result<()> {
+        for (i, line) in std::fs::read_to_string(path)?.lines().enumerate() {
+            let line = line.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            self.set(line).map_err(|e| anyhow!("{path}:{}: {e}", i + 1))?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lr_schedule_decays() {
+        let s = LrSchedule { base: 0.1, milestones: vec![100, 200] };
+        assert_eq!(s.at(0), 0.1);
+        assert_eq!(s.at(99), 0.1);
+        assert!((s.at(100) - 0.01).abs() < 1e-9);
+        assert!((s.at(200) - 0.001).abs() < 1e-9);
+    }
+
+    #[test]
+    fn overrides() {
+        let mut c = TrainConfig::default();
+        c.set("model=cnn_s").unwrap();
+        c.set("steps=42").unwrap();
+        c.set("milestones=10,20").unwrap();
+        c.set("noise=0.7").unwrap();
+        assert_eq!(c.model, "cnn_s");
+        assert_eq!(c.steps, 42);
+        assert_eq!(c.lr.milestones, vec![10, 20]);
+        assert!((c.data.noise - 0.7).abs() < 1e-6);
+        assert!(c.set("bogus=1").is_err());
+        assert!(c.set("nokey").is_err());
+    }
+
+    #[test]
+    fn file_parsing() {
+        let dir = std::env::temp_dir().join("mls_cfg_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("cfg.txt");
+        std::fs::write(&path, "steps=7 # comment\n\n# full line comment\nlr=0.2\n").unwrap();
+        let mut c = TrainConfig::default();
+        c.load_file(path.to_str().unwrap()).unwrap();
+        assert_eq!(c.steps, 7);
+        assert!((c.lr.base - 0.2).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,382 @@
+//! Experiment registry: one runnable harness per paper table/figure.
+//!
+//! `run(exp, artifacts_dir, overrides)` regenerates the table/figure and
+//! returns the report text (also printed by the CLI). Analytic experiments
+//! (Table I/V/VI, Fig. 2 energy, Eq. 12) need no artifacts; training
+//! experiments (Table II/III sensitivity/IV, Fig. 6/7) drive the PJRT
+//! engine. See DESIGN.md "Experiment index".
+
+use anyhow::{anyhow, Result};
+
+use super::config::TrainConfig;
+use super::trainer::{train, TrainResult};
+use crate::data::streams;
+use crate::hw::report;
+use crate::hw::units::EnergyModel;
+use crate::mls::format::EmFormat;
+use crate::mls::{error as qerror, Grouping, QuantConfig, Rounding};
+use crate::runtime::Engine;
+
+pub const EXPERIMENTS: &[&str] = &[
+    "table1", "table2", "table3", "table4", "table5", "table6",
+    "fig2", "fig6", "fig7", "eq12", "ratios",
+];
+
+/// Entry point used by the CLI and the examples.
+pub fn run(exp: &str, artifacts_dir: &str, overrides: &[String]) -> Result<String> {
+    let em = EnergyModel::fitted();
+    let fmt = EmFormat::new(2, 4);
+    match exp {
+        "table1" => report::table1(64),
+        "table5" => Ok(report::table5(&em)),
+        "table6" => report::table6("resnet34", 64, fmt, &em),
+        "eq12" => Ok(report::eq12(&em, fmt)),
+        "ratios" => report::ratios(64, fmt, &em),
+        "fig2" => fig2(artifacts_dir, overrides, &em, fmt),
+        "table2" => table2(artifacts_dir, overrides),
+        "table3" => table3(artifacts_dir, overrides),
+        "table4" => table4(artifacts_dir, overrides),
+        "fig6" => fig6(artifacts_dir, overrides),
+        "fig7" => fig7(artifacts_dir, overrides),
+        _ => Err(anyhow!("unknown experiment {exp:?}; have {EXPERIMENTS:?}")),
+    }
+}
+
+fn base_config(overrides: &[String]) -> Result<TrainConfig> {
+    let mut c = TrainConfig::default();
+    c.out_dir = Some("runs".to_string());
+    for kv in overrides {
+        c.set(kv)?;
+    }
+    Ok(c)
+}
+
+fn run_one(engine: &mut Engine, base: &TrainConfig, model: &str, cfg_name: &str) -> Result<TrainResult> {
+    let mut c = base.clone();
+    c.model = model.to_string();
+    c.cfg_name = cfg_name.to_string();
+    let r = train(engine, &c)?;
+    eprintln!("[exp] {}", r.summary());
+    Ok(r)
+}
+
+// -------------------------------------------------------------------------
+// Table II — accuracy of low-bit training across models / formats (scaled)
+// -------------------------------------------------------------------------
+
+fn table2(artifacts_dir: &str, overrides: &[String]) -> Result<String> {
+    let base = base_config(overrides)?;
+    let mut engine = Engine::from_dir(artifacts_dir)?;
+    let mut out = String::new();
+    out.push_str(&format!(
+        "Table II (scaled) — synthcifar, {} steps, seed {}\n\
+         paper shape to reproduce: fp32 ~ <2,4> ~ <2,1> (drop <~1%), fixed-point\n\
+         (E=0) worse, very low fixed-point much worse / diverging\n",
+        base.steps, base.seed
+    ));
+    out.push_str(&format!(
+        "{:<10} {:<26} {:>9} {:>10} {:>10}\n",
+        "model", "bit-width (W/A/E)", "test acc", "fp32 base", "acc drop"
+    ));
+    // the paper's Table II format set (core configs; the full ablation grid
+    // belongs to Table IV)
+    let core = [
+        "fp32",
+        "e2m4_gnc_eg8mg1_sr",   // ImageNet headline <2,4>
+        "e2m1_gnc_eg8mg1_sr",   // CIFAR headline <2,1>
+        "e1m1_gnc_eg8mg1_sr",   // <1,1> / 8-bit accumulation row
+        "e2m3_gnc_eg8mg1_sr",   // 6-bit (Table III sensitivity)
+        "e0m4_gnc_eg8mg1_sr",   // fixed-point 4 ("4 4 4" row)
+        "e0m2_gnc_eg8mg1_sr",   // fixed-point 2 ("2 2 2" row)
+    ];
+    for model in ["resnet_t", "cnn_s"] {
+        let names: Vec<String> = core
+            .iter()
+            .filter(|n| engine.manifest.find(model, "train_step", n).is_ok())
+            .map(|n| n.to_string())
+            .collect();
+
+        let mut baseline: Option<f32> = None;
+        for cfg_name in &names {
+            let r = run_one(&mut engine, &base, model, cfg_name)?;
+            if cfg_name == "fp32" {
+                baseline = Some(r.test_acc);
+            }
+            let base_acc = baseline.unwrap_or(f32::NAN);
+            let drop = if r.diverged { "Div.".to_string() } else {
+                format!("{:+.2}%", (base_acc - r.test_acc) * 100.0)
+            };
+            let acc = if r.diverged { "Div.".to_string() } else { format!("{:.3}", r.test_acc) };
+            out.push_str(&format!(
+                "{:<10} {:<26} {:>9} {:>10.3} {:>10}\n",
+                model, cfg_name, acc, base_acc, drop
+            ));
+        }
+    }
+    Ok(out)
+}
+
+// -------------------------------------------------------------------------
+// Table III — GOPs (exact) + 6-bit training sensitivity (scaled)
+// -------------------------------------------------------------------------
+
+fn table3(artifacts_dir: &str, overrides: &[String]) -> Result<String> {
+    let mut out = String::new();
+    out.push_str("Table III — inference GOPs (exact analytic) + 6-bit (<2,3>) sensitivity (scaled)\n");
+    out.push_str(&format!("{:<12} {:>14} {:>22}\n", "model", "inference GOPs", "6-bit acc drop (scaled)"));
+    // exact part: paper models
+    for name in ["resnet18", "resnet34", "vgg16", "googlenet"] {
+        let net = crate::nn::zoo::network(name)?;
+        out.push_str(&format!(
+            "{:<12} {:>14.2} {:>22}\n",
+            name,
+            net.inference_macs() as f64 / 1e9,
+            "-"
+        ));
+    }
+    // scaled sensitivity: train fp32 vs <2,3> on the trainable models
+    let base = base_config(overrides)?;
+    let mut engine = Engine::from_dir(artifacts_dir)?;
+    for model in ["resnet_t", "cnn_s"] {
+        let fp = run_one(&mut engine, &base, model, "fp32")?;
+        let cfg6 = "e2m3_gnc_eg8mg1_sr";
+        if engine.manifest.find(model, "train_step", cfg6).is_ok() {
+            let q = run_one(&mut engine, &base, model, cfg6)?;
+            let net = crate::nn::zoo::network(model)?;
+            out.push_str(&format!(
+                "{:<12} {:>14.4} {:>21.2}%\n",
+                model,
+                net.inference_macs() as f64 / 1e9,
+                (fp.test_acc - q.test_acc) * 100.0
+            ));
+        }
+    }
+    out.push_str("(paper: 1.88 / 3.59 / 15.25 / 1.58 GOPs; drops 0.9 / 0.8 / 0.1 / -0.1%)\n");
+    Ok(out)
+}
+
+// -------------------------------------------------------------------------
+// Table IV — ablation grid: #group x M_g x E_x x M_x (scaled)
+// -------------------------------------------------------------------------
+
+fn table4(artifacts_dir: &str, overrides: &[String]) -> Result<String> {
+    let base = base_config(overrides)?;
+    let mut engine = Engine::from_dir(artifacts_dir)?;
+    let model = "resnet_t";
+
+    // the paper's 9 config rows x M_x in {4,3,2,1}
+    let rows: Vec<(&str, Option<u32>, u32)> = vec![
+        ("none", None, 0),
+        ("second", Some(0), 0),
+        ("first", Some(0), 0),
+        ("both", Some(0), 0),
+        ("both", Some(1), 0),
+        ("none", None, 1),
+        ("none", None, 2),
+        ("both", Some(1), 1),
+        ("both", Some(1), 2),
+    ];
+
+    let mut out = String::new();
+    out.push_str(&format!(
+        "Table IV (scaled) — training resnet_t on synthcifar, {} steps\n",
+        base.steps
+    ));
+    out.push_str(&format!(
+        "{:<8} {:>4} {:>4} | {:>8} {:>8} {:>8} {:>8}\n",
+        "#group", "Mg", "Ex", "Mx=4", "Mx=3", "Mx=2", "Mx=1"
+    ));
+    let mut missing = 0;
+    for (grouping, m_g, e_x) in rows {
+        let mut cells = Vec::new();
+        for m_x in [4u32, 3, 2, 1] {
+            let cfg = QuantConfig {
+                element: EmFormat::new(e_x, m_x),
+                group: EmFormat::new(8, m_g.unwrap_or(0)),
+                grouping: Grouping::parse(grouping)?,
+                rounding: Rounding::Stochastic,
+                enabled: true,
+            };
+            let name = cfg.name();
+            if engine.manifest.find(model, "train_step", &name).is_err() {
+                cells.push("n/a".to_string());
+                missing += 1;
+                continue;
+            }
+            let r = run_one(&mut engine, &base, model, &name)?;
+            cells.push(if r.diverged {
+                "Div.".to_string()
+            } else {
+                format!("{:.1}", r.test_acc * 100.0)
+            });
+        }
+        out.push_str(&format!(
+            "{:<8} {:>4} {:>4} | {:>8} {:>8} {:>8} {:>8}\n",
+            grouping,
+            m_g.map(|v| v.to_string()).unwrap_or_else(|| "-".into()),
+            e_x,
+            cells[0], cells[1], cells[2], cells[3]
+        ));
+    }
+    if missing > 0 {
+        out.push_str(&format!(
+            "({missing} cells n/a — build the full ablation artifact set with `make artifacts-full`)\n"
+        ));
+    }
+    out.push_str("(paper shape: both-grouping > single-dim > none; larger E_x rescues small M_x;\n");
+    out.push_str(" group scaling with M_g=1 + E_x=0 ~ E_x=2 without grouping)\n");
+    Ok(out)
+}
+
+// -------------------------------------------------------------------------
+// Fig. 2 — energy (analytic) + measured accuracy drops from short runs
+// -------------------------------------------------------------------------
+
+fn fig2(artifacts_dir: &str, overrides: &[String], em: &EnergyModel, fmt: EmFormat) -> Result<String> {
+    // energy part is analytic; attach measured accuracy drops when the
+    // trainable artifacts exist.
+    let drops = (|| -> Result<Vec<(String, f64)>> {
+        let base = base_config(overrides)?;
+        let mut engine = Engine::from_dir(artifacts_dir)?;
+        let model = "resnet_t";
+        let fp = run_one(&mut engine, &base, model, "fp32")?;
+        let ours = run_one(&mut engine, &base, model, "e2m4_gnc_eg8mg1_sr")?;
+        let int8ish = run_one(&mut engine, &base, model, "e0m4_gnc_eg8mg1_sr")
+            .or_else(|_| run_one(&mut engine, &base, model, "e0m2_gnc_eg8mg1_sr"));
+        let mut v = vec![
+            ("fp32".to_string(), 0.0f64),
+            ("mls<2,4>".to_string(), (fp.test_acc - ours.test_acc) as f64 * 100.0),
+        ];
+        if let Ok(r) = int8ish {
+            v.push(("int8".to_string(), (fp.test_acc - r.test_acc) as f64 * 100.0));
+        }
+        Ok(v)
+    })()
+    .unwrap_or_default();
+    report::fig2("resnet18", 64, fmt, em, if drops.is_empty() { None } else { Some(&drops) })
+}
+
+// -------------------------------------------------------------------------
+// Fig. 6 — group maxima of activation / error, by channel and by sample
+// -------------------------------------------------------------------------
+
+/// Train briefly, then probe one batch and dump sorted group maxima.
+fn fig6(artifacts_dir: &str, overrides: &[String]) -> Result<String> {
+    let mut base = base_config(overrides)?;
+    base.steps = base.steps.min(120); // probe needs a warmed-up model, not a converged one
+    let mut engine = Engine::from_dir(artifacts_dir)?;
+    let model = "resnet_t";
+    let cfg_name = "e2m4_gnc_eg8mg1_sr";
+    let r = run_one(&mut engine, &base, model, cfg_name)?;
+
+    let meta = engine.manifest.model(model)?.clone();
+    let ds = crate::data::SynthCifar::new(base.data.clone());
+    let (images, labels) = ds.batch(meta.batch, streams::TEST, 0);
+    let outs = engine.probe_step(model, cfg_name, &r.final_state, &images, &labels, 7)?;
+    let k = meta.probe_names.len();
+
+    let mut out = String::new();
+    out.push_str("Fig. 6 — per-group maxima (normalized to overall max), mid-training model\n");
+    for (li, name) in meta.probe_names.iter().enumerate().take(3) {
+        let a = &outs[li];
+        let e = &outs[k + li];
+        let ashape = meta.probe_a_shapes[name].clone();
+        let eshape = meta.probe_e_shapes[name].clone();
+        for (tag, x, shape) in [("activation", a, &ashape), ("error", e, &eshape)] {
+            for (gtag, grouping) in [("channel", Grouping::Second), ("sample", Grouping::First)] {
+                let maxima = qerror::group_maxima(x, shape, grouping);
+                let overall = maxima.first().copied().unwrap_or(0.0).max(1e-30);
+                let frac = qerror::fraction_below_half_max(&maxima);
+                let quart = |p: f64| maxima[((maxima.len() - 1) as f64 * p) as usize] / overall;
+                out.push_str(&format!(
+                    "layer {name:<12} {tag:<10} by {gtag:<7}: groups {:>4}  p25 {:.3}  p50 {:.3}  p75 {:.3}  frac<max/2 {:.2}\n",
+                    maxima.len(), quart(0.25), quart(0.5), quart(0.75), frac
+                ));
+            }
+        }
+    }
+    out.push_str("(paper Fig. 6: most group maxima sit well below the overall max --\n");
+    out.push_str(" 'over half of the groups' below max/2, motivating group-wise scaling)\n");
+    Ok(out)
+}
+
+// -------------------------------------------------------------------------
+// Fig. 7 — per-layer AREs of W / E / A under format variants
+// -------------------------------------------------------------------------
+
+fn fig7(artifacts_dir: &str, overrides: &[String]) -> Result<String> {
+    let mut base = base_config(overrides)?;
+    base.steps = base.steps.min(120);
+    let mut engine = Engine::from_dir(artifacts_dir)?;
+    let model = "resnet_t";
+    let cfg_name = "e2m4_gnc_eg8mg1_sr";
+    let r = run_one(&mut engine, &base, model, cfg_name)?;
+
+    let meta = engine.manifest.model(model)?.clone();
+    let ds = crate::data::SynthCifar::new(base.data.clone());
+    let (images, labels) = ds.batch(meta.batch, streams::TEST, 0);
+    let outs = engine.probe_step(model, cfg_name, &r.final_state, &images, &labels, 7)?;
+    let k = meta.probe_names.len();
+
+    let mk = |e_x: u32, m_x: u32, grouping: Grouping, m_g: u32| QuantConfig {
+        element: EmFormat::new(e_x, m_x),
+        group: EmFormat::new(8, m_g),
+        grouping,
+        rounding: Rounding::Nearest,
+        enabled: true,
+    };
+
+    let mut out = String::new();
+    out.push_str("Fig. 7 — per-layer ARE of weight / error / activation\n");
+
+    // Row 1: grouping dims, <0,3> elements, <8,1> groups
+    out.push_str("row 1: grouping dims (<0,3> elements)\n");
+    let row1: Vec<(&str, QuantConfig)> = vec![
+        ("none", mk(0, 3, Grouping::None, 1)),
+        ("first(n/co)", mk(0, 3, Grouping::First, 1)),
+        ("second(c/ci)", mk(0, 3, Grouping::Second, 1)),
+        ("both(nc)", mk(0, 3, Grouping::Both, 1)),
+    ];
+    // Row 2: E_x variants without grouping; Row 3: with nc grouping
+    let row2: Vec<(&str, QuantConfig)> = vec![
+        ("Ex=0", mk(0, 3, Grouping::None, 1)),
+        ("Ex=1", mk(1, 3, Grouping::None, 1)),
+        ("Ex=2", mk(2, 3, Grouping::None, 1)),
+    ];
+    let row3: Vec<(&str, QuantConfig)> = vec![
+        ("Ex=0+nc", mk(0, 3, Grouping::Both, 1)),
+        ("Ex=1+nc", mk(1, 3, Grouping::Both, 1)),
+        ("Ex=2+nc", mk(2, 3, Grouping::Both, 1)),
+    ];
+
+    for (row_name, cfgs) in [("row 1 (grouping)", row1), ("row 2 (E_x, no grouping)", row2),
+                             ("row 3 (E_x + nc grouping)", row3)] {
+        out.push_str(&format!("-- {row_name} --\n"));
+        out.push_str(&format!("{:<14}", "config"));
+        for name in &meta.probe_names {
+            out.push_str(&format!(" {:>10}", name.split('.').next_back().unwrap_or(name)));
+        }
+        out.push('\n');
+        for kind in ["W", "E", "A"] {
+            for (cname, cfg) in &cfgs {
+                out.push_str(&format!("{:<14}", format!("{kind} {cname}")));
+                for (li, pname) in meta.probe_names.iter().enumerate() {
+                    let (x, shape): (&[f32], Vec<usize>) = match kind {
+                        "A" => (&outs[li], meta.probe_a_shapes[pname].clone()),
+                        "E" => (&outs[k + li], meta.probe_e_shapes[pname].clone()),
+                        _ => {
+                            let spec = meta.spec(&format!("{pname}.w")).unwrap();
+                            (&outs[2 * k + li], spec.shape.clone())
+                        }
+                    };
+                    let are = qerror::average_relative_error(x, &shape, cfg);
+                    out.push_str(&format!(" {:>10.4}", are));
+                }
+                out.push('\n');
+            }
+        }
+    }
+    out.push_str("(paper shape: nc grouping smallest ARE; larger E_x -> smaller ARE;\n");
+    out.push_str(" joint grouping + exponent best)\n");
+    Ok(out)
+}

@@ -1,0 +1,132 @@
+//! Training metrics: step rows, CSV export, and summaries.
+
+use std::io::Write;
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::util::stats;
+
+#[derive(Clone, Copy, Debug)]
+pub struct StepRow {
+    pub step: u64,
+    pub lr: f32,
+    pub loss: f32,
+    pub acc: f32,
+    pub step_ms: f64,
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct EvalRow {
+    pub step: u64,
+    pub loss: f32,
+    pub acc: f32,
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct MetricsLog {
+    pub steps: Vec<StepRow>,
+    pub evals: Vec<EvalRow>,
+}
+
+impl MetricsLog {
+    pub fn record_step(&mut self, row: StepRow) {
+        self.steps.push(row);
+    }
+
+    pub fn record_eval(&mut self, row: EvalRow) {
+        self.evals.push(row);
+    }
+
+    /// Mean training loss over the last `n` steps (robust "final loss").
+    pub fn final_loss(&self, n: usize) -> f64 {
+        let tail: Vec<f64> = self
+            .steps
+            .iter()
+            .rev()
+            .take(n)
+            .map(|r| r.loss as f64)
+            .collect();
+        stats::mean(&tail)
+    }
+
+    pub fn final_eval_acc(&self) -> Option<f32> {
+        self.evals.last().map(|e| e.acc)
+    }
+
+    pub fn best_eval_acc(&self) -> Option<f32> {
+        self.evals.iter().map(|e| e.acc).fold(None, |m, a| {
+            Some(m.map_or(a, |m: f32| m.max(a)))
+        })
+    }
+
+    pub fn mean_step_ms(&self) -> f64 {
+        stats::mean(&self.steps.iter().map(|r| r.step_ms).collect::<Vec<_>>())
+    }
+
+    pub fn diverged(&self) -> bool {
+        self.steps
+            .last()
+            .map(|r| !r.loss.is_finite())
+            .unwrap_or(false)
+    }
+
+    /// Write the loss curve as CSV (step,lr,loss,acc,step_ms).
+    pub fn write_csv(&self, path: impl AsRef<Path>) -> Result<()> {
+        if let Some(parent) = path.as_ref().parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let mut f = std::fs::File::create(&path)?;
+        writeln!(f, "step,lr,loss,acc,step_ms")?;
+        for r in &self.steps {
+            writeln!(f, "{},{},{},{},{:.3}", r.step, r.lr, r.loss, r.acc, r.step_ms)?;
+        }
+        writeln!(f)?;
+        writeln!(f, "eval_step,eval_loss,eval_acc")?;
+        for e in &self.evals {
+            writeln!(f, "{},{},{}", e.step, e.loss, e.acc)?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn log3() -> MetricsLog {
+        let mut m = MetricsLog::default();
+        for (i, l) in [2.3f32, 1.1, 0.5].iter().enumerate() {
+            m.record_step(StepRow { step: i as u64, lr: 0.1, loss: *l, acc: 0.5, step_ms: 10.0 });
+        }
+        m.record_eval(EvalRow { step: 2, loss: 0.6, acc: 0.8 });
+        m
+    }
+
+    #[test]
+    fn summaries() {
+        let m = log3();
+        assert!((m.final_loss(2) - 0.8).abs() < 1e-6);
+        assert_eq!(m.final_eval_acc(), Some(0.8));
+        assert_eq!(m.best_eval_acc(), Some(0.8));
+        assert!(!m.diverged());
+    }
+
+    #[test]
+    fn divergence_detection() {
+        let mut m = log3();
+        m.record_step(StepRow { step: 3, lr: 0.1, loss: f32::NAN, acc: 0.0, step_ms: 1.0 });
+        assert!(m.diverged());
+    }
+
+    #[test]
+    fn csv_roundtrip() {
+        let m = log3();
+        let path = std::env::temp_dir().join("mls_metrics_test").join("run.csv");
+        m.write_csv(&path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.starts_with("step,lr,loss,acc,step_ms"));
+        assert!(text.contains("eval_step"));
+        assert_eq!(text.lines().filter(|l| !l.is_empty()).count(), 1 + 3 + 1 + 1);
+    }
+}

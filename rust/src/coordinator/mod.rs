@@ -1,0 +1,14 @@
+//! L3 coordinator: the training-run driver and the experiment harness.
+//!
+//! The paper's contribution is the numeric format (L1/L2), so the
+//! coordinator is a thin-driver-plus-substrates: a config system, the
+//! training loop over the PJRT engine, metrics/checkpointing, and the
+//! registry that maps every paper table/figure to a runnable experiment.
+
+pub mod config;
+pub mod experiments;
+pub mod metrics;
+pub mod trainer;
+
+pub use config::TrainConfig;
+pub use trainer::{train, TrainResult};

@@ -1,0 +1,120 @@
+//! The training loop: dataset -> PJRT train-step artifact -> metrics.
+//!
+//! One `train()` call is one experiment run (one model x one quant config x
+//! one seed); the Table II / Table IV harnesses call it in a grid.
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use super::config::TrainConfig;
+use super::metrics::{EvalRow, MetricsLog, StepRow};
+use crate::data::{streams, SynthCifar};
+use crate::runtime::Engine;
+
+#[derive(Clone, Debug)]
+pub struct TrainResult {
+    pub config: TrainConfig,
+    pub metrics: MetricsLog,
+    pub final_state: Vec<f32>,
+    pub test_acc: f32,
+    pub test_loss: f32,
+    pub diverged: bool,
+}
+
+impl TrainResult {
+    pub fn summary(&self) -> String {
+        format!(
+            "{:<10} {:<24} steps {:<5} final-loss {:<8.4} test-acc {:.3}{}",
+            self.config.model,
+            self.config.cfg_name,
+            self.config.steps,
+            self.metrics.final_loss(20),
+            self.test_acc,
+            if self.diverged { "  [DIVERGED]" } else { "" }
+        )
+    }
+}
+
+/// Evaluate `state` over `n_batches` of a data stream.
+pub fn evaluate(
+    engine: &mut Engine,
+    model: &str,
+    state: &[f32],
+    ds: &SynthCifar,
+    stream: u64,
+    n_batches: u64,
+) -> Result<(f32, f32)> {
+    let batch = engine.manifest.model(model)?.batch;
+    let (mut loss_sum, mut acc_sum) = (0.0f64, 0.0f64);
+    for i in 0..n_batches {
+        let (images, labels) = ds.batch(batch, stream, i);
+        let out = engine.eval_step(model, state, &images, &labels)?;
+        loss_sum += out.loss as f64;
+        acc_sum += out.acc as f64;
+    }
+    Ok(((loss_sum / n_batches as f64) as f32, (acc_sum / n_batches as f64) as f32))
+}
+
+/// Run one full training experiment.
+pub fn train(engine: &mut Engine, config: &TrainConfig) -> Result<TrainResult> {
+    let model = config.model.clone();
+    let meta = engine.manifest.model(&model)?.clone();
+    let ds = SynthCifar::new(config.data.clone());
+    anyhow::ensure!(
+        ds.sample_elems() == meta.img_shape.iter().product::<usize>(),
+        "dataset image shape {:?} != artifact {:?}",
+        (ds.cfg.channels, ds.cfg.height, ds.cfg.width),
+        meta.img_shape
+    );
+
+    let mut state = engine.manifest.load_init(&model)?;
+    let mut metrics = MetricsLog::default();
+
+    for step in 0..config.steps {
+        let (images, labels) = ds.batch(meta.batch, streams::TRAIN, config.seed.wrapping_mul(1_000_003).wrapping_add(step));
+        let lr = config.lr.at(step);
+        let seed = (config.seed as i32).wrapping_mul(7919) ^ step as i32;
+        let t0 = Instant::now();
+        let out = engine.train_step(&model, &config.cfg_name, &mut state, &images, &labels, seed, lr)?;
+        metrics.record_step(StepRow {
+            step,
+            lr,
+            loss: out.loss,
+            acc: out.acc,
+            step_ms: t0.elapsed().as_secs_f64() * 1e3,
+        });
+        if !out.loss.is_finite() {
+            break; // diverged — stop early, record as such (Table IV "Div.")
+        }
+        if config.eval_every > 0 && (step + 1) % config.eval_every == 0 {
+            let (eloss, eacc) =
+                evaluate(engine, &model, &state, &ds, streams::VAL, config.eval_batches)?;
+            metrics.record_eval(EvalRow { step, loss: eloss, acc: eacc });
+        }
+    }
+
+    let diverged = metrics.diverged();
+    let (test_loss, test_acc) = if diverged {
+        (f32::NAN, 0.0)
+    } else {
+        evaluate(engine, &model, &state, &ds, streams::TEST, config.eval_batches)?
+    };
+
+    if let Some(dir) = &config.out_dir {
+        let tag = format!("{}_{}_s{}", model, config.cfg_name, config.seed);
+        metrics.write_csv(std::path::Path::new(dir).join(format!("{tag}.csv")))?;
+        // checkpoint: raw f32 LE state vector
+        let bytes: Vec<u8> = state.iter().flat_map(|v| v.to_le_bytes()).collect();
+        std::fs::write(std::path::Path::new(dir).join(format!("{tag}.state.bin")), bytes)?;
+    }
+
+    Ok(TrainResult {
+        config: config.clone(),
+        metrics,
+        final_state: state,
+        test_acc,
+        test_loss,
+        diverged,
+    })
+}

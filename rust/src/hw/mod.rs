@@ -1,0 +1,18 @@
+//! Hardware energy model (paper Sec. VI-D/E).
+//!
+//! The paper evaluates its MAC unit with RTL + Design Compiler on TSMC
+//! 65 nm at 1 GHz (Table V), then multiplies per-op energies by analytic
+//! op counts (Table I) to obtain whole-network training energy (Table VI,
+//! Fig. 2, Eq. 12). We reproduce exactly that pipeline:
+//!
+//! * [`units`] — per-op energies; the four published Table V measurements
+//!   are calibration constants, and a fitted area/energy scaling law
+//!   extrapolates other bit-widths (for the ablation sweeps),
+//! * [`counter`] — op-amount accounting per layer / per network for both
+//!   full-precision and MLS training (incl. the DQ overhead, BN 9M+10A,
+//!   EW-add rescale — the Table VI rows),
+//! * [`report`] — the Table V / Table VI / Fig. 2 / Eq. 12 generators.
+
+pub mod counter;
+pub mod report;
+pub mod units;

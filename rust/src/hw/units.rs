@@ -1,0 +1,229 @@
+//! Per-operation energy model, calibrated to the paper's Table V
+//! (Design Compiler, TSMC 65 nm, 1 GHz — mW at 1 GHz == pJ per op).
+//!
+//! Calibration points (paper Table V):
+//!
+//! | arithmetic            | MUL (pJ) | LocalACC (pJ) |
+//! |-----------------------|----------|---------------|
+//! | full precision (f32)  | 2.311    | 0.512         |
+//! | 8-bit FP  (HFP8 <5,2>)| 0.105    | 0.512 (f32)   |
+//! | 8-bit INT (FullINT)   | 0.155    | 0.065 (i32)   |
+//! | ours (<2,4> + sign)   | 0.124    | 0.065 (i32)   |
+//!
+//! For formats outside the table a standard scaling law extrapolates:
+//! multiplier energy grows ~quadratically with the fraction width (array
+//! multiplier area) plus a linear exponent-adder term; integer adder energy
+//! grows linearly in width. The law is least-squares fitted to the four
+//! published MUL points at model construction (deterministic), so the
+//! calibrated formats reproduce Table V within the fit residual and the
+//! ablation sweeps interpolate sensibly.
+
+use crate::mls::format::EmFormat;
+
+/// Energy per operation in picojoules.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct OpEnergy {
+    pub pj: f64,
+}
+
+/// The arithmetic style of a MAC datapath (drives Table V / VI rows).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Arithmetic {
+    /// f32 multiply + f32 accumulate (the GPU baseline)
+    FullPrecision,
+    /// 8-bit floating point (HFP8 [14]): fp8 multiply, f32 accumulate
+    Fp8,
+    /// 8-bit integer (FullINT [12]): int8 multiply, i32 accumulate
+    Int8,
+    /// the MLS unit: low-bit multiply, i16/i32 accumulate, shift-add scale
+    Mls(EmFormat),
+}
+
+/// Calibrated + modeled per-op energy table.
+#[derive(Clone, Debug)]
+pub struct EnergyModel {
+    /// multiplier law coefficients: pj = a*f^2 + b*e + c (f = fraction bits
+    /// incl. implicit bit, e = exponent bits)
+    mul_a: f64,
+    mul_b: f64,
+    mul_c: f64,
+}
+
+/// Published Table V constants (pJ).
+pub mod table_v {
+    pub const FP32_MUL: f64 = 2.311;
+    pub const FP32_ACC: f64 = 0.512;
+    pub const FP8_MUL: f64 = 0.105;
+    pub const INT8_MUL: f64 = 0.155;
+    pub const INT_ACC: f64 = 0.065;
+    pub const MLS_MUL: f64 = 0.124;
+}
+
+impl Default for EnergyModel {
+    fn default() -> Self {
+        Self::fitted()
+    }
+}
+
+impl EnergyModel {
+    /// Fit the multiplier law to the four published points:
+    /// (f=24, e=8) -> 2.311; (f=3, e=5) -> 0.105; (f=8, e=0) -> 0.155;
+    /// (f=5, e=2) -> 0.124.
+    pub fn fitted() -> Self {
+        let pts: [(f64, f64, f64); 4] = [
+            (24.0, 8.0, table_v::FP32_MUL),
+            (3.0, 5.0, table_v::FP8_MUL),
+            (8.0, 0.0, table_v::INT8_MUL),
+            (5.0, 2.0, table_v::MLS_MUL),
+        ];
+        // RELATIVE least squares for y = a*f^2 + b*e + c: minimize
+        // sum((pred - y)/y)^2, i.e. rows scaled by 1/y, so the small
+        // low-bit points are fitted as tightly as the big f32 one.
+        let mut ata = [[0.0f64; 3]; 3];
+        let mut aty = [0.0f64; 3];
+        for &(f, e, y) in &pts {
+            let row = [f * f / y, e / y, 1.0 / y];
+            for i in 0..3 {
+                for j in 0..3 {
+                    ata[i][j] += row[i] * row[j];
+                }
+                aty[i] += row[i]; // target is 1 after scaling by 1/y
+            }
+        }
+        let sol = solve3(ata, aty);
+        EnergyModel { mul_a: sol[0], mul_b: sol[1], mul_c: sol[2].max(0.0) }
+    }
+
+    /// Multiplier energy for the exact calibrated arithmetics (published
+    /// values, not the fit) and the law for everything else.
+    pub fn mul(&self, arith: Arithmetic) -> OpEnergy {
+        let pj = match arith {
+            Arithmetic::FullPrecision => table_v::FP32_MUL,
+            Arithmetic::Fp8 => table_v::FP8_MUL,
+            Arithmetic::Int8 => table_v::INT8_MUL,
+            Arithmetic::Mls(fmt) if fmt == EmFormat::new(2, 4) => table_v::MLS_MUL,
+            Arithmetic::Mls(fmt) => self.mul_law(fmt.m + 1, fmt.e),
+        };
+        OpEnergy { pj }
+    }
+
+    fn mul_law(&self, frac_bits: u32, exp_bits: u32) -> f64 {
+        (self.mul_a * (frac_bits as f64).powi(2) + self.mul_b * exp_bits as f64 + self.mul_c)
+            .max(0.01)
+    }
+
+    /// Local accumulation energy: float accumulators cost the published
+    /// f32 ACC; integer accumulators cost the published i32 ACC scaled
+    /// linearly with register width (32-bit == the published point).
+    pub fn local_acc(&self, arith: Arithmetic, register_bits: u32) -> OpEnergy {
+        let pj = match arith {
+            Arithmetic::FullPrecision | Arithmetic::Fp8 => table_v::FP32_ACC,
+            Arithmetic::Int8 | Arithmetic::Mls(_) => {
+                table_v::INT_ACC * register_bits as f64 / 32.0
+            }
+        };
+        OpEnergy { pj }
+    }
+
+    /// Adder-tree (inter-group) addition: always floating point (Fig. 1).
+    pub fn tree_add(&self) -> OpEnergy {
+        OpEnergy { pj: table_v::FP32_ACC }
+    }
+
+    /// Group-wise scale (Eq. 8 shift-add): the paper prices it as one
+    /// LocalACC-class integer op ("energy consumption is comparable to a
+    /// LocalACC operation", Sec. VI-E).
+    pub fn group_scale(&self) -> OpEnergy {
+        OpEnergy { pj: table_v::INT_ACC }
+    }
+
+    /// Generic f32 ops outside the conv unit (BN, SGD, DQ, EW-add).
+    pub fn float_mul(&self) -> OpEnergy {
+        OpEnergy { pj: table_v::FP32_MUL }
+    }
+
+    pub fn float_add(&self) -> OpEnergy {
+        OpEnergy { pj: table_v::FP32_ACC }
+    }
+}
+
+/// Solve a 3x3 linear system (Gaussian elimination, partial pivoting).
+fn solve3(mut a: [[f64; 3]; 3], mut b: [f64; 3]) -> [f64; 3] {
+    for col in 0..3 {
+        let piv = (col..3)
+            .max_by(|&i, &j| a[i][col].abs().partial_cmp(&a[j][col].abs()).unwrap())
+            .unwrap();
+        a.swap(col, piv);
+        b.swap(col, piv);
+        let d = a[col][col];
+        for row in col + 1..3 {
+            let f = a[row][col] / d;
+            for k in col..3 {
+                a[row][k] -= f * a[col][k];
+            }
+            b[row] -= f * b[col];
+        }
+    }
+    let mut x = [0.0f64; 3];
+    for row in (0..3).rev() {
+        let mut acc = b[row];
+        for k in row + 1..3 {
+            acc -= a[row][k] * x[k];
+        }
+        x[row] = acc / a[row][row];
+    }
+    x
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn calibrated_points_exact() {
+        let m = EnergyModel::fitted();
+        assert_eq!(m.mul(Arithmetic::FullPrecision).pj, table_v::FP32_MUL);
+        assert_eq!(m.mul(Arithmetic::Fp8).pj, table_v::FP8_MUL);
+        assert_eq!(m.mul(Arithmetic::Int8).pj, table_v::INT8_MUL);
+        assert_eq!(m.mul(Arithmetic::Mls(EmFormat::new(2, 4))).pj, table_v::MLS_MUL);
+    }
+
+    #[test]
+    fn law_fits_published_points_closely() {
+        // The 3-parameter law cannot reproduce all four published points
+        // exactly (the fp8 multiplier is unusually cheap relative to its
+        // exponent width); it is only used for NON-calibrated formats, so
+        // a 50% relative residual is acceptable — calibrated formats
+        // always return the published constants (test above).
+        let m = EnergyModel::fitted();
+        for (f, e, y) in [(24u32, 8u32, table_v::FP32_MUL), (3, 5, table_v::FP8_MUL),
+                          (8, 0, table_v::INT8_MUL), (5, 2, table_v::MLS_MUL)] {
+            let got = m.mul_law(f, e);
+            assert!((got - y).abs() / y < 0.5, "({f},{e}): {got} vs {y}");
+        }
+    }
+
+    #[test]
+    fn law_monotone_in_width() {
+        let m = EnergyModel::fitted();
+        assert!(m.mul(Arithmetic::Mls(EmFormat::new(2, 1))).pj
+            < m.mul(Arithmetic::Mls(EmFormat::new(2, 6))).pj);
+    }
+
+    #[test]
+    fn accumulators() {
+        let m = EnergyModel::fitted();
+        assert_eq!(m.local_acc(Arithmetic::FullPrecision, 32).pj, table_v::FP32_ACC);
+        assert_eq!(m.local_acc(Arithmetic::Mls(EmFormat::new(2, 4)), 32).pj, table_v::INT_ACC);
+        // 16-bit accumulator (the <2,1> CIFAR config) is half the energy
+        assert_eq!(m.local_acc(Arithmetic::Mls(EmFormat::new(2, 1)), 16).pj, table_v::INT_ACC / 2.0);
+    }
+
+    #[test]
+    fn solve3_known_system() {
+        let x = solve3([[2.0, 0.0, 0.0], [0.0, 3.0, 0.0], [1.0, 0.0, 1.0]], [4.0, 9.0, 5.0]);
+        assert!((x[0] - 2.0).abs() < 1e-12);
+        assert!((x[1] - 3.0).abs() < 1e-12);
+        assert!((x[2] - 3.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,29 @@
+//! # mls-train — MLS low-bit CNN training framework
+//!
+//! Reproduction of *"Exploring the Potential of Low-bit Training of
+//! Convolutional Neural Networks"* (Zhong et al., 2020) as a three-layer
+//! Rust + JAX + Pallas stack:
+//!
+//! * **L1 (build-time Python)** — the MLS dynamic-quantization Pallas
+//!   kernel (`python/compile/kernels/`), bit-exact against a jnp oracle,
+//! * **L2 (build-time Python)** — JAX CNNs whose convolutions run the
+//!   paper's Alg. 1 quantized forward/backward, AOT-lowered to HLO text,
+//! * **L3 (this crate)** — the runtime: PJRT execution of the artifacts,
+//!   the training coordinator, and every substrate the paper's evaluation
+//!   needs (bit-accurate MLS arithmetic, the hardware energy model, the
+//!   model-shape zoo, the synthetic dataset, the experiment harness).
+//!
+//! Python never runs on the request path: after `make artifacts` the Rust
+//! binary is self-contained.
+//!
+//! See `DESIGN.md` for the architecture and experiment index, and
+//! `EXPERIMENTS.md` for paper-vs-measured results.
+
+pub mod arith;
+pub mod coordinator;
+pub mod data;
+pub mod hw;
+pub mod mls;
+pub mod nn;
+pub mod runtime;
+pub mod util;

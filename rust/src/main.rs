@@ -1,0 +1,206 @@
+//! mls-train — CLI for the MLS low-bit training framework.
+//!
+//! ```text
+//! mls-train train   [--artifacts DIR] [--set key=value ...]
+//! mls-train eval    [--artifacts DIR] --model M --state FILE
+//! mls-train repro   --exp <table1|table2|...|fig7|eq12|ratios> [--set ...]
+//! mls-train energy  [--model resnet34] [--batch 64]
+//! mls-train info    [--artifacts DIR]
+//! mls-train quantize --e E --m M < in.f32 > report   (file-level codec demo)
+//! ```
+
+use anyhow::{anyhow, Result};
+
+use mls_train::coordinator::{experiments, trainer, TrainConfig};
+use mls_train::hw::report;
+use mls_train::hw::units::EnergyModel;
+use mls_train::mls::format::EmFormat;
+use mls_train::runtime::Engine;
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+struct Args {
+    cmd: String,
+    artifacts: String,
+    sets: Vec<String>,
+    flags: std::collections::BTreeMap<String, String>,
+}
+
+fn parse_args() -> Result<Args> {
+    let mut it = std::env::args().skip(1);
+    let cmd = it.next().unwrap_or_else(|| "help".to_string());
+    let mut artifacts = "artifacts".to_string();
+    let mut sets = Vec::new();
+    let mut flags = std::collections::BTreeMap::new();
+    while let Some(a) = it.next() {
+        match a.as_str() {
+            "--artifacts" => artifacts = it.next().ok_or_else(|| anyhow!("--artifacts needs a value"))?,
+            "--set" => sets.push(it.next().ok_or_else(|| anyhow!("--set needs key=value"))?),
+            f if f.starts_with("--") => {
+                let key = f.trim_start_matches("--").to_string();
+                let val = it.next().ok_or_else(|| anyhow!("{f} needs a value"))?;
+                flags.insert(key, val);
+            }
+            other => return Err(anyhow!("unexpected argument {other:?}")),
+        }
+    }
+    Ok(Args { cmd, artifacts, sets, flags })
+}
+
+fn run() -> Result<()> {
+    let args = parse_args()?;
+    match args.cmd.as_str() {
+        "train" => cmd_train(&args),
+        "eval" => cmd_eval(&args),
+        "repro" => cmd_repro(&args),
+        "energy" => cmd_energy(&args),
+        "info" => cmd_info(&args),
+        "quantize" => cmd_quantize(&args),
+        "help" | "--help" | "-h" => {
+            println!("{}", HELP);
+            Ok(())
+        }
+        other => Err(anyhow!("unknown command {other:?}\n{HELP}")),
+    }
+}
+
+const HELP: &str = "\
+mls-train — MLS low-bit CNN training framework (paper reproduction)
+
+commands:
+  train     run one training experiment (--set model=resnet_t --set cfg=e2m4_gnc_eg8mg1_sr --set steps=300)
+  eval      evaluate a saved state (--model resnet_t --state runs/...state.bin)
+  repro     regenerate a paper table/figure (--exp table1..table6, fig2, fig6, fig7, eq12, ratios)
+  energy    Table VI energy breakdown (--model resnet34 --batch 64)
+  info      list artifacts and models
+  quantize  quantize a raw f32 file to MLS and report stats (--input F --e 2 --m 4)
+
+common flags: --artifacts DIR (default: artifacts), --set key=value (repeatable)";
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let mut config = TrainConfig::default();
+    config.out_dir = Some("runs".to_string());
+    for kv in &args.sets {
+        config.set(kv)?;
+    }
+    let mut engine = Engine::from_dir(&args.artifacts)?;
+    let result = trainer::train(&mut engine, &config)?;
+    println!("{}", result.summary());
+    println!(
+        "mean step {:.1} ms (device {:.1} ms); metrics in {}/",
+        result.metrics.mean_step_ms(),
+        engine.mean_exec_time().as_secs_f64() * 1e3,
+        config.out_dir.as_deref().unwrap_or("-")
+    );
+    Ok(())
+}
+
+fn cmd_eval(args: &Args) -> Result<()> {
+    let model = args.flags.get("model").cloned().unwrap_or_else(|| "resnet_t".into());
+    let state_path = args
+        .flags
+        .get("state")
+        .ok_or_else(|| anyhow!("eval needs --state FILE (a .state.bin checkpoint)"))?;
+    let bytes = std::fs::read(state_path)?;
+    let state: Vec<f32> = bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect();
+    let mut engine = Engine::from_dir(&args.artifacts)?;
+    let mut config = TrainConfig::default();
+    for kv in &args.sets {
+        config.set(kv)?;
+    }
+    let ds = mls_train::data::SynthCifar::new(config.data.clone());
+    let (loss, acc) = trainer::evaluate(
+        &mut engine,
+        &model,
+        &state,
+        &ds,
+        mls_train::data::streams::TEST,
+        config.eval_batches,
+    )?;
+    println!("{model}: test loss {loss:.4} acc {acc:.3}");
+    Ok(())
+}
+
+fn cmd_repro(args: &Args) -> Result<()> {
+    let exp = args
+        .flags
+        .get("exp")
+        .ok_or_else(|| anyhow!("repro needs --exp <name>; have {:?}", experiments::EXPERIMENTS))?;
+    let report = experiments::run(exp, &args.artifacts, &args.sets)?;
+    println!("{report}");
+    Ok(())
+}
+
+fn cmd_energy(args: &Args) -> Result<()> {
+    let model = args.flags.get("model").cloned().unwrap_or_else(|| "resnet34".into());
+    let batch: usize = args.flags.get("batch").map(|s| s.parse()).transpose()?.unwrap_or(64);
+    let em = EnergyModel::fitted();
+    println!("{}", report::table6(&model, batch, EmFormat::new(2, 4), &em)?);
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let engine = Engine::from_dir(&args.artifacts);
+    match engine {
+        Ok(e) => {
+            println!("artifacts dir: {}", args.artifacts);
+            for (name, meta) in &e.manifest.models {
+                println!(
+                    "model {name}: state_dim {} batch {} img {:?} ({} vars, {} probe layers)",
+                    meta.state_dim,
+                    meta.batch,
+                    meta.img_shape,
+                    meta.specs.len(),
+                    meta.probe_names.len()
+                );
+            }
+            for a in &e.manifest.artifacts {
+                println!("  {} ({} / {})", a.name, a.fn_kind, a.cfg_name);
+            }
+        }
+        Err(e) => println!("no artifacts loaded: {e:#}"),
+    }
+    println!("\nanalytic networks: {:?}", mls_train::nn::zoo::NETWORKS);
+    Ok(())
+}
+
+fn cmd_quantize(args: &Args) -> Result<()> {
+    use mls_train::mls::{quantizer, QuantConfig};
+    let input = args
+        .flags
+        .get("input")
+        .ok_or_else(|| anyhow!("quantize needs --input FILE (raw little-endian f32)"))?;
+    let e: u32 = args.flags.get("e").map(|s| s.parse()).transpose()?.unwrap_or(2);
+    let m: u32 = args.flags.get("m").map(|s| s.parse()).transpose()?.unwrap_or(4);
+    let bytes = std::fs::read(input)?;
+    let x: Vec<f32> = bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect();
+    let shape = [x.len(), 1, 1, 1];
+    let mut cfg = QuantConfig::new(e, m);
+    cfg.grouping = mls_train::mls::Grouping::None;
+    cfg.rounding = mls_train::mls::Rounding::Nearest;
+    let t = quantizer::quantize(&x, &shape, &cfg, &[]);
+    let q = t.dequantize();
+    let are = mls_train::util::stats::average_relative_error(&x, &q);
+    println!(
+        "{} values, <{},{}>: storage {:.2} KiB (f32 {:.2} KiB, {:.2}x), ARE {:.5}",
+        x.len(),
+        e,
+        m,
+        t.storage_bits() as f64 / 8192.0,
+        x.len() as f64 * 4.0 / 1024.0,
+        t.compression_ratio(),
+        are
+    );
+    Ok(())
+}

@@ -1,0 +1,91 @@
+//! Quantization-error statistics (paper Fig. 6 / Fig. 7).
+
+use super::quantizer::{fake_quant, QuantConfig, Rounding};
+use crate::util::stats;
+
+/// ARE of quantizing `x` under `cfg` with nearest rounding (the Fig. 7
+/// metric): mean|q - x| / mean|x|.
+pub fn average_relative_error(x: &[f32], shape: &[usize], cfg: &QuantConfig) -> f64 {
+    let mut c = *cfg;
+    c.rounding = Rounding::Nearest;
+    let q = fake_quant(x, shape, &c, &[]);
+    stats::average_relative_error(x, &q)
+}
+
+/// Per-group maxima of |x| (the Fig. 6 curves), sorted descending.
+pub fn group_maxima(x: &[f32], shape: &[usize], grouping: super::Grouping) -> Vec<f32> {
+    let n_groups = grouping.group_count(shape);
+    let mut maxima = vec![0.0f32; n_groups];
+    for (idx, &v) in x.iter().enumerate() {
+        let g = grouping.group_of(shape, idx);
+        maxima[g] = maxima[g].max(v.abs());
+    }
+    maxima.sort_by(|a, b| b.partial_cmp(a).unwrap());
+    maxima
+}
+
+/// Fraction of groups whose maximum is below half the overall maximum —
+/// the paper's "over half of the groups" observation motivating group-wise
+/// scaling (Fig. 6 red line).
+pub fn fraction_below_half_max(maxima: &[f32]) -> f64 {
+    let overall = maxima.iter().cloned().fold(0.0f32, f32::max);
+    if overall == 0.0 {
+        return 0.0;
+    }
+    maxima.iter().filter(|&&m| m < overall / 2.0).count() as f64 / maxima.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mls::{Grouping, QuantConfig};
+    use crate::util::prop::grouped_tensor;
+    use crate::util::rng::Pcg32;
+
+    #[test]
+    fn are_decreases_with_mantissa() {
+        let mut rng = Pcg32::seeded(31);
+        let shape = [8usize, 8, 4, 4];
+        let x = grouped_tensor(&mut rng, shape);
+        let mut last = f64::INFINITY;
+        for m in [1u32, 2, 3, 4, 6] {
+            let are = average_relative_error(&x, &shape, &QuantConfig::new(2, m));
+            assert!(are <= last + 1e-9, "m={m}: {are} > {last}");
+            last = are;
+        }
+    }
+
+    #[test]
+    fn grouping_helps_on_group_scaled_data() {
+        let mut rng = Pcg32::seeded(32);
+        let shape = [8usize, 8, 4, 4];
+        let x = grouped_tensor(&mut rng, shape);
+        let mut c_none = QuantConfig::new(0, 3);
+        c_none.grouping = Grouping::None;
+        let c_both = QuantConfig { grouping: Grouping::Both, ..QuantConfig::new(0, 3) };
+        let are_none = average_relative_error(&x, &shape, &c_none);
+        let are_both = average_relative_error(&x, &shape, &c_both);
+        assert!(are_both < are_none, "{are_both} !< {are_none}");
+    }
+
+    #[test]
+    fn group_maxima_sorted_and_sized() {
+        let mut rng = Pcg32::seeded(33);
+        let shape = [4usize, 6, 3, 3];
+        let x = grouped_tensor(&mut rng, shape);
+        let m = group_maxima(&x, &shape, Grouping::Both);
+        assert_eq!(m.len(), 24);
+        assert!(m.windows(2).all(|w| w[0] >= w[1]));
+    }
+
+    #[test]
+    fn below_half_max_on_spread_data() {
+        let mut rng = Pcg32::seeded(34);
+        let shape = [16usize, 16, 3, 3];
+        let x = grouped_tensor(&mut rng, shape);
+        let m = group_maxima(&x, &shape, Grouping::Both);
+        let frac = fraction_below_half_max(&m);
+        // exp(2*normal) magnitudes: most groups sit far below the peak
+        assert!(frac > 0.5, "frac {frac}");
+    }
+}

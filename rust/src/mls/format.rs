@@ -1,0 +1,271 @@
+//! The `<E, M>` customized floating-point format (paper Eq. 3 + Sec. V-C).
+//!
+//! Storage convention (identical to ref.py — see its module docstring):
+//!
+//! * exponent **code** `c in [0, 2^E - 1]`
+//!   * `c >= 1` (normal):     `value = (1 + man/2^M) * 2^(-c)`
+//!   * `c == 0` (subnormal):  `value = (man/2^M) * 2^(emin)`,
+//!     `emin = 1 - 2^E` (gradual underflow at the minimum normal level)
+//! * mantissa `man in [0, 2^M - 1]`; rounding saturates within the level
+//!   (Alg. 2 line 13) — no carry, mirroring the hardware clip datapath.
+//! * `NearestRound(x) = floor(x + 0.5)`; stochastic rounding adds
+//!   `r ~ U[-1/2, 1/2)` before the same floor.
+//!
+//! All arithmetic is plain IEEE f32, with every multiplication by a power
+//! of two exact, so the sequence of operations reproduces the XLA/jnp
+//! lowering bit-for-bit.
+
+/// An `<E, M>` element or group-scale format descriptor.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct EmFormat {
+    /// exponent bits (0..=8)
+    pub e: u32,
+    /// mantissa bits (0..=23)
+    pub m: u32,
+}
+
+impl EmFormat {
+    pub const fn new(e: u32, m: u32) -> Self {
+        EmFormat { e, m }
+    }
+
+    /// Minimum normal exponent: `1 - 2^E`.
+    pub fn emin(&self) -> i32 {
+        1 - (1i64 << self.e) as i32
+    }
+
+    /// Number of stored bits per value (excluding the separate sign plane).
+    pub fn bits(&self) -> u32 {
+        self.e + self.m
+    }
+
+    /// Largest representable value: `(2 - 2^-M) * 2^-1`.
+    pub fn max_value(&self) -> f32 {
+        (2.0 - 0.5f32.powi(self.m as i32)) * 0.5
+    }
+
+    /// Bit-width of an element x element product (Sec. V-C):
+    /// `2M + 2^{E+1} - 2`.
+    pub fn product_bits(&self) -> u32 {
+        2 * self.m + (1u32 << (self.e + 1)) - 2
+    }
+
+    /// Decode stored fields to the represented value.
+    pub fn decode(&self, exp_code: u8, man: u32) -> f32 {
+        let two_m = (1u32 << self.m) as f32;
+        if exp_code >= 1 {
+            (1.0 + man as f32 / two_m) * exp2i(-(exp_code as i32))
+        } else {
+            man as f32 / two_m * exp2i(self.emin())
+        }
+    }
+}
+
+/// Exact `2^k` for the exponent ranges we use. f32 underflows below -149;
+/// the MLS pipeline clamps pins at -126 (see `quantize_group_scale`), so
+/// the remaining uses stay in range.
+#[inline]
+pub fn exp2i(k: i32) -> f32 {
+    if k > 127 {
+        f32::INFINITY // matches np.float32(2.0**k) overflow behaviour
+    } else if k >= -126 {
+        f32::from_bits(((k + 127) as u32) << 23)
+    } else if k >= -149 {
+        // subnormal f32 powers of two
+        f32::from_bits(1u32 << (k + 149))
+    } else {
+        0.0
+    }
+}
+
+/// Unbiased exponent of |x| = f * 2^e, f in [1, 2) — straight from the
+/// IEEE-754 bit pattern (zero/denormals map to -127, below any MLS emin).
+#[inline]
+pub fn f32_exponent(x: f32) -> i32 {
+    ((x.to_bits() >> 23) & 0xFF) as i32 - 127
+}
+
+/// Fraction in [1, 2) of |x| (meaningless for zero/denormal inputs).
+#[inline]
+pub fn f32_fraction(x: f32) -> f32 {
+    f32::from_bits((x.to_bits() & 0x007F_FFFF) | 0x3F80_0000)
+}
+
+/// Quantize one non-negative, group-normalized value `xf <= 1` to `<E, M>`;
+/// returns the stored fields. `r` is the rounding offset (0 for nearest).
+/// Mirrors ref.element_codes exactly.
+#[inline]
+pub fn quantize_element(xf: f32, fmt: EmFormat, r: f32) -> (u8, u32) {
+    let emin = fmt.emin();
+    let two_m = (1u64 << fmt.m) as f32;
+
+    // E == 0 has no normal levels: pure fixed point (paper's "single
+    // number" rows). Otherwise IEEE-style gradual underflow below 2^emin.
+    if fmt.e == 0 || xf < exp2i(emin) {
+        // gradual underflow: integer mantissa at level emin, implicit 0
+        let man_s = (xf * exp2f_pow(fmt.m as i32 - emin) + r + 0.5).floor();
+        let man = man_s.clamp(0.0, two_m - 1.0) as u32;
+        (0, man)
+    } else {
+        let exp = f32_exponent(xf);
+        let exp_cl = exp.clamp(emin, -1);
+        let y = xf * exp2i(-exp_cl); // exact
+        let man_n = ((y - 1.0) * two_m + r + 0.5).floor();
+        let man = man_n.clamp(0.0, two_m - 1.0) as u32;
+        ((-exp_cl) as u8, man)
+    }
+}
+
+/// `2^k` for the subnormal rescale factor `2^(M - emin)`. For E >= 6 this
+/// exceeds the f32 range and becomes +inf, which is exactly what
+/// `np.float32(2.0 ** k)` yields on the Python side, so the (already
+/// saturating) downstream clamp behaves identically.
+#[inline]
+fn exp2f_pow(k: i32) -> f32 {
+    exp2i(k)
+}
+
+/// Dequantized value of quantize_element (ref.quantize_element).
+#[inline]
+pub fn quantize_element_value(xf: f32, fmt: EmFormat, r: f32) -> f32 {
+    let (code, man) = quantize_element(xf, fmt, r);
+    fmt.decode(code, man)
+}
+
+/// Quantize a group scale `sgf = S_r / S_t in [0, 1]` to `<E_g, M_g>` with
+/// ceil rounding + carry (Alg. 2 lines 4-8). Returns (exp_code, man) where
+/// the value is `(1 + man/2^Mg) * 2^(-exp_code)`; all-zero groups pin to
+/// the clamped minimum (DESIGN.md: max(emin, -126) so f32 never flushes).
+#[inline]
+pub fn quantize_group_scale(sgf: f32, fmt: EmFormat) -> (u8, u32) {
+    let egmin = fmt.emin();
+    let egpin = egmin.max(-126);
+    let two_mg = (1u32 << fmt.m) as f32;
+
+    if sgf <= exp2i(egpin) {
+        return ((-egpin) as u8, 0);
+    }
+    let exp = f32_exponent(sgf);
+    let mut exp_cl = exp.clamp(egmin, 0);
+    let y = sgf * exp2i(-exp_cl); // exact
+    let mut man = ((y - 1.0) * two_mg).ceil();
+    if man >= two_mg {
+        man = 0.0;
+        exp_cl = (exp_cl + 1).clamp(egmin, 0);
+    }
+    let man = man.clamp(0.0, two_mg - 1.0) as u32;
+    ((-exp_cl) as u8, man)
+}
+
+/// Group-scale value from its stored fields.
+#[inline]
+pub fn group_scale_value(exp_code: u8, man: u32, fmt: EmFormat) -> f32 {
+    let two_mg = (1u32 << fmt.m) as f32;
+    (1.0 + man as f32 / two_mg) * exp2i(-(exp_code as i32))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const E2M4: EmFormat = EmFormat::new(2, 4);
+    const E2M1: EmFormat = EmFormat::new(2, 1);
+
+    #[test]
+    fn exp2i_matches_powi() {
+        for k in -126..=127 {
+            assert_eq!(exp2i(k), 2.0f32.powi(k), "k={k}");
+        }
+        assert_eq!(exp2i(-149), f32::from_bits(1));
+        assert_eq!(exp2i(-200), 0.0);
+    }
+
+    #[test]
+    fn f32_fields() {
+        assert_eq!(f32_exponent(1.0), 0);
+        assert_eq!(f32_exponent(0.5), -1);
+        assert_eq!(f32_exponent(3.0), 1);
+        assert_eq!(f32_exponent(0.0), -127);
+        assert_eq!(f32_fraction(3.0), 1.5);
+        assert_eq!(f32_fraction(0.75), 1.5);
+    }
+
+    #[test]
+    fn formats() {
+        assert_eq!(E2M4.emin(), -3);
+        assert_eq!(E2M4.product_bits(), 14); // the paper's "14" for <2,4>
+        assert_eq!(E2M1.product_bits(), 8);
+        assert_eq!(EmFormat::new(5, 2).product_bits(), 2 * 2 + 64 - 2);
+        assert_eq!(E2M4.max_value(), (2.0 - 1.0 / 16.0) / 2.0);
+    }
+
+    #[test]
+    fn exact_values_roundtrip() {
+        for code in 1..=3u8 {
+            for man in 0..16u32 {
+                let v = E2M4.decode(code, man);
+                let (c2, m2) = quantize_element(v, E2M4, 0.0);
+                assert_eq!((c2, m2), (code, man), "v={v}");
+            }
+        }
+    }
+
+    #[test]
+    fn subnormals_roundtrip() {
+        for man in 0..16u32 {
+            let v = E2M4.decode(0, man);
+            let (c2, m2) = quantize_element(v, E2M4, 0.0);
+            assert_eq!((c2, m2), (0, man), "v={v}");
+        }
+    }
+
+    #[test]
+    fn saturates_at_one() {
+        let (code, man) = quantize_element(1.0, E2M4, 0.0);
+        assert_eq!((code, man), (1, 15));
+        assert_eq!(E2M4.decode(code, man), E2M4.max_value());
+    }
+
+    #[test]
+    fn zero_is_zero() {
+        let (code, man) = quantize_element(0.0, E2M4, 0.0);
+        assert_eq!(E2M4.decode(code, man), 0.0);
+    }
+
+    #[test]
+    fn group_scale_dominates() {
+        let fmt = EmFormat::new(8, 1);
+        for i in 0..1000 {
+            let s = i as f32 / 1000.0;
+            let (c, m) = quantize_group_scale(s, fmt);
+            let v = group_scale_value(c, m, fmt);
+            assert!(v >= s - 1e-7, "s={s} v={v}");
+        }
+    }
+
+    #[test]
+    fn group_scale_carry() {
+        // 0.76 -> frac 1.52 @ exp -1 -> ceil(0.52*2)=2 -> carry -> 1.0 @ exp 0
+        let (c, m) = quantize_group_scale(0.76, EmFormat::new(8, 1));
+        assert_eq!((c, m), (0, 0));
+    }
+
+    #[test]
+    fn group_scale_zero_pins() {
+        let (c, m) = quantize_group_scale(0.0, EmFormat::new(8, 1));
+        assert_eq!(c, 126);
+        assert_eq!(m, 0);
+        assert_eq!(group_scale_value(c, m, EmFormat::new(8, 1)), exp2i(-126));
+    }
+
+    #[test]
+    fn group_scale_m0_power_of_two() {
+        let fmt = EmFormat::new(8, 0);
+        for s in [0.3f32, 0.5, 0.6, 0.9] {
+            let (c, m) = quantize_group_scale(s, fmt);
+            assert_eq!(m, 0);
+            let v = group_scale_value(c, m, fmt);
+            assert!(v >= s && v / 2.0 < s, "s={s} v={v}");
+        }
+    }
+}

@@ -1,0 +1,128 @@
+//! Grouping dimensions for the group-wise scale (paper Sec. IV-B).
+//!
+//! A 4-D tensor `[d0, d1, d2, d3]` can be grouped by its first dimension
+//! ("n" for activations/errors, "co" for weights), its second ("c"/"ci"),
+//! both (the paper's best-performing `n x c`), or not at all. 2-D tensors
+//! are treated as `[d0, d1, 1, 1]`.
+
+/// Which leading dims form a group (mirrors qconfig.GROUPINGS).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Grouping {
+    /// one group for the whole tensor (#group = 1)
+    None,
+    /// grouped by dim 0 (paper: "n" rows of Table IV)
+    First,
+    /// grouped by dim 1 (paper: "c")
+    Second,
+    /// grouped by dim 0 x dim 1 (paper: "nc")
+    Both,
+}
+
+impl Grouping {
+    pub fn parse(s: &str) -> anyhow::Result<Grouping> {
+        Ok(match s {
+            "none" => Grouping::None,
+            "first" => Grouping::First,
+            "second" => Grouping::Second,
+            "both" => Grouping::Both,
+            _ => anyhow::bail!("unknown grouping {s:?}"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Grouping::None => "none",
+            Grouping::First => "first",
+            Grouping::Second => "second",
+            Grouping::Both => "both",
+        }
+    }
+
+    /// Number of groups for a shape.
+    pub fn group_count(&self, shape: &[usize]) -> usize {
+        let (d0, d1) = dims01(shape);
+        match self {
+            Grouping::None => 1,
+            Grouping::First => d0,
+            Grouping::Second => d1,
+            Grouping::Both => d0 * d1,
+        }
+    }
+
+    /// Group id of the element at flat index `idx` (row-major).
+    #[inline]
+    pub fn group_of(&self, shape: &[usize], idx: usize) -> usize {
+        let (_d0, d1) = dims01(shape);
+        let inner: usize = shape.iter().skip(2).product::<usize>().max(1);
+        match self {
+            Grouping::None => 0,
+            Grouping::First => idx / (d1 * inner),
+            Grouping::Second => (idx / inner) % d1,
+            Grouping::Both => idx / inner,
+        }
+    }
+
+    /// Per-group element count (groups are uniform).
+    pub fn group_len(&self, shape: &[usize]) -> usize {
+        let total: usize = shape.iter().product::<usize>().max(1);
+        total / self.group_count(shape)
+    }
+}
+
+fn dims01(shape: &[usize]) -> (usize, usize) {
+    let d0 = shape.first().copied().unwrap_or(1);
+    let d1 = shape.get(1).copied().unwrap_or(1);
+    (d0, d1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counts() {
+        let s = [4usize, 6, 3, 3];
+        assert_eq!(Grouping::None.group_count(&s), 1);
+        assert_eq!(Grouping::First.group_count(&s), 4);
+        assert_eq!(Grouping::Second.group_count(&s), 6);
+        assert_eq!(Grouping::Both.group_count(&s), 24);
+    }
+
+    #[test]
+    fn group_of_matches_layout() {
+        let s = [2usize, 3, 2, 2];
+        let total: usize = s.iter().product();
+        for idx in 0..total {
+            let i0 = idx / (3 * 4);
+            let i1 = (idx / 4) % 3;
+            assert_eq!(Grouping::First.group_of(&s, idx), i0);
+            assert_eq!(Grouping::Second.group_of(&s, idx), i1);
+            assert_eq!(Grouping::Both.group_of(&s, idx), i0 * 3 + i1);
+            assert_eq!(Grouping::None.group_of(&s, idx), 0);
+        }
+    }
+
+    #[test]
+    fn group_len_times_count_is_total() {
+        for g in [Grouping::None, Grouping::First, Grouping::Second, Grouping::Both] {
+            let s = [4usize, 6, 5, 5];
+            assert_eq!(g.group_len(&s) * g.group_count(&s), 600);
+        }
+    }
+
+    #[test]
+    fn two_d_shapes() {
+        let s = [3usize, 8];
+        assert_eq!(Grouping::Both.group_count(&s), 24);
+        assert_eq!(Grouping::First.group_of(&s, 9), 1);
+        assert_eq!(Grouping::Second.group_of(&s, 9), 1);
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        for name in ["none", "first", "second", "both"] {
+            assert_eq!(Grouping::parse(name).unwrap().name(), name);
+        }
+        assert!(Grouping::parse("bogus").is_err());
+    }
+}

@@ -1,0 +1,25 @@
+//! Bit-accurate MLS (multi-level scaling) tensor format — the Rust mirror
+//! of the canonical numerics in `python/compile/kernels/ref.py`.
+//!
+//! The three scaling levels (paper Sec. IV):
+//!
+//! 1. **tensor-wise** `S_t` — an ordinary f32 (the tensor's max magnitude),
+//! 2. **group-wise** `S_g` — a hardware-friendly `<E_g, M_g<=1>` value
+//!    (power of two, or a two-term shift-add),
+//! 3. **element-wise** `<E_x, M_x>` — sign + exponent code + mantissa with
+//!    IEEE-754-style gradual underflow.
+//!
+//! Every function here is validated bit-exactly against Python golden
+//! vectors (`rust/tests/golden.rs`) and by property tests
+//! (`rust/tests/proptests.rs`).
+
+pub mod error;
+pub mod format;
+pub mod grouping;
+pub mod quantizer;
+pub mod tensor;
+
+pub use format::EmFormat;
+pub use grouping::Grouping;
+pub use quantizer::{QuantConfig, Rounding};
+pub use tensor::MlsTensor;

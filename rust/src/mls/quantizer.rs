@@ -1,0 +1,332 @@
+//! Dynamic quantization to the MLS format (paper Alg. 2) — bit-accurate.
+//!
+//! The pipeline mirrors ref.mls_quantize_fields operation-for-operation so
+//! its output matches the Python/XLA float simulation bit-exactly:
+//!
+//!   S_s = sign(X);  S_r = GroupMax|X|;  S_t = max(S_r)
+//!   S_g = ceil-quantized <E_g, M_g>(S_r / S_t)
+//!   X_f = |X| / (S_g * S_t)          (f32 mul then f32 div, same order)
+//!   Xbar = <E_x, M_x>(X_f) with stochastic rounding + gradual underflow
+
+use super::format::{self, EmFormat};
+use super::grouping::Grouping;
+use super::tensor::MlsTensor;
+use crate::util::json::Json;
+
+/// Rounding mode (Alg. 2 line 13).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Rounding {
+    /// SRound(x, r) = floor(x + r + 1/2), r ~ U[-1/2, 1/2)
+    Stochastic,
+    /// floor(x + 1/2)
+    Nearest,
+}
+
+impl Rounding {
+    pub fn parse(s: &str) -> anyhow::Result<Rounding> {
+        Ok(match s {
+            "stochastic" => Rounding::Stochastic,
+            "nearest" => Rounding::Nearest,
+            _ => anyhow::bail!("unknown rounding {s:?}"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Rounding::Stochastic => "stochastic",
+            Rounding::Nearest => "nearest",
+        }
+    }
+}
+
+/// Full quantizer configuration; field-compatible with the Python
+/// `QuantConfig` (and its JSON form in the artifact manifest).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct QuantConfig {
+    pub element: EmFormat,
+    pub group: EmFormat,
+    pub grouping: Grouping,
+    pub rounding: Rounding,
+    pub enabled: bool,
+}
+
+impl Default for QuantConfig {
+    /// The paper's ImageNet headline config: `<2,4>` elements, `<8,1>`
+    /// group scales, n x c grouping, stochastic rounding.
+    fn default() -> Self {
+        QuantConfig {
+            element: EmFormat::new(2, 4),
+            group: EmFormat::new(8, 1),
+            grouping: Grouping::Both,
+            rounding: Rounding::Stochastic,
+            enabled: true,
+        }
+    }
+}
+
+impl QuantConfig {
+    pub fn new(e_x: u32, m_x: u32) -> Self {
+        QuantConfig { element: EmFormat::new(e_x, m_x), ..Default::default() }
+    }
+
+    pub fn fp32() -> Self {
+        QuantConfig { enabled: false, ..Default::default() }
+    }
+
+    /// Parse the JSON object produced by Python `QuantConfig.to_dict()`.
+    pub fn from_json(v: &Json) -> anyhow::Result<Self> {
+        Ok(QuantConfig {
+            element: EmFormat::new(
+                v.req("e_x")?.as_i64().unwrap_or(2) as u32,
+                v.req("m_x")?.as_i64().unwrap_or(4) as u32,
+            ),
+            group: EmFormat::new(
+                v.req("e_g")?.as_i64().unwrap_or(8) as u32,
+                v.req("m_g")?.as_i64().unwrap_or(1) as u32,
+            ),
+            grouping: Grouping::parse(v.req("grouping")?.as_str().unwrap_or("both"))?,
+            rounding: Rounding::parse(v.req("rounding")?.as_str().unwrap_or("stochastic"))?,
+            enabled: v.req("enabled")?.as_bool().unwrap_or(true),
+        })
+    }
+
+    /// Stable short name matching Python `QuantConfig.name()`.
+    pub fn name(&self) -> String {
+        if !self.enabled {
+            return "fp32".to_string();
+        }
+        let g = match self.grouping {
+            Grouping::None => "g1",
+            Grouping::First => "gf",
+            Grouping::Second => "gs",
+            Grouping::Both => "gnc",
+        };
+        let r = match self.rounding {
+            Rounding::Stochastic => "sr",
+            Rounding::Nearest => "nr",
+        };
+        format!(
+            "e{}m{}_{}_eg{}mg{}_{}",
+            self.element.e, self.element.m, g, self.group.e, self.group.m, r
+        )
+    }
+
+    /// Stored bits per element (sign + exponent code + mantissa).
+    pub fn element_bits(&self) -> u32 {
+        1 + self.element.bits()
+    }
+
+    /// Smallest power-of-two integer accumulator for intra-group sums
+    /// (Sec. V-C: product bits + 4 bits of K*K=9 accumulation headroom;
+    /// matches the paper's Table II column: 8 for <1,1>, 16 for <2,1>,
+    /// 32 for <2,4>).
+    pub fn accumulator_bits(&self) -> u32 {
+        let need = self.element.product_bits() + 4;
+        for w in [8u32, 16, 32, 64] {
+            if need <= w {
+                return w;
+            }
+        }
+        64
+    }
+}
+
+/// Quantize a tensor to the full MLS decomposition.
+///
+/// `rounding_offsets` must have one U[-1/2, 1/2) value per element when the
+/// config says stochastic (pass `&[]` for nearest — it is ignored).
+pub fn quantize(x: &[f32], shape: &[usize], cfg: &QuantConfig, rounding_offsets: &[f32]) -> MlsTensor {
+    let n: usize = shape.iter().product::<usize>().max(1);
+    assert_eq!(x.len(), n, "shape/element mismatch");
+    let stochastic = cfg.rounding == Rounding::Stochastic;
+    if stochastic {
+        assert_eq!(rounding_offsets.len(), n, "need one rounding offset per element");
+    }
+
+    let n_groups = cfg.grouping.group_count(shape);
+
+    // Per-element group ids cost a division each; all groupings except
+    // Second are CONTIGUOUS runs of group_len elements in row-major
+    // order, so the hot loops below walk chunk-wise (perf pass log in
+    // EXPERIMENTS.md section Perf: ~2.3x on the <2,4> nc path).
+    let group_len = cfg.grouping.group_len(shape);
+    let contiguous = !matches!(cfg.grouping, Grouping::Second);
+
+    // group maxima S_r and tensor max S_t (Alg. 2 lines 1-3)
+    let mut s_r = vec![0.0f32; n_groups];
+    if contiguous {
+        for (g, chunk) in x.chunks_exact(group_len).enumerate() {
+            let mut m = 0.0f32;
+            for &v in chunk {
+                m = m.max(v.abs());
+            }
+            s_r[g] = m;
+        }
+    } else {
+        for (idx, &v) in x.iter().enumerate() {
+            let g = cfg.grouping.group_of(shape, idx);
+            let a = v.abs();
+            if a > s_r[g] {
+                s_r[g] = a;
+            }
+        }
+    }
+    let s_t = s_r.iter().cloned().fold(0.0f32, f32::max);
+    let s_t_safe = if s_t > 0.0 { s_t } else { 1.0 };
+
+    // group scales (lines 4-8)
+    let mut sg_exp = vec![0u8; n_groups];
+    let mut sg_man = vec![0u32; n_groups];
+    let mut sg_val = vec![0.0f32; n_groups];
+    for g in 0..n_groups {
+        let sgf = s_r[g] / s_t_safe;
+        let (c, m) = format::quantize_group_scale(sgf, cfg.group);
+        sg_exp[g] = c;
+        sg_man[g] = m;
+        sg_val[g] = format::group_scale_value(c, m, cfg.group);
+    }
+
+    // elements (lines 9-16)
+    let mut sign = vec![0i8; n];
+    let mut exp_code = vec![0u8; n];
+    let mut man = vec![0u32; n];
+    let fmt = cfg.element;
+    let mut quantize_one = |idx: usize, v: f32, sg: f32| {
+        sign[idx] = if v > 0.0 {
+            1
+        } else if v < 0.0 {
+            -1
+        } else {
+            0
+        };
+        // identical op order to ref.py: abs(x) / (s_g * s_t)
+        let xf = v.abs() / (sg * s_t_safe);
+        let r = if stochastic { rounding_offsets[idx] } else { 0.0 };
+        let (c, mm) = format::quantize_element(xf, fmt, r);
+        exp_code[idx] = c;
+        man[idx] = mm;
+    };
+    if contiguous {
+        for (g, chunk) in x.chunks_exact(group_len).enumerate() {
+            let sg = sg_val[g];
+            let base = g * group_len;
+            for (off, &v) in chunk.iter().enumerate() {
+                quantize_one(base + off, v, sg);
+            }
+        }
+    } else {
+        for (idx, &v) in x.iter().enumerate() {
+            let g = cfg.grouping.group_of(shape, idx);
+            quantize_one(idx, v, sg_val[g]);
+        }
+    }
+
+    MlsTensor {
+        shape: shape.to_vec(),
+        cfg: *cfg,
+        s_t: if s_t > 0.0 { s_t } else { 0.0 },
+        sign,
+        exp_code,
+        man,
+        sg_exp,
+        sg_man,
+    }
+}
+
+/// Fake-quantize: quantize + dequantize in one pass (the value the training
+/// simulation sees). Bit-exact vs ref.mls_fake_quant.
+pub fn fake_quant(x: &[f32], shape: &[usize], cfg: &QuantConfig, rounding_offsets: &[f32]) -> Vec<f32> {
+    if !cfg.enabled {
+        return x.to_vec();
+    }
+    let t = quantize(x, shape, cfg, rounding_offsets);
+    t.dequantize()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    fn sample(n: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Pcg32::seeded(seed);
+        rng.normal_vec(n, 1.0)
+    }
+
+    #[test]
+    fn config_names_match_python() {
+        assert_eq!(QuantConfig::default().name(), "e2m4_gnc_eg8mg1_sr");
+        assert_eq!(QuantConfig::fp32().name(), "fp32");
+        let mut c = QuantConfig::new(0, 2);
+        c.grouping = Grouping::First;
+        assert_eq!(c.name(), "e0m2_gf_eg8mg1_sr");
+    }
+
+    #[test]
+    fn from_json_roundtrip() {
+        let j = Json::parse(
+            r#"{"e_x": 2, "m_x": 1, "e_g": 8, "m_g": 0, "grouping": "second",
+                "rounding": "nearest", "enabled": true}"#,
+        )
+        .unwrap();
+        let c = QuantConfig::from_json(&j).unwrap();
+        assert_eq!(c.element, EmFormat::new(2, 1));
+        assert_eq!(c.group, EmFormat::new(8, 0));
+        assert_eq!(c.grouping, Grouping::Second);
+        assert_eq!(c.rounding, Rounding::Nearest);
+    }
+
+    #[test]
+    fn accumulator_widths_match_paper() {
+        let c24 = QuantConfig::new(2, 4);
+        let c21 = QuantConfig::new(2, 1);
+        assert_eq!(c24.accumulator_bits(), 32); // paper Table II: ACCUM 32
+        assert_eq!(c21.accumulator_bits(), 16); // paper Table II: ACCUM 16
+    }
+
+    #[test]
+    fn error_bound_nearest() {
+        let shape = [4usize, 8, 3, 3];
+        let x = sample(shape.iter().product(), 1);
+        let mut cfg = QuantConfig::default();
+        cfg.rounding = Rounding::Nearest;
+        let t = quantize(&x, &shape, &cfg, &[]);
+        let q = t.dequantize();
+        // |q - x| <= S_t * S_g * (half max ulp) per group
+        for (idx, (&xi, &qi)) in x.iter().zip(&q).enumerate() {
+            let g = cfg.grouping.group_of(&shape, idx);
+            let sg = format::group_scale_value(t.sg_exp[g], t.sg_man[g], cfg.group);
+            let bound = t.s_t * sg * 0.5 * 0.5f32.powi(cfg.element.m as i32);
+            assert!((qi - xi).abs() <= bound + 1e-7, "idx {idx}: {xi} -> {qi}");
+        }
+    }
+
+    #[test]
+    fn zero_tensor() {
+        let shape = [2usize, 3, 2, 2];
+        let x = vec![0.0f32; 24];
+        let q = fake_quant(&x, &shape, &QuantConfig::default(), &vec![0.1; 24]);
+        assert!(q.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn disabled_is_identity() {
+        let x = sample(24, 2);
+        let q = fake_quant(&x, &[2, 3, 2, 2], &QuantConfig::fp32(), &[]);
+        assert_eq!(x, q);
+    }
+
+    #[test]
+    fn sign_symmetry() {
+        let shape = [3usize, 4, 2, 2];
+        let x = sample(48, 3);
+        let neg: Vec<f32> = x.iter().map(|v| -v).collect();
+        let mut cfg = QuantConfig::default();
+        cfg.rounding = Rounding::Nearest;
+        let q1 = fake_quant(&x, &shape, &cfg, &[]);
+        let q2 = fake_quant(&neg, &shape, &cfg, &[]);
+        for (a, b) in q1.iter().zip(&q2) {
+            assert_eq!(*a, -*b);
+        }
+    }
+}

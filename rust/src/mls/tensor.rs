@@ -1,0 +1,145 @@
+//! The quantized MLS tensor container: sign plane + element field planes +
+//! group scales + tensor scale, with dequantization and storage accounting.
+
+use super::format;
+use super::quantizer::QuantConfig;
+
+/// A tensor in the MLS format (paper Fig. 5): `X = S_s * S_t * S_g * Xbar`.
+#[derive(Clone, Debug)]
+pub struct MlsTensor {
+    pub shape: Vec<usize>,
+    pub cfg: QuantConfig,
+    /// tensor-wise scale (full-precision f32; 0 for the all-zero tensor)
+    pub s_t: f32,
+    /// per-element sign in {-1, 0, 1}
+    pub sign: Vec<i8>,
+    /// per-element exponent codes (0 = gradual underflow)
+    pub exp_code: Vec<u8>,
+    /// per-element mantissas in [0, 2^M - 1]
+    pub man: Vec<u32>,
+    /// per-group scale exponent codes (value = (1 + man/2^Mg) * 2^-code)
+    pub sg_exp: Vec<u8>,
+    /// per-group scale mantissas
+    pub sg_man: Vec<u32>,
+}
+
+impl MlsTensor {
+    pub fn len(&self) -> usize {
+        self.sign.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.sign.is_empty()
+    }
+
+    pub fn group_count(&self) -> usize {
+        self.sg_exp.len()
+    }
+
+    /// Group scale value of group `g`.
+    pub fn group_scale(&self, g: usize) -> f32 {
+        format::group_scale_value(self.sg_exp[g], self.sg_man[g], self.cfg.group)
+    }
+
+    /// Element value (dequantized, including all scales).
+    pub fn value(&self, idx: usize) -> f32 {
+        let g = self.cfg.grouping.group_of(&self.shape, idx);
+        let xbar = self.cfg.element.decode(self.exp_code[idx], self.man[idx]);
+        if self.s_t == 0.0 {
+            return 0.0;
+        }
+        // same op order as ref: ((sign * s_t) * s_g) * xbar
+        ((self.sign[idx] as f32 * self.s_t) * self.group_scale(g)) * xbar
+    }
+
+    /// Dequantize the whole tensor (ref.mls_quantize_fields "q").
+    pub fn dequantize(&self) -> Vec<f32> {
+        let n = self.len();
+        let mut sg_cache: Vec<f32> = (0..self.group_count()).map(|g| self.group_scale(g)).collect();
+        if self.s_t == 0.0 {
+            return vec![0.0; n];
+        }
+        for s in sg_cache.iter_mut() {
+            *s = self.s_t * *s; // hoist s_t * s_g per group
+        }
+        let mut out = Vec::with_capacity(n);
+        if !matches!(self.cfg.grouping, super::Grouping::Second) {
+            // contiguous groups: chunk-wise walk avoids per-element divides
+            let group_len = self.cfg.grouping.group_len(&self.shape);
+            for g in 0..self.group_count() {
+                let sg = sg_cache[g];
+                let base = g * group_len;
+                for idx in base..base + group_len {
+                    let xbar = self.cfg.element.decode(self.exp_code[idx], self.man[idx]);
+                    out.push(self.sign[idx] as f32 * sg * xbar);
+                }
+            }
+        } else {
+            for idx in 0..n {
+                let g = self.cfg.grouping.group_of(&self.shape, idx);
+                let xbar = self.cfg.element.decode(self.exp_code[idx], self.man[idx]);
+                out.push(self.sign[idx] as f32 * sg_cache[g] * xbar);
+            }
+        }
+        out
+    }
+
+    /// Stored size in bits: elements (sign+E+M) + group scales (E_g+M_g) +
+    /// one f32 tensor scale. The compression story vs f32 (Table VI memory
+    /// argument).
+    pub fn storage_bits(&self) -> u64 {
+        let elem = self.len() as u64 * (1 + self.cfg.element.bits()) as u64;
+        let groups = self.group_count() as u64 * self.cfg.group.bits() as u64;
+        elem + groups + 32
+    }
+
+    /// Compression ratio vs f32 storage.
+    pub fn compression_ratio(&self) -> f64 {
+        (self.len() as u64 * 32) as f64 / self.storage_bits() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::quantizer::{quantize, QuantConfig, Rounding};
+    use crate::util::rng::Pcg32;
+
+    #[test]
+    fn dequantize_matches_value() {
+        let shape = [3usize, 4, 3, 3];
+        let mut rng = Pcg32::seeded(5);
+        let x = rng.normal_vec(shape.iter().product(), 1.0);
+        let mut cfg = QuantConfig::default();
+        cfg.rounding = Rounding::Nearest;
+        let t = quantize(&x, &shape, &cfg, &[]);
+        let q = t.dequantize();
+        for idx in 0..t.len() {
+            assert_eq!(q[idx], t.value(idx));
+        }
+    }
+
+    #[test]
+    fn storage_accounting() {
+        let shape = [4usize, 4, 3, 3];
+        let mut rng = Pcg32::seeded(6);
+        let x = rng.normal_vec(shape.iter().product(), 1.0);
+        let cfg = QuantConfig::default(); // <2,4>: 7 bits/elem
+        let t = quantize(&x, &shape, &cfg, &rng.rounding_offsets(x.len()));
+        let expect = 144 * 7 + 16 * 9 + 32;
+        assert_eq!(t.storage_bits(), expect as u64);
+        // 32 / (7 + group overhead) ~ 3.9x for this small tensor
+        assert!(t.compression_ratio() > 3.5);
+    }
+
+    #[test]
+    fn exponent_codes_in_range() {
+        let shape = [4usize, 4, 2, 2];
+        let mut rng = Pcg32::seeded(7);
+        let x = rng.normal_vec(shape.iter().product(), 1.0);
+        let cfg = QuantConfig::new(2, 4);
+        let t = quantize(&x, &shape, &cfg, &rng.rounding_offsets(x.len()));
+        // E_x = 2: codes 0..=3
+        assert!(t.exp_code.iter().all(|&c| c <= 3));
+        assert!(t.man.iter().all(|&m| m < 16));
+    }
+}

@@ -1,0 +1,13 @@
+//! Model-shape zoo and analytic op counting.
+//!
+//! Holds the exact layer geometry of every CNN the paper evaluates
+//! (ResNet-18/34 and VGG-16 / GoogleNet on ImageNet, ResNet-20 on
+//! CIFAR-10) plus the scaled trainable models of this reproduction. The
+//! counts drive Table I, Table III (GOPs) and the Table VI energy rows —
+//! they are analytic in layer shapes, so these tables reproduce exactly.
+
+pub mod ops;
+pub mod zoo;
+
+pub use ops::{count_training_ops, TrainingOps};
+pub use zoo::{network, Layer, Network, NETWORKS};

@@ -1,0 +1,170 @@
+//! Analytic training-op accounting (paper Table I / Table VI inputs).
+//!
+//! Counts are PER SAMPLE (the paper's "divided by batch size" convention);
+//! weight-indexed work that happens once per STEP (weight dynamic
+//! quantization, SGD update) is amortized over the batch.
+//!
+//! Backward convolutions follow Alg. 1: every conv layer runs a weight-
+//! gradient conv (Conv(qE, qA), same MAC count as forward) and, except for
+//! the first layer, an input-gradient conv (Conv^T(qE, qW), same MAC
+//! count). BN costs 9 muls + 10 adds per element over forward + backward
+//! (paper Sec. VI-E); dynamic quantization costs 4 muls + 2 adds per
+//! quantized element; the MLS element-wise addition needs one extra mul
+//! for the tensor-scale alignment (Table VI "EW-Add / FloatMul" row).
+
+use super::zoo::{Layer, Network};
+
+/// Raw op amounts for one training step, per sample.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct TrainingOps {
+    /// conv MACs executed on the (potentially) low-bit unit, fwd + bwd,
+    /// split by whether the layer is quantized in the MLS framework
+    pub conv_macs_quantized: f64,
+    pub conv_macs_unquantized: f64,
+    /// inter-group adder-tree additions (one tree output per
+    /// (sample, co, ci-reduction, pixel)): sum over convs of macs / K^2
+    pub tree_adds: f64,
+    /// group-scale unit applications (MLS only; == tree inputs)
+    pub group_scale_ops: f64,
+    /// BN elements processed (x9 mul, x10 add)
+    pub bn_elements: f64,
+    /// FC MACs, fwd + bwd (x3 of inference)
+    pub fc_macs: f64,
+    /// residual element-wise additions
+    pub ewadd_elements: f64,
+    /// parameters updated by SGD (amortized per sample)
+    pub sgd_params: f64,
+    /// dynamically quantized elements: weights (amortized), activations,
+    /// errors (MLS only)
+    pub dq_weight_elements: f64,
+    pub dq_act_elements: f64,
+    pub dq_err_elements: f64,
+}
+
+impl TrainingOps {
+    pub fn total_conv_macs(&self) -> f64 {
+        self.conv_macs_quantized + self.conv_macs_unquantized
+    }
+
+    pub fn dq_elements(&self) -> f64 {
+        self.dq_weight_elements + self.dq_act_elements + self.dq_err_elements
+    }
+}
+
+/// Count the training ops of `net` with weight work amortized over `batch`.
+pub fn count_training_ops(net: &Network, batch: usize) -> TrainingOps {
+    let b = batch.max(1) as f64;
+    let mut t = TrainingOps::default();
+    let mut first_conv = true;
+
+    for layer in &net.layers {
+        match layer {
+            Layer::Conv { cin, cout, k, stride, h, w, quantized, .. } => {
+                let macs = (cin * cout * k * k * h * w) as f64;
+                // fwd + grad-W (+ grad-A unless this is the first conv)
+                let n_convs = if first_conv { 2.0 } else { 3.0 };
+                let total = macs * n_convs;
+                if *quantized {
+                    t.conv_macs_quantized += total;
+                    t.tree_adds += total / (*k * *k) as f64;
+                    t.group_scale_ops += total / (*k * *k) as f64;
+                    // DQ: W once per step; A once per fwd; E once per bwd
+                    t.dq_weight_elements += (cin * cout * k * k) as f64 / b;
+                    t.dq_act_elements += (cin * h * w * stride * stride) as f64;
+                    t.dq_err_elements += (cout * h * w) as f64;
+                } else {
+                    t.conv_macs_unquantized += total;
+                }
+                first_conv = false;
+            }
+            Layer::BatchNorm { c, h, w } => {
+                t.bn_elements += (c * h * w) as f64;
+            }
+            Layer::Fc { din, dout } => {
+                t.fc_macs += (din * dout) as f64 * 3.0;
+                t.sgd_params += (din * dout + dout) as f64 / b;
+            }
+            Layer::EwAdd { c, h, w } => {
+                t.ewadd_elements += (c * h * w) as f64;
+            }
+        }
+    }
+    // conv + BN parameters in the SGD update
+    let conv_bn_params: u64 = net
+        .layers
+        .iter()
+        .map(|l| match l {
+            Layer::Conv { cin, cout, k, .. } => (cin * cout * k * k) as u64,
+            Layer::BatchNorm { c, .. } => 2 * *c as u64,
+            _ => 0,
+        })
+        .sum();
+    t.sgd_params += conv_bn_params as f64 / b;
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::zoo::network;
+
+    #[test]
+    fn resnet18_table1_shape() {
+        // Table I: Conv F = 1.88E+09, Conv B = 4.22E+09 per sample. Our
+        // analytic F must match within 6%, and B must be ~2.2x F.
+        let net = network("resnet18").unwrap();
+        let fwd = net.inference_macs() as f64
+            - net
+                .layers
+                .iter()
+                .map(|l| if let Layer::Fc { din, dout } = l { (din * dout) as f64 } else { 0.0 })
+                .sum::<f64>();
+        assert!((fwd / 1.88e9 - 1.0).abs() < 0.06, "fwd {fwd:.3e}");
+        let t = count_training_ops(&net, 64);
+        let bwd = t.total_conv_macs() - fwd;
+        let ratio = bwd / fwd;
+        assert!((1.7..2.4).contains(&ratio), "B/F ratio {ratio}");
+    }
+
+    #[test]
+    fn googlenet_table1_shape() {
+        let net = network("googlenet").unwrap();
+        let t = count_training_ops(&net, 64);
+        // Table I: F 1.58e9, B 3.05e9 -> total ~4.6e9
+        let total = t.total_conv_macs();
+        assert!((3.9e9..5.3e9).contains(&total), "total {total:.3e}");
+    }
+
+    #[test]
+    fn tree_adds_are_macs_over_k2() {
+        let net = network("resnet20").unwrap();
+        let t = count_training_ops(&net, 1);
+        // every quantized conv is 3x3 or 1x1; tree adds must be between
+        // macs/9 and macs
+        assert!(t.tree_adds >= t.conv_macs_quantized / 9.0);
+        assert!(t.tree_adds <= t.conv_macs_quantized);
+        assert_eq!(t.tree_adds, t.group_scale_ops);
+    }
+
+    #[test]
+    fn batch_amortizes_weight_work() {
+        let net = network("resnet20").unwrap();
+        let t1 = count_training_ops(&net, 1);
+        let t64 = count_training_ops(&net, 64);
+        assert!((t1.dq_weight_elements / t64.dq_weight_elements - 64.0).abs() < 1e-9);
+        assert!((t1.sgd_params / t64.sgd_params - 64.0).abs() < 1e-9);
+        // activation-side work is batch independent (already per sample)
+        assert_eq!(t1.dq_act_elements, t64.dq_act_elements);
+        assert_eq!(t1.bn_elements, t64.bn_elements);
+    }
+
+    #[test]
+    fn first_layer_unquantized_everywhere() {
+        for name in ["resnet18", "resnet34", "resnet20", "vgg16", "googlenet"] {
+            let net = network(name).unwrap();
+            let t = count_training_ops(&net, 64);
+            assert!(t.conv_macs_unquantized > 0.0, "{name}");
+            assert!(t.conv_macs_quantized > 10.0 * t.conv_macs_unquantized, "{name}");
+        }
+    }
+}

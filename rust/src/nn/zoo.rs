@@ -1,0 +1,361 @@
+//! Layer geometry of the paper's evaluated networks.
+//!
+//! Shapes follow the original architectures:
+//! * ResNet-18/34 — He et al. 2016, ImageNet variant (conv7/2 stem, four
+//!   stages of basic blocks, 224x224 input),
+//! * ResNet-20 — the CIFAR variant (3x3 stem, three stages of three basic
+//!   blocks at 16/32/64 channels, 32x32 input),
+//! * VGG-16 — Simonyan & Zisserman 2014 configuration D,
+//! * GoogleNet — Szegedy et al. 2015 (Inception v1), main branch only
+//!   (auxiliary classifiers are inference-off and the paper's Table I
+//!   numbers match the main branch),
+//! plus the scaled `resnet_t` / `cnn_s` models that the trainable
+//! artifacts implement (DESIGN.md substitution table).
+
+/// One accounted layer. Spatial sizes are OUTPUT sizes.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Layer {
+    Conv {
+        name: String,
+        cin: usize,
+        cout: usize,
+        k: usize,
+        stride: usize,
+        h: usize,
+        w: usize,
+        /// quantized in the low-bit framework (first conv stays fp32)
+        quantized: bool,
+    },
+    BatchNorm { c: usize, h: usize, w: usize },
+    Fc { din: usize, dout: usize },
+    /// element-wise residual addition over c x h x w
+    EwAdd { c: usize, h: usize, w: usize },
+}
+
+#[derive(Clone, Debug)]
+pub struct Network {
+    pub name: &'static str,
+    pub input: (usize, usize, usize), // (C, H, W)
+    pub layers: Vec<Layer>,
+}
+
+impl Network {
+    /// Forward multiply-accumulate count of all convs + FCs (the "GOPs"
+    /// convention of the paper's Table III counts one MAC as one op).
+    pub fn inference_macs(&self) -> u64 {
+        self.layers
+            .iter()
+            .map(|l| match l {
+                Layer::Conv { cin, cout, k, h, w, .. } => {
+                    (cin * cout * k * k * h * w) as u64
+                }
+                Layer::Fc { din, dout } => (din * dout) as u64,
+                _ => 0,
+            })
+            .sum()
+    }
+
+    pub fn conv_layers(&self) -> impl Iterator<Item = &Layer> {
+        self.layers.iter().filter(|l| matches!(l, Layer::Conv { .. }))
+    }
+
+    pub fn param_count(&self) -> u64 {
+        self.layers
+            .iter()
+            .map(|l| match l {
+                Layer::Conv { cin, cout, k, .. } => (cin * cout * k * k) as u64,
+                Layer::Fc { din, dout } => (din * dout + dout) as u64,
+                Layer::BatchNorm { c, .. } => 2 * *c as u64,
+                _ => 0,
+            })
+            .sum()
+    }
+}
+
+/// Names of all predefined networks.
+pub const NETWORKS: &[&str] = &[
+    "resnet18", "resnet34", "resnet20", "vgg16", "googlenet", "resnet_t", "cnn_s",
+];
+
+/// Look up a predefined network by name.
+pub fn network(name: &str) -> anyhow::Result<Network> {
+    Ok(match name {
+        "resnet18" => resnet_imagenet(&[2, 2, 2, 2], "resnet18"),
+        "resnet34" => resnet_imagenet(&[3, 4, 6, 3], "resnet34"),
+        "resnet20" => resnet_cifar(3, "resnet20"),
+        "vgg16" => vgg16(),
+        "googlenet" => googlenet(),
+        "resnet_t" => resnet_t(),
+        "cnn_s" => cnn_s(),
+        _ => anyhow::bail!("unknown network {name:?} (have {NETWORKS:?})"),
+    })
+}
+
+struct B {
+    layers: Vec<Layer>,
+    c: usize,
+    h: usize,
+    w: usize,
+    n: usize,
+}
+
+impl B {
+    fn new(c: usize, h: usize, w: usize) -> Self {
+        B { layers: Vec::new(), c, h, w, n: 0 }
+    }
+
+    fn conv(&mut self, cout: usize, k: usize, stride: usize, quantized: bool) -> &mut Self {
+        // "same" padding geometry: out = ceil(in / stride)
+        self.h = self.h.div_ceil(stride);
+        self.w = self.w.div_ceil(stride);
+        self.n += 1;
+        self.layers.push(Layer::Conv {
+            name: format!("conv{}", self.n),
+            cin: self.c,
+            cout,
+            k,
+            stride,
+            h: self.h,
+            w: self.w,
+            quantized,
+        });
+        self.c = cout;
+        self
+    }
+
+    fn bn(&mut self) -> &mut Self {
+        self.layers.push(Layer::BatchNorm { c: self.c, h: self.h, w: self.w });
+        self
+    }
+
+    fn pool(&mut self, stride: usize) -> &mut Self {
+        self.h = self.h.div_ceil(stride);
+        self.w = self.w.div_ceil(stride);
+        self
+    }
+
+    fn ew_add(&mut self) -> &mut Self {
+        self.layers.push(Layer::EwAdd { c: self.c, h: self.h, w: self.w });
+        self
+    }
+
+    fn fc(&mut self, dout: usize) -> &mut Self {
+        self.layers.push(Layer::Fc { din: self.c, dout });
+        self.c = dout;
+        self
+    }
+
+    fn basic_block(&mut self, cout: usize, stride: usize) -> &mut Self {
+        let cin = self.c;
+        self.conv(cout, 3, stride, true).bn();
+        self.conv(cout, 3, 1, true).bn();
+        if stride != 1 || cin != cout {
+            // projection shortcut (1x1) on the pre-block feature map: its
+            // output geometry equals the block output
+            self.layers.push(Layer::Conv {
+                name: format!("conv{}s", self.n),
+                cin,
+                cout,
+                k: 1,
+                stride,
+                h: self.h,
+                w: self.w,
+                quantized: true,
+            });
+            self.layers.push(Layer::BatchNorm { c: cout, h: self.h, w: self.w });
+        }
+        self.ew_add()
+    }
+}
+
+fn resnet_imagenet(blocks: &[usize; 4], name: &'static str) -> Network {
+    let mut b = B::new(3, 224, 224);
+    b.conv(64, 7, 2, false).bn().pool(2); // stem conv is unquantized
+    let widths = [64usize, 128, 256, 512];
+    for (stage, (&n_blocks, &width)) in blocks.iter().zip(&widths).enumerate() {
+        for blk in 0..n_blocks {
+            let stride = if stage > 0 && blk == 0 { 2 } else { 1 };
+            b.basic_block(width, stride);
+        }
+    }
+    b.c = 512; // GAP output features
+    b.fc(1000);
+    Network { name, input: (3, 224, 224), layers: b.layers }
+}
+
+fn resnet_cifar(n_per_stage: usize, name: &'static str) -> Network {
+    let mut b = B::new(3, 32, 32);
+    b.conv(16, 3, 1, false).bn();
+    for (stage, &width) in [16usize, 32, 64].iter().enumerate() {
+        for blk in 0..n_per_stage {
+            let stride = if stage > 0 && blk == 0 { 2 } else { 1 };
+            b.basic_block(width, stride);
+        }
+    }
+    b.c = 64;
+    b.fc(10);
+    Network { name, input: (3, 32, 32), layers: b.layers }
+}
+
+fn vgg16() -> Network {
+    let mut b = B::new(3, 224, 224);
+    let cfg: &[&[usize]] = &[&[64, 64], &[128, 128], &[256, 256, 256], &[512, 512, 512], &[512, 512, 512]];
+    let mut first = true;
+    for group in cfg {
+        for &width in *group {
+            b.conv(width, 3, 1, !first).bn();
+            first = false;
+        }
+        b.pool(2);
+    }
+    b.c = 512 * 7 * 7;
+    b.fc(4096).fc(4096).fc(1000);
+    Network { name: "vgg16", input: (3, 224, 224), layers: b.layers }
+}
+
+fn googlenet() -> Network {
+    let mut b = B::new(3, 224, 224);
+    b.conv(64, 7, 2, false).bn().pool(2); // 56x56
+    b.conv(64, 1, 1, true).bn();
+    b.conv(192, 3, 1, true).bn();
+    b.pool(2); // 28x28
+
+    // (c1x1, c3r, c3, c5r, c5, pool_proj)
+    let inceptions: &[(usize, usize, usize, usize, usize, usize, bool)] = &[
+        (64, 96, 128, 16, 32, 32, false),    // 3a @28
+        (128, 128, 192, 32, 96, 64, true),   // 3b, then pool -> 14
+        (192, 96, 208, 16, 48, 64, false),   // 4a @14
+        (160, 112, 224, 24, 64, 64, false),  // 4b
+        (128, 128, 256, 24, 64, 64, false),  // 4c
+        (112, 144, 288, 32, 64, 64, false),  // 4d
+        (256, 160, 320, 32, 128, 128, true), // 4e, then pool -> 7
+        (256, 160, 320, 32, 128, 128, false),// 5a @7
+        (384, 192, 384, 48, 128, 128, false),// 5b
+    ];
+    for &(c1, c3r, c3, c5r, c5, pp, pool_after) in inceptions {
+        let cin = b.c;
+        let (h, w) = (b.h, b.w);
+        let mut branch = |cin: usize, cout: usize, k: usize| {
+            b.layers.push(Layer::Conv {
+                name: format!("conv{}", b.n),
+                cin,
+                cout,
+                k,
+                stride: 1,
+                h,
+                w,
+                quantized: true,
+            });
+            b.n += 1;
+            b.layers.push(Layer::BatchNorm { c: cout, h, w });
+        };
+        branch(cin, c1, 1);
+        branch(cin, c3r, 1);
+        branch(c3r, c3, 3);
+        branch(cin, c5r, 1);
+        branch(c5r, c5, 5);
+        branch(cin, pp, 1); // pool projection
+        b.c = c1 + c3 + c5 + pp;
+        if pool_after {
+            b.pool(2);
+        }
+    }
+    b.c = 1024;
+    b.fc(1000);
+    Network { name: "googlenet", input: (3, 224, 224), layers: b.layers }
+}
+
+/// The scaled trainable residual model (mirrors python model.resnet_t).
+fn resnet_t() -> Network {
+    let mut b = B::new(3, 16, 16);
+    b.conv(16, 3, 1, false).bn();
+    b.basic_block(16, 1);
+    b.basic_block(32, 2);
+    b.basic_block(64, 2);
+    b.c = 64;
+    b.fc(10);
+    Network { name: "resnet_t", input: (3, 16, 16), layers: b.layers }
+}
+
+/// The scaled trainable VGG-style model (mirrors python model.cnn_s).
+fn cnn_s() -> Network {
+    let mut b = B::new(3, 16, 16);
+    b.conv(16, 3, 1, false).bn();
+    b.conv(32, 3, 2, true).bn();
+    b.conv(32, 3, 1, true).bn();
+    b.conv(64, 3, 2, true).bn();
+    b.conv(64, 3, 1, true).bn();
+    b.c = 64;
+    b.fc(10);
+    Network { name: "cnn_s", input: (3, 16, 16), layers: b.layers }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn inference_gops_match_table3() {
+        // paper Table III: 1.88 / 3.59 / 15.25 / 1.58 GOPs (MACs). Our
+        // analytic counts must land within 6% of the published numbers.
+        for (name, gops) in [("resnet18", 1.88), ("resnet34", 3.59), ("vgg16", 15.25),
+                             ("googlenet", 1.58)] {
+            let n = network(name).unwrap();
+            let got = n.inference_macs() as f64 / 1e9;
+            let rel = (got - gops).abs() / gops;
+            assert!(rel < 0.06, "{name}: got {got:.3} GOPs vs paper {gops}");
+        }
+    }
+
+    #[test]
+    fn param_counts_plausible() {
+        let r18 = network("resnet18").unwrap();
+        let p = r18.param_count() as f64 / 1e6;
+        assert!((10.0..13.0).contains(&p), "resnet18 params {p}M");
+        let r34 = network("resnet34").unwrap();
+        let p34 = r34.param_count() as f64 / 1e6;
+        assert!((20.0..23.0).contains(&p34), "resnet34 params {p34}M");
+    }
+
+    #[test]
+    fn resnet20_structure() {
+        let n = network("resnet20").unwrap();
+        // 1 stem + 3 stages x 3 blocks x 2 convs + 2 projection shortcuts
+        let convs = n.conv_layers().count();
+        assert_eq!(convs, 1 + 18 + 2);
+        // first conv unquantized, everything else quantized
+        let unq = n
+            .conv_layers()
+            .filter(|l| matches!(l, Layer::Conv { quantized: false, .. }))
+            .count();
+        assert_eq!(unq, 1);
+    }
+
+    #[test]
+    fn googlenet_output_channels() {
+        let n = network("googlenet").unwrap();
+        // final inception output must be 1024 (feeding the classifier)
+        let last_fc = n.layers.iter().rev().find(|l| matches!(l, Layer::Fc { .. }));
+        match last_fc {
+            Some(Layer::Fc { din, dout }) => {
+                assert_eq!(*din, 1024);
+                assert_eq!(*dout, 1000);
+            }
+            _ => panic!("no fc"),
+        }
+    }
+
+    #[test]
+    fn unknown_network_errors() {
+        assert!(network("nope").is_err());
+    }
+
+    #[test]
+    fn all_networks_build() {
+        for name in NETWORKS {
+            let n = network(name).unwrap();
+            assert!(!n.layers.is_empty(), "{name}");
+            assert!(n.inference_macs() > 0, "{name}");
+        }
+    }
+}

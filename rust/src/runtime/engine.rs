@@ -1,0 +1,241 @@
+//! The PJRT execution engine: compile artifacts once per process, then run
+//! typed steps from the training hot loop.
+
+use std::collections::HashMap;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, ensure, Context, Result};
+
+use super::manifest::{Artifact, Manifest};
+
+/// Output of one train step.
+#[derive(Clone, Debug)]
+pub struct StepOutput {
+    pub loss: f32,
+    pub acc: f32,
+}
+
+/// A compiled artifact plus its signature (cached per process).
+pub struct Compiled {
+    pub artifact: Artifact,
+    exe: xla::PjRtLoadedExecutable,
+    pub compile_time: Duration,
+}
+
+/// PJRT CPU engine with an executable cache.
+pub struct Engine {
+    pub manifest: Manifest,
+    client: xla::PjRtClient,
+    cache: HashMap<String, Compiled>,
+    /// cumulative device-execution time (perf accounting)
+    pub exec_time: Duration,
+    pub exec_steps: u64,
+}
+
+impl Engine {
+    pub fn new(manifest: Manifest) -> Result<Engine> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT client: {e}"))?;
+        Ok(Engine { manifest, client, cache: HashMap::new(), exec_time: Duration::ZERO, exec_steps: 0 })
+    }
+
+    pub fn from_dir(dir: impl AsRef<std::path::Path>) -> Result<Engine> {
+        Engine::new(Manifest::load(dir)?)
+    }
+
+    /// Compile (or fetch from cache) an artifact by (model, fn, cfg).
+    pub fn compiled(&mut self, model: &str, fn_kind: &str, cfg_name: &str) -> Result<&Compiled> {
+        let art = self.manifest.find(model, fn_kind, cfg_name)?.clone();
+        if !self.cache.contains_key(&art.name) {
+            let path = self.manifest.artifact_path(&art);
+            let t0 = Instant::now();
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow!("bad path"))?,
+            )
+            .map_err(|e| anyhow!("parsing {path:?}: {e}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compiling {}: {e}", art.name))?;
+            let compile_time = t0.elapsed();
+            eprintln!("[engine] compiled {} in {:.1?}", art.name, compile_time);
+            self.cache.insert(
+                art.name.clone(),
+                Compiled { artifact: art.clone(), exe, compile_time },
+            );
+        }
+        Ok(&self.cache[&art.name])
+    }
+
+    /// Execute an artifact with f32/i32 inputs matched against its
+    /// signature; returns each output flattened to f32.
+    pub fn execute(
+        &mut self,
+        model: &str,
+        fn_kind: &str,
+        cfg_name: &str,
+        inputs: &[Input<'_>],
+    ) -> Result<Vec<Vec<f32>>> {
+        // compile first (separate borrow scope)
+        self.compiled(model, fn_kind, cfg_name)?;
+        let art_name = self.manifest.find(model, fn_kind, cfg_name)?.name.clone();
+        let compiled = &self.cache[&art_name];
+
+        ensure!(
+            inputs.len() == compiled.artifact.inputs.len(),
+            "{}: expected {} inputs, got {}",
+            art_name,
+            compiled.artifact.inputs.len(),
+            inputs.len()
+        );
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (sig, input) in compiled.artifact.inputs.iter().zip(inputs) {
+            let lit = match (sig.dtype.as_str(), input) {
+                ("f32", Input::F32(data)) => {
+                    ensure!(
+                        data.len() == sig.elements(),
+                        "{}: input {} wants {} f32s, got {}",
+                        art_name, sig.name, sig.elements(), data.len()
+                    );
+                    to_literal_f32(data, &sig.shape)?
+                }
+                ("i32", Input::I32(data)) => {
+                    ensure!(
+                        data.len() == sig.elements(),
+                        "{}: input {} wants {} i32s, got {}",
+                        art_name, sig.name, sig.elements(), data.len()
+                    );
+                    to_literal_i32(data, &sig.shape)?
+                }
+                (dt, got) => anyhow::bail!(
+                    "{}: input {} dtype mismatch: artifact wants {dt}, caller passed {}",
+                    art_name, sig.name,
+                    match got { Input::F32(_) => "f32", Input::I32(_) => "i32" }
+                ),
+            };
+            literals.push(lit);
+        }
+
+        let t0 = Instant::now();
+        let result = compiled
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("executing {}: {e}", art_name))?;
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching result of {}: {e}", art_name))?;
+        self.exec_time += t0.elapsed();
+        self.exec_steps += 1;
+
+        // jax lowering uses return_tuple=True: unpack N outputs
+        let outs = tuple.to_tuple().map_err(|e| anyhow!("untupling: {e}"))?;
+        ensure!(
+            outs.len() == compiled.artifact.outputs.len(),
+            "{}: expected {} outputs, got {}",
+            art_name,
+            compiled.artifact.outputs.len(),
+            outs.len()
+        );
+        outs.into_iter()
+            .map(|o| {
+                o.to_vec::<f32>()
+                    .map_err(|e| anyhow!("output fetch: {e}"))
+            })
+            .collect()
+    }
+
+    /// One training step: state' written in place; returns (loss, acc).
+    pub fn train_step(
+        &mut self,
+        model: &str,
+        cfg_name: &str,
+        state: &mut Vec<f32>,
+        images: &[f32],
+        labels: &[i32],
+        seed: i32,
+        lr: f32,
+    ) -> Result<StepOutput> {
+        let outs = self.execute(
+            model,
+            "train_step",
+            cfg_name,
+            &[
+                Input::F32(state),
+                Input::F32(images),
+                Input::I32(labels),
+                Input::I32(&[seed]),
+                Input::F32(&[lr]),
+            ],
+        )?;
+        *state = outs[0].clone();
+        Ok(StepOutput { loss: outs[1][0], acc: outs[2][0] })
+    }
+
+    /// Evaluation (runs the fp32 eval artifact of the model).
+    pub fn eval_step(
+        &mut self,
+        model: &str,
+        state: &[f32],
+        images: &[f32],
+        labels: &[i32],
+    ) -> Result<StepOutput> {
+        let outs = self.execute(
+            model,
+            "eval_step",
+            "fp32",
+            &[Input::F32(state), Input::F32(images), Input::I32(labels)],
+        )?;
+        Ok(StepOutput { loss: outs[0][0], acc: outs[1][0] })
+    }
+
+    /// Probe step: per-layer A / E / W tensors (Fig. 6 / Fig. 7 inputs).
+    pub fn probe_step(
+        &mut self,
+        model: &str,
+        cfg_name: &str,
+        state: &[f32],
+        images: &[f32],
+        labels: &[i32],
+        seed: i32,
+    ) -> Result<Vec<Vec<f32>>> {
+        self.execute(
+            model,
+            "probe_step",
+            cfg_name,
+            &[Input::F32(state), Input::F32(images), Input::I32(labels), Input::I32(&[seed])],
+        )
+    }
+
+    /// Mean device time per executed step.
+    pub fn mean_exec_time(&self) -> Duration {
+        if self.exec_steps == 0 {
+            Duration::ZERO
+        } else {
+            self.exec_time / self.exec_steps as u32
+        }
+    }
+}
+
+/// A borrowed, typed input buffer.
+pub enum Input<'a> {
+    F32(&'a [f32]),
+    I32(&'a [i32]),
+}
+
+fn to_literal_f32(data: &[f32], shape: &[usize]) -> Result<xla::Literal> {
+    let lit = xla::Literal::vec1(data);
+    if shape.is_empty() {
+        return Ok(xla::Literal::scalar(data[0]));
+    }
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    lit.reshape(&dims).map_err(|e| anyhow!("reshape: {e}")).context("f32 literal")
+}
+
+fn to_literal_i32(data: &[i32], shape: &[usize]) -> Result<xla::Literal> {
+    if shape.is_empty() {
+        return Ok(xla::Literal::scalar(data[0]));
+    }
+    let lit = xla::Literal::vec1(data);
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    lit.reshape(&dims).map_err(|e| anyhow!("reshape: {e}")).context("i32 literal")
+}

@@ -1,0 +1,300 @@
+//! Artifact manifest: the metadata contract between `python/compile/aot.py`
+//! and the Rust runtime. Everything the coordinator knows about a model —
+//! state layout, shapes, quant config — comes from here; nothing is
+//! hard-coded on the Rust side.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::mls::QuantConfig;
+use crate::util::json::Json;
+
+/// One tensor signature (name, shape, dtype).
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorSig {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String, // "f32" | "i32"
+}
+
+impl TensorSig {
+    fn from_json(v: &Json) -> Result<Self> {
+        Ok(TensorSig {
+            name: v.req("name")?.as_str().unwrap_or_default().to_string(),
+            shape: v.req("shape")?.usizes()?,
+            dtype: v.req("dtype")?.as_str().unwrap_or("f32").to_string(),
+        })
+    }
+
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+}
+
+/// One model variable in the flat state vector.
+#[derive(Clone, Debug, PartialEq)]
+pub struct VarSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub kind: String, // "param" | "bn_stat"
+    pub offset: usize,
+}
+
+impl VarSpec {
+    pub fn size(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+}
+
+/// Per-model metadata (python model.build_model meta dict).
+#[derive(Clone, Debug)]
+pub struct ModelMeta {
+    pub name: String,
+    pub n_var: usize,
+    pub state_dim: usize,
+    pub batch: usize,
+    pub img_shape: Vec<usize>,
+    pub num_classes: usize,
+    pub probe_names: Vec<String>,
+    pub probe_a_shapes: BTreeMap<String, Vec<usize>>,
+    pub probe_e_shapes: BTreeMap<String, Vec<usize>>,
+    pub specs: Vec<VarSpec>,
+    pub init_file: Option<String>,
+}
+
+impl ModelMeta {
+    pub fn spec(&self, name: &str) -> Option<&VarSpec> {
+        self.specs.iter().find(|s| s.name == name)
+    }
+
+    /// Slice a variable out of a flat state vector.
+    pub fn read_var<'a>(&self, state: &'a [f32], name: &str) -> Result<&'a [f32]> {
+        let s = self.spec(name).ok_or_else(|| anyhow!("no var {name:?}"))?;
+        Ok(&state[s.offset..s.offset + s.size()])
+    }
+}
+
+/// One AOT artifact (an HLO file + its signature).
+#[derive(Clone, Debug)]
+pub struct Artifact {
+    pub name: String,
+    pub file: String,
+    pub fn_kind: String, // train_step | eval_step | probe_step
+    pub model: String,
+    pub cfg: QuantConfig,
+    pub cfg_name: String,
+    pub inputs: Vec<TensorSig>,
+    pub outputs: Vec<TensorSig>,
+}
+
+/// The whole manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub batch: usize,
+    pub img_shape: Vec<usize>,
+    pub num_classes: usize,
+    pub models: BTreeMap<String, ModelMeta>,
+    pub artifacts: Vec<Artifact>,
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        let v = Json::parse(&text).map_err(|e| anyhow!("{path:?}: {e}"))?;
+
+        let mut models = BTreeMap::new();
+        for (name, m) in v.req("models")?.as_obj().ok_or_else(|| anyhow!("models"))?.iter() {
+            let specs = m
+                .req("specs")?
+                .as_arr()
+                .ok_or_else(|| anyhow!("specs"))?
+                .iter()
+                .map(|s| {
+                    Ok(VarSpec {
+                        name: s.req("name")?.as_str().unwrap_or_default().to_string(),
+                        shape: s.req("shape")?.usizes()?,
+                        kind: s.req("kind")?.as_str().unwrap_or_default().to_string(),
+                        offset: s.req("offset")?.as_usize().unwrap_or(0),
+                    })
+                })
+                .collect::<Result<Vec<_>>>()?;
+            let probe_names: Vec<String> = m
+                .req("probe_names")?
+                .as_arr()
+                .unwrap_or(&[])
+                .iter()
+                .filter_map(|s| s.as_str().map(str::to_string))
+                .collect();
+            let read_shapes = |key: &str| -> BTreeMap<String, Vec<usize>> {
+                m.get(key)
+                    .and_then(|o| o.as_obj())
+                    .map(|o| {
+                        o.iter()
+                            .filter_map(|(k, v)| v.usizes().ok().map(|s| (k.clone(), s)))
+                            .collect()
+                    })
+                    .unwrap_or_default()
+            };
+            let init_file = v
+                .get("init")
+                .and_then(|i| i.get(name))
+                .and_then(|i| i.get("file"))
+                .and_then(|f| f.as_str())
+                .map(str::to_string);
+            models.insert(
+                name.clone(),
+                ModelMeta {
+                    name: name.clone(),
+                    n_var: m.req("n_var")?.as_usize().unwrap_or(0),
+                    state_dim: m.req("state_dim")?.as_usize().unwrap_or(0),
+                    batch: m.req("batch")?.as_usize().unwrap_or(0),
+                    img_shape: m.req("img_shape")?.usizes()?,
+                    num_classes: m.req("num_classes")?.as_usize().unwrap_or(10),
+                    probe_names,
+                    probe_a_shapes: read_shapes("probe_a_shapes"),
+                    probe_e_shapes: read_shapes("probe_e_shapes"),
+                    specs,
+                    init_file,
+                },
+            );
+        }
+
+        let artifacts = v
+            .req("artifacts")?
+            .as_arr()
+            .ok_or_else(|| anyhow!("artifacts"))?
+            .iter()
+            .map(|a| {
+                let cfg_json = a.req("cfg")?;
+                Ok(Artifact {
+                    name: a.req("name")?.as_str().unwrap_or_default().to_string(),
+                    file: a.req("file")?.as_str().unwrap_or_default().to_string(),
+                    fn_kind: a.req("fn")?.as_str().unwrap_or_default().to_string(),
+                    model: a.req("model")?.as_str().unwrap_or_default().to_string(),
+                    cfg: QuantConfig::from_json(cfg_json)?,
+                    cfg_name: QuantConfig::from_json(cfg_json)?.name(),
+                    inputs: a
+                        .req("inputs")?
+                        .as_arr()
+                        .unwrap_or(&[])
+                        .iter()
+                        .map(TensorSig::from_json)
+                        .collect::<Result<Vec<_>>>()?,
+                    outputs: a
+                        .req("outputs")?
+                        .as_arr()
+                        .unwrap_or(&[])
+                        .iter()
+                        .map(TensorSig::from_json)
+                        .collect::<Result<Vec<_>>>()?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+
+        Ok(Manifest {
+            dir,
+            batch: v.req("batch")?.as_usize().unwrap_or(32),
+            img_shape: v.req("img_shape")?.usizes()?,
+            num_classes: v.req("num_classes")?.as_usize().unwrap_or(10),
+            models,
+            artifacts,
+        })
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelMeta> {
+        self.models
+            .get(name)
+            .ok_or_else(|| anyhow!("model {name:?} not in manifest (have: {:?})",
+                                   self.models.keys().collect::<Vec<_>>()))
+    }
+
+    /// Find an artifact by (model, fn kind, config name).
+    pub fn find(&self, model: &str, fn_kind: &str, cfg_name: &str) -> Result<&Artifact> {
+        self.artifacts
+            .iter()
+            .find(|a| a.model == model && a.fn_kind == fn_kind && a.cfg_name == cfg_name)
+            .ok_or_else(|| {
+                anyhow!(
+                    "no artifact model={model} fn={fn_kind} cfg={cfg_name}; \
+                     available for {model}: {:?} — run `make artifacts` (or artifacts-full)",
+                    self.artifacts
+                        .iter()
+                        .filter(|a| a.model == model)
+                        .map(|a| format!("{}:{}", a.fn_kind, a.cfg_name))
+                        .collect::<Vec<_>>()
+                )
+            })
+    }
+
+    /// Artifacts of a given fn kind for a model (e.g. all train variants).
+    pub fn variants(&self, model: &str, fn_kind: &str) -> Vec<&Artifact> {
+        self.artifacts
+            .iter()
+            .filter(|a| a.model == model && a.fn_kind == fn_kind)
+            .collect()
+    }
+
+    /// Load the initial state vector of a model.
+    pub fn load_init(&self, model: &str) -> Result<Vec<f32>> {
+        let meta = self.model(model)?;
+        let file = meta
+            .init_file
+            .as_ref()
+            .ok_or_else(|| anyhow!("no init blob for {model}"))?;
+        let bytes = std::fs::read(self.dir.join(file))?;
+        anyhow::ensure!(
+            bytes.len() == meta.state_dim * 4,
+            "init blob size {} != state_dim {} * 4",
+            bytes.len(),
+            meta.state_dim
+        );
+        Ok(bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    pub fn artifact_path(&self, a: &Artifact) -> PathBuf {
+        self.dir.join(&a.file)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    #[test]
+    fn loads_real_manifest_if_present() {
+        let dir = artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let m = Manifest::load(&dir).unwrap();
+        assert!(!m.artifacts.is_empty());
+        for (_, meta) in &m.models {
+            assert_eq!(meta.state_dim, 2 * meta.n_var);
+            // specs must tile the variable region exactly
+            let total: usize = meta.specs.iter().map(|s| s.size()).sum();
+            assert_eq!(total, meta.n_var);
+            let init = m.load_init(&meta.name).unwrap();
+            assert_eq!(init.len(), meta.state_dim);
+        }
+    }
+
+    #[test]
+    fn missing_dir_errors_helpfully() {
+        let err = Manifest::load("/nonexistent/path").unwrap_err();
+        assert!(format!("{err:#}").contains("make artifacts"));
+    }
+}

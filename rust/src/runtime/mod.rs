@@ -1,0 +1,18 @@
+//! PJRT runtime: load AOT artifacts (HLO text) and execute them from the
+//! Rust hot path.
+//!
+//! * [`manifest`] — parses `artifacts/manifest.json` (models, flat-state
+//!   layouts, per-artifact input/output signatures, quant configs),
+//! * [`engine`] — wraps the `xla` crate: one `PjRtClient::cpu()`, an
+//!   executable cache keyed by artifact name, and typed step calls that
+//!   move `Vec<f32>` in/out.
+//!
+//! HLO **text** is the interchange format: jax >= 0.5 emits
+//! HloModuleProtos with 64-bit instruction ids that this xla_extension
+//! (0.5.1) rejects; the text parser reassigns ids (see DESIGN.md).
+
+pub mod engine;
+pub mod manifest;
+
+pub use engine::Engine;
+pub use manifest::{Artifact, Manifest, ModelMeta, VarSpec};

@@ -1,0 +1,80 @@
+//! Micro-bench harness for the `cargo bench` targets (criterion is not
+//! available offline). Warmup + timed runs, median/p10/p90 reporting, and a
+//! black-box sink to defeat dead-code elimination.
+
+use std::time::{Duration, Instant};
+
+use super::stats;
+
+/// Prevent the optimizer from discarding a computed value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    // std::hint::black_box is stable since 1.66
+    std::hint::black_box(x)
+}
+
+pub struct BenchResult {
+    pub name: String,
+    pub median: Duration,
+    pub p10: Duration,
+    pub p90: Duration,
+    pub iters: usize,
+}
+
+impl BenchResult {
+    pub fn throughput_items(&self, items: u64) -> f64 {
+        items as f64 / self.median.as_secs_f64()
+    }
+}
+
+/// Time `f` adaptively: warm up, then run until ~`budget` elapsed (at least
+/// `min_iters` samples), reporting the per-iteration distribution.
+pub fn bench(name: &str, budget: Duration, mut f: impl FnMut()) -> BenchResult {
+    // warmup
+    let warm_start = Instant::now();
+    let mut warm_iters = 0u32;
+    while warm_start.elapsed() < budget / 10 && warm_iters < 10_000 {
+        f();
+        warm_iters += 1;
+    }
+
+    let mut samples = Vec::new();
+    let start = Instant::now();
+    let min_iters = 10;
+    while samples.len() < min_iters || (start.elapsed() < budget && samples.len() < 10_000) {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    let result = BenchResult {
+        name: name.to_string(),
+        median: Duration::from_secs_f64(stats::median(&samples)),
+        p10: Duration::from_secs_f64(stats::quantile(&samples, 0.1)),
+        p90: Duration::from_secs_f64(stats::quantile(&samples, 0.9)),
+        iters: samples.len(),
+    };
+    println!(
+        "bench {:<44} median {:>12?}  p10 {:>12?}  p90 {:>12?}  ({} iters)",
+        result.name, result.median, result.p10, result.p90, result.iters
+    );
+    result
+}
+
+/// Convenience wrapper with the default 2 s budget.
+pub fn run(name: &str, f: impl FnMut()) -> BenchResult {
+    bench(name, Duration::from_secs(2), f)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let r = bench("noop-ish", Duration::from_millis(50), || {
+            black_box((0..100).sum::<u64>());
+        });
+        assert!(r.iters >= 10);
+        assert!(r.median.as_nanos() > 0);
+    }
+}

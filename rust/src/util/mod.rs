@@ -1,0 +1,21 @@
+//! In-tree utility substrate.
+//!
+//! The build environment only mirrors the `xla` crate's dependency closure,
+//! so the usual ecosystem crates (serde_json, rand, proptest, criterion,
+//! clap) are replaced with small, focused implementations:
+//!
+//! * [`rng`] — PCG32 deterministic random numbers (data generation,
+//!   stochastic rounding offsets, property tests),
+//! * [`json`] — a strict JSON parser/printer (artifact manifests, golden
+//!   vectors, metrics),
+//! * [`prop`] — a mini property-testing harness (randomized invariants
+//!   with seed reporting on failure),
+//! * [`bench`] — a measured-section micro-bench harness used by the
+//!   `cargo bench` targets (median-of-runs with warmup),
+//! * [`stats`] — summary statistics shared by metrics and benches.
+
+pub mod bench;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;

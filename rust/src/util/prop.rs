@@ -1,0 +1,89 @@
+//! Mini property-testing harness.
+//!
+//! `proptest` is not available offline, so invariants are checked with a
+//! simple randomized runner: N generated cases per property, deterministic
+//! seeding, and the failing seed printed so a counterexample reproduces
+//! with `PROP_SEED=<n> cargo test`.
+
+use super::rng::Pcg32;
+
+/// Number of cases per property (override with PROP_CASES).
+pub fn cases() -> u64 {
+    std::env::var("PROP_CASES")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(128)
+}
+
+/// Run `f` against `cases()` seeded RNGs; panic with the seed on failure.
+pub fn check(name: &str, mut f: impl FnMut(&mut Pcg32)) {
+    if let Ok(s) = std::env::var("PROP_SEED") {
+        let seed: u64 = s.parse().expect("PROP_SEED must be an integer");
+        let mut rng = Pcg32::seeded(seed);
+        f(&mut rng);
+        return;
+    }
+    for case in 0..cases() {
+        let seed = 0x9E37_79B9_7F4A_7C15u64.wrapping_mul(case + 1);
+        let mut rng = Pcg32::seeded(seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(&mut rng)));
+        if let Err(e) = result {
+            eprintln!("property {name:?} failed at case {case} (PROP_SEED={seed})");
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+/// Random tensor shape with up to `max_dim` per axis (always 4-D).
+pub fn shape4(rng: &mut Pcg32, max_dim: usize) -> [usize; 4] {
+    [
+        1 + rng.below(max_dim as u32) as usize,
+        1 + rng.below(max_dim as u32) as usize,
+        1 + rng.below(max_dim as u32) as usize,
+        1 + rng.below(max_dim as u32) as usize,
+    ]
+}
+
+/// Random tensor with per-(dim0,dim1) magnitude variation, the shape of
+/// data the MLS group scaling exists for.
+pub fn grouped_tensor(rng: &mut Pcg32, shape: [usize; 4]) -> Vec<f32> {
+    let [d0, d1, d2, d3] = shape;
+    let mut out = Vec::with_capacity(d0 * d1 * d2 * d3);
+    for _ in 0..d0 {
+        for _ in 0..d1 {
+            let scale = (rng.normal() * 2.0).exp();
+            for _ in 0..d2 * d3 {
+                out.push(rng.normal() * scale);
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn check_runs_all_cases() {
+        let mut n = 0;
+        check("count", |_| n += 1);
+        assert_eq!(n, cases());
+    }
+
+    #[test]
+    fn shapes_in_range() {
+        check("shape4", |rng| {
+            let s = shape4(rng, 6);
+            assert!(s.iter().all(|&d| (1..=6).contains(&d)));
+        });
+    }
+
+    #[test]
+    #[should_panic]
+    fn failures_propagate() {
+        check("fails", |rng| {
+            assert!(rng.uniform() < 0.5, "expected failure");
+        });
+    }
+}

@@ -1,0 +1,85 @@
+//! Summary statistics shared by metrics, benches and experiment reports.
+
+/// Mean of a slice (0 for empty).
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        0.0
+    } else {
+        xs.iter().sum::<f64>() / xs.len() as f64
+    }
+}
+
+/// Population standard deviation.
+pub fn stddev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64).sqrt()
+}
+
+/// p-quantile via sorted interpolation (p in [0, 1]).
+pub fn quantile(xs: &[f64], p: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut s = xs.to_vec();
+    s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let idx = p.clamp(0.0, 1.0) * (s.len() - 1) as f64;
+    let lo = idx.floor() as usize;
+    let hi = idx.ceil() as usize;
+    if lo == hi {
+        s[lo]
+    } else {
+        s[lo] + (s[hi] - s[lo]) * (idx - lo as f64)
+    }
+}
+
+pub fn median(xs: &[f64]) -> f64 {
+    quantile(xs, 0.5)
+}
+
+/// Average relative error — the Fig. 7 metric: mean|q - x| / mean|x|.
+pub fn average_relative_error(x: &[f32], q: &[f32]) -> f64 {
+    assert_eq!(x.len(), q.len());
+    let num: f64 = x.iter().zip(q).map(|(a, b)| (a - b).abs() as f64).sum();
+    let den: f64 = x.iter().map(|a| a.abs() as f64).sum();
+    if den == 0.0 {
+        0.0
+    } else {
+        num / den
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn basic_moments() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(mean(&xs), 2.5);
+        assert!((stddev(&xs) - 1.1180339887).abs() < 1e-9);
+    }
+
+    #[test]
+    fn quantiles() {
+        let xs = [1.0, 2.0, 3.0, 4.0, 5.0];
+        assert_eq!(median(&xs), 3.0);
+        assert_eq!(quantile(&xs, 0.0), 1.0);
+        assert_eq!(quantile(&xs, 1.0), 5.0);
+    }
+
+    #[test]
+    fn are_metric() {
+        let x = [1.0f32, -2.0, 4.0];
+        let q = [1.0f32, -2.0, 3.0];
+        let are = average_relative_error(&x, &q);
+        assert!((are - 1.0 / 7.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn are_zero_input() {
+        assert_eq!(average_relative_error(&[0.0; 3], &[0.0; 3]), 0.0);
+    }
+}

@@ -1,0 +1,148 @@
+//! Cross-layer golden tests: the Rust MLS implementation must reproduce the
+//! Python/jnp reference (ref.py) BIT-EXACTLY on the golden vectors emitted
+//! by `python/tests/test_golden.py` into `artifacts/golden/`.
+
+use std::path::PathBuf;
+
+use mls_train::arith::intra::{intra_group_mac, Element};
+use mls_train::mls::quantizer::{quantize, QuantConfig};
+use mls_train::util::json::Json;
+use mls_train::util::stats;
+
+fn golden_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts").join("golden")
+}
+
+fn load(name: &str) -> Option<Json> {
+    let path = golden_dir().join(name);
+    let text = std::fs::read_to_string(&path).ok()?;
+    Some(Json::parse(&text).expect("golden json parses"))
+}
+
+fn require_goldens() -> Vec<String> {
+    let index = load("index.json").unwrap_or_else(|| {
+        panic!(
+            "golden vectors missing at {:?} — run `make test-python` (or \
+             `cd python && pytest tests/test_golden.py`) first",
+            golden_dir()
+        )
+    });
+    index
+        .as_arr()
+        .expect("index is an array")
+        .iter()
+        .map(|v| v.as_str().unwrap().to_string())
+        .collect()
+}
+
+#[test]
+fn quantizer_bit_exact_against_python() {
+    let names = require_goldens();
+    assert!(names.len() >= 10, "expected a full golden set, got {names:?}");
+    for name in names {
+        let doc = load(&name).unwrap();
+        let cfg = QuantConfig::from_json(doc.req("cfg").unwrap()).unwrap();
+        let shape = doc.req("shape").unwrap().usizes().unwrap();
+        let x = doc.req("x").unwrap().f32s().unwrap();
+        let r = doc.req("r").unwrap().f32s().unwrap();
+
+        let t = quantize(&x, &shape, &cfg, &r);
+
+        // tensor scale
+        let st_expect = doc.req("s_t").unwrap().as_f32().unwrap();
+        assert_eq!(t.s_t.to_bits(), st_expect.to_bits(), "{name}: s_t");
+
+        // group-scale codes
+        let sg_exp = doc.req("sg_exp_code").unwrap().i32s().unwrap();
+        let sg_man = doc.req("sg_man").unwrap().i32s().unwrap();
+        assert_eq!(t.sg_exp.len(), sg_exp.len(), "{name}: group count");
+        for g in 0..sg_exp.len() {
+            assert_eq!(t.sg_exp[g] as i32, sg_exp[g], "{name}: sg_exp[{g}]");
+            assert_eq!(t.sg_man[g] as i32, sg_man[g], "{name}: sg_man[{g}]");
+        }
+        // group-scale values
+        let sg_vals = doc.req("s_g").unwrap().f32s().unwrap();
+        for g in 0..sg_vals.len() {
+            assert_eq!(t.group_scale(g).to_bits(), sg_vals[g].to_bits(), "{name}: s_g[{g}]");
+        }
+
+        // element fields
+        let exp_codes = doc.req("x_exp_code").unwrap().i32s().unwrap();
+        let mans = doc.req("x_man").unwrap().i32s().unwrap();
+        let signs = doc.req("sign").unwrap().i32s().unwrap();
+        for i in 0..x.len() {
+            assert_eq!(t.exp_code[i] as i32, exp_codes[i], "{name}: exp_code[{i}] (x={})", x[i]);
+            assert_eq!(t.man[i] as i32, mans[i], "{name}: man[{i}] (x={})", x[i]);
+            assert_eq!(t.sign[i] as i32, signs[i], "{name}: sign[{i}]");
+        }
+
+        // dequantized values — full bit equality
+        let q_expect = doc.req("q").unwrap().f32s().unwrap();
+        let q = t.dequantize();
+        for i in 0..q.len() {
+            assert_eq!(
+                q[i].to_bits(),
+                q_expect[i].to_bits(),
+                "{name}: q[{i}] rust {} vs python {} (x={})",
+                q[i],
+                q_expect[i],
+                x[i]
+            );
+        }
+
+        // ARE (nearest) — scalar, compared at f32 precision
+        let are_expect = doc.req("are_nearest").unwrap().as_f64().unwrap();
+        let mut ncfg = cfg;
+        ncfg.rounding = mls_train::mls::Rounding::Nearest;
+        let qn = mls_train::mls::quantizer::fake_quant(&x, &shape, &ncfg, &[]);
+        // python computes mean|q-x|/mean|x| in f32; allow f32 round-off
+        let are = stats::average_relative_error(&x, &qn);
+        assert!(
+            (are - are_expect).abs() < 1e-5 * (1.0 + are_expect.abs()),
+            "{name}: ARE {are} vs {are_expect}"
+        );
+    }
+}
+
+#[test]
+fn intra_group_mac_matches_python() {
+    let doc = match load("mac_e2m4.json") {
+        Some(d) => d,
+        None => panic!("mac golden missing — run pytest tests/test_golden.py"),
+    };
+    let cfg = QuantConfig::from_json(doc.req("cfg").unwrap()).unwrap();
+    let g = doc.req("g").unwrap().as_usize().unwrap();
+    let l = doc.req("l").unwrap().as_usize().unwrap();
+    let w = doc.req("w").unwrap().f32s().unwrap();
+    let a = doc.req("a").unwrap().f32s().unwrap();
+    let p_expect = doc.req("p").unwrap().i32s().unwrap();
+    let scale_expect = doc.req("scale_log2").unwrap().as_i64().unwrap() as i32;
+
+    // quantize with grouping=first, nearest (as the python golden does)
+    let mut qcfg = cfg;
+    qcfg.grouping = mls_train::mls::Grouping::First;
+    qcfg.rounding = mls_train::mls::Rounding::Nearest;
+    let shape = [g, l];
+    let tw = quantize(&w, &shape, &qcfg, &[]);
+    let ta = quantize(&a, &shape, &qcfg, &[]);
+
+    // cross-check dequantized values against the python fields
+    let wq_expect = doc.req("w_q").unwrap().f32s().unwrap();
+    let wq = tw.dequantize();
+    for i in 0..wq.len() {
+        assert_eq!(wq[i].to_bits(), wq_expect[i].to_bits(), "w_q[{i}]");
+    }
+
+    for gi in 0..g {
+        let mk = |t: &mls_train::mls::MlsTensor, i: usize| Element {
+            sign: t.sign[i],
+            exp_code: t.exp_code[i],
+            man: t.man[i],
+        };
+        let we: Vec<Element> = (gi * l..(gi + 1) * l).map(|i| mk(&tw, i)).collect();
+        let ae: Vec<Element> = (gi * l..(gi + 1) * l).map(|i| mk(&ta, i)).collect();
+        let ps = intra_group_mac(&we, &ae, qcfg.element);
+        assert_eq!(ps.p, p_expect[gi] as i64, "P[{gi}]");
+        assert_eq!(ps.scale_log2, scale_expect);
+    }
+}

@@ -1,0 +1,171 @@
+//! Property tests over the MLS quantizer and arithmetic simulator
+//! (mini-proptest harness in util::prop; reproduce failures with
+//! `PROP_SEED=<seed> cargo test --test proptests`).
+
+use mls_train::arith::conv::{conv2d_f32, lowbit_conv};
+use mls_train::arith::bitwidth;
+use mls_train::mls::format::{self, EmFormat};
+use mls_train::mls::quantizer::{fake_quant, quantize, QuantConfig, Rounding};
+use mls_train::mls::{Grouping, MlsTensor};
+use mls_train::util::prop::{check, grouped_tensor, shape4};
+use mls_train::util::rng::Pcg32;
+
+fn random_cfg(rng: &mut Pcg32) -> QuantConfig {
+    let groupings = [Grouping::None, Grouping::First, Grouping::Second, Grouping::Both];
+    QuantConfig {
+        element: EmFormat::new(rng.below(4), 1 + rng.below(5)),
+        group: EmFormat::new(if rng.uniform() < 0.5 { 4 } else { 8 }, rng.below(2)),
+        grouping: groupings[rng.below(4) as usize],
+        rounding: if rng.uniform() < 0.5 { Rounding::Stochastic } else { Rounding::Nearest },
+        enabled: true,
+    }
+}
+
+fn quantize_random(rng: &mut Pcg32) -> (Vec<f32>, Vec<usize>, QuantConfig, MlsTensor) {
+    let shape = shape4(rng, 6);
+    let cfg = random_cfg(rng);
+    let x = grouped_tensor(rng, shape);
+    let r = rng.rounding_offsets(x.len());
+    let t = quantize(&x, &shape, &cfg, &r);
+    (x, shape.to_vec(), cfg, t)
+}
+
+#[test]
+fn prop_codes_in_range() {
+    check("codes_in_range", |rng| {
+        let (_, _, cfg, t) = quantize_random(rng);
+        let max_code = (1u32 << cfg.element.e) - 1;
+        let max_man = (1u32 << cfg.element.m) - 1;
+        assert!(t.exp_code.iter().all(|&c| (c as u32) <= max_code));
+        assert!(t.man.iter().all(|&m| m <= max_man));
+        let max_gcode = (1u32 << cfg.group.e) - 1;
+        assert!(t.sg_exp.iter().all(|&c| (c as u32) <= max_gcode.max(126)));
+        assert!(t.sg_man.iter().all(|&m| m <= (1u32 << cfg.group.m) - 1));
+    });
+}
+
+#[test]
+fn prop_error_bound_nearest() {
+    check("error_bound", |rng| {
+        let shape = shape4(rng, 6);
+        let mut cfg = random_cfg(rng);
+        cfg.rounding = Rounding::Nearest;
+        let x = grouped_tensor(rng, shape);
+        let t = quantize(&x, &shape, &cfg, &[]);
+        let q = t.dequantize();
+        for (idx, (&xi, &qi)) in x.iter().zip(&q).enumerate() {
+            let g = cfg.grouping.group_of(&shape, idx);
+            // one full ulp at the coarsest level of this group: nearest
+            // rounding gives half an ulp except at the top of the range,
+            // where mantissa saturation (Alg. 2 line 13 clip) can cost a
+            // full step for E=0 fixed point.
+            let bound = t.s_t * t.group_scale(g) * 0.5f32.powi(cfg.element.m as i32);
+            assert!(
+                (qi - xi).abs() <= bound * 1.0001 + 1e-9,
+                "idx {idx}: x={xi} q={qi} bound={bound} cfg={}",
+                cfg.name()
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_stochastic_brackets_value() {
+    // stochastic result never moves past one grid step from the input
+    check("stochastic_brackets", |rng| {
+        let shape = shape4(rng, 5);
+        let mut cfg = random_cfg(rng);
+        cfg.rounding = Rounding::Stochastic;
+        let x = grouped_tensor(rng, shape);
+        let r = rng.rounding_offsets(x.len());
+        let q = fake_quant(&x, &shape, &cfg, &r);
+        let t = quantize(&x, &shape, &cfg, &r);
+        for (idx, (&xi, &qi)) in x.iter().zip(&q).enumerate() {
+            let g = cfg.grouping.group_of(&shape, idx);
+            let step = t.s_t * t.group_scale(g) * 0.5f32.powi(cfg.element.m as i32);
+            assert!(
+                (qi - xi).abs() <= step * 1.0001 + 1e-9,
+                "idx {idx}: x={xi} q={qi} step={step}"
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_group_scale_dominance() {
+    // |x| / (S_t * S_g) <= 1 for every element (ceil rounding guarantees it)
+    check("dominance", |rng| {
+        let (x, shape, cfg, t) = quantize_random(rng);
+        if t.s_t == 0.0 {
+            return;
+        }
+        for (idx, &xi) in x.iter().enumerate() {
+            let g = cfg.grouping.group_of(&shape, idx);
+            let xf = xi.abs() / (t.group_scale(g) * t.s_t);
+            assert!(xf <= 1.0 + 1e-6, "idx {idx}: xf={xf}");
+        }
+    });
+}
+
+#[test]
+fn prop_dequantize_fixed_point() {
+    // decoding stored fields reproduces dequantize() exactly
+    check("decode_consistency", |rng| {
+        let (_, _, _, t) = quantize_random(rng);
+        let q = t.dequantize();
+        for idx in 0..t.len() {
+            assert_eq!(q[idx].to_bits(), t.value(idx).to_bits());
+        }
+    });
+}
+
+#[test]
+fn prop_integer_conv_matches_float_conv() {
+    check("int_conv", |rng| {
+        let mut cfg = QuantConfig {
+            element: EmFormat::new(rng.below(3), 1 + rng.below(4)),
+            ..QuantConfig::default()
+        };
+        cfg.rounding = Rounding::Nearest;
+        let ci = 1 + rng.below(4) as usize;
+        let co = 1 + rng.below(4) as usize;
+        let n = 1 + rng.below(2) as usize;
+        let hw = 3 + rng.below(4) as usize;
+        let wshape = [co, ci, 3, 3];
+        let ashape = [n, ci, hw, hw];
+        let w = grouped_tensor(rng, wshape);
+        let a = grouped_tensor(rng, ashape);
+        let tw = quantize(&w, &wshape, &cfg, &[]);
+        let ta = quantize(&a, &ashape, &cfg, &[]);
+        let out = lowbit_conv(&tw, &ta, 1, 1);
+        let (zf, _) = conv2d_f32(&tw.dequantize(), wshape, &ta.dequantize(), ashape, 1, 1);
+        let scale = zf.iter().fold(0.0f32, |m, v| m.max(v.abs())).max(1e-9);
+        for (i, (x, y)) in out.z.iter().zip(&zf).enumerate() {
+            assert!((x - y).abs() / scale < 2e-5, "i={i} {x} vs {y} cfg={}", cfg.name());
+        }
+        // and the accumulator never exceeded the analysis
+        assert!(out.peak_acc_bits <= bitwidth::required_acc_bits(cfg.element, 9));
+    });
+}
+
+#[test]
+fn prop_storage_smaller_than_f32() {
+    check("storage", |rng| {
+        let (_, _, cfg, t) = quantize_random(rng);
+        if t.len() < 16 {
+            return; // constant overhead dominates tiny tensors
+        }
+        if cfg.element_bits() < 16 && t.group_count() * 4 <= t.len() {
+            assert!(t.compression_ratio() > 1.0, "{}", cfg.name());
+        }
+    });
+}
+
+#[test]
+fn prop_exp2i_exact() {
+    check("exp2i", |rng| {
+        let k = rng.below(253) as i32 - 126;
+        let v = format::exp2i(k);
+        assert_eq!(v, 2.0f64.powi(k) as f32);
+    });
+}
