@@ -3,9 +3,11 @@
 import json
 import os
 
+import pytest
+
+pytest.importorskip("jax", reason="XLA-dependent: AOT lowering needs jax")
 import jax
 import jax.numpy as jnp
-import pytest
 
 from compile import aot
 from compile import model as M

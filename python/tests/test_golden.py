@@ -11,6 +11,9 @@ import json
 import os
 
 import numpy as np
+import pytest
+
+pytest.importorskip("jax", reason="XLA-dependent: golden emission needs jax")
 import jax.numpy as jnp
 
 from compile.qconfig import QuantConfig, NAMED

@@ -6,8 +6,11 @@ including a hypothesis sweep over random shapes/configs.
 """
 
 import numpy as np
-import jax.numpy as jnp
 import pytest
+
+pytest.importorskip("jax", reason="XLA-dependent: the Pallas kernel needs jax")
+pytest.importorskip("hypothesis", reason="property sweep needs hypothesis")
+import jax.numpy as jnp
 from hypothesis import given, settings, strategies as st
 
 from compile.qconfig import QuantConfig, NAMED

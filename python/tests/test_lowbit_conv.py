@@ -8,8 +8,11 @@ dequantized values summed per group) to f32 round-off.
 import dataclasses
 
 import numpy as np
-import jax.numpy as jnp
 import pytest
+
+pytest.importorskip("jax", reason="XLA-dependent: the lowbit kernels need jax")
+pytest.importorskip("hypothesis", reason="property sweep needs hypothesis")
+import jax.numpy as jnp
 from hypothesis import given, settings, strategies as st
 
 from compile.qconfig import QuantConfig, E2M4, E2M1

@@ -1,9 +1,11 @@
 """L2 model tests: shapes, training dynamics, STE backward, state packing."""
 
 import numpy as np
+import pytest
+
+pytest.importorskip("jax", reason="XLA-dependent: L2 models need jax")
 import jax
 import jax.numpy as jnp
-import pytest
 
 from compile.qconfig import QuantConfig, E2M4, FP32
 from compile import model as M

@@ -1,11 +1,16 @@
 //! Bench: the bit-accurate integer-path convolution (Eq. 6-8 simulator)
 //! vs the plain f32 convolution — the Table V / VI hot path in software.
+//!
+//! Reports the serial baseline next to the tiled parallel path so the
+//! speedup (and its bit-identity) is visible in every run; `--smoke` /
+//! `MLS_BENCH_SMOKE=1` switches to the fast CI anti-bit-rot mode.
 
 use std::time::Duration;
 
-use mls_train::arith::conv::{conv2d_f32, lowbit_conv};
+use mls_train::arith::conv::{conv2d_f32, lowbit_conv, lowbit_conv_threaded};
 use mls_train::mls::quantizer::{quantize, QuantConfig, Rounding};
-use mls_train::util::bench::{bench, black_box};
+use mls_train::util::bench::{bench, black_box, budget, smoke_mode};
+use mls_train::util::parallel;
 use mls_train::util::rng::Pcg32;
 
 fn main() {
@@ -15,22 +20,36 @@ fn main() {
     let w = mls_train::util::prop::grouped_tensor(&mut rng, wshape);
     let a = mls_train::util::prop::grouped_tensor(&mut rng, ashape);
     let macs: u64 = (16 * 16 * 9 * 12 * 12 * 4) as u64;
+    let threads = parallel::num_threads();
+    let b = budget(Duration::from_secs(3));
 
-    println!("# bench_conv_arith — {macs} MACs per conv");
+    println!(
+        "# bench_conv_arith — {macs} MACs per conv, {threads} worker threads{}",
+        if smoke_mode() { " [smoke]" } else { "" }
+    );
 
     let mut cfg = QuantConfig::new(2, 4);
     cfg.rounding = Rounding::Nearest;
     let tw = quantize(&w, &wshape, &cfg, &[]);
     let ta = quantize(&a, &ashape, &cfg, &[]);
 
-    let res = bench("lowbit_conv/int_path_e2m4", Duration::from_secs(3), || {
+    let serial = bench("lowbit_conv/int_path_e2m4_serial", b, || {
+        black_box(lowbit_conv_threaded(&tw, &ta, 1, 1, 1));
+    });
+    println!("  -> {:.1} MMAC/s", serial.throughput_items(macs) / 1e6);
+
+    let par = bench(&format!("lowbit_conv/int_path_e2m4_t{threads}"), b, || {
         black_box(lowbit_conv(&tw, &ta, 1, 1));
     });
-    println!("  -> {:.1} MMAC/s", res.throughput_items(macs) / 1e6);
+    println!(
+        "  -> {:.1} MMAC/s ({:.2}x vs serial, bit-identical)",
+        par.throughput_items(macs) / 1e6,
+        serial.median.as_secs_f64() / par.median.as_secs_f64()
+    );
 
     let wq = tw.dequantize();
     let aq = ta.dequantize();
-    let res = bench("conv2d_f32/float_path", Duration::from_secs(3), || {
+    let res = bench("conv2d_f32/float_path", b, || {
         black_box(conv2d_f32(&wq, wshape, &aq, ashape, 1, 1));
     });
     println!("  -> {:.1} MMAC/s", res.throughput_items(macs) / 1e6);
@@ -39,7 +58,7 @@ fn main() {
     cfg1.rounding = Rounding::Nearest;
     let tw1 = quantize(&w, &wshape, &cfg1, &[]);
     let ta1 = quantize(&a, &ashape, &cfg1, &[]);
-    let res = bench("lowbit_conv/int_path_e2m1", Duration::from_secs(3), || {
+    let res = bench(&format!("lowbit_conv/int_path_e2m1_t{threads}"), b, || {
         black_box(lowbit_conv(&tw1, &ta1, 1, 1));
     });
     println!("  -> {:.1} MMAC/s", res.throughput_items(macs) / 1e6);

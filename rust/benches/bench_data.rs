@@ -4,13 +4,13 @@
 use std::time::Duration;
 
 use mls_train::data::{streams, DatasetConfig, SynthCifar};
-use mls_train::util::bench::{bench, black_box};
+use mls_train::util::bench::{bench, black_box, budget};
 
 fn main() {
     let ds = SynthCifar::new(DatasetConfig::default());
     println!("# bench_data — synthcifar generation");
     for batch in [32usize, 128] {
-        let res = bench(&format!("batch/{batch}"), Duration::from_secs(2), || {
+        let res = bench(&format!("batch/{batch}"), budget(Duration::from_secs(2)), || {
             black_box(ds.batch(batch, streams::TRAIN, 7));
         });
         let imgs_per_s = res.throughput_items(batch as u64);

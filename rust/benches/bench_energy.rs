@@ -7,18 +7,19 @@ use mls_train::hw::counter::training_energy;
 use mls_train::hw::units::{Arithmetic, EnergyModel};
 use mls_train::mls::format::EmFormat;
 use mls_train::nn::zoo::network;
-use mls_train::util::bench::{bench, black_box};
+use mls_train::util::bench::{bench, black_box, budget};
 
 fn main() {
     let em = EnergyModel::fitted();
+    let b = budget(Duration::from_secs(1));
     println!("# bench_energy — Table VI pipeline per network");
     for name in ["resnet18", "resnet34", "vgg16", "googlenet"] {
         let net = network(name).unwrap();
-        bench(&format!("training_energy/{name}"), Duration::from_secs(1), || {
+        bench(&format!("training_energy/{name}"), b, || {
             black_box(training_energy(&net, 64, Arithmetic::Mls(EmFormat::new(2, 4)), &em));
         });
     }
-    bench("network_build/googlenet", Duration::from_secs(1), || {
+    bench("network_build/googlenet", b, || {
         black_box(network("googlenet").unwrap());
     });
 }

@@ -1,12 +1,16 @@
 //! Bench: MLS dynamic quantization throughput (the DQ overhead row of
 //! Table VI — 4 muls + 2 adds per element on the paper's hardware; here we
 //! measure the software simulator's elements/s on the L3 hot path).
+//!
+//! Reports the serial baseline next to the group-sharded parallel path;
+//! `--smoke` / `MLS_BENCH_SMOKE=1` switches to the fast CI mode.
 
 use std::time::Duration;
 
-use mls_train::mls::quantizer::{fake_quant, quantize, QuantConfig, Rounding};
+use mls_train::mls::quantizer::{fake_quant, quantize, quantize_threaded, QuantConfig, Rounding};
 use mls_train::mls::Grouping;
-use mls_train::util::bench::{bench, black_box};
+use mls_train::util::bench::{bench, black_box, budget, smoke_mode};
+use mls_train::util::parallel;
 use mls_train::util::rng::Pcg32;
 
 fn main() {
@@ -15,27 +19,48 @@ fn main() {
     let n: usize = shape.iter().product();
     let x = mls_train::util::prop::grouped_tensor(&mut rng, shape);
     let r = rng.rounding_offsets(n);
+    let threads = parallel::num_threads();
+    let b = budget(Duration::from_secs(2));
 
-    println!("# bench_quantize — {n} elements ({}x{}x{}x{})", shape[0], shape[1], shape[2], shape[3]);
+    println!(
+        "# bench_quantize — {n} elements ({}x{}x{}x{}), {threads} worker threads{}",
+        shape[0],
+        shape[1],
+        shape[2],
+        shape[3],
+        if smoke_mode() { " [smoke]" } else { "" }
+    );
+
+    // serial vs parallel on the headline config
+    let cfg = QuantConfig::default();
+    let serial = bench("quantize/e2m4_nc_stochastic_serial", b, || {
+        black_box(quantize_threaded(&x, &shape, &cfg, &r, 1));
+    });
+    println!("  -> {:.1} Melem/s", serial.throughput_items(n as u64) / 1e6);
+    let par = bench(&format!("quantize/e2m4_nc_stochastic_t{threads}"), b, || {
+        black_box(quantize(&x, &shape, &cfg, &r));
+    });
+    println!(
+        "  -> {:.1} Melem/s ({:.2}x vs serial, bit-identical)",
+        par.throughput_items(n as u64) / 1e6,
+        serial.median.as_secs_f64() / par.median.as_secs_f64()
+    );
 
     for (name, cfg) in [
-        ("e2m4_nc_stochastic", QuantConfig::default()),
         ("e2m4_nc_nearest", QuantConfig { rounding: Rounding::Nearest, ..Default::default() }),
         ("e2m1_nc_stochastic", QuantConfig::new(2, 1)),
         ("e2m4_none", QuantConfig { grouping: Grouping::None, ..Default::default() }),
+        ("e2m4_second", QuantConfig { grouping: Grouping::Second, ..Default::default() }),
         ("int4_nc", QuantConfig::new(0, 4)),
     ] {
-        let res = bench(&format!("quantize/{name}"), Duration::from_secs(2), || {
+        let res = bench(&format!("quantize/{name}"), b, || {
             black_box(quantize(&x, &shape, &cfg, &r));
         });
-        println!(
-            "  -> {:.1} Melem/s",
-            res.throughput_items(n as u64) / 1e6
-        );
+        println!("  -> {:.1} Melem/s", res.throughput_items(n as u64) / 1e6);
     }
 
     let cfg = QuantConfig::default();
-    let res = bench("fake_quant/e2m4_nc", Duration::from_secs(2), || {
+    let res = bench("fake_quant/e2m4_nc", b, || {
         black_box(fake_quant(&x, &shape, &cfg, &r));
     });
     println!("  -> {:.1} Melem/s", res.throughput_items(n as u64) / 1e6);

@@ -9,10 +9,14 @@ use std::time::Duration;
 
 use mls_train::data::{streams, SynthCifar};
 use mls_train::runtime::Engine;
-use mls_train::util::bench::{bench, black_box};
+use mls_train::util::bench::{bench, black_box, budget};
 
 fn main() {
     println!("# bench_runtime — PJRT step latency");
+    if !cfg!(feature = "pjrt") {
+        println!("skipped: built without the `pjrt` feature (stub engine)");
+        return;
+    }
     let mut engine = match Engine::from_dir("artifacts") {
         Ok(e) => e,
         Err(e) => {
@@ -41,7 +45,7 @@ fn main() {
         let mut state = init.clone();
         engine.train_step(model, cfg, &mut state, &images, &labels, 0, 0.05).unwrap();
         let mut step = 0;
-        let res = bench(&format!("train_step/{model}/{cfg}"), Duration::from_secs(5), || {
+        let res = bench(&format!("train_step/{model}/{cfg}"), budget(Duration::from_secs(5)), || {
             step += 1;
             black_box(
                 engine
@@ -60,7 +64,7 @@ fn main() {
     let state = init.clone();
     if engine.manifest.find(model, "eval_step", "fp32").is_ok() {
         engine.eval_step(model, &state, &images, &labels).unwrap();
-        bench(&format!("eval_step/{model}"), Duration::from_secs(3), || {
+        bench(&format!("eval_step/{model}"), budget(Duration::from_secs(3)), || {
             black_box(engine.eval_step(model, &state, &images, &labels).unwrap());
         });
     }

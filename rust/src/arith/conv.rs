@@ -9,7 +9,9 @@
 use super::group_scale::GroupScaleFactor;
 use super::intra::{intra_group_mac, Element};
 use super::tree::tree_sum;
+use crate::mls::format::EmFormat;
 use crate::mls::{Grouping, MlsTensor};
+use crate::util::parallel;
 
 /// Outcome of an integer-path convolution, with hardware-audit counters.
 pub struct ConvOutput {
@@ -25,10 +27,55 @@ pub struct ConvOutput {
     pub group_scale_ops: u64,
 }
 
+/// Convolution geometry shared by all output tiles.
+#[derive(Clone, Copy)]
+struct ConvDims {
+    ci_n: usize,
+    kh: usize,
+    kw: usize,
+    h: usize,
+    wi: usize,
+    ho: usize,
+    wo: usize,
+    stride: usize,
+    pad: usize,
+}
+
+/// One `(n, co)` output tile: its `[ho, wo]` plane plus the hardware-audit
+/// counters it accumulated.
+struct ConvTile {
+    z: Vec<f32>,
+    peak_bits: u32,
+    muls: u64,
+    iadds: u64,
+    fadds: u64,
+    gscales: u64,
+}
+
 /// `Conv(qW, qA)` on the integer path. `stride`/`pad` as usual; the result
 /// INCLUDES the tensor scales `S_t^w * S_t^a` so it is directly comparable
 /// with a float convolution of the dequantized tensors.
+///
+/// Sharded over `(n, co)` output tiles on the [`crate::util::parallel`]
+/// pool (`MLS_THREADS` workers); see [`lowbit_conv_threaded`] for the
+/// bit-identical-across-thread-counts guarantee.
 pub fn lowbit_conv(w: &MlsTensor, a: &MlsTensor, stride: usize, pad: usize) -> ConvOutput {
+    lowbit_conv_threaded(w, a, stride, pad, parallel::num_threads())
+}
+
+/// [`lowbit_conv`] with an explicit worker count.
+///
+/// Every `(n, co)` tile is computed independently with the exact serial
+/// per-tile operation order, and tile results (values AND counters) are
+/// merged in serial tile order, so the output is bit-identical for every
+/// `threads` value (pinned by `rust/tests/parallel_equivalence.rs`).
+pub fn lowbit_conv_threaded(
+    w: &MlsTensor,
+    a: &MlsTensor,
+    stride: usize,
+    pad: usize,
+    threads: usize,
+) -> ConvOutput {
     assert_eq!(w.shape.len(), 4, "weights must be [Co, Ci, K, K]");
     assert_eq!(a.shape.len(), 4, "activations must be [N, Ci, H, W]");
     assert_eq!(w.cfg.grouping, Grouping::Both);
@@ -39,66 +86,28 @@ pub fn lowbit_conv(w: &MlsTensor, a: &MlsTensor, stride: usize, pad: usize) -> C
     assert_eq!(ci_n, a_ci);
     let ho = (h + 2 * pad - kh) / stride + 1;
     let wo = (wi + 2 * pad - kw) / stride + 1;
+    let dims = ConvDims { ci_n, kh, kw, h, wi, ho, wo, stride, pad };
 
     let fmt = w.cfg.element;
     let st = w.s_t * a.s_t;
-    let mut z = vec![0.0f32; n_n * co_n * ho * wo];
+
+    // shard over (n, co) output tiles; tile index order == serial loop order
+    let tiles = parallel::map_collect(threads, n_n * co_n, |t| {
+        conv_tile(w, a, t / co_n, t % co_n, dims, fmt, st)
+    });
+
+    // merge tiles in serial order: z planes concatenate into the row-major
+    // [N, Co, Ho, Wo] layout; counters sum / max exactly
+    let mut z = Vec::with_capacity(n_n * co_n * ho * wo);
     let mut peak_bits = 0u32;
     let (mut muls, mut iadds, mut fadds, mut gscales) = (0u64, 0u64, 0u64, 0u64);
-
-    // pre-extract element planes for cache-friendly access
-    let elem = |t: &MlsTensor, idx: usize| Element {
-        sign: t.sign[idx],
-        exp_code: t.exp_code[idx],
-        man: t.man[idx],
-    };
-
-    let mut contribs = vec![0.0f32; ci_n];
-    let mut wbuf: Vec<Element> = Vec::with_capacity(kh * kw);
-    let mut abuf: Vec<Element> = Vec::with_capacity(kh * kw);
-
-    for n in 0..n_n {
-        for co in 0..co_n {
-            for oy in 0..ho {
-                for ox in 0..wo {
-                    for (ci, contrib) in contribs.iter_mut().enumerate() {
-                        wbuf.clear();
-                        abuf.clear();
-                        for i in 0..kh {
-                            for j in 0..kw {
-                                let iy = (oy * stride + i) as isize - pad as isize;
-                                let ix = (ox * stride + j) as isize - pad as isize;
-                                if iy < 0 || ix < 0 || iy >= h as isize || ix >= wi as isize {
-                                    continue; // zero padding contributes nothing
-                                }
-                                let widx = ((co * ci_n + ci) * kh + i) * kw + j;
-                                let aidx =
-                                    ((n * ci_n + ci) * h + iy as usize) * wi + ix as usize;
-                                wbuf.push(elem(w, widx));
-                                abuf.push(elem(a, aidx));
-                            }
-                        }
-                        let ps = intra_group_mac(&wbuf, &abuf, fmt);
-                        peak_bits = peak_bits.max(ps.peak_bits());
-                        muls += wbuf.len() as u64;
-                        iadds += wbuf.len() as u64;
-                        let wg = co * ci_n + ci;
-                        let ag = n * ci_n + ci;
-                        let factor = GroupScaleFactor::combine(
-                            w.sg_exp[wg],
-                            w.sg_man[wg],
-                            a.sg_exp[ag],
-                            a.sg_man[ag],
-                        );
-                        gscales += 1;
-                        *contrib = factor.apply(ps.p, ps.scale_log2);
-                    }
-                    fadds += (ci_n - 1) as u64;
-                    let zi = ((n * co_n + co) * ho + oy) * wo + ox;
-                    z[zi] = st * tree_sum(&contribs);
-                }
-            }
-        }
+    for tile in tiles {
+        z.extend_from_slice(&tile.z);
+        peak_bits = peak_bits.max(tile.peak_bits);
+        muls += tile.muls;
+        iadds += tile.iadds;
+        fadds += tile.fadds;
+        gscales += tile.gscales;
     }
 
     ConvOutput {
@@ -110,6 +119,67 @@ pub fn lowbit_conv(w: &MlsTensor, a: &MlsTensor, stride: usize, pad: usize) -> C
         float_add_ops: fadds,
         group_scale_ops: gscales,
     }
+}
+
+/// Compute one `(n, co)` output tile: intra-MAC -> group scale -> tree over
+/// every output pixel of the tile, with per-tile audit counters.
+fn conv_tile(
+    w: &MlsTensor,
+    a: &MlsTensor,
+    n: usize,
+    co: usize,
+    d: ConvDims,
+    fmt: EmFormat,
+    st: f32,
+) -> ConvTile {
+    let ConvDims { ci_n, kh, kw, h, wi, ho, wo, stride, pad } = d;
+    let mut z = vec![0.0f32; ho * wo];
+    let mut peak_bits = 0u32;
+    let (mut muls, mut iadds, mut fadds, mut gscales) = (0u64, 0u64, 0u64, 0u64);
+
+    let mut contribs = vec![0.0f32; ci_n];
+    let mut wbuf: Vec<Element> = Vec::with_capacity(kh * kw);
+    let mut abuf: Vec<Element> = Vec::with_capacity(kh * kw);
+
+    for oy in 0..ho {
+        for ox in 0..wo {
+            for (ci, contrib) in contribs.iter_mut().enumerate() {
+                wbuf.clear();
+                abuf.clear();
+                for i in 0..kh {
+                    for j in 0..kw {
+                        let iy = (oy * stride + i) as isize - pad as isize;
+                        let ix = (ox * stride + j) as isize - pad as isize;
+                        if iy < 0 || ix < 0 || iy >= h as isize || ix >= wi as isize {
+                            continue; // zero padding contributes nothing
+                        }
+                        let widx = ((co * ci_n + ci) * kh + i) * kw + j;
+                        let aidx = ((n * ci_n + ci) * h + iy as usize) * wi + ix as usize;
+                        wbuf.push(Element::of(w, widx));
+                        abuf.push(Element::of(a, aidx));
+                    }
+                }
+                let ps = intra_group_mac(&wbuf, &abuf, fmt);
+                peak_bits = peak_bits.max(ps.peak_bits());
+                muls += wbuf.len() as u64;
+                iadds += wbuf.len() as u64;
+                let wg = co * ci_n + ci;
+                let ag = n * ci_n + ci;
+                let factor = GroupScaleFactor::combine(
+                    w.sg_exp[wg],
+                    w.sg_man[wg],
+                    a.sg_exp[ag],
+                    a.sg_man[ag],
+                );
+                gscales += 1;
+                *contrib = factor.apply(ps.p, ps.scale_log2);
+            }
+            fadds += (ci_n - 1) as u64;
+            z[oy * wo + ox] = st * tree_sum(&contribs);
+        }
+    }
+
+    ConvTile { z, peak_bits, muls, iadds, fadds, gscales }
 }
 
 /// Reference: plain f32 convolution (NCHW x OIHW), used for the float path

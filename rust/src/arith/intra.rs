@@ -13,6 +13,7 @@
 //! win over FP8's floating-point local accumulation.
 
 use crate::mls::format::EmFormat;
+use crate::mls::MlsTensor;
 
 /// Stored fields of one element, as the hardware sees them.
 #[derive(Clone, Copy, Debug)]
@@ -23,6 +24,12 @@ pub struct Element {
 }
 
 impl Element {
+    /// Read the stored fields of element `idx` of an MLS tensor.
+    #[inline]
+    pub fn of(t: &MlsTensor, idx: usize) -> Element {
+        Element { sign: t.sign[idx], exp_code: t.exp_code[idx], man: t.man[idx] }
+    }
+
     /// (M+1)-bit integer fraction: man + 2^M when normal, man when subnormal.
     #[inline]
     pub fn frac_int(&self, fmt: EmFormat) -> i64 {

@@ -12,6 +12,7 @@ use super::format::{self, EmFormat};
 use super::grouping::Grouping;
 use super::tensor::MlsTensor;
 use crate::util::json::Json;
+use crate::util::parallel;
 
 /// Rounding mode (Alg. 2 line 13).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
@@ -135,7 +136,28 @@ impl QuantConfig {
 ///
 /// `rounding_offsets` must have one U[-1/2, 1/2) value per element when the
 /// config says stochastic (pass `&[]` for nearest — it is ignored).
+///
+/// The group-maxima and element passes are sharded over scaling groups on
+/// the [`crate::util::parallel`] pool (`MLS_THREADS` workers); see
+/// [`quantize_threaded`] for the bit-identity guarantee.
 pub fn quantize(x: &[f32], shape: &[usize], cfg: &QuantConfig, rounding_offsets: &[f32]) -> MlsTensor {
+    quantize_threaded(x, shape, cfg, rounding_offsets, parallel::num_threads())
+}
+
+/// [`quantize`] with an explicit worker count.
+///
+/// Groups (and, for the strided `Second` grouping, elements) are
+/// independent given the tensor scale, and that scale is reduced in the
+/// same group order regardless of sharding, so the output is bit-identical
+/// for every `threads` value (pinned by
+/// `rust/tests/parallel_equivalence.rs`).
+pub fn quantize_threaded(
+    x: &[f32],
+    shape: &[usize],
+    cfg: &QuantConfig,
+    rounding_offsets: &[f32],
+    threads: usize,
+) -> MlsTensor {
     let n: usize = shape.iter().product::<usize>().max(1);
     assert_eq!(x.len(), n, "shape/element mismatch");
     let stochastic = cfg.rounding == Rounding::Stochastic;
@@ -153,16 +175,23 @@ pub fn quantize(x: &[f32], shape: &[usize], cfg: &QuantConfig, rounding_offsets:
     let contiguous = !matches!(cfg.grouping, Grouping::Second);
 
     // group maxima S_r and tensor max S_t (Alg. 2 lines 1-3)
-    let mut s_r = vec![0.0f32; n_groups];
-    if contiguous {
-        for (g, chunk) in x.chunks_exact(group_len).enumerate() {
-            let mut m = 0.0f32;
-            for &v in chunk {
-                m = m.max(v.abs());
+    let s_r: Vec<f32> = if contiguous {
+        // one max per contiguous group chunk, sharded over group ranges
+        parallel::map_ranges(threads, n_groups, |lo, hi| {
+            let mut part = Vec::with_capacity(hi - lo);
+            for g in lo..hi {
+                let chunk = &x[g * group_len..(g + 1) * group_len];
+                let mut m = 0.0f32;
+                for &v in chunk {
+                    m = m.max(v.abs());
+                }
+                part.push(m);
             }
-            s_r[g] = m;
-        }
+            part
+        })
+        .concat()
     } else {
+        let mut s_r = vec![0.0f32; n_groups];
         for (idx, &v) in x.iter().enumerate() {
             let g = cfg.grouping.group_of(shape, idx);
             let a = v.abs();
@@ -170,11 +199,12 @@ pub fn quantize(x: &[f32], shape: &[usize], cfg: &QuantConfig, rounding_offsets:
                 s_r[g] = a;
             }
         }
-    }
+        s_r
+    };
     let s_t = s_r.iter().cloned().fold(0.0f32, f32::max);
     let s_t_safe = if s_t > 0.0 { s_t } else { 1.0 };
 
-    // group scales (lines 4-8)
+    // group scales (lines 4-8) — O(n_groups), kept serial
     let mut sg_exp = vec![0u8; n_groups];
     let mut sg_man = vec![0u32; n_groups];
     let mut sg_val = vec![0.0f32; n_groups];
@@ -186,13 +216,10 @@ pub fn quantize(x: &[f32], shape: &[usize], cfg: &QuantConfig, rounding_offsets:
         sg_val[g] = format::group_scale_value(c, m, cfg.group);
     }
 
-    // elements (lines 9-16)
-    let mut sign = vec![0i8; n];
-    let mut exp_code = vec![0u8; n];
-    let mut man = vec![0u32; n];
+    // elements (lines 9-16) — per element, independent given its group scale
     let fmt = cfg.element;
-    let mut quantize_one = |idx: usize, v: f32, sg: f32| {
-        sign[idx] = if v > 0.0 {
+    let quantize_one = |idx: usize, v: f32, sg: f32| -> (i8, u8, u32) {
+        let s = if v > 0.0 {
             1
         } else if v < 0.0 {
             -1
@@ -203,22 +230,66 @@ pub fn quantize(x: &[f32], shape: &[usize], cfg: &QuantConfig, rounding_offsets:
         let xf = v.abs() / (sg * s_t_safe);
         let r = if stochastic { rounding_offsets[idx] } else { 0.0 };
         let (c, mm) = format::quantize_element(xf, fmt, r);
-        exp_code[idx] = c;
-        man[idx] = mm;
+        (s, c, mm)
     };
-    if contiguous {
-        for (g, chunk) in x.chunks_exact(group_len).enumerate() {
-            let sg = sg_val[g];
-            let base = g * group_len;
-            for (off, &v) in chunk.iter().enumerate() {
-                quantize_one(base + off, v, sg);
+    let parts: Vec<(Vec<i8>, Vec<u8>, Vec<u32>)> = if contiguous && n_groups >= threads {
+        // shard over group ranges so each worker walks whole chunks
+        parallel::map_ranges(threads, n_groups, |lo, hi| {
+            let len = (hi - lo) * group_len;
+            let mut sv = Vec::with_capacity(len);
+            let mut cv = Vec::with_capacity(len);
+            let mut mv = Vec::with_capacity(len);
+            for g in lo..hi {
+                let sg = sg_val[g];
+                let base = g * group_len;
+                for (off, &v) in x[base..base + group_len].iter().enumerate() {
+                    let (s, c, m) = quantize_one(base + off, v, sg);
+                    sv.push(s);
+                    cv.push(c);
+                    mv.push(m);
+                }
             }
-        }
+            (sv, cv, mv)
+        })
+    } else if contiguous {
+        // fewer groups than workers (e.g. Grouping::None has exactly one):
+        // shard over flat element ranges; the group of element idx is
+        // idx / group_len for every contiguous grouping
+        parallel::map_ranges(threads, n, |lo, hi| {
+            let mut sv = Vec::with_capacity(hi - lo);
+            let mut cv = Vec::with_capacity(hi - lo);
+            let mut mv = Vec::with_capacity(hi - lo);
+            for (idx, &v) in x[lo..hi].iter().enumerate().map(|(o, v)| (lo + o, v)) {
+                let (s, c, m) = quantize_one(idx, v, sg_val[idx / group_len]);
+                sv.push(s);
+                cv.push(c);
+                mv.push(m);
+            }
+            (sv, cv, mv)
+        })
     } else {
-        for (idx, &v) in x.iter().enumerate() {
-            let g = cfg.grouping.group_of(shape, idx);
-            quantize_one(idx, v, sg_val[g]);
-        }
+        // strided groups: shard over flat element ranges instead
+        parallel::map_ranges(threads, n, |lo, hi| {
+            let mut sv = Vec::with_capacity(hi - lo);
+            let mut cv = Vec::with_capacity(hi - lo);
+            let mut mv = Vec::with_capacity(hi - lo);
+            for (idx, &v) in x[lo..hi].iter().enumerate().map(|(o, v)| (lo + o, v)) {
+                let g = cfg.grouping.group_of(shape, idx);
+                let (s, c, m) = quantize_one(idx, v, sg_val[g]);
+                sv.push(s);
+                cv.push(c);
+                mv.push(m);
+            }
+            (sv, cv, mv)
+        })
+    };
+    let mut sign = Vec::with_capacity(n);
+    let mut exp_code = Vec::with_capacity(n);
+    let mut man = Vec::with_capacity(n);
+    for (sv, cv, mv) in parts {
+        sign.extend(sv);
+        exp_code.extend(cv);
+        man.extend(mv);
     }
 
     MlsTensor {

@@ -3,6 +3,7 @@
 
 use super::format;
 use super::quantizer::QuantConfig;
+use crate::util::parallel;
 
 /// A tensor in the MLS format (paper Fig. 5): `X = S_s * S_t * S_g * Xbar`.
 #[derive(Clone, Debug)]
@@ -53,7 +54,15 @@ impl MlsTensor {
     }
 
     /// Dequantize the whole tensor (ref.mls_quantize_fields "q").
+    ///
+    /// Sharded over scaling groups on the [`crate::util::parallel`] pool;
+    /// bit-identical for every worker count (elements are independent).
     pub fn dequantize(&self) -> Vec<f32> {
+        self.dequantize_threaded(parallel::num_threads())
+    }
+
+    /// [`Self::dequantize`] with an explicit worker count.
+    pub fn dequantize_threaded(&self, threads: usize) -> Vec<f32> {
         let n = self.len();
         let mut sg_cache: Vec<f32> = (0..self.group_count()).map(|g| self.group_scale(g)).collect();
         if self.s_t == 0.0 {
@@ -62,26 +71,47 @@ impl MlsTensor {
         for s in sg_cache.iter_mut() {
             *s = self.s_t * *s; // hoist s_t * s_g per group
         }
-        let mut out = Vec::with_capacity(n);
-        if !matches!(self.cfg.grouping, super::Grouping::Second) {
+        let contiguous = !matches!(self.cfg.grouping, super::Grouping::Second);
+        let parts: Vec<Vec<f32>> = if contiguous && self.group_count() >= threads {
             // contiguous groups: chunk-wise walk avoids per-element divides
             let group_len = self.cfg.grouping.group_len(&self.shape);
-            for g in 0..self.group_count() {
-                let sg = sg_cache[g];
-                let base = g * group_len;
-                for idx in base..base + group_len {
-                    let xbar = self.cfg.element.decode(self.exp_code[idx], self.man[idx]);
-                    out.push(self.sign[idx] as f32 * sg * xbar);
+            parallel::map_ranges(threads, self.group_count(), |lo, hi| {
+                let mut out = Vec::with_capacity((hi - lo) * group_len);
+                for g in lo..hi {
+                    let sg = sg_cache[g];
+                    let base = g * group_len;
+                    for idx in base..base + group_len {
+                        let xbar = self.cfg.element.decode(self.exp_code[idx], self.man[idx]);
+                        out.push(self.sign[idx] as f32 * sg * xbar);
+                    }
                 }
-            }
+                out
+            })
+        } else if contiguous {
+            // fewer groups than workers (e.g. Grouping::None): shard over
+            // flat element ranges, group of idx is idx / group_len
+            let group_len = self.cfg.grouping.group_len(&self.shape);
+            parallel::map_ranges(threads, n, |lo, hi| {
+                let mut out = Vec::with_capacity(hi - lo);
+                for idx in lo..hi {
+                    let xbar = self.cfg.element.decode(self.exp_code[idx], self.man[idx]);
+                    out.push(self.sign[idx] as f32 * sg_cache[idx / group_len] * xbar);
+                }
+                out
+            })
         } else {
-            for idx in 0..n {
-                let g = self.cfg.grouping.group_of(&self.shape, idx);
-                let xbar = self.cfg.element.decode(self.exp_code[idx], self.man[idx]);
-                out.push(self.sign[idx] as f32 * sg_cache[g] * xbar);
-            }
-        }
-        out
+            // strided groups: shard over flat element ranges instead
+            parallel::map_ranges(threads, n, |lo, hi| {
+                let mut out = Vec::with_capacity(hi - lo);
+                for idx in lo..hi {
+                    let g = self.cfg.grouping.group_of(&self.shape, idx);
+                    let xbar = self.cfg.element.decode(self.exp_code[idx], self.man[idx]);
+                    out.push(self.sign[idx] as f32 * sg_cache[g] * xbar);
+                }
+                out
+            })
+        };
+        parts.concat()
     }
 
     /// Stored size in bits: elements (sign+E+M) + group scales (E_g+M_g) +

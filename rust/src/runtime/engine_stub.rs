@@ -1,0 +1,135 @@
+//! Stub execution engine, compiled when the `pjrt` feature is OFF.
+//!
+//! The real engine (`engine.rs`) wraps the external `xla` crate, which
+//! needs a prebuilt xla_extension that the hermetic build environment
+//! cannot supply. This stub keeps the full API surface — manifest loading,
+//! artifact listing, the typed step signatures — so the coordinator, CLI,
+//! benches and examples all build and degrade gracefully: anything that
+//! would actually dispatch to PJRT returns a descriptive error instead.
+
+use std::time::Duration;
+
+use anyhow::{bail, Result};
+
+use super::manifest::Manifest;
+
+/// Output of one train step.
+#[derive(Clone, Debug)]
+pub struct StepOutput {
+    pub loss: f32,
+    pub acc: f32,
+}
+
+/// A borrowed, typed input buffer.
+pub enum Input<'a> {
+    F32(&'a [f32]),
+    I32(&'a [i32]),
+}
+
+/// Manifest-only engine: execution requires the `pjrt` feature.
+pub struct Engine {
+    pub manifest: Manifest,
+    /// cumulative device-execution time (always zero in the stub)
+    pub exec_time: Duration,
+    pub exec_steps: u64,
+}
+
+fn unavailable(what: &str) -> anyhow::Error {
+    anyhow::anyhow!(
+        "{what} needs the PJRT runtime, but mls_train was built without the \
+         `pjrt` cargo feature (the external `xla` crate is not vendored — \
+         see README \"PJRT backend\")"
+    )
+}
+
+impl Engine {
+    pub fn new(manifest: Manifest) -> Result<Engine> {
+        Ok(Engine { manifest, exec_time: Duration::ZERO, exec_steps: 0 })
+    }
+
+    pub fn from_dir(dir: impl AsRef<std::path::Path>) -> Result<Engine> {
+        Engine::new(Manifest::load(dir)?)
+    }
+
+    /// Execute an artifact — always an error in the stub.
+    pub fn execute(
+        &mut self,
+        model: &str,
+        fn_kind: &str,
+        cfg_name: &str,
+        inputs: &[Input<'_>],
+    ) -> Result<Vec<Vec<f32>>> {
+        // validate what we can without a device, so callers still get the
+        // manifest-level errors the real engine would surface first
+        let art = self.manifest.find(model, fn_kind, cfg_name)?;
+        anyhow::ensure!(
+            inputs.len() == art.inputs.len(),
+            "{}: expected {} inputs, got {}",
+            art.name,
+            art.inputs.len(),
+            inputs.len()
+        );
+        bail!("{}", unavailable(&format!("executing {}", art.name)))
+    }
+
+    /// One training step — always an error in the stub.
+    pub fn train_step(
+        &mut self,
+        model: &str,
+        cfg_name: &str,
+        _state: &mut Vec<f32>,
+        _images: &[f32],
+        _labels: &[i32],
+        _seed: i32,
+        _lr: f32,
+    ) -> Result<StepOutput> {
+        Err(unavailable(&format!("train_step {model}/{cfg_name}")))
+    }
+
+    /// Evaluation step — always an error in the stub.
+    pub fn eval_step(
+        &mut self,
+        model: &str,
+        _state: &[f32],
+        _images: &[f32],
+        _labels: &[i32],
+    ) -> Result<StepOutput> {
+        Err(unavailable(&format!("eval_step {model}")))
+    }
+
+    /// Probe step — always an error in the stub.
+    pub fn probe_step(
+        &mut self,
+        model: &str,
+        cfg_name: &str,
+        _state: &[f32],
+        _images: &[f32],
+        _labels: &[i32],
+        _seed: i32,
+    ) -> Result<Vec<Vec<f32>>> {
+        Err(unavailable(&format!("probe_step {model}/{cfg_name}")))
+    }
+
+    /// Mean device time per executed step (zero in the stub).
+    pub fn mean_exec_time(&self) -> Duration {
+        Duration::ZERO
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_reports_feature_gate() {
+        let e = unavailable("train_step resnet_t/fp32");
+        let msg = format!("{e:#}");
+        assert!(msg.contains("pjrt"), "{msg}");
+    }
+
+    #[test]
+    fn from_missing_dir_still_errors_on_manifest() {
+        let err = Engine::from_dir("/nonexistent/path").unwrap_err();
+        assert!(format!("{err:#}").contains("make artifacts"));
+    }
+}

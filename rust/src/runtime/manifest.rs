@@ -270,7 +270,8 @@ mod tests {
     use super::*;
 
     fn artifacts_dir() -> PathBuf {
-        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+        // artifacts/ lives at the repo root, one level above the rust package
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("..").join("artifacts")
     }
 
     #[test]

@@ -13,6 +13,26 @@ pub fn black_box<T>(x: T) -> T {
     std::hint::black_box(x)
 }
 
+/// True when the benches should run a fast smoke pass (CI anti-bit-rot
+/// mode): enabled by a `--smoke` CLI flag or `MLS_BENCH_SMOKE=1`.
+pub fn smoke_mode() -> bool {
+    std::env::args().any(|a| a == "--smoke")
+        || std::env::var("MLS_BENCH_SMOKE")
+            .map(|v| !v.is_empty() && v != "0")
+            .unwrap_or(false)
+}
+
+/// The measurement budget benches should use: `full` normally, a ~50 ms
+/// slice in smoke mode (still >= 10 samples, enough to prove the kernel
+/// runs and reports).
+pub fn budget(full: Duration) -> Duration {
+    if smoke_mode() {
+        Duration::from_millis(50)
+    } else {
+        full
+    }
+}
+
 pub struct BenchResult {
     pub name: String,
     pub median: Duration,

@@ -11,11 +11,16 @@
 //! * [`prop`] — a mini property-testing harness (randomized invariants
 //!   with seed reporting on failure),
 //! * [`bench`] — a measured-section micro-bench harness used by the
-//!   `cargo bench` targets (median-of-runs with warmup),
-//! * [`stats`] — summary statistics shared by metrics and benches.
+//!   `cargo bench` targets (median-of-runs with warmup, plus the CI smoke
+//!   mode),
+//! * [`stats`] — summary statistics shared by metrics and benches,
+//! * [`parallel`] — deterministic scoped-thread fork/join for the hot
+//!   kernels (rayon is not available offline), with an `MLS_THREADS`
+//!   override.
 
 pub mod bench;
 pub mod json;
+pub mod parallel;
 pub mod prop;
 pub mod rng;
 pub mod stats;

@@ -1,0 +1,138 @@
+//! Deterministic data-parallel execution for the MLS hot kernels.
+//!
+//! The build environment only guarantees the Rust toolchain (no rayon), so
+//! this is a small scoped-thread fork/join layer with the two shapes the
+//! kernels need:
+//!
+//! * [`map_ranges`] — split `0..n` into at most `threads` contiguous
+//!   ranges, run one worker per range, return the per-range results in
+//!   range order,
+//! * [`map_collect`] — order-preserving parallel map over `0..n`.
+//!
+//! Work is assigned statically (contiguous chunks), so for a fixed input
+//! the set of per-item computations is independent of the thread count and
+//! results are **bit-identical** for every `threads` value — the property
+//! `rust/tests/parallel_equivalence.rs` pins down for the conv/quantize
+//! kernels.
+//!
+//! The default worker count is `available_parallelism()`, overridable with
+//! the `MLS_THREADS` environment variable (e.g. `MLS_THREADS=1` forces the
+//! serial path).
+
+use std::sync::OnceLock;
+
+/// Worker count: `MLS_THREADS` if set to a positive integer, else the
+/// machine's available parallelism.
+pub fn num_threads() -> usize {
+    if let Ok(v) = std::env::var("MLS_THREADS") {
+        if let Ok(n) = v.trim().parse::<usize>() {
+            if n >= 1 {
+                return n;
+            }
+        }
+    }
+    static DEFAULT: OnceLock<usize> = OnceLock::new();
+    *DEFAULT.get_or_init(|| {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    })
+}
+
+/// Split `0..n` into at most `threads` contiguous ranges and run
+/// `f(lo, hi)` on each, one worker per range. Results come back in range
+/// order. With `threads <= 1` (or a single range) everything runs on the
+/// calling thread.
+pub fn map_ranges<T, F>(threads: usize, n: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize, usize) -> T + Sync,
+{
+    if n == 0 {
+        return Vec::new();
+    }
+    let threads = threads.clamp(1, n);
+    if threads == 1 {
+        return vec![f(0, n)];
+    }
+    let chunk = n.div_ceil(threads);
+    let ranges: Vec<(usize, usize)> = (0..threads)
+        .map(|t| (t * chunk, ((t + 1) * chunk).min(n)))
+        .filter(|&(lo, hi)| lo < hi)
+        .collect();
+    let mut out = Vec::with_capacity(ranges.len());
+    std::thread::scope(|s| {
+        let f = &f;
+        let handles: Vec<_> = ranges
+            .into_iter()
+            .map(|(lo, hi)| s.spawn(move || f(lo, hi)))
+            .collect();
+        for h in handles {
+            match h.join() {
+                Ok(v) => out.push(v),
+                // rethrow with the original payload so kernel assertions
+                // read the same as on the serial path
+                Err(payload) => std::panic::resume_unwind(payload),
+            }
+        }
+    });
+    out
+}
+
+/// Order-preserving parallel map over `0..n`.
+pub fn map_collect<T, F>(threads: usize, n: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    if threads <= 1 || n <= 1 {
+        return (0..n).map(f).collect();
+    }
+    let parts = map_ranges(threads, n, |lo, hi| (lo..hi).map(&f).collect::<Vec<T>>());
+    let mut out = Vec::with_capacity(n);
+    for p in parts {
+        out.extend(p);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn num_threads_positive() {
+        assert!(num_threads() >= 1);
+    }
+
+    #[test]
+    fn map_collect_preserves_order() {
+        for threads in [1usize, 2, 3, 8, 64] {
+            let got = map_collect(threads, 100, |i| i * i);
+            let want: Vec<usize> = (0..100).map(|i| i * i).collect();
+            assert_eq!(got, want, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn map_ranges_tiles_exactly() {
+        for threads in [1usize, 2, 5, 7, 16] {
+            for n in [0usize, 1, 2, 9, 100] {
+                let ranges = map_ranges(threads, n, |lo, hi| (lo, hi));
+                // ranges are contiguous, ordered, non-empty and cover 0..n
+                let mut cursor = 0;
+                for (lo, hi) in &ranges {
+                    assert_eq!(*lo, cursor);
+                    assert!(lo < hi);
+                    cursor = *hi;
+                }
+                assert_eq!(cursor, n, "threads={threads} n={n}");
+                assert!(ranges.len() <= threads.max(1));
+            }
+        }
+    }
+
+    #[test]
+    fn map_ranges_empty_input() {
+        let out: Vec<(usize, usize)> = map_ranges(4, 0, |lo, hi| (lo, hi));
+        assert!(out.is_empty());
+    }
+}

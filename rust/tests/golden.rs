@@ -10,7 +10,13 @@ use mls_train::util::json::Json;
 use mls_train::util::stats;
 
 fn golden_dir() -> PathBuf {
-    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts").join("golden")
+    // artifacts/ lives at the repo root (one level above the rust package),
+    // where python/tests/test_golden.py writes it; the golden set is also
+    // checked in so this test always runs.
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("..")
+        .join("artifacts")
+        .join("golden")
 }
 
 fn load(name: &str) -> Option<Json> {

@@ -1,0 +1,118 @@
+//! Serial-vs-parallel equivalence: the tiled/sharded hot kernels must be
+//! BIT-IDENTICAL across worker counts — outputs, tensor/group scales and
+//! the hardware-audit op counters alike. This is what lets the parallel
+//! execution layer serve the paper's bit-accurate simulator: threading is
+//! purely a scheduling choice, never a numerics choice.
+
+use mls_train::arith::conv::{lowbit_conv, lowbit_conv_threaded, ConvOutput};
+use mls_train::mls::quantizer::{quantize, quantize_threaded, QuantConfig, Rounding};
+use mls_train::mls::{Grouping, MlsTensor};
+use mls_train::util::prop::grouped_tensor;
+use mls_train::util::rng::Pcg32;
+
+const THREAD_COUNTS: [usize; 3] = [1, 2, 8];
+
+fn assert_tensors_identical(a: &MlsTensor, b: &MlsTensor, tag: &str) {
+    assert_eq!(a.shape, b.shape, "{tag}: shape");
+    assert_eq!(a.s_t.to_bits(), b.s_t.to_bits(), "{tag}: s_t");
+    assert_eq!(a.sign, b.sign, "{tag}: sign plane");
+    assert_eq!(a.exp_code, b.exp_code, "{tag}: exponent plane");
+    assert_eq!(a.man, b.man, "{tag}: mantissa plane");
+    assert_eq!(a.sg_exp, b.sg_exp, "{tag}: group scale exponents");
+    assert_eq!(a.sg_man, b.sg_man, "{tag}: group scale mantissas");
+}
+
+fn assert_convs_identical(a: &ConvOutput, b: &ConvOutput, tag: &str) {
+    assert_eq!(a.shape, b.shape, "{tag}: shape");
+    assert_eq!(a.z.len(), b.z.len(), "{tag}: z length");
+    for (i, (x, y)) in a.z.iter().zip(&b.z).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{tag}: z[{i}] {x} vs {y}");
+    }
+    assert_eq!(a.peak_acc_bits, b.peak_acc_bits, "{tag}: peak_acc_bits");
+    assert_eq!(a.mul_ops, b.mul_ops, "{tag}: mul_ops");
+    assert_eq!(a.int_add_ops, b.int_add_ops, "{tag}: int_add_ops");
+    assert_eq!(a.float_add_ops, b.float_add_ops, "{tag}: float_add_ops");
+    assert_eq!(a.group_scale_ops, b.group_scale_ops, "{tag}: group_scale_ops");
+}
+
+#[test]
+fn quantize_identical_across_thread_counts() {
+    let mut rng = Pcg32::seeded(101);
+    let shape = [8usize, 12, 5, 5];
+    let x = grouped_tensor(&mut rng, shape);
+    let r = rng.rounding_offsets(x.len());
+
+    let configs = [
+        QuantConfig::default(), // <2,4> nc stochastic
+        QuantConfig { rounding: Rounding::Nearest, ..QuantConfig::new(2, 1) },
+        QuantConfig { grouping: Grouping::Second, ..QuantConfig::default() },
+        QuantConfig { grouping: Grouping::First, ..QuantConfig::new(0, 4) },
+        QuantConfig { grouping: Grouping::None, ..QuantConfig::default() },
+    ];
+    for cfg in configs {
+        let offsets: &[f32] = if cfg.rounding == Rounding::Stochastic { &r } else { &[] };
+        let serial = quantize_threaded(&x, &shape, &cfg, offsets, 1);
+        for threads in THREAD_COUNTS {
+            let par = quantize_threaded(&x, &shape, &cfg, offsets, threads);
+            let tag = format!("{} @ {threads} threads", cfg.name());
+            assert_tensors_identical(&serial, &par, &tag);
+            // dequantization must agree bit-for-bit too
+            let qs = serial.dequantize_threaded(1);
+            let qp = par.dequantize_threaded(threads);
+            for (i, (a, b)) in qs.iter().zip(&qp).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(), "{tag}: q[{i}]");
+            }
+        }
+    }
+}
+
+#[test]
+fn lowbit_conv_identical_across_thread_counts() {
+    let mut rng = Pcg32::seeded(102);
+    let wshape = [6usize, 5, 3, 3];
+    let ashape = [4usize, 5, 7, 7];
+    let w = grouped_tensor(&mut rng, wshape);
+    let a = grouped_tensor(&mut rng, ashape);
+
+    for (e, m) in [(2u32, 4u32), (2, 1), (0, 4)] {
+        let mut cfg = QuantConfig::new(e, m);
+        cfg.rounding = Rounding::Nearest;
+        let tw = quantize(&w, &wshape, &cfg, &[]);
+        let ta = quantize(&a, &ashape, &cfg, &[]);
+        let serial = lowbit_conv_threaded(&tw, &ta, 1, 1, 1);
+        for threads in THREAD_COUNTS {
+            let par = lowbit_conv_threaded(&tw, &ta, 1, 1, threads);
+            assert_convs_identical(&serial, &par, &format!("<{e},{m}> @ {threads} threads"));
+        }
+        // stride-2, pad-0 geometry as well (clipped windows change counters)
+        let s2 = lowbit_conv_threaded(&tw, &ta, 2, 0, 1);
+        for threads in THREAD_COUNTS {
+            let p2 = lowbit_conv_threaded(&tw, &ta, 2, 0, threads);
+            assert_convs_identical(&s2, &p2, &format!("<{e},{m}> s2 @ {threads} threads"));
+        }
+    }
+}
+
+#[test]
+fn default_entry_points_match_explicit_serial() {
+    // the MLS_THREADS-driven defaults must be a pure scheduling choice:
+    // whatever the ambient thread count, results equal the serial path
+    let mut rng = Pcg32::seeded(103);
+    let shape = [4usize, 6, 4, 4];
+    let x = grouped_tensor(&mut rng, shape);
+    let r = rng.rounding_offsets(x.len());
+    let cfg = QuantConfig::default();
+
+    let t_default = quantize(&x, &shape, &cfg, &r);
+    let t_serial = quantize_threaded(&x, &shape, &cfg, &r, 1);
+    assert_tensors_identical(&t_serial, &t_default, "default quantize");
+
+    let wshape = [3usize, 6, 3, 3];
+    let mut ncfg = QuantConfig::new(2, 4);
+    ncfg.rounding = Rounding::Nearest;
+    let tw = quantize(&grouped_tensor(&mut rng, wshape), &wshape, &ncfg, &[]);
+    let ta = quantize(&x, &shape, &ncfg, &[]);
+    let c_default = lowbit_conv(&tw, &ta, 1, 1);
+    let c_serial = lowbit_conv_threaded(&tw, &ta, 1, 1, 1);
+    assert_convs_identical(&c_serial, &c_default, "default conv");
+}

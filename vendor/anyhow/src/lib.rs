@@ -1,0 +1,217 @@
+//! Minimal, dependency-free stand-in for the `anyhow` error crate.
+//!
+//! The build environment for this repository only guarantees the Rust
+//! toolchain itself (no crates.io registry access), so the subset of the
+//! `anyhow` API the workspace uses is provided by this in-tree path crate:
+//!
+//! * `anyhow::Error` — an error value holding a message plus a flattened
+//!   context/source chain (outermost first),
+//! * `anyhow::Result<T>` — `Result<T, Error>`,
+//! * the `anyhow!`, `bail!` and `ensure!` macros (format-string forms),
+//! * the `Context` trait (`context` / `with_context`) on `Result` and
+//!   `Option`.
+//!
+//! Display follows anyhow's convention: `{}` prints the outermost message,
+//! `{:#}` prints the whole chain joined by `": "`.
+
+use std::fmt;
+
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// An error message plus its context/source chain, outermost first.
+pub struct Error {
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Build an error from a displayable message.
+    pub fn msg(m: impl fmt::Display) -> Error {
+        Error { chain: vec![m.to_string()] }
+    }
+
+    /// Wrap this error with an outer context message.
+    pub fn context(mut self, c: impl fmt::Display) -> Error {
+        self.chain.insert(0, c.to_string());
+        self
+    }
+
+    /// Iterate the message chain, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(String::as_str)
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            write!(f, "{}", self.chain.join(": "))
+        } else {
+            write!(f, "{}", self.chain[0])
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain[0])?;
+        if self.chain.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for c in &self.chain[1..] {
+                write!(f, "\n    {c}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        let mut chain = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            chain.push(s.to_string());
+            src = s.source();
+        }
+        Error { chain }
+    }
+}
+
+/// `context` / `with_context` on fallible values.
+pub trait Context<T, E> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T, Error>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error>;
+}
+
+impl<T, E: Into<Error>> Context<T, E> for Result<T, E> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T, Error> {
+        self.map_err(|e| e.into().context(ctx))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+impl<T> Context<T, std::convert::Infallible> for Option<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(ctx))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Build an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)+) => {
+        $crate::Error::msg(::std::format!($($arg)+))
+    };
+}
+
+/// Return early with an [`Error`] built from a format string.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)+) => {
+        return ::std::result::Result::Err($crate::anyhow!($($arg)+))
+    };
+}
+
+/// Return early with an [`Error`] unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        // Error::msg, not a format! path: stringify!($cond) may contain
+        // braces (closures, struct literals) that would break a format
+        // string.
+        if !($cond) {
+            return ::std::result::Result::Err($crate::Error::msg(::std::concat!(
+                "condition failed: ",
+                ::std::stringify!($cond)
+            )));
+        }
+    };
+    ($cond:expr, $($arg:tt)+) => {
+        if !($cond) {
+            $crate::bail!($($arg)+);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "inner detail")
+    }
+
+    #[test]
+    fn display_plain_and_alternate() {
+        let e = anyhow!("top {}", 7);
+        assert_eq!(format!("{e}"), "top 7");
+        let e = e.context("outer");
+        assert_eq!(format!("{e}"), "outer");
+        assert_eq!(format!("{e:#}"), "outer: top 7");
+    }
+
+    #[test]
+    fn from_std_error_keeps_source_chain() {
+        let e: Error = io_err().into();
+        assert_eq!(format!("{e}"), "inner detail");
+    }
+
+    #[test]
+    fn context_on_result_and_option() {
+        let r: Result<(), _> = Err(io_err());
+        let e = r.context("reading file").unwrap_err();
+        assert_eq!(format!("{e:#}"), "reading file: inner detail");
+
+        let o: Option<u32> = None;
+        let e = o.with_context(|| format!("missing {}", "key")).unwrap_err();
+        assert_eq!(format!("{e}"), "missing key");
+        assert_eq!(Some(1u32).context("fine").unwrap(), 1);
+    }
+
+    #[test]
+    fn bail_and_ensure() {
+        fn f(x: u32) -> Result<u32> {
+            ensure!(x < 10, "too big: {x}");
+            if x == 5 {
+                bail!("five is right out");
+            }
+            Ok(x)
+        }
+        assert_eq!(f(3).unwrap(), 3);
+        assert_eq!(format!("{}", f(12).unwrap_err()), "too big: 12");
+        assert_eq!(format!("{}", f(5).unwrap_err()), "five is right out");
+    }
+
+    #[test]
+    fn ensure_without_message_allows_braces() {
+        fn f(v: &[i32]) -> Result<()> {
+            ensure!(v.iter().all(|e| *e > 0));
+            Ok(())
+        }
+        assert!(f(&[1, 2]).is_ok());
+        let msg = format!("{}", f(&[1, -2]).unwrap_err());
+        assert!(msg.starts_with("condition failed: "), "{msg}");
+    }
+
+    #[test]
+    fn question_mark_converts() {
+        fn parse(s: &str) -> Result<u64> {
+            Ok(s.parse::<u64>()?)
+        }
+        assert_eq!(parse("42").unwrap(), 42);
+        assert!(parse("nope").is_err());
+    }
+
+    #[test]
+    fn chain_iterates_outermost_first() {
+        let e = anyhow!("inner").context("mid").context("outer");
+        let chain: Vec<&str> = e.chain().collect();
+        assert_eq!(chain, vec!["outer", "mid", "inner"]);
+    }
+}
