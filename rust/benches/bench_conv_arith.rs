@@ -1,15 +1,21 @@
 //! Bench: the bit-accurate integer-path convolution (Eq. 6-8 simulator)
 //! vs the plain f32 convolution — the Table V / VI hot path in software.
 //!
-//! Reports the serial baseline next to the tiled parallel path so the
-//! speedup (and its bit-identity) is visible in every run; `--smoke` /
-//! `MLS_BENCH_SMOKE=1` switches to the fast CI anti-bit-rot mode.
+//! Measures the decode-once planar kernel against the legacy per-pixel
+//! kernel (serial and threaded, bit-identical by construction) and writes
+//! the machine-readable perf trajectory to `BENCH_conv.json` at the repo
+//! root. `--smoke` / `MLS_BENCH_SMOKE=1` switches to the fast CI
+//! anti-bit-rot mode; `MLS_BENCH_ENFORCE=1` turns the planar-vs-legacy
+//! 1-thread ratio into a hard gate (exit 1 on regression).
 
 use std::time::Duration;
 
-use mls_train::arith::conv::{conv2d_f32, lowbit_conv, lowbit_conv_threaded};
+use mls_train::arith::conv::{
+    conv2d_f32_threaded, lowbit_conv, lowbit_conv_legacy_threaded, lowbit_conv_threaded,
+};
 use mls_train::mls::quantizer::{quantize, QuantConfig, Rounding};
-use mls_train::util::bench::{bench, black_box, budget, smoke_mode};
+use mls_train::util::bench::{bench, black_box, budget, enforce_mode, smoke_mode, BenchReport};
+use mls_train::util::json::Json;
 use mls_train::util::parallel;
 use mls_train::util::rng::Pcg32;
 
@@ -28,38 +34,98 @@ fn main() {
         if smoke_mode() { " [smoke]" } else { "" }
     );
 
+    let mut report = BenchReport::new("BENCH_conv.json", "bench_conv_arith");
+    report.set("threads", Json::Num(threads as f64));
+    report.set("macs_per_conv", Json::Num(macs as f64));
+    report.set(
+        "shapes",
+        Json::Str(format!("w[Co,Ci,Kh,Kw]={wshape:?} a[N,Ci,H,W]={ashape:?} stride=1 pad=1")),
+    );
+
     let mut cfg = QuantConfig::new(2, 4);
     cfg.rounding = Rounding::Nearest;
     let tw = quantize(&w, &wshape, &cfg, &[]);
     let ta = quantize(&a, &ashape, &cfg, &[]);
 
-    let serial = bench("lowbit_conv/int_path_e2m4_serial", b, || {
+    let legacy_serial = bench("lowbit_conv/legacy_e2m4_serial", b, || {
+        black_box(lowbit_conv_legacy_threaded(&tw, &ta, 1, 1, 1));
+    });
+    println!("  -> {:.1} MMAC/s (legacy per-pixel decode kernel)", legacy_serial.throughput_items(macs) / 1e6);
+    report.add_result(&legacy_serial, macs, "mac");
+
+    let planar_serial = bench("lowbit_conv/planar_e2m4_serial", b, || {
         black_box(lowbit_conv_threaded(&tw, &ta, 1, 1, 1));
     });
-    println!("  -> {:.1} MMAC/s", serial.throughput_items(macs) / 1e6);
+    let planar_vs_legacy = legacy_serial.median.as_secs_f64() / planar_serial.median.as_secs_f64();
+    println!(
+        "  -> {:.1} MMAC/s ({planar_vs_legacy:.2}x vs legacy at 1 thread, bit-identical)",
+        planar_serial.throughput_items(macs) / 1e6
+    );
+    report.add_result(&planar_serial, macs, "mac");
+    report.add_ratio("planar_vs_legacy_serial", planar_vs_legacy);
 
-    let par = bench(&format!("lowbit_conv/int_path_e2m4_t{threads}"), b, || {
+    let planar_par = bench(&format!("lowbit_conv/planar_e2m4_t{threads}"), b, || {
         black_box(lowbit_conv(&tw, &ta, 1, 1));
     });
+    let threaded_vs_serial = planar_serial.median.as_secs_f64() / planar_par.median.as_secs_f64();
     println!(
-        "  -> {:.1} MMAC/s ({:.2}x vs serial, bit-identical)",
-        par.throughput_items(macs) / 1e6,
-        serial.median.as_secs_f64() / par.median.as_secs_f64()
+        "  -> {:.1} MMAC/s ({threaded_vs_serial:.2}x vs serial, bit-identical)",
+        planar_par.throughput_items(macs) / 1e6
     );
+    report.add_result(&planar_par, macs, "mac");
+    report.add_ratio("planar_threaded_vs_serial", threaded_vs_serial);
 
     let wq = tw.dequantize();
     let aq = ta.dequantize();
-    let res = bench("conv2d_f32/float_path", b, || {
-        black_box(conv2d_f32(&wq, wshape, &aq, ashape, 1, 1));
+    let float_serial = bench("conv2d_f32/float_path_serial", b, || {
+        black_box(conv2d_f32_threaded(&wq, wshape, &aq, ashape, 1, 1, 1));
     });
-    println!("  -> {:.1} MMAC/s", res.throughput_items(macs) / 1e6);
+    println!("  -> {:.1} MMAC/s", float_serial.throughput_items(macs) / 1e6);
+    report.add_result(&float_serial, macs, "mac");
+
+    let float_par = bench(&format!("conv2d_f32/float_path_t{threads}"), b, || {
+        black_box(conv2d_f32_threaded(&wq, wshape, &aq, ashape, 1, 1, threads));
+    });
+    println!(
+        "  -> {:.1} MMAC/s ({:.2}x vs serial, bit-identical)",
+        float_par.throughput_items(macs) / 1e6,
+        float_serial.median.as_secs_f64() / float_par.median.as_secs_f64()
+    );
+    report.add_result(&float_par, macs, "mac");
+    report.add_ratio(
+        "float_threaded_vs_serial",
+        float_serial.median.as_secs_f64() / float_par.median.as_secs_f64(),
+    );
 
     let mut cfg1 = QuantConfig::new(2, 1);
     cfg1.rounding = Rounding::Nearest;
     let tw1 = quantize(&w, &wshape, &cfg1, &[]);
     let ta1 = quantize(&a, &ashape, &cfg1, &[]);
-    let res = bench(&format!("lowbit_conv/int_path_e2m1_t{threads}"), b, || {
+    let e2m1 = bench(&format!("lowbit_conv/planar_e2m1_t{threads}"), b, || {
         black_box(lowbit_conv(&tw1, &ta1, 1, 1));
     });
-    println!("  -> {:.1} MMAC/s", res.throughput_items(macs) / 1e6);
+    println!("  -> {:.1} MMAC/s", e2m1.throughput_items(macs) / 1e6);
+    report.add_result(&e2m1, macs, "mac");
+
+    match report.write() {
+        Ok(path) => println!("wrote {}", path.display()),
+        Err(e) => {
+            eprintln!("failed to write BENCH_conv.json: {e}");
+            std::process::exit(1);
+        }
+    }
+
+    // CI perf guard: the decode-once kernel must not lose to the legacy
+    // path at 1 thread. Full runs gate at the acceptance floor of 1.0;
+    // smoke runs (~50 ms budgets, noisy shared runners) get a small
+    // margin so scheduling jitter cannot fail a push without a real
+    // regression — an actual planar regression reads well below this.
+    let floor = if smoke_mode() { 0.9 } else { 1.0 };
+    if enforce_mode() && planar_vs_legacy < floor {
+        eprintln!(
+            "PERF REGRESSION: planar kernel is {planar_vs_legacy:.3}x the legacy kernel at 1 \
+             thread (< {floor})"
+        );
+        std::process::exit(1);
+    }
 }

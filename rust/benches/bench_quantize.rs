@@ -2,14 +2,16 @@
 //! Table VI — 4 muls + 2 adds per element on the paper's hardware; here we
 //! measure the software simulator's elements/s on the L3 hot path).
 //!
-//! Reports the serial baseline next to the group-sharded parallel path;
-//! `--smoke` / `MLS_BENCH_SMOKE=1` switches to the fast CI mode.
+//! Reports the serial baseline next to the group-sharded parallel path and
+//! writes the machine-readable trajectory to `BENCH_quantize.json` at the
+//! repo root; `--smoke` / `MLS_BENCH_SMOKE=1` switches to the fast CI mode.
 
 use std::time::Duration;
 
 use mls_train::mls::quantizer::{fake_quant, quantize, quantize_threaded, QuantConfig, Rounding};
 use mls_train::mls::Grouping;
-use mls_train::util::bench::{bench, black_box, budget, smoke_mode};
+use mls_train::util::bench::{bench, black_box, budget, smoke_mode, BenchReport};
+use mls_train::util::json::Json;
 use mls_train::util::parallel;
 use mls_train::util::rng::Pcg32;
 
@@ -31,20 +33,28 @@ fn main() {
         if smoke_mode() { " [smoke]" } else { "" }
     );
 
+    let mut report = BenchReport::new("BENCH_quantize.json", "bench_quantize");
+    report.set("threads", Json::Num(threads as f64));
+    report.set("elements", Json::Num(n as f64));
+    report.set("shape", Json::Str(format!("{shape:?}")));
+
     // serial vs parallel on the headline config
     let cfg = QuantConfig::default();
     let serial = bench("quantize/e2m4_nc_stochastic_serial", b, || {
         black_box(quantize_threaded(&x, &shape, &cfg, &r, 1));
     });
     println!("  -> {:.1} Melem/s", serial.throughput_items(n as u64) / 1e6);
+    report.add_result(&serial, n as u64, "elem");
     let par = bench(&format!("quantize/e2m4_nc_stochastic_t{threads}"), b, || {
         black_box(quantize(&x, &shape, &cfg, &r));
     });
+    let threaded_vs_serial = serial.median.as_secs_f64() / par.median.as_secs_f64();
     println!(
-        "  -> {:.1} Melem/s ({:.2}x vs serial, bit-identical)",
-        par.throughput_items(n as u64) / 1e6,
-        serial.median.as_secs_f64() / par.median.as_secs_f64()
+        "  -> {:.1} Melem/s ({threaded_vs_serial:.2}x vs serial, bit-identical)",
+        par.throughput_items(n as u64) / 1e6
     );
+    report.add_result(&par, n as u64, "elem");
+    report.add_ratio("threaded_vs_serial", threaded_vs_serial);
 
     for (name, cfg) in [
         ("e2m4_nc_nearest", QuantConfig { rounding: Rounding::Nearest, ..Default::default() }),
@@ -57,6 +67,7 @@ fn main() {
             black_box(quantize(&x, &shape, &cfg, &r));
         });
         println!("  -> {:.1} Melem/s", res.throughput_items(n as u64) / 1e6);
+        report.add_result(&res, n as u64, "elem");
     }
 
     let cfg = QuantConfig::default();
@@ -64,4 +75,13 @@ fn main() {
         black_box(fake_quant(&x, &shape, &cfg, &r));
     });
     println!("  -> {:.1} Melem/s", res.throughput_items(n as u64) / 1e6);
+    report.add_result(&res, n as u64, "elem");
+
+    match report.write() {
+        Ok(path) => println!("wrote {}", path.display()),
+        Err(e) => {
+            eprintln!("failed to write BENCH_quantize.json: {e}");
+            std::process::exit(1);
+        }
+    }
 }

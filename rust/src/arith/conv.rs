@@ -5,9 +5,20 @@
 //! Layouts follow the paper: weights `[Co, Ci, K, K]` grouped `(co, ci)`,
 //! activations `[N, Ci, H, W]` grouped `(n, ci)`; the intra-group MAC runs
 //! over the K x K window, the tree reduces over Ci.
+//!
+//! Two kernels produce the same bits:
+//!
+//! * the **planar** kernel (default, [`super::planes`]) decodes each
+//!   operand tensor once into `signed_frac`/`shift` planes, hoists the
+//!   group-scale products to a per-tile table, and splits every output
+//!   plane into a checked-free interior and a clipped halo;
+//! * the **legacy** kernel ([`lowbit_conv_legacy_threaded`]) re-decodes
+//!   operands per pixel through [`Element`]/[`intra_group_mac`] and is
+//!   kept as the bit-exactness reference (and the bench baseline).
 
 use super::group_scale::GroupScaleFactor;
 use super::intra::{intra_group_mac, Element};
+use super::planes::{self, DecodedPlanes};
 use super::tree::tree_sum;
 use crate::mls::format::EmFormat;
 use crate::mls::{Grouping, MlsTensor};
@@ -29,53 +40,37 @@ pub struct ConvOutput {
 
 /// Convolution geometry shared by all output tiles.
 #[derive(Clone, Copy)]
-struct ConvDims {
-    ci_n: usize,
-    kh: usize,
-    kw: usize,
-    h: usize,
-    wi: usize,
-    ho: usize,
-    wo: usize,
-    stride: usize,
-    pad: usize,
+pub(crate) struct ConvDims {
+    pub(crate) ci_n: usize,
+    pub(crate) kh: usize,
+    pub(crate) kw: usize,
+    pub(crate) h: usize,
+    pub(crate) wi: usize,
+    pub(crate) ho: usize,
+    pub(crate) wo: usize,
+    pub(crate) stride: usize,
+    pub(crate) pad: usize,
 }
 
 /// One `(n, co)` output tile: its `[ho, wo]` plane plus the hardware-audit
 /// counters it accumulated.
-struct ConvTile {
-    z: Vec<f32>,
-    peak_bits: u32,
-    muls: u64,
-    iadds: u64,
-    fadds: u64,
-    gscales: u64,
+pub(crate) struct ConvTile {
+    pub(crate) z: Vec<f32>,
+    pub(crate) peak_bits: u32,
+    pub(crate) muls: u64,
+    pub(crate) iadds: u64,
+    pub(crate) fadds: u64,
+    pub(crate) gscales: u64,
 }
 
-/// `Conv(qW, qA)` on the integer path. `stride`/`pad` as usual; the result
-/// INCLUDES the tensor scales `S_t^w * S_t^a` so it is directly comparable
-/// with a float convolution of the dequantized tensors.
-///
-/// Sharded over `(n, co)` output tiles on the [`crate::util::parallel`]
-/// pool (`MLS_THREADS` workers); see [`lowbit_conv_threaded`] for the
-/// bit-identical-across-thread-counts guarantee.
-pub fn lowbit_conv(w: &MlsTensor, a: &MlsTensor, stride: usize, pad: usize) -> ConvOutput {
-    lowbit_conv_threaded(w, a, stride, pad, parallel::num_threads())
-}
-
-/// [`lowbit_conv`] with an explicit worker count.
-///
-/// Every `(n, co)` tile is computed independently with the exact serial
-/// per-tile operation order, and tile results (values AND counters) are
-/// merged in serial tile order, so the output is bit-identical for every
-/// `threads` value (pinned by `rust/tests/parallel_equivalence.rs`).
-pub fn lowbit_conv_threaded(
+/// Validate operand shapes/configs and derive the conv geometry. Shared by
+/// the planar and legacy entry points so both agree on it exactly.
+fn conv_geometry(
     w: &MlsTensor,
     a: &MlsTensor,
     stride: usize,
     pad: usize,
-    threads: usize,
-) -> ConvOutput {
+) -> (ConvDims, usize, usize) {
     assert_eq!(w.shape.len(), 4, "weights must be [Co, Ci, K, K]");
     assert_eq!(a.shape.len(), 4, "activations must be [N, Ci, H, W]");
     assert_eq!(w.cfg.grouping, Grouping::Both);
@@ -86,18 +81,13 @@ pub fn lowbit_conv_threaded(
     assert_eq!(ci_n, a_ci);
     let ho = (h + 2 * pad - kh) / stride + 1;
     let wo = (wi + 2 * pad - kw) / stride + 1;
-    let dims = ConvDims { ci_n, kh, kw, h, wi, ho, wo, stride, pad };
+    (ConvDims { ci_n, kh, kw, h, wi, ho, wo, stride, pad }, n_n, co_n)
+}
 
-    let fmt = w.cfg.element;
-    let st = w.s_t * a.s_t;
-
-    // shard over (n, co) output tiles; tile index order == serial loop order
-    let tiles = parallel::map_collect(threads, n_n * co_n, |t| {
-        conv_tile(w, a, t / co_n, t % co_n, dims, fmt, st)
-    });
-
-    // merge tiles in serial order: z planes concatenate into the row-major
-    // [N, Co, Ho, Wo] layout; counters sum / max exactly
+/// Merge per-tile results in serial tile order: z planes concatenate into
+/// the row-major [N, Co, Ho, Wo] layout; counters sum / max exactly.
+fn merge_tiles(tiles: Vec<ConvTile>, shape: [usize; 4]) -> ConvOutput {
+    let [n_n, co_n, ho, wo] = shape;
     let mut z = Vec::with_capacity(n_n * co_n * ho * wo);
     let mut peak_bits = 0u32;
     let (mut muls, mut iadds, mut fadds, mut gscales) = (0u64, 0u64, 0u64, 0u64);
@@ -109,10 +99,9 @@ pub fn lowbit_conv_threaded(
         fadds += tile.fadds;
         gscales += tile.gscales;
     }
-
     ConvOutput {
         z,
-        shape: [n_n, co_n, ho, wo],
+        shape,
         peak_acc_bits: peak_bits,
         mul_ops: muls,
         int_add_ops: iadds,
@@ -121,9 +110,93 @@ pub fn lowbit_conv_threaded(
     }
 }
 
-/// Compute one `(n, co)` output tile: intra-MAC -> group scale -> tree over
-/// every output pixel of the tile, with per-tile audit counters.
-fn conv_tile(
+/// `Conv(qW, qA)` on the integer path. `stride`/`pad` as usual; the result
+/// INCLUDES the tensor scales `S_t^w * S_t^a` so it is directly comparable
+/// with a float convolution of the dequantized tensors.
+///
+/// Runs the decode-once planar kernel ([`super::planes`]) sharded over
+/// `(n, co)` output tiles on the [`crate::util::parallel`] pool
+/// (`MLS_THREADS` workers); see [`lowbit_conv_threaded`] for the
+/// bit-identical-across-thread-counts guarantee.
+pub fn lowbit_conv(w: &MlsTensor, a: &MlsTensor, stride: usize, pad: usize) -> ConvOutput {
+    lowbit_conv_threaded(w, a, stride, pad, parallel::num_threads())
+}
+
+/// [`lowbit_conv`] with an explicit worker count.
+///
+/// The operand planes are decoded once (element-wise, thread-count
+/// independent), then every `(n, co)` tile is computed independently with
+/// the exact serial per-tile operation order, and tile results (values AND
+/// counters) are merged in serial tile order — so the output is
+/// bit-identical for every `threads` value AND bit-identical to the legacy
+/// kernel (both pinned by `rust/tests/parallel_equivalence.rs` and
+/// `rust/tests/conv_geometry.rs`).
+pub fn lowbit_conv_threaded(
+    w: &MlsTensor,
+    a: &MlsTensor,
+    stride: usize,
+    pad: usize,
+    threads: usize,
+) -> ConvOutput {
+    // decode once per tensor, shared read-only by every tile
+    let wp = DecodedPlanes::of_threaded(w, threads);
+    let ap = DecodedPlanes::of_threaded(a, threads);
+    lowbit_conv_with_planes(w, &wp, a, &ap, stride, pad, threads)
+}
+
+/// [`lowbit_conv_threaded`] with caller-supplied decoded planes, so a
+/// tensor convolved repeatedly (fixed weights across a batch sweep, say)
+/// pays its [`MlsTensor::decoded_planes`] decode once across calls. The
+/// planes must belong to the corresponding tensors; results are identical
+/// to [`lowbit_conv_threaded`] by construction.
+pub fn lowbit_conv_with_planes(
+    w: &MlsTensor,
+    wp: &DecodedPlanes,
+    a: &MlsTensor,
+    ap: &DecodedPlanes,
+    stride: usize,
+    pad: usize,
+    threads: usize,
+) -> ConvOutput {
+    let (dims, n_n, co_n) = conv_geometry(w, a, stride, pad);
+    assert_eq!(wp.len(), w.len(), "weight planes do not match the weight tensor");
+    assert_eq!(ap.len(), a.len(), "activation planes do not match the activation tensor");
+    assert_eq!(wp.fmt, w.cfg.element, "weight planes decoded under a different element format");
+    assert_eq!(ap.fmt, a.cfg.element, "activation planes decoded under a different element format");
+    let fmt = w.cfg.element;
+    let st = w.s_t * a.s_t;
+
+    let tiles = parallel::map_collect(threads, n_n * co_n, |t| {
+        planes::conv_tile_planar(wp, ap, w, a, t / co_n, t % co_n, dims, fmt, st)
+    });
+    merge_tiles(tiles, [n_n, co_n, dims.ho, dims.wo])
+}
+
+/// The pre-planar reference kernel: re-decodes operands per output pixel
+/// through [`Element`] buffers and [`intra_group_mac`], recomputing the
+/// group-scale product per pixel. Kept (a) as the independent reference
+/// the planar kernel is bit-compared against and (b) as the baseline the
+/// `bench_conv_arith` speedup ratio is measured from.
+pub fn lowbit_conv_legacy_threaded(
+    w: &MlsTensor,
+    a: &MlsTensor,
+    stride: usize,
+    pad: usize,
+    threads: usize,
+) -> ConvOutput {
+    let (dims, n_n, co_n) = conv_geometry(w, a, stride, pad);
+    let fmt = w.cfg.element;
+    let st = w.s_t * a.s_t;
+
+    let tiles = parallel::map_collect(threads, n_n * co_n, |t| {
+        conv_tile_legacy(w, a, t / co_n, t % co_n, dims, fmt, st)
+    });
+    merge_tiles(tiles, [n_n, co_n, dims.ho, dims.wo])
+}
+
+/// Compute one `(n, co)` output tile the legacy way: per-pixel operand
+/// gather -> intra-MAC -> per-pixel group scale -> tree.
+fn conv_tile_legacy(
     w: &MlsTensor,
     a: &MlsTensor,
     n: usize,
@@ -184,6 +257,11 @@ fn conv_tile(
 
 /// Reference: plain f32 convolution (NCHW x OIHW), used for the float path
 /// (conv of dequantized tensors) and by the data/nn substrates.
+///
+/// Sharded over `(n, co)` output tiles with the same interior/halo split
+/// as the planar integer kernel; the per-pixel f64 accumulation order
+/// (ci -> kh -> kw over in-bounds taps) is unchanged, so results are
+/// bit-identical to the historical serial loop for every thread count.
 pub fn conv2d_f32(
     w: &[f32],
     wshape: [usize; 4],
@@ -192,38 +270,82 @@ pub fn conv2d_f32(
     stride: usize,
     pad: usize,
 ) -> (Vec<f32>, [usize; 4]) {
+    conv2d_f32_threaded(w, wshape, a, ashape, stride, pad, parallel::num_threads())
+}
+
+/// [`conv2d_f32`] with an explicit worker count.
+pub fn conv2d_f32_threaded(
+    w: &[f32],
+    wshape: [usize; 4],
+    a: &[f32],
+    ashape: [usize; 4],
+    stride: usize,
+    pad: usize,
+    threads: usize,
+) -> (Vec<f32>, [usize; 4]) {
     let [co_n, ci_n, kh, kw] = wshape;
     let [n_n, a_ci, h, wi] = ashape;
     assert_eq!(ci_n, a_ci);
     let ho = (h + 2 * pad - kh) / stride + 1;
     let wo = (wi + 2 * pad - kw) / stride + 1;
-    let mut z = vec![0.0f32; n_n * co_n * ho * wo];
-    for n in 0..n_n {
-        for co in 0..co_n {
-            for oy in 0..ho {
-                for ox in 0..wo {
-                    let mut acc = 0.0f64;
-                    for ci in 0..ci_n {
-                        for i in 0..kh {
-                            for j in 0..kw {
-                                let iy = (oy * stride + i) as isize - pad as isize;
-                                let ix = (ox * stride + j) as isize - pad as isize;
-                                if iy < 0 || ix < 0 || iy >= h as isize || ix >= wi as isize {
-                                    continue;
-                                }
-                                let widx = ((co * ci_n + ci) * kh + i) * kw + j;
-                                let aidx =
-                                    ((n * ci_n + ci) * h + iy as usize) * wi + ix as usize;
-                                acc += w[widx] as f64 * a[aidx] as f64;
-                            }
-                        }
-                    }
-                    z[((n * co_n + co) * ho + oy) * wo + ox] = acc as f32;
-                }
-            }
-        }
+    let dims = ConvDims { ci_n, kh, kw, h, wi, ho, wo, stride, pad };
+
+    let tiles = parallel::map_collect(threads, n_n * co_n, |t| {
+        conv2d_f32_tile(w, a, t / co_n, t % co_n, dims)
+    });
+    let mut z = Vec::with_capacity(n_n * co_n * ho * wo);
+    for tile in tiles {
+        z.extend_from_slice(&tile);
     }
     (z, [n_n, co_n, ho, wo])
+}
+
+/// One `(n, co)` plane of the f32 reference conv, interior/halo split.
+fn conv2d_f32_tile(w: &[f32], a: &[f32], n: usize, co: usize, d: ConvDims) -> Vec<f32> {
+    let ConvDims { ci_n, kh, kw, h, wi, ho, wo, stride, pad } = d;
+    let (oy_lo, oy_hi) = planes::interior_span(h, kh, stride, pad, ho);
+    let (ox_lo, ox_hi) = planes::interior_span(wi, kw, stride, pad, wo);
+    let mut z = vec![0.0f32; ho * wo];
+    for oy in 0..ho {
+        let row_interior = oy >= oy_lo && oy < oy_hi;
+        for ox in 0..wo {
+            let mut acc = 0.0f64;
+            if row_interior && ox >= ox_lo && ox < ox_hi {
+                let iy0 = oy * stride - pad;
+                let ix0 = ox * stride - pad;
+                for ci in 0..ci_n {
+                    let wbase = (co * ci_n + ci) * kh * kw;
+                    let abase = ((n * ci_n + ci) * h + iy0) * wi + ix0;
+                    for i in 0..kh {
+                        let wr = wbase + i * kw;
+                        let ar = abase + i * wi;
+                        let wrow = &w[wr..wr + kw];
+                        let arow = &a[ar..ar + kw];
+                        for j in 0..kw {
+                            acc += wrow[j] as f64 * arow[j] as f64;
+                        }
+                    }
+                }
+            } else {
+                for ci in 0..ci_n {
+                    for i in 0..kh {
+                        for j in 0..kw {
+                            let iy = (oy * stride + i) as isize - pad as isize;
+                            let ix = (ox * stride + j) as isize - pad as isize;
+                            if iy < 0 || ix < 0 || iy >= h as isize || ix >= wi as isize {
+                                continue;
+                            }
+                            let widx = ((co * ci_n + ci) * kh + i) * kw + j;
+                            let aidx = ((n * ci_n + ci) * h + iy as usize) * wi + ix as usize;
+                            acc += w[widx] as f64 * a[aidx] as f64;
+                        }
+                    }
+                }
+            }
+            z[oy * wo + ox] = acc as f32;
+        }
+    }
+    z
 }
 
 #[cfg(test)]
@@ -311,6 +433,50 @@ mod tests {
     }
 
     #[test]
+    fn planar_matches_legacy_kernel() {
+        let mut rng = Pcg32::seeded(25);
+        let cfg = QuantConfig { rounding: Rounding::Nearest, ..QuantConfig::new(2, 4) };
+        let wshape = [4usize, 3, 3, 3];
+        let ashape = [2usize, 3, 6, 6];
+        let tw = quantize(&rand_nchw(&mut rng, wshape), &wshape, &cfg, &[]);
+        let ta = quantize(&rand_nchw(&mut rng, ashape), &ashape, &cfg, &[]);
+        let new = lowbit_conv_threaded(&tw, &ta, 1, 1, 1);
+        let old = lowbit_conv_legacy_threaded(&tw, &ta, 1, 1, 1);
+        assert_eq!(new.shape, old.shape);
+        for (i, (x, y)) in new.z.iter().zip(&old.z).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "z[{i}]");
+        }
+        assert_eq!(new.peak_acc_bits, old.peak_acc_bits);
+        assert_eq!(new.mul_ops, old.mul_ops);
+        assert_eq!(new.int_add_ops, old.int_add_ops);
+        assert_eq!(new.float_add_ops, old.float_add_ops);
+        assert_eq!(new.group_scale_ops, old.group_scale_ops);
+    }
+
+    #[test]
+    fn caller_supplied_planes_match_internal_decode() {
+        let mut rng = Pcg32::seeded(27);
+        let cfg = QuantConfig { rounding: Rounding::Nearest, ..QuantConfig::new(2, 4) };
+        let wshape = [3usize, 2, 3, 3];
+        let ashape = [2usize, 2, 5, 5];
+        let tw = quantize(&rand_nchw(&mut rng, wshape), &wshape, &cfg, &[]);
+        let ta = quantize(&rand_nchw(&mut rng, ashape), &ashape, &cfg, &[]);
+        let wp = tw.decoded_planes();
+        let ap = ta.decoded_planes();
+        let reused = lowbit_conv_with_planes(&tw, &wp, &ta, &ap, 1, 1, 2);
+        let direct = lowbit_conv_threaded(&tw, &ta, 1, 1, 2);
+        assert_eq!(reused.shape, direct.shape);
+        for (i, (x, y)) in reused.z.iter().zip(&direct.z).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "z[{i}]");
+        }
+        assert_eq!(reused.peak_acc_bits, direct.peak_acc_bits);
+        assert_eq!(reused.mul_ops, direct.mul_ops);
+        assert_eq!(reused.int_add_ops, direct.int_add_ops);
+        assert_eq!(reused.float_add_ops, direct.float_add_ops);
+        assert_eq!(reused.group_scale_ops, direct.group_scale_ops);
+    }
+
+    #[test]
     fn conv2d_f32_identity_kernel() {
         // 1x1 identity kernel reproduces the input
         let w = vec![1.0f32];
@@ -318,5 +484,24 @@ mod tests {
         let (z, shape) = conv2d_f32(&w, [1, 1, 1, 1], &a, [1, 1, 4, 4], 1, 0);
         assert_eq!(shape, [1, 1, 4, 4]);
         assert_eq!(z, a);
+    }
+
+    #[test]
+    fn conv2d_f32_threads_bit_identical() {
+        let mut rng = Pcg32::seeded(26);
+        let wshape = [3usize, 2, 3, 2];
+        let ashape = [2usize, 2, 7, 5];
+        let w = rand_nchw(&mut rng, wshape);
+        let a = rand_nchw(&mut rng, ashape);
+        for (stride, pad) in [(1usize, 0usize), (1, 1), (2, 1), (1, 2)] {
+            let (z1, s1) = conv2d_f32_threaded(&w, wshape, &a, ashape, stride, pad, 1);
+            for threads in [2usize, 8] {
+                let (zt, st) = conv2d_f32_threaded(&w, wshape, &a, ashape, stride, pad, threads);
+                assert_eq!(s1, st);
+                for (i, (x, y)) in z1.iter().zip(&zt).enumerate() {
+                    assert_eq!(x.to_bits(), y.to_bits(), "s{stride} p{pad} t{threads} z[{i}]");
+                }
+            }
+        }
     }
 }

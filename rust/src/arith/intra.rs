@@ -68,6 +68,15 @@ impl PartialSum {
     }
 
     /// Bits needed for the peak accumulator value (plus sign bit).
+    ///
+    /// An empty group, or one whose accumulator never left zero (every
+    /// product had a zero sign), reports **1**: the hardware register
+    /// still holds the sign bit even when no magnitude bits were ever
+    /// needed. The planar kernel ([`crate::arith::planes`]) reproduces
+    /// this floor per processed tile, so `ConvOutput::peak_acc_bits` is 1
+    /// (never 0) for any non-empty conv of all-zero operands — pinned by
+    /// `peak_bits_all_zero_group_is_one` below and by the all-zero conv
+    /// test in `rust/tests/conv_geometry.rs`.
     pub fn peak_bits(&self) -> u32 {
         64 - self.peak_abs.unsigned_abs().leading_zeros() + 1
     }
@@ -170,6 +179,24 @@ mod tests {
         let ps = intra_group_mac(&w, &a, fmt);
         let bound = fmt.product_bits() + 6 + 1;
         assert!(ps.peak_bits() <= bound, "{} > {}", ps.peak_bits(), bound);
+    }
+
+    #[test]
+    fn peak_bits_all_zero_group_is_one() {
+        let fmt = EmFormat::new(2, 4);
+        // empty group: accumulator never written, peak_abs stays 0
+        let ps = intra_group_mac(&[], &[], fmt);
+        assert_eq!(ps.peak_abs, 0);
+        assert_eq!(ps.peak_bits(), 1);
+        // all-zero group: every product is sign 0, accumulator stays 0
+        let z = Element { sign: 0, exp_code: 0, man: 0 };
+        let ps = intra_group_mac(&[z; 4], &[z; 4], fmt);
+        assert_eq!(ps.p, 0);
+        assert_eq!(ps.peak_bits(), 1);
+        // and the floor is tight: one minimal nonzero product needs 2 bits
+        let one = Element { sign: 1, exp_code: 0, man: 1 };
+        let ps = intra_group_mac(&[one], &[one], fmt);
+        assert_eq!(ps.peak_bits(), 2);
     }
 
     #[test]

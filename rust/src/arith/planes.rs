@@ -1,0 +1,315 @@
+//! Decode-once operand planes + the planar low-bit conv tile kernel.
+//!
+//! The legacy kernel ([`super::conv::lowbit_conv_legacy_threaded`]) re-read
+//! and re-decoded every MLS element (`Element::of` plus the `frac_int` /
+//! `exp_val` branches) for **every output pixel** that touches it,
+//! recomputed the `(co, ci)` x `(n, ci)` group-scale product per pixel, and
+//! heap-pushed the window operands into per-pixel `Vec`s. This module
+//! hoists all of that out of the pixel loop:
+//!
+//! * [`DecodedPlanes`] precomputes, once per tensor, struct-of-arrays
+//!   planes of the two quantities Eq. 7 actually consumes per element:
+//!
+//!   ```text
+//!   signed_frac[i] = s_i * Frac_i          (signed (M+1)-bit fraction)
+//!   shift[i]       = exp_i - emin          (product alignment shift)
+//!   ```
+//!
+//!   so the inner MAC becomes the branch-free
+//!   `acc += (signed_frac_w * signed_frac_a) << (shift_w + shift_a)`,
+//!   which is exactly Eq. 7's
+//!   `P = sum_i s_i^w s_i^a Frac_i^w Frac_i^a 2^((exp_i^w - emin) + (exp_i^a - emin))`
+//!   accumulated at the fixed point `2^(2*emin - 2M)`.
+//!
+//! * [`conv_tile_planar`] hoists the [`GroupScaleFactor::combine`] results
+//!   into a per-tile table computed once — the factor depends only on the
+//!   `(co, ci)` / `(n, ci)` group pair, never on the pixel — and
+//!
+//! * splits each output plane into an **interior** region whose windows
+//!   are fully in bounds (no clipping checks, fixed `kh*kw` trip count)
+//!   and a **halo** region that keeps the legacy clipped-window logic,
+//!   counting clipped windows exactly as the legacy kernel does.
+//!
+//! The result is bit-identical to the legacy kernel — output values AND
+//! the five hardware-audit counters (`peak_acc_bits`, `mul_ops`,
+//! `int_add_ops`, `float_add_ops`, `group_scale_ops`) — for every format,
+//! rounding mode, geometry and thread count. `rust/tests/conv_geometry.rs`
+//! and `rust/tests/parallel_equivalence.rs` pin this down; the energy
+//! model in [`crate::hw`] consumes the counters unchanged.
+
+use super::conv::{ConvDims, ConvTile};
+use super::group_scale::GroupScaleFactor;
+use super::intra::Element;
+use super::tree::tree_sum;
+use crate::mls::format::EmFormat;
+use crate::mls::MlsTensor;
+use crate::util::parallel;
+
+/// Struct-of-arrays decode of an MLS tensor's element planes, built once
+/// per tensor so the conv inner loop never touches the stored
+/// sign/exponent-code/mantissa fields again.
+#[derive(Clone, Debug)]
+pub struct DecodedPlanes {
+    /// `s_i * Frac_i`: the signed (M+1)-bit integer fraction of Eq. 7
+    /// (zero elements store 0, so the branch-free MAC adds nothing).
+    pub signed_frac: Vec<i32>,
+    /// `exp_i - emin`: the per-element left shift aligning the product at
+    /// the fixed point `2^(2*emin - 2M)` (0 for subnormals by definition).
+    pub shift: Vec<u8>,
+    /// the element format the planes were decoded under — provenance, so
+    /// conv entry points can reject planes built from a differently
+    /// formatted tensor (the decoded fields are format-dependent).
+    pub fmt: EmFormat,
+}
+
+impl DecodedPlanes {
+    /// Decode `t`'s element planes on the ambient worker count.
+    pub fn of(t: &MlsTensor) -> Self {
+        Self::of_threaded(t, parallel::num_threads())
+    }
+
+    /// Decode `t`'s element planes with an explicit worker count. Purely
+    /// element-wise, so the result is identical for every `threads`.
+    pub fn of_threaded(t: &MlsTensor, threads: usize) -> Self {
+        let fmt = t.cfg.element;
+        let emin = fmt.emin();
+        let n = t.len();
+        let parts = parallel::map_ranges(threads, n, |lo, hi| {
+            let mut frac = Vec::with_capacity(hi - lo);
+            let mut shift = Vec::with_capacity(hi - lo);
+            for idx in lo..hi {
+                let e = Element::of(t, idx);
+                frac.push(e.sign as i32 * e.frac_int(fmt) as i32);
+                let sh = e.exp_val(fmt) - emin;
+                // hard assert (not debug): a shift outside u8 would wrap
+                // silently in release and break the bit-identity-with-
+                // legacy invariant; E <= 8 keeps the max (2^E - 2) at 254
+                assert!(
+                    (0..=255).contains(&sh),
+                    "element shift {sh} exceeds the u8 plane (element format E must be <= 8)"
+                );
+                shift.push(sh as u8);
+            }
+            (frac, shift)
+        });
+        let mut signed_frac = Vec::with_capacity(n);
+        let mut shift = Vec::with_capacity(n);
+        for (f, s) in parts {
+            signed_frac.extend(f);
+            shift.extend(s);
+        }
+        DecodedPlanes { signed_frac, shift, fmt }
+    }
+
+    pub fn len(&self) -> usize {
+        self.signed_frac.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.signed_frac.is_empty()
+    }
+}
+
+/// The `[lo, hi)` span of output coordinates along one axis whose kernel
+/// window is fully in bounds: `o` is interior iff `o*stride >= pad` and
+/// `o*stride + k - 1 - pad <= in_len - 1`. An empty span (`lo == hi`)
+/// means every output pixel on this axis needs the clipped halo path.
+pub fn interior_span(
+    in_len: usize,
+    k: usize,
+    stride: usize,
+    pad: usize,
+    out_len: usize,
+) -> (usize, usize) {
+    let lo = pad.div_ceil(stride).min(out_len);
+    let hi = if in_len + pad >= k {
+        ((in_len + pad - k) / stride + 1).min(out_len)
+    } else {
+        0
+    };
+    (lo, hi.max(lo))
+}
+
+/// Compute one `(n, co)` output tile on the decode-once planes: per-tile
+/// group-scale table -> interior/halo pixel loops -> adder tree, with the
+/// exact per-tile audit-counter semantics of the legacy kernel.
+pub(crate) fn conv_tile_planar(
+    wp: &DecodedPlanes,
+    ap: &DecodedPlanes,
+    w: &MlsTensor,
+    a: &MlsTensor,
+    n: usize,
+    co: usize,
+    d: ConvDims,
+    fmt: EmFormat,
+    st: f32,
+) -> ConvTile {
+    let ConvDims { ci_n, kh, kw, h, wi, ho, wo, stride, pad } = d;
+    let mut z = vec![0.0f32; ho * wo];
+    let (mut muls, mut iadds, mut fadds, mut gscales) = (0u64, 0u64, 0u64, 0u64);
+    // tile-wide max |accumulator|; bits-needed is monotone in this, so one
+    // running max reproduces the legacy per-group peak_bits() max exactly
+    let mut peak: i64 = 0;
+
+    // group-scale factors hoisted out of the pixel loop: one combine per
+    // (co, ci)/(n, ci) pair per tile instead of one per output pixel
+    let factors: Vec<GroupScaleFactor> = (0..ci_n)
+        .map(|ci| {
+            let wg = co * ci_n + ci;
+            let ag = n * ci_n + ci;
+            GroupScaleFactor::combine(w.sg_exp[wg], w.sg_man[wg], a.sg_exp[ag], a.sg_man[ag])
+        })
+        .collect();
+    let scale_log2 = 2 * fmt.emin() - 2 * fmt.m as i32;
+
+    let (oy_lo, oy_hi) = interior_span(h, kh, stride, pad, ho);
+    let (ox_lo, ox_hi) = interior_span(wi, kw, stride, pad, wo);
+
+    let mut contribs = vec![0.0f32; ci_n];
+    for oy in 0..ho {
+        let row_interior = oy >= oy_lo && oy < oy_hi;
+        for ox in 0..wo {
+            if row_interior && ox >= ox_lo && ox < ox_hi {
+                // interior: the whole kh x kw window is in bounds
+                let iy0 = oy * stride - pad;
+                let ix0 = ox * stride - pad;
+                for (ci, contrib) in contribs.iter_mut().enumerate() {
+                    let wbase = (co * ci_n + ci) * kh * kw;
+                    let abase = ((n * ci_n + ci) * h + iy0) * wi + ix0;
+                    let mut acc: i64 = 0;
+                    for i in 0..kh {
+                        let wr = wbase + i * kw;
+                        let ar = abase + i * wi;
+                        let wfr = &wp.signed_frac[wr..wr + kw];
+                        let wsh = &wp.shift[wr..wr + kw];
+                        let afr = &ap.signed_frac[ar..ar + kw];
+                        let ash = &ap.shift[ar..ar + kw];
+                        for j in 0..kw {
+                            let prod = wfr[j] as i64 * afr[j] as i64;
+                            acc += prod << (wsh[j] as u32 + ash[j] as u32);
+                            peak = peak.max(acc.abs());
+                        }
+                    }
+                    muls += (kh * kw) as u64;
+                    iadds += (kh * kw) as u64;
+                    *contrib = factors[ci].apply(acc, scale_log2);
+                }
+            } else {
+                // halo: legacy clipped-window logic on the decoded planes
+                for (ci, contrib) in contribs.iter_mut().enumerate() {
+                    let mut acc: i64 = 0;
+                    let mut in_bounds = 0u64;
+                    for i in 0..kh {
+                        for j in 0..kw {
+                            let iy = (oy * stride + i) as isize - pad as isize;
+                            let ix = (ox * stride + j) as isize - pad as isize;
+                            if iy < 0 || ix < 0 || iy >= h as isize || ix >= wi as isize {
+                                continue; // zero padding contributes nothing
+                            }
+                            let widx = ((co * ci_n + ci) * kh + i) * kw + j;
+                            let aidx = ((n * ci_n + ci) * h + iy as usize) * wi + ix as usize;
+                            let prod = wp.signed_frac[widx] as i64 * ap.signed_frac[aidx] as i64;
+                            acc += prod << (wp.shift[widx] as u32 + ap.shift[aidx] as u32);
+                            peak = peak.max(acc.abs());
+                            in_bounds += 1;
+                        }
+                    }
+                    muls += in_bounds;
+                    iadds += in_bounds;
+                    *contrib = factors[ci].apply(acc, scale_log2);
+                }
+            }
+            gscales += ci_n as u64;
+            fadds += (ci_n - 1) as u64;
+            z[oy * wo + ox] = st * tree_sum(&contribs);
+        }
+    }
+
+    // same formula as PartialSum::peak_bits on the tile-wide max |acc|;
+    // a tile that ran at least one (pixel, group) MAC reports >= 1 even
+    // when every accumulator stayed zero (the legacy per-group floor)
+    let peak_bits = if ho * wo == 0 || ci_n == 0 {
+        0
+    } else {
+        64 - peak.unsigned_abs().leading_zeros() + 1
+    };
+    ConvTile { z, peak_bits, muls, iadds, fadds, gscales }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mls::quantizer::{quantize, QuantConfig, Rounding};
+    use crate::util::rng::Pcg32;
+
+    #[test]
+    fn planes_match_element_decode() {
+        let shape = [4usize, 3, 3, 3];
+        let mut rng = Pcg32::seeded(31);
+        let x = crate::util::prop::grouped_tensor(&mut rng, shape);
+        for (e, m) in [(2u32, 4u32), (2, 1), (0, 4)] {
+            let mut cfg = QuantConfig::new(e, m);
+            cfg.rounding = Rounding::Nearest;
+            let t = quantize(&x, &shape, &cfg, &[]);
+            let fmt = t.cfg.element;
+            let p = DecodedPlanes::of_threaded(&t, 1);
+            assert_eq!(p.len(), t.len());
+            for idx in 0..t.len() {
+                let el = Element::of(&t, idx);
+                assert_eq!(
+                    p.signed_frac[idx] as i64,
+                    el.sign as i64 * el.frac_int(fmt),
+                    "<{e},{m}> idx {idx}: signed_frac"
+                );
+                assert_eq!(
+                    p.shift[idx] as i32,
+                    el.exp_val(fmt) - fmt.emin(),
+                    "<{e},{m}> idx {idx}: shift"
+                );
+            }
+            // plane build is element-wise: thread count cannot matter
+            for threads in [2usize, 8] {
+                let pt = DecodedPlanes::of_threaded(&t, threads);
+                assert_eq!(pt.signed_frac, p.signed_frac, "t={threads}");
+                assert_eq!(pt.shift, p.shift, "t={threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn interior_span_matches_bruteforce() {
+        for in_len in 1usize..=9 {
+            for k in 1usize..=4 {
+                for stride in 1usize..=3 {
+                    for pad in 0usize..=3 {
+                        if in_len + 2 * pad < k {
+                            continue; // geometry invalid, no output
+                        }
+                        let out_len = (in_len + 2 * pad - k) / stride + 1;
+                        let (lo, hi) = interior_span(in_len, k, stride, pad, out_len);
+                        assert!(lo <= hi && hi <= out_len);
+                        for o in 0..out_len {
+                            let fully_inside = (0..k).all(|i| {
+                                let pos = (o * stride + i) as isize - pad as isize;
+                                pos >= 0 && pos < in_len as isize
+                            });
+                            assert_eq!(
+                                lo <= o && o < hi,
+                                fully_inside,
+                                "in_len={in_len} k={k} stride={stride} pad={pad} o={o}"
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn interior_span_empty_when_kernel_never_fits() {
+        // k=3 input 2, pad 1: every window is clipped
+        let out_len = (2 + 2 - 3) + 1;
+        let (lo, hi) = interior_span(2, 3, 1, 1, out_len);
+        assert_eq!(lo, hi);
+    }
+}

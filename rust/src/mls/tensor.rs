@@ -114,6 +114,16 @@ impl MlsTensor {
         parts.concat()
     }
 
+    /// Decode the element planes once into the struct-of-arrays form the
+    /// planar conv kernel consumes (`signed_frac` / `shift`, see
+    /// [`crate::arith::planes::DecodedPlanes`]). Callers convolving the
+    /// same tensor repeatedly can pass the result to
+    /// [`crate::arith::conv::lowbit_conv_with_planes`] to pay the decode
+    /// once across calls.
+    pub fn decoded_planes(&self) -> crate::arith::planes::DecodedPlanes {
+        crate::arith::planes::DecodedPlanes::of(self)
+    }
+
     /// Stored size in bits: elements (sign+E+M) + group scales (E_g+M_g) +
     /// one f32 tensor scale. The compression story vs f32 (Table VI memory
     /// argument).

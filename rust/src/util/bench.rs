@@ -1,9 +1,14 @@
 //! Micro-bench harness for the `cargo bench` targets (criterion is not
-//! available offline). Warmup + timed runs, median/p10/p90 reporting, and a
-//! black-box sink to defeat dead-code elimination.
+//! available offline). Warmup + timed runs, median/p10/p90 reporting, a
+//! black-box sink to defeat dead-code elimination, and [`BenchReport`] —
+//! the machine-readable `BENCH_*.json` emitter CI archives so the perf
+//! trajectory of the hot kernels is measured on every push.
 
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
 use std::time::{Duration, Instant};
 
+use super::json::Json;
 use super::stats;
 
 /// Prevent the optimizer from discarding a computed value.
@@ -85,6 +90,88 @@ pub fn run(name: &str, f: impl FnMut()) -> BenchResult {
     bench(name, Duration::from_secs(2), f)
 }
 
+/// True when regressions should fail the process (CI perf guard):
+/// enabled by `MLS_BENCH_ENFORCE=1`. With the guard off, benches only
+/// report; with it on, `bench_conv_arith` exits nonzero if the planar
+/// kernel is slower than the legacy kernel at 1 thread.
+pub fn enforce_mode() -> bool {
+    std::env::var("MLS_BENCH_ENFORCE")
+        .map(|v| !v.is_empty() && v != "0")
+        .unwrap_or(false)
+}
+
+/// The repository root (one level above the rust package), where the
+/// `BENCH_*.json` perf-trajectory files live.
+pub fn repo_root() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("..")
+}
+
+/// Machine-readable bench report: accumulates per-kernel results and
+/// derived ratios, then writes one `BENCH_<name>.json` file at the repo
+/// root. CI's bench-smoke step archives these as workflow artifacts, so
+/// every push carries its measured MMAC/s / Melem/s trajectory.
+pub struct BenchReport {
+    file: String,
+    meta: BTreeMap<String, Json>,
+    results: BTreeMap<String, Json>,
+    ratios: BTreeMap<String, Json>,
+}
+
+impl BenchReport {
+    /// Start a report that will be written to `<repo root>/<file>`.
+    pub fn new(file: &str, bench_name: &str) -> Self {
+        let mut meta = BTreeMap::new();
+        meta.insert("bench".to_string(), Json::Str(bench_name.to_string()));
+        meta.insert("smoke".to_string(), Json::Bool(smoke_mode()));
+        BenchReport {
+            file: file.to_string(),
+            meta,
+            results: BTreeMap::new(),
+            ratios: BTreeMap::new(),
+        }
+    }
+
+    /// Attach a top-level metadata value (thread count, problem size, ...).
+    pub fn set(&mut self, key: &str, value: Json) {
+        self.meta.insert(key.to_string(), value);
+    }
+
+    /// Record one measured kernel: timing distribution plus throughput in
+    /// `items / second` scaled to millions (`MMAC/s`, `Melem/s`, ...).
+    pub fn add_result(&mut self, r: &BenchResult, items: u64, unit: &str) {
+        let mut entry = BTreeMap::new();
+        entry.insert("median_s".to_string(), Json::Num(r.median.as_secs_f64()));
+        entry.insert("p10_s".to_string(), Json::Num(r.p10.as_secs_f64()));
+        entry.insert("p90_s".to_string(), Json::Num(r.p90.as_secs_f64()));
+        entry.insert("iters".to_string(), Json::Num(r.iters as f64));
+        entry.insert(
+            format!("m{unit}_per_s"),
+            Json::Num(r.throughput_items(items) / 1e6),
+        );
+        self.results.insert(r.name.clone(), Json::Obj(entry));
+    }
+
+    /// Record a derived speedup ratio (e.g. planar vs legacy at 1 thread).
+    pub fn add_ratio(&mut self, key: &str, ratio: f64) {
+        self.ratios.insert(key.to_string(), Json::Num(ratio));
+    }
+
+    /// Write the report to `<repo root>/<file>` and return the path.
+    pub fn write(&self) -> std::io::Result<PathBuf> {
+        self.write_to(&repo_root())
+    }
+
+    /// Write the report into `dir` (unit tests use a temp dir).
+    pub fn write_to(&self, dir: &Path) -> std::io::Result<PathBuf> {
+        let mut obj = self.meta.clone();
+        obj.insert("results".to_string(), Json::Obj(self.results.clone()));
+        obj.insert("ratios".to_string(), Json::Obj(self.ratios.clone()));
+        let path = dir.join(&self.file);
+        std::fs::write(&path, Json::Obj(obj).to_string_pretty() + "\n")?;
+        Ok(path)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -96,5 +183,28 @@ mod tests {
         });
         assert!(r.iters >= 10);
         assert!(r.median.as_nanos() > 0);
+    }
+
+    #[test]
+    fn report_round_trips_through_json() {
+        let r = bench("report-probe", Duration::from_millis(20), || {
+            black_box((0..1000).sum::<u64>());
+        });
+        let mut report = BenchReport::new("BENCH_test_report.json", "bench_unit_test");
+        report.set("threads", Json::Num(1.0));
+        report.add_result(&r, 1000, "elem");
+        report.add_ratio("probe_vs_itself", 1.0);
+        let dir = std::env::temp_dir();
+        let path = report.write_to(&dir).expect("write report");
+        let text = std::fs::read_to_string(&path).expect("read report");
+        let parsed = Json::parse(&text).expect("parse report");
+        assert_eq!(parsed.get("bench").and_then(Json::as_str), Some("bench_unit_test"));
+        let results = parsed.get("results").expect("results");
+        let probe = results.get("report-probe").expect("probe entry");
+        assert!(probe.get("median_s").and_then(Json::as_f64).unwrap() > 0.0);
+        assert!(probe.get("melem_per_s").and_then(Json::as_f64).unwrap() > 0.0);
+        let ratios = parsed.get("ratios").expect("ratios");
+        assert_eq!(ratios.get("probe_vs_itself").and_then(Json::as_f64), Some(1.0));
+        let _ = std::fs::remove_file(&path);
     }
 }

@@ -1,0 +1,180 @@
+//! Conv geometry edge cases the original suite skipped: stride 2, pad 0
+//! and pad 2, non-square inputs and kernels (`kh != kw`, `h != w`), and
+//! 1x1 kernels — asserting the decode-once planar kernel is bit-identical
+//! to the legacy reference (output values AND all five hardware-audit
+//! counters) across `QuantConfig`s {e2m1, e2m4, int4} and worker counts
+//! {1, 2, 8}, and that the counters match an independent clipped-window
+//! count of the geometry.
+
+use mls_train::arith::conv::{
+    conv2d_f32, lowbit_conv_legacy_threaded, lowbit_conv_threaded, ConvOutput,
+};
+use mls_train::mls::quantizer::{quantize, QuantConfig, Rounding};
+use mls_train::mls::MlsTensor;
+use mls_train::util::prop::grouped_tensor;
+use mls_train::util::rng::Pcg32;
+
+const THREAD_COUNTS: [usize; 3] = [1, 2, 8];
+
+/// (wshape [Co,Ci,Kh,Kw], ashape [N,Ci,H,W], stride, pad)
+const GEOMETRIES: [([usize; 4], [usize; 4], usize, usize); 11] = [
+    // square baseline at the pads the old suite skipped
+    ([4, 3, 3, 3], [2, 3, 6, 6], 1, 0),
+    ([4, 3, 3, 3], [2, 3, 6, 6], 1, 2),
+    // stride 2 with pad 0 / 1 / 2
+    ([4, 3, 3, 3], [2, 3, 6, 6], 2, 0),
+    ([4, 3, 3, 3], [2, 3, 7, 7], 2, 1),
+    ([4, 3, 3, 3], [2, 3, 7, 7], 2, 2),
+    // non-square kernels and inputs (kh != kw, h != w)
+    ([3, 2, 3, 2], [2, 2, 7, 5], 1, 1),
+    ([3, 2, 2, 3], [1, 2, 5, 8], 2, 1),
+    // 1x1 kernels: pad 0 (all interior) and pad 1 (all-halo border ring)
+    ([4, 3, 1, 1], [2, 3, 5, 5], 1, 0),
+    ([4, 3, 1, 1], [2, 3, 5, 5], 1, 1),
+    ([4, 3, 1, 1], [2, 3, 6, 4], 2, 0),
+    // kernel covers the whole input; pad larger than the kernel overhang
+    ([2, 3, 3, 3], [1, 3, 3, 3], 1, 2),
+];
+
+fn assert_convs_identical(a: &ConvOutput, b: &ConvOutput, tag: &str) {
+    assert_eq!(a.shape, b.shape, "{tag}: shape");
+    assert_eq!(a.z.len(), b.z.len(), "{tag}: z length");
+    for (i, (x, y)) in a.z.iter().zip(&b.z).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{tag}: z[{i}] {x} vs {y}");
+    }
+    assert_eq!(a.peak_acc_bits, b.peak_acc_bits, "{tag}: peak_acc_bits");
+    assert_eq!(a.mul_ops, b.mul_ops, "{tag}: mul_ops");
+    assert_eq!(a.int_add_ops, b.int_add_ops, "{tag}: int_add_ops");
+    assert_eq!(a.float_add_ops, b.float_add_ops, "{tag}: float_add_ops");
+    assert_eq!(a.group_scale_ops, b.group_scale_ops, "{tag}: group_scale_ops");
+}
+
+fn quant_cfgs() -> [QuantConfig; 3] {
+    let mk = |e, m| QuantConfig { rounding: Rounding::Nearest, ..QuantConfig::new(e, m) };
+    [mk(2, 4), mk(2, 1), mk(0, 4)]
+}
+
+fn quantize_pair(
+    cfg: &QuantConfig,
+    wshape: [usize; 4],
+    ashape: [usize; 4],
+    seed: u64,
+) -> (MlsTensor, MlsTensor) {
+    let mut rng = Pcg32::seeded(seed);
+    let w = grouped_tensor(&mut rng, wshape);
+    let a = grouped_tensor(&mut rng, ashape);
+    (quantize(&w, &wshape, cfg, &[]), quantize(&a, &ashape, cfg, &[]))
+}
+
+/// The number of in-bounds window taps summed over every output pixel —
+/// an independent reference for `mul_ops` / `int_add_ops` on clipped
+/// geometries (the counters count clipped windows, not kh*kw*pixels).
+fn clipped_window_taps(
+    wshape: [usize; 4],
+    ashape: [usize; 4],
+    stride: usize,
+    pad: usize,
+) -> u64 {
+    let [co_n, ci_n, kh, kw] = wshape;
+    let [n_n, _, h, wi] = ashape;
+    let ho = (h + 2 * pad - kh) / stride + 1;
+    let wo = (wi + 2 * pad - kw) / stride + 1;
+    let mut taps = 0u64;
+    for oy in 0..ho {
+        for ox in 0..wo {
+            for i in 0..kh {
+                for j in 0..kw {
+                    let iy = (oy * stride + i) as isize - pad as isize;
+                    let ix = (ox * stride + j) as isize - pad as isize;
+                    if iy >= 0 && ix >= 0 && iy < h as isize && ix < wi as isize {
+                        taps += 1;
+                    }
+                }
+            }
+        }
+    }
+    taps * (n_n * co_n * ci_n) as u64
+}
+
+#[test]
+fn planar_matches_legacy_across_geometries_and_formats() {
+    for (gi, &(wshape, ashape, stride, pad)) in GEOMETRIES.iter().enumerate() {
+        for cfg in quant_cfgs() {
+            let (tw, ta) = quantize_pair(&cfg, wshape, ashape, 200 + gi as u64);
+            let legacy = lowbit_conv_legacy_threaded(&tw, &ta, stride, pad, 1);
+            for threads in THREAD_COUNTS {
+                let planar = lowbit_conv_threaded(&tw, &ta, stride, pad, threads);
+                let tag = format!(
+                    "{} geom#{gi} w{wshape:?} a{ashape:?} s{stride} p{pad} @ {threads} threads",
+                    cfg.name()
+                );
+                assert_convs_identical(&legacy, &planar, &tag);
+                // the legacy kernel is itself thread-count independent
+                let legacy_t = lowbit_conv_legacy_threaded(&tw, &ta, stride, pad, threads);
+                assert_convs_identical(&legacy, &legacy_t, &format!("{tag} (legacy)"));
+            }
+        }
+    }
+}
+
+#[test]
+fn counters_match_independent_clipped_window_count() {
+    let cfg = quant_cfgs()[0];
+    for (gi, &(wshape, ashape, stride, pad)) in GEOMETRIES.iter().enumerate() {
+        let (tw, ta) = quantize_pair(&cfg, wshape, ashape, 300 + gi as u64);
+        let out = lowbit_conv_threaded(&tw, &ta, stride, pad, 2);
+        let taps = clipped_window_taps(wshape, ashape, stride, pad);
+        let [n_n, co_n, ho, wo] = out.shape;
+        let ci_n = wshape[1];
+        let pixels = (n_n * co_n * ho * wo) as u64;
+        let tag = format!("geom#{gi} s{stride} p{pad}");
+        assert_eq!(out.mul_ops, taps, "{tag}: mul_ops");
+        assert_eq!(out.int_add_ops, taps, "{tag}: int_add_ops");
+        assert_eq!(out.group_scale_ops, pixels * ci_n as u64, "{tag}: group_scale_ops");
+        assert_eq!(out.float_add_ops, pixels * (ci_n as u64 - 1), "{tag}: float_add_ops");
+    }
+}
+
+#[test]
+fn planar_tracks_float_path_across_geometries() {
+    let cfg = quant_cfgs()[0]; // e2m4 nearest
+    for (gi, &(wshape, ashape, stride, pad)) in GEOMETRIES.iter().enumerate() {
+        let (tw, ta) = quantize_pair(&cfg, wshape, ashape, 400 + gi as u64);
+        let out = lowbit_conv_threaded(&tw, &ta, stride, pad, 2);
+        let (zf, zshape) =
+            conv2d_f32(&tw.dequantize(), wshape, &ta.dequantize(), ashape, stride, pad);
+        assert_eq!(out.shape, zshape, "geom#{gi}");
+        let scale = zf.iter().fold(0.0f32, |m, v| m.max(v.abs())).max(1e-9);
+        for (i, (a, b)) in out.z.iter().zip(&zf).enumerate() {
+            assert!(
+                (a - b).abs() / scale < 1e-5,
+                "geom#{gi} idx {i}: int {a} vs float {b}"
+            );
+        }
+    }
+}
+
+#[test]
+fn all_zero_operands_pin_peak_acc_bits_to_one() {
+    // an all-zero tensor quantizes to s_t = 0 with every element sign 0;
+    // the conv runs every window but no accumulator ever leaves zero, so
+    // the audit reports the documented 1-bit floor (sign bit only) — on
+    // both kernels, at every thread count
+    let cfg = quant_cfgs()[0];
+    let wshape = [2usize, 3, 3, 3];
+    let ashape = [1usize, 3, 5, 5];
+    let zeros_w = vec![0.0f32; wshape.iter().product()];
+    let zeros_a = vec![0.0f32; ashape.iter().product()];
+    let tw = quantize(&zeros_w, &wshape, &cfg, &[]);
+    let ta = quantize(&zeros_a, &ashape, &cfg, &[]);
+    let legacy = lowbit_conv_legacy_threaded(&tw, &ta, 1, 1, 1);
+    assert_eq!(legacy.peak_acc_bits, 1);
+    assert!(legacy.z.iter().all(|&v| v == 0.0));
+    for threads in THREAD_COUNTS {
+        let planar = lowbit_conv_threaded(&tw, &ta, 1, 1, threads);
+        assert_convs_identical(&legacy, &planar, &format!("all-zero @ {threads} threads"));
+    }
+    // the windows still ran: op counters are geometry-driven, not
+    // value-driven
+    assert_eq!(legacy.mul_ops, clipped_window_taps(wshape, ashape, 1, 1));
+}

@@ -4,7 +4,9 @@
 //! execution layer serve the paper's bit-accurate simulator: threading is
 //! purely a scheduling choice, never a numerics choice.
 
-use mls_train::arith::conv::{lowbit_conv, lowbit_conv_threaded, ConvOutput};
+use mls_train::arith::conv::{
+    lowbit_conv, lowbit_conv_legacy_threaded, lowbit_conv_threaded, ConvOutput,
+};
 use mls_train::mls::quantizer::{quantize, quantize_threaded, QuantConfig, Rounding};
 use mls_train::mls::{Grouping, MlsTensor};
 use mls_train::util::prop::grouped_tensor;
@@ -89,6 +91,33 @@ fn lowbit_conv_identical_across_thread_counts() {
         for threads in THREAD_COUNTS {
             let p2 = lowbit_conv_threaded(&tw, &ta, 2, 0, threads);
             assert_convs_identical(&s2, &p2, &format!("<{e},{m}> s2 @ {threads} threads"));
+        }
+    }
+}
+
+#[test]
+fn planar_kernel_matches_legacy_kernel_across_thread_counts() {
+    // the decode-once planar kernel is a pure implementation change: for
+    // every format, geometry and worker count it must reproduce the legacy
+    // per-pixel kernel bit-for-bit — values and audit counters alike
+    let mut rng = Pcg32::seeded(104);
+    let wshape = [6usize, 5, 3, 3];
+    let ashape = [4usize, 5, 7, 7];
+    let w = grouped_tensor(&mut rng, wshape);
+    let a = grouped_tensor(&mut rng, ashape);
+
+    for (e, m) in [(2u32, 4u32), (2, 1), (0, 4)] {
+        let mut cfg = QuantConfig::new(e, m);
+        cfg.rounding = Rounding::Nearest;
+        let tw = quantize(&w, &wshape, &cfg, &[]);
+        let ta = quantize(&a, &ashape, &cfg, &[]);
+        for (stride, pad) in [(1usize, 1usize), (2, 0), (2, 2)] {
+            let legacy = lowbit_conv_legacy_threaded(&tw, &ta, stride, pad, 1);
+            for threads in THREAD_COUNTS {
+                let planar = lowbit_conv_threaded(&tw, &ta, stride, pad, threads);
+                let tag = format!("<{e},{m}> s{stride} p{pad} planar @ {threads} threads");
+                assert_convs_identical(&legacy, &planar, &tag);
+            }
         }
     }
 }
