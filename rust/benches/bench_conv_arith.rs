@@ -1,17 +1,21 @@
 //! Bench: the bit-accurate integer-path convolution (Eq. 6-8 simulator)
 //! vs the plain f32 convolution — the Table V / VI hot path in software.
 //!
-//! Measures the decode-once planar kernel against the legacy per-pixel
-//! kernel (serial and threaded, bit-identical by construction) and writes
-//! the machine-readable perf trajectory to `BENCH_conv.json` at the repo
-//! root. `--smoke` / `MLS_BENCH_SMOKE=1` switches to the fast CI
-//! anti-bit-rot mode; `MLS_BENCH_ENFORCE=1` turns the planar-vs-legacy
-//! 1-thread ratio into a hard gate (exit 1 on regression).
+//! Measures the cache-blocked packed-GEMM kernel (the `lowbit_conv`
+//! default) against the planar kernel (its direct baseline) and the
+//! legacy per-pixel kernel (all three bit-identical by construction) and
+//! writes the machine-readable perf trajectory to `BENCH_conv.json` at
+//! the repo root (schema: `schemas/bench_conv.schema.json`, validated in
+//! CI). `--smoke` / `MLS_BENCH_SMOKE=1` switches to the fast CI
+//! anti-bit-rot mode; `MLS_BENCH_ENFORCE=1` turns the serial speedup
+//! ratios into hard gates (exit 1 on regression): packed >= planar and
+//! planar >= legacy at 1 thread.
 
 use std::time::Duration;
 
 use mls_train::arith::conv::{
-    conv2d_f32_threaded, lowbit_conv, lowbit_conv_legacy_threaded, lowbit_conv_threaded,
+    conv2d_f32_threaded, lowbit_conv, lowbit_conv_legacy_threaded, lowbit_conv_planar_threaded,
+    lowbit_conv_threaded,
 };
 use mls_train::mls::quantizer::{quantize, QuantConfig, Rounding};
 use mls_train::util::bench::{bench, black_box, budget, enforce_mode, smoke_mode, BenchReport};
@@ -50,11 +54,14 @@ fn main() {
     let legacy_serial = bench("lowbit_conv/legacy_e2m4_serial", b, || {
         black_box(lowbit_conv_legacy_threaded(&tw, &ta, 1, 1, 1));
     });
-    println!("  -> {:.1} MMAC/s (legacy per-pixel decode kernel)", legacy_serial.throughput_items(macs) / 1e6);
+    println!(
+        "  -> {:.1} MMAC/s (legacy per-pixel decode kernel)",
+        legacy_serial.throughput_items(macs) / 1e6
+    );
     report.add_result(&legacy_serial, macs, "mac");
 
     let planar_serial = bench("lowbit_conv/planar_e2m4_serial", b, || {
-        black_box(lowbit_conv_threaded(&tw, &ta, 1, 1, 1));
+        black_box(lowbit_conv_planar_threaded(&tw, &ta, 1, 1, 1));
     });
     let planar_vs_legacy = legacy_serial.median.as_secs_f64() / planar_serial.median.as_secs_f64();
     println!(
@@ -64,16 +71,30 @@ fn main() {
     report.add_result(&planar_serial, macs, "mac");
     report.add_ratio("planar_vs_legacy_serial", planar_vs_legacy);
 
-    let planar_par = bench(&format!("lowbit_conv/planar_e2m4_t{threads}"), b, || {
+    let packed_serial = bench("lowbit_conv/packed_e2m4_serial", b, || {
+        black_box(lowbit_conv_threaded(&tw, &ta, 1, 1, 1));
+    });
+    let packed_vs_planar = planar_serial.median.as_secs_f64() / packed_serial.median.as_secs_f64();
+    let packed_vs_legacy = legacy_serial.median.as_secs_f64() / packed_serial.median.as_secs_f64();
+    println!(
+        "  -> {:.1} MMAC/s ({packed_vs_planar:.2}x vs planar, {packed_vs_legacy:.2}x vs legacy \
+         at 1 thread, bit-identical)",
+        packed_serial.throughput_items(macs) / 1e6
+    );
+    report.add_result(&packed_serial, macs, "mac");
+    report.add_ratio("packed_vs_planar_serial", packed_vs_planar);
+    report.add_ratio("packed_vs_legacy_serial", packed_vs_legacy);
+
+    let packed_par = bench(&format!("lowbit_conv/packed_e2m4_t{threads}"), b, || {
         black_box(lowbit_conv(&tw, &ta, 1, 1));
     });
-    let threaded_vs_serial = planar_serial.median.as_secs_f64() / planar_par.median.as_secs_f64();
+    let threaded_vs_serial = packed_serial.median.as_secs_f64() / packed_par.median.as_secs_f64();
     println!(
         "  -> {:.1} MMAC/s ({threaded_vs_serial:.2}x vs serial, bit-identical)",
-        planar_par.throughput_items(macs) / 1e6
+        packed_par.throughput_items(macs) / 1e6
     );
-    report.add_result(&planar_par, macs, "mac");
-    report.add_ratio("planar_threaded_vs_serial", threaded_vs_serial);
+    report.add_result(&packed_par, macs, "mac");
+    report.add_ratio("packed_threaded_vs_serial", threaded_vs_serial);
 
     let wq = tw.dequantize();
     let aq = ta.dequantize();
@@ -101,7 +122,7 @@ fn main() {
     cfg1.rounding = Rounding::Nearest;
     let tw1 = quantize(&w, &wshape, &cfg1, &[]);
     let ta1 = quantize(&a, &ashape, &cfg1, &[]);
-    let e2m1 = bench(&format!("lowbit_conv/planar_e2m1_t{threads}"), b, || {
+    let e2m1 = bench(&format!("lowbit_conv/packed_e2m1_t{threads}"), b, || {
         black_box(lowbit_conv(&tw1, &ta1, 1, 1));
     });
     println!("  -> {:.1} MMAC/s", e2m1.throughput_items(macs) / 1e6);
@@ -115,16 +136,24 @@ fn main() {
         }
     }
 
-    // CI perf guard: the decode-once kernel must not lose to the legacy
-    // path at 1 thread. Full runs gate at the acceptance floor of 1.0;
-    // smoke runs (~50 ms budgets, noisy shared runners) get a small
-    // margin so scheduling jitter cannot fail a push without a real
-    // regression — an actual planar regression reads well below this.
+    // CI perf guard: the packed-GEMM kernel must not lose to the planar
+    // kernel, nor planar to legacy, at 1 thread. Full runs gate at the
+    // acceptance floor of 1.0; smoke runs (~50 ms budgets, noisy shared
+    // runners) get a small margin so scheduling jitter cannot fail a push
+    // without a real regression — an actual regression reads well below
+    // this.
     let floor = if smoke_mode() { 0.9 } else { 1.0 };
     if enforce_mode() && planar_vs_legacy < floor {
         eprintln!(
             "PERF REGRESSION: planar kernel is {planar_vs_legacy:.3}x the legacy kernel at 1 \
              thread (< {floor})"
+        );
+        std::process::exit(1);
+    }
+    if enforce_mode() && packed_vs_planar < floor {
+        eprintln!(
+            "PERF REGRESSION: packed-GEMM kernel is {packed_vs_planar:.3}x the planar kernel at \
+             1 thread (< {floor})"
         );
         std::process::exit(1);
     }

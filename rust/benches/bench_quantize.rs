@@ -2,9 +2,11 @@
 //! Table VI — 4 muls + 2 adds per element on the paper's hardware; here we
 //! measure the software simulator's elements/s on the L3 hot path).
 //!
-//! Reports the serial baseline next to the group-sharded parallel path and
-//! writes the machine-readable trajectory to `BENCH_quantize.json` at the
-//! repo root; `--smoke` / `MLS_BENCH_SMOKE=1` switches to the fast CI mode.
+//! Reports the serial baseline next to the group-sharded parallel path
+//! (plus the tiny-tensor serial-fallback comparison) and writes the
+//! machine-readable trajectory to `BENCH_quantize.json` at the repo root
+//! (schema: `schemas/bench_quantize.schema.json`, validated in CI);
+//! `--smoke` / `MLS_BENCH_SMOKE=1` switches to the fast CI mode.
 
 use std::time::Duration;
 
@@ -76,6 +78,30 @@ fn main() {
     });
     println!("  -> {:.1} Melem/s", res.throughput_items(n as u64) / 1e6);
     report.add_result(&res, n as u64, "elem");
+
+    // tiny-tensor dispatch overhead: the ambient entry point stays serial
+    // below SERIAL_FALLBACK_ELEMS, so quantize() on a small tensor should
+    // beat forcing it across the pool
+    let small_shape = [4usize, 16, 8, 8];
+    let small_n: usize = small_shape.iter().product();
+    let xs = &x[..small_n];
+    let rs = &r[..small_n];
+    let small_fallback = bench("quantize/small_e2m4_fallback", b, || {
+        black_box(quantize(xs, &small_shape, &cfg, rs));
+    });
+    println!("  -> {:.1} Melem/s", small_fallback.throughput_items(small_n as u64) / 1e6);
+    report.add_result(&small_fallback, small_n as u64, "elem");
+    let small_pool = bench(&format!("quantize/small_e2m4_forced_t{threads}"), b, || {
+        black_box(quantize_threaded(xs, &small_shape, &cfg, rs, threads));
+    });
+    let small_ratio = small_pool.median.as_secs_f64() / small_fallback.median.as_secs_f64();
+    println!(
+        "  -> {:.1} Melem/s (fallback is {small_ratio:.2}x the forced pool dispatch, \
+         bit-identical)",
+        small_pool.throughput_items(small_n as u64) / 1e6
+    );
+    report.add_result(&small_pool, small_n as u64, "elem");
+    report.add_ratio("small_fallback_vs_forced_pool", small_ratio);
 
     match report.write() {
         Ok(path) => println!("wrote {}", path.display()),

@@ -6,23 +6,34 @@
 //! activations `[N, Ci, H, W]` grouped `(n, ci)`; the intra-group MAC runs
 //! over the K x K window, the tree reduces over Ci.
 //!
-//! Two kernels produce the same bits:
+//! Three kernels produce the same bits:
 //!
-//! * the **planar** kernel (default, [`super::planes`]) decodes each
-//!   operand tensor once into `signed_frac`/`shift` planes, hoists the
-//!   group-scale products to a per-tile table, and splits every output
-//!   plane into a checked-free interior and a clipped halo;
-//! * the **legacy** kernel ([`lowbit_conv_legacy_threaded`]) re-decodes
-//!   operands per pixel through [`Element`]/[`intra_group_mac`] and is
-//!   kept as the bit-exactness reference (and the bench baseline).
+//! * the **packed-GEMM** kernel (default, [`super::gemm`] on the panels
+//!   of [`super::pack`]) — operands decoded once AND repacked into
+//!   cache-blocked panels, the Eq. 7 MAC running as a register-tiled GEMM
+//!   whose epilogue applies the hoisted group-scale table and adder tree;
+//! * the **planar** kernel ([`super::planes`], the bench baseline the
+//!   packed speedup ratio is measured from) — decode-once planes walked
+//!   in conv order with an interior/halo pixel split;
+//! * the **legacy** kernel ([`lowbit_conv_legacy_threaded`]) — re-decodes
+//!   operands per pixel through [`Element`]/[`intra_group_mac`], kept as
+//!   the independent bit-exactness reference.
+//!
+//! All kernels write output tiles directly into the preallocated
+//! `[N, Co, Ho, Wo]` buffer at their row offsets
+//! ([`crate::util::parallel::DisjointWriter`]) — there is no
+//! concatenate-tiles merge pass anymore; only the audit counters are
+//! merged (sum/max, order-independent).
 
+use super::gemm;
 use super::group_scale::GroupScaleFactor;
 use super::intra::{intra_group_mac, Element};
+use super::pack;
 use super::planes::{self, DecodedPlanes};
 use super::tree::tree_sum;
 use crate::mls::format::EmFormat;
 use crate::mls::{Grouping, MlsTensor};
-use crate::util::parallel;
+use crate::util::parallel::{self, DisjointWriter};
 
 /// Outcome of an integer-path convolution, with hardware-audit counters.
 pub struct ConvOutput {
@@ -52,10 +63,10 @@ pub(crate) struct ConvDims {
     pub(crate) pad: usize,
 }
 
-/// One `(n, co)` output tile: its `[ho, wo]` plane plus the hardware-audit
-/// counters it accumulated.
-pub(crate) struct ConvTile {
-    pub(crate) z: Vec<f32>,
+/// Hardware-audit counters one work unit accumulated (its output pixels
+/// land in the shared buffer directly).
+#[derive(Clone, Copy, Default)]
+pub(crate) struct TileStats {
     pub(crate) peak_bits: u32,
     pub(crate) muls: u64,
     pub(crate) iadds: u64,
@@ -63,8 +74,18 @@ pub(crate) struct ConvTile {
     pub(crate) gscales: u64,
 }
 
+impl TileStats {
+    fn merge(&mut self, other: &TileStats) {
+        self.peak_bits = self.peak_bits.max(other.peak_bits);
+        self.muls += other.muls;
+        self.iadds += other.iadds;
+        self.fadds += other.fadds;
+        self.gscales += other.gscales;
+    }
+}
+
 /// Validate operand shapes/configs and derive the conv geometry. Shared by
-/// the planar and legacy entry points so both agree on it exactly.
+/// the packed, planar and legacy entry points so all agree on it exactly.
 fn conv_geometry(
     w: &MlsTensor,
     a: &MlsTensor,
@@ -84,29 +105,39 @@ fn conv_geometry(
     (ConvDims { ci_n, kh, kw, h, wi, ho, wo, stride, pad }, n_n, co_n)
 }
 
-/// Merge per-tile results in serial tile order: z planes concatenate into
-/// the row-major [N, Co, Ho, Wo] layout; counters sum / max exactly.
-fn merge_tiles(tiles: Vec<ConvTile>, shape: [usize; 4]) -> ConvOutput {
-    let [n_n, co_n, ho, wo] = shape;
-    let mut z = Vec::with_capacity(n_n * co_n * ho * wo);
-    let mut peak_bits = 0u32;
-    let (mut muls, mut iadds, mut fadds, mut gscales) = (0u64, 0u64, 0u64, 0u64);
-    for tile in tiles {
-        z.extend_from_slice(&tile.z);
-        peak_bits = peak_bits.max(tile.peak_bits);
-        muls += tile.muls;
-        iadds += tile.iadds;
-        fadds += tile.fadds;
-        gscales += tile.gscales;
+/// Drive a per-`(n, co)`-tile kernel over the pool, each tile writing its
+/// `[Ho, Wo]` plane directly into the output buffer (tiles are contiguous
+/// in `[N, Co, Ho, Wo]`), and merge the audit counters.
+fn run_tiled<F>(n_n: usize, co_n: usize, d: ConvDims, threads: usize, kernel: F) -> ConvOutput
+where
+    F: Fn(usize, usize, &mut [f32]) -> TileStats + Sync,
+{
+    let tile_len = d.ho * d.wo;
+    let mut z = vec![0.0f32; n_n * co_n * tile_len];
+    let writer = DisjointWriter::new(&mut z);
+    let parts = parallel::map_ranges(threads, n_n * co_n, |lo, hi| {
+        let mut stats = TileStats::default();
+        for t in lo..hi {
+            // SAFETY: tile t owns exactly z[t*tile_len .. (t+1)*tile_len]
+            // and ranges are disjoint, so no two spans overlap
+            let tile = unsafe { writer.span(t * tile_len, tile_len) };
+            stats.merge(&kernel(t / co_n, t % co_n, tile));
+        }
+        stats
+    });
+    drop(writer);
+    let mut stats = TileStats::default();
+    for p in &parts {
+        stats.merge(p);
     }
     ConvOutput {
         z,
-        shape,
-        peak_acc_bits: peak_bits,
-        mul_ops: muls,
-        int_add_ops: iadds,
-        float_add_ops: fadds,
-        group_scale_ops: gscales,
+        shape: [n_n, co_n, d.ho, d.wo],
+        peak_acc_bits: stats.peak_bits,
+        mul_ops: stats.muls,
+        int_add_ops: stats.iadds,
+        float_add_ops: stats.fadds,
+        group_scale_ops: stats.gscales,
     }
 }
 
@@ -114,23 +145,23 @@ fn merge_tiles(tiles: Vec<ConvTile>, shape: [usize; 4]) -> ConvOutput {
 /// INCLUDES the tensor scales `S_t^w * S_t^a` so it is directly comparable
 /// with a float convolution of the dequantized tensors.
 ///
-/// Runs the decode-once planar kernel ([`super::planes`]) sharded over
-/// `(n, co)` output tiles on the [`crate::util::parallel`] pool
-/// (`MLS_THREADS` workers); see [`lowbit_conv_threaded`] for the
-/// bit-identical-across-thread-counts guarantee.
+/// Runs the cache-blocked packed-GEMM kernel ([`super::gemm`]) on the
+/// persistent [`crate::util::parallel`] pool (`MLS_THREADS` workers); see
+/// [`lowbit_conv_threaded`] for the bit-identical-across-thread-counts
+/// guarantee.
 pub fn lowbit_conv(w: &MlsTensor, a: &MlsTensor, stride: usize, pad: usize) -> ConvOutput {
     lowbit_conv_threaded(w, a, stride, pad, parallel::num_threads())
 }
 
 /// [`lowbit_conv`] with an explicit worker count.
 ///
-/// The operand planes are decoded once (element-wise, thread-count
-/// independent), then every `(n, co)` tile is computed independently with
-/// the exact serial per-tile operation order, and tile results (values AND
-/// counters) are merged in serial tile order — so the output is
-/// bit-identical for every `threads` value AND bit-identical to the legacy
-/// kernel (both pinned by `rust/tests/parallel_equivalence.rs` and
-/// `rust/tests/conv_geometry.rs`).
+/// The operand planes are decoded and packed once (element-wise /
+/// layout-only, thread-count independent), every work unit computes its
+/// output rows with the exact serial per-(pixel, group) operation order,
+/// and the audit counters merge by sum/max — so the output is
+/// bit-identical for every `threads` value AND bit-identical to the
+/// planar and legacy kernels (pinned by `rust/tests/conv_fuzz.rs`,
+/// `rust/tests/conv_geometry.rs`, `rust/tests/parallel_equivalence.rs`).
 pub fn lowbit_conv_threaded(
     w: &MlsTensor,
     a: &MlsTensor,
@@ -138,7 +169,7 @@ pub fn lowbit_conv_threaded(
     pad: usize,
     threads: usize,
 ) -> ConvOutput {
-    // decode once per tensor, shared read-only by every tile
+    // decode once per tensor, shared read-only by every work unit
     let wp = DecodedPlanes::of_threaded(w, threads);
     let ap = DecodedPlanes::of_threaded(a, threads);
     lowbit_conv_with_planes(w, &wp, a, &ap, stride, pad, threads)
@@ -148,7 +179,8 @@ pub fn lowbit_conv_threaded(
 /// tensor convolved repeatedly (fixed weights across a batch sweep, say)
 /// pays its [`MlsTensor::decoded_planes`] decode once across calls. The
 /// planes must belong to the corresponding tensors; results are identical
-/// to [`lowbit_conv_threaded`] by construction.
+/// to [`lowbit_conv_threaded`] by construction. (The GEMM weight panels
+/// are packed from `wp` per call — an O(|W|) copy.)
 pub fn lowbit_conv_with_planes(
     w: &MlsTensor,
     wp: &DecodedPlanes,
@@ -165,18 +197,106 @@ pub fn lowbit_conv_with_planes(
     assert_eq!(ap.fmt, a.cfg.element, "activation planes decoded under a different element format");
     let fmt = w.cfg.element;
     let st = w.s_t * a.s_t;
+    let scale_log2 = 2 * fmt.emin() - 2 * fmt.m as i32;
 
-    let tiles = parallel::map_collect(threads, n_n * co_n, |t| {
-        planes::conv_tile_planar(wp, ap, w, a, t / co_n, t % co_n, dims, fmt, st)
+    let kdim = dims.ci_n * dims.kh * dims.kw;
+    let pw = pack::pack_weights(wp, co_n, kdim, threads);
+    // geometry-only half of the analytic tap count, hoisted out of the
+    // per-row work (rows_ib * col_taps = a row's in-bounds window taps)
+    let col_taps = gemm::col_taps(dims);
+
+    let tile_len = dims.ho * dims.wo;
+    let mut z = vec![0.0f32; n_n * co_n * tile_len];
+    let writer = DisjointWriter::new(&mut z);
+    // work units are (n, oy) output rows: the im2col row panel is packed
+    // once and reused by every output channel of that row
+    let units = n_n * dims.ho;
+    let parts = parallel::map_ranges(threads, units, |lo, hi| {
+        pack::with_scratch(|scratch| {
+            let mut peak: i64 = 0;
+            let mut taps: u64 = 0;
+            let mut last_n = usize::MAX;
+            for u in lo..hi {
+                let (n, oy) = (u / dims.ho, u % dims.ho);
+                if n != last_n {
+                    // hoist the per-(co, ci) group-scale factor table —
+                    // it depends on the batch sample, never on the pixel
+                    scratch.factors.clear();
+                    for co in 0..co_n {
+                        for ci in 0..dims.ci_n {
+                            let wg = co * dims.ci_n + ci;
+                            let ag = n * dims.ci_n + ci;
+                            scratch.factors.push(GroupScaleFactor::combine(
+                                w.sg_exp[wg],
+                                w.sg_man[wg],
+                                a.sg_exp[ag],
+                                a.sg_man[ag],
+                            ));
+                        }
+                    }
+                    last_n = n;
+                }
+                let (row_peak, rows_ib) = gemm::conv_row_packed(
+                    &pw, ap, scratch, n, oy, dims, scale_log2, st, &writer,
+                );
+                peak = peak.max(row_peak);
+                taps += rows_ib as u64 * col_taps;
+            }
+            (peak, taps)
+        })
     });
-    merge_tiles(tiles, [n_n, co_n, dims.ho, dims.wo])
+    drop(writer);
+
+    let mut peak: i64 = 0;
+    let mut taps = 0u64;
+    for (p, t) in parts {
+        peak = peak.max(p);
+        taps += t;
+    }
+    let pixels = (n_n * co_n) as u64 * tile_len as u64;
+    // same peak-bits semantics as the planar/legacy per-tile merge: any
+    // processed (pixel, group) reports at least the 1-bit sign floor
+    let peak_acc_bits = if pixels == 0 || dims.ci_n == 0 {
+        0
+    } else {
+        64 - peak.unsigned_abs().leading_zeros() + 1
+    };
+    ConvOutput {
+        z,
+        shape: [n_n, co_n, dims.ho, dims.wo],
+        peak_acc_bits,
+        mul_ops: taps * (co_n * dims.ci_n) as u64,
+        int_add_ops: taps * (co_n * dims.ci_n) as u64,
+        float_add_ops: pixels * (dims.ci_n as u64 - 1),
+        group_scale_ops: pixels * dims.ci_n as u64,
+    }
+}
+
+/// The decode-once planar kernel ([`super::planes`]) as an explicit entry
+/// point — the baseline `bench_conv_arith` measures the packed-GEMM
+/// speedup (`packed_vs_planar_serial`) against. Bit-identical to
+/// [`lowbit_conv_threaded`] and [`lowbit_conv_legacy_threaded`].
+pub fn lowbit_conv_planar_threaded(
+    w: &MlsTensor,
+    a: &MlsTensor,
+    stride: usize,
+    pad: usize,
+    threads: usize,
+) -> ConvOutput {
+    let (dims, n_n, co_n) = conv_geometry(w, a, stride, pad);
+    let fmt = w.cfg.element;
+    let st = w.s_t * a.s_t;
+    let wp = DecodedPlanes::of_threaded(w, threads);
+    let ap = DecodedPlanes::of_threaded(a, threads);
+    run_tiled(n_n, co_n, dims, threads, |n, co, tile| {
+        planes::conv_tile_planar(&wp, &ap, w, a, n, co, dims, fmt, st, tile)
+    })
 }
 
 /// The pre-planar reference kernel: re-decodes operands per output pixel
 /// through [`Element`] buffers and [`intra_group_mac`], recomputing the
-/// group-scale product per pixel. Kept (a) as the independent reference
-/// the planar kernel is bit-compared against and (b) as the baseline the
-/// `bench_conv_arith` speedup ratio is measured from.
+/// group-scale product per pixel. Kept as the independent reference the
+/// packed and planar kernels are bit-compared against.
 pub fn lowbit_conv_legacy_threaded(
     w: &MlsTensor,
     a: &MlsTensor,
@@ -187,15 +307,14 @@ pub fn lowbit_conv_legacy_threaded(
     let (dims, n_n, co_n) = conv_geometry(w, a, stride, pad);
     let fmt = w.cfg.element;
     let st = w.s_t * a.s_t;
-
-    let tiles = parallel::map_collect(threads, n_n * co_n, |t| {
-        conv_tile_legacy(w, a, t / co_n, t % co_n, dims, fmt, st)
-    });
-    merge_tiles(tiles, [n_n, co_n, dims.ho, dims.wo])
+    run_tiled(n_n, co_n, dims, threads, |n, co, tile| {
+        conv_tile_legacy(w, a, n, co, dims, fmt, st, tile)
+    })
 }
 
 /// Compute one `(n, co)` output tile the legacy way: per-pixel operand
 /// gather -> intra-MAC -> per-pixel group scale -> tree.
+#[allow(clippy::too_many_arguments)]
 fn conv_tile_legacy(
     w: &MlsTensor,
     a: &MlsTensor,
@@ -204,9 +323,9 @@ fn conv_tile_legacy(
     d: ConvDims,
     fmt: EmFormat,
     st: f32,
-) -> ConvTile {
+    z: &mut [f32],
+) -> TileStats {
     let ConvDims { ci_n, kh, kw, h, wi, ho, wo, stride, pad } = d;
-    let mut z = vec![0.0f32; ho * wo];
     let mut peak_bits = 0u32;
     let (mut muls, mut iadds, mut fadds, mut gscales) = (0u64, 0u64, 0u64, 0u64);
 
@@ -252,7 +371,7 @@ fn conv_tile_legacy(
         }
     }
 
-    ConvTile { z, peak_bits, muls, iadds, fadds, gscales }
+    TileStats { peak_bits, muls, iadds, fadds, gscales }
 }
 
 /// Reference: plain f32 convolution (NCHW x OIHW), used for the float path
@@ -273,7 +392,10 @@ pub fn conv2d_f32(
     conv2d_f32_threaded(w, wshape, a, ashape, stride, pad, parallel::num_threads())
 }
 
-/// [`conv2d_f32`] with an explicit worker count.
+/// [`conv2d_f32`] with an explicit worker count. Tiles write directly
+/// into the preallocated `[N, Co, Ho, Wo]` buffer (no concat pass) via
+/// the same [`run_tiled`] scaffolding as the integer kernels (the f32
+/// path has no audit counters, so its tile stats are all zero).
 pub fn conv2d_f32_threaded(
     w: &[f32],
     wshape: [usize; 4],
@@ -290,22 +412,18 @@ pub fn conv2d_f32_threaded(
     let wo = (wi + 2 * pad - kw) / stride + 1;
     let dims = ConvDims { ci_n, kh, kw, h, wi, ho, wo, stride, pad };
 
-    let tiles = parallel::map_collect(threads, n_n * co_n, |t| {
-        conv2d_f32_tile(w, a, t / co_n, t % co_n, dims)
+    let out = run_tiled(n_n, co_n, dims, threads, |n, co, tile| {
+        conv2d_f32_tile(w, a, n, co, dims, tile);
+        TileStats::default()
     });
-    let mut z = Vec::with_capacity(n_n * co_n * ho * wo);
-    for tile in tiles {
-        z.extend_from_slice(&tile);
-    }
-    (z, [n_n, co_n, ho, wo])
+    (out.z, out.shape)
 }
 
 /// One `(n, co)` plane of the f32 reference conv, interior/halo split.
-fn conv2d_f32_tile(w: &[f32], a: &[f32], n: usize, co: usize, d: ConvDims) -> Vec<f32> {
+fn conv2d_f32_tile(w: &[f32], a: &[f32], n: usize, co: usize, d: ConvDims, z: &mut [f32]) {
     let ConvDims { ci_n, kh, kw, h, wi, ho, wo, stride, pad } = d;
     let (oy_lo, oy_hi) = planes::interior_span(h, kh, stride, pad, ho);
     let (ox_lo, ox_hi) = planes::interior_span(wi, kw, stride, pad, wo);
-    let mut z = vec![0.0f32; ho * wo];
     for oy in 0..ho {
         let row_interior = oy >= oy_lo && oy < oy_hi;
         for ox in 0..wo {
@@ -345,7 +463,6 @@ fn conv2d_f32_tile(w: &[f32], a: &[f32], n: usize, co: usize, d: ConvDims) -> Ve
             z[oy * wo + ox] = acc as f32;
         }
     }
-    z
 }
 
 #[cfg(test)]
@@ -432,25 +549,31 @@ mod tests {
         assert!(out.mul_ops <= 96 * 9);
     }
 
+    fn assert_outputs_identical(x: &ConvOutput, y: &ConvOutput) {
+        assert_eq!(x.shape, y.shape);
+        for (i, (a, b)) in x.z.iter().zip(&y.z).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "z[{i}]");
+        }
+        assert_eq!(x.peak_acc_bits, y.peak_acc_bits);
+        assert_eq!(x.mul_ops, y.mul_ops);
+        assert_eq!(x.int_add_ops, y.int_add_ops);
+        assert_eq!(x.float_add_ops, y.float_add_ops);
+        assert_eq!(x.group_scale_ops, y.group_scale_ops);
+    }
+
     #[test]
-    fn planar_matches_legacy_kernel() {
+    fn packed_matches_planar_and_legacy_kernels() {
         let mut rng = Pcg32::seeded(25);
         let cfg = QuantConfig { rounding: Rounding::Nearest, ..QuantConfig::new(2, 4) };
         let wshape = [4usize, 3, 3, 3];
         let ashape = [2usize, 3, 6, 6];
         let tw = quantize(&rand_nchw(&mut rng, wshape), &wshape, &cfg, &[]);
         let ta = quantize(&rand_nchw(&mut rng, ashape), &ashape, &cfg, &[]);
-        let new = lowbit_conv_threaded(&tw, &ta, 1, 1, 1);
-        let old = lowbit_conv_legacy_threaded(&tw, &ta, 1, 1, 1);
-        assert_eq!(new.shape, old.shape);
-        for (i, (x, y)) in new.z.iter().zip(&old.z).enumerate() {
-            assert_eq!(x.to_bits(), y.to_bits(), "z[{i}]");
-        }
-        assert_eq!(new.peak_acc_bits, old.peak_acc_bits);
-        assert_eq!(new.mul_ops, old.mul_ops);
-        assert_eq!(new.int_add_ops, old.int_add_ops);
-        assert_eq!(new.float_add_ops, old.float_add_ops);
-        assert_eq!(new.group_scale_ops, old.group_scale_ops);
+        let packed = lowbit_conv_threaded(&tw, &ta, 1, 1, 1);
+        let planar = lowbit_conv_planar_threaded(&tw, &ta, 1, 1, 1);
+        let legacy = lowbit_conv_legacy_threaded(&tw, &ta, 1, 1, 1);
+        assert_outputs_identical(&packed, &planar);
+        assert_outputs_identical(&packed, &legacy);
     }
 
     #[test]
@@ -465,15 +588,7 @@ mod tests {
         let ap = ta.decoded_planes();
         let reused = lowbit_conv_with_planes(&tw, &wp, &ta, &ap, 1, 1, 2);
         let direct = lowbit_conv_threaded(&tw, &ta, 1, 1, 2);
-        assert_eq!(reused.shape, direct.shape);
-        for (i, (x, y)) in reused.z.iter().zip(&direct.z).enumerate() {
-            assert_eq!(x.to_bits(), y.to_bits(), "z[{i}]");
-        }
-        assert_eq!(reused.peak_acc_bits, direct.peak_acc_bits);
-        assert_eq!(reused.mul_ops, direct.mul_ops);
-        assert_eq!(reused.int_add_ops, direct.int_add_ops);
-        assert_eq!(reused.float_add_ops, direct.float_add_ops);
-        assert_eq!(reused.group_scale_ops, direct.group_scale_ops);
+        assert_outputs_identical(&reused, &direct);
     }
 
     #[test]

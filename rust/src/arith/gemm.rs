@@ -1,0 +1,163 @@
+//! The cache-blocked packed-GEMM lowering of the low-bit conv — the
+//! default `lowbit_conv` kernel.
+//!
+//! [`super::planes`] removed the per-pixel decode; this module removes the
+//! conv-order walk. The Eq. 7 shift-MAC runs as a blocked GEMM over the
+//! panels [`super::pack`] builds:
+//!
+//! ```text
+//!   Nc : one output row, im2col-packed as a [K][Wo_p] panel (built once
+//!        per (n, oy), reused by every output channel)
+//!   Mc : the MR-wide weight panels, swept per row — one contiguous
+//!        forward stream per block, L1/L2-resident across the row
+//!   Kc : the reduction runs in per-ci segments of kh*kw taps; each
+//!        segment ends at a register-tile flush through the group-scale
+//!        epilogue (Eq. 8), because the integer accumulator is per
+//!        scaling group by construction
+//! ```
+//!
+//! The microkernel is an [`MR`] x [`NR`] (4 x 8) register tile: MR output
+//! channels x NR output pixels accumulate in `i64` registers while both
+//! panel streams advance strictly forward; all trip counts are constants
+//! so the compiler unrolls the tile. Ragged edges (last channel block,
+//! last pixel block) run the same code over zero-padded lanes — a zero
+//! fraction is an arithmetic no-op for values AND for the running
+//! `|acc|` peak, so no separate edge kernel exists. The epilogue applies
+//! the per-`(co, ci)` [`GroupScaleFactor`] table hoisted per batch
+//! sample, and the inter-group adder tree writes each finished pixel
+//! straight into its `[N, Co, Ho, Wo]` row offset (no tile concatenation
+//! pass).
+//!
+//! ## Bit-identity
+//!
+//! Per (pixel, scaling group) the accumulated tap sequence is exactly the
+//! legacy/planar order (`ci` outer, kernel rows, kernel columns), border
+//! taps contribute zero, and the epilogue/tree arithmetic is the same f32
+//! op sequence — so output values and all five hardware-audit counters
+//! (`peak_acc_bits`, `mul_ops`, `int_add_ops`, `float_add_ops`,
+//! `group_scale_ops`) are bit-identical to both older kernels for every
+//! format, geometry, and thread count. `rust/tests/conv_fuzz.rs` sweeps
+//! ~200 random geometries across all three kernels;
+//! `rust/tests/conv_geometry.rs` pins the named edge cases. The
+//! `mul_ops`/`int_add_ops` taps are counted analytically from the
+//! geometry (the legacy counters are geometry-driven, never
+//! value-driven), which is one more reason the padded-lane no-ops cost
+//! nothing.
+//!
+//! [`GroupScaleFactor`]: super::group_scale::GroupScaleFactor
+
+use super::conv::ConvDims;
+use super::pack::{PackScratch, PackedWeights, MR, NR};
+use super::planes::DecodedPlanes;
+use super::tree::tree_sum;
+use crate::util::parallel::DisjointWriter;
+
+/// In-bounds kernel *columns* summed over a row's output positions —
+/// the geometry-only half of the analytic `mul_ops` count (the other
+/// half, in-bounds kernel rows, depends on `oy` and comes from
+/// [`PackScratch::pack_row`]). Computed once per conv by the driver.
+pub(crate) fn col_taps(d: ConvDims) -> u64 {
+    let ConvDims { kw, wi, wo, stride, pad, .. } = d;
+    let mut taps = 0u64;
+    for x in 0..wo {
+        for j in 0..kw {
+            let ix = (x * stride + j) as isize - pad as isize;
+            if ix >= 0 && (ix as usize) < wi {
+                taps += 1;
+            }
+        }
+    }
+    taps
+}
+
+/// Compute one output row `(n, oy, all co, all ox)` on the packed panels,
+/// writing finished pixels straight into `zw` at their `[N, Co, Ho, Wo]`
+/// offsets. Returns `(row peak |acc|, in-bounds kernel rows for this
+/// oy)` — the caller derives the audit counters analytically as
+/// `rows_ib * col_taps * co_n * ci_n` (clipping is rectangular, so the
+/// in-bounds window size separates into rows x columns).
+///
+/// `scratch.factors` must hold the `co_n * ci_n` hoisted group-scale
+/// factors for batch sample `n` (co-major), see the driver in
+/// [`super::conv`].
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn conv_row_packed(
+    pw: &PackedWeights,
+    ap: &DecodedPlanes,
+    scratch: &mut PackScratch,
+    n: usize,
+    oy: usize,
+    d: ConvDims,
+    scale_log2: i32,
+    st: f32,
+    zw: &DisjointWriter<f32>,
+) -> (i64, usize) {
+    let ConvDims { ci_n, kh, kw, h, wi, ho, wo, stride, pad } = d;
+    let rows_ib = scratch.pack_row(ap, n, oy, ci_n, kh, kw, h, wi, wo, stride, pad);
+
+    let co_n = pw.co_n;
+    let kdim = pw.kdim;
+    let kk = kh * kw;
+    let wo_p = wo.div_ceil(NR) * NR;
+    // split the arena so the panel borrows stay disjoint
+    let PackScratch { a_frac, a_shift, cbuf, factors } = scratch;
+    cbuf.resize(MR * NR * ci_n, 0.0);
+    let mut peak: i64 = 0;
+
+    for x0 in (0..wo).step_by(NR) {
+        let nr = (wo - x0).min(NR);
+        for b in 0..pw.blocks {
+            let m0 = b * MR;
+            let mr = (co_n - m0).min(MR);
+            let wfrac = &pw.frac[b * kdim * MR..(b + 1) * kdim * MR];
+            let wshift = &pw.shift[b * kdim * MR..(b + 1) * kdim * MR];
+            for ci in 0..ci_n {
+                // Kc segment: one scaling group's kh*kw taps, register
+                // accumulators + lane-wise running |acc| peaks
+                let mut acc = [[0i64; NR]; MR];
+                let mut pk = [[0i64; NR]; MR];
+                for t in 0..kk {
+                    let k = ci * kk + t;
+                    let wf = &wfrac[k * MR..k * MR + MR];
+                    let ws = &wshift[k * MR..k * MR + MR];
+                    let af = &a_frac[k * wo_p + x0..k * wo_p + x0 + NR];
+                    let ash = &a_shift[k * wo_p + x0..k * wo_p + x0 + NR];
+                    for (m, (accm, pkm)) in acc.iter_mut().zip(pk.iter_mut()).enumerate() {
+                        let wfm = wf[m] as i64;
+                        let wsm = ws[m] as u32;
+                        for x in 0..NR {
+                            let prod = wfm * af[x] as i64;
+                            accm[x] += prod << (wsm + ash[x] as u32);
+                            pkm[x] = pkm[x].max(accm[x].abs());
+                        }
+                    }
+                }
+                // epilogue: Eq. 8 group scale into the contribution rows
+                for m in 0..mr {
+                    let factor = factors[(m0 + m) * ci_n + ci];
+                    for x in 0..nr {
+                        cbuf[(m * NR + x) * ci_n + ci] = factor.apply(acc[m][x], scale_log2);
+                    }
+                }
+                for pkm in &pk {
+                    for &p in pkm {
+                        peak = peak.max(p);
+                    }
+                }
+            }
+            // inter-group adder tree, straight into the output rows
+            for m in 0..mr {
+                let co = m0 + m;
+                // SAFETY: span (n, co, oy, x0..x0+nr) — work units own
+                // disjoint oy rows and x0 blocks are disjoint within one
+                // call, so no two live spans overlap
+                let out = unsafe { zw.span(((n * co_n + co) * ho + oy) * wo + x0, nr) };
+                for (x, slot) in out.iter_mut().enumerate() {
+                    let row = &cbuf[(m * NR + x) * ci_n..(m * NR + x + 1) * ci_n];
+                    *slot = st * tree_sum(row);
+                }
+            }
+        }
+    }
+    (peak, rows_ib)
+}

@@ -11,15 +11,19 @@
 //! live accumulator range; [`group_scale`] applies `S_p = S_g^w * S_g^a` as
 //! exact shift-adds; [`tree`] is the floating-point adder tree;
 //! [`conv`] composes them into a full `Conv(qW, qA)` over NCHW tensors and
-//! cross-checks against the dequantized float path; [`planes`] is the
-//! decode-once planar kernel the default conv path runs on (operands
-//! decoded once per tensor, group scales hoisted per tile, interior/halo
-//! pixel split — bit-identical to the legacy per-pixel path); [`bitwidth`]
-//! carries the Sec. V-C accumulation-width analysis.
+//! cross-checks against the dequantized float path; [`pack`] + [`gemm`]
+//! are the cache-blocked packed-GEMM kernel the default conv path runs on
+//! (operands decoded once AND repacked into MR-lane / im2col panels, the
+//! Eq. 7 MAC register-tiled, group scales applied in the epilogue);
+//! [`planes`] is the decode-once planar kernel kept as the bench baseline
+//! — all three conv kernels are bit-identical; [`bitwidth`] carries the
+//! Sec. V-C accumulation-width analysis.
 
 pub mod bitwidth;
 pub mod conv;
+pub mod gemm;
 pub mod group_scale;
 pub mod intra;
+pub mod pack;
 pub mod planes;
 pub mod tree;

@@ -1,0 +1,292 @@
+//! Operand panel packing for the cache-blocked packed-GEMM conv kernel
+//! ([`super::gemm`]), plus the per-worker scratch arena the panels live
+//! in.
+//!
+//! The planar kernel ([`super::planes`]) already decodes each tensor once,
+//! but its inner MAC still walks the `signed_frac`/`shift` planes in conv
+//! order: the weight stream restarts every output pixel and the
+//! activation stream jumps by `wi` every kernel row — strided,
+//! cache-hostile loads that leave the Eq. 7 shift-MAC memory-bound. This
+//! module repacks both operands the way a blocked GEMM wants them:
+//!
+//! * [`PackedWeights`] — the decoded weight planes laid out once per conv
+//!   as `[co_blk][K]` panels (`K = Ci * Kh * Kw`), each panel interleaving
+//!   [`MR`] output-channel lanes per reduction step
+//!   (`frac[k * MR + m]`), so the microkernel reads one contiguous,
+//!   forward-only stream no matter which output pixel it is producing.
+//!   Lanes past `Co` are zero (a zero fraction contributes nothing to
+//!   value, peak, or counters, so padded lanes are arithmetic no-ops).
+//! * [`PackScratch::pack_row`] — one output row's activations gathered
+//!   im2col-style into a `[K][Wo_p]` panel (`Wo_p` = `Wo` rounded up to
+//!   [`NR`] lanes), zero-filled where the kernel window hangs over the
+//!   input border. Again `frac`/`shift` are struct-of-arrays so the MAC
+//!   reads two dense streams.
+//!
+//! Both panels, the per-microtile contribution buffer, and the hoisted
+//! group-scale factor table live in a [`PackScratch`] arena owned by each
+//! pool worker (`thread_local`, see [`with_scratch`]) — with the
+//! persistent pool in [`crate::util::parallel`] the buffers are allocated
+//! once per worker and reused across rows, convs, and calls.
+
+use super::group_scale::GroupScaleFactor;
+use super::planes::DecodedPlanes;
+use crate::util::parallel;
+use std::cell::RefCell;
+
+/// Microkernel register-tile height: output-channel lanes per weight
+/// panel reduction step.
+pub const MR: usize = 4;
+/// Microkernel register-tile width: output-pixel lanes per activation
+/// panel reduction step.
+pub const NR: usize = 8;
+
+/// Decoded weight planes repacked into GEMM panels: `blocks` panels of
+/// `kdim * MR` lanes each, `frac[b * kdim * MR + k * MR + m]` holding
+/// `signed_frac` of output channel `b * MR + m` at reduction index `k`
+/// (zero for lanes past `co_n`), `shift` likewise.
+pub struct PackedWeights {
+    pub frac: Vec<i32>,
+    pub shift: Vec<u8>,
+    pub co_n: usize,
+    /// reduction length `Ci * Kh * Kw`
+    pub kdim: usize,
+    /// number of MR-wide output-channel blocks (`ceil(co_n / MR)`)
+    pub blocks: usize,
+}
+
+/// Pack the decoded weight planes of a `[Co, Ci, Kh, Kw]` tensor into
+/// [`MR`]-lane panels, once per conv (parallel over channel blocks; the
+/// layout is deterministic, so the thread count cannot matter).
+pub fn pack_weights(wp: &DecodedPlanes, co_n: usize, kdim: usize, threads: usize) -> PackedWeights {
+    assert_eq!(wp.len(), co_n * kdim, "weight planes do not match [Co, Ci*Kh*Kw]");
+    let blocks = co_n.div_ceil(MR);
+    // zero-init covers the padded lanes; ranges write straight into the
+    // final buffers at their block offsets (no collect-then-concat pass)
+    let mut frac = vec![0i32; blocks * kdim * MR];
+    let mut shift = vec![0u8; blocks * kdim * MR];
+    {
+        let frac_w = parallel::DisjointWriter::new(&mut frac);
+        let shift_w = parallel::DisjointWriter::new(&mut shift);
+        parallel::map_ranges(threads, blocks, |lo, hi| {
+            // SAFETY: range [lo, hi) owns exactly the panel bytes
+            // [lo*kdim*MR, hi*kdim*MR) and map_ranges ranges are disjoint
+            let f = unsafe { frac_w.span(lo * kdim * MR, (hi - lo) * kdim * MR) };
+            let s = unsafe { shift_w.span(lo * kdim * MR, (hi - lo) * kdim * MR) };
+            for b in lo..hi {
+                let mr = (co_n - b * MR).min(MR);
+                let base = (b - lo) * kdim * MR;
+                for m in 0..mr {
+                    let src = (b * MR + m) * kdim;
+                    for k in 0..kdim {
+                        f[base + k * MR + m] = wp.signed_frac[src + k];
+                        s[base + k * MR + m] = wp.shift[src + k];
+                    }
+                }
+            }
+        });
+    }
+    PackedWeights { frac, shift, co_n, kdim, blocks }
+}
+
+/// Reusable per-worker buffers for the packed kernel: the im2col row
+/// panel, the microtile contribution buffer the group-scale epilogue
+/// writes (`[MR * NR][ci_n]` rows the adder tree then reduces), and the
+/// hoisted per-`(co, ci)` group-scale factor table.
+#[derive(Default)]
+pub struct PackScratch {
+    /// activation row panel, `a_frac[k * wo_p + x]`
+    pub a_frac: Vec<i32>,
+    pub a_shift: Vec<u8>,
+    /// group-scale contributions per microtile lane, `[(m * NR + x)][ci]`
+    pub cbuf: Vec<f32>,
+    /// `factors[co * ci_n + ci]`, rebuilt per batch sample
+    pub factors: Vec<GroupScaleFactor>,
+}
+
+impl PackScratch {
+    /// Gather output row `oy` of sample `n` into the im2col panel:
+    /// `a_frac[k * wo_p + x]` = `signed_frac` of the activation under
+    /// kernel tap `k = (ci * kh + i) * kw + j` at output column `x`
+    /// (zero when the tap hangs over the border), `x < wo_p` zero-padded
+    /// to the [`NR`] lane multiple. Every slot is (re)written, so the
+    /// arena can be reused without clearing. Returns the number of
+    /// in-bounds kernel rows for this `oy` (the analytic-counter input).
+    #[allow(clippy::too_many_arguments)]
+    pub fn pack_row(
+        &mut self,
+        ap: &DecodedPlanes,
+        n: usize,
+        oy: usize,
+        ci_n: usize,
+        kh: usize,
+        kw: usize,
+        h: usize,
+        wi: usize,
+        wo: usize,
+        stride: usize,
+        pad: usize,
+    ) -> usize {
+        let wo_p = wo.div_ceil(NR) * NR;
+        let kdim = ci_n * kh * kw;
+        self.a_frac.resize(kdim * wo_p, 0);
+        self.a_shift.resize(kdim * wo_p, 0);
+        let mut rows_ib = 0usize;
+        for ci in 0..ci_n {
+            for i in 0..kh {
+                let iy = (oy * stride + i) as isize - pad as isize;
+                let row_ok = iy >= 0 && (iy as usize) < h;
+                if ci == 0 && row_ok {
+                    rows_ib += 1;
+                }
+                for j in 0..kw {
+                    let k = (ci * kh + i) * kw + j;
+                    let dst_f = &mut self.a_frac[k * wo_p..(k + 1) * wo_p];
+                    let dst_s = &mut self.a_shift[k * wo_p..(k + 1) * wo_p];
+                    if !row_ok {
+                        dst_f.fill(0);
+                        dst_s.fill(0);
+                        continue;
+                    }
+                    // the in-bounds output-column span for this tap:
+                    // 0 <= x*stride + j - pad < wi  (cf. planes::interior_span)
+                    let off = j as isize - pad as isize;
+                    let x_lo = if off >= 0 { 0 } else { ((-off) as usize).div_ceil(stride) };
+                    let x_hi = if (wi as isize - 1 - off) < 0 {
+                        0
+                    } else {
+                        (wi as isize - 1 - off) as usize / stride + 1
+                    };
+                    let x_lo = x_lo.min(wo);
+                    let x_hi = x_hi.clamp(x_lo, wo);
+                    dst_f[..x_lo].fill(0);
+                    dst_s[..x_lo].fill(0);
+                    if x_hi > x_lo {
+                        // x_lo*stride + off >= 0 and the last source index
+                        // is < wi by the span construction above
+                        let arow = ((n * ci_n + ci) * h + iy as usize) * wi;
+                        let src0 = (arow as isize + (x_lo * stride) as isize + off) as usize;
+                        if stride == 1 {
+                            dst_f[x_lo..x_hi]
+                                .copy_from_slice(&ap.signed_frac[src0..src0 + (x_hi - x_lo)]);
+                            dst_s[x_lo..x_hi]
+                                .copy_from_slice(&ap.shift[src0..src0 + (x_hi - x_lo)]);
+                        } else {
+                            for (t, x) in (x_lo..x_hi).enumerate() {
+                                dst_f[x] = ap.signed_frac[src0 + t * stride];
+                                dst_s[x] = ap.shift[src0 + t * stride];
+                            }
+                        }
+                    }
+                    dst_f[x_hi..].fill(0);
+                    dst_s[x_hi..].fill(0);
+                }
+            }
+        }
+        rows_ib
+    }
+}
+
+thread_local! {
+    static SCRATCH: RefCell<PackScratch> = RefCell::new(PackScratch::default());
+}
+
+/// Run `f` with this thread's packing scratch arena. Pool workers are
+/// persistent, so the arena's buffers amortize across every conv a worker
+/// ever runs; grow-only `resize` keeps them at the high-water mark.
+pub fn with_scratch<R>(f: impl FnOnce(&mut PackScratch) -> R) -> R {
+    SCRATCH.with(|s| f(&mut s.borrow_mut()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mls::quantizer::{quantize, QuantConfig, Rounding};
+    use crate::util::rng::Pcg32;
+
+    #[test]
+    fn weight_panels_hold_every_lane() {
+        let wshape = [5usize, 3, 2, 3]; // co_n=5 exercises a ragged block
+        let mut rng = Pcg32::seeded(71);
+        let x = crate::util::prop::grouped_tensor(&mut rng, wshape);
+        let cfg = QuantConfig { rounding: Rounding::Nearest, ..QuantConfig::new(2, 4) };
+        let t = quantize(&x, &wshape, &cfg, &[]);
+        let wp = t.decoded_planes();
+        let kdim = 3 * 2 * 3;
+        for threads in [1usize, 2, 8] {
+            let pw = pack_weights(&wp, 5, kdim, threads);
+            assert_eq!(pw.blocks, 2);
+            assert_eq!(pw.frac.len(), 2 * kdim * MR);
+            for b in 0..pw.blocks {
+                for m in 0..MR {
+                    let co = b * MR + m;
+                    for k in 0..kdim {
+                        let (f, s) = (
+                            pw.frac[b * kdim * MR + k * MR + m],
+                            pw.shift[b * kdim * MR + k * MR + m],
+                        );
+                        if co < 5 {
+                            assert_eq!(f, wp.signed_frac[co * kdim + k], "t{threads} co{co} k{k}");
+                            assert_eq!(s, wp.shift[co * kdim + k], "t{threads} co{co} k{k}");
+                        } else {
+                            assert_eq!((f, s), (0, 0), "padded lane co{co} k{k}");
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn row_panel_matches_direct_gather() {
+        let ashape = [2usize, 3, 5, 7];
+        let mut rng = Pcg32::seeded(72);
+        let x = crate::util::prop::grouped_tensor(&mut rng, ashape);
+        let cfg = QuantConfig { rounding: Rounding::Nearest, ..QuantConfig::new(2, 4) };
+        let t = quantize(&x, &ashape, &cfg, &[]);
+        let ap = t.decoded_planes();
+        let [_, ci_n, h, wi] = ashape;
+        for (kh, kw, stride, pad) in [(3usize, 3usize, 1usize, 1usize), (2, 3, 2, 0), (3, 2, 2, 2)] {
+            if h + 2 * pad < kh || wi + 2 * pad < kw {
+                continue;
+            }
+            let wo = (wi + 2 * pad - kw) / stride + 1;
+            let ho = (h + 2 * pad - kh) / stride + 1;
+            let wo_p = wo.div_ceil(NR) * NR;
+            let mut scratch = PackScratch::default();
+            for n in 0..ashape[0] {
+                for oy in 0..ho {
+                    scratch.pack_row(&ap, n, oy, ci_n, kh, kw, h, wi, wo, stride, pad);
+                    for ci in 0..ci_n {
+                        for i in 0..kh {
+                            for j in 0..kw {
+                                let k = (ci * kh + i) * kw + j;
+                                for x in 0..wo_p {
+                                    let iy = (oy * stride + i) as isize - pad as isize;
+                                    let ix = (x * stride + j) as isize - pad as isize;
+                                    let inb = x < wo
+                                        && iy >= 0
+                                        && ix >= 0
+                                        && (iy as usize) < h
+                                        && (ix as usize) < wi;
+                                    let want = if inb {
+                                        let idx = ((n * ci_n + ci) * h + iy as usize) * wi
+                                            + ix as usize;
+                                        (ap.signed_frac[idx], ap.shift[idx])
+                                    } else {
+                                        (0, 0)
+                                    };
+                                    let got =
+                                        (scratch.a_frac[k * wo_p + x], scratch.a_shift[k * wo_p + x]);
+                                    assert_eq!(
+                                        got, want,
+                                        "n{n} oy{oy} ci{ci} i{i} j{j} x{x} (k{kh}x{kw} s{stride} p{pad})"
+                                    );
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+}

@@ -37,7 +37,7 @@
 //! and `rust/tests/parallel_equivalence.rs` pin this down; the energy
 //! model in [`crate::hw`] consumes the counters unchanged.
 
-use super::conv::{ConvDims, ConvTile};
+use super::conv::{ConvDims, TileStats};
 use super::group_scale::GroupScaleFactor;
 use super::intra::Element;
 use super::tree::tree_sum;
@@ -132,7 +132,10 @@ pub fn interior_span(
 
 /// Compute one `(n, co)` output tile on the decode-once planes: per-tile
 /// group-scale table -> interior/halo pixel loops -> adder tree, with the
-/// exact per-tile audit-counter semantics of the legacy kernel.
+/// exact per-tile audit-counter semantics of the legacy kernel. The tile
+/// plane is written straight into `z` (the caller's `[Ho, Wo]` span of
+/// the shared output buffer).
+#[allow(clippy::too_many_arguments)]
 pub(crate) fn conv_tile_planar(
     wp: &DecodedPlanes,
     ap: &DecodedPlanes,
@@ -143,9 +146,10 @@ pub(crate) fn conv_tile_planar(
     d: ConvDims,
     fmt: EmFormat,
     st: f32,
-) -> ConvTile {
+    z: &mut [f32],
+) -> TileStats {
     let ConvDims { ci_n, kh, kw, h, wi, ho, wo, stride, pad } = d;
-    let mut z = vec![0.0f32; ho * wo];
+    debug_assert_eq!(z.len(), ho * wo);
     let (mut muls, mut iadds, mut fadds, mut gscales) = (0u64, 0u64, 0u64, 0u64);
     // tile-wide max |accumulator|; bits-needed is monotone in this, so one
     // running max reproduces the legacy per-group peak_bits() max exactly
@@ -233,7 +237,7 @@ pub(crate) fn conv_tile_planar(
     } else {
         64 - peak.unsigned_abs().leading_zeros() + 1
     };
-    ConvTile { z, peak_bits, muls, iadds, fadds, gscales }
+    TileStats { peak_bits, muls, iadds, fadds, gscales }
 }
 
 #[cfg(test)]

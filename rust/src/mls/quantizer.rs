@@ -132,16 +132,28 @@ impl QuantConfig {
     }
 }
 
+/// Below this element count the ambient-thread entry points
+/// ([`quantize`], [`crate::mls::MlsTensor::dequantize`]) stay serial:
+/// even with the persistent pool a dispatch costs queue/wake/join
+/// synchronization that a tiny tensor cannot amortize. Sharding is
+/// bit-identical at every thread count, so the threshold is a pure
+/// scheduling choice (pinned by `rust/tests/parallel_equivalence.rs`);
+/// the explicit `*_threaded` entry points are not second-guessed.
+pub const SERIAL_FALLBACK_ELEMS: usize = 16 * 1024;
+
 /// Quantize a tensor to the full MLS decomposition.
 ///
 /// `rounding_offsets` must have one U[-1/2, 1/2) value per element when the
 /// config says stochastic (pass `&[]` for nearest — it is ignored).
 ///
 /// The group-maxima and element passes are sharded over scaling groups on
-/// the [`crate::util::parallel`] pool (`MLS_THREADS` workers); see
-/// [`quantize_threaded`] for the bit-identity guarantee.
+/// the [`crate::util::parallel`] pool (`MLS_THREADS` workers, serial below
+/// [`SERIAL_FALLBACK_ELEMS`] elements); see [`quantize_threaded`] for the
+/// bit-identity guarantee.
 pub fn quantize(x: &[f32], shape: &[usize], cfg: &QuantConfig, rounding_offsets: &[f32]) -> MlsTensor {
-    quantize_threaded(x, shape, cfg, rounding_offsets, parallel::num_threads())
+    let n: usize = shape.iter().product::<usize>().max(1);
+    let threads = if n < SERIAL_FALLBACK_ELEMS { 1 } else { parallel::num_threads() };
+    quantize_threaded(x, shape, cfg, rounding_offsets, threads)
 }
 
 /// [`quantize`] with an explicit worker count.

@@ -57,8 +57,15 @@ impl MlsTensor {
     ///
     /// Sharded over scaling groups on the [`crate::util::parallel`] pool;
     /// bit-identical for every worker count (elements are independent).
+    /// Tensors below [`super::quantizer::SERIAL_FALLBACK_ELEMS`] elements
+    /// run serial — pool dispatch overhead would dominate them.
     pub fn dequantize(&self) -> Vec<f32> {
-        self.dequantize_threaded(parallel::num_threads())
+        let threads = if self.len() < super::quantizer::SERIAL_FALLBACK_ELEMS {
+            1
+        } else {
+            parallel::num_threads()
+        };
+        self.dequantize_threaded(threads)
     }
 
     /// [`Self::dequantize`] with an explicit worker count.

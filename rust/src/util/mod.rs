@@ -14,9 +14,9 @@
 //!   `cargo bench` targets (median-of-runs with warmup, plus the CI smoke
 //!   mode),
 //! * [`stats`] — summary statistics shared by metrics and benches,
-//! * [`parallel`] — deterministic scoped-thread fork/join for the hot
-//!   kernels (rayon is not available offline), with an `MLS_THREADS`
-//!   override.
+//! * [`parallel`] — deterministic fork/join on a persistent worker pool
+//!   for the hot kernels (rayon is not available offline), with an
+//!   `MLS_THREADS` override.
 
 pub mod bench;
 pub mod json;

@@ -1,25 +1,57 @@
-//! Deterministic data-parallel execution for the MLS hot kernels.
+//! Deterministic data-parallel execution for the MLS hot kernels, on a
+//! **persistent worker pool**.
 //!
 //! The build environment only guarantees the Rust toolchain (no rayon), so
-//! this is a small scoped-thread fork/join layer with the two shapes the
-//! kernels need:
+//! this is a small fork/join layer with the two shapes the kernels need:
 //!
 //! * [`map_ranges`] — split `0..n` into at most `threads` contiguous
-//!   ranges, run one worker per range, return the per-range results in
+//!   ranges, run one task per range, return the per-range results in
 //!   range order,
-//! * [`map_collect`] — order-preserving parallel map over `0..n`.
+//! * [`DisjointWriter`] — direct parallel writes into disjoint spans of
+//!   one preallocated output buffer.
 //!
-//! Work is assigned statically (contiguous chunks), so for a fixed input
-//! the set of per-item computations is independent of the thread count and
-//! results are **bit-identical** for every `threads` value — the property
+//! Work is assigned statically (contiguous chunks derived from the
+//! *requested* `threads`, never from the pool size), so for a fixed input
+//! the set of per-chunk computations is independent of both the thread
+//! count and which worker executes which chunk — results are
+//! **bit-identical** for every `threads` value, the property
 //! `rust/tests/parallel_equivalence.rs` pins down for the conv/quantize
 //! kernels.
 //!
-//! The default worker count is `available_parallelism()`, overridable with
-//! the `MLS_THREADS` environment variable (e.g. `MLS_THREADS=1` forces the
-//! serial path).
+//! ## The pool
+//!
+//! Earlier revisions spawned scoped threads per call, which made every
+//! small conv/quantize pay thread-spawn latency (tens of microseconds per
+//! worker — comparable to the whole kernel for small tensors). Now a pool
+//! of workers is lazily spawned on the first parallel dispatch and reused
+//! for the life of the process:
+//!
+//! * jobs are published to a shared queue; each job exposes its chunks
+//!   through an **atomic cursor** (`fetch_add` work claiming), so chunk
+//!   scheduling is dynamic while chunk *boundaries* stay static;
+//! * the submitting thread participates in its own job (claiming chunks
+//!   like any worker), then blocks until every chunk completed — which is
+//!   also what makes borrowing stack data from the caller sound;
+//! * nested dispatch is allowed: an inner job's submitter drains it
+//!   itself even when all pool workers are busy, so progress is always
+//!   guaranteed;
+//! * worker panics are caught per chunk, the job is drained to
+//!   completion, and the first panic payload is rethrown on the
+//!   submitting thread — kernel assertions read the same as on the
+//!   serial path.
+//!
+//! The default worker count for the *chunking* is
+//! `available_parallelism()`, overridable with the `MLS_THREADS`
+//! environment variable (e.g. `MLS_THREADS=1` forces the serial path; a
+//! value above the core count oversubscribes). The pool itself is sized
+//! once, at first dispatch, to `max(MLS_THREADS, available_parallelism)
+//! - 1` threads (the submitter is the extra executor); `MLS_THREADS`
+//! keeps its per-call meaning afterwards — it decides how many chunks a
+//! dispatch is split into, the pool only caps how many run concurrently.
 
-use std::sync::OnceLock;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
 
 /// Worker count: `MLS_THREADS` if set to a positive integer, else the
 /// machine's available parallelism.
@@ -37,10 +69,183 @@ pub fn num_threads() -> usize {
     })
 }
 
+/// One published unit of parallel work: `total` chunks claimed through an
+/// atomic cursor, executed via a type-erased callback into caller stack
+/// data.
+///
+/// # Safety contract
+///
+/// `data` points at a live `F` on the submitting thread's stack and
+/// `call` is the matching monomorphized trampoline. The pointer is only
+/// dereferenced between a successful chunk claim (`next.fetch_add < total`)
+/// and that chunk's `done` increment, and the submitter blocks until
+/// `done == total` before the closure can go out of scope — so every
+/// dereference happens while the closure is provably alive.
+struct Job {
+    data: *const (),
+    call: unsafe fn(*const (), usize),
+    next: AtomicUsize,
+    done: AtomicUsize,
+    total: usize,
+    panic: Mutex<Option<Box<dyn std::any::Any + Send>>>,
+}
+
+// Publication of `data` happens through the pool mutex (push under lock),
+// and the lifetime argument is covered by the contract above.
+unsafe impl Send for Job {}
+unsafe impl Sync for Job {}
+
+unsafe fn call_chunk<F: Fn(usize) + Sync>(data: *const (), idx: usize) {
+    let f = unsafe { &*(data as *const F) };
+    f(idx);
+}
+
+struct Pool {
+    /// jobs with unclaimed chunks (submitters remove their job when done)
+    jobs: Mutex<Vec<Arc<Job>>>,
+    /// workers wait here for new jobs
+    work_cv: Condvar,
+    /// submitters wait here for their job's completion
+    done_cv: Condvar,
+    workers: usize,
+}
+
+impl Pool {
+    /// Claim-and-run chunks of `job` until its cursor is exhausted.
+    fn run_chunks(&self, job: &Job) {
+        loop {
+            let idx = job.next.fetch_add(1, Ordering::Relaxed);
+            if idx >= job.total {
+                return;
+            }
+            let result = catch_unwind(AssertUnwindSafe(|| {
+                // SAFETY: idx < total and done has not been incremented
+                // for this chunk yet, so the submitter is still blocked
+                // and the closure behind `data` is alive (see Job docs).
+                unsafe { (job.call)(job.data, idx) }
+            }));
+            if let Err(payload) = result {
+                let mut slot = job.panic.lock().unwrap();
+                if slot.is_none() {
+                    *slot = Some(payload);
+                }
+            }
+            // Release pairs with the submitter's Acquire load: everything
+            // this chunk wrote (result slots, output tiles) is visible
+            // once the submitter observes done == total.
+            let finished = job.done.fetch_add(1, Ordering::Release) + 1;
+            if finished == job.total {
+                let _guard = self.jobs.lock().unwrap();
+                self.done_cv.notify_all();
+            }
+        }
+    }
+
+    fn worker_loop(&self) {
+        loop {
+            let job = {
+                let mut guard = self.jobs.lock().unwrap();
+                loop {
+                    let open = guard
+                        .iter()
+                        .find(|j| j.next.load(Ordering::Relaxed) < j.total)
+                        .cloned();
+                    match open {
+                        Some(j) => break j,
+                        None => guard = self.work_cv.wait(guard).unwrap(),
+                    }
+                }
+            };
+            self.run_chunks(&job);
+        }
+    }
+}
+
+/// The process-wide pool, spawned on first use. Worker threads are
+/// detached and live for the rest of the process (they park on the
+/// condvar when idle); the one `Pool` allocation is intentionally leaked
+/// so the workers can borrow it `'static`.
+fn pool() -> &'static Pool {
+    static POOL: OnceLock<&'static Pool> = OnceLock::new();
+    POOL.get_or_init(|| {
+        let hw = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        let workers = num_threads().max(hw).saturating_sub(1);
+        let pool: &'static Pool = Box::leak(Box::new(Pool {
+            jobs: Mutex::new(Vec::new()),
+            work_cv: Condvar::new(),
+            done_cv: Condvar::new(),
+            workers,
+        }));
+        for i in 0..pool.workers {
+            std::thread::Builder::new()
+                .name(format!("mls-worker-{i}"))
+                .spawn(move || pool.worker_loop())
+                .expect("spawn mls worker thread");
+        }
+        pool
+    })
+}
+
+/// Run `f(0), f(1), ..., f(chunks - 1)` to completion, using the pool for
+/// concurrency; the calling thread participates. Panics in `f` are
+/// rethrown here after the job drains.
+fn dispatch<F: Fn(usize) + Sync>(chunks: usize, f: F) {
+    if chunks == 0 {
+        return;
+    }
+    if chunks == 1 {
+        f(0);
+        return;
+    }
+    let pool = pool();
+    if pool.workers == 0 {
+        for idx in 0..chunks {
+            f(idx);
+        }
+        return;
+    }
+    let job = Arc::new(Job {
+        data: &f as *const F as *const (),
+        call: call_chunk::<F>,
+        next: AtomicUsize::new(0),
+        done: AtomicUsize::new(0),
+        total: chunks,
+        panic: Mutex::new(None),
+    });
+    {
+        let mut guard = pool.jobs.lock().unwrap();
+        guard.push(Arc::clone(&job));
+        // wake only as many workers as there are chunks left after the
+        // submitter takes its share — notify_all would stampede the whole
+        // pool through the mutex for a 2-chunk job. Under-waking is safe:
+        // busy workers re-scan the job list before sleeping, and the
+        // submitter drains its own job regardless.
+        for _ in 0..(chunks - 1).min(pool.workers) {
+            pool.work_cv.notify_one();
+        }
+    }
+    // the submitter is an executor too — this also guarantees progress
+    // when every pool worker is busy (e.g. nested dispatch)
+    pool.run_chunks(&job);
+    {
+        let mut guard = pool.jobs.lock().unwrap();
+        while job.done.load(Ordering::Acquire) < job.total {
+            guard = pool.done_cv.wait(guard).unwrap();
+        }
+        guard.retain(|j| !Arc::ptr_eq(j, &job));
+    }
+    let payload = job.panic.lock().unwrap().take();
+    if let Some(payload) = payload {
+        // rethrow with the original payload so kernel assertions read the
+        // same as on the serial path
+        resume_unwind(payload);
+    }
+}
+
 /// Split `0..n` into at most `threads` contiguous ranges and run
-/// `f(lo, hi)` on each, one worker per range. Results come back in range
-/// order. With `threads <= 1` (or a single range) everything runs on the
-/// calling thread.
+/// `f(lo, hi)` on each. Results come back in range order. With
+/// `threads <= 1` (or a single range) everything runs on the calling
+/// thread; otherwise the ranges execute on the persistent pool.
 pub fn map_ranges<T, F>(threads: usize, n: usize, f: F) -> Vec<T>
 where
     T: Send,
@@ -58,40 +263,59 @@ where
         .map(|t| (t * chunk, ((t + 1) * chunk).min(n)))
         .filter(|&(lo, hi)| lo < hi)
         .collect();
-    let mut out = Vec::with_capacity(ranges.len());
-    std::thread::scope(|s| {
-        let f = &f;
-        let handles: Vec<_> = ranges
-            .into_iter()
-            .map(|(lo, hi)| s.spawn(move || f(lo, hi)))
-            .collect();
-        for h in handles {
-            match h.join() {
-                Ok(v) => out.push(v),
-                // rethrow with the original payload so kernel assertions
-                // read the same as on the serial path
-                Err(payload) => std::panic::resume_unwind(payload),
-            }
-        }
+    let slots: Vec<Mutex<Option<T>>> = ranges.iter().map(|_| Mutex::new(None)).collect();
+    dispatch(ranges.len(), |i| {
+        let (lo, hi) = ranges[i];
+        let value = f(lo, hi);
+        *slots[i].lock().unwrap() = Some(value);
     });
-    out
+    slots
+        .into_iter()
+        .map(|s| s.into_inner().unwrap().expect("every range chunk completed"))
+        .collect()
 }
 
-/// Order-preserving parallel map over `0..n`.
-pub fn map_collect<T, F>(threads: usize, n: usize, f: F) -> Vec<T>
-where
-    T: Send,
-    F: Fn(usize) -> T + Sync,
-{
-    if threads <= 1 || n <= 1 {
-        return (0..n).map(f).collect();
+/// Shared-output writer for parallel kernels whose work units fill
+/// provably **disjoint** spans of one preallocated buffer — the
+/// direct-write replacement for collect-then-concatenate merging (each
+/// conv tile lands at its row offsets instead of being copied once more).
+///
+/// The wrapper borrows the buffer for `'a`, so the buffer cannot be
+/// dropped, moved, or reborrowed while writers exist; disjointness of the
+/// spans is the caller's contract (see [`DisjointWriter::span`]).
+pub struct DisjointWriter<'a, T> {
+    base: *mut T,
+    len: usize,
+    _buf: std::marker::PhantomData<&'a mut [T]>,
+}
+
+// SAFETY: the writer only hands out spans under the caller contract that
+// concurrent spans never overlap, so sending/sharing it across the pool
+// is sound for Send element types.
+unsafe impl<T: Send> Send for DisjointWriter<'_, T> {}
+unsafe impl<T: Send> Sync for DisjointWriter<'_, T> {}
+
+impl<'a, T> DisjointWriter<'a, T> {
+    pub fn new(buf: &'a mut [T]) -> Self {
+        DisjointWriter { base: buf.as_mut_ptr(), len: buf.len(), _buf: std::marker::PhantomData }
     }
-    let parts = map_ranges(threads, n, |lo, hi| (lo..hi).map(&f).collect::<Vec<T>>());
-    let mut out = Vec::with_capacity(n);
-    for p in parts {
-        out.extend(p);
+
+    /// Exclusive view of `offset..offset + n`.
+    ///
+    /// # Safety
+    ///
+    /// The caller must guarantee that no two live spans overlap — i.e.
+    /// each buffer element is handed to at most one work unit at a time.
+    /// The bounds themselves are checked (panic on overflow past the
+    /// buffer), only aliasing is the caller's obligation.
+    #[allow(clippy::mut_from_ref)] // deliberate: &self is the shared handle, disjointness is the contract
+    pub unsafe fn span(&self, offset: usize, n: usize) -> &mut [T] {
+        // checked_add: a wrapped `offset + n` in release mode would slip
+        // past the bound and defeat the very check this assert provides
+        let end = offset.checked_add(n).expect("span end overflows usize");
+        assert!(end <= self.len, "span {offset}+{n} out of bounds ({})", self.len);
+        unsafe { std::slice::from_raw_parts_mut(self.base.add(offset), n) }
     }
-    out
 }
 
 #[cfg(test)]
@@ -104,9 +328,10 @@ mod tests {
     }
 
     #[test]
-    fn map_collect_preserves_order() {
+    fn map_ranges_results_come_back_in_range_order() {
         for threads in [1usize, 2, 3, 8, 64] {
-            let got = map_collect(threads, 100, |i| i * i);
+            let parts = map_ranges(threads, 100, |lo, hi| (lo..hi).map(|i| i * i).collect::<Vec<_>>());
+            let got: Vec<usize> = parts.into_iter().flatten().collect();
             let want: Vec<usize> = (0..100).map(|i| i * i).collect();
             assert_eq!(got, want, "threads={threads}");
         }
@@ -134,5 +359,65 @@ mod tests {
     fn map_ranges_empty_input() {
         let out: Vec<(usize, usize)> = map_ranges(4, 0, |lo, hi| (lo, hi));
         assert!(out.is_empty());
+    }
+
+    #[test]
+    fn pool_survives_many_sequential_dispatches() {
+        // pre-pool this was one thread spawn per range per call; now the
+        // same workers serve every call — 500 back-to-back jobs must all
+        // come back complete and ordered
+        for round in 0..500u64 {
+            let got = map_ranges(4, 64, |lo, hi| (lo..hi).map(|i| i as u64 + round).sum::<u64>());
+            let want: u64 = (0..64).map(|i| i + round).sum();
+            assert_eq!(got.iter().sum::<u64>(), want, "round {round}");
+        }
+    }
+
+    #[test]
+    fn panic_in_chunk_propagates_to_submitter() {
+        let result = catch_unwind(AssertUnwindSafe(|| {
+            map_ranges(4, 16, |lo, _hi| {
+                assert!(lo != 8, "chunk boom {lo}");
+                lo
+            })
+        }));
+        let payload = result.expect_err("the panicking chunk must rethrow here");
+        let msg = payload
+            .downcast_ref::<String>()
+            .cloned()
+            .unwrap_or_else(|| payload.downcast_ref::<&str>().unwrap_or(&"?").to_string());
+        assert!(msg.contains("chunk boom"), "unexpected payload {msg:?}");
+        // the pool must still be serviceable after a panicked job
+        let got = map_ranges(4, 10, |lo, hi| (lo..hi).map(|i| i * 3).sum::<usize>());
+        assert_eq!(got.iter().sum::<usize>(), (0..10).map(|i| i * 3).sum::<usize>());
+    }
+
+    #[test]
+    fn disjoint_writer_fills_every_slot() {
+        let mut buf = vec![0u32; 97];
+        let writer = DisjointWriter::new(&mut buf);
+        map_ranges(8, 97, |lo, hi| {
+            // SAFETY: map_ranges hands out non-overlapping [lo, hi) ranges
+            let span = unsafe { writer.span(lo, hi - lo) };
+            for (off, slot) in span.iter_mut().enumerate() {
+                *slot = (lo + off) as u32 * 2;
+            }
+        });
+        drop(writer);
+        for (i, v) in buf.iter().enumerate() {
+            assert_eq!(*v, i as u32 * 2);
+        }
+    }
+
+    #[test]
+    fn nested_dispatch_makes_progress() {
+        // inner jobs are drained by their own submitters even when every
+        // pool worker is stuck on outer chunks
+        let got = map_ranges(8, 8, |lo, hi| {
+            let inner = map_ranges(4, 32, |a, b| (a..b).sum::<usize>());
+            inner.iter().sum::<usize>() + (lo..hi).len()
+        });
+        let inner_sum: usize = (0..32).sum();
+        assert_eq!(got.iter().sum::<usize>(), 8 * inner_sum + 8);
     }
 }

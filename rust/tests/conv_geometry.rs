@@ -1,13 +1,14 @@
 //! Conv geometry edge cases the original suite skipped: stride 2, pad 0
 //! and pad 2, non-square inputs and kernels (`kh != kw`, `h != w`), and
-//! 1x1 kernels — asserting the decode-once planar kernel is bit-identical
-//! to the legacy reference (output values AND all five hardware-audit
-//! counters) across `QuantConfig`s {e2m1, e2m4, int4} and worker counts
-//! {1, 2, 8}, and that the counters match an independent clipped-window
-//! count of the geometry.
+//! 1x1 kernels — asserting the packed-GEMM default kernel AND the planar
+//! kernel are bit-identical to the legacy reference (output values AND
+//! all five hardware-audit counters) across `QuantConfig`s {e2m1, e2m4,
+//! int4} and worker counts {1, 2, 8}, and that the counters match an
+//! independent clipped-window count of the geometry.
 
 use mls_train::arith::conv::{
-    conv2d_f32, lowbit_conv_legacy_threaded, lowbit_conv_threaded, ConvOutput,
+    conv2d_f32, lowbit_conv_legacy_threaded, lowbit_conv_planar_threaded, lowbit_conv_threaded,
+    ConvOutput,
 };
 use mls_train::mls::quantizer::{quantize, QuantConfig, Rounding};
 use mls_train::mls::MlsTensor;
@@ -97,18 +98,20 @@ fn clipped_window_taps(
 }
 
 #[test]
-fn planar_matches_legacy_across_geometries_and_formats() {
+fn packed_and_planar_match_legacy_across_geometries_and_formats() {
     for (gi, &(wshape, ashape, stride, pad)) in GEOMETRIES.iter().enumerate() {
         for cfg in quant_cfgs() {
             let (tw, ta) = quantize_pair(&cfg, wshape, ashape, 200 + gi as u64);
             let legacy = lowbit_conv_legacy_threaded(&tw, &ta, stride, pad, 1);
             for threads in THREAD_COUNTS {
-                let planar = lowbit_conv_threaded(&tw, &ta, stride, pad, threads);
+                let packed = lowbit_conv_threaded(&tw, &ta, stride, pad, threads);
                 let tag = format!(
                     "{} geom#{gi} w{wshape:?} a{ashape:?} s{stride} p{pad} @ {threads} threads",
                     cfg.name()
                 );
-                assert_convs_identical(&legacy, &planar, &tag);
+                assert_convs_identical(&legacy, &packed, &format!("{tag} (packed)"));
+                let planar = lowbit_conv_planar_threaded(&tw, &ta, stride, pad, threads);
+                assert_convs_identical(&legacy, &planar, &format!("{tag} (planar)"));
                 // the legacy kernel is itself thread-count independent
                 let legacy_t = lowbit_conv_legacy_threaded(&tw, &ta, stride, pad, threads);
                 assert_convs_identical(&legacy, &legacy_t, &format!("{tag} (legacy)"));
@@ -171,8 +174,10 @@ fn all_zero_operands_pin_peak_acc_bits_to_one() {
     assert_eq!(legacy.peak_acc_bits, 1);
     assert!(legacy.z.iter().all(|&v| v == 0.0));
     for threads in THREAD_COUNTS {
-        let planar = lowbit_conv_threaded(&tw, &ta, 1, 1, threads);
-        assert_convs_identical(&legacy, &planar, &format!("all-zero @ {threads} threads"));
+        let packed = lowbit_conv_threaded(&tw, &ta, 1, 1, threads);
+        assert_convs_identical(&legacy, &packed, &format!("all-zero packed @ {threads} threads"));
+        let planar = lowbit_conv_planar_threaded(&tw, &ta, 1, 1, threads);
+        assert_convs_identical(&legacy, &planar, &format!("all-zero planar @ {threads} threads"));
     }
     // the windows still ran: op counters are geometry-driven, not
     // value-driven

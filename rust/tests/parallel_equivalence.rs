@@ -5,7 +5,8 @@
 //! purely a scheduling choice, never a numerics choice.
 
 use mls_train::arith::conv::{
-    lowbit_conv, lowbit_conv_legacy_threaded, lowbit_conv_threaded, ConvOutput,
+    lowbit_conv, lowbit_conv_legacy_threaded, lowbit_conv_planar_threaded, lowbit_conv_threaded,
+    ConvOutput,
 };
 use mls_train::mls::quantizer::{quantize, quantize_threaded, QuantConfig, Rounding};
 use mls_train::mls::{Grouping, MlsTensor};
@@ -96,10 +97,11 @@ fn lowbit_conv_identical_across_thread_counts() {
 }
 
 #[test]
-fn planar_kernel_matches_legacy_kernel_across_thread_counts() {
-    // the decode-once planar kernel is a pure implementation change: for
-    // every format, geometry and worker count it must reproduce the legacy
-    // per-pixel kernel bit-for-bit — values and audit counters alike
+fn packed_and_planar_kernels_match_legacy_across_thread_counts() {
+    // the packed-GEMM and planar kernels are pure implementation changes:
+    // for every format, geometry and worker count they must reproduce the
+    // legacy per-pixel kernel bit-for-bit — values and audit counters
+    // alike
     let mut rng = Pcg32::seeded(104);
     let wshape = [6usize, 5, 3, 3];
     let ashape = [4usize, 5, 7, 7];
@@ -114,9 +116,42 @@ fn planar_kernel_matches_legacy_kernel_across_thread_counts() {
         for (stride, pad) in [(1usize, 1usize), (2, 0), (2, 2)] {
             let legacy = lowbit_conv_legacy_threaded(&tw, &ta, stride, pad, 1);
             for threads in THREAD_COUNTS {
-                let planar = lowbit_conv_threaded(&tw, &ta, stride, pad, threads);
+                let packed = lowbit_conv_threaded(&tw, &ta, stride, pad, threads);
+                let tag = format!("<{e},{m}> s{stride} p{pad} packed @ {threads} threads");
+                assert_convs_identical(&legacy, &packed, &tag);
+                let planar = lowbit_conv_planar_threaded(&tw, &ta, stride, pad, threads);
                 let tag = format!("<{e},{m}> s{stride} p{pad} planar @ {threads} threads");
                 assert_convs_identical(&legacy, &planar, &tag);
+            }
+        }
+    }
+}
+
+#[test]
+fn serial_fallback_threshold_is_pure_scheduling() {
+    // ambient quantize()/dequantize() drop to one thread below
+    // SERIAL_FALLBACK_ELEMS; sharding is bit-identical at every thread
+    // count, so the fallback must be invisible in the results — on both
+    // sides of the threshold
+    use mls_train::mls::quantizer::SERIAL_FALLBACK_ELEMS;
+    let mut rng = Pcg32::seeded(105);
+    let small = [4usize, 6, 5, 5]; // 600 elements: far below the threshold
+    let large = [8usize, 16, 12, 12]; // 18432: above it
+    assert!(small.iter().product::<usize>() < SERIAL_FALLBACK_ELEMS);
+    assert!(large.iter().product::<usize>() >= SERIAL_FALLBACK_ELEMS);
+    for shape in [small, large] {
+        let x = grouped_tensor(&mut rng, shape);
+        let r = rng.rounding_offsets(x.len());
+        let cfg = QuantConfig::default();
+        let ambient = quantize(&x, &shape, &cfg, &r);
+        for threads in THREAD_COUNTS {
+            let explicit = quantize_threaded(&x, &shape, &cfg, &r, threads);
+            let tag = format!("{shape:?} fallback vs {threads} threads");
+            assert_tensors_identical(&ambient, &explicit, &tag);
+            let qa = ambient.dequantize();
+            let qe = explicit.dequantize_threaded(threads);
+            for (i, (a, b)) in qa.iter().zip(&qe).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(), "{tag}: q[{i}]");
             }
         }
     }

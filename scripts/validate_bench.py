@@ -1,0 +1,92 @@
+#!/usr/bin/env python3
+"""Validate a BENCH_*.json bench report against its checked-in schema.
+
+Stdlib-only (CI's build-test job has no pip step), implementing the JSON
+Schema subset the bench schemas use: type, const, required, properties,
+additionalProperties (as a sub-schema), minProperties, minimum,
+exclusiveMinimum. A malformed bench report — missing ratio, empty results
+block, non-positive throughput — fails the build instead of silently
+shipping in the bench-trajectory artifact.
+
+Usage: validate_bench.py <report.json> <schema.json>
+"""
+import json
+import sys
+
+TYPES = {
+    "object": dict,
+    "string": str,
+    "number": (int, float),
+    "boolean": bool,
+    "array": list,
+}
+
+
+def check(value, schema, path, errors):
+    t = schema.get("type")
+    if t is not None:
+        py = TYPES[t]
+        # bool is an int subclass in Python; keep number strictly numeric
+        if isinstance(value, bool) and t != "boolean":
+            errors.append(f"{path}: expected {t}, got boolean")
+            return
+        if not isinstance(value, py):
+            errors.append(f"{path}: expected {t}, got {type(value).__name__}")
+            return
+    if "const" in schema and value != schema["const"]:
+        errors.append(f"{path}: expected {schema['const']!r}, got {value!r}")
+    if "minimum" in schema and value < schema["minimum"]:
+        errors.append(f"{path}: {value} < minimum {schema['minimum']}")
+    if "exclusiveMinimum" in schema and value <= schema["exclusiveMinimum"]:
+        errors.append(f"{path}: {value} <= exclusiveMinimum {schema['exclusiveMinimum']}")
+    if isinstance(value, dict):
+        for key in schema.get("required", []):
+            if key not in value:
+                errors.append(f"{path}: missing required key {key!r}")
+        if "minProperties" in schema and len(value) < schema["minProperties"]:
+            errors.append(
+                f"{path}: has {len(value)} properties, needs >= {schema['minProperties']}"
+            )
+        props = schema.get("properties", {})
+        extra = schema.get("additionalProperties")
+        for key, sub in value.items():
+            if key in props:
+                check(sub, props[key], f"{path}.{key}", errors)
+            elif isinstance(extra, dict):
+                check(sub, extra, f"{path}.{key}", errors)
+
+
+def main():
+    if len(sys.argv) != 3:
+        sys.exit(__doc__)
+    report_path, schema_path = sys.argv[1], sys.argv[2]
+    try:
+        with open(report_path) as f:
+            report = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        sys.exit(f"FAIL {report_path}: unreadable or not JSON: {e}")
+    with open(schema_path) as f:
+        schema = json.load(f)
+    errors = []
+    check(report, schema, "$", errors)
+    if errors:
+        if "awaiting first measured run" in str(report.get("status", "")) and not report.get(
+            "results"
+        ):
+            # the committed tree ships an explicitly-labeled placeholder
+            # (no toolchain in the authoring container); it is still a
+            # failure — only a measured report may pass the gate
+            print(
+                f"FAIL {report_path}: committed placeholder, not a measured report — "
+                f"run `cargo bench` to produce one (status: {report['status'][:80]}...)"
+            )
+            sys.exit(1)
+        print(f"FAIL {report_path} does not match {schema_path}:")
+        for e in errors:
+            print(f"  - {e}")
+        sys.exit(1)
+    print(f"OK {report_path} matches {schema_path}")
+
+
+if __name__ == "__main__":
+    main()
