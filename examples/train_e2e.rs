@@ -23,6 +23,7 @@ fn main() -> anyhow::Result<()> {
     let mut results = Vec::new();
     for cfg_name in configs {
         let mut c = TrainConfig::default();
+        c.backend = mls_train::coordinator::Backend::Pjrt; // this driver exercises the FULL PJRT stack
         c.model = model.clone();
         c.cfg_name = cfg_name.to_string();
         c.steps = steps;

@@ -17,6 +17,7 @@ use mls_train::arith::conv::{
     conv2d_f32_threaded, lowbit_conv, lowbit_conv_legacy_threaded, lowbit_conv_planar_threaded,
     lowbit_conv_threaded,
 };
+use mls_train::arith::spec::ConvSpec;
 use mls_train::mls::quantizer::{quantize, QuantConfig, Rounding};
 use mls_train::util::bench::{bench, black_box, budget, enforce_mode, smoke_mode, BenchReport};
 use mls_train::util::json::Json;
@@ -95,6 +96,36 @@ fn main() {
     );
     report.add_result(&packed_par, macs, "mac");
     report.add_ratio("packed_threaded_vs_serial", threaded_vs_serial);
+
+    // Alg. 1 backward passes on the SAME ConvSpec engine. Both execute
+    // exactly the forward in-bounds MAC count (the tap sets are bijective
+    // re-indexings), so the MMAC/s figures are directly comparable.
+    let spec = ConvSpec::of_forward(&tw, &ta, 1, 1);
+    let eshape = [ashape[0], wshape[0], spec.out_h(), spec.out_w()];
+    let ef = mls_train::util::prop::grouped_tensor(&mut rng, eshape);
+    let te = quantize(&ef, &eshape, &cfg, &[]);
+
+    let wgrad_serial = bench("lowbit_conv/wgrad_e2m4_serial", b, || {
+        black_box(spec.weight_grad(&te, &ta, 1));
+    });
+    let wgrad_vs_packed = packed_serial.median.as_secs_f64() / wgrad_serial.median.as_secs_f64();
+    println!(
+        "  -> {:.1} MMAC/s ({wgrad_vs_packed:.2}x the packed forward at 1 thread)",
+        wgrad_serial.throughput_items(macs) / 1e6
+    );
+    report.add_result(&wgrad_serial, macs, "mac");
+    report.add_ratio("wgrad_vs_packed_serial", wgrad_vs_packed);
+
+    let dgrad_serial = bench("lowbit_conv/dgrad_e2m4_serial", b, || {
+        black_box(spec.input_grad(&te, &tw, 1));
+    });
+    let dgrad_vs_packed = packed_serial.median.as_secs_f64() / dgrad_serial.median.as_secs_f64();
+    println!(
+        "  -> {:.1} MMAC/s ({dgrad_vs_packed:.2}x the packed forward at 1 thread)",
+        dgrad_serial.throughput_items(macs) / 1e6
+    );
+    report.add_result(&dgrad_serial, macs, "mac");
+    report.add_ratio("dgrad_vs_packed_serial", dgrad_vs_packed);
 
     let wq = tw.dequantize();
     let aq = ta.dequantize();

@@ -1,0 +1,100 @@
+//! Bench: one full native Alg. 1 training step — dynamic quantization of
+//! W/A/E, quantized forward + weight-gradient + input-gradient convs on
+//! the pass-generic packed-GEMM engine, BN/ReLU/FC/softmax/SGD in f32 —
+//! on the `cnn_t` model over a synthetic-CIFAR batch. Reports steps/s
+//! and the low-bit MMAC/s of the executed conv work (from the step's own
+//! audit counters), serial vs pool-threaded, and writes the trajectory
+//! to `BENCH_train.json` (schema: `schemas/bench_train.schema.json`).
+
+use std::time::Duration;
+
+use mls_train::data::{streams, DatasetConfig, SynthCifar};
+use mls_train::mls::quantizer::QuantConfig;
+use mls_train::nn::train::native_model;
+use mls_train::util::bench::{bench, black_box, budget, smoke_mode, BenchReport};
+use mls_train::util::json::Json;
+use mls_train::util::parallel;
+
+fn main() {
+    let threads = parallel::num_threads();
+    let batch = 16usize;
+    let b = budget(Duration::from_secs(2));
+
+    let ds = SynthCifar::new(DatasetConfig::default());
+    let (images, labels) = ds.batch(batch, streams::TRAIN, 0);
+
+    // the executed low-bit conv MACs per step, from the audit counters of
+    // a probe step (lr = 0 keeps the parameters fixed across timed
+    // iterations, so every iteration does identical work)
+    let mut model = native_model("cnn_t", QuantConfig::default(), 0).expect("cnn_t builds");
+    let probe = model.train_step(&images, &labels, 0.0, 1);
+    let audit = probe.audit;
+    let macs = audit.forward.mul_ops + audit.wgrad.mul_ops + audit.dgrad.mul_ops;
+
+    println!(
+        "# bench_train_step — cnn_t, batch {batch}, {macs} executed low-bit MACs per step \
+         (fwd+wgrad+dgrad), {threads} worker threads{}",
+        if smoke_mode() { " [smoke]" } else { "" }
+    );
+
+    let mut report = BenchReport::new("BENCH_train.json", "bench_train_step");
+    report.set("threads", Json::Num(threads as f64));
+    report.set("batch", Json::Num(batch as f64));
+    report.set("model", Json::Str("cnn_t".to_string()));
+    report.set("macs_per_step", Json::Num(macs as f64));
+
+    model.set_threads(1);
+    let serial = bench("train_step/cnn_t_e2m4_b16_serial", b, || {
+        black_box(model.train_step(&images, &labels, 0.0, 2));
+    });
+    println!(
+        "  -> {:.2} steps/s, {:.1} low-bit MMAC/s (serial)",
+        1.0 / serial.median.as_secs_f64(),
+        serial.throughput_items(macs) / 1e6
+    );
+    report.add_result(&serial, macs, "mac");
+
+    model.set_threads(threads);
+    let par = bench(&format!("train_step/cnn_t_e2m4_b16_t{threads}"), b, || {
+        black_box(model.train_step(&images, &labels, 0.0, 2));
+    });
+    let threaded_vs_serial = serial.median.as_secs_f64() / par.median.as_secs_f64();
+    println!(
+        "  -> {:.2} steps/s, {:.1} low-bit MMAC/s ({threaded_vs_serial:.2}x vs serial, bit-identical)",
+        1.0 / par.median.as_secs_f64(),
+        par.throughput_items(macs) / 1e6
+    );
+    report.add_result(&par, macs, "mac");
+    report.add_ratio("train_threaded_vs_serial", threaded_vs_serial);
+
+    // fp32 reference step (f32 convs end to end) — the software-simulator
+    // cost baseline the quantized step is compared against. Its MMAC/s is
+    // reported against the model-derived analytic f32 conv MAC count
+    // (full windows; fwd + wgrad per layer, + dgrad for non-first
+    // layers) — NOT the quantized probe's low-bit count, which this step
+    // never executes.
+    let mut fp32 = native_model("cnn_t", QuantConfig::fp32(), 0).expect("cnn_t builds");
+    let f32_macs = batch as u64 * fp32.conv_macs_per_sample();
+    fp32.set_threads(threads);
+    let fp = bench(&format!("train_step/cnn_t_fp32_b16_t{threads}"), b, || {
+        black_box(fp32.train_step(&images, &labels, 0.0, 2));
+    });
+    println!(
+        "  -> {:.2} steps/s, {:.1} f32 MMAC/s (fp32 reference step)",
+        1.0 / fp.median.as_secs_f64(),
+        fp.throughput_items(f32_macs) / 1e6
+    );
+    report.add_result(&fp, f32_macs, "mac");
+    report.add_ratio(
+        "quantized_vs_fp32_step",
+        fp.median.as_secs_f64() / par.median.as_secs_f64(),
+    );
+
+    match report.write() {
+        Ok(path) => println!("wrote {}", path.display()),
+        Err(e) => {
+            eprintln!("failed to write BENCH_train.json: {e}");
+            std::process::exit(1);
+        }
+    }
+}

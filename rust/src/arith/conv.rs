@@ -11,7 +11,10 @@
 //! * the **packed-GEMM** kernel (default, [`super::gemm`] on the panels
 //!   of [`super::pack`]) — operands decoded once AND repacked into
 //!   cache-blocked panels, the Eq. 7 MAC running as a register-tiled GEMM
-//!   whose epilogue applies the hoisted group-scale table and adder tree;
+//!   whose epilogue applies the hoisted group-scale table and adder tree.
+//!   This is the forward instance of the pass-generic [`super::spec`]
+//!   engine, which also executes the Alg. 1 weight-gradient and
+//!   input-gradient convs ([`super::spec::ConvSpec`]);
 //! * the **planar** kernel ([`super::planes`], the bench baseline the
 //!   packed speedup ratio is measured from) — decode-once planes walked
 //!   in conv order with an interior/halo pixel split;
@@ -25,11 +28,10 @@
 //! concatenate-tiles merge pass anymore; only the audit counters are
 //! merged (sum/max, order-independent).
 
-use super::gemm;
 use super::group_scale::GroupScaleFactor;
 use super::intra::{intra_group_mac, Element};
-use super::pack;
 use super::planes::{self, DecodedPlanes};
+use super::spec::{self, SpecDims};
 use super::tree::tree_sum;
 use crate::mls::format::EmFormat;
 use crate::mls::{Grouping, MlsTensor};
@@ -193,83 +195,10 @@ pub fn lowbit_conv_with_planes(
     let (dims, n_n, co_n) = conv_geometry(w, a, stride, pad);
     assert_eq!(wp.len(), w.len(), "weight planes do not match the weight tensor");
     assert_eq!(ap.len(), a.len(), "activation planes do not match the activation tensor");
-    assert_eq!(wp.fmt, w.cfg.element, "weight planes decoded under a different element format");
-    assert_eq!(ap.fmt, a.cfg.element, "activation planes decoded under a different element format");
-    let fmt = w.cfg.element;
-    let st = w.s_t * a.s_t;
-    let scale_log2 = 2 * fmt.emin() - 2 * fmt.m as i32;
-
-    let kdim = dims.ci_n * dims.kh * dims.kw;
-    let pw = pack::pack_weights(wp, co_n, kdim, threads);
-    // geometry-only half of the analytic tap count, hoisted out of the
-    // per-row work (rows_ib * col_taps = a row's in-bounds window taps)
-    let col_taps = gemm::col_taps(dims);
-
-    let tile_len = dims.ho * dims.wo;
-    let mut z = vec![0.0f32; n_n * co_n * tile_len];
-    let writer = DisjointWriter::new(&mut z);
-    // work units are (n, oy) output rows: the im2col row panel is packed
-    // once and reused by every output channel of that row
-    let units = n_n * dims.ho;
-    let parts = parallel::map_ranges(threads, units, |lo, hi| {
-        pack::with_scratch(|scratch| {
-            let mut peak: i64 = 0;
-            let mut taps: u64 = 0;
-            let mut last_n = usize::MAX;
-            for u in lo..hi {
-                let (n, oy) = (u / dims.ho, u % dims.ho);
-                if n != last_n {
-                    // hoist the per-(co, ci) group-scale factor table —
-                    // it depends on the batch sample, never on the pixel
-                    scratch.factors.clear();
-                    for co in 0..co_n {
-                        for ci in 0..dims.ci_n {
-                            let wg = co * dims.ci_n + ci;
-                            let ag = n * dims.ci_n + ci;
-                            scratch.factors.push(GroupScaleFactor::combine(
-                                w.sg_exp[wg],
-                                w.sg_man[wg],
-                                a.sg_exp[ag],
-                                a.sg_man[ag],
-                            ));
-                        }
-                    }
-                    last_n = n;
-                }
-                let (row_peak, rows_ib) = gemm::conv_row_packed(
-                    &pw, ap, scratch, n, oy, dims, scale_log2, st, &writer,
-                );
-                peak = peak.max(row_peak);
-                taps += rows_ib as u64 * col_taps;
-            }
-            (peak, taps)
-        })
-    });
-    drop(writer);
-
-    let mut peak: i64 = 0;
-    let mut taps = 0u64;
-    for (p, t) in parts {
-        peak = peak.max(p);
-        taps += t;
-    }
-    let pixels = (n_n * co_n) as u64 * tile_len as u64;
-    // same peak-bits semantics as the planar/legacy per-tile merge: any
-    // processed (pixel, group) reports at least the 1-bit sign floor
-    let peak_acc_bits = if pixels == 0 || dims.ci_n == 0 {
-        0
-    } else {
-        64 - peak.unsigned_abs().leading_zeros() + 1
-    };
-    ConvOutput {
-        z,
-        shape: [n_n, co_n, dims.ho, dims.wo],
-        peak_acc_bits,
-        mul_ops: taps * (co_n * dims.ci_n) as u64,
-        int_add_ops: taps * (co_n * dims.ci_n) as u64,
-        float_add_ops: pixels * (dims.ci_n as u64 - 1),
-        group_scale_ops: pixels * dims.ci_n as u64,
-    }
+    // thin wrapper: the forward pass is the pass-generic engine of
+    // [`super::spec`] under the identity geometry (dil = ups = 1) — the
+    // same driver executes the Alg. 1 weight-/input-gradient convs
+    spec::run_engine(w, wp, a, ap, n_n, co_n, SpecDims::forward(dims), threads)
 }
 
 /// The decode-once planar kernel ([`super::planes`]) as an explicit entry
@@ -465,6 +394,142 @@ fn conv2d_f32_tile(w: &[f32], a: &[f32], n: usize, co: usize, d: ConvDims, z: &m
     }
 }
 
+/// f32 reference weight-gradient conv (Alg. 1 `Conv(E, A)`):
+/// `dW[co, ci, i, j] = sum_{n, oy, ox} E[n, co, oy, ox] *
+/// A[n, ci, oy*stride + i - pad, ox*stride + j - pad]` over in-bounds
+/// positions. f64 accumulation, sharded over `(co, ci)` output planes
+/// (each plane's element order is fixed, so results are bit-identical
+/// for every `threads`) — the independent reference the integer
+/// [`super::spec::ConvSpec`] weight-gradient pass is fuzzed against, and
+/// the backward conv of the native trainer's unquantized layers.
+#[allow(clippy::too_many_arguments)]
+pub fn conv2d_f32_wgrad(
+    e: &[f32],
+    eshape: [usize; 4],
+    a: &[f32],
+    ashape: [usize; 4],
+    stride: usize,
+    pad: usize,
+    kh: usize,
+    kw: usize,
+    threads: usize,
+) -> (Vec<f32>, [usize; 4]) {
+    let [n_n, co_n, ho, wo] = eshape;
+    let [a_n, ci_n, h, wi] = ashape;
+    assert_eq!(n_n, a_n, "error/activation batch mismatch");
+    assert_eq!(e.len(), n_n * co_n * ho * wo);
+    assert_eq!(a.len(), a_n * ci_n * h * wi);
+    let kk = kh * kw;
+    let mut out = vec![0.0f32; co_n * ci_n * kk];
+    let writer = DisjointWriter::new(&mut out);
+    parallel::map_ranges(threads, co_n * ci_n, |lo, hi| {
+        for u in lo..hi {
+            let (co, ci) = (u / ci_n, u % ci_n);
+            // SAFETY: unit u owns exactly out[u*kk .. (u+1)*kk] and
+            // map_ranges ranges are disjoint, so no two spans overlap
+            let plane = unsafe { writer.span(u * kk, kk) };
+            for i in 0..kh {
+                for j in 0..kw {
+                    let mut acc = 0.0f64;
+                    for n in 0..n_n {
+                        for oy in 0..ho {
+                            let iy = (oy * stride + i) as isize - pad as isize;
+                            if iy < 0 || iy >= h as isize {
+                                continue;
+                            }
+                            for ox in 0..wo {
+                                let ix = (ox * stride + j) as isize - pad as isize;
+                                if ix < 0 || ix >= wi as isize {
+                                    continue;
+                                }
+                                let eidx = ((n * co_n + co) * ho + oy) * wo + ox;
+                                let aidx =
+                                    ((n * ci_n + ci) * h + iy as usize) * wi + ix as usize;
+                                acc += e[eidx] as f64 * a[aidx] as f64;
+                            }
+                        }
+                    }
+                    plane[i * kw + j] = acc as f32;
+                }
+            }
+        }
+    });
+    drop(writer);
+    (out, [co_n, ci_n, kh, kw])
+}
+
+/// f32 reference input-gradient conv (Alg. 1 `Conv^T(E, W)`):
+/// `dA[n, ci, y, x] = sum_{co, i, j} E[n, co, (y + pad - i)/stride,
+/// (x + pad - j)/stride] * W[co, ci, i, j]` over positions where the
+/// divisions are exact and in range. f64 accumulation, sharded over
+/// `(n, ci)` output planes (bit-identical for every `threads`) — the
+/// independent reference for the integer input-gradient pass, and the
+/// backward conv of the native trainer's unquantized layers. `in_h` /
+/// `in_w` select the forward input dims (not recoverable from the
+/// error-field shape alone).
+#[allow(clippy::too_many_arguments)]
+pub fn conv2d_f32_dgrad(
+    e: &[f32],
+    eshape: [usize; 4],
+    w: &[f32],
+    wshape: [usize; 4],
+    stride: usize,
+    pad: usize,
+    in_h: usize,
+    in_w: usize,
+    threads: usize,
+) -> (Vec<f32>, [usize; 4]) {
+    let [n_n, co_n, ho, wo] = eshape;
+    let [w_co, ci_n, kh, kw] = wshape;
+    assert_eq!(co_n, w_co, "error/weight channel mismatch");
+    assert_eq!(e.len(), n_n * co_n * ho * wo);
+    assert_eq!(w.len(), w_co * ci_n * kh * kw);
+    let plane_len = in_h * in_w;
+    let mut out = vec![0.0f32; n_n * ci_n * plane_len];
+    let writer = DisjointWriter::new(&mut out);
+    parallel::map_ranges(threads, n_n * ci_n, |lo, hi| {
+        for u in lo..hi {
+            let (n, ci) = (u / ci_n, u % ci_n);
+            // SAFETY: unit u owns exactly out[u*plane_len ..
+            // (u+1)*plane_len] and map_ranges ranges are disjoint
+            let plane = unsafe { writer.span(u * plane_len, plane_len) };
+            for y in 0..in_h {
+                for x in 0..in_w {
+                    let mut acc = 0.0f64;
+                    for co in 0..co_n {
+                        for i in 0..kh {
+                            let ty = y as isize + pad as isize - i as isize;
+                            if ty < 0 || ty % stride as isize != 0 {
+                                continue;
+                            }
+                            let oy = (ty / stride as isize) as usize;
+                            if oy >= ho {
+                                continue;
+                            }
+                            for j in 0..kw {
+                                let tx = x as isize + pad as isize - j as isize;
+                                if tx < 0 || tx % stride as isize != 0 {
+                                    continue;
+                                }
+                                let ox = (tx / stride as isize) as usize;
+                                if ox >= wo {
+                                    continue;
+                                }
+                                let eidx = ((n * co_n + co) * ho + oy) * wo + ox;
+                                let widx = ((co * ci_n + ci) * kh + i) * kw + j;
+                                acc += e[eidx] as f64 * w[widx] as f64;
+                            }
+                        }
+                    }
+                    plane[y * in_w + x] = acc as f32;
+                }
+            }
+        }
+    });
+    drop(writer);
+    (out, [n_n, ci_n, in_h, in_w])
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -599,6 +664,51 @@ mod tests {
         let (z, shape) = conv2d_f32(&w, [1, 1, 1, 1], &a, [1, 1, 4, 4], 1, 0);
         assert_eq!(shape, [1, 1, 4, 4]);
         assert_eq!(z, a);
+    }
+
+    #[test]
+    fn f32_backward_convs_are_adjoints_of_forward() {
+        // the defining property of the gradient convs: for any error
+        // field E,  <Conv(W, A), E> == <W, wgrad(E, A)> == <A, dgrad(E, W)>
+        // (the backward passes are the adjoints of the forward linear map)
+        let mut rng = Pcg32::seeded(28);
+        for (stride, pad, kh, kw, h, wi) in
+            [(1usize, 1usize, 3usize, 3usize, 6usize, 6usize), (2, 1, 3, 3, 7, 5), (2, 0, 2, 2, 6, 6), (1, 2, 1, 1, 4, 4)]
+        {
+            let (n_n, co_n, ci_n) = (2usize, 3usize, 2usize);
+            let wshape = [co_n, ci_n, kh, kw];
+            let ashape = [n_n, ci_n, h, wi];
+            let w = rand_nchw(&mut rng, wshape);
+            let a = rand_nchw(&mut rng, ashape);
+            let (z, zshape) = conv2d_f32(&w, wshape, &a, ashape, stride, pad);
+            let e = rand_nchw(&mut rng, zshape);
+            let (dw, dwshape) = conv2d_f32_wgrad(&e, zshape, &a, ashape, stride, pad, kh, kw, 1);
+            let (da, dashape) = conv2d_f32_dgrad(&e, zshape, &w, wshape, stride, pad, h, wi, 1);
+            // sharding is per independent output plane: bit-identical
+            for threads in [2usize, 8] {
+                let (dwt, _) = conv2d_f32_wgrad(&e, zshape, &a, ashape, stride, pad, kh, kw, threads);
+                let (dat, _) = conv2d_f32_dgrad(&e, zshape, &w, wshape, stride, pad, h, wi, threads);
+                assert!(dw.iter().zip(&dwt).all(|(x, y)| x.to_bits() == y.to_bits()), "t{threads}");
+                assert!(da.iter().zip(&dat).all(|(x, y)| x.to_bits() == y.to_bits()), "t{threads}");
+            }
+            assert_eq!(dwshape, wshape);
+            assert_eq!(dashape, ashape);
+            let dot = |x: &[f32], y: &[f32]| -> f64 {
+                x.iter().zip(y).map(|(p, q)| *p as f64 * *q as f64).sum()
+            };
+            let ze = dot(&z, &e);
+            let wdw = dot(&w, &dw);
+            let ada = dot(&a, &da);
+            let scale = ze.abs().max(1.0);
+            assert!(
+                (ze - wdw).abs() / scale < 1e-5,
+                "s{stride} p{pad}: <Z,E>={ze} vs <W,dW>={wdw}"
+            );
+            assert!(
+                (ze - ada).abs() / scale < 1e-5,
+                "s{stride} p{pad}: <Z,E>={ze} vs <A,dA>={ada}"
+            );
+        }
     }
 
     #[test]

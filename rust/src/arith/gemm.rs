@@ -1,5 +1,8 @@
 //! The cache-blocked packed-GEMM lowering of the low-bit conv — the
-//! default `lowbit_conv` kernel.
+//! default `lowbit_conv` kernel, and (via the pass-generic
+//! [`super::spec::SpecDims`] geometry) the microkernel of ALL three
+//! Alg. 1 passes: forward, weight-gradient and input-gradient convs run
+//! this exact code over differently packed operands.
 //!
 //! [`super::planes`] removed the per-pixel decode; this module removes the
 //! conv-order walk. The Eq. 7 shift-MAC runs as a blocked GEMM over the
@@ -46,23 +49,26 @@
 //!
 //! [`GroupScaleFactor`]: super::group_scale::GroupScaleFactor
 
-use super::conv::ConvDims;
 use super::pack::{PackScratch, PackedWeights, MR, NR};
 use super::planes::DecodedPlanes;
+use super::spec::SpecDims;
 use super::tree::tree_sum;
 use crate::util::parallel::DisjointWriter;
 
-/// In-bounds kernel *columns* summed over a row's output positions —
-/// the geometry-only half of the analytic `mul_ops` count (the other
-/// half, in-bounds kernel rows, depends on `oy` and comes from
-/// [`PackScratch::pack_row`]). Computed once per conv by the driver.
-pub(crate) fn col_taps(d: ConvDims) -> u64 {
-    let ConvDims { kw, wi, wo, stride, pad, .. } = d;
+/// Physically in-bounds kernel *columns* summed over a row's output
+/// positions — the geometry-only half of the analytic `mul_ops` count
+/// (the other half, in-bounds kernel rows, depends on `oy` and comes from
+/// [`PackScratch::pack_row`]). Computed once per conv by the driver. The
+/// predicate is exactly [`PackScratch::pack_row`]'s column test: a tap's
+/// logical position must be non-negative, land on a physical (not
+/// zero-upsampled) column, and fall inside the plane — so backward-pass
+/// counters stay geometry-driven just like the forward ones.
+pub(crate) fn col_taps(d: SpecDims) -> u64 {
     let mut taps = 0u64;
-    for x in 0..wo {
-        for j in 0..kw {
-            let ix = (x * stride + j) as isize - pad as isize;
-            if ix >= 0 && (ix as usize) < wi {
+    for x in 0..d.wo {
+        for j in 0..d.kw {
+            let ix = (x * d.stride + j * d.dil) as isize - d.pad_x;
+            if ix >= 0 && ix % d.ups as isize == 0 && ((ix / d.ups as isize) as usize) < d.wi {
                 taps += 1;
             }
         }
@@ -70,54 +76,54 @@ pub(crate) fn col_taps(d: ConvDims) -> u64 {
     taps
 }
 
-/// Compute one output row `(n, oy, all co, all ox)` on the packed panels,
-/// writing finished pixels straight into `zw` at their `[N, Co, Ho, Wo]`
+/// Compute one output row `(u, oy, all v, all ox)` on the packed panels,
+/// writing finished pixels straight into `zw` at their `[U, V, Ho, Wo]`
 /// offsets. Returns `(row peak |acc|, in-bounds kernel rows for this
 /// oy)` — the caller derives the audit counters analytically as
-/// `rows_ib * col_taps * co_n * ci_n` (clipping is rectangular, so the
-/// in-bounds window size separates into rows x columns).
+/// `rows_ib * col_taps * v_n * g_n` (clipping/upsampling is rectangular,
+/// so the in-bounds window size separates into rows x columns).
 ///
-/// `scratch.factors` must hold the `co_n * ci_n` hoisted group-scale
-/// factors for batch sample `n` (co-major), see the driver in
-/// [`super::conv`].
+/// `scratch.factors` must hold the `v_n * g_n` hoisted group-scale
+/// factors for gathered index `u` (v-major), see the driver in
+/// [`super::spec`].
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn conv_row_packed(
     pw: &PackedWeights,
     ap: &DecodedPlanes,
     scratch: &mut PackScratch,
-    n: usize,
+    u: usize,
     oy: usize,
-    d: ConvDims,
+    d: SpecDims,
     scale_log2: i32,
     st: f32,
     zw: &DisjointWriter<f32>,
 ) -> (i64, usize) {
-    let ConvDims { ci_n, kh, kw, h, wi, ho, wo, stride, pad } = d;
-    let rows_ib = scratch.pack_row(ap, n, oy, ci_n, kh, kw, h, wi, wo, stride, pad);
+    let rows_ib = scratch.pack_row(ap, u, oy, &d);
+    let SpecDims { g_n, kh, kw, ho, wo, .. } = d;
 
-    let co_n = pw.co_n;
+    let v_n = pw.co_n;
     let kdim = pw.kdim;
     let kk = kh * kw;
     let wo_p = wo.div_ceil(NR) * NR;
     // split the arena so the panel borrows stay disjoint
     let PackScratch { a_frac, a_shift, cbuf, factors } = scratch;
-    cbuf.resize(MR * NR * ci_n, 0.0);
+    cbuf.resize(MR * NR * g_n, 0.0);
     let mut peak: i64 = 0;
 
     for x0 in (0..wo).step_by(NR) {
         let nr = (wo - x0).min(NR);
         for b in 0..pw.blocks {
             let m0 = b * MR;
-            let mr = (co_n - m0).min(MR);
+            let mr = (v_n - m0).min(MR);
             let wfrac = &pw.frac[b * kdim * MR..(b + 1) * kdim * MR];
             let wshift = &pw.shift[b * kdim * MR..(b + 1) * kdim * MR];
-            for ci in 0..ci_n {
+            for g in 0..g_n {
                 // Kc segment: one scaling group's kh*kw taps, register
                 // accumulators + lane-wise running |acc| peaks
                 let mut acc = [[0i64; NR]; MR];
                 let mut pk = [[0i64; NR]; MR];
                 for t in 0..kk {
-                    let k = ci * kk + t;
+                    let k = g * kk + t;
                     let wf = &wfrac[k * MR..k * MR + MR];
                     let ws = &wshift[k * MR..k * MR + MR];
                     let af = &a_frac[k * wo_p + x0..k * wo_p + x0 + NR];
@@ -134,9 +140,9 @@ pub(crate) fn conv_row_packed(
                 }
                 // epilogue: Eq. 8 group scale into the contribution rows
                 for m in 0..mr {
-                    let factor = factors[(m0 + m) * ci_n + ci];
+                    let factor = factors[(m0 + m) * g_n + g];
                     for x in 0..nr {
-                        cbuf[(m * NR + x) * ci_n + ci] = factor.apply(acc[m][x], scale_log2);
+                        cbuf[(m * NR + x) * g_n + g] = factor.apply(acc[m][x], scale_log2);
                     }
                 }
                 for pkm in &pk {
@@ -147,13 +153,13 @@ pub(crate) fn conv_row_packed(
             }
             // inter-group adder tree, straight into the output rows
             for m in 0..mr {
-                let co = m0 + m;
-                // SAFETY: span (n, co, oy, x0..x0+nr) — work units own
+                let v = m0 + m;
+                // SAFETY: span (u, v, oy, x0..x0+nr) — work units own
                 // disjoint oy rows and x0 blocks are disjoint within one
                 // call, so no two live spans overlap
-                let out = unsafe { zw.span(((n * co_n + co) * ho + oy) * wo + x0, nr) };
+                let out = unsafe { zw.span(((u * v_n + v) * ho + oy) * wo + x0, nr) };
                 for (x, slot) in out.iter_mut().enumerate() {
-                    let row = &cbuf[(m * NR + x) * ci_n..(m * NR + x + 1) * ci_n];
+                    let row = &cbuf[(m * NR + x) * g_n..(m * NR + x + 1) * g_n];
                     *slot = st * tree_sum(row);
                 }
             }

@@ -15,9 +15,12 @@
 //! are the cache-blocked packed-GEMM kernel the default conv path runs on
 //! (operands decoded once AND repacked into MR-lane / im2col panels, the
 //! Eq. 7 MAC register-tiled, group scales applied in the epilogue);
-//! [`planes`] is the decode-once planar kernel kept as the bench baseline
-//! — all three conv kernels are bit-identical; [`bitwidth`] carries the
-//! Sec. V-C accumulation-width analysis.
+//! [`spec`] generalizes that engine to all three convolutions of the
+//! Alg. 1 training step (forward, weight-gradient, input-gradient) via
+//! the pass-generic [`spec::ConvSpec`] geometry; [`planes`] is the
+//! decode-once planar kernel kept as the bench baseline — all three
+//! forward kernels are bit-identical; [`bitwidth`] carries the Sec. V-C
+//! accumulation-width analysis.
 
 pub mod bitwidth;
 pub mod conv;
@@ -26,4 +29,5 @@ pub mod group_scale;
 pub mod intra;
 pub mod pack;
 pub mod planes;
+pub mod spec;
 pub mod tree;

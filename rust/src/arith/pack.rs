@@ -16,11 +16,14 @@
 //!   forward-only stream no matter which output pixel it is producing.
 //!   Lanes past `Co` are zero (a zero fraction contributes nothing to
 //!   value, peak, or counters, so padded lanes are arithmetic no-ops).
-//! * [`PackScratch::pack_row`] — one output row's activations gathered
+//! * [`PackScratch::pack_row`] — one output row's gathered operand packed
 //!   im2col-style into a `[K][Wo_p]` panel (`Wo_p` = `Wo` rounded up to
 //!   [`NR`] lanes), zero-filled where the kernel window hangs over the
-//!   input border. Again `frac`/`shift` are struct-of-arrays so the MAC
-//!   reads two dense streams.
+//!   input border — or, under the pass-generic geometry of
+//!   [`super::spec::SpecDims`], where a dilated tap or a zero-upsampled
+//!   input hole contributes nothing (the Alg. 1 backward passes). Again
+//!   `frac`/`shift` are struct-of-arrays so the MAC reads two dense
+//!   streams.
 //!
 //! Both panels, the per-microtile contribution buffer, and the hoisted
 //! group-scale factor table live in a [`PackScratch`] arena owned by each
@@ -30,6 +33,7 @@
 
 use super::group_scale::GroupScaleFactor;
 use super::planes::DecodedPlanes;
+use super::spec::SpecDims;
 use crate::util::parallel;
 use std::cell::RefCell;
 
@@ -104,42 +108,37 @@ pub struct PackScratch {
 }
 
 impl PackScratch {
-    /// Gather output row `oy` of sample `n` into the im2col panel:
-    /// `a_frac[k * wo_p + x]` = `signed_frac` of the activation under
-    /// kernel tap `k = (ci * kh + i) * kw + j` at output column `x`
-    /// (zero when the tap hangs over the border), `x < wo_p` zero-padded
-    /// to the [`NR`] lane multiple. Every slot is (re)written, so the
-    /// arena can be reused without clearing. Returns the number of
-    /// in-bounds kernel rows for this `oy` (the analytic-counter input).
-    #[allow(clippy::too_many_arguments)]
-    pub fn pack_row(
-        &mut self,
-        ap: &DecodedPlanes,
-        n: usize,
-        oy: usize,
-        ci_n: usize,
-        kh: usize,
-        kw: usize,
-        h: usize,
-        wi: usize,
-        wo: usize,
-        stride: usize,
-        pad: usize,
-    ) -> usize {
+    /// Gather output row `oy` of gathered-operand index `u` into the
+    /// im2col panel under the pass-generic geometry `d`
+    /// ([`SpecDims`]): `a_frac[k * wo_p + x]` = `signed_frac` of the
+    /// element under tap `k = (g * kh + i) * kw + j` at output column `x`
+    /// — zero when the tap's logical position `x*stride + j*dil - pad_x`
+    /// hangs over the border or (for `ups > 1`) falls in a zero-inserted
+    /// upsampling hole — with `x < wo_p` zero-padded to the [`NR`] lane
+    /// multiple. Every slot is (re)written, so the arena can be reused
+    /// without clearing. Returns the number of physically in-bounds
+    /// kernel rows for this `oy` (the analytic-counter input).
+    pub(crate) fn pack_row(&mut self, ap: &DecodedPlanes, u: usize, oy: usize, d: &SpecDims) -> usize {
+        let SpecDims { g_n, kh, kw, h, wi, wo, stride, dil, ups, pad_y, pad_x, .. } = *d;
         let wo_p = wo.div_ceil(NR) * NR;
-        let kdim = ci_n * kh * kw;
+        let kdim = g_n * kh * kw;
         self.a_frac.resize(kdim * wo_p, 0);
         self.a_shift.resize(kdim * wo_p, 0);
         let mut rows_ib = 0usize;
-        for ci in 0..ci_n {
+        for g in 0..g_n {
             for i in 0..kh {
-                let iy = (oy * stride + i) as isize - pad as isize;
-                let row_ok = iy >= 0 && (iy as usize) < h;
-                if ci == 0 && row_ok {
+                let iy_log = (oy * stride + i * dil) as isize - pad_y;
+                let (row_ok, iy) = if iy_log >= 0 && iy_log % ups as isize == 0 {
+                    let q = (iy_log / ups as isize) as usize;
+                    (q < h, q)
+                } else {
+                    (false, 0)
+                };
+                if g == 0 && row_ok {
                     rows_ib += 1;
                 }
                 for j in 0..kw {
-                    let k = (ci * kh + i) * kw + j;
+                    let k = (g * kh + i) * kw + j;
                     let dst_f = &mut self.a_frac[k * wo_p..(k + 1) * wo_p];
                     let dst_s = &mut self.a_shift[k * wo_p..(k + 1) * wo_p];
                     if !row_ok {
@@ -147,38 +146,61 @@ impl PackScratch {
                         dst_s.fill(0);
                         continue;
                     }
-                    // the in-bounds output-column span for this tap:
-                    // 0 <= x*stride + j - pad < wi  (cf. planes::interior_span)
-                    let off = j as isize - pad as isize;
-                    let x_lo = if off >= 0 { 0 } else { ((-off) as usize).div_ceil(stride) };
-                    let x_hi = if (wi as isize - 1 - off) < 0 {
-                        0
-                    } else {
-                        (wi as isize - 1 - off) as usize / stride + 1
-                    };
-                    let x_lo = x_lo.min(wo);
-                    let x_hi = x_hi.clamp(x_lo, wo);
-                    dst_f[..x_lo].fill(0);
-                    dst_s[..x_lo].fill(0);
-                    if x_hi > x_lo {
-                        // x_lo*stride + off >= 0 and the last source index
-                        // is < wi by the span construction above
-                        let arow = ((n * ci_n + ci) * h + iy as usize) * wi;
-                        let src0 = (arow as isize + (x_lo * stride) as isize + off) as usize;
-                        if stride == 1 {
-                            dst_f[x_lo..x_hi]
-                                .copy_from_slice(&ap.signed_frac[src0..src0 + (x_hi - x_lo)]);
-                            dst_s[x_lo..x_hi]
-                                .copy_from_slice(&ap.shift[src0..src0 + (x_hi - x_lo)]);
+                    let arow = ((u * g_n + g) * h + iy) * wi;
+                    let off = (j * dil) as isize - pad_x;
+                    if ups == 1 {
+                        // the in-bounds output-column span for this tap:
+                        // 0 <= x*stride + off < wi (cf. planes::interior_span)
+                        let x_lo = if off >= 0 { 0 } else { ((-off) as usize).div_ceil(stride) };
+                        let x_hi = if (wi as isize - 1 - off) < 0 {
+                            0
                         } else {
-                            for (t, x) in (x_lo..x_hi).enumerate() {
-                                dst_f[x] = ap.signed_frac[src0 + t * stride];
-                                dst_s[x] = ap.shift[src0 + t * stride];
+                            (wi as isize - 1 - off) as usize / stride + 1
+                        };
+                        let x_lo = x_lo.min(wo);
+                        let x_hi = x_hi.clamp(x_lo, wo);
+                        dst_f[..x_lo].fill(0);
+                        dst_s[..x_lo].fill(0);
+                        if x_hi > x_lo {
+                            // x_lo*stride + off >= 0 and the last source
+                            // index is < wi by the span construction above
+                            let src0 = (arow as isize + (x_lo * stride) as isize + off) as usize;
+                            if stride == 1 {
+                                dst_f[x_lo..x_hi]
+                                    .copy_from_slice(&ap.signed_frac[src0..src0 + (x_hi - x_lo)]);
+                                dst_s[x_lo..x_hi]
+                                    .copy_from_slice(&ap.shift[src0..src0 + (x_hi - x_lo)]);
+                            } else {
+                                for (t, x) in (x_lo..x_hi).enumerate() {
+                                    dst_f[x] = ap.signed_frac[src0 + t * stride];
+                                    dst_s[x] = ap.shift[src0 + t * stride];
+                                }
+                            }
+                        }
+                        dst_f[x_hi..].fill(0);
+                        dst_s[x_hi..].fill(0);
+                    } else {
+                        // upsampled input view (stride == 1 by the engine
+                        // invariant): tap j lands on a physical column only
+                        // at x with (x + off) a non-negative multiple of
+                        // `ups`; those x form an arithmetic progression of
+                        // step `ups` whose source index advances by 1
+                        dst_f.fill(0);
+                        dst_s.fill(0);
+                        let lo = if off >= 0 { 0usize } else { (-off) as usize };
+                        if lo < wo {
+                            let t0 = (lo as isize + off) as usize;
+                            let delta = (ups - t0 % ups) % ups;
+                            let mut x = lo + delta;
+                            let mut src = (x as isize + off) as usize / ups;
+                            while x < wo && src < wi {
+                                dst_f[x] = ap.signed_frac[arow + src];
+                                dst_s[x] = ap.shift[arow + src];
+                                x += ups;
+                                src += 1;
                             }
                         }
                     }
-                    dst_f[x_hi..].fill(0);
-                    dst_s[x_hi..].fill(0);
                 }
             }
         }
@@ -245,41 +267,74 @@ mod tests {
         let t = quantize(&x, &ashape, &cfg, &[]);
         let ap = t.decoded_planes();
         let [_, ci_n, h, wi] = ashape;
-        for (kh, kw, stride, pad) in [(3usize, 3usize, 1usize, 1usize), (2, 3, 2, 0), (3, 2, 2, 2)] {
-            if h + 2 * pad < kh || wi + 2 * pad < kw {
+        // (kh, kw, stride, dil, ups, pad): forward geometries, a dilated
+        // (wgrad-shaped) one, and an upsampled (dgrad-shaped) one
+        let geoms: &[(usize, usize, usize, usize, usize, isize)] = &[
+            (3, 3, 1, 1, 1, 1),
+            (2, 3, 2, 1, 1, 0),
+            (3, 2, 2, 1, 1, 2),
+            (2, 3, 1, 2, 1, 1),
+            (3, 3, 1, 1, 2, 2),
+            (2, 2, 1, 1, 3, -1),
+        ];
+        for &(kh, kw, stride, dil, ups, pad) in geoms {
+            // logical (upsampled) input extents
+            let (hl, wl) = ((h - 1) * ups + 1, (wi - 1) * ups + 1);
+            let span_h = hl as isize + 2 * pad - ((kh - 1) * dil) as isize;
+            let span_w = wl as isize + 2 * pad - ((kw - 1) * dil) as isize;
+            if span_h < 1 || span_w < 1 {
                 continue;
             }
-            let wo = (wi + 2 * pad - kw) / stride + 1;
-            let ho = (h + 2 * pad - kh) / stride + 1;
+            let ho = (span_h - 1) as usize / stride + 1;
+            let wo = (span_w - 1) as usize / stride + 1;
             let wo_p = wo.div_ceil(NR) * NR;
+            let d = SpecDims {
+                g_n: ci_n,
+                kh,
+                kw,
+                h,
+                wi,
+                ho,
+                wo,
+                stride,
+                dil,
+                ups,
+                pad_y: pad,
+                pad_x: pad,
+            };
             let mut scratch = PackScratch::default();
-            for n in 0..ashape[0] {
+            for u in 0..ashape[0] {
                 for oy in 0..ho {
-                    scratch.pack_row(&ap, n, oy, ci_n, kh, kw, h, wi, wo, stride, pad);
-                    for ci in 0..ci_n {
+                    scratch.pack_row(&ap, u, oy, &d);
+                    for g in 0..ci_n {
                         for i in 0..kh {
                             for j in 0..kw {
-                                let k = (ci * kh + i) * kw + j;
+                                let k = (g * kh + i) * kw + j;
                                 for x in 0..wo_p {
-                                    let iy = (oy * stride + i) as isize - pad as isize;
-                                    let ix = (x * stride + j) as isize - pad as isize;
-                                    let inb = x < wo
-                                        && iy >= 0
-                                        && ix >= 0
-                                        && (iy as usize) < h
-                                        && (ix as usize) < wi;
-                                    let want = if inb {
-                                        let idx = ((n * ci_n + ci) * h + iy as usize) * wi
-                                            + ix as usize;
-                                        (ap.signed_frac[idx], ap.shift[idx])
-                                    } else {
-                                        (0, 0)
+                                    let iy = (oy * stride + i * dil) as isize - pad;
+                                    let ix = (x * stride + j * dil) as isize - pad;
+                                    let phys = |v: isize, len: usize| {
+                                        if v >= 0 && v % ups as isize == 0 {
+                                            let q = (v / ups as isize) as usize;
+                                            if q < len {
+                                                return Some(q);
+                                            }
+                                        }
+                                        None
+                                    };
+                                    let want = match (x < wo, phys(iy, h), phys(ix, wi)) {
+                                        (true, Some(py), Some(px)) => {
+                                            let idx = ((u * ci_n + g) * h + py) * wi + px;
+                                            (ap.signed_frac[idx], ap.shift[idx])
+                                        }
+                                        _ => (0, 0),
                                     };
                                     let got =
                                         (scratch.a_frac[k * wo_p + x], scratch.a_shift[k * wo_p + x]);
                                     assert_eq!(
                                         got, want,
-                                        "n{n} oy{oy} ci{ci} i{i} j{j} x{x} (k{kh}x{kw} s{stride} p{pad})"
+                                        "u{u} oy{oy} g{g} i{i} j{j} x{x} \
+                                         (k{kh}x{kw} s{stride} d{dil} up{ups} p{pad})"
                                     );
                                 }
                             }

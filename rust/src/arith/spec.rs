@@ -1,0 +1,559 @@
+//! Pass-generic conv engine: ONE geometry description ([`ConvSpec`]) and
+//! ONE packed-GEMM driver ([`run_engine`]) execute all three convolutions
+//! of the paper's Alg. 1 training step:
+//!
+//! ```text
+//!   forward          Z  = Conv  (qW, qA)   [N, Co, Ho, Wo]
+//!   weight gradient  dW = Conv  (qE, qA)   [Co, Ci, Kh, Kw]
+//!   input gradient   dA = Conv^T(qE, qW)   [N, Ci, H,  W ]
+//! ```
+//!
+//! All three are the same contraction
+//!
+//! ```text
+//!   Out[u, v, oy, ox] = S_t^x S_t^y * sum_g sum_(i,j)
+//!                       X[v, g, i, j] * Y[u, g, pos(oy, ox, i, j)]
+//! ```
+//!
+//! differing only in (a) which operand plays the *stationary* role `X`
+//! (packed once into MR-lane panels) vs the *gathered* role `Y` (im2col
+//! row panels), and (b) the tap-position map `pos`, which [`SpecDims`]
+//! parameterizes with an output `stride`, a tap `dil`ation, an input
+//! zero-`ups`ampling factor, and *signed* pads:
+//!
+//! ```text
+//!   iy_logical = oy*stride + i*dil - pad_y      (ix likewise)
+//!   physical  <=>  iy_logical >= 0, divisible by ups, quotient < H
+//! ```
+//!
+//! * **forward** — `X = qW`, `Y = qA`, `dil = ups = 1`: the plain strided
+//!   conv of [`super::conv`].
+//! * **weight gradient** — `X = qE` transposed to `[Co, N, Ho, Wo]`,
+//!   `Y = qA` transposed to `[Ci, N, H, W]`, `stride = 1`,
+//!   `dil = forward stride`: each dW tap is a stride-dilated dot of the
+//!   error field against the activations, reduced over the batch by the
+//!   inter-group tree (the scaling groups of E `(n, co)` and A `(n, ci)`
+//!   transpose to `(co, n)` / `(ci, n)`, so group structure is preserved
+//!   exactly). The engine output `[Ci, Co, Kh, Kw]` is transposed back.
+//! * **input gradient** — `X = qW` transposed to `[Ci, Co, Kh, Kw]` and
+//!   spatially flipped, `Y = qE` in its native layout, `stride = 1`,
+//!   `ups = forward stride`, `pad = K - 1 - pad` (signed: may go negative
+//!   when the forward pad reaches the kernel size): the classic transposed
+//!   convolution over the zero-upsampled error field. Forward-input pixels
+//!   no window ever touched fall out as exact zeros (no output-padding
+//!   special case).
+//!
+//! The operand transpositions are bit-exact MLS relayouts
+//! ([`MlsTensor::transpose01`]) — per-group scales travel with their
+//! groups — so every pass runs the same microkernel, scratch arenas,
+//! group-scale epilogue, adder tree, and audit counters as the forward
+//! path, and is bit-identical across thread counts for the same reason
+//! the forward kernel is (panels and per-row work are thread-independent,
+//! counters merge by sum/max). `rust/tests/conv_fuzz.rs` fuzzes the
+//! backward passes against an f32 reference backward conv across worker
+//! counts {1, 2, 8}.
+//!
+//! A faithful Alg. 1 property the engine inherits from the geometry: the
+//! executed `mul_ops`/`int_add_ops` of the three passes are **equal** for
+//! every layer shape (the in-bounds tap sets are bijective re-indexings
+//! of each other), which `spec::tests` and the fuzz pin down.
+
+use super::conv::{lowbit_conv_threaded, ConvDims, ConvOutput};
+use super::gemm;
+use super::group_scale::GroupScaleFactor;
+use super::pack;
+use super::planes::DecodedPlanes;
+use crate::mls::{Grouping, MlsTensor};
+use crate::util::parallel::{self, DisjointWriter};
+
+/// Which Alg. 1 conv this execution is.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ConvPass {
+    /// `Conv(qW, qA)` -> `[N, Co, Ho, Wo]`
+    Forward,
+    /// `Conv(qE, qA)` -> `[Co, Ci, Kh, Kw]`
+    WeightGrad,
+    /// `Conv^T(qE, qW)` -> `[N, Ci, H, W]`
+    InputGrad,
+}
+
+/// The geometry of ONE conv layer, shared by all three Alg. 1 passes:
+/// stride, padding, kernel spatial dims, and the forward input spatial
+/// dims (which the output shape of the input-gradient pass needs — they
+/// are not recoverable from `(Ho, stride)` alone).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ConvSpec {
+    pub stride: usize,
+    pub pad: usize,
+    pub kh: usize,
+    pub kw: usize,
+    pub in_h: usize,
+    pub in_w: usize,
+}
+
+impl ConvSpec {
+    pub fn new(stride: usize, pad: usize, kh: usize, kw: usize, in_h: usize, in_w: usize) -> Self {
+        assert!(stride >= 1, "stride must be >= 1");
+        assert!(kh >= 1 && kw >= 1, "kernel dims must be >= 1");
+        assert!(
+            in_h + 2 * pad >= kh && in_w + 2 * pad >= kw,
+            "kernel {kh}x{kw} does not fit the padded {in_h}x{in_w} input"
+        );
+        ConvSpec { stride, pad, kh, kw, in_h, in_w }
+    }
+
+    /// Derive the layer spec from the forward operand shapes.
+    pub fn of_forward(w: &MlsTensor, a: &MlsTensor, stride: usize, pad: usize) -> Self {
+        assert_eq!(w.shape.len(), 4, "weights must be [Co, Ci, Kh, Kw]");
+        assert_eq!(a.shape.len(), 4, "activations must be [N, Ci, H, W]");
+        Self::new(stride, pad, w.shape[2], w.shape[3], a.shape[2], a.shape[3])
+    }
+
+    pub fn out_h(&self) -> usize {
+        (self.in_h + 2 * self.pad - self.kh) / self.stride + 1
+    }
+
+    pub fn out_w(&self) -> usize {
+        (self.in_w + 2 * self.pad - self.kw) / self.stride + 1
+    }
+
+    /// `Conv(qW, qA)`: thin wrapper over [`Self::run`].
+    pub fn forward(&self, qw: &MlsTensor, qa: &MlsTensor, threads: usize) -> ConvOutput {
+        self.run(ConvPass::Forward, qw, qa, threads)
+    }
+
+    /// `Conv(qE, qA)` -> `dW [Co, Ci, Kh, Kw]`: thin wrapper over [`Self::run`].
+    pub fn weight_grad(&self, qe: &MlsTensor, qa: &MlsTensor, threads: usize) -> ConvOutput {
+        self.run(ConvPass::WeightGrad, qe, qa, threads)
+    }
+
+    /// `Conv^T(qE, qW)` -> `dA [N, Ci, H, W]`: thin wrapper over [`Self::run`].
+    pub fn input_grad(&self, qe: &MlsTensor, qw: &MlsTensor, threads: usize) -> ConvOutput {
+        self.run(ConvPass::InputGrad, qe, qw, threads)
+    }
+
+    /// Execute one Alg. 1 pass on the packed-GEMM engine. Operand roles
+    /// per pass: `Forward (qW, qA)`, `WeightGrad (qE, qA)`,
+    /// `InputGrad (qE, qW)`. The result INCLUDES the tensor scales
+    /// `S_t^x * S_t^y`, so it is directly comparable with the float
+    /// convolution of the dequantized operands, and carries the same five
+    /// hardware-audit counters as the forward kernel.
+    pub fn run(&self, pass: ConvPass, x: &MlsTensor, y: &MlsTensor, threads: usize) -> ConvOutput {
+        let (ho, wo) = (self.out_h(), self.out_w());
+        match pass {
+            ConvPass::Forward => {
+                assert_eq!(x.shape.len(), 4, "weights must be [Co, Ci, Kh, Kw]");
+                assert_eq!(y.shape.len(), 4, "activations must be [N, Ci, H, W]");
+                assert_eq!(
+                    [x.shape[2], x.shape[3]],
+                    [self.kh, self.kw],
+                    "forward weights do not match the spec kernel dims"
+                );
+                assert_eq!(
+                    [y.shape[2], y.shape[3]],
+                    [self.in_h, self.in_w],
+                    "forward activations do not match the spec input dims"
+                );
+                lowbit_conv_threaded(x, y, self.stride, self.pad, threads)
+            }
+            ConvPass::WeightGrad => {
+                let (qe, qa) = (x, y);
+                assert_eq!(qe.shape.len(), 4, "error field must be [N, Co, Ho, Wo]");
+                assert_eq!(qa.shape.len(), 4, "activations must be [N, Ci, H, W]");
+                assert_eq!(qe.cfg.grouping, Grouping::Both);
+                assert_eq!(qa.cfg.grouping, Grouping::Both);
+                let [n_n, co_n, e_h, e_w] = [qe.shape[0], qe.shape[1], qe.shape[2], qe.shape[3]];
+                let [a_n, ci_n, a_h, a_w] = [qa.shape[0], qa.shape[1], qa.shape[2], qa.shape[3]];
+                assert_eq!(n_n, a_n, "error/activation batch mismatch");
+                assert_eq!([e_h, e_w], [ho, wo], "error field does not match the spec output dims");
+                assert_eq!(
+                    [a_h, a_w],
+                    [self.in_h, self.in_w],
+                    "activations do not match the spec input dims"
+                );
+                // E^T [Co, N, Ho, Wo] is the stationary operand (its taps
+                // are the reduction), A^T [Ci, N, H, W] the gathered one;
+                // the `(n, *)` scaling groups become `(*, n)` groups, so
+                // the engine's group-scale epilogue sees the exact
+                // quantization structure of the original tensors.
+                let et = qe.transpose01();
+                let at = qa.transpose01();
+                let ep = DecodedPlanes::of_threaded(&et, threads);
+                let ap = DecodedPlanes::of_threaded(&at, threads);
+                let d = SpecDims {
+                    g_n: n_n,
+                    kh: ho,
+                    kw: wo,
+                    h: self.in_h,
+                    wi: self.in_w,
+                    ho: self.kh,
+                    wo: self.kw,
+                    stride: 1,
+                    dil: self.stride,
+                    ups: 1,
+                    pad_y: self.pad as isize,
+                    pad_x: self.pad as isize,
+                };
+                let out = run_engine(&et, &ep, &at, &ap, ci_n, co_n, d, threads);
+                transpose01_output(out)
+            }
+            ConvPass::InputGrad => {
+                let (qe, qw) = (x, y);
+                assert_eq!(qe.shape.len(), 4, "error field must be [N, Co, Ho, Wo]");
+                assert_eq!(qw.shape.len(), 4, "weights must be [Co, Ci, Kh, Kw]");
+                assert_eq!(qe.cfg.grouping, Grouping::Both);
+                assert_eq!(qw.cfg.grouping, Grouping::Both);
+                let [n_n, co_n, e_h, e_w] = [qe.shape[0], qe.shape[1], qe.shape[2], qe.shape[3]];
+                let [w_co, ci_n, w_kh, w_kw] = [qw.shape[0], qw.shape[1], qw.shape[2], qw.shape[3]];
+                assert_eq!(co_n, w_co, "error/weight channel mismatch");
+                assert_eq!([e_h, e_w], [ho, wo], "error field does not match the spec output dims");
+                assert_eq!(
+                    [w_kh, w_kw],
+                    [self.kh, self.kw],
+                    "weights do not match the spec kernel dims"
+                );
+                // W transposed to [Ci, Co, Kh, Kw] AND spatially flipped is
+                // the stationary operand; E stays in its native layout
+                // [N, Co, Ho, Wo] and is gathered through the
+                // zero-upsampled view (ups = stride) with the transposed
+                // pad K - 1 - p (signed: negative means cropping, which
+                // happens when the forward pad reaches the kernel size).
+                let wt = qw.transpose01_flip23();
+                let wp = DecodedPlanes::of_threaded(&wt, threads);
+                let ep = DecodedPlanes::of_threaded(qe, threads);
+                let d = SpecDims {
+                    g_n: co_n,
+                    kh: self.kh,
+                    kw: self.kw,
+                    h: ho,
+                    wi: wo,
+                    ho: self.in_h,
+                    wo: self.in_w,
+                    stride: 1,
+                    dil: 1,
+                    ups: self.stride,
+                    pad_y: self.kh as isize - 1 - self.pad as isize,
+                    pad_x: self.kw as isize - 1 - self.pad as isize,
+                };
+                run_engine(&wt, &wp, qe, &ep, n_n, ci_n, d, threads)
+            }
+        }
+    }
+}
+
+/// Swap the two leading axes of an engine result (`[Ci, Co, Kh, Kw]` ->
+/// `[Co, Ci, Kh, Kw]` for the weight-gradient pass). Pure f32 relayout;
+/// audit counters are layout-independent and carry through unchanged.
+fn transpose01_output(out: ConvOutput) -> ConvOutput {
+    let [d0, d1, d2, d3] = out.shape;
+    let inner = d2 * d3;
+    let mut z = vec![0.0f32; out.z.len()];
+    for i0 in 0..d0 {
+        for i1 in 0..d1 {
+            let src = (i0 * d1 + i1) * inner;
+            let dst = (i1 * d0 + i0) * inner;
+            z[dst..dst + inner].copy_from_slice(&out.z[src..src + inner]);
+        }
+    }
+    ConvOutput {
+        z,
+        shape: [d1, d0, d2, d3],
+        peak_acc_bits: out.peak_acc_bits,
+        mul_ops: out.mul_ops,
+        int_add_ops: out.int_add_ops,
+        float_add_ops: out.float_add_ops,
+        group_scale_ops: out.group_scale_ops,
+    }
+}
+
+/// Geometry of one pass-generic engine execution over operands in the
+/// canonical layouts `X [V, G, Kh, Kw]` (stationary) / `Y [U, G, H, W]`
+/// (gathered): tap `(i, j)` of output pixel `(oy, ox)` reads the logical
+/// input position `oy*stride + i*dil - pad_y` (resp. `ox`/`j`/`pad_x`),
+/// which is physical iff it is non-negative, divisible by `ups`, and its
+/// quotient lies inside the physical `[H, W]` plane. Exactly one of
+/// `stride` and `ups` may exceed 1 (the three Alg. 1 passes never need
+/// both).
+#[derive(Clone, Copy, Debug)]
+pub(crate) struct SpecDims {
+    /// reduction groups (inter-group tree width): fwd `Ci`, wgrad `N`,
+    /// dgrad `Co`
+    pub(crate) g_n: usize,
+    /// taps per scaling group (one integer-accumulator segment)
+    pub(crate) kh: usize,
+    pub(crate) kw: usize,
+    /// physical input spatial dims of the gathered operand
+    pub(crate) h: usize,
+    pub(crate) wi: usize,
+    /// output spatial dims
+    pub(crate) ho: usize,
+    pub(crate) wo: usize,
+    pub(crate) stride: usize,
+    /// tap dilation (wgrad: the forward stride)
+    pub(crate) dil: usize,
+    /// input zero-upsampling factor (dgrad: the forward stride)
+    pub(crate) ups: usize,
+    /// signed pads (dgrad's transposed pad `K - 1 - p` may be negative)
+    pub(crate) pad_y: isize,
+    pub(crate) pad_x: isize,
+}
+
+impl SpecDims {
+    /// The forward pass is the identity embedding of [`ConvDims`].
+    pub(crate) fn forward(c: ConvDims) -> SpecDims {
+        SpecDims {
+            g_n: c.ci_n,
+            kh: c.kh,
+            kw: c.kw,
+            h: c.h,
+            wi: c.wi,
+            ho: c.ho,
+            wo: c.wo,
+            stride: c.stride,
+            dil: 1,
+            ups: 1,
+            pad_y: c.pad as isize,
+            pad_x: c.pad as isize,
+        }
+    }
+}
+
+/// The single packed-GEMM driver all three Alg. 1 passes run through:
+/// pack the stationary operand once, then per `(u, oy)` output row build
+/// the im2col panel, sweep the MR x NR microkernel with the per-`(v, g)`
+/// group-scale epilogue, and write pixels straight into the preallocated
+/// `[U, V, Ho, Wo]` buffer. Identical to the historical forward driver —
+/// only the index names generalized — so forward results (values AND all
+/// five audit counters) are unchanged, and the backward passes inherit
+/// panel packing, scratch-arena reuse, factor-table hoisting and
+/// bit-identity across thread counts for free.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn run_engine(
+    x: &MlsTensor,
+    xp: &DecodedPlanes,
+    y: &MlsTensor,
+    yp: &DecodedPlanes,
+    u_n: usize,
+    v_n: usize,
+    d: SpecDims,
+    threads: usize,
+) -> ConvOutput {
+    debug_assert!(d.ups == 1 || d.stride == 1, "strided AND upsampled is never needed");
+    assert_eq!(x.cfg.element, y.cfg.element, "operand formats must match");
+    assert_eq!(xp.fmt, x.cfg.element, "stationary planes decoded under a different format");
+    assert_eq!(yp.fmt, y.cfg.element, "gathered planes decoded under a different format");
+    let fmt = x.cfg.element;
+    let st = x.s_t * y.s_t;
+    let scale_log2 = 2 * fmt.emin() - 2 * fmt.m as i32;
+    let g_n = d.g_n;
+
+    let kdim = g_n * d.kh * d.kw;
+    assert_eq!(xp.len(), v_n * kdim, "stationary planes do not match [V, G*Kh*Kw]");
+    assert_eq!(yp.len(), u_n * g_n * d.h * d.wi, "gathered planes do not match [U, G, H, W]");
+    let pw = pack::pack_weights(xp, v_n, kdim, threads);
+    // geometry-only half of the analytic tap count, hoisted out of the
+    // per-row work (rows_ib * col_taps = a row's in-bounds window taps)
+    let col_taps = gemm::col_taps(d);
+
+    let tile_len = d.ho * d.wo;
+    let mut z = vec![0.0f32; u_n * v_n * tile_len];
+    let writer = DisjointWriter::new(&mut z);
+    // work units are (u, oy) output rows: the im2col row panel is packed
+    // once and reused by every output channel of that row
+    let units = u_n * d.ho;
+    let parts = parallel::map_ranges(threads, units, |lo, hi| {
+        pack::with_scratch(|scratch| {
+            let mut peak: i64 = 0;
+            let mut taps: u64 = 0;
+            let mut last_u = usize::MAX;
+            for unit in lo..hi {
+                let (u, oy) = (unit / d.ho, unit % d.ho);
+                if u != last_u {
+                    // hoist the per-(v, g) group-scale factor table — it
+                    // depends on the gathered operand's leading index,
+                    // never on the pixel
+                    scratch.factors.clear();
+                    for v in 0..v_n {
+                        for g in 0..g_n {
+                            let xg = v * g_n + g;
+                            let yg = u * g_n + g;
+                            scratch.factors.push(GroupScaleFactor::combine(
+                                x.sg_exp[xg],
+                                x.sg_man[xg],
+                                y.sg_exp[yg],
+                                y.sg_man[yg],
+                            ));
+                        }
+                    }
+                    last_u = u;
+                }
+                let (row_peak, rows_ib) =
+                    gemm::conv_row_packed(&pw, yp, scratch, u, oy, d, scale_log2, st, &writer);
+                peak = peak.max(row_peak);
+                taps += rows_ib as u64 * col_taps;
+            }
+            (peak, taps)
+        })
+    });
+    drop(writer);
+
+    let mut peak: i64 = 0;
+    let mut taps = 0u64;
+    for (p, t) in parts {
+        peak = peak.max(p);
+        taps += t;
+    }
+    let pixels = (u_n * v_n) as u64 * tile_len as u64;
+    // same peak-bits semantics as the planar/legacy per-tile merge: any
+    // processed (pixel, group) reports at least the 1-bit sign floor
+    let peak_acc_bits = if pixels == 0 || g_n == 0 {
+        0
+    } else {
+        64 - peak.unsigned_abs().leading_zeros() + 1
+    };
+    ConvOutput {
+        z,
+        shape: [u_n, v_n, d.ho, d.wo],
+        peak_acc_bits,
+        mul_ops: taps * (v_n * g_n) as u64,
+        int_add_ops: taps * (v_n * g_n) as u64,
+        float_add_ops: pixels * (g_n as u64 - 1),
+        group_scale_ops: pixels * g_n as u64,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arith::conv::{conv2d_f32_dgrad, conv2d_f32_wgrad};
+    use crate::mls::quantizer::{quantize, QuantConfig, Rounding};
+    use crate::util::rng::Pcg32;
+
+    fn quantized(rng: &mut Pcg32, shape: [usize; 4], cfg: &QuantConfig) -> MlsTensor {
+        let x = crate::util::prop::grouped_tensor(rng, shape);
+        quantize(&x, &shape, cfg, &[])
+    }
+
+    fn assert_close(got: &[f32], want: &[f32], tag: &str) {
+        assert_eq!(got.len(), want.len(), "{tag}: len");
+        let scale = want.iter().fold(0.0f32, |m, v| m.max(v.abs())).max(1e-6);
+        for (i, (a, b)) in got.iter().zip(want).enumerate() {
+            assert!((a - b).abs() / scale < 2e-4, "{tag}[{i}]: {a} vs {b} (scale {scale})");
+        }
+    }
+
+    fn check_pass_triple(stride: usize, pad: usize, kh: usize, kw: usize, h: usize, wi: usize, seed: u64) {
+        let mut rng = Pcg32::seeded(seed);
+        let cfg = QuantConfig { rounding: Rounding::Nearest, ..QuantConfig::new(2, 4) };
+        let (co, ci, n) = (4usize, 3usize, 2usize);
+        let spec = ConvSpec::new(stride, pad, kh, kw, h, wi);
+        let (ho, wo) = (spec.out_h(), spec.out_w());
+        let qw = quantized(&mut rng, [co, ci, kh, kw], &cfg);
+        let qa = quantized(&mut rng, [n, ci, h, wi], &cfg);
+        let qe = quantized(&mut rng, [n, co, ho, wo], &cfg);
+        let tag = format!("s{stride} p{pad} k{kh}x{kw} in{h}x{wi}");
+
+        let fwd = spec.forward(&qw, &qa, 1);
+        let wg = spec.weight_grad(&qe, &qa, 1);
+        let dg = spec.input_grad(&qe, &qw, 1);
+        assert_eq!(wg.shape, [co, ci, kh, kw], "{tag}: dW shape");
+        assert_eq!(dg.shape, [n, ci, h, wi], "{tag}: dA shape");
+
+        // Alg. 1: all three passes execute the same number of low-bit MACs
+        assert_eq!(fwd.mul_ops, wg.mul_ops, "{tag}: fwd vs wgrad mul_ops");
+        assert_eq!(fwd.mul_ops, dg.mul_ops, "{tag}: fwd vs dgrad mul_ops");
+        assert_eq!(fwd.int_add_ops, wg.int_add_ops, "{tag}: int_add_ops");
+        assert_eq!(fwd.int_add_ops, dg.int_add_ops, "{tag}: int_add_ops");
+
+        // against the f32 reference backward convs of the dequantized
+        // operands (the integer datapath is exact; only the f32 group
+        // scale application and tree adds round)
+        let (wg_ref, wg_shape) = conv2d_f32_wgrad(
+            &qe.dequantize(),
+            [n, co, ho, wo],
+            &qa.dequantize(),
+            [n, ci, h, wi],
+            stride,
+            pad,
+            kh,
+            kw,
+            1,
+        );
+        assert_eq!(wg.shape, wg_shape);
+        assert_close(&wg.z, &wg_ref, &format!("{tag}: dW"));
+        let (dg_ref, dg_shape) = conv2d_f32_dgrad(
+            &qe.dequantize(),
+            [n, co, ho, wo],
+            &qw.dequantize(),
+            [co, ci, kh, kw],
+            stride,
+            pad,
+            h,
+            wi,
+            1,
+        );
+        assert_eq!(dg.shape, dg_shape);
+        assert_close(&dg.z, &dg_ref, &format!("{tag}: dA"));
+
+        // bit-identity across thread counts, values AND counters
+        for threads in [2usize, 8] {
+            for (serial, pass, a, b) in [
+                (&wg, ConvPass::WeightGrad, &qe, &qa),
+                (&dg, ConvPass::InputGrad, &qe, &qw),
+            ] {
+                let t = spec.run(pass, a, b, threads);
+                assert_eq!(t.shape, serial.shape, "{tag} t{threads}");
+                for (i, (x, y)) in t.z.iter().zip(&serial.z).enumerate() {
+                    assert_eq!(x.to_bits(), y.to_bits(), "{tag} t{threads} z[{i}]");
+                }
+                assert_eq!(t.peak_acc_bits, serial.peak_acc_bits, "{tag} t{threads}");
+                assert_eq!(t.mul_ops, serial.mul_ops, "{tag} t{threads}");
+                assert_eq!(t.float_add_ops, serial.float_add_ops, "{tag} t{threads}");
+                assert_eq!(t.group_scale_ops, serial.group_scale_ops, "{tag} t{threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn backward_passes_match_f32_reference_stride1() {
+        check_pass_triple(1, 1, 3, 3, 6, 6, 40);
+        check_pass_triple(1, 0, 2, 3, 5, 7, 41);
+    }
+
+    #[test]
+    fn backward_passes_match_f32_reference_stride2() {
+        // even and odd inputs: odd + stride 2 exercises the transposed
+        // conv's untouched trailing rows (their gradient must be exactly 0)
+        check_pass_triple(2, 1, 3, 3, 6, 6, 42);
+        check_pass_triple(2, 1, 3, 3, 7, 5, 43);
+        check_pass_triple(2, 0, 2, 2, 6, 6, 44);
+    }
+
+    #[test]
+    fn dgrad_untouched_pixels_are_exact_zero() {
+        // h=5, k=2, s=2, p=0: windows cover rows 0..=3, row 4 untouched
+        let mut rng = Pcg32::seeded(45);
+        let cfg = QuantConfig { rounding: Rounding::Nearest, ..QuantConfig::new(2, 4) };
+        let spec = ConvSpec::new(2, 0, 2, 2, 5, 5);
+        let qw = quantized(&mut rng, [2, 2, 2, 2], &cfg);
+        let qe = quantized(&mut rng, [1, 2, spec.out_h(), spec.out_w()], &cfg);
+        let dg = spec.input_grad(&qe, &qw, 1);
+        assert_eq!(dg.shape, [1, 2, 5, 5]);
+        for ci in 0..2 {
+            for x in 0..5 {
+                assert_eq!(dg.z[(ci * 5 + 4) * 5 + x], 0.0, "row 4 ci{ci} x{x}");
+            }
+            for y in 0..5 {
+                assert_eq!(dg.z[(ci * 5 + y) * 5 + 4], 0.0, "col 4 ci{ci} y{y}");
+            }
+        }
+    }
+
+    #[test]
+    fn large_pad_small_kernel_input_grad() {
+        // pad >= kernel: the transposed pad K - 1 - p goes negative
+        // (cropping); the signed-pad geometry must handle it
+        check_pass_triple(1, 2, 1, 1, 4, 4, 46);
+        check_pass_triple(1, 2, 2, 2, 4, 4, 47);
+    }
+}

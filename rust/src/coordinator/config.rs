@@ -22,13 +22,46 @@ impl LrSchedule {
     }
 }
 
+/// Which execution backend runs the train/eval steps.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Backend {
+    /// The in-crate Alg. 1 trainer ([`crate::nn::train`]): quantized
+    /// forward/backward convs on the pass-generic packed-GEMM engine,
+    /// zero external dependencies. The default.
+    Native,
+    /// The PJRT engine over AOT artifacts (needs `make artifacts` and the
+    /// `pjrt` cargo feature; the stub errors otherwise).
+    Pjrt,
+}
+
+impl Backend {
+    pub fn parse(s: &str) -> Result<Backend> {
+        Ok(match s {
+            "native" => Backend::Native,
+            "pjrt" => Backend::Pjrt,
+            _ => anyhow::bail!("unknown backend {s:?} (have \"native\", \"pjrt\")"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Backend::Native => "native",
+            Backend::Pjrt => "pjrt",
+        }
+    }
+}
+
 /// One training run.
 #[derive(Clone, Debug)]
 pub struct TrainConfig {
     pub model: String,
     /// quant config name as in the manifest (e.g. "e2m4_gnc_eg8mg1_sr", "fp32")
     pub cfg_name: String,
+    pub backend: Backend,
     pub steps: u64,
+    /// batch size of the native backend (the PJRT artifacts bake their
+    /// own batch into the manifest)
+    pub batch: usize,
     pub eval_every: u64,
     pub eval_batches: u64,
     pub lr: LrSchedule,
@@ -41,9 +74,11 @@ pub struct TrainConfig {
 impl Default for TrainConfig {
     fn default() -> Self {
         TrainConfig {
-            model: "resnet_t".to_string(),
+            model: "cnn_s".to_string(),
             cfg_name: "e2m4_gnc_eg8mg1_sr".to_string(),
+            backend: Backend::Native,
             steps: 300,
+            batch: 32,
             eval_every: 50,
             eval_batches: 16,
             lr: LrSchedule { base: 0.05, milestones: vec![150, 250] },
@@ -63,6 +98,8 @@ impl TrainConfig {
         match k {
             "model" => self.model = v.to_string(),
             "cfg" | "cfg_name" => self.cfg_name = v.to_string(),
+            "backend" => self.backend = Backend::parse(v)?,
+            "batch" => self.batch = v.parse()?,
             "steps" => self.steps = v.parse()?,
             "eval_every" => self.eval_every = v.parse()?,
             "eval_batches" => self.eval_batches = v.parse()?,
@@ -123,6 +160,20 @@ mod tests {
         assert!((c.data.noise - 0.7).abs() < 1e-6);
         assert!(c.set("bogus=1").is_err());
         assert!(c.set("nokey").is_err());
+    }
+
+    #[test]
+    fn backend_and_batch_overrides() {
+        let mut c = TrainConfig::default();
+        assert_eq!(c.backend, Backend::Native, "self-contained native is the default");
+        c.set("backend=pjrt").unwrap();
+        assert_eq!(c.backend, Backend::Pjrt);
+        c.set("backend=native").unwrap();
+        assert_eq!(c.backend, Backend::Native);
+        assert!(c.set("backend=tpu").is_err());
+        c.set("batch=8").unwrap();
+        assert_eq!(c.batch, 8);
+        assert_eq!(Backend::parse("pjrt").unwrap().name(), "pjrt");
     }
 
     #[test]

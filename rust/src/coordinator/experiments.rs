@@ -44,6 +44,10 @@ pub fn run(exp: &str, artifacts_dir: &str, overrides: &[String]) -> Result<Strin
 
 fn base_config(overrides: &[String]) -> Result<TrainConfig> {
     let mut c = TrainConfig::default();
+    // the training experiments historically target the PJRT artifacts
+    // (their models include the residual resnet_t); pass backend=native
+    // to run an experiment on the native Alg. 1 trainer instead
+    c.backend = super::config::Backend::Pjrt;
     c.out_dir = Some("runs".to_string());
     for kv in overrides {
         c.set(kv)?;

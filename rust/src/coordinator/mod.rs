@@ -2,13 +2,15 @@
 //!
 //! The paper's contribution is the numeric format (L1/L2), so the
 //! coordinator is a thin-driver-plus-substrates: a config system, the
-//! training loop over the PJRT engine, metrics/checkpointing, and the
-//! registry that maps every paper table/figure to a runnable experiment.
+//! training loop over a selectable backend (the self-contained native
+//! Alg. 1 trainer by default, the PJRT engine with `backend=pjrt`),
+//! metrics/checkpointing, and the registry that maps every paper
+//! table/figure to a runnable experiment.
 
 pub mod config;
 pub mod experiments;
 pub mod metrics;
 pub mod trainer;
 
-pub use config::TrainConfig;
-pub use trainer::{train, TrainResult};
+pub use config::{Backend, TrainConfig};
+pub use trainer::{train, train_native, TrainResult};

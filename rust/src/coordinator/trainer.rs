@@ -1,15 +1,27 @@
-//! The training loop: dataset -> PJRT train-step artifact -> metrics.
+//! The training loop: dataset -> train step -> metrics, over either of
+//! two backends:
 //!
-//! One `train()` call is one experiment run (one model x one quant config x
-//! one seed); the Table II / Table IV harnesses call it in a grid.
+//! * **native** (default) — the in-crate Alg. 1 trainer
+//!   ([`crate::nn::train`]): quantized forward / weight-gradient /
+//!   input-gradient convs on the pass-generic packed-GEMM engine, BN /
+//!   ReLU / FC / SGD in f32, zero external dependencies;
+//! * **pjrt** — the AOT train-step artifacts through the PJRT engine
+//!   (needs `make artifacts` + the `pjrt` cargo feature).
+//!
+//! One `train()` call is one experiment run (one model x one quant config
+//! x one seed); the Table II / Table IV harnesses call it in a grid. Both
+//! backends share the step/seed/lr derivations, the metrics log, and the
+//! CSV/checkpoint outputs, so runs are comparable across backends.
 
 use std::time::Instant;
 
 use anyhow::Result;
 
-use super::config::TrainConfig;
+use super::config::{Backend, TrainConfig};
 use super::metrics::{EvalRow, MetricsLog, StepRow};
 use crate::data::{streams, SynthCifar};
+use crate::mls::quantizer::QuantConfig;
+use crate::nn::train::{native_model, NativeModel};
 use crate::runtime::Engine;
 
 #[derive(Clone, Debug)]
@@ -36,7 +48,18 @@ impl TrainResult {
     }
 }
 
-/// Evaluate `state` over `n_batches` of a data stream.
+/// The training-stream batch index for `step` (shared by both backends so
+/// a seed names the same data order everywhere).
+fn train_batch_index(config: &TrainConfig, step: u64) -> u64 {
+    config.seed.wrapping_mul(1_000_003).wrapping_add(step)
+}
+
+/// The per-step stochastic-rounding seed (shared by both backends).
+fn step_seed(config: &TrainConfig, step: u64) -> i32 {
+    (config.seed as i32).wrapping_mul(7919) ^ step as i32
+}
+
+/// Evaluate `state` over `n_batches` of a data stream (PJRT backend).
 pub fn evaluate(
     engine: &mut Engine,
     model: &str,
@@ -56,8 +79,45 @@ pub fn evaluate(
     Ok(((loss_sum / n_batches as f64) as f32, (acc_sum / n_batches as f64) as f32))
 }
 
-/// Run one full training experiment.
+/// Evaluate a native model over `n_batches` of a data stream
+/// (deterministic nearest-rounding forward, no parameter changes).
+pub fn evaluate_native(
+    model: &NativeModel,
+    ds: &SynthCifar,
+    stream: u64,
+    n_batches: u64,
+    batch: usize,
+) -> (f32, f32) {
+    let n = n_batches.max(1);
+    let (mut loss_sum, mut acc_sum) = (0.0f64, 0.0f64);
+    for i in 0..n {
+        let (images, labels) = ds.batch(batch, stream, i);
+        let (loss, acc) = model.eval_batch(&images, &labels);
+        loss_sum += loss as f64;
+        acc_sum += acc as f64;
+    }
+    ((loss_sum / n as f64) as f32, (acc_sum / n as f64) as f32)
+}
+
+/// Write the metrics CSV + raw-f32 checkpoint for a finished run.
+fn write_outputs(config: &TrainConfig, metrics: &MetricsLog, state: &[f32]) -> Result<()> {
+    if let Some(dir) = &config.out_dir {
+        let tag = format!("{}_{}_s{}", config.model, config.cfg_name, config.seed);
+        metrics.write_csv(std::path::Path::new(dir).join(format!("{tag}.csv")))?;
+        let bytes: Vec<u8> = state.iter().flat_map(|v| v.to_le_bytes()).collect();
+        std::fs::write(std::path::Path::new(dir).join(format!("{tag}.state.bin")), bytes)?;
+    }
+    Ok(())
+}
+
+/// Run one full training experiment on the backend `config` selects.
+/// With `backend=native` the engine is not touched (it may be a
+/// manifest-only stub); with `backend=pjrt` it must hold compiled
+/// artifacts.
 pub fn train(engine: &mut Engine, config: &TrainConfig) -> Result<TrainResult> {
+    if config.backend == Backend::Native {
+        return train_native(config);
+    }
     let model = config.model.clone();
     let meta = engine.manifest.model(&model)?.clone();
     let ds = SynthCifar::new(config.data.clone());
@@ -72,9 +132,9 @@ pub fn train(engine: &mut Engine, config: &TrainConfig) -> Result<TrainResult> {
     let mut metrics = MetricsLog::default();
 
     for step in 0..config.steps {
-        let (images, labels) = ds.batch(meta.batch, streams::TRAIN, config.seed.wrapping_mul(1_000_003).wrapping_add(step));
+        let (images, labels) = ds.batch(meta.batch, streams::TRAIN, train_batch_index(config, step));
         let lr = config.lr.at(step);
-        let seed = (config.seed as i32).wrapping_mul(7919) ^ step as i32;
+        let seed = step_seed(config, step);
         let t0 = Instant::now();
         let out = engine.train_step(&model, &config.cfg_name, &mut state, &images, &labels, seed, lr)?;
         metrics.record_step(StepRow {
@@ -101,13 +161,66 @@ pub fn train(engine: &mut Engine, config: &TrainConfig) -> Result<TrainResult> {
         evaluate(engine, &model, &state, &ds, streams::TEST, config.eval_batches)?
     };
 
-    if let Some(dir) = &config.out_dir {
-        let tag = format!("{}_{}_s{}", model, config.cfg_name, config.seed);
-        metrics.write_csv(std::path::Path::new(dir).join(format!("{tag}.csv")))?;
-        // checkpoint: raw f32 LE state vector
-        let bytes: Vec<u8> = state.iter().flat_map(|v| v.to_le_bytes()).collect();
-        std::fs::write(std::path::Path::new(dir).join(format!("{tag}.state.bin")), bytes)?;
+    write_outputs(config, &metrics, &state)?;
+
+    Ok(TrainResult {
+        config: config.clone(),
+        metrics,
+        final_state: state,
+        test_acc,
+        test_loss,
+        diverged,
+    })
+}
+
+/// Run one full training experiment on the NATIVE backend: synthetic
+/// CIFAR -> per-layer Alg. 1 low-bit forward/backward -> SGD, end to end
+/// in this crate — no PJRT, no artifacts, no Python.
+pub fn train_native(config: &TrainConfig) -> Result<TrainResult> {
+    let qcfg = QuantConfig::parse_name(&config.cfg_name)?;
+    let ds = SynthCifar::new(config.data.clone());
+    let mut model = native_model(&config.model, qcfg, config.seed)?;
+    let (c, h, w) = model.input;
+    anyhow::ensure!(
+        ds.sample_elems() == c * h * w,
+        "dataset image shape {:?} != native model input {:?}",
+        (ds.cfg.channels, ds.cfg.height, ds.cfg.width),
+        model.input
+    );
+
+    let mut metrics = MetricsLog::default();
+    for step in 0..config.steps {
+        let (images, labels) = ds.batch(config.batch, streams::TRAIN, train_batch_index(config, step));
+        let lr = config.lr.at(step);
+        let seed = step_seed(config, step) as i64;
+        let t0 = Instant::now();
+        let out = model.train_step(&images, &labels, lr, seed);
+        metrics.record_step(StepRow {
+            step,
+            lr,
+            loss: out.loss,
+            acc: out.acc,
+            step_ms: t0.elapsed().as_secs_f64() * 1e3,
+        });
+        if !out.loss.is_finite() {
+            break; // diverged — stop early, record as such (Table IV "Div.")
+        }
+        if config.eval_every > 0 && (step + 1) % config.eval_every == 0 {
+            let (eloss, eacc) =
+                evaluate_native(&model, &ds, streams::VAL, config.eval_batches, config.batch);
+            metrics.record_eval(EvalRow { step, loss: eloss, acc: eacc });
+        }
     }
+
+    let diverged = metrics.diverged();
+    let (test_loss, test_acc) = if diverged {
+        (f32::NAN, 0.0)
+    } else {
+        evaluate_native(&model, &ds, streams::TEST, config.eval_batches, config.batch)
+    };
+
+    let state = model.state();
+    write_outputs(config, &metrics, &state)?;
 
     Ok(TrainResult {
         config: config.clone(),

@@ -11,7 +11,7 @@
 
 use anyhow::{anyhow, Result};
 
-use mls_train::coordinator::{experiments, trainer, TrainConfig};
+use mls_train::coordinator::{experiments, trainer, Backend, TrainConfig};
 use mls_train::hw::report;
 use mls_train::hw::units::EnergyModel;
 use mls_train::mls::format::EmFormat;
@@ -73,8 +73,10 @@ const HELP: &str = "\
 mls-train — MLS low-bit CNN training framework (paper reproduction)
 
 commands:
-  train     run one training experiment (--set model=resnet_t --set cfg=e2m4_gnc_eg8mg1_sr --set steps=300)
-  eval      evaluate a saved state (--model resnet_t --state runs/...state.bin)
+  train     run one training experiment (--set model=cnn_s --set cfg=e2m4_gnc_eg8mg1_sr --set steps=300);
+            backend=native (default) runs the self-contained Alg. 1 low-bit trainer,
+            backend=pjrt the AOT artifacts (needs make artifacts + the pjrt feature)
+  eval      evaluate a saved state (--model cnn_s --state runs/...state.bin; --set backend=...)
   repro     regenerate a paper table/figure (--exp table1..table6, fig2, fig6, fig7, eq12, ratios)
   energy    Table VI energy breakdown (--model resnet34 --batch 64)
   info      list artifacts and models
@@ -88,20 +90,31 @@ fn cmd_train(args: &Args) -> Result<()> {
     for kv in &args.sets {
         config.set(kv)?;
     }
-    let mut engine = Engine::from_dir(&args.artifacts)?;
-    let result = trainer::train(&mut engine, &config)?;
-    println!("{}", result.summary());
-    println!(
-        "mean step {:.1} ms (device {:.1} ms); metrics in {}/",
-        result.metrics.mean_step_ms(),
-        engine.mean_exec_time().as_secs_f64() * 1e3,
-        config.out_dir.as_deref().unwrap_or("-")
-    );
+    if config.backend == Backend::Native {
+        // self-contained: no artifacts, no PJRT
+        let result = trainer::train_native(&config)?;
+        println!("{}", result.summary());
+        println!(
+            "native backend: mean step {:.1} ms; metrics in {}/",
+            result.metrics.mean_step_ms(),
+            config.out_dir.as_deref().unwrap_or("-")
+        );
+    } else {
+        let mut engine = Engine::from_dir(&args.artifacts)?;
+        let result = trainer::train(&mut engine, &config)?;
+        println!("{}", result.summary());
+        println!(
+            "mean step {:.1} ms (device {:.1} ms); metrics in {}/",
+            result.metrics.mean_step_ms(),
+            engine.mean_exec_time().as_secs_f64() * 1e3,
+            config.out_dir.as_deref().unwrap_or("-")
+        );
+    }
     Ok(())
 }
 
 fn cmd_eval(args: &Args) -> Result<()> {
-    let model = args.flags.get("model").cloned().unwrap_or_else(|| "resnet_t".into());
+    let model = args.flags.get("model").cloned().unwrap_or_else(|| "cnn_s".into());
     let state_path = args
         .flags
         .get("state")
@@ -111,20 +124,33 @@ fn cmd_eval(args: &Args) -> Result<()> {
         .chunks_exact(4)
         .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
         .collect();
-    let mut engine = Engine::from_dir(&args.artifacts)?;
     let mut config = TrainConfig::default();
     for kv in &args.sets {
         config.set(kv)?;
     }
     let ds = mls_train::data::SynthCifar::new(config.data.clone());
-    let (loss, acc) = trainer::evaluate(
-        &mut engine,
-        &model,
-        &state,
-        &ds,
-        mls_train::data::streams::TEST,
-        config.eval_batches,
-    )?;
+    let (loss, acc) = if config.backend == Backend::Native {
+        let qcfg = mls_train::mls::quantizer::QuantConfig::parse_name(&config.cfg_name)?;
+        let mut native = mls_train::nn::train::native_model(&model, qcfg, config.seed)?;
+        native.load_state(&state)?;
+        trainer::evaluate_native(
+            &native,
+            &ds,
+            mls_train::data::streams::TEST,
+            config.eval_batches,
+            config.batch,
+        )
+    } else {
+        let mut engine = Engine::from_dir(&args.artifacts)?;
+        trainer::evaluate(
+            &mut engine,
+            &model,
+            &state,
+            &ds,
+            mls_train::data::streams::TEST,
+            config.eval_batches,
+        )?
+    };
     println!("{model}: test loss {loss:.4} acc {acc:.3}");
     Ok(())
 }

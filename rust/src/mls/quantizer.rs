@@ -112,6 +112,54 @@ impl QuantConfig {
         )
     }
 
+    /// Parse a [`Self::name`]-formatted config string (the inverse of
+    /// `name()`, e.g. `"e2m4_gnc_eg8mg1_sr"` or `"fp32"`). This is how
+    /// the native training backend maps a `cfg_name` from
+    /// [`crate::coordinator::TrainConfig`] onto a quantizer config with
+    /// no artifact manifest involved.
+    pub fn parse_name(s: &str) -> anyhow::Result<QuantConfig> {
+        if s == "fp32" {
+            return Ok(QuantConfig::fp32());
+        }
+        // element fields read "e{E}m{M}", group fields "eg{E}mg{M}"
+        let parse_em = |part: &str, prefix: &str, sep: &str| -> anyhow::Result<EmFormat> {
+            let rest = part
+                .strip_prefix(prefix)
+                .ok_or_else(|| anyhow::anyhow!("config {s:?}: {part:?} must start with {prefix:?}"))?;
+            let (e, m) = rest
+                .split_once(sep)
+                .ok_or_else(|| anyhow::anyhow!("config {s:?}: {part:?} has no mantissa field"))?;
+            Ok(EmFormat::new(
+                e.parse().map_err(|_| anyhow::anyhow!("config {s:?}: bad E in {part:?}"))?,
+                m.parse().map_err(|_| anyhow::anyhow!("config {s:?}: bad M in {part:?}"))?,
+            ))
+        };
+        let parts: Vec<&str> = s.split('_').collect();
+        anyhow::ensure!(
+            parts.len() == 4,
+            "config {s:?}: expected eEmM_<grouping>_egEmgM_<rounding> or \"fp32\""
+        );
+        let grouping = match parts[1] {
+            "g1" => Grouping::None,
+            "gf" => Grouping::First,
+            "gs" => Grouping::Second,
+            "gnc" => Grouping::Both,
+            other => anyhow::bail!("config {s:?}: unknown grouping {other:?}"),
+        };
+        let rounding = match parts[3] {
+            "sr" => Rounding::Stochastic,
+            "nr" => Rounding::Nearest,
+            other => anyhow::bail!("config {s:?}: unknown rounding {other:?}"),
+        };
+        Ok(QuantConfig {
+            element: parse_em(parts[0], "e", "m")?,
+            group: parse_em(parts[2], "eg", "mg")?,
+            grouping,
+            rounding,
+            enabled: true,
+        })
+    }
+
     /// Stored bits per element (sign + exponent code + mantissa).
     pub fn element_bits(&self) -> u32 {
         1 + self.element.bits()
@@ -343,6 +391,28 @@ mod tests {
         let mut c = QuantConfig::new(0, 2);
         c.grouping = Grouping::First;
         assert_eq!(c.name(), "e0m2_gf_eg8mg1_sr");
+    }
+
+    #[test]
+    fn parse_name_round_trips() {
+        let mut configs = vec![QuantConfig::default(), QuantConfig::fp32(), QuantConfig::new(2, 1)];
+        let mut c = QuantConfig::new(0, 2);
+        c.grouping = Grouping::First;
+        c.rounding = Rounding::Nearest;
+        configs.push(c);
+        let mut c = QuantConfig::new(1, 1);
+        c.grouping = Grouping::Second;
+        configs.push(c);
+        let mut c = QuantConfig::new(2, 4);
+        c.grouping = Grouping::None;
+        configs.push(c);
+        for cfg in configs {
+            let parsed = QuantConfig::parse_name(&cfg.name()).unwrap();
+            assert_eq!(parsed, cfg, "round trip of {}", cfg.name());
+        }
+        assert!(QuantConfig::parse_name("nope").is_err());
+        assert!(QuantConfig::parse_name("e2m4_gx_eg8mg1_sr").is_err());
+        assert!(QuantConfig::parse_name("e2m4_gnc_eg8mg1_xx").is_err());
     }
 
     #[test]

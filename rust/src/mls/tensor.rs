@@ -131,6 +131,79 @@ impl MlsTensor {
         crate::arith::planes::DecodedPlanes::of(self)
     }
 
+    /// Swap the two leading axes of a 4-D `(dim0, dim1)`-grouped tensor:
+    /// `[d0, d1, d2, d3] -> [d1, d0, d2, d3]`. A **lossless relayout** —
+    /// scaling groups are `(dim0, dim1)` pairs, so groups (with their
+    /// stored scales) and their element blocks permute without any
+    /// re-quantization; `t.transpose01().dequantize()` is the exact
+    /// permutation of `t.dequantize()`. The pass-generic conv engine
+    /// ([`crate::arith::spec`]) uses this to put Alg. 1 backward operands
+    /// into the canonical `[V, G, ., .]` / `[U, G, ., .]` layouts.
+    pub fn transpose01(&self) -> MlsTensor {
+        self.permute01(false)
+    }
+
+    /// [`Self::transpose01`] plus a spatial flip of the two trailing axes
+    /// (`new[i1, i0, i2, i3] = old[i0, i1, d2-1-i2, d3-1-i3]`) — the
+    /// weight relayout of the transposed (input-gradient) convolution.
+    /// The flip permutes elements *within* each scaling group, so it is
+    /// lossless for the same reason.
+    pub fn transpose01_flip23(&self) -> MlsTensor {
+        self.permute01(true)
+    }
+
+    fn permute01(&self, flip: bool) -> MlsTensor {
+        assert_eq!(self.shape.len(), 4, "transpose01 needs a 4-D tensor");
+        assert_eq!(
+            self.cfg.grouping,
+            super::Grouping::Both,
+            "transpose01 is only group-structure-preserving for (dim0, dim1) grouping"
+        );
+        let [d0, d1, d2, d3] = [self.shape[0], self.shape[1], self.shape[2], self.shape[3]];
+        let inner = d2 * d3;
+        let n = self.len();
+        let mut sign = vec![0i8; n];
+        let mut exp_code = vec![0u8; n];
+        let mut man = vec![0u32; n];
+        let mut sg_exp = vec![0u8; self.group_count()];
+        let mut sg_man = vec![0u32; self.group_count()];
+        for i0 in 0..d0 {
+            for i1 in 0..d1 {
+                let g_src = i0 * d1 + i1;
+                let g_dst = i1 * d0 + i0;
+                sg_exp[g_dst] = self.sg_exp[g_src];
+                sg_man[g_dst] = self.sg_man[g_src];
+                let src = g_src * inner;
+                let dst = g_dst * inner;
+                if !flip {
+                    sign[dst..dst + inner].copy_from_slice(&self.sign[src..src + inner]);
+                    exp_code[dst..dst + inner].copy_from_slice(&self.exp_code[src..src + inner]);
+                    man[dst..dst + inner].copy_from_slice(&self.man[src..src + inner]);
+                } else {
+                    for i2 in 0..d2 {
+                        for i3 in 0..d3 {
+                            let s = src + (d2 - 1 - i2) * d3 + (d3 - 1 - i3);
+                            let d = dst + i2 * d3 + i3;
+                            sign[d] = self.sign[s];
+                            exp_code[d] = self.exp_code[s];
+                            man[d] = self.man[s];
+                        }
+                    }
+                }
+            }
+        }
+        MlsTensor {
+            shape: vec![d1, d0, d2, d3],
+            cfg: self.cfg,
+            s_t: self.s_t,
+            sign,
+            exp_code,
+            man,
+            sg_exp,
+            sg_man,
+        }
+    }
+
     /// Stored size in bits: elements (sign+E+M) + group scales (E_g+M_g) +
     /// one f32 tensor scale. The compression story vs f32 (Table VI memory
     /// argument).
@@ -176,6 +249,47 @@ mod tests {
         assert_eq!(t.storage_bits(), expect as u64);
         // 32 / (7 + group overhead) ~ 3.9x for this small tensor
         assert!(t.compression_ratio() > 3.5);
+    }
+
+    #[test]
+    fn transpose01_is_exact_value_permutation() {
+        let shape = [3usize, 4, 2, 5];
+        let [d0, d1, d2, d3] = shape;
+        let mut rng = Pcg32::seeded(8);
+        let x = crate::util::prop::grouped_tensor(&mut rng, shape);
+        let cfg = QuantConfig::default();
+        let t = quantize(&x, &shape, &cfg, &rng.rounding_offsets(x.len()));
+        let q = t.dequantize();
+
+        let tt = t.transpose01();
+        assert_eq!(tt.shape, vec![d1, d0, d2, d3]);
+        assert_eq!(tt.s_t, t.s_t);
+        let qt = tt.dequantize();
+        let tf = t.transpose01_flip23();
+        let qf = tf.dequantize();
+        for i0 in 0..d0 {
+            for i1 in 0..d1 {
+                for i2 in 0..d2 {
+                    for i3 in 0..d3 {
+                        let src = ((i0 * d1 + i1) * d2 + i2) * d3 + i3;
+                        let dst = ((i1 * d0 + i0) * d2 + i2) * d3 + i3;
+                        assert_eq!(qt[dst].to_bits(), q[src].to_bits(), "t [{i0},{i1},{i2},{i3}]");
+                        let dflip = ((i1 * d0 + i0) * d2 + (d2 - 1 - i2)) * d3 + (d3 - 1 - i3);
+                        assert_eq!(
+                            qf[dflip].to_bits(),
+                            q[src].to_bits(),
+                            "tf [{i0},{i1},{i2},{i3}]"
+                        );
+                    }
+                }
+            }
+        }
+        // involution: transposing twice restores the original fields
+        let back = tt.transpose01();
+        assert_eq!(back.sign, t.sign);
+        assert_eq!(back.exp_code, t.exp_code);
+        assert_eq!(back.man, t.man);
+        assert_eq!(back.sg_exp, t.sg_exp);
     }
 
     #[test]

@@ -1,13 +1,19 @@
-//! Model-shape zoo and analytic op counting.
+//! Model-shape zoo, analytic op counting, and the native Alg. 1 trainer.
 //!
-//! Holds the exact layer geometry of every CNN the paper evaluates
-//! (ResNet-18/34 and VGG-16 / GoogleNet on ImageNet, ResNet-20 on
-//! CIFAR-10) plus the scaled trainable models of this reproduction. The
+//! [`zoo`] holds the exact layer geometry of every CNN the paper
+//! evaluates (ResNet-18/34 and VGG-16 / GoogleNet on ImageNet, ResNet-20
+//! on CIFAR-10) plus the scaled trainable models of this reproduction;
+//! [`ops`] turns a zoo network into analytic per-step op counts. The
 //! counts drive Table I, Table III (GOPs) and the Table VI energy rows —
 //! they are analytic in layer shapes, so these tables reproduce exactly.
+//! [`train`] is the native low-bit training step: per-layer Alg. 1
+//! forward/backward on real MLS tensors through the pass-generic conv
+//! engine, whose executed audit counters cross-check the analytic model.
 
 pub mod ops;
+pub mod train;
 pub mod zoo;
 
 pub use ops::{count_training_ops, TrainingOps};
+pub use train::{native_model, NativeModel, NativeStepOutput, StepAudit};
 pub use zoo::{network, Layer, Network, NETWORKS};

@@ -12,7 +12,10 @@
 //! plus the scaled `resnet_t` / `cnn_s` models that the trainable
 //! artifacts implement (DESIGN.md substitution table).
 
-/// One accounted layer. Spatial sizes are OUTPUT sizes.
+/// One accounted layer. `h`/`w` are OUTPUT sizes; convs additionally
+/// carry their exact INPUT sizes `hin`/`win` (the dynamic-quantization
+/// element counts need them — `h * stride` over-counts whenever padded
+/// striding ceils an odd input).
 #[derive(Clone, Debug, PartialEq)]
 pub enum Layer {
     Conv {
@@ -23,6 +26,9 @@ pub enum Layer {
         stride: usize,
         h: usize,
         w: usize,
+        /// exact input spatial dims
+        hin: usize,
+        win: usize,
         /// quantized in the low-bit framework (first conv stays fp32)
         quantized: bool,
     },
@@ -105,6 +111,7 @@ impl B {
     }
 
     fn conv(&mut self, cout: usize, k: usize, stride: usize, quantized: bool) -> &mut Self {
+        let (hin, win) = (self.h, self.w);
         // "same" padding geometry: out = ceil(in / stride)
         self.h = self.h.div_ceil(stride);
         self.w = self.w.div_ceil(stride);
@@ -117,6 +124,8 @@ impl B {
             stride,
             h: self.h,
             w: self.w,
+            hin,
+            win,
             quantized,
         });
         self.c = cout;
@@ -147,6 +156,7 @@ impl B {
 
     fn basic_block(&mut self, cout: usize, stride: usize) -> &mut Self {
         let cin = self.c;
+        let (hin, win) = (self.h, self.w);
         self.conv(cout, 3, stride, true).bn();
         self.conv(cout, 3, 1, true).bn();
         if stride != 1 || cin != cout {
@@ -160,6 +170,8 @@ impl B {
                 stride,
                 h: self.h,
                 w: self.w,
+                hin,
+                win,
                 quantized: true,
             });
             self.layers.push(Layer::BatchNorm { c: cout, h: self.h, w: self.w });
@@ -244,6 +256,8 @@ fn googlenet() -> Network {
                 stride: 1,
                 h,
                 w,
+                hin: h,
+                win: w,
                 quantized: true,
             });
             b.n += 1;

@@ -4,13 +4,20 @@
 //! included), strides {1, 2}, pads {0, 1, 2}, element formats {e2m4,
 //! e2m1, int4}, both rounding modes, worker counts {1, 2, 8} — asserting
 //! the packed-GEMM, planar, and legacy kernels are BIT-identical on
-//! output values and all five hardware-audit counters. The authoring
-//! container has no Rust toolchain, so this is the fuzz CI actually runs;
-//! a failing case prints its full geometry for reproduction.
+//! output values and all five hardware-audit counters. A second sweep
+//! (`convspec_backward_passes_fuzz`) drives the Alg. 1 weight-gradient /
+//! input-gradient passes of the pass-generic `ConvSpec` engine over the
+//! same geometry space: gradient shapes, cross-thread bit-identity,
+//! equal executed MAC counts across passes, and agreement with an f32
+//! reference backward conv. The authoring container has no Rust
+//! toolchain, so this is the fuzz CI actually runs; a failing case
+//! prints its full geometry for reproduction.
 
 use mls_train::arith::conv::{
-    lowbit_conv_legacy_threaded, lowbit_conv_planar_threaded, lowbit_conv_threaded, ConvOutput,
+    conv2d_f32_dgrad, conv2d_f32_wgrad, lowbit_conv_legacy_threaded, lowbit_conv_planar_threaded,
+    lowbit_conv_threaded, ConvOutput,
 };
+use mls_train::arith::spec::ConvSpec;
 use mls_train::mls::quantizer::{quantize, QuantConfig, Rounding};
 use mls_train::util::prop::grouped_tensor;
 use mls_train::util::rng::Pcg32;
@@ -76,6 +83,116 @@ fn packed_planar_legacy_bit_identical_on_random_geometries() {
         let planar = lowbit_conv_planar_threaded(&tw, &ta, stride, pad, threads);
         assert_convs_identical(&legacy, &packed, &format!("{tag} [packed]"));
         assert_convs_identical(&legacy, &planar, &format!("{tag} [planar]"));
+        cases += 1;
+    }
+}
+
+/// The Alg. 1 backward passes on the same seeded geometry sweep: wgrad /
+/// dgrad through the pass-generic `ConvSpec` engine must (a) produce the
+/// gradient shapes, (b) be bit-identical (values AND all five audit
+/// counters) across worker counts {1, 2, 8}, (c) execute exactly the
+/// forward pass's in-bounds MAC count, and (d) match the f32 reference
+/// backward convs of the dequantized operands to float-path tolerance.
+#[test]
+fn convspec_backward_passes_fuzz() {
+    let mut rng = Pcg32::seeded(0xBAC_4A5D);
+    let formats = [(2u32, 4u32), (2, 1), (0, 4)];
+    let mut cases = 0u64;
+    let mut attempts = 0u64;
+    while cases < 80 {
+        attempts += 1;
+        assert!(attempts < 2000, "geometry sampler rejected too many draws");
+        let co_n = 1 + rng.below(5) as usize;
+        let ci_n = 1 + rng.below(4) as usize;
+        let kh = 1 + rng.below(3) as usize;
+        let kw = 1 + rng.below(3) as usize;
+        let n_n = 1 + rng.below(2) as usize;
+        let stride = 1 + rng.below(2) as usize;
+        let pad = rng.below(3) as usize;
+        let h = 1 + rng.below(8) as usize;
+        let wi = 1 + rng.below(8) as usize;
+        if h + 2 * pad < kh || wi + 2 * pad < kw {
+            continue; // no output pixels — geometry invalid
+        }
+        let (e, m) = formats[rng.below(3) as usize];
+        let stochastic = rng.below(2) == 1;
+        let mut cfg = QuantConfig::new(e, m);
+        cfg.rounding = if stochastic { Rounding::Stochastic } else { Rounding::Nearest };
+        let spec = ConvSpec::new(stride, pad, kh, kw, h, wi);
+        let (ho, wo) = (spec.out_h(), spec.out_w());
+        let wshape = [co_n, ci_n, kh, kw];
+        let ashape = [n_n, ci_n, h, wi];
+        let eshape = [n_n, co_n, ho, wo];
+        let w = grouped_tensor(&mut rng, wshape);
+        let a = grouped_tensor(&mut rng, ashape);
+        let ef = grouped_tensor(&mut rng, eshape);
+        let (rw, ra, re) = if stochastic {
+            (
+                rng.rounding_offsets(w.len()),
+                rng.rounding_offsets(a.len()),
+                rng.rounding_offsets(ef.len()),
+            )
+        } else {
+            (Vec::new(), Vec::new(), Vec::new())
+        };
+        let tw = quantize(&w, &wshape, &cfg, &rw);
+        let ta = quantize(&a, &ashape, &cfg, &ra);
+        let te = quantize(&ef, &eshape, &cfg, &re);
+        let tag = format!(
+            "case {cases}: w{wshape:?} a{ashape:?} s{stride} p{pad} <{e},{m}> {}",
+            cfg.rounding.name()
+        );
+
+        let fwd = spec.forward(&tw, &ta, 1);
+        let wg = spec.weight_grad(&te, &ta, 1);
+        let dg = spec.input_grad(&te, &tw, 1);
+        assert_eq!(wg.shape, wshape, "{tag}: dW shape");
+        assert_eq!(dg.shape, ashape, "{tag}: dA shape");
+        // Alg. 1: every pass executes the same number of low-bit MACs
+        assert_eq!(fwd.mul_ops, wg.mul_ops, "{tag}: fwd vs wgrad mul_ops");
+        assert_eq!(fwd.mul_ops, dg.mul_ops, "{tag}: fwd vs dgrad mul_ops");
+        assert_eq!(fwd.int_add_ops, wg.int_add_ops, "{tag}: wgrad int_add_ops");
+        assert_eq!(fwd.int_add_ops, dg.int_add_ops, "{tag}: dgrad int_add_ops");
+
+        // bit-identity across worker counts
+        for threads in [2usize, 8] {
+            let wgt = spec.weight_grad(&te, &ta, threads);
+            assert_convs_identical(&wg, &wgt, &format!("{tag} [wgrad t{threads}]"));
+            let dgt = spec.input_grad(&te, &tw, threads);
+            assert_convs_identical(&dg, &dgt, &format!("{tag} [dgrad t{threads}]"));
+        }
+
+        // the f32 reference backward convs of the dequantized operands
+        let (wg_ref, _) = conv2d_f32_wgrad(
+            &te.dequantize(),
+            eshape,
+            &ta.dequantize(),
+            ashape,
+            stride,
+            pad,
+            kh,
+            kw,
+            1,
+        );
+        let wscale = wg_ref.iter().fold(0.0f32, |mx, v| mx.max(v.abs())).max(1e-6);
+        for (i, (x, y)) in wg.z.iter().zip(&wg_ref).enumerate() {
+            assert!((x - y).abs() / wscale < 2e-4, "{tag}: dW[{i}] {x} vs {y}");
+        }
+        let (dg_ref, _) = conv2d_f32_dgrad(
+            &te.dequantize(),
+            eshape,
+            &tw.dequantize(),
+            wshape,
+            stride,
+            pad,
+            h,
+            wi,
+            1,
+        );
+        let dscale = dg_ref.iter().fold(0.0f32, |mx, v| mx.max(v.abs())).max(1e-6);
+        for (i, (x, y)) in dg.z.iter().zip(&dg_ref).enumerate() {
+            assert!((x - y).abs() / dscale < 2e-4, "{tag}: dA[{i}] {x} vs {y}");
+        }
         cases += 1;
     }
 }

@@ -15,6 +15,7 @@ use mls_train::runtime::Engine;
 
 fn quick_config(model: &str, cfg_name: &str, steps: u64) -> TrainConfig {
     let mut c = TrainConfig::default();
+    c.backend = mls_train::coordinator::Backend::Pjrt; // this suite exercises the PJRT engine
     c.model = model.to_string();
     c.cfg_name = cfg_name.to_string();
     c.steps = steps;
