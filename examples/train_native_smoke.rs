@@ -1,33 +1,36 @@
-//! CI smoke for the native Alg. 1 trainer: a multi-step low-bit training
-//! run on synthetic CIFAR must complete with zero external dependencies
+//! CI smoke for the native Alg. 1 trainer: multi-step low-bit training
+//! runs on synthetic CIFAR must complete with zero external dependencies
 //! (no PJRT, no artifacts), and the loss must be finite and DECREASING —
-//! both for the fp32 baseline and for the quantized `<2,4>` headline
-//! config whose forward/wgrad/dgrad convs all run on the pass-generic
-//! packed-GEMM engine. Exits nonzero otherwise, failing the CI step.
+//! for the fp32 baseline, for the quantized `<2,4>` headline config on
+//! the `cnn_t` chain model, and for the aggressive `<2,1>` config on the
+//! `resnet_t` residual module-graph model (skip-add joins and 1x1
+//! projection shortcuts all running Alg. 1 forward/wgrad/dgrad on the
+//! pass-generic packed-GEMM engine). Exits nonzero otherwise, failing
+//! the CI step.
 //!
 //! Run with: `cargo run --release --example train_native_smoke`
 
 use mls_train::coordinator::{trainer, TrainConfig};
 
-fn run(cfg_name: &str, steps: u64) -> anyhow::Result<(f64, f64, f32)> {
+fn run(model: &str, cfg_name: &str, steps: u64, lr: f32) -> anyhow::Result<(f64, f64, f32)> {
     let mut c = TrainConfig::default();
-    c.model = "cnn_t".to_string();
+    c.model = model.to_string();
     c.cfg_name = cfg_name.to_string();
     c.steps = steps;
     c.batch = 16;
     c.eval_every = 0;
     c.eval_batches = 4;
-    c.lr.base = 0.05;
+    c.lr.base = lr;
     c.lr.milestones = vec![];
     c.data.noise = 1.0;
     c.data.label_noise = 0.0;
     c.out_dir = None;
     let r = trainer::train_native(&c)?;
-    anyhow::ensure!(!r.diverged, "{cfg_name}: training diverged");
+    anyhow::ensure!(!r.diverged, "{model}/{cfg_name}: training diverged");
     for row in &r.metrics.steps {
         anyhow::ensure!(
             row.loss.is_finite(),
-            "{cfg_name}: non-finite loss {} at step {}",
+            "{model}/{cfg_name}: non-finite loss {} at step {}",
             row.loss,
             row.step
         );
@@ -38,17 +41,22 @@ fn run(cfg_name: &str, steps: u64) -> anyhow::Result<(f64, f64, f32)> {
     let last = r.metrics.final_loss(k);
     anyhow::ensure!(
         last < first,
-        "{cfg_name}: loss did not decrease over {steps} steps ({first:.4} -> {last:.4})"
+        "{model}/{cfg_name}: loss did not decrease over {steps} steps ({first:.4} -> {last:.4})"
     );
     Ok((first, last, r.test_acc))
 }
 
 fn main() -> anyhow::Result<()> {
-    println!("== native Alg. 1 train smoke (cnn_t, synthetic CIFAR, no PJRT) ==");
-    for (cfg, steps) in [("fp32", 12u64), ("e2m4_gnc_eg8mg1_sr", 20)] {
-        let (first, last, acc) = run(cfg, steps)?;
+    println!("== native Alg. 1 train smoke (module graph, synthetic CIFAR, no PJRT) ==");
+    for (model, cfg, steps, lr) in [
+        ("cnn_t", "fp32", 12u64, 0.05f32),
+        ("cnn_t", "e2m4_gnc_eg8mg1_sr", 20, 0.05),
+        ("resnet_t", "e2m1_gnc_eg8mg1_sr", 18, 0.04),
+    ] {
+        let (first, last, acc) = run(model, cfg, steps, lr)?;
         println!(
-            "  {cfg:<22} {steps:>3} steps: loss {first:.4} -> {last:.4} (decreasing), test acc {acc:.3}"
+            "  {model:<9} {cfg:<22} {steps:>3} steps: loss {first:.4} -> {last:.4} (decreasing), \
+             test acc {acc:.3}"
         );
     }
     println!("OK");

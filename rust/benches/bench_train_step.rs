@@ -1,17 +1,21 @@
 //! Bench: one full native Alg. 1 training step — dynamic quantization of
 //! W/A/E, quantized forward + weight-gradient + input-gradient convs on
 //! the pass-generic packed-GEMM engine, BN/ReLU/FC/softmax/SGD in f32 —
-//! on the `cnn_t` model over a synthetic-CIFAR batch. Reports steps/s
-//! and the low-bit MMAC/s of the executed conv work (from the step's own
-//! audit counters), serial vs pool-threaded, and writes the trajectory
-//! to `BENCH_train.json` (schema: `schemas/bench_train.schema.json`).
+//! on the `cnn_t` chain model and the `resnet_t` residual module-graph
+//! model over synthetic-CIFAR batches. Reports steps/s and the low-bit
+//! MMAC/s of the executed conv work (from each step's own audit
+//! counters), serial vs pool-threaded, writes the trajectory to
+//! `BENCH_train.json` (schema: `schemas/bench_train.schema.json`) and one
+//! per-layer audit stream record of the resnet_t probe step to
+//! `AUDIT_step.json` (schema: `schemas/audit_step.schema.json`, validated
+//! in CI).
 
 use std::time::Duration;
 
 use mls_train::data::{streams, DatasetConfig, SynthCifar};
 use mls_train::mls::quantizer::QuantConfig;
 use mls_train::nn::train::native_model;
-use mls_train::util::bench::{bench, black_box, budget, smoke_mode, BenchReport};
+use mls_train::util::bench::{bench, black_box, budget, repo_root, smoke_mode, BenchReport};
 use mls_train::util::json::Json;
 use mls_train::util::parallel;
 
@@ -88,6 +92,48 @@ fn main() {
     report.add_ratio(
         "quantized_vs_fp32_step",
         fp.median.as_secs_f64() / par.median.as_secs_f64(),
+    );
+
+    // the residual module-graph model: a full quantized resnet_t step
+    // (skip-add joins, 1x1 projection shortcuts — 8 quantized convs x 3
+    // passes), plus one per-layer audit stream record for CI validation
+    let rbatch = 8usize;
+    let (rimages, rlabels) = ds.batch(rbatch, streams::TRAIN, 1);
+    let qd = QuantConfig::default();
+    let mut resnet = native_model("resnet_t", qd, 0).expect("resnet_t builds");
+    let rprobe = resnet.train_step(&rimages, &rlabels, 0.0, 1);
+    let raudit = rprobe.audit;
+    let rmacs = raudit.forward.mul_ops + raudit.wgrad.mul_ops + raudit.dgrad.mul_ops;
+    report.set("resnet_t_macs_per_step", Json::Num(rmacs as f64));
+
+    let audit_path = repo_root().join("AUDIT_step.json");
+    let audit_json = raudit.to_json("resnet_t", &qd.name(), rbatch, 0);
+    if let Err(e) = std::fs::write(&audit_path, audit_json.to_string_pretty() + "\n") {
+        eprintln!("failed to write AUDIT_step.json: {e}");
+        std::process::exit(1);
+    }
+    println!(
+        "wrote {} ({} per-layer records, {} executed low-bit MACs per resnet_t step)",
+        audit_path.display(),
+        raudit.layers.len(),
+        rmacs
+    );
+
+    resnet.set_threads(threads);
+    let rpar = bench(&format!("train_step/resnet_t_e2m4_b8_t{threads}"), b, || {
+        black_box(resnet.train_step(&rimages, &rlabels, 0.0, 2));
+    });
+    println!(
+        "  -> {:.2} steps/s, {:.1} low-bit MMAC/s (resnet_t, residual graph)",
+        1.0 / rpar.median.as_secs_f64(),
+        rpar.throughput_items(rmacs) / 1e6
+    );
+    report.add_result(&rpar, rmacs, "mac");
+    // per-SAMPLE cost ratio: the two rows run different batch sizes
+    // (resnet_t b8 vs cnn_t b16), so normalize before dividing
+    report.add_ratio(
+        "resnet_t_vs_cnn_t_step",
+        (rpar.median.as_secs_f64() / rbatch as f64) / (par.median.as_secs_f64() / batch as f64),
     );
 
     match report.write() {

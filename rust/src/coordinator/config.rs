@@ -65,9 +65,16 @@ pub struct TrainConfig {
     pub eval_every: u64,
     pub eval_batches: u64,
     pub lr: LrSchedule,
+    /// native-backend parameter-update rule: "sgd" (plain) or "momentum"
+    pub optimizer: String,
+    /// momentum coefficient (used when `optimizer=momentum`)
+    pub momentum: f32,
+    /// L2 weight decay folded into the gradient (0 = off)
+    pub weight_decay: f32,
     pub seed: u64,
     pub data: DatasetConfig,
-    /// where to write metrics CSV / checkpoints (None = no files)
+    /// where to write metrics CSV / checkpoints / the per-layer audit
+    /// stream (None = no files)
     pub out_dir: Option<String>,
 }
 
@@ -82,6 +89,9 @@ impl Default for TrainConfig {
             eval_every: 50,
             eval_batches: 16,
             lr: LrSchedule { base: 0.05, milestones: vec![150, 250] },
+            optimizer: "sgd".to_string(),
+            momentum: 0.9,
+            weight_decay: 0.0,
             seed: 0,
             data: DatasetConfig::default(),
             out_dir: None,
@@ -104,6 +114,16 @@ impl TrainConfig {
             "eval_every" => self.eval_every = v.parse()?,
             "eval_batches" => self.eval_batches = v.parse()?,
             "lr" => self.lr.base = v.parse()?,
+            "optimizer" => {
+                anyhow::ensure!(
+                    crate::nn::optim::OPTIMIZERS.contains(&v),
+                    "unknown optimizer {v:?} (have {:?})",
+                    crate::nn::optim::OPTIMIZERS
+                );
+                self.optimizer = v.to_string()
+            }
+            "momentum" => self.momentum = v.parse()?,
+            "weight_decay" => self.weight_decay = v.parse()?,
             "milestones" => {
                 self.lr.milestones = v
                     .split(',')
@@ -160,6 +180,23 @@ mod tests {
         assert!((c.data.noise - 0.7).abs() < 1e-6);
         assert!(c.set("bogus=1").is_err());
         assert!(c.set("nokey").is_err());
+    }
+
+    #[test]
+    fn optimizer_overrides() {
+        let mut c = TrainConfig::default();
+        assert_eq!(c.optimizer, "sgd", "plain SGD is the default");
+        assert_eq!(c.weight_decay, 0.0);
+        c.set("optimizer=momentum").unwrap();
+        c.set("momentum=0.8").unwrap();
+        c.set("weight_decay=0.0005").unwrap();
+        assert_eq!(c.optimizer, "momentum");
+        assert!((c.momentum - 0.8).abs() < 1e-6);
+        assert!((c.weight_decay - 0.0005).abs() < 1e-9);
+        let err = c.set("optimizer=adam").unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("sgd") && msg.contains("momentum"), "{msg}");
+        assert_eq!(c.optimizer, "momentum", "a rejected override must not stick");
     }
 
     #[test]

@@ -13,4 +13,4 @@ pub mod metrics;
 pub mod trainer;
 
 pub use config::{Backend, TrainConfig};
-pub use trainer::{train, train_native, TrainResult};
+pub use trainer::{train, train_native, validate_native_config, TrainResult};

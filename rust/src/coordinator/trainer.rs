@@ -2,9 +2,11 @@
 //! two backends:
 //!
 //! * **native** (default) — the in-crate Alg. 1 trainer
-//!   ([`crate::nn::train`]): quantized forward / weight-gradient /
-//!   input-gradient convs on the pass-generic packed-GEMM engine, BN /
-//!   ReLU / FC / SGD in f32, zero external dependencies;
+//!   ([`crate::nn::train`]) over the composable module graph
+//!   ([`crate::nn::graph`]): quantized forward / weight-gradient /
+//!   input-gradient convs on the pass-generic packed-GEMM engine
+//!   (residual joins included), BN / ReLU / FC and the pluggable
+//!   optimizer (SGD / momentum) in f32, zero external dependencies;
 //! * **pjrt** — the AOT train-step artifacts through the PJRT engine
 //!   (needs `make artifacts` + the `pjrt` cargo feature).
 //!
@@ -21,7 +23,9 @@ use super::config::{Backend, TrainConfig};
 use super::metrics::{EvalRow, MetricsLog, StepRow};
 use crate::data::{streams, SynthCifar};
 use crate::mls::quantizer::QuantConfig;
-use crate::nn::train::{native_model, NativeModel};
+use crate::mls::Grouping;
+use crate::nn::optim::parse_optimizer;
+use crate::nn::train::{native_model, NativeModel, StepAudit};
 use crate::runtime::Engine;
 
 #[derive(Clone, Debug)]
@@ -99,15 +103,51 @@ pub fn evaluate_native(
     ((loss_sum / n as f64) as f32, (acc_sum / n as f64) as f32)
 }
 
-/// Write the metrics CSV + raw-f32 checkpoint for a finished run.
-fn write_outputs(config: &TrainConfig, metrics: &MetricsLog, state: &[f32]) -> Result<()> {
+/// Write the metrics CSV + raw-f32 checkpoint for a finished run, plus —
+/// when the run collected one — the per-layer audit stream
+/// (`<tag>.audit.jsonl`, one `schemas/audit_step.schema.json` record per
+/// line per step; native backend only).
+fn write_outputs(
+    config: &TrainConfig,
+    metrics: &MetricsLog,
+    state: &[f32],
+    audit_jsonl: &str,
+) -> Result<()> {
     if let Some(dir) = &config.out_dir {
         let tag = format!("{}_{}_s{}", config.model, config.cfg_name, config.seed);
         metrics.write_csv(std::path::Path::new(dir).join(format!("{tag}.csv")))?;
         let bytes: Vec<u8> = state.iter().flat_map(|v| v.to_le_bytes()).collect();
         std::fs::write(std::path::Path::new(dir).join(format!("{tag}.state.bin")), bytes)?;
+        if !audit_jsonl.is_empty() {
+            std::fs::write(
+                std::path::Path::new(dir).join(format!("{tag}.audit.jsonl")),
+                audit_jsonl,
+            )?;
+        }
     }
     Ok(())
+}
+
+/// Validate a native-backend config BEFORE any model construction: an
+/// unknown model name, an unsupported scaling grouping or an unknown
+/// optimizer fails here with an error listing the supported values,
+/// instead of erroring somewhere mid-construction. Each check delegates
+/// to its single source of truth (`zoo::native_network`,
+/// `QuantConfig::parse_name`, `optim::parse_optimizer`) so the supported
+/// sets and error messages cannot drift.
+pub fn validate_native_config(config: &TrainConfig) -> Result<QuantConfig> {
+    crate::nn::zoo::native_network(&config.model)?;
+    let qcfg = QuantConfig::parse_name(&config.cfg_name)?;
+    // mirrors the construction-time guard in nn::train::native_model
+    anyhow::ensure!(
+        !qcfg.enabled || qcfg.grouping == Grouping::Both,
+        "the native backend requires nc grouping (grouping=both) for quantized configs, \
+         got {:?} in {:?} — run grouping ablations on the pjrt backend",
+        qcfg.grouping,
+        config.cfg_name
+    );
+    parse_optimizer(&config.optimizer, config.momentum, config.weight_decay)?;
+    Ok(qcfg)
 }
 
 /// Run one full training experiment on the backend `config` selects.
@@ -161,7 +201,7 @@ pub fn train(engine: &mut Engine, config: &TrainConfig) -> Result<TrainResult> {
         evaluate(engine, &model, &state, &ds, streams::TEST, config.eval_batches)?
     };
 
-    write_outputs(config, &metrics, &state)?;
+    write_outputs(config, &metrics, &state, "")?;
 
     Ok(TrainResult {
         config: config.clone(),
@@ -173,13 +213,31 @@ pub fn train(engine: &mut Engine, config: &TrainConfig) -> Result<TrainResult> {
     })
 }
 
+/// One line of the per-layer audit stream: the step's [`StepAudit`]
+/// (per-layer records + roll-up totals) tagged with the run context.
+fn audit_line(config: &TrainConfig, step: u64, audit: &StepAudit) -> String {
+    let mut line = audit
+        .to_json(&config.model, &config.cfg_name, config.batch, step)
+        .to_string_compact();
+    line.push('\n');
+    line
+}
+
 /// Run one full training experiment on the NATIVE backend: synthetic
-/// CIFAR -> per-layer Alg. 1 low-bit forward/backward -> SGD, end to end
-/// in this crate — no PJRT, no artifacts, no Python.
+/// CIFAR -> per-layer Alg. 1 low-bit forward/backward on the module
+/// graph -> optimizer update, end to end in this crate — no PJRT, no
+/// artifacts, no Python. With `out_dir` set, the per-layer audit stream
+/// of every step is written alongside the metrics CSV as
+/// `<tag>.audit.jsonl`.
 pub fn train_native(config: &TrainConfig) -> Result<TrainResult> {
-    let qcfg = QuantConfig::parse_name(&config.cfg_name)?;
+    let qcfg = validate_native_config(config)?;
     let ds = SynthCifar::new(config.data.clone());
     let mut model = native_model(&config.model, qcfg, config.seed)?;
+    model.set_optimizer(parse_optimizer(
+        &config.optimizer,
+        config.momentum,
+        config.weight_decay,
+    )?);
     let (c, h, w) = model.input;
     anyhow::ensure!(
         ds.sample_elems() == c * h * w,
@@ -189,6 +247,7 @@ pub fn train_native(config: &TrainConfig) -> Result<TrainResult> {
     );
 
     let mut metrics = MetricsLog::default();
+    let mut audit_jsonl = String::new();
     for step in 0..config.steps {
         let (images, labels) = ds.batch(config.batch, streams::TRAIN, train_batch_index(config, step));
         let lr = config.lr.at(step);
@@ -202,6 +261,11 @@ pub fn train_native(config: &TrainConfig) -> Result<TrainResult> {
             acc: out.acc,
             step_ms: t0.elapsed().as_secs_f64() * 1e3,
         });
+        // fp32 runs execute no quantized convs, so they have no audit
+        // stream (a record with an empty layer list would be vacuous)
+        if config.out_dir.is_some() && !out.audit.layers.is_empty() {
+            audit_jsonl.push_str(&audit_line(config, step, &out.audit));
+        }
         if !out.loss.is_finite() {
             break; // diverged — stop early, record as such (Table IV "Div.")
         }
@@ -220,7 +284,7 @@ pub fn train_native(config: &TrainConfig) -> Result<TrainResult> {
     };
 
     let state = model.state();
-    write_outputs(config, &metrics, &state)?;
+    write_outputs(config, &metrics, &state, &audit_jsonl)?;
 
     Ok(TrainResult {
         config: config.clone(),

@@ -74,7 +74,9 @@ mls-train — MLS low-bit CNN training framework (paper reproduction)
 
 commands:
   train     run one training experiment (--set model=cnn_s --set cfg=e2m4_gnc_eg8mg1_sr --set steps=300);
-            backend=native (default) runs the self-contained Alg. 1 low-bit trainer,
+            backend=native (default) runs the self-contained Alg. 1 low-bit trainer
+            on the module-graph models cnn_t / cnn_s / resnet_t (residual), with
+            --set optimizer=sgd|momentum --set momentum=0.9 --set weight_decay=0;
             backend=pjrt the AOT artifacts (needs make artifacts + the pjrt feature)
   eval      evaluate a saved state (--model cnn_s --state runs/...state.bin; --set backend=...)
   repro     regenerate a paper table/figure (--exp table1..table6, fig2, fig6, fig7, eq12, ratios)
@@ -95,7 +97,8 @@ fn cmd_train(args: &Args) -> Result<()> {
         let result = trainer::train_native(&config)?;
         println!("{}", result.summary());
         println!(
-            "native backend: mean step {:.1} ms; metrics in {}/",
+            "native backend ({} optimizer): mean step {:.1} ms; metrics + per-layer audit stream in {}/",
+            config.optimizer,
             result.metrics.mean_step_ms(),
             config.out_dir.as_deref().unwrap_or("-")
         );

@@ -1,0 +1,1234 @@
+//! Composable module graph for the native Alg. 1 trainer.
+//!
+//! PR 4's native trainer was a hardcoded single chain (an enum of layers
+//! walked forward and backward by one monolithic function), which cannot
+//! express a skip connection. This module replaces it with a small,
+//! explicit node-graph IR:
+//!
+//! * [`Graph`] — nodes in topological order over *values*: value `0` is
+//!   the graph input, the output of node `i` is value `i + 1`. Every node
+//!   names its input value(s); [`Op::Add`] (the residual join) takes two
+//!   and fans the gradient back into both.
+//! * [`Tape`] — the activation cache of one forward pass, **owned by the
+//!   trainer/executor**, not by the layers: one [`NodeCache`] entry per
+//!   node, consumed exactly once by the backward pass.
+//! * [`Executor`] — the forward/backward contracts. Forward moves each
+//!   value buffer into its single consumer (cloning only at residual
+//!   fan-out), so chain models execute the byte-identical sequence of
+//!   f32 operations the PR 4 trainer did; backward walks the nodes in
+//!   reverse, accumulating gradient contributions per value (`move` for
+//!   the first contribution, element-wise `+=` for later ones).
+//! * [`lower`] — the shared lowering from the analytic model zoo
+//!   ([`crate::nn::zoo`]): `cnn_t`, `cnn_s` and `resnet_t` all construct
+//!   their executable graphs from their zoo twins through this one
+//!   function, so the analytic op model and the executed graph share a
+//!   single geometry source. Residual basic blocks lower to
+//!   `Conv -> BN -> ReLU -> Conv -> BN` plus an identity or 1x1-projection
+//!   shortcut joined by [`Op::Add`] and a trailing ReLU, with every
+//!   quantized conv running the full Alg. 1 forward/wgrad/dgrad triple
+//!   exactly like chain convs.
+//!
+//! Quantization points, straight-through gradients, the fp32 stem
+//! convention (the conv reading the graph input stays unquantized and
+//! skips its input gradient) and the per-conv audit counters all carry
+//! over from the chain trainer unchanged — the chain models are
+//! **bit-identical** before vs after the redesign, pinned by
+//! `rust/tests/train_bit_identity.rs`, which replays fixed-seed steps
+//! against a verbatim copy of the historical implementation.
+//!
+//! The executed audit is now a per-layer stream: one [`PassCounters`]
+//! record per quantized conv node per Alg. 1 pass ([`LayerAudit`]),
+//! rolled up into the step totals of [`StepAudit`] (sum over counters,
+//! max over peak bits) — the totals are exactly what the chain trainer
+//! reported.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, ensure, Result};
+
+use crate::arith::conv::{conv2d_f32_dgrad, conv2d_f32_threaded, conv2d_f32_wgrad, ConvOutput};
+use crate::arith::spec::ConvSpec;
+use crate::mls::quantizer::{quantize, QuantConfig, Rounding};
+use crate::mls::MlsTensor;
+use crate::nn::zoo::{Layer, Network};
+use crate::util::json::Json;
+use crate::util::rng::Pcg32;
+
+/// Index of a value: `0` is the graph input, the output of node `i` is
+/// value `i + 1`.
+pub type ValueId = usize;
+
+/// The graph-input value id.
+pub const INPUT: ValueId = 0;
+
+// ---------------------------------------------------------------------------
+// Audit stream
+// ---------------------------------------------------------------------------
+
+/// Executed hardware-audit counters of one conv-pass kind (one quantized
+/// conv in a [`LayerAudit`] record, or the roll-up over all of them in
+/// [`StepAudit`]).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PassCounters {
+    /// quantized convs executed
+    pub convs: u64,
+    pub mul_ops: u64,
+    pub int_add_ops: u64,
+    pub float_add_ops: u64,
+    pub group_scale_ops: u64,
+    /// max over layers of the per-conv peak accumulator bits
+    pub peak_acc_bits: u32,
+}
+
+impl PassCounters {
+    pub(crate) fn absorb(&mut self, out: &ConvOutput) {
+        self.convs += 1;
+        self.mul_ops += out.mul_ops;
+        self.int_add_ops += out.int_add_ops;
+        self.float_add_ops += out.float_add_ops;
+        self.group_scale_ops += out.group_scale_ops;
+        self.peak_acc_bits = self.peak_acc_bits.max(out.peak_acc_bits);
+    }
+
+    pub(crate) fn merge(&mut self, other: &PassCounters) {
+        self.convs += other.convs;
+        self.mul_ops += other.mul_ops;
+        self.int_add_ops += other.int_add_ops;
+        self.float_add_ops += other.float_add_ops;
+        self.group_scale_ops += other.group_scale_ops;
+        self.peak_acc_bits = self.peak_acc_bits.max(other.peak_acc_bits);
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("convs".to_string(), Json::Num(self.convs as f64));
+        m.insert("mul_ops".to_string(), Json::Num(self.mul_ops as f64));
+        m.insert("int_add_ops".to_string(), Json::Num(self.int_add_ops as f64));
+        m.insert("float_add_ops".to_string(), Json::Num(self.float_add_ops as f64));
+        m.insert("group_scale_ops".to_string(), Json::Num(self.group_scale_ops as f64));
+        m.insert("peak_acc_bits".to_string(), Json::Num(self.peak_acc_bits as f64));
+        Json::Obj(m)
+    }
+}
+
+/// Per-node audit record: the executed counters of ONE quantized conv
+/// node, one [`PassCounters`] per Alg. 1 pass.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct LayerAudit {
+    /// node index in [`Graph::nodes`]
+    pub node: usize,
+    /// node name (the zoo conv name, e.g. `conv3` or `conv5s`)
+    pub name: String,
+    pub forward: PassCounters,
+    pub wgrad: PassCounters,
+    pub dgrad: PassCounters,
+}
+
+impl LayerAudit {
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("node".to_string(), Json::Num(self.node as f64));
+        m.insert("name".to_string(), Json::Str(self.name.clone()));
+        m.insert("forward".to_string(), self.forward.to_json());
+        m.insert("wgrad".to_string(), self.wgrad.to_json());
+        m.insert("dgrad".to_string(), self.dgrad.to_json());
+        Json::Obj(m)
+    }
+}
+
+/// Per-step executed audit over the quantized convs: a per-layer stream
+/// (`layers`, one record per quantized conv node in forward execution
+/// order) plus the roll-up totals per Alg. 1 pass. The totals are exactly
+/// the sum of the stream (max for `peak_acc_bits`); the unquantized stem
+/// runs f32 and is not audited, as before.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct StepAudit {
+    pub forward: PassCounters,
+    pub wgrad: PassCounters,
+    pub dgrad: PassCounters,
+    /// one record per quantized conv node, forward execution order
+    pub layers: Vec<LayerAudit>,
+}
+
+impl StepAudit {
+    /// Recompute the per-pass totals from the per-layer stream.
+    pub(crate) fn roll_up(&mut self) {
+        let mut forward = PassCounters::default();
+        let mut wgrad = PassCounters::default();
+        let mut dgrad = PassCounters::default();
+        for l in &self.layers {
+            forward.merge(&l.forward);
+            wgrad.merge(&l.wgrad);
+            dgrad.merge(&l.dgrad);
+        }
+        self.forward = forward;
+        self.wgrad = wgrad;
+        self.dgrad = dgrad;
+    }
+
+    /// One audit-stream record (`schemas/audit_step.schema.json`): the
+    /// per-layer records plus the roll-up totals, tagged with the run
+    /// context. `coordinator::train_native` writes one such record per
+    /// step to `<tag>.audit.jsonl`; `bench_train_step` writes one to
+    /// `AUDIT_step.json` for CI schema validation.
+    pub fn to_json(&self, model: &str, cfg: &str, batch: usize, step: u64) -> Json {
+        let mut totals = BTreeMap::new();
+        totals.insert("forward".to_string(), self.forward.to_json());
+        totals.insert("wgrad".to_string(), self.wgrad.to_json());
+        totals.insert("dgrad".to_string(), self.dgrad.to_json());
+        let mut m = BTreeMap::new();
+        m.insert("audit".to_string(), Json::Str("train_step".to_string()));
+        m.insert("model".to_string(), Json::Str(model.to_string()));
+        m.insert("cfg".to_string(), Json::Str(cfg.to_string()));
+        m.insert("batch".to_string(), Json::Num(batch as f64));
+        m.insert("step".to_string(), Json::Num(step as f64));
+        m.insert("totals".to_string(), Json::Obj(totals));
+        m.insert(
+            "layers".to_string(),
+            Json::Arr(self.layers.iter().map(LayerAudit::to_json).collect()),
+        );
+        Json::Obj(m)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Node ops
+// ---------------------------------------------------------------------------
+
+/// One conv layer's parameters (no bias — BN follows every conv).
+pub struct ConvLayer {
+    pub w: Vec<f32>,
+    pub co: usize,
+    pub ci: usize,
+    pub k: usize,
+    pub stride: usize,
+    pub pad: usize,
+    /// exact input spatial dims (fixed at lowering time)
+    pub hin: usize,
+    pub win: usize,
+    /// false for the stem (paper convention: the first conv stays fp32)
+    pub quantized: bool,
+}
+
+impl ConvLayer {
+    pub fn spec(&self) -> ConvSpec {
+        ConvSpec::new(self.stride, self.pad, self.k, self.k, self.hin, self.win)
+    }
+}
+
+/// Batch-statistics BatchNorm with a learned per-channel affine.
+pub struct BnLayer {
+    pub c: usize,
+    pub gamma: Vec<f32>,
+    pub beta: Vec<f32>,
+    pub eps: f32,
+}
+
+/// Fully-connected classifier head, `w` in `[dout, din]` row-major.
+pub struct FcLayer {
+    pub din: usize,
+    pub dout: usize,
+    pub w: Vec<f32>,
+    pub b: Vec<f32>,
+}
+
+/// The operation a node applies to its input value(s).
+pub enum Op {
+    Conv(ConvLayer),
+    BatchNorm(BnLayer),
+    Relu,
+    GlobalAvgPool,
+    Fc(FcLayer),
+    /// element-wise residual join: two inputs, gradient fans into both
+    Add,
+}
+
+/// One graph node: an op applied to named input values. `inputs` holds
+/// one value id, or two for [`Op::Add`].
+pub struct Node {
+    pub name: String,
+    pub op: Op,
+    pub inputs: Vec<ValueId>,
+}
+
+impl Node {
+    pub fn param_len(&self) -> usize {
+        match &self.op {
+            Op::Conv(l) => l.w.len(),
+            Op::BatchNorm(l) => 2 * l.c,
+            Op::Fc(l) => l.w.len() + l.b.len(),
+            _ => 0,
+        }
+    }
+}
+
+/// The executable module graph: nodes in topological order over values,
+/// plus the input/output contract.
+pub struct Graph {
+    pub nodes: Vec<Node>,
+    /// (C, H, W) of one input sample
+    pub input: (usize, usize, usize),
+    pub classes: usize,
+}
+
+impl Graph {
+    /// Flattened parameter count (the checkpoint/state length).
+    pub fn state_len(&self) -> usize {
+        self.nodes.iter().map(|n| n.param_len()).sum()
+    }
+
+    /// Per-node offsets into the flat state/gradient vector.
+    pub fn param_offsets(&self) -> Vec<usize> {
+        let mut offs = Vec::with_capacity(self.nodes.len());
+        let mut cursor = 0;
+        for n in &self.nodes {
+            offs.push(cursor);
+            cursor += n.param_len();
+        }
+        offs
+    }
+
+    /// Flatten all parameters (node order; conv `w`, BN `gamma` then
+    /// `beta`, FC `w` then `b`).
+    pub fn state(&self) -> Vec<f32> {
+        let mut out = Vec::with_capacity(self.state_len());
+        for n in &self.nodes {
+            match &n.op {
+                Op::Conv(c) => out.extend_from_slice(&c.w),
+                Op::BatchNorm(b) => {
+                    out.extend_from_slice(&b.gamma);
+                    out.extend_from_slice(&b.beta);
+                }
+                Op::Fc(f) => {
+                    out.extend_from_slice(&f.w);
+                    out.extend_from_slice(&f.b);
+                }
+                _ => {}
+            }
+        }
+        out
+    }
+
+    /// Load a flat state vector written by [`Self::state`].
+    pub fn load_state(&mut self, state: &[f32]) -> Result<()> {
+        ensure!(
+            state.len() == self.state_len(),
+            "state length {} != graph parameter count {}",
+            state.len(),
+            self.state_len()
+        );
+        let mut cursor = 0;
+        let mut take = |dst: &mut [f32]| {
+            dst.copy_from_slice(&state[cursor..cursor + dst.len()]);
+            cursor += dst.len();
+        };
+        for n in &mut self.nodes {
+            match &mut n.op {
+                Op::Conv(c) => take(&mut c.w),
+                Op::BatchNorm(b) => {
+                    take(&mut b.gamma);
+                    take(&mut b.beta);
+                }
+                Op::Fc(f) => {
+                    take(&mut f.w);
+                    take(&mut f.b);
+                }
+                _ => {}
+            }
+        }
+        Ok(())
+    }
+
+    /// Full-window conv MACs of one Alg. 1 step, per sample: forward +
+    /// weight-gradient for every conv, plus the input gradient for every
+    /// conv that does not read the graph input — independent of
+    /// quantization, derived from the graph's actual layer geometry. The
+    /// analytic throughput denominator for f32 steps (`bench_train_step`);
+    /// quantized steps report their executed in-bounds counts from the
+    /// audit instead.
+    pub fn conv_macs_per_sample(&self) -> u64 {
+        let mut macs = 0u64;
+        for node in &self.nodes {
+            if let Op::Conv(l) = &node.op {
+                let spec = l.spec();
+                let (ho, wo) = (spec.out_h(), spec.out_w());
+                let passes: u64 = if node.inputs[0] == INPUT { 2 } else { 3 };
+                macs += (l.ci * l.co * l.k * l.k * ho * wo) as u64 * passes;
+            }
+        }
+        macs
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Tape (activation cache) and the executor
+// ---------------------------------------------------------------------------
+
+/// What one node's backward needs from its forward execution.
+enum NodeCache {
+    None,
+    Conv {
+        /// f32 input activations — kept ONLY for the f32 (stem) backward;
+        /// the quantized backward reads qW/qA and never the f32 input
+        x: Vec<f32>,
+        qw: Option<MlsTensor>,
+        qa: Option<MlsTensor>,
+        /// index into [`StepAudit::layers`] for quantized convs
+        audit_slot: Option<usize>,
+    },
+    Bn { xhat: Vec<f32>, inv_std: Vec<f32>, h: usize, w: usize },
+    Relu { pos: Vec<bool> },
+    Gap { c: usize, h: usize, w: usize },
+    Fc { x: Vec<f32> },
+}
+
+/// Activation cache of one forward pass, owned by the trainer (not by the
+/// layers): one entry per node, consumed by [`Executor::backward`].
+#[derive(Default)]
+pub struct Tape {
+    caches: Vec<NodeCache>,
+}
+
+/// One feature-map value flowing through the graph.
+#[derive(Clone)]
+struct Feat {
+    data: Vec<f32>,
+    c: usize,
+    h: usize,
+    w: usize,
+}
+
+/// Quantize under `cfg`, drawing stochastic-rounding offsets from `rng`
+/// when the config asks for them; with no RNG (evaluation) stochastic
+/// configs fall back to deterministic nearest rounding.
+fn quantize_dyn(x: &[f32], shape: &[usize], cfg: &QuantConfig, rng: Option<&mut Pcg32>) -> MlsTensor {
+    match (cfg.rounding, rng) {
+        (Rounding::Stochastic, Some(rng)) => {
+            let offsets = rng.rounding_offsets(x.len());
+            quantize(x, shape, cfg, &offsets)
+        }
+        (Rounding::Stochastic, None) => {
+            let nearest = QuantConfig { rounding: Rounding::Nearest, ..*cfg };
+            quantize(x, shape, &nearest, &[])
+        }
+        (Rounding::Nearest, _) => quantize(x, shape, cfg, &[]),
+    }
+}
+
+/// Consume one input value: moved into its last consumer, cloned for
+/// earlier consumers at a residual fan-out. Chains therefore move every
+/// buffer, exactly like the historical trainer.
+fn take_val(vals: &mut [Option<Feat>], uses: &mut [usize], vid: ValueId, who: &str) -> Feat {
+    assert!(uses[vid] > 0, "{who}: value {vid} over-consumed");
+    uses[vid] -= 1;
+    let slot = &mut vals[vid];
+    if uses[vid] == 0 {
+        slot.take().unwrap_or_else(|| panic!("{who}: value {vid} missing"))
+    } else {
+        slot.clone().unwrap_or_else(|| panic!("{who}: value {vid} missing"))
+    }
+}
+
+/// Accumulate a gradient contribution into a value's gradient slot: the
+/// first contribution moves, later ones add element-wise (residual
+/// fan-in).
+fn accumulate(slot: &mut Option<Vec<f32>>, dx: Vec<f32>) {
+    match slot {
+        None => *slot = Some(dx),
+        Some(acc) => {
+            assert_eq!(acc.len(), dx.len(), "gradient fan-in length mismatch");
+            for (a, d) in acc.iter_mut().zip(&dx) {
+                *a += *d;
+            }
+        }
+    }
+}
+
+/// The forward/backward contracts over a [`Graph`]: borrows the graph and
+/// the run configuration, owns no state — the [`Tape`] and audit stream
+/// are passed through explicitly, so the trainer owns every cache.
+pub struct Executor<'a> {
+    pub graph: &'a Graph,
+    pub qcfg: &'a QuantConfig,
+    pub threads: usize,
+}
+
+impl Executor<'_> {
+    /// Forward through the graph. With `rng` the quantizers draw
+    /// stochastic-rounding offsets (training); without it they round to
+    /// nearest (evaluation). With `tape` every node records what its
+    /// backward needs. Quantized convs append one [`LayerAudit`] record to
+    /// `audit.layers` (forward counters filled; backward fills the rest).
+    /// Returns the logits `[N, classes]`.
+    pub fn forward(
+        &self,
+        images: &[f32],
+        n: usize,
+        mut rng: Option<&mut Pcg32>,
+        mut tape: Option<&mut Tape>,
+        audit: &mut StepAudit,
+    ) -> Vec<f32> {
+        let g = self.graph;
+        let (c0, h0, w0) = g.input;
+        assert_eq!(images.len(), n * c0 * h0 * w0, "image batch shape mismatch");
+        let n_vals = g.nodes.len() + 1;
+        let mut uses = vec![0usize; n_vals];
+        for node in &g.nodes {
+            for &vid in &node.inputs {
+                uses[vid] += 1;
+            }
+        }
+        let mut vals: Vec<Option<Feat>> = vec![None; n_vals];
+        vals[INPUT] = Some(Feat { data: images.to_vec(), c: c0, h: h0, w: w0 });
+        if let Some(tape) = tape.as_deref_mut() {
+            tape.caches.clear();
+        }
+
+        for (i, node) in g.nodes.iter().enumerate() {
+            let out = match &node.op {
+                Op::Conv(l) => {
+                    let x = take_val(&mut vals, &mut uses, node.inputs[0], &node.name);
+                    assert_eq!(x.c, l.ci, "{}: conv input channel mismatch", node.name);
+                    assert_eq!(
+                        (x.h, x.w),
+                        (l.hin, l.win),
+                        "{}: conv input spatial mismatch",
+                        node.name
+                    );
+                    let spec = l.spec();
+                    let (ho, wo) = (spec.out_h(), spec.out_w());
+                    let (z, qw, qa, audit_slot) = if l.quantized && self.qcfg.enabled {
+                        let qw = quantize_dyn(
+                            &l.w,
+                            &[l.co, l.ci, l.k, l.k],
+                            self.qcfg,
+                            rng.as_deref_mut(),
+                        );
+                        let qa = quantize_dyn(
+                            &x.data,
+                            &[n, x.c, x.h, x.w],
+                            self.qcfg,
+                            rng.as_deref_mut(),
+                        );
+                        let out = spec.forward(&qw, &qa, self.threads);
+                        let slot = audit.layers.len();
+                        let mut la = LayerAudit {
+                            node: i,
+                            name: node.name.clone(),
+                            ..Default::default()
+                        };
+                        la.forward.absorb(&out);
+                        audit.layers.push(la);
+                        (out.z, Some(qw), Some(qa), Some(slot))
+                    } else {
+                        let (z, _) = conv2d_f32_threaded(
+                            &l.w,
+                            [l.co, l.ci, l.k, l.k],
+                            &x.data,
+                            [n, x.c, x.h, x.w],
+                            l.stride,
+                            l.pad,
+                            self.threads,
+                        );
+                        (z, None, None, None)
+                    };
+                    if let Some(tape) = tape.as_deref_mut() {
+                        // the quantized backward only ever reads qW/qA —
+                        // keep the f32 activations alive only for the f32
+                        // backward path
+                        let xf = if qa.is_some() { Vec::new() } else { x.data };
+                        tape.caches.push(NodeCache::Conv { x: xf, qw, qa, audit_slot });
+                    }
+                    Feat { data: z, c: l.co, h: ho, w: wo }
+                }
+                Op::BatchNorm(l) => {
+                    let mut x = take_val(&mut vals, &mut uses, node.inputs[0], &node.name);
+                    assert_eq!(x.c, l.c, "{}: BN channel mismatch", node.name);
+                    let (h, w) = (x.h, x.w);
+                    let m = (n * h * w) as f64;
+                    let plane = h * w;
+                    let mut xhat = vec![0.0f32; x.data.len()];
+                    let mut inv_std = vec![0.0f32; l.c];
+                    for ch in 0..l.c {
+                        let mut sum = 0.0f64;
+                        let mut sq = 0.0f64;
+                        for nb in 0..n {
+                            let base = (nb * l.c + ch) * plane;
+                            for &v in &x.data[base..base + plane] {
+                                sum += v as f64;
+                                sq += v as f64 * v as f64;
+                            }
+                        }
+                        let mean = sum / m;
+                        let var = (sq / m - mean * mean).max(0.0);
+                        let inv = 1.0 / (var + l.eps as f64).sqrt();
+                        inv_std[ch] = inv as f32;
+                        let (gam, bet) = (l.gamma[ch], l.beta[ch]);
+                        for nb in 0..n {
+                            let base = (nb * l.c + ch) * plane;
+                            for idx in base..base + plane {
+                                let xh = ((x.data[idx] as f64 - mean) * inv) as f32;
+                                xhat[idx] = xh;
+                                x.data[idx] = gam * xh + bet;
+                            }
+                        }
+                    }
+                    if let Some(tape) = tape.as_deref_mut() {
+                        tape.caches.push(NodeCache::Bn { xhat, inv_std, h, w });
+                    }
+                    x
+                }
+                Op::Relu => {
+                    let mut x = take_val(&mut vals, &mut uses, node.inputs[0], &node.name);
+                    let mut pos = Vec::new();
+                    if tape.is_some() {
+                        pos = x.data.iter().map(|&v| v > 0.0).collect();
+                    }
+                    for v in x.data.iter_mut() {
+                        if *v < 0.0 {
+                            *v = 0.0;
+                        }
+                    }
+                    if let Some(tape) = tape.as_deref_mut() {
+                        tape.caches.push(NodeCache::Relu { pos });
+                    }
+                    x
+                }
+                Op::GlobalAvgPool => {
+                    let x = take_val(&mut vals, &mut uses, node.inputs[0], &node.name);
+                    let plane = x.h * x.w;
+                    let mut y = vec![0.0f32; n * x.c];
+                    for nb in 0..n {
+                        for ch in 0..x.c {
+                            let base = (nb * x.c + ch) * plane;
+                            let mut sum = 0.0f64;
+                            for &v in &x.data[base..base + plane] {
+                                sum += v as f64;
+                            }
+                            y[nb * x.c + ch] = (sum / plane as f64) as f32;
+                        }
+                    }
+                    if let Some(tape) = tape.as_deref_mut() {
+                        tape.caches.push(NodeCache::Gap { c: x.c, h: x.h, w: x.w });
+                    }
+                    Feat { data: y, c: x.c, h: 1, w: 1 }
+                }
+                Op::Fc(l) => {
+                    let x = take_val(&mut vals, &mut uses, node.inputs[0], &node.name);
+                    let din = x.c * x.h * x.w;
+                    assert_eq!(din, l.din, "{}: FC input dim mismatch", node.name);
+                    let mut y = vec![0.0f32; n * l.dout];
+                    for nb in 0..n {
+                        let xin = &x.data[nb * din..(nb + 1) * din];
+                        for o in 0..l.dout {
+                            let wrow = &l.w[o * din..(o + 1) * din];
+                            let mut acc = l.b[o] as f64;
+                            for d in 0..din {
+                                acc += wrow[d] as f64 * xin[d] as f64;
+                            }
+                            y[nb * l.dout + o] = acc as f32;
+                        }
+                    }
+                    if let Some(tape) = tape.as_deref_mut() {
+                        tape.caches.push(NodeCache::Fc { x: x.data });
+                    }
+                    Feat { data: y, c: l.dout, h: 1, w: 1 }
+                }
+                Op::Add => {
+                    let mut a = take_val(&mut vals, &mut uses, node.inputs[0], &node.name);
+                    let b = take_val(&mut vals, &mut uses, node.inputs[1], &node.name);
+                    assert_eq!(
+                        (a.c, a.h, a.w),
+                        (b.c, b.h, b.w),
+                        "{}: residual operand shapes differ",
+                        node.name
+                    );
+                    for (av, bv) in a.data.iter_mut().zip(&b.data) {
+                        *av += *bv;
+                    }
+                    if let Some(tape) = tape.as_deref_mut() {
+                        tape.caches.push(NodeCache::None);
+                    }
+                    a
+                }
+            };
+            vals[i + 1] = Some(out);
+        }
+
+        let out = vals[n_vals - 1].take().expect("graph output value");
+        assert_eq!(
+            out.c * out.h * out.w,
+            g.classes,
+            "head output does not match the class count"
+        );
+        out.data
+    }
+
+    /// Backward through the graph: consumes the forward [`Tape`], seeds
+    /// the final value's gradient with `dlogits`, walks the nodes in
+    /// reverse accumulating per-value gradients (residual joins fan in by
+    /// element-wise addition), and writes parameter gradients into `grads`
+    /// (laid out like [`Graph::state`]). Quantized convs quantize E once
+    /// and reuse it for both backward passes (Alg. 1); the conv reading
+    /// the graph input skips its input gradient.
+    pub fn backward(
+        &self,
+        mut tape: Tape,
+        dlogits: Vec<f32>,
+        n: usize,
+        rng: &mut Pcg32,
+        grads: &mut [f32],
+        audit: &mut StepAudit,
+    ) {
+        let g = self.graph;
+        assert_eq!(grads.len(), g.state_len(), "gradient buffer length mismatch");
+        assert_eq!(tape.caches.len(), g.nodes.len(), "one cache entry per node");
+        let offs = g.param_offsets();
+        let n_vals = g.nodes.len() + 1;
+        let mut gslots: Vec<Option<Vec<f32>>> = vec![None; n_vals];
+        gslots[n_vals - 1] = Some(dlogits);
+
+        for (i, node) in g.nodes.iter().enumerate().rev() {
+            let gout = gslots[i + 1]
+                .take()
+                .unwrap_or_else(|| panic!("{}: missing output gradient", node.name));
+            let cache = std::mem::replace(&mut tape.caches[i], NodeCache::None);
+            match (&node.op, cache) {
+                (Op::Fc(l), NodeCache::Fc { x }) => {
+                    let gw = &mut grads[offs[i]..offs[i] + l.w.len() + l.b.len()];
+                    for nb in 0..n {
+                        let xin = &x[nb * l.din..(nb + 1) * l.din];
+                        let grow = &gout[nb * l.dout..(nb + 1) * l.dout];
+                        for o in 0..l.dout {
+                            let go = grow[o];
+                            for d in 0..l.din {
+                                gw[o * l.din + d] += go * xin[d];
+                            }
+                            gw[l.w.len() + o] += go;
+                        }
+                    }
+                    let mut dx = vec![0.0f32; x.len()];
+                    for nb in 0..n {
+                        let grow = &gout[nb * l.dout..(nb + 1) * l.dout];
+                        let drow = &mut dx[nb * l.din..(nb + 1) * l.din];
+                        for o in 0..l.dout {
+                            let go = grow[o];
+                            let wrow = &l.w[o * l.din..(o + 1) * l.din];
+                            for d in 0..l.din {
+                                drow[d] += go * wrow[d];
+                            }
+                        }
+                    }
+                    accumulate(&mut gslots[node.inputs[0]], dx);
+                }
+                (Op::GlobalAvgPool, NodeCache::Gap { c, h, w }) => {
+                    let plane = h * w;
+                    let mut dx = vec![0.0f32; n * c * plane];
+                    for nb in 0..n {
+                        for ch in 0..c {
+                            let gv = gout[nb * c + ch] / plane as f32;
+                            let base = (nb * c + ch) * plane;
+                            for slot in &mut dx[base..base + plane] {
+                                *slot = gv;
+                            }
+                        }
+                    }
+                    accumulate(&mut gslots[node.inputs[0]], dx);
+                }
+                (Op::Relu, NodeCache::Relu { pos }) => {
+                    let mut gv = gout;
+                    for (gvv, &p) in gv.iter_mut().zip(&pos) {
+                        if !p {
+                            *gvv = 0.0;
+                        }
+                    }
+                    accumulate(&mut gslots[node.inputs[0]], gv);
+                }
+                (Op::BatchNorm(l), NodeCache::Bn { xhat, inv_std, h, w }) => {
+                    let mut gv = gout;
+                    let plane = h * w;
+                    let m = (n * plane) as f64;
+                    let gg = &mut grads[offs[i]..offs[i] + 2 * l.c];
+                    for ch in 0..l.c {
+                        let mut sum_dy = 0.0f64;
+                        let mut sum_dy_xhat = 0.0f64;
+                        for nb in 0..n {
+                            let base = (nb * l.c + ch) * plane;
+                            for idx in base..base + plane {
+                                sum_dy += gv[idx] as f64;
+                                sum_dy_xhat += gv[idx] as f64 * xhat[idx] as f64;
+                            }
+                        }
+                        gg[ch] += sum_dy_xhat as f32; // dgamma
+                        gg[l.c + ch] += sum_dy as f32; // dbeta
+                        let scale = l.gamma[ch] as f64 * inv_std[ch] as f64;
+                        let mean_dy = sum_dy / m;
+                        let mean_dy_xhat = sum_dy_xhat / m;
+                        for nb in 0..n {
+                            let base = (nb * l.c + ch) * plane;
+                            for idx in base..base + plane {
+                                gv[idx] = (scale
+                                    * (gv[idx] as f64 - mean_dy - xhat[idx] as f64 * mean_dy_xhat))
+                                    as f32;
+                            }
+                        }
+                    }
+                    accumulate(&mut gslots[node.inputs[0]], gv);
+                }
+                (Op::Conv(l), NodeCache::Conv { x, qw, qa, audit_slot }) => {
+                    let spec = l.spec();
+                    let (ho, wo) = (spec.out_h(), spec.out_w());
+                    let eshape = [n, l.co, ho, wo];
+                    let need_dx = node.inputs[0] != INPUT;
+                    let gw = &mut grads[offs[i]..offs[i] + l.w.len()];
+                    if let (Some(qw), Some(qa)) = (qw, qa) {
+                        // Alg. 1: quantize E once, reuse for both passes
+                        let qe = quantize_dyn(&gout, &eshape, self.qcfg, Some(&mut *rng));
+                        let slot = audit_slot.expect("quantized conv has an audit slot");
+                        let wg = spec.weight_grad(&qe, &qa, self.threads);
+                        audit.layers[slot].wgrad.absorb(&wg);
+                        gw.copy_from_slice(&wg.z);
+                        if need_dx {
+                            let dg = spec.input_grad(&qe, &qw, self.threads);
+                            audit.layers[slot].dgrad.absorb(&dg);
+                            accumulate(&mut gslots[node.inputs[0]], dg.z);
+                        }
+                    } else {
+                        let (wg, _) = conv2d_f32_wgrad(
+                            &gout,
+                            eshape,
+                            &x,
+                            [n, l.ci, l.hin, l.win],
+                            l.stride,
+                            l.pad,
+                            l.k,
+                            l.k,
+                            self.threads,
+                        );
+                        gw.copy_from_slice(&wg);
+                        if need_dx {
+                            let (dg, _) = conv2d_f32_dgrad(
+                                &gout,
+                                eshape,
+                                &l.w,
+                                [l.co, l.ci, l.k, l.k],
+                                l.stride,
+                                l.pad,
+                                l.hin,
+                                l.win,
+                                self.threads,
+                            );
+                            accumulate(&mut gslots[node.inputs[0]], dg);
+                        }
+                    }
+                }
+                (Op::Add, NodeCache::None) => {
+                    let dup = gout.clone();
+                    accumulate(&mut gslots[node.inputs[0]], gout);
+                    accumulate(&mut gslots[node.inputs[1]], dup);
+                }
+                _ => unreachable!("cache kind does not match node kind"),
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Lowering from the analytic zoo
+// ---------------------------------------------------------------------------
+
+/// A residual basic block recognized in a zoo layer list: two main-branch
+/// `Conv, BN` pairs, an optional `Conv(*s), BN` projection shortcut, and
+/// the `EwAdd` join.
+struct BlockPlan {
+    conv1: usize,
+    bn1: usize,
+    conv2: usize,
+    bn2: usize,
+    shortcut: Option<(usize, usize)>,
+    ewadd: usize,
+}
+
+/// Graph-under-construction: nodes plus the shape of every value.
+struct Lowerer {
+    nodes: Vec<Node>,
+    /// shape (c, h, w) per value id; `shapes[0]` is the graph input
+    shapes: Vec<(usize, usize, usize)>,
+    rng: Pcg32,
+    bn_n: usize,
+    relu_n: usize,
+    add_n: usize,
+}
+
+impl Lowerer {
+    fn push(&mut self, name: String, op: Op, inputs: Vec<ValueId>, shape: (usize, usize, usize)) -> ValueId {
+        self.nodes.push(Node { name, op, inputs });
+        self.shapes.push(shape);
+        self.nodes.len() // the value id of the new node's output
+    }
+
+    /// Lower one zoo conv (He-initialized, "same"-padded odd kernel).
+    fn conv(&mut self, zl: &Layer, from: ValueId) -> Result<ValueId> {
+        let Layer::Conv { name, cin, cout, k, stride, h, w, hin, win, quantized } = zl else {
+            bail!("lowering expected a conv layer");
+        };
+        let (fc, fh, fw) = self.shapes[from];
+        ensure!(
+            *cin == fc && *hin == fh && *win == fw,
+            "conv {name}: zoo input {cin}x{hin}x{win} != lowered input {fc}x{fh}x{fw}"
+        );
+        ensure!(*k % 2 == 1, "conv {name}: only odd kernels lower to 'same' padding");
+        let pad = (*k - 1) / 2;
+        let ho = (fh + 2 * pad - *k) / *stride + 1;
+        let wo = (fw + 2 * pad - *k) / *stride + 1;
+        ensure!(
+            ho == *h && wo == *w,
+            "conv {name}: lowered output {ho}x{wo} != zoo output {h}x{w}"
+        );
+        // He initialization (same draw order and sigma as the historical
+        // chain builder, so chain-model init is bit-identical)
+        let sigma = (2.0 / (cin * k * k) as f32).sqrt();
+        let wts = self.rng.normal_vec(cout * cin * k * k, sigma);
+        Ok(self.push(
+            name.clone(),
+            Op::Conv(ConvLayer {
+                w: wts,
+                co: *cout,
+                ci: *cin,
+                k: *k,
+                stride: *stride,
+                pad,
+                hin: fh,
+                win: fw,
+                quantized: *quantized,
+            }),
+            vec![from],
+            (*cout, ho, wo),
+        ))
+    }
+
+    fn bn(&mut self, zl: &Layer, from: ValueId) -> Result<ValueId> {
+        let Layer::BatchNorm { c, .. } = zl else {
+            bail!("lowering expected a BN layer");
+        };
+        let (fc, fh, fw) = self.shapes[from];
+        ensure!(*c == fc, "bn: zoo channels {c} != lowered input channels {fc}");
+        self.bn_n += 1;
+        Ok(self.push(
+            format!("bn{}", self.bn_n),
+            Op::BatchNorm(BnLayer {
+                c: fc,
+                gamma: vec![1.0; fc],
+                beta: vec![0.0; fc],
+                eps: 1e-5,
+            }),
+            vec![from],
+            (fc, fh, fw),
+        ))
+    }
+
+    fn relu(&mut self, from: ValueId) -> ValueId {
+        let shape = self.shapes[from];
+        self.relu_n += 1;
+        self.push(format!("relu{}", self.relu_n), Op::Relu, vec![from], shape)
+    }
+}
+
+/// Recognize the residual basic blocks in a zoo layer list. A block ends
+/// at `EwAdd`; the zoo emits `Conv, BN, Conv, BN [, Conv("..s"), BN]`
+/// before it. The `s` name suffix is the zoo's projection-shortcut
+/// marker (`zoo::B::basic_block` is the only emitter and documents the
+/// contract); a misclassification cannot slip through silently — the
+/// lowering's channel/shape `ensure!`s reject any block whose branches
+/// do not line up.
+fn plan_blocks(layers: &[Layer]) -> Result<Vec<BlockPlan>> {
+    let is_bn = |i: usize| matches!(layers.get(i), Some(Layer::BatchNorm { .. }));
+    let conv_name = |i: usize| match layers.get(i) {
+        Some(Layer::Conv { name, .. }) => Some(name.as_str()),
+        _ => None,
+    };
+    let mut plans = Vec::new();
+    for (j, layer) in layers.iter().enumerate() {
+        if !matches!(layer, Layer::EwAdd { .. }) {
+            continue;
+        }
+        let plan = if j >= 6
+            && conv_name(j - 2).is_some_and(|nm| nm.ends_with('s'))
+            && is_bn(j - 1)
+        {
+            ensure!(
+                conv_name(j - 6).is_some() && is_bn(j - 5) && conv_name(j - 4).is_some() && is_bn(j - 3),
+                "residual join at zoo layer {j}: projection block must be Conv,BN,Conv,BN,Conv,BN"
+            );
+            BlockPlan {
+                conv1: j - 6,
+                bn1: j - 5,
+                conv2: j - 4,
+                bn2: j - 3,
+                shortcut: Some((j - 2, j - 1)),
+                ewadd: j,
+            }
+        } else {
+            ensure!(
+                j >= 4 && conv_name(j - 4).is_some() && is_bn(j - 3) && conv_name(j - 2).is_some() && is_bn(j - 1),
+                "residual join at zoo layer {j}: identity block must be Conv,BN,Conv,BN"
+            );
+            BlockPlan {
+                conv1: j - 4,
+                bn1: j - 3,
+                conv2: j - 2,
+                bn2: j - 1,
+                shortcut: None,
+                ewadd: j,
+            }
+        };
+        plans.push(plan);
+    }
+    Ok(plans)
+}
+
+/// Lower an analytic zoo [`Network`] into an executable [`Graph`]: the
+/// ONE construction path shared by every native model (`cnn_t`, `cnn_s`,
+/// `resnet_t` — see [`crate::nn::zoo::native_network`]).
+///
+/// * chain `Conv, BN` pairs lower to `Conv -> BN -> ReLU`,
+/// * residual basic blocks (recognized by their `EwAdd` join) lower to
+///   `Conv -> BN -> ReLU -> Conv -> BN` plus an identity or
+///   1x1-projection shortcut, joined by [`Op::Add`] and a trailing ReLU,
+/// * the classifier lowers to `GlobalAvgPool -> Fc` (the pool is skipped
+///   when the feature map is already 1x1).
+///
+/// Initialization is deterministic in `seed` (He-init convs, unit BN,
+/// zero FC bias), drawing in zoo declaration order — chain models
+/// reproduce the historical chain-builder state bit-exactly.
+pub fn lower(net: &Network, seed: u64) -> Result<Graph> {
+    let layers = &net.layers;
+    let plans = plan_blocks(layers)?;
+    let block_at: BTreeMap<usize, usize> =
+        plans.iter().enumerate().map(|(bi, p)| (p.conv1, bi)).collect();
+
+    let mut lo = Lowerer {
+        nodes: Vec::new(),
+        shapes: vec![net.input],
+        rng: Pcg32::new(seed, 0x6e61_7469),
+        bn_n: 0,
+        relu_n: 0,
+        add_n: 0,
+    };
+    let mut cur: ValueId = INPUT;
+    let mut classes = None;
+
+    let mut i = 0usize;
+    while i < layers.len() {
+        if let Some(&bi) = block_at.get(&i) {
+            let plan = &plans[bi];
+            let block_in = cur;
+            // main branch
+            let v = lo.conv(&layers[plan.conv1], block_in)?;
+            let v = lo.bn(&layers[plan.bn1], v)?;
+            let v = lo.relu(v);
+            let v = lo.conv(&layers[plan.conv2], v)?;
+            let main_tail = lo.bn(&layers[plan.bn2], v)?;
+            // shortcut branch
+            let skip_tail = match plan.shortcut {
+                Some((cs, bs)) => {
+                    let s = lo.conv(&layers[cs], block_in)?;
+                    lo.bn(&layers[bs], s)?
+                }
+                None => block_in,
+            };
+            ensure!(
+                lo.shapes[main_tail] == lo.shapes[skip_tail],
+                "residual join at zoo layer {}: branch shapes {:?} vs {:?}",
+                plan.ewadd,
+                lo.shapes[main_tail],
+                lo.shapes[skip_tail]
+            );
+            lo.add_n += 1;
+            let joined = lo.push(
+                format!("add{}", lo.add_n),
+                Op::Add,
+                vec![main_tail, skip_tail],
+                lo.shapes[main_tail],
+            );
+            cur = lo.relu(joined);
+            i = plan.ewadd + 1;
+        } else {
+            match &layers[i] {
+                zl @ Layer::Conv { .. } => {
+                    cur = lo.conv(zl, cur)?;
+                    i += 1;
+                    if matches!(layers.get(i), Some(Layer::BatchNorm { .. })) {
+                        cur = lo.bn(&layers[i], cur)?;
+                        i += 1;
+                    }
+                    cur = lo.relu(cur);
+                }
+                Layer::Fc { din, dout } => {
+                    let (fc, fh, fw) = lo.shapes[cur];
+                    if fh * fw > 1 {
+                        cur = lo.push(
+                            "gap".to_string(),
+                            Op::GlobalAvgPool,
+                            vec![cur],
+                            (fc, 1, 1),
+                        );
+                    }
+                    let dflat = lo.shapes[cur].0;
+                    ensure!(
+                        dflat == *din,
+                        "fc: zoo input dim {din} != lowered input dim {dflat}"
+                    );
+                    let sigma = (2.0 / dflat as f32).sqrt();
+                    let wts = lo.rng.normal_vec(dout * dflat, sigma);
+                    cur = lo.push(
+                        "fc".to_string(),
+                        Op::Fc(FcLayer {
+                            din: dflat,
+                            dout: *dout,
+                            w: wts,
+                            b: vec![0.0; *dout],
+                        }),
+                        vec![cur],
+                        (*dout, 1, 1),
+                    );
+                    classes = Some(*dout);
+                    i += 1;
+                }
+                Layer::BatchNorm { .. } => {
+                    bail!("cannot lower: BatchNorm at zoo layer {i} without a preceding conv")
+                }
+                Layer::EwAdd { .. } => {
+                    bail!("cannot lower: unrecognized residual topology at zoo layer {i}")
+                }
+            }
+        }
+    }
+
+    let classes = classes
+        .ok_or_else(|| anyhow::anyhow!("cannot lower: network has no classifier head"))?;
+    ensure!(
+        matches!(lo.nodes.last().map(|n| &n.op), Some(Op::Fc(_))),
+        "cannot lower: the classifier head must be the final layer"
+    );
+    Ok(Graph { nodes: lo.nodes, input: net.input, classes })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::zoo;
+
+    #[test]
+    fn chain_lowering_matches_historical_node_sequence() {
+        // cnn_t must lower to the exact node sequence the PR 4 chain
+        // trainer executed: (Conv, BN, ReLU) x4, GAP, FC
+        let net = zoo::native_network("cnn_t").unwrap();
+        let g = lower(&net, 1).unwrap();
+        let kinds: Vec<&str> = g
+            .nodes
+            .iter()
+            .map(|n| match &n.op {
+                Op::Conv(_) => "conv",
+                Op::BatchNorm(_) => "bn",
+                Op::Relu => "relu",
+                Op::GlobalAvgPool => "gap",
+                Op::Fc(_) => "fc",
+                Op::Add => "add",
+            })
+            .collect();
+        assert_eq!(
+            kinds,
+            vec![
+                "conv", "bn", "relu", "conv", "bn", "relu", "conv", "bn", "relu", "conv", "bn",
+                "relu", "gap", "fc"
+            ]
+        );
+        // a pure chain: every node consumes the previous value
+        for (i, node) in g.nodes.iter().enumerate() {
+            assert_eq!(node.inputs, vec![i], "node {i} must consume value {i}");
+        }
+        assert_eq!(g.classes, 10);
+    }
+
+    #[test]
+    fn resnet_lowering_builds_residual_joins() {
+        let net = zoo::native_network("resnet_t").unwrap();
+        let g = lower(&net, 2).unwrap();
+        let adds: Vec<&Node> =
+            g.nodes.iter().filter(|n| matches!(n.op, Op::Add)).collect();
+        assert_eq!(adds.len(), 3, "resnet_t has three residual joins");
+        for a in &adds {
+            assert_eq!(a.inputs.len(), 2, "{}: joins take two inputs", a.name);
+        }
+        // block 1 is an identity block: its Add reads a ReLU output (the
+        // block input value) directly; blocks 2 and 3 project through a
+        // quantized 1x1 conv + BN
+        let convs: Vec<&Node> =
+            g.nodes.iter().filter(|n| matches!(n.op, Op::Conv(_))).collect();
+        assert_eq!(convs.len(), 9, "stem + 2 + 3 + 3 convs");
+        let proj: Vec<&Node> =
+            convs.iter().filter(|n| n.name.ends_with('s')).copied().collect();
+        assert_eq!(proj.len(), 2, "two projection shortcuts");
+        for p in &proj {
+            let Op::Conv(l) = &p.op else { unreachable!() };
+            assert_eq!(l.k, 1, "{}: projection shortcut is 1x1", p.name);
+            assert_eq!(l.stride, 2, "{}: projection shortcut strides", p.name);
+            assert!(l.quantized, "{}: shortcuts run Alg. 1 like any conv", p.name);
+        }
+        // exactly one conv reads the graph input (the fp32 stem)
+        let stems: Vec<&Node> =
+            convs.iter().filter(|n| n.inputs[0] == INPUT).copied().collect();
+        assert_eq!(stems.len(), 1);
+        let Op::Conv(stem) = &stems[0].op else { unreachable!() };
+        assert!(!stem.quantized, "the stem stays fp32");
+        assert_eq!(g.classes, 10);
+        // state round-trips through the flat vector
+        let mut g = g;
+        let s = g.state();
+        assert_eq!(s.len(), g.state_len());
+        g.load_state(&s).unwrap();
+        assert_eq!(g.state(), s);
+        assert!(g.load_state(&s[..s.len() - 1]).is_err());
+    }
+
+    #[test]
+    fn lowering_is_deterministic_in_the_seed() {
+        let net = zoo::native_network("resnet_t").unwrap();
+        let a = lower(&net, 7).unwrap().state();
+        let b = lower(&net, 7).unwrap().state();
+        let c = lower(&net, 8).unwrap().state();
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn audit_stream_rolls_up() {
+        let mut audit = StepAudit::default();
+        for (i, mul) in [(0usize, 10u64), (1, 20)] {
+            let mut la = LayerAudit { node: i, name: format!("conv{i}"), ..Default::default() };
+            la.forward.convs = 1;
+            la.forward.mul_ops = mul;
+            la.forward.peak_acc_bits = 4 + i as u32;
+            audit.layers.push(la);
+        }
+        audit.roll_up();
+        assert_eq!(audit.forward.convs, 2);
+        assert_eq!(audit.forward.mul_ops, 30);
+        assert_eq!(audit.forward.peak_acc_bits, 5);
+        assert_eq!(audit.wgrad, PassCounters::default());
+        let j = audit.to_json("m", "cfg", 4, 2);
+        assert_eq!(j.get("audit").and_then(Json::as_str), Some("train_step"));
+        assert_eq!(j.get("batch").and_then(Json::as_f64), Some(4.0));
+        assert_eq!(j.get("layers").and_then(Json::as_arr).map(|a| a.len()), Some(2));
+        let totals = j.get("totals").unwrap();
+        assert_eq!(
+            totals.get("forward").unwrap().get("mul_ops").and_then(Json::as_f64),
+            Some(30.0)
+        );
+        // the record prints as a single JSON line (the .audit.jsonl format)
+        let line = j.to_string_compact();
+        assert!(!line.contains('\n'));
+        assert_eq!(Json::parse(&line).unwrap(), j);
+    }
+}

@@ -6,14 +6,24 @@
 //! [`ops`] turns a zoo network into analytic per-step op counts. The
 //! counts drive Table I, Table III (GOPs) and the Table VI energy rows —
 //! they are analytic in layer shapes, so these tables reproduce exactly.
-//! [`train`] is the native low-bit training step: per-layer Alg. 1
-//! forward/backward on real MLS tensors through the pass-generic conv
-//! engine, whose executed audit counters cross-check the analytic model.
+//! [`graph`] is the composable module-graph IR the native trainer
+//! executes (nodes over explicit values, residual `Add` joins, a
+//! trainer-owned activation [`graph::Tape`], per-layer audit stream);
+//! every native model lowers its zoo twin ([`zoo::native_network`]) into
+//! such a graph. [`optim`] provides the pluggable parameter-update rules
+//! (plain SGD, momentum SGD). [`train`] ties them together as the native
+//! low-bit training step: per-layer Alg. 1 forward/backward on real MLS
+//! tensors through the pass-generic conv engine, whose executed audit
+//! counters cross-check the analytic model.
 
+pub mod graph;
 pub mod ops;
+pub mod optim;
 pub mod train;
 pub mod zoo;
 
+pub use graph::{Graph, LayerAudit, PassCounters, StepAudit, Tape};
 pub use ops::{count_training_ops, TrainingOps};
-pub use train::{native_model, NativeModel, NativeStepOutput, StepAudit};
+pub use optim::{parse_optimizer, Optimizer};
+pub use train::{native_model, NativeModel, NativeStepOutput};
 pub use zoo::{network, Layer, Network, NETWORKS};

@@ -12,6 +12,11 @@
 //! quantized element; the MLS element-wise addition needs one extra mul
 //! for the tensor-scale alignment (Table VI "EW-Add / FloatMul" row).
 //!
+//! The native trainer's executable graphs are LOWERED from the same zoo
+//! `Network`s this module counts ([`crate::nn::zoo::native_network`] ->
+//! [`crate::nn::graph::lower`]), so the analytic counts and the executed
+//! per-layer audit stream share one geometry source by construction.
+//!
 //! Two conventions to be aware of when comparing against the EXECUTED
 //! audit counters of the native Alg. 1 kernels (pinned by
 //! `rust/tests/train_ops_crosscheck.rs`):

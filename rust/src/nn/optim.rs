@@ -1,0 +1,201 @@
+//! Pluggable parameter-update rules for the native Alg. 1 trainer.
+//!
+//! The PR 4 trainer inlined `p -= lr * g` into its step function; the
+//! module-graph redesign replaces that with the [`Optimizer`] trait over
+//! the flat parameter vector (layout: [`crate::nn::graph::Graph::state`]).
+//!
+//! * [`Sgd`] — plain SGD. With `weight_decay == 0` the update is the
+//!   literal expression `p -= lr * g` the historical trainer executed, so
+//!   chain-model training stays **bit-identical** (pinned by
+//!   `rust/tests/train_bit_identity.rs`).
+//! * [`MomentumSgd`] — heavy-ball momentum,
+//!   `v <- mu * v + (g + wd * p); p <- p - lr * v`, the paper's training
+//!   recipe (Sec. VI: momentum 0.9). The velocity buffer persists across
+//!   steps inside the optimizer, sized lazily to the parameter count.
+//!
+//! Both support optional L2 weight decay folded into the gradient
+//! (`g + wd * p`), skipped entirely when `wd == 0` so the zero-decay
+//! path adds no float ops.
+
+use anyhow::Result;
+
+/// One parameter-update rule over the flat state vector.
+pub trait Optimizer {
+    fn name(&self) -> &'static str;
+    /// Apply one update in place. `params` and `grads` share the layout
+    /// of [`crate::nn::graph::Graph::state`].
+    fn step(&mut self, params: &mut [f32], grads: &[f32], lr: f32);
+}
+
+/// Plain SGD: `p -= lr * g` (bit-identical to the historical inlined
+/// update when `weight_decay == 0`), or `p -= lr * (g + wd * p)`.
+#[derive(Clone, Debug, Default)]
+pub struct Sgd {
+    pub weight_decay: f32,
+}
+
+impl Optimizer for Sgd {
+    fn name(&self) -> &'static str {
+        "sgd"
+    }
+
+    fn step(&mut self, params: &mut [f32], grads: &[f32], lr: f32) {
+        assert_eq!(params.len(), grads.len(), "param/grad length mismatch");
+        if self.weight_decay != 0.0 {
+            for (p, g) in params.iter_mut().zip(grads) {
+                *p -= lr * (*g + self.weight_decay * *p);
+            }
+        } else {
+            for (p, g) in params.iter_mut().zip(grads) {
+                *p -= lr * *g;
+            }
+        }
+    }
+}
+
+/// Momentum SGD (heavy ball): `v <- mu * v + (g + wd * p)`,
+/// `p <- p - lr * v`. The velocity persists across steps.
+#[derive(Clone, Debug)]
+pub struct MomentumSgd {
+    pub momentum: f32,
+    pub weight_decay: f32,
+    v: Vec<f32>,
+}
+
+impl MomentumSgd {
+    pub fn new(momentum: f32, weight_decay: f32) -> Self {
+        MomentumSgd { momentum, weight_decay, v: Vec::new() }
+    }
+}
+
+impl Optimizer for MomentumSgd {
+    fn name(&self) -> &'static str {
+        "momentum"
+    }
+
+    fn step(&mut self, params: &mut [f32], grads: &[f32], lr: f32) {
+        assert_eq!(params.len(), grads.len(), "param/grad length mismatch");
+        if self.v.len() != params.len() {
+            self.v = vec![0.0; params.len()];
+        }
+        for ((p, g), v) in params.iter_mut().zip(grads).zip(self.v.iter_mut()) {
+            let ge = if self.weight_decay != 0.0 { *g + self.weight_decay * *p } else { *g };
+            *v = self.momentum * *v + ge;
+            *p -= lr * *v;
+        }
+    }
+}
+
+/// Optimizer names `TrainConfig.optimizer` accepts.
+pub const OPTIMIZERS: &[&str] = &["sgd", "momentum"];
+
+/// Build an optimizer from its config name (`optimizer=sgd|momentum`,
+/// `momentum=0.9`, `weight_decay=0.0`).
+pub fn parse_optimizer(name: &str, momentum: f32, weight_decay: f32) -> Result<Box<dyn Optimizer>> {
+    Ok(match name {
+        "sgd" => Box::new(Sgd { weight_decay }),
+        "momentum" => Box::new(MomentumSgd::new(momentum, weight_decay)),
+        other => anyhow::bail!("unknown optimizer {other:?} (have {OPTIMIZERS:?})"),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sgd_is_bit_exact_p_minus_lr_g() {
+        // the plain-SGD path must execute the literal historical update
+        let params0: Vec<f32> = (0..64).map(|i| (i as f32 * 0.37).sin()).collect();
+        let grads: Vec<f32> = (0..64).map(|i| (i as f32 * 0.11).cos()).collect();
+        let lr = 0.05f32;
+        let mut params = params0.clone();
+        Sgd::default().step(&mut params, &grads, lr);
+        for (i, ((p0, g), p)) in params0.iter().zip(&grads).zip(&params).enumerate() {
+            let mut want = *p0;
+            want -= lr * *g;
+            assert_eq!(p.to_bits(), want.to_bits(), "param {i}");
+        }
+    }
+
+    #[test]
+    fn momentum_matches_closed_form_on_scalar_quadratic() {
+        // loss = a/2 * x^2, grad = a*x. With v_{t+1} = mu v_t + a x_t and
+        // x_{t+1} = x_t - lr v_{t+1}, the state obeys the 2-term linear
+        // recurrence x_{t+1} = (1 + mu - lr a) x_t - mu x_{t-1}, so
+        // x_t = c1 l1^t + c2 l2^t with l1/l2 the roots of
+        // l^2 - (1 + mu - lr a) l + mu = 0. Parameters chosen so the
+        // discriminant is positive (real, distinct roots).
+        let (a, lr, mu) = (1.0f64, 0.2f64, 0.04f64);
+        let tr = 1.0 + mu - lr * a;
+        let disc = tr * tr - 4.0 * mu;
+        assert!(disc > 0.0, "test parameters must give real roots");
+        let l1 = (tr + disc.sqrt()) / 2.0;
+        let l2 = (tr - disc.sqrt()) / 2.0;
+        let x0 = 1.0f64;
+        let x1 = x0 - lr * a * x0; // first step has v_0 = 0
+        let c2 = (x1 - l1 * x0) / (l2 - l1);
+        let c1 = x0 - c2;
+        let closed_form = |t: u32| c1 * l1.powi(t as i32) + c2 * l2.powi(t as i32);
+
+        let mut opt = MomentumSgd::new(mu as f32, 0.0);
+        let mut x = [x0 as f32];
+        for t in 1..=30u32 {
+            let g = [a as f32 * x[0]];
+            opt.step(&mut x, &g, lr as f32);
+            let want = closed_form(t);
+            let got = x[0] as f64;
+            assert!(
+                (got - want).abs() <= want.abs().max(1e-6) * 1e-4,
+                "step {t}: optimizer {got:.9e} vs closed form {want:.9e}"
+            );
+        }
+        // momentum genuinely differs from plain SGD on the same problem
+        let mut sx = [x0 as f32];
+        let mut sgd = Sgd::default();
+        for _ in 0..30 {
+            let g = [a as f32 * sx[0]];
+            sgd.step(&mut sx, &g, lr as f32);
+        }
+        assert_ne!(x[0].to_bits(), sx[0].to_bits());
+    }
+
+    #[test]
+    fn weight_decay_pulls_toward_zero() {
+        // zero gradient: only the decay term acts
+        let mut p = [2.0f32];
+        let g = [0.0f32];
+        let mut opt = Sgd { weight_decay: 0.1 };
+        opt.step(&mut p, &g, 0.5);
+        assert!((p[0] - (2.0 - 0.5 * 0.1 * 2.0)).abs() < 1e-6);
+        let mut pm = [2.0f32];
+        let mut mopt = MomentumSgd::new(0.9, 0.1);
+        mopt.step(&mut pm, &g, 0.5);
+        assert!((pm[0] - (2.0 - 0.5 * 0.1 * 2.0)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn velocity_persists_across_steps() {
+        // two steps with the same gradient: the second update is larger
+        // by the momentum carry
+        let mut p = [0.0f32];
+        let g = [1.0f32];
+        let mut opt = MomentumSgd::new(0.9, 0.0);
+        opt.step(&mut p, &g, 0.1);
+        let d1 = -p[0];
+        let before = p[0];
+        opt.step(&mut p, &g, 0.1);
+        let d2 = before - p[0];
+        assert!((d1 - 0.1).abs() < 1e-6);
+        assert!((d2 - 0.19).abs() < 1e-6, "second step must carry 0.9 * v");
+    }
+
+    #[test]
+    fn parse_names() {
+        assert_eq!(parse_optimizer("sgd", 0.9, 0.0).unwrap().name(), "sgd");
+        assert_eq!(parse_optimizer("momentum", 0.9, 0.0).unwrap().name(), "momentum");
+        let err = parse_optimizer("adam", 0.9, 0.0).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("sgd") && msg.contains("momentum"), "{msg}");
+    }
+}

@@ -10,173 +10,59 @@
 //!                                              dA = Conv^T(qE, qW)
 //! ```
 //!
+//! Since PR 5 the model is a composable **module graph**
+//! ([`crate::nn::graph`]) rather than a hardcoded chain: nodes in
+//! topological order over explicit values, an `Add` join with gradient
+//! fan-in for residual blocks, a [`Tape`] activation cache owned by the
+//! trainer, and a pluggable [`Optimizer`] (plain SGD — bit-identical to
+//! the historical inlined update — or momentum SGD). Every native model
+//! (`cnn_t`, `cnn_s`, `resnet_t`) constructs its graph by **lowering its
+//! analytic zoo twin** ([`crate::nn::zoo::native_network`] ->
+//! [`crate::nn::graph::lower`]), so the analytic op model and the
+//! executed graph share one geometry source.
+//!
 //! All three convs execute on the pass-generic packed-GEMM engine
-//! ([`crate::arith::spec::ConvSpec`]) over real [`MlsTensor`]s, so the
-//! executed hardware-audit counters of every pass are collected per step
-//! ([`StepAudit`]) and can be cross-checked against the analytic
-//! [`super::ops::count_training_ops`] model (see
-//! `rust/tests/train_ops_crosscheck.rs`). Dynamic quantization points
+//! ([`crate::arith::spec::ConvSpec`]) over real [`MlsTensor`]s; the
+//! executed hardware-audit counters are collected as a per-layer stream
+//! ([`StepAudit::layers`], one [`PassCounters`] record per quantized conv
+//! node per pass) whose roll-up totals cross-check against the analytic
+//! [`super::ops::count_training_ops`] model
+//! (`rust/tests/train_ops_crosscheck.rs`). Dynamic quantization points
 //! follow the paper: W once per step, A once per forward, E once per
-//! backward, each through [`crate::mls::quantizer::quantize`] with fresh
-//! stochastic-rounding offsets from the step seed (evaluation uses
-//! deterministic nearest rounding). Gradients pass through the quantizers
-//! by the straight-through estimator, and through ReLU as the usual mask;
-//! BN (batch statistics, full backward), global average pooling, the FC
-//! classifier, softmax cross-entropy and the SGD update all run in f32,
+//! backward, with fresh stochastic-rounding offsets from the step seed
+//! (evaluation uses deterministic nearest rounding). Gradients pass the
+//! quantizers by the straight-through estimator and ReLU as the usual
+//! mask; BN (batch statistics, full backward), global average pooling,
+//! the FC classifier, softmax cross-entropy and the optimizer run in f32,
 //! matching the framework split of the paper (Sec. VI-E).
 //!
-//! The first conv layer stays unquantized (paper convention); its
-//! forward/backward run the f32 reference convs, and — also per Alg. 1 —
-//! the first layer never computes an input gradient.
+//! The conv reading the graph input (the stem) stays unquantized (paper
+//! convention); its forward/backward run the f32 reference convs, and —
+//! also per Alg. 1 — it never computes an input gradient.
+//!
+//! [`MlsTensor`]: crate::mls::MlsTensor
 
-use anyhow::{bail, Result};
+use anyhow::Result;
 
-use crate::arith::conv::{conv2d_f32_dgrad, conv2d_f32_threaded, conv2d_f32_wgrad, ConvOutput};
-use crate::arith::spec::ConvSpec;
-use crate::mls::quantizer::{quantize, QuantConfig, Rounding};
-use crate::mls::{Grouping, MlsTensor};
+use crate::mls::quantizer::QuantConfig;
+use crate::mls::Grouping;
+use crate::nn::graph::{lower, Executor, Graph, Tape};
+use crate::nn::optim::{Optimizer, Sgd};
+use crate::nn::zoo;
 use crate::util::parallel;
 use crate::util::rng::Pcg32;
 
-/// Executed hardware-audit counters of one conv-pass kind, summed over
-/// the quantized conv layers of one training step.
-#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
-pub struct PassCounters {
-    /// quantized convs executed
-    pub convs: u64,
-    pub mul_ops: u64,
-    pub int_add_ops: u64,
-    pub float_add_ops: u64,
-    pub group_scale_ops: u64,
-    /// max over layers of the per-conv peak accumulator bits
-    pub peak_acc_bits: u32,
-}
-
-impl PassCounters {
-    fn absorb(&mut self, out: &ConvOutput) {
-        self.convs += 1;
-        self.mul_ops += out.mul_ops;
-        self.int_add_ops += out.int_add_ops;
-        self.float_add_ops += out.float_add_ops;
-        self.group_scale_ops += out.group_scale_ops;
-        self.peak_acc_bits = self.peak_acc_bits.max(out.peak_acc_bits);
-    }
-}
-
-/// Per-step executed audit over the quantized convs, split by Alg. 1
-/// pass. The unquantized first layer runs f32 and is not audited (it is
-/// counted separately by the analytic model too).
-#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
-pub struct StepAudit {
-    pub forward: PassCounters,
-    pub wgrad: PassCounters,
-    pub dgrad: PassCounters,
-}
+pub use crate::nn::graph::{
+    BnLayer, ConvLayer, FcLayer, LayerAudit, Node, Op, PassCounters, StepAudit,
+};
+pub use crate::nn::zoo::NATIVE_MODELS;
 
 /// Result of one native training step.
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Debug)]
 pub struct NativeStepOutput {
     pub loss: f32,
     pub acc: f32,
     pub audit: StepAudit,
-}
-
-/// One conv layer's parameters (no bias — BN follows every conv).
-pub struct ConvLayer {
-    pub w: Vec<f32>,
-    pub co: usize,
-    pub ci: usize,
-    pub k: usize,
-    pub stride: usize,
-    pub pad: usize,
-    /// false for the first layer (paper convention: stem stays fp32)
-    pub quantized: bool,
-}
-
-impl ConvLayer {
-    fn spec(&self, h: usize, w: usize) -> ConvSpec {
-        ConvSpec::new(self.stride, self.pad, self.k, self.k, h, w)
-    }
-}
-
-/// Batch-statistics BatchNorm with a learned per-channel affine.
-pub struct BnLayer {
-    pub c: usize,
-    pub gamma: Vec<f32>,
-    pub beta: Vec<f32>,
-    pub eps: f32,
-}
-
-/// Fully-connected classifier head, `w` in `[dout, din]` row-major.
-pub struct FcLayer {
-    pub din: usize,
-    pub dout: usize,
-    pub w: Vec<f32>,
-    pub b: Vec<f32>,
-}
-
-pub enum NativeLayer {
-    Conv(ConvLayer),
-    BatchNorm(BnLayer),
-    Relu,
-    GlobalAvgPool,
-    Fc(FcLayer),
-}
-
-impl NativeLayer {
-    fn param_len(&self) -> usize {
-        match self {
-            NativeLayer::Conv(l) => l.w.len(),
-            NativeLayer::BatchNorm(l) => 2 * l.c,
-            NativeLayer::Fc(l) => l.w.len() + l.b.len(),
-            _ => 0,
-        }
-    }
-}
-
-/// Per-layer forward caches one backward pass consumes.
-enum Cache {
-    Conv { x: Vec<f32>, h: usize, w: usize, qw: Option<MlsTensor>, qa: Option<MlsTensor> },
-    Bn { xhat: Vec<f32>, inv_std: Vec<f32>, h: usize, w: usize },
-    Relu { pos: Vec<bool> },
-    Gap { c: usize, h: usize, w: usize },
-    Fc { x: Vec<f32> },
-}
-
-/// A sequential Conv -> BN -> ReLU -> ... -> GAP -> FC network trainable
-/// natively under Alg. 1.
-pub struct NativeModel {
-    pub name: String,
-    /// (C, H, W) of one input sample
-    pub input: (usize, usize, usize),
-    pub classes: usize,
-    /// conv operand quantization (element/group formats, grouping,
-    /// rounding); `enabled = false` trains fully in f32
-    pub qcfg: QuantConfig,
-    pub layers: Vec<NativeLayer>,
-    threads: usize,
-}
-
-/// Quantize under `cfg`, drawing stochastic-rounding offsets from `rng`
-/// when the config asks for them; with no RNG (evaluation) stochastic
-/// configs fall back to deterministic nearest rounding.
-fn quantize_dyn(
-    x: &[f32],
-    shape: &[usize],
-    cfg: &QuantConfig,
-    rng: Option<&mut Pcg32>,
-) -> MlsTensor {
-    match (cfg.rounding, rng) {
-        (Rounding::Stochastic, Some(rng)) => {
-            let offsets = rng.rounding_offsets(x.len());
-            quantize(x, shape, cfg, &offsets)
-        }
-        (Rounding::Stochastic, None) => {
-            let nearest = QuantConfig { rounding: Rounding::Nearest, ..*cfg };
-            quantize(x, shape, &nearest, &[])
-        }
-        (Rounding::Nearest, _) => quantize(x, shape, cfg, &[]),
-    }
 }
 
 fn softmax_ce(logits: &[f32], labels: &[i32], classes: usize) -> (f32, f32, Vec<f32>) {
@@ -212,72 +98,40 @@ fn softmax_ce(logits: &[f32], labels: &[i32], classes: usize) -> (f32, f32, Vec<
     ((loss / n as f64) as f32, correct as f32 / n as f32, dlogits)
 }
 
+/// A module-graph network trainable natively under Alg. 1.
+/// `state`/`load_state`/`train_step`/`eval_batch` are the stable outer
+/// API; internally forward/backward run on the [`Executor`] over
+/// [`Self::graph`], and the parameter update on the pluggable
+/// [`Optimizer`] (plain SGD by default).
+pub struct NativeModel {
+    pub name: String,
+    /// (C, H, W) of one input sample
+    pub input: (usize, usize, usize),
+    pub classes: usize,
+    /// conv operand quantization (element/group formats, grouping,
+    /// rounding); `enabled = false` trains fully in f32
+    pub qcfg: QuantConfig,
+    /// the executable module graph (nodes own the parameters)
+    pub graph: Graph,
+    optimizer: Box<dyn Optimizer>,
+    threads: usize,
+}
+
 impl NativeModel {
     /// Flattened parameter count (the checkpoint/state length).
     pub fn state_len(&self) -> usize {
-        self.layers.iter().map(|l| l.param_len()).sum()
+        self.graph.state_len()
     }
 
-    /// Per-layer offsets into the flat state/gradient vector.
-    fn param_offsets(&self) -> Vec<usize> {
-        let mut offs = Vec::with_capacity(self.layers.len());
-        let mut cursor = 0;
-        for l in &self.layers {
-            offs.push(cursor);
-            cursor += l.param_len();
-        }
-        offs
-    }
-
-    /// Flatten all parameters (layer order; conv `w`, BN `gamma` then
+    /// Flatten all parameters (node order; conv `w`, BN `gamma` then
     /// `beta`, FC `w` then `b`).
     pub fn state(&self) -> Vec<f32> {
-        let mut out = Vec::with_capacity(self.state_len());
-        for l in &self.layers {
-            match l {
-                NativeLayer::Conv(c) => out.extend_from_slice(&c.w),
-                NativeLayer::BatchNorm(b) => {
-                    out.extend_from_slice(&b.gamma);
-                    out.extend_from_slice(&b.beta);
-                }
-                NativeLayer::Fc(f) => {
-                    out.extend_from_slice(&f.w);
-                    out.extend_from_slice(&f.b);
-                }
-                _ => {}
-            }
-        }
-        out
+        self.graph.state()
     }
 
     /// Load a flat state vector written by [`Self::state`].
     pub fn load_state(&mut self, state: &[f32]) -> Result<()> {
-        anyhow::ensure!(
-            state.len() == self.state_len(),
-            "state length {} != model parameter count {}",
-            state.len(),
-            self.state_len()
-        );
-        let mut cursor = 0;
-        let mut take = |dst: &mut [f32]| {
-            dst.copy_from_slice(&state[cursor..cursor + dst.len()]);
-            cursor += dst.len();
-        };
-        for l in &mut self.layers {
-            match l {
-                NativeLayer::Conv(c) => take(&mut c.w),
-                NativeLayer::BatchNorm(b) => {
-                    take(&mut b.gamma);
-                    take(&mut b.beta);
-                }
-                NativeLayer::Fc(f) => {
-                    take(&mut f.w);
-                    take(&mut f.b);
-                }
-                _ => {}
-            }
-        }
-        Ok(())
+        self.graph.load_state(state)
     }
 
     /// Override the conv worker count (defaults to the ambient
@@ -286,187 +140,33 @@ impl NativeModel {
         self.threads = threads.max(1);
     }
 
-    /// Full-window conv MACs of one Alg. 1 step, per sample: forward +
-    /// weight-gradient for every conv, plus the input gradient for every
-    /// conv after the first — independent of quantization, derived from
-    /// the model's actual layer geometry. The analytic throughput
-    /// denominator for f32 steps (`bench_train_step`); the quantized
-    /// steps report their executed in-bounds counts from the audit
-    /// instead.
-    pub fn conv_macs_per_sample(&self) -> u64 {
-        let (_, mut h, mut w) = self.input;
-        let mut macs = 0u64;
-        let mut first = true;
-        for layer in &self.layers {
-            match layer {
-                NativeLayer::Conv(l) => {
-                    let spec = l.spec(h, w);
-                    let (ho, wo) = (spec.out_h(), spec.out_w());
-                    let passes: u64 = if first { 2 } else { 3 };
-                    macs += (l.ci * l.co * l.k * l.k * ho * wo) as u64 * passes;
-                    first = false;
-                    (h, w) = (ho, wo);
-                }
-                NativeLayer::GlobalAvgPool => (h, w) = (1, 1),
-                _ => {}
-            }
-        }
-        macs
+    /// Swap the parameter-update rule (plain [`Sgd`] by default). The
+    /// optimizer owns its state (e.g. momentum velocity), which persists
+    /// across steps.
+    pub fn set_optimizer(&mut self, optimizer: Box<dyn Optimizer>) {
+        self.optimizer = optimizer;
     }
 
-    /// Forward through all layers. With `rng` the quantizers draw
-    /// stochastic-rounding offsets (training); without it they round to
-    /// nearest (evaluation). With `caches` every layer records what its
-    /// backward needs. Returns the logits `[N, classes]`.
-    fn forward_inner(
-        &self,
-        images: &[f32],
-        n: usize,
-        mut rng: Option<&mut Pcg32>,
-        mut caches: Option<&mut Vec<Cache>>,
-        audit: &mut StepAudit,
-    ) -> Vec<f32> {
-        let (c0, h0, w0) = self.input;
-        assert_eq!(images.len(), n * c0 * h0 * w0, "image batch shape mismatch");
-        let mut x = images.to_vec();
-        let (mut c, mut h, mut w) = (c0, h0, w0);
-        for layer in &self.layers {
-            match layer {
-                NativeLayer::Conv(l) => {
-                    assert_eq!(c, l.ci, "conv input channel mismatch");
-                    let spec = l.spec(h, w);
-                    let (ho, wo) = (spec.out_h(), spec.out_w());
-                    let (z, qw, qa) = if l.quantized && self.qcfg.enabled {
-                        let qw = quantize_dyn(
-                            &l.w,
-                            &[l.co, l.ci, l.k, l.k],
-                            &self.qcfg,
-                            rng.as_deref_mut(),
-                        );
-                        let qa = quantize_dyn(&x, &[n, c, h, w], &self.qcfg, rng.as_deref_mut());
-                        let out = spec.forward(&qw, &qa, self.threads);
-                        audit.forward.absorb(&out);
-                        (out.z, Some(qw), Some(qa))
-                    } else {
-                        let (z, _) = conv2d_f32_threaded(
-                            &l.w,
-                            [l.co, l.ci, l.k, l.k],
-                            &x,
-                            [n, c, h, w],
-                            l.stride,
-                            l.pad,
-                            self.threads,
-                        );
-                        (z, None, None)
-                    };
-                    if let Some(caches) = caches.as_deref_mut() {
-                        // the quantized backward only ever reads qW/qA —
-                        // keep the f32 activations alive only for the f32
-                        // backward path
-                        let xf = if qa.is_some() { Vec::new() } else { std::mem::take(&mut x) };
-                        caches.push(Cache::Conv { x: xf, h, w, qw, qa });
-                    }
-                    x = z;
-                    (c, h, w) = (l.co, ho, wo);
-                }
-                NativeLayer::BatchNorm(l) => {
-                    assert_eq!(c, l.c, "BN channel mismatch");
-                    let m = (n * h * w) as f64;
-                    let plane = h * w;
-                    let mut xhat = vec![0.0f32; x.len()];
-                    let mut inv_std = vec![0.0f32; c];
-                    for ch in 0..c {
-                        let mut sum = 0.0f64;
-                        let mut sq = 0.0f64;
-                        for nb in 0..n {
-                            let base = (nb * c + ch) * plane;
-                            for &v in &x[base..base + plane] {
-                                sum += v as f64;
-                                sq += v as f64 * v as f64;
-                            }
-                        }
-                        let mean = sum / m;
-                        let var = (sq / m - mean * mean).max(0.0);
-                        let inv = 1.0 / (var + l.eps as f64).sqrt();
-                        inv_std[ch] = inv as f32;
-                        let (g, b) = (l.gamma[ch], l.beta[ch]);
-                        for nb in 0..n {
-                            let base = (nb * c + ch) * plane;
-                            for i in base..base + plane {
-                                let xh = ((x[i] as f64 - mean) * inv) as f32;
-                                xhat[i] = xh;
-                                x[i] = g * xh + b;
-                            }
-                        }
-                    }
-                    if let Some(caches) = caches.as_deref_mut() {
-                        caches.push(Cache::Bn { xhat, inv_std, h, w });
-                    }
-                }
-                NativeLayer::Relu => {
-                    let mut pos = Vec::new();
-                    if caches.is_some() {
-                        pos = x.iter().map(|&v| v > 0.0).collect();
-                    }
-                    for v in x.iter_mut() {
-                        if *v < 0.0 {
-                            *v = 0.0;
-                        }
-                    }
-                    if let Some(caches) = caches.as_deref_mut() {
-                        caches.push(Cache::Relu { pos });
-                    }
-                }
-                NativeLayer::GlobalAvgPool => {
-                    let plane = h * w;
-                    let mut y = vec![0.0f32; n * c];
-                    for nb in 0..n {
-                        for ch in 0..c {
-                            let base = (nb * c + ch) * plane;
-                            let mut sum = 0.0f64;
-                            for &v in &x[base..base + plane] {
-                                sum += v as f64;
-                            }
-                            y[nb * c + ch] = (sum / plane as f64) as f32;
-                        }
-                    }
-                    if let Some(caches) = caches.as_deref_mut() {
-                        caches.push(Cache::Gap { c, h, w });
-                    }
-                    x = y;
-                    (h, w) = (1, 1);
-                }
-                NativeLayer::Fc(l) => {
-                    let din = c * h * w;
-                    assert_eq!(din, l.din, "FC input dim mismatch");
-                    let mut y = vec![0.0f32; n * l.dout];
-                    for nb in 0..n {
-                        let xin = &x[nb * din..(nb + 1) * din];
-                        for o in 0..l.dout {
-                            let wrow = &l.w[o * din..(o + 1) * din];
-                            let mut acc = l.b[o] as f64;
-                            for d in 0..din {
-                                acc += wrow[d] as f64 * xin[d] as f64;
-                            }
-                            y[nb * l.dout + o] = acc as f32;
-                        }
-                    }
-                    if let Some(caches) = caches.as_deref_mut() {
-                        caches.push(Cache::Fc { x: std::mem::take(&mut x) });
-                    }
-                    x = y;
-                    (c, h, w) = (l.dout, 1, 1);
-                }
-            }
-        }
-        assert_eq!(c * h * w, self.classes, "head output does not match the class count");
-        x
+    /// Name of the active optimizer.
+    pub fn optimizer_name(&self) -> &'static str {
+        self.optimizer.name()
+    }
+
+    /// Full-window conv MACs of one Alg. 1 step, per sample (see
+    /// [`Graph::conv_macs_per_sample`]).
+    pub fn conv_macs_per_sample(&self) -> u64 {
+        self.graph.conv_macs_per_sample()
+    }
+
+    fn executor(&self) -> Executor<'_> {
+        Executor { graph: &self.graph, qcfg: &self.qcfg, threads: self.threads }
     }
 
     /// One full Alg. 1 pass WITHOUT the parameter update: forward,
     /// softmax cross-entropy, backward. Returns `(loss, acc, grads,
     /// audit)` with `grads` laid out exactly like [`Self::state`] — this
-    /// is what the finite-difference gradient check exercises.
+    /// is what the finite-difference gradient checks exercise. The audit
+    /// carries the per-layer stream plus its roll-up totals.
     pub fn loss_and_grads(
         &self,
         images: &[f32],
@@ -476,151 +176,18 @@ impl NativeModel {
         let n = labels.len();
         let mut rng = Pcg32::new(seed as u64, 0x51e9_a1b2);
         let mut audit = StepAudit::default();
-        let mut caches: Vec<Cache> = Vec::with_capacity(self.layers.len());
-        let logits = self.forward_inner(images, n, Some(&mut rng), Some(&mut caches), &mut audit);
+        let mut tape = Tape::default();
+        let ex = self.executor();
+        let logits = ex.forward(images, n, Some(&mut rng), Some(&mut tape), &mut audit);
         let (loss, acc, dlogits) = softmax_ce(&logits, labels, self.classes);
-
-        let mut grads = vec![0.0f32; self.state_len()];
-        let offs = self.param_offsets();
-        let mut g = dlogits;
-        for (li, layer) in self.layers.iter().enumerate().rev() {
-            let cache = caches.pop().expect("one cache per layer");
-            match (layer, cache) {
-                (NativeLayer::Fc(l), Cache::Fc { x }) => {
-                    let gw = &mut grads[offs[li]..offs[li] + l.w.len() + l.b.len()];
-                    for nb in 0..n {
-                        let xin = &x[nb * l.din..(nb + 1) * l.din];
-                        let grow = &g[nb * l.dout..(nb + 1) * l.dout];
-                        for o in 0..l.dout {
-                            let go = grow[o];
-                            for d in 0..l.din {
-                                gw[o * l.din + d] += go * xin[d];
-                            }
-                            gw[l.w.len() + o] += go;
-                        }
-                    }
-                    let mut dx = vec![0.0f32; x.len()];
-                    for nb in 0..n {
-                        let grow = &g[nb * l.dout..(nb + 1) * l.dout];
-                        let drow = &mut dx[nb * l.din..(nb + 1) * l.din];
-                        for o in 0..l.dout {
-                            let go = grow[o];
-                            let wrow = &l.w[o * l.din..(o + 1) * l.din];
-                            for d in 0..l.din {
-                                drow[d] += go * wrow[d];
-                            }
-                        }
-                    }
-                    g = dx;
-                }
-                (NativeLayer::GlobalAvgPool, Cache::Gap { c, h, w }) => {
-                    let plane = h * w;
-                    let mut dx = vec![0.0f32; n * c * plane];
-                    for nb in 0..n {
-                        for ch in 0..c {
-                            let gv = g[nb * c + ch] / plane as f32;
-                            let base = (nb * c + ch) * plane;
-                            for slot in &mut dx[base..base + plane] {
-                                *slot = gv;
-                            }
-                        }
-                    }
-                    g = dx;
-                }
-                (NativeLayer::Relu, Cache::Relu { pos }) => {
-                    for (gv, &p) in g.iter_mut().zip(&pos) {
-                        if !p {
-                            *gv = 0.0;
-                        }
-                    }
-                }
-                (NativeLayer::BatchNorm(l), Cache::Bn { xhat, inv_std, h, w }) => {
-                    let plane = h * w;
-                    let m = (n * plane) as f64;
-                    let gg = &mut grads[offs[li]..offs[li] + 2 * l.c];
-                    for ch in 0..l.c {
-                        let mut sum_dy = 0.0f64;
-                        let mut sum_dy_xhat = 0.0f64;
-                        for nb in 0..n {
-                            let base = (nb * l.c + ch) * plane;
-                            for i in base..base + plane {
-                                sum_dy += g[i] as f64;
-                                sum_dy_xhat += g[i] as f64 * xhat[i] as f64;
-                            }
-                        }
-                        gg[ch] += sum_dy_xhat as f32; // dgamma
-                        gg[l.c + ch] += sum_dy as f32; // dbeta
-                        let scale = l.gamma[ch] as f64 * inv_std[ch] as f64;
-                        let mean_dy = sum_dy / m;
-                        let mean_dy_xhat = sum_dy_xhat / m;
-                        for nb in 0..n {
-                            let base = (nb * l.c + ch) * plane;
-                            for i in base..base + plane {
-                                g[i] = (scale
-                                    * (g[i] as f64 - mean_dy - xhat[i] as f64 * mean_dy_xhat))
-                                    as f32;
-                            }
-                        }
-                    }
-                }
-                (NativeLayer::Conv(l), Cache::Conv { x, h, w, qw, qa }) => {
-                    let spec = l.spec(h, w);
-                    let (ho, wo) = (spec.out_h(), spec.out_w());
-                    let eshape = [n, l.co, ho, wo];
-                    let need_dx = li > 0;
-                    let gw = &mut grads[offs[li]..offs[li] + l.w.len()];
-                    if let (Some(qw), Some(qa)) = (qw, qa) {
-                        // Alg. 1: quantize E once, reuse for both passes
-                        let qe = quantize_dyn(&g, &eshape, &self.qcfg, Some(&mut rng));
-                        let wg = spec.weight_grad(&qe, &qa, self.threads);
-                        audit.wgrad.absorb(&wg);
-                        gw.copy_from_slice(&wg.z);
-                        if need_dx {
-                            let dg = spec.input_grad(&qe, &qw, self.threads);
-                            audit.dgrad.absorb(&dg);
-                            g = dg.z;
-                        } else {
-                            g = Vec::new();
-                        }
-                    } else {
-                        let (wg, _) = conv2d_f32_wgrad(
-                            &g,
-                            eshape,
-                            &x,
-                            [n, l.ci, h, w],
-                            l.stride,
-                            l.pad,
-                            l.k,
-                            l.k,
-                            self.threads,
-                        );
-                        gw.copy_from_slice(&wg);
-                        if need_dx {
-                            let (dg, _) = conv2d_f32_dgrad(
-                                &g,
-                                eshape,
-                                &l.w,
-                                [l.co, l.ci, l.k, l.k],
-                                l.stride,
-                                l.pad,
-                                h,
-                                w,
-                                self.threads,
-                            );
-                            g = dg;
-                        } else {
-                            g = Vec::new();
-                        }
-                    }
-                }
-                _ => unreachable!("cache kind does not match layer kind"),
-            }
-        }
+        let mut grads = vec![0.0f32; self.graph.state_len()];
+        ex.backward(tape, dlogits, n, &mut rng, &mut grads, &mut audit);
+        audit.roll_up();
         (loss, acc, grads, audit)
     }
 
     /// One Alg. 1 training step: [`Self::loss_and_grads`] followed by the
-    /// plain-SGD update `p -= lr * g`.
+    /// optimizer update over the flat state vector.
     pub fn train_step(
         &mut self,
         images: &[f32],
@@ -629,113 +196,28 @@ impl NativeModel {
         seed: i64,
     ) -> NativeStepOutput {
         let (loss, acc, grads, audit) = self.loss_and_grads(images, labels, seed);
-        let offs = self.param_offsets();
-        for (li, layer) in self.layers.iter_mut().enumerate() {
-            let len = layer.param_len();
-            let gs = &grads[offs[li]..offs[li] + len];
-            let mut cursor = 0;
-            let mut update = |p: &mut [f32]| {
-                for (pv, gv) in p.iter_mut().zip(&gs[cursor..cursor + p.len()]) {
-                    *pv -= lr * gv;
-                }
-                cursor += p.len();
-            };
-            match layer {
-                NativeLayer::Conv(c) => update(&mut c.w),
-                NativeLayer::BatchNorm(b) => {
-                    update(&mut b.gamma);
-                    update(&mut b.beta);
-                }
-                NativeLayer::Fc(f) => {
-                    update(&mut f.w);
-                    update(&mut f.b);
-                }
-                _ => {}
-            }
-        }
+        let mut state = self.graph.state();
+        self.optimizer.step(&mut state, &grads, lr);
+        self.graph.load_state(&state).expect("state length is stable");
         NativeStepOutput { loss, acc, audit }
     }
 
     /// Evaluate one batch: forward with deterministic nearest rounding,
-    /// no caches, no parameter changes. Returns `(loss, acc)`.
+    /// no tape, no parameter changes. Returns `(loss, acc)`.
     pub fn eval_batch(&self, images: &[f32], labels: &[i32]) -> (f32, f32) {
         let mut audit = StepAudit::default();
-        let logits = self.forward_inner(images, labels.len(), None, None, &mut audit);
+        let logits = self.executor().forward(images, labels.len(), None, None, &mut audit);
         let (loss, acc, _) = softmax_ce(&logits, labels, self.classes);
         (loss, acc)
     }
 }
 
-/// Builder for the sequential native models.
-struct NativeBuilder {
-    layers: Vec<NativeLayer>,
-    rng: Pcg32,
-    c: usize,
-    h: usize,
-    w: usize,
-}
-
-impl NativeBuilder {
-    fn new(input: (usize, usize, usize), seed: u64) -> Self {
-        NativeBuilder {
-            layers: Vec::new(),
-            rng: Pcg32::new(seed, 0x6e61_7469),
-            c: input.0,
-            h: input.1,
-            w: input.2,
-        }
-    }
-
-    fn conv(&mut self, co: usize, k: usize, stride: usize, pad: usize, quantized: bool) -> &mut Self {
-        let ci = self.c;
-        // He initialization
-        let sigma = (2.0 / (ci * k * k) as f32).sqrt();
-        let w = self.rng.normal_vec(co * ci * k * k, sigma);
-        self.layers.push(NativeLayer::Conv(ConvLayer { w, co, ci, k, stride, pad, quantized }));
-        self.c = co;
-        self.h = (self.h + 2 * pad - k) / stride + 1;
-        self.w = (self.w + 2 * pad - k) / stride + 1;
-        self
-    }
-
-    fn bn(&mut self) -> &mut Self {
-        self.layers.push(NativeLayer::BatchNorm(BnLayer {
-            c: self.c,
-            gamma: vec![1.0; self.c],
-            beta: vec![0.0; self.c],
-            eps: 1e-5,
-        }));
-        self
-    }
-
-    fn relu(&mut self) -> &mut Self {
-        self.layers.push(NativeLayer::Relu);
-        self
-    }
-
-    fn gap(&mut self) -> &mut Self {
-        self.layers.push(NativeLayer::GlobalAvgPool);
-        (self.h, self.w) = (1, 1);
-        self
-    }
-
-    fn fc(&mut self, dout: usize) -> &mut Self {
-        let din = self.c * self.h * self.w;
-        let sigma = (2.0 / din as f32).sqrt();
-        let w = self.rng.normal_vec(dout * din, sigma);
-        self.layers.push(NativeLayer::Fc(FcLayer { din, dout, w, b: vec![0.0; dout] }));
-        self.c = dout;
-        self
-    }
-}
-
-/// Names the native backend can train.
-pub const NATIVE_MODELS: &[&str] = &["cnn_t", "cnn_s"];
-
-/// Build a named native model: `cnn_t` (tiny 4-conv smoke/test net) or
-/// `cnn_s` (the scaled VGG-style model mirroring the artifact zoo's
-/// `cnn_s` layer shapes). The first conv of each stays unquantized; all
-/// later convs run the full Alg. 1 quantized forward/backward under
+/// Build a named native model: `cnn_t` (tiny 4-conv smoke/test net),
+/// `cnn_s` (the scaled VGG-style zoo model) or `resnet_t` (the scaled
+/// residual zoo model, Table II's native grid). The graph is lowered from
+/// the model's analytic zoo twin ([`zoo::native_network`]); the stem conv
+/// stays unquantized; all later convs — including residual 1x1 projection
+/// shortcuts — run the full Alg. 1 quantized forward/backward under
 /// `qcfg`. Initialization is deterministic in `seed`.
 pub fn native_model(name: &str, qcfg: QuantConfig, seed: u64) -> Result<NativeModel> {
     // the integer conv engine requires the paper's (n, c) grouping; catch
@@ -747,36 +229,15 @@ pub fn native_model(name: &str, qcfg: QuantConfig, seed: u64) -> Result<NativeMo
          got {:?} — run grouping ablations on the pjrt backend",
         qcfg.grouping
     );
-    let input = (3usize, 16usize, 16usize);
-    let classes = 10usize;
-    let mut b = NativeBuilder::new(input, seed.wrapping_add(0x9e37_79b9));
-    match name {
-        "cnn_t" => {
-            b.conv(8, 3, 1, 1, false).bn().relu();
-            b.conv(16, 3, 2, 1, true).bn().relu();
-            b.conv(16, 1, 1, 0, true).bn().relu();
-            b.conv(16, 3, 1, 1, true).bn().relu();
-            b.gap().fc(classes);
-        }
-        "cnn_s" => {
-            b.conv(16, 3, 1, 1, false).bn().relu();
-            b.conv(32, 3, 2, 1, true).bn().relu();
-            b.conv(32, 3, 1, 1, true).bn().relu();
-            b.conv(64, 3, 2, 1, true).bn().relu();
-            b.conv(64, 3, 1, 1, true).bn().relu();
-            b.gap().fc(classes);
-        }
-        other => bail!(
-            "model {other:?} is not supported by the native backend (have {NATIVE_MODELS:?}; \
-             use backend=pjrt for the artifact models)"
-        ),
-    }
+    let net = zoo::native_network(name)?;
+    let graph = lower(&net, seed.wrapping_add(0x9e37_79b9))?;
     Ok(NativeModel {
         name: name.to_string(),
-        input,
-        classes,
+        input: net.input,
+        classes: graph.classes,
         qcfg,
-        layers: b.layers,
+        graph,
+        optimizer: Box::new(Sgd::default()),
         threads: parallel::num_threads(),
     })
 }
@@ -803,16 +264,16 @@ mod tests {
         let state = model.state();
         assert_eq!(grads.len(), state.len());
 
-        // sample parameters across every layer kind
+        // sample parameters across every node kind
         let mut idxs: Vec<usize> = Vec::new();
-        let offs = model.param_offsets();
-        for (li, layer) in model.layers.iter().enumerate() {
-            let len = layer.param_len();
+        let offs = model.graph.param_offsets();
+        for (ni, node) in model.graph.nodes.iter().enumerate() {
+            let len = node.param_len();
             if len == 0 {
                 continue;
             }
             for probe in [0, len / 3, len / 2, len - 1] {
-                idxs.push(offs[li] + probe);
+                idxs.push(offs[ni] + probe);
             }
         }
         idxs.dedup();
@@ -847,9 +308,9 @@ mod tests {
         assert!((0.0..=1.0).contains(&out.acc));
         assert_ne!(model.state(), before, "SGD must move the parameters");
 
-        // every quantized conv ran all three passes (none is the first
-        // layer), and Alg. 1 executes the same MAC count in each pass
-        let a = out.audit;
+        // every quantized conv ran all three passes (none reads the graph
+        // input), and Alg. 1 executes the same MAC count in each pass
+        let a = &out.audit;
         assert_eq!(a.forward.convs, 3);
         assert_eq!(a.wgrad.convs, 3);
         assert_eq!(a.dgrad.convs, 3);
@@ -858,6 +319,17 @@ mod tests {
         assert_eq!(a.forward.mul_ops, a.dgrad.mul_ops);
         assert_eq!(a.forward.int_add_ops, a.wgrad.int_add_ops);
         assert!(a.forward.peak_acc_bits >= 1);
+
+        // the audit is a per-layer stream whose roll-up IS the totals
+        assert_eq!(a.layers.len(), 3, "one record per quantized conv");
+        assert_eq!(a.forward.mul_ops, a.layers.iter().map(|l| l.forward.mul_ops).sum::<u64>());
+        assert_eq!(a.wgrad.mul_ops, a.layers.iter().map(|l| l.wgrad.mul_ops).sum::<u64>());
+        assert_eq!(a.dgrad.mul_ops, a.layers.iter().map(|l| l.dgrad.mul_ops).sum::<u64>());
+        for l in &a.layers {
+            assert_eq!(l.forward.convs, 1);
+            assert_eq!(l.forward.mul_ops, l.wgrad.mul_ops, "{}: pass symmetry", l.name);
+            assert_eq!(l.forward.mul_ops, l.dgrad.mul_ops, "{}: pass symmetry", l.name);
+        }
     }
 
     #[test]
@@ -904,5 +376,18 @@ mod tests {
         let first: f32 = losses[..3].iter().sum::<f32>() / 3.0;
         let last: f32 = losses[losses.len() - 3..].iter().sum::<f32>() / 3.0;
         assert!(last < first, "loss did not decrease: {first:.4} -> {last:.4} ({losses:?})");
+    }
+
+    #[test]
+    fn resnet_t_builds_and_steps() {
+        let mut model = native_model("resnet_t", QuantConfig::default(), 1).unwrap();
+        assert_eq!(model.optimizer_name(), "sgd");
+        let (images, labels) = batch(2, 8);
+        let out = model.train_step(&images, &labels, 0.05, 5);
+        assert!(out.loss.is_finite());
+        // 8 quantized convs (stem excluded), all running all three passes
+        assert_eq!(out.audit.layers.len(), 8);
+        assert_eq!(out.audit.forward.convs, 8);
+        assert_eq!(out.audit.dgrad.convs, 8);
     }
 }

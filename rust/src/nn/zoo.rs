@@ -97,6 +97,29 @@ pub fn network(name: &str) -> anyhow::Result<Network> {
     })
 }
 
+/// Models the NATIVE backend can train (each is the lowering of its
+/// analytic twin below; see [`crate::nn::graph::lower`]).
+pub const NATIVE_MODELS: &[&str] = &["cnn_t", "cnn_s", "resnet_t"];
+
+/// The analytic twin of a native-trainable model. Every native model
+/// constructs its executable graph by lowering the `Network` returned
+/// here (`crate::nn::train::native_model`), so the analytic op counts
+/// ([`super::ops::count_training_ops`]) and the executed per-layer audit
+/// stream share a single geometry source. `cnn_t` is the tiny smoke/test
+/// twin (not a paper network, hence not in [`NETWORKS`]); `cnn_s` and
+/// `resnet_t` are the scaled trainable zoo models.
+pub fn native_network(name: &str) -> anyhow::Result<Network> {
+    Ok(match name {
+        "cnn_t" => cnn_t(),
+        "cnn_s" => cnn_s(),
+        "resnet_t" => resnet_t(),
+        other => anyhow::bail!(
+            "model {other:?} is not supported by the native backend (native models: \
+             {NATIVE_MODELS:?}; use backend=pjrt for the artifact models)"
+        ),
+    })
+}
+
 struct B {
     layers: Vec<Layer>,
     c: usize,
@@ -161,7 +184,11 @@ impl B {
         self.conv(cout, 3, 1, true).bn();
         if stride != 1 || cin != cout {
             // projection shortcut (1x1) on the pre-block feature map: its
-            // output geometry equals the block output
+            // output geometry equals the block output. The `s` name
+            // suffix is load-bearing: `nn::graph::plan_blocks` recognizes
+            // projection shortcuts by it when lowering a zoo network to
+            // an executable graph, so main-branch convs must never be
+            // named `conv{n}s`.
             self.layers.push(Layer::Conv {
                 name: format!("conv{}s", self.n),
                 cin,
@@ -304,6 +331,21 @@ fn cnn_s() -> Network {
     Network { name: "cnn_s", input: (3, 16, 16), layers: b.layers }
 }
 
+/// The tiny 4-conv smoke/test model of the native trainer (fp32 3x3
+/// stem, then a strided 3x3, a 1x1 and a 3x3 quantized conv). Not a
+/// paper network — it exists so tests and benches have a cheap twin that
+/// still exercises stride 2, 1x1 kernels and pad 0.
+fn cnn_t() -> Network {
+    let mut b = B::new(3, 16, 16);
+    b.conv(8, 3, 1, false).bn();
+    b.conv(16, 3, 2, true).bn();
+    b.conv(16, 1, 1, true).bn();
+    b.conv(16, 3, 1, true).bn();
+    b.c = 16;
+    b.fc(10);
+    Network { name: "cnn_t", input: (3, 16, 16), layers: b.layers }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -362,6 +404,35 @@ mod tests {
     #[test]
     fn unknown_network_errors() {
         assert!(network("nope").is_err());
+    }
+
+    #[test]
+    fn native_twins_build() {
+        for name in NATIVE_MODELS {
+            let n = native_network(name).unwrap();
+            assert!(!n.layers.is_empty(), "{name}");
+            // the stem is the only unquantized conv everywhere
+            let unq = n
+                .conv_layers()
+                .filter(|l| matches!(l, Layer::Conv { quantized: false, .. }))
+                .count();
+            assert_eq!(unq, 1, "{name}");
+        }
+        // cnn_t: 4 convs, 16x16 input, 10 classes
+        let t = native_network("cnn_t").unwrap();
+        assert_eq!(t.conv_layers().count(), 4);
+        assert_eq!(t.input, (3, 16, 16));
+        // resnet_t twin has its three residual joins
+        let r = native_network("resnet_t").unwrap();
+        let joins = r.layers.iter().filter(|l| matches!(l, Layer::EwAdd { .. })).count();
+        assert_eq!(joins, 3);
+        // unknown names error listing the supported set
+        let err = native_network("resnet20").unwrap_err();
+        let msg = format!("{err:#}");
+        for name in NATIVE_MODELS {
+            assert!(msg.contains(name), "{msg}");
+        }
+        assert!(msg.contains("pjrt"), "{msg}");
     }
 
     #[test]

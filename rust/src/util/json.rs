@@ -141,6 +141,14 @@ impl Json {
         out
     }
 
+    /// Single-line form (no newlines or indentation) — one record per
+    /// line in the `.audit.jsonl` per-layer audit stream.
+    pub fn to_string_compact(&self) -> String {
+        let mut out = String::new();
+        self.write(&mut out, 0, false);
+        out
+    }
+
     fn write(&self, out: &mut String, indent: usize, pretty: bool) {
         match self {
             Json::Null => out.push_str("null"),
@@ -422,6 +430,14 @@ mod tests {
         let v = Json::parse(r#"{"x": [1.5, true, "s"], "y": {"z": []}}"#).unwrap();
         let printed = v.to_string_pretty();
         assert_eq!(Json::parse(&printed).unwrap(), v);
+    }
+
+    #[test]
+    fn compact_is_single_line() {
+        let v = Json::parse(r#"{"x": [1.5, true, "s"], "y": {"z": []}}"#).unwrap();
+        let line = v.to_string_compact();
+        assert!(!line.contains('\n'), "{line:?}");
+        assert_eq!(Json::parse(&line).unwrap(), v);
     }
 
     #[test]

@@ -1,0 +1,710 @@
+//! The PR 5 module-graph redesign must be provably behavior-preserving:
+//! the chain models (`cnn_t`, `cnn_s`) must produce **bit-identical**
+//! per-step losses, gradients, audit counters and parameter updates
+//! before vs after the rewrite.
+//!
+//! This test pins that by carrying a verbatim copy of the PRE-refactor
+//! single-chain trainer (`mod chain` below — the PR 4 `nn/train.rs`
+//! enum-of-layers implementation, trimmed to what the chain models use:
+//! builder, forward, backward, plain SGD) and replaying fixed-seed steps
+//! on both implementations: same init, same batches, same step seeds.
+//! Initial states, per-step losses, accuracies, full gradient vectors,
+//! all per-pass audit counters and post-update states are compared
+//! bit-for-bit, for the fp32 AND the quantized `<2,4>` stochastic-
+//! rounding config.
+
+use mls_train::data::{streams, DatasetConfig, SynthCifar};
+use mls_train::mls::quantizer::QuantConfig;
+use mls_train::nn::train::native_model;
+
+/// Verbatim copy of the PR 4 chain trainer (the pre-refactor
+/// implementation this PR replaced). Kept test-only: its sole purpose is
+/// to prove the module-graph executor reproduces it bit-exactly.
+mod chain {
+    use mls_train::arith::conv::{
+        conv2d_f32_dgrad, conv2d_f32_threaded, conv2d_f32_wgrad, ConvOutput,
+    };
+    use mls_train::arith::spec::ConvSpec;
+    use mls_train::mls::quantizer::{quantize, QuantConfig, Rounding};
+    use mls_train::mls::MlsTensor;
+    use mls_train::util::rng::Pcg32;
+
+    #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+    pub struct Pass {
+        pub convs: u64,
+        pub mul_ops: u64,
+        pub int_add_ops: u64,
+        pub float_add_ops: u64,
+        pub group_scale_ops: u64,
+        pub peak_acc_bits: u32,
+    }
+
+    impl Pass {
+        fn absorb(&mut self, out: &ConvOutput) {
+            self.convs += 1;
+            self.mul_ops += out.mul_ops;
+            self.int_add_ops += out.int_add_ops;
+            self.float_add_ops += out.float_add_ops;
+            self.group_scale_ops += out.group_scale_ops;
+            self.peak_acc_bits = self.peak_acc_bits.max(out.peak_acc_bits);
+        }
+    }
+
+    #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+    pub struct Audit {
+        pub forward: Pass,
+        pub wgrad: Pass,
+        pub dgrad: Pass,
+    }
+
+    pub struct ConvLayer {
+        pub w: Vec<f32>,
+        pub co: usize,
+        pub ci: usize,
+        pub k: usize,
+        pub stride: usize,
+        pub pad: usize,
+        pub quantized: bool,
+    }
+
+    impl ConvLayer {
+        fn spec(&self, h: usize, w: usize) -> ConvSpec {
+            ConvSpec::new(self.stride, self.pad, self.k, self.k, h, w)
+        }
+    }
+
+    pub struct BnLayer {
+        pub c: usize,
+        pub gamma: Vec<f32>,
+        pub beta: Vec<f32>,
+        pub eps: f32,
+    }
+
+    pub struct FcLayer {
+        pub din: usize,
+        pub dout: usize,
+        pub w: Vec<f32>,
+        pub b: Vec<f32>,
+    }
+
+    pub enum NativeLayer {
+        Conv(ConvLayer),
+        BatchNorm(BnLayer),
+        Relu,
+        GlobalAvgPool,
+        Fc(FcLayer),
+    }
+
+    impl NativeLayer {
+        fn param_len(&self) -> usize {
+            match self {
+                NativeLayer::Conv(l) => l.w.len(),
+                NativeLayer::BatchNorm(l) => 2 * l.c,
+                NativeLayer::Fc(l) => l.w.len() + l.b.len(),
+                _ => 0,
+            }
+        }
+    }
+
+    enum Cache {
+        Conv { x: Vec<f32>, h: usize, w: usize, qw: Option<MlsTensor>, qa: Option<MlsTensor> },
+        Bn { xhat: Vec<f32>, inv_std: Vec<f32>, h: usize, w: usize },
+        Relu { pos: Vec<bool> },
+        Gap { c: usize, h: usize, w: usize },
+        Fc { x: Vec<f32> },
+    }
+
+    pub struct ChainModel {
+        pub input: (usize, usize, usize),
+        pub classes: usize,
+        pub qcfg: QuantConfig,
+        pub layers: Vec<NativeLayer>,
+        pub threads: usize,
+    }
+
+    fn quantize_dyn(
+        x: &[f32],
+        shape: &[usize],
+        cfg: &QuantConfig,
+        rng: Option<&mut Pcg32>,
+    ) -> MlsTensor {
+        match (cfg.rounding, rng) {
+            (Rounding::Stochastic, Some(rng)) => {
+                let offsets = rng.rounding_offsets(x.len());
+                quantize(x, shape, cfg, &offsets)
+            }
+            (Rounding::Stochastic, None) => {
+                let nearest = QuantConfig { rounding: Rounding::Nearest, ..*cfg };
+                quantize(x, shape, &nearest, &[])
+            }
+            (Rounding::Nearest, _) => quantize(x, shape, cfg, &[]),
+        }
+    }
+
+    fn softmax_ce(logits: &[f32], labels: &[i32], classes: usize) -> (f32, f32, Vec<f32>) {
+        let n = labels.len();
+        assert_eq!(logits.len(), n * classes, "logit/label shape mismatch");
+        let mut dlogits = vec![0.0f32; n * classes];
+        let mut loss = 0.0f64;
+        let mut correct = 0usize;
+        for (nb, &label) in labels.iter().enumerate() {
+            let label = label as usize;
+            assert!(label < classes, "label {label} out of range");
+            let row = &logits[nb * classes..(nb + 1) * classes];
+            let maxv = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let mut sum = 0.0f64;
+            for &v in row {
+                sum += ((v - maxv) as f64).exp();
+            }
+            let mut best = 0usize;
+            for (k, &v) in row.iter().enumerate() {
+                if v > row[best] {
+                    best = k;
+                }
+                let p = ((v - maxv) as f64).exp() / sum;
+                dlogits[nb * classes + k] =
+                    ((p - if k == label { 1.0 } else { 0.0 }) / n as f64) as f32;
+            }
+            let p_label = ((row[label] - maxv) as f64).exp() / sum;
+            loss -= p_label.max(1e-30).ln();
+            if best == label {
+                correct += 1;
+            }
+        }
+        ((loss / n as f64) as f32, correct as f32 / n as f32, dlogits)
+    }
+
+    impl ChainModel {
+        pub fn state_len(&self) -> usize {
+            self.layers.iter().map(|l| l.param_len()).sum()
+        }
+
+        fn param_offsets(&self) -> Vec<usize> {
+            let mut offs = Vec::with_capacity(self.layers.len());
+            let mut cursor = 0;
+            for l in &self.layers {
+                offs.push(cursor);
+                cursor += l.param_len();
+            }
+            offs
+        }
+
+        pub fn state(&self) -> Vec<f32> {
+            let mut out = Vec::with_capacity(self.state_len());
+            for l in &self.layers {
+                match l {
+                    NativeLayer::Conv(c) => out.extend_from_slice(&c.w),
+                    NativeLayer::BatchNorm(b) => {
+                        out.extend_from_slice(&b.gamma);
+                        out.extend_from_slice(&b.beta);
+                    }
+                    NativeLayer::Fc(f) => {
+                        out.extend_from_slice(&f.w);
+                        out.extend_from_slice(&f.b);
+                    }
+                    _ => {}
+                }
+            }
+            out
+        }
+
+        fn forward_inner(
+            &self,
+            images: &[f32],
+            n: usize,
+            mut rng: Option<&mut Pcg32>,
+            mut caches: Option<&mut Vec<Cache>>,
+            audit: &mut Audit,
+        ) -> Vec<f32> {
+            let (c0, h0, w0) = self.input;
+            assert_eq!(images.len(), n * c0 * h0 * w0, "image batch shape mismatch");
+            let mut x = images.to_vec();
+            let (mut c, mut h, mut w) = (c0, h0, w0);
+            for layer in &self.layers {
+                match layer {
+                    NativeLayer::Conv(l) => {
+                        assert_eq!(c, l.ci, "conv input channel mismatch");
+                        let spec = l.spec(h, w);
+                        let (ho, wo) = (spec.out_h(), spec.out_w());
+                        let (z, qw, qa) = if l.quantized && self.qcfg.enabled {
+                            let qw = quantize_dyn(
+                                &l.w,
+                                &[l.co, l.ci, l.k, l.k],
+                                &self.qcfg,
+                                rng.as_deref_mut(),
+                            );
+                            let qa =
+                                quantize_dyn(&x, &[n, c, h, w], &self.qcfg, rng.as_deref_mut());
+                            let out = spec.forward(&qw, &qa, self.threads);
+                            audit.forward.absorb(&out);
+                            (out.z, Some(qw), Some(qa))
+                        } else {
+                            let (z, _) = conv2d_f32_threaded(
+                                &l.w,
+                                [l.co, l.ci, l.k, l.k],
+                                &x,
+                                [n, c, h, w],
+                                l.stride,
+                                l.pad,
+                                self.threads,
+                            );
+                            (z, None, None)
+                        };
+                        if let Some(caches) = caches.as_deref_mut() {
+                            let xf =
+                                if qa.is_some() { Vec::new() } else { std::mem::take(&mut x) };
+                            caches.push(Cache::Conv { x: xf, h, w, qw, qa });
+                        }
+                        x = z;
+                        (c, h, w) = (l.co, ho, wo);
+                    }
+                    NativeLayer::BatchNorm(l) => {
+                        assert_eq!(c, l.c, "BN channel mismatch");
+                        let m = (n * h * w) as f64;
+                        let plane = h * w;
+                        let mut xhat = vec![0.0f32; x.len()];
+                        let mut inv_std = vec![0.0f32; c];
+                        for ch in 0..c {
+                            let mut sum = 0.0f64;
+                            let mut sq = 0.0f64;
+                            for nb in 0..n {
+                                let base = (nb * c + ch) * plane;
+                                for &v in &x[base..base + plane] {
+                                    sum += v as f64;
+                                    sq += v as f64 * v as f64;
+                                }
+                            }
+                            let mean = sum / m;
+                            let var = (sq / m - mean * mean).max(0.0);
+                            let inv = 1.0 / (var + l.eps as f64).sqrt();
+                            inv_std[ch] = inv as f32;
+                            let (g, b) = (l.gamma[ch], l.beta[ch]);
+                            for nb in 0..n {
+                                let base = (nb * c + ch) * plane;
+                                for i in base..base + plane {
+                                    let xh = ((x[i] as f64 - mean) * inv) as f32;
+                                    xhat[i] = xh;
+                                    x[i] = g * xh + b;
+                                }
+                            }
+                        }
+                        if let Some(caches) = caches.as_deref_mut() {
+                            caches.push(Cache::Bn { xhat, inv_std, h, w });
+                        }
+                    }
+                    NativeLayer::Relu => {
+                        let mut pos = Vec::new();
+                        if caches.is_some() {
+                            pos = x.iter().map(|&v| v > 0.0).collect();
+                        }
+                        for v in x.iter_mut() {
+                            if *v < 0.0 {
+                                *v = 0.0;
+                            }
+                        }
+                        if let Some(caches) = caches.as_deref_mut() {
+                            caches.push(Cache::Relu { pos });
+                        }
+                    }
+                    NativeLayer::GlobalAvgPool => {
+                        let plane = h * w;
+                        let mut y = vec![0.0f32; n * c];
+                        for nb in 0..n {
+                            for ch in 0..c {
+                                let base = (nb * c + ch) * plane;
+                                let mut sum = 0.0f64;
+                                for &v in &x[base..base + plane] {
+                                    sum += v as f64;
+                                }
+                                y[nb * c + ch] = (sum / plane as f64) as f32;
+                            }
+                        }
+                        if let Some(caches) = caches.as_deref_mut() {
+                            caches.push(Cache::Gap { c, h, w });
+                        }
+                        x = y;
+                        (h, w) = (1, 1);
+                    }
+                    NativeLayer::Fc(l) => {
+                        let din = c * h * w;
+                        assert_eq!(din, l.din, "FC input dim mismatch");
+                        let mut y = vec![0.0f32; n * l.dout];
+                        for nb in 0..n {
+                            let xin = &x[nb * din..(nb + 1) * din];
+                            for o in 0..l.dout {
+                                let wrow = &l.w[o * din..(o + 1) * din];
+                                let mut acc = l.b[o] as f64;
+                                for d in 0..din {
+                                    acc += wrow[d] as f64 * xin[d] as f64;
+                                }
+                                y[nb * l.dout + o] = acc as f32;
+                            }
+                        }
+                        if let Some(caches) = caches.as_deref_mut() {
+                            caches.push(Cache::Fc { x: std::mem::take(&mut x) });
+                        }
+                        x = y;
+                        (c, h, w) = (l.dout, 1, 1);
+                    }
+                }
+            }
+            assert_eq!(c * h * w, self.classes, "head output does not match the class count");
+            x
+        }
+
+        pub fn loss_and_grads(
+            &self,
+            images: &[f32],
+            labels: &[i32],
+            seed: i64,
+        ) -> (f32, f32, Vec<f32>, Audit) {
+            let n = labels.len();
+            let mut rng = Pcg32::new(seed as u64, 0x51e9_a1b2);
+            let mut audit = Audit::default();
+            let mut caches: Vec<Cache> = Vec::with_capacity(self.layers.len());
+            let logits =
+                self.forward_inner(images, n, Some(&mut rng), Some(&mut caches), &mut audit);
+            let (loss, acc, dlogits) = softmax_ce(&logits, labels, self.classes);
+
+            let mut grads = vec![0.0f32; self.state_len()];
+            let offs = self.param_offsets();
+            let mut g = dlogits;
+            for (li, layer) in self.layers.iter().enumerate().rev() {
+                let cache = caches.pop().expect("one cache per layer");
+                match (layer, cache) {
+                    (NativeLayer::Fc(l), Cache::Fc { x }) => {
+                        let gw = &mut grads[offs[li]..offs[li] + l.w.len() + l.b.len()];
+                        for nb in 0..n {
+                            let xin = &x[nb * l.din..(nb + 1) * l.din];
+                            let grow = &g[nb * l.dout..(nb + 1) * l.dout];
+                            for o in 0..l.dout {
+                                let go = grow[o];
+                                for d in 0..l.din {
+                                    gw[o * l.din + d] += go * xin[d];
+                                }
+                                gw[l.w.len() + o] += go;
+                            }
+                        }
+                        let mut dx = vec![0.0f32; x.len()];
+                        for nb in 0..n {
+                            let grow = &g[nb * l.dout..(nb + 1) * l.dout];
+                            let drow = &mut dx[nb * l.din..(nb + 1) * l.din];
+                            for o in 0..l.dout {
+                                let go = grow[o];
+                                let wrow = &l.w[o * l.din..(o + 1) * l.din];
+                                for d in 0..l.din {
+                                    drow[d] += go * wrow[d];
+                                }
+                            }
+                        }
+                        g = dx;
+                    }
+                    (NativeLayer::GlobalAvgPool, Cache::Gap { c, h, w }) => {
+                        let plane = h * w;
+                        let mut dx = vec![0.0f32; n * c * plane];
+                        for nb in 0..n {
+                            for ch in 0..c {
+                                let gv = g[nb * c + ch] / plane as f32;
+                                let base = (nb * c + ch) * plane;
+                                for slot in &mut dx[base..base + plane] {
+                                    *slot = gv;
+                                }
+                            }
+                        }
+                        g = dx;
+                    }
+                    (NativeLayer::Relu, Cache::Relu { pos }) => {
+                        for (gv, &p) in g.iter_mut().zip(&pos) {
+                            if !p {
+                                *gv = 0.0;
+                            }
+                        }
+                    }
+                    (NativeLayer::BatchNorm(l), Cache::Bn { xhat, inv_std, h, w }) => {
+                        let plane = h * w;
+                        let m = (n * plane) as f64;
+                        let gg = &mut grads[offs[li]..offs[li] + 2 * l.c];
+                        for ch in 0..l.c {
+                            let mut sum_dy = 0.0f64;
+                            let mut sum_dy_xhat = 0.0f64;
+                            for nb in 0..n {
+                                let base = (nb * l.c + ch) * plane;
+                                for i in base..base + plane {
+                                    sum_dy += g[i] as f64;
+                                    sum_dy_xhat += g[i] as f64 * xhat[i] as f64;
+                                }
+                            }
+                            gg[ch] += sum_dy_xhat as f32; // dgamma
+                            gg[l.c + ch] += sum_dy as f32; // dbeta
+                            let scale = l.gamma[ch] as f64 * inv_std[ch] as f64;
+                            let mean_dy = sum_dy / m;
+                            let mean_dy_xhat = sum_dy_xhat / m;
+                            for nb in 0..n {
+                                let base = (nb * l.c + ch) * plane;
+                                for i in base..base + plane {
+                                    g[i] = (scale
+                                        * (g[i] as f64
+                                            - mean_dy
+                                            - xhat[i] as f64 * mean_dy_xhat))
+                                        as f32;
+                                }
+                            }
+                        }
+                    }
+                    (NativeLayer::Conv(l), Cache::Conv { x, h, w, qw, qa }) => {
+                        let spec = l.spec(h, w);
+                        let (ho, wo) = (spec.out_h(), spec.out_w());
+                        let eshape = [n, l.co, ho, wo];
+                        let need_dx = li > 0;
+                        let gw = &mut grads[offs[li]..offs[li] + l.w.len()];
+                        if let (Some(qw), Some(qa)) = (qw, qa) {
+                            let qe = quantize_dyn(&g, &eshape, &self.qcfg, Some(&mut rng));
+                            let wg = spec.weight_grad(&qe, &qa, self.threads);
+                            audit.wgrad.absorb(&wg);
+                            gw.copy_from_slice(&wg.z);
+                            if need_dx {
+                                let dg = spec.input_grad(&qe, &qw, self.threads);
+                                audit.dgrad.absorb(&dg);
+                                g = dg.z;
+                            } else {
+                                g = Vec::new();
+                            }
+                        } else {
+                            let (wg, _) = conv2d_f32_wgrad(
+                                &g,
+                                eshape,
+                                &x,
+                                [n, l.ci, h, w],
+                                l.stride,
+                                l.pad,
+                                l.k,
+                                l.k,
+                                self.threads,
+                            );
+                            gw.copy_from_slice(&wg);
+                            if need_dx {
+                                let (dg, _) = conv2d_f32_dgrad(
+                                    &g,
+                                    eshape,
+                                    &l.w,
+                                    [l.co, l.ci, l.k, l.k],
+                                    l.stride,
+                                    l.pad,
+                                    h,
+                                    w,
+                                    self.threads,
+                                );
+                                g = dg;
+                            } else {
+                                g = Vec::new();
+                            }
+                        }
+                    }
+                    _ => unreachable!("cache kind does not match layer kind"),
+                }
+            }
+            (loss, acc, grads, audit)
+        }
+
+        /// The historical step: loss_and_grads + the inlined plain-SGD
+        /// update `p -= lr * g`.
+        pub fn train_step(&mut self, images: &[f32], labels: &[i32], lr: f32, seed: i64) -> f32 {
+            let (loss, _, grads, _) = self.loss_and_grads(images, labels, seed);
+            let offs = self.param_offsets();
+            for (li, layer) in self.layers.iter_mut().enumerate() {
+                let len = layer.param_len();
+                let gs = &grads[offs[li]..offs[li] + len];
+                let mut cursor = 0;
+                let mut update = |p: &mut [f32]| {
+                    for (pv, gv) in p.iter_mut().zip(&gs[cursor..cursor + p.len()]) {
+                        *pv -= lr * gv;
+                    }
+                    cursor += p.len();
+                };
+                match layer {
+                    NativeLayer::Conv(c) => update(&mut c.w),
+                    NativeLayer::BatchNorm(b) => {
+                        update(&mut b.gamma);
+                        update(&mut b.beta);
+                    }
+                    NativeLayer::Fc(f) => {
+                        update(&mut f.w);
+                        update(&mut f.b);
+                    }
+                    _ => {}
+                }
+            }
+            loss
+        }
+    }
+
+    /// The historical chain builder (verbatim init: same RNG stream, same
+    /// He sigmas, same draw order).
+    struct Builder {
+        layers: Vec<NativeLayer>,
+        rng: Pcg32,
+        c: usize,
+        h: usize,
+        w: usize,
+    }
+
+    impl Builder {
+        fn new(input: (usize, usize, usize), seed: u64) -> Self {
+            Builder {
+                layers: Vec::new(),
+                rng: Pcg32::new(seed, 0x6e61_7469),
+                c: input.0,
+                h: input.1,
+                w: input.2,
+            }
+        }
+
+        fn conv(
+            &mut self,
+            co: usize,
+            k: usize,
+            stride: usize,
+            pad: usize,
+            quantized: bool,
+        ) -> &mut Self {
+            let ci = self.c;
+            let sigma = (2.0 / (ci * k * k) as f32).sqrt();
+            let w = self.rng.normal_vec(co * ci * k * k, sigma);
+            self.layers
+                .push(NativeLayer::Conv(ConvLayer { w, co, ci, k, stride, pad, quantized }));
+            self.c = co;
+            self.h = (self.h + 2 * pad - k) / stride + 1;
+            self.w = (self.w + 2 * pad - k) / stride + 1;
+            self
+        }
+
+        fn bn(&mut self) -> &mut Self {
+            self.layers.push(NativeLayer::BatchNorm(BnLayer {
+                c: self.c,
+                gamma: vec![1.0; self.c],
+                beta: vec![0.0; self.c],
+                eps: 1e-5,
+            }));
+            self
+        }
+
+        fn relu(&mut self) -> &mut Self {
+            self.layers.push(NativeLayer::Relu);
+            self
+        }
+
+        fn gap(&mut self) -> &mut Self {
+            self.layers.push(NativeLayer::GlobalAvgPool);
+            (self.h, self.w) = (1, 1);
+            self
+        }
+
+        fn fc(&mut self, dout: usize) -> &mut Self {
+            let din = self.c * self.h * self.w;
+            let sigma = (2.0 / din as f32).sqrt();
+            let w = self.rng.normal_vec(dout * din, sigma);
+            self.layers.push(NativeLayer::Fc(FcLayer { din, dout, w, b: vec![0.0; dout] }));
+            self.c = dout;
+            self
+        }
+    }
+
+    pub fn build(name: &str, qcfg: QuantConfig, seed: u64) -> ChainModel {
+        let input = (3usize, 16usize, 16usize);
+        let classes = 10usize;
+        let mut b = Builder::new(input, seed.wrapping_add(0x9e37_79b9));
+        match name {
+            "cnn_t" => {
+                b.conv(8, 3, 1, 1, false).bn().relu();
+                b.conv(16, 3, 2, 1, true).bn().relu();
+                b.conv(16, 1, 1, 0, true).bn().relu();
+                b.conv(16, 3, 1, 1, true).bn().relu();
+                b.gap().fc(classes);
+            }
+            "cnn_s" => {
+                b.conv(16, 3, 1, 1, false).bn().relu();
+                b.conv(32, 3, 2, 1, true).bn().relu();
+                b.conv(32, 3, 1, 1, true).bn().relu();
+                b.conv(64, 3, 2, 1, true).bn().relu();
+                b.conv(64, 3, 1, 1, true).bn().relu();
+                b.gap().fc(classes);
+            }
+            other => panic!("chain reference has no model {other:?}"),
+        }
+        ChainModel { input, classes, qcfg, layers: b.layers, threads: 2 }
+    }
+}
+
+fn assert_bits_eq(a: &[f32], b: &[f32], tag: &str) {
+    assert_eq!(a.len(), b.len(), "{tag}: length");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{tag}[{i}]: {x:?} vs {y:?}");
+    }
+}
+
+fn check_model(name: &str, cfg_name: &str, steps: u64, batch: usize) {
+    let qcfg = QuantConfig::parse_name(cfg_name).unwrap();
+    let seed = 9u64;
+    let mut legacy = chain::build(name, qcfg, seed);
+    let mut modern = native_model(name, qcfg, seed).unwrap();
+    modern.set_threads(2);
+    assert_bits_eq(&legacy.state(), &modern.state(), &format!("{name}/{cfg_name}: init state"));
+
+    let ds = SynthCifar::new(DatasetConfig {
+        noise: 1.0,
+        label_noise: 0.0,
+        seed: 5,
+        ..Default::default()
+    });
+    for step in 0..steps {
+        let (images, labels) = ds.batch(batch, streams::TRAIN, step);
+        let sseed = 31 + step as i64;
+        let tag = format!("{name}/{cfg_name} step {step}");
+
+        // the full pass without update: loss, acc, gradients, audit
+        let (l_old, a_old, g_old, audit_old) = legacy.loss_and_grads(&images, &labels, sseed);
+        let (l_new, a_new, g_new, audit_new) = modern.loss_and_grads(&images, &labels, sseed);
+        assert_eq!(l_old.to_bits(), l_new.to_bits(), "{tag}: loss");
+        assert_eq!(a_old.to_bits(), a_new.to_bits(), "{tag}: acc");
+        assert_bits_eq(&g_old, &g_new, &format!("{tag}: grads"));
+        for (pass, old, new) in [
+            ("forward", audit_old.forward, audit_new.forward),
+            ("wgrad", audit_old.wgrad, audit_new.wgrad),
+            ("dgrad", audit_old.dgrad, audit_new.dgrad),
+        ] {
+            assert_eq!(old.convs, new.convs, "{tag}: {pass} convs");
+            assert_eq!(old.mul_ops, new.mul_ops, "{tag}: {pass} mul_ops");
+            assert_eq!(old.int_add_ops, new.int_add_ops, "{tag}: {pass} int_add_ops");
+            assert_eq!(old.float_add_ops, new.float_add_ops, "{tag}: {pass} float_add_ops");
+            assert_eq!(old.group_scale_ops, new.group_scale_ops, "{tag}: {pass} group_scale_ops");
+            assert_eq!(old.peak_acc_bits, new.peak_acc_bits, "{tag}: {pass} peak_acc_bits");
+        }
+
+        // the update: the historical inlined SGD vs the Optimizer trait
+        let loss_old = legacy.train_step(&images, &labels, 0.05, sseed);
+        let out = modern.train_step(&images, &labels, 0.05, sseed);
+        assert_eq!(loss_old.to_bits(), out.loss.to_bits(), "{tag}: step loss");
+        assert_bits_eq(&legacy.state(), &modern.state(), &format!("{tag}: post-update state"));
+    }
+}
+
+#[test]
+fn cnn_t_quantized_is_bit_identical_to_chain_trainer() {
+    check_model("cnn_t", "e2m4_gnc_eg8mg1_sr", 3, 4);
+}
+
+#[test]
+fn cnn_t_fp32_is_bit_identical_to_chain_trainer() {
+    check_model("cnn_t", "fp32", 2, 4);
+}
+
+#[test]
+fn cnn_t_e2m1_is_bit_identical_to_chain_trainer() {
+    // the aggressive <2,1> format exercises different rounding paths
+    check_model("cnn_t", "e2m1_gnc_eg8mg1_sr", 2, 4);
+}
+
+#[test]
+fn cnn_s_quantized_is_bit_identical_to_chain_trainer() {
+    check_model("cnn_s", "e2m4_gnc_eg8mg1_sr", 2, 4);
+}

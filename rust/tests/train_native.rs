@@ -1,9 +1,18 @@
 //! End-to-end tests of the NATIVE training backend: `coordinator::train`
 //! with `backend=native` must complete multi-step Alg. 1 low-bit training
 //! runs on synthetic CIFAR with finite, decreasing loss — no PJRT, no
-//! artifacts, no Python — and stay deterministic in the seed.
+//! artifacts, no Python — stay deterministic in the seed, and (since
+//! PR 5) cover the residual module-graph model `resnet_t`: gradient
+//! checks through the skip-add fan-in (identity AND 1x1-projection
+//! shortcuts), full-step bit-identity across {1, 2, 8} worker threads,
+//! the per-layer audit stream, the pluggable optimizer, and the up-front
+//! config validation errors.
 
 use mls_train::coordinator::{trainer, Backend, TrainConfig};
+use mls_train::data::{streams, DatasetConfig, SynthCifar};
+use mls_train::mls::quantizer::QuantConfig;
+use mls_train::nn::train::{native_model, Op};
+use mls_train::util::json::Json;
 
 fn native_config(cfg_name: &str, steps: u64) -> TrainConfig {
     let mut c = TrainConfig::default();
@@ -30,6 +39,16 @@ fn assert_loss_decreases(r: &trainer::TrainResult, tag: &str) {
     let first: f64 = r.metrics.steps[..3].iter().map(|s| s.loss as f64).sum::<f64>() / 3.0;
     let last = r.metrics.final_loss(3);
     assert!(last < first, "{tag}: loss did not decrease ({first:.4} -> {last:.4})");
+}
+
+fn batch(n: usize, seed: u64) -> (Vec<f32>, Vec<i32>) {
+    let ds = SynthCifar::new(DatasetConfig {
+        noise: 1.0,
+        label_noise: 0.0,
+        seed,
+        ..Default::default()
+    });
+    ds.batch(n, streams::TRAIN, 0)
 }
 
 #[test]
@@ -92,12 +111,245 @@ fn native_train_dispatches_through_coordinator_train() {
     assert!(r.metrics.steps.iter().all(|s| s.loss.is_finite()));
 }
 
+// ---------------------------------------------------------------------------
+// resnet_t: the residual module-graph model
+// ---------------------------------------------------------------------------
+
+#[test]
+fn native_resnet_t_quantized_training_reduces_loss() {
+    let mut c = native_config("e2m4_gnc_eg8mg1_sr", 12);
+    c.model = "resnet_t".to_string();
+    let r = trainer::train_native(&c).unwrap();
+    assert_loss_decreases(&r, "resnet_t e2m4");
+    assert_eq!(r.metrics.steps.len(), 12);
+}
+
+#[test]
+fn resnet_t_step_is_bit_identical_across_thread_counts() {
+    let (images, labels) = batch(8, 21);
+    let run = |threads: usize| {
+        let mut m = native_model("resnet_t", QuantConfig::default(), 3).unwrap();
+        m.set_threads(threads);
+        let out = m.train_step(&images, &labels, 0.05, 11);
+        (out.loss.to_bits(), out.audit, m.state())
+    };
+    let (l1, a1, s1) = run(1);
+    for t in [2usize, 8] {
+        let (lt, at, st) = run(t);
+        assert_eq!(l1, lt, "t{t}: loss");
+        assert_eq!(a1, at, "t{t}: audit (per-layer stream + totals)");
+        assert_eq!(s1.len(), st.len());
+        for (i, (a, b)) in s1.iter().zip(&st).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "t{t}: state[{i}]");
+        }
+    }
+}
+
+#[test]
+fn resnet_gradient_check_through_residual_joins() {
+    // fp32 config: the whole step is differentiable, so analytic grads
+    // must match central finite differences THROUGH the skip-add fan-in —
+    // for the identity-shortcut block (block 1) and both 1x1-projection
+    // shortcuts (blocks 2, 3).
+    let mut model = native_model("resnet_t", QuantConfig::fp32(), 5).unwrap();
+    model.set_threads(1);
+    let (images, labels) = batch(2, 13);
+    let (loss, _, grads, _) = model.loss_and_grads(&images, &labels, 3);
+    assert!(loss.is_finite());
+    let state = model.state();
+
+    // probe every conv (stem, block convs, projection shortcuts), one BN
+    // and the FC head
+    let offs = model.graph.param_offsets();
+    let mut idxs: Vec<usize> = Vec::new();
+    let mut probed_projection = false;
+    for (ni, node) in model.graph.nodes.iter().enumerate() {
+        let len = node.param_len();
+        if len == 0 {
+            continue;
+        }
+        let probes: &[usize] = match &node.op {
+            Op::Conv(_) => {
+                if node.name.ends_with('s') {
+                    probed_projection = true;
+                }
+                &[0, 1, 2]
+            }
+            _ => &[0],
+        };
+        for &p in probes {
+            idxs.push(offs[ni] + (p * len.max(3) / 3).min(len - 1));
+        }
+    }
+    idxs.sort_unstable();
+    idxs.dedup();
+    assert!(probed_projection, "the probe set must cover a projection shortcut");
+
+    let eps = 3e-3f64;
+    for &i in &idxs {
+        let mut sp = state.clone();
+        sp[i] = (state[i] as f64 + eps) as f32;
+        model.load_state(&sp).unwrap();
+        let (lp, _, _, _) = model.loss_and_grads(&images, &labels, 3);
+        sp[i] = (state[i] as f64 - eps) as f32;
+        model.load_state(&sp).unwrap();
+        let (lm, _, _, _) = model.loss_and_grads(&images, &labels, 3);
+        let fd = (lp as f64 - lm as f64) / (2.0 * eps);
+        let an = grads[i] as f64;
+        let tol = (an.abs().max(fd.abs()).max(1e-2)) * 0.08;
+        assert!(
+            (fd - an).abs() <= tol,
+            "param {i}: analytic {an:.6e} vs finite-diff {fd:.6e} (tol {tol:.2e})"
+        );
+    }
+    model.load_state(&state).unwrap();
+}
+
+#[test]
+fn per_layer_audit_stream_rolls_up_to_totals() {
+    let mut m = native_model("resnet_t", QuantConfig::default(), 2).unwrap();
+    let (images, labels) = batch(4, 17);
+    let out = m.train_step(&images, &labels, 0.05, 7);
+    let a = &out.audit;
+
+    // 8 quantized convs: 2 (block 1) + 3 (block 2, incl projection) + 3
+    // (block 3, incl projection); the fp32 stem is not audited
+    assert_eq!(a.layers.len(), 8, "one record per quantized conv node");
+    assert!(a.layers.iter().any(|l| l.name.ends_with('s')), "projection shortcuts audited");
+    assert_eq!(a.forward.convs, 8);
+    assert_eq!(a.wgrad.convs, 8);
+    assert_eq!(a.dgrad.convs, 8, "every quantized conv computes an input gradient");
+
+    // the stream sums EXACTLY to the step totals (max for peak bits)
+    macro_rules! check_pass {
+        ($pass:ident) => {
+            assert_eq!(a.$pass.mul_ops, a.layers.iter().map(|l| l.$pass.mul_ops).sum::<u64>());
+            assert_eq!(
+                a.$pass.int_add_ops,
+                a.layers.iter().map(|l| l.$pass.int_add_ops).sum::<u64>()
+            );
+            assert_eq!(
+                a.$pass.float_add_ops,
+                a.layers.iter().map(|l| l.$pass.float_add_ops).sum::<u64>()
+            );
+            assert_eq!(
+                a.$pass.group_scale_ops,
+                a.layers.iter().map(|l| l.$pass.group_scale_ops).sum::<u64>()
+            );
+            assert_eq!(
+                a.$pass.peak_acc_bits,
+                a.layers.iter().map(|l| l.$pass.peak_acc_bits).max().unwrap()
+            );
+        };
+    }
+    check_pass!(forward);
+    check_pass!(wgrad);
+    check_pass!(dgrad);
+
+    // Alg. 1 pass symmetry holds per layer, not just in aggregate
+    for l in &a.layers {
+        assert!(l.forward.mul_ops > 0, "{}", l.name);
+        assert_eq!(l.forward.mul_ops, l.wgrad.mul_ops, "{}: fwd vs wgrad", l.name);
+        assert_eq!(l.forward.mul_ops, l.dgrad.mul_ops, "{}: fwd vs dgrad", l.name);
+    }
+}
+
+#[test]
+fn audit_stream_written_to_out_dir() {
+    let dir = std::env::temp_dir().join("mls_audit_stream_test");
+    let _ = std::fs::remove_dir_all(&dir);
+    let mut c = native_config("e2m4_gnc_eg8mg1_sr", 2);
+    c.batch = 4;
+    c.out_dir = Some(dir.to_string_lossy().into_owned());
+    trainer::train_native(&c).unwrap();
+    let tag = format!("{}_{}_s{}", c.model, c.cfg_name, c.seed);
+    let text = std::fs::read_to_string(dir.join(format!("{tag}.audit.jsonl"))).unwrap();
+    let lines: Vec<&str> = text.lines().filter(|l| !l.is_empty()).collect();
+    assert_eq!(lines.len(), 2, "one record per step");
+    for (i, line) in lines.iter().enumerate() {
+        let v = Json::parse(line).unwrap_or_else(|e| panic!("line {i}: {e}"));
+        assert_eq!(v.get("audit").and_then(Json::as_str), Some("train_step"));
+        assert_eq!(v.get("model").and_then(Json::as_str), Some("cnn_t"));
+        assert_eq!(v.get("step").and_then(Json::as_f64), Some(i as f64));
+        let layers = v.get("layers").unwrap().as_arr().unwrap();
+        assert_eq!(layers.len(), 3, "cnn_t has 3 quantized convs");
+        // totals equal the sum of the per-layer stream in the JSON too
+        let sum: f64 = layers
+            .iter()
+            .map(|l| l.get("forward").unwrap().get("mul_ops").unwrap().as_f64().unwrap())
+            .sum();
+        let total = v
+            .get("totals")
+            .unwrap()
+            .get("forward")
+            .unwrap()
+            .get("mul_ops")
+            .unwrap()
+            .as_f64()
+            .unwrap();
+        assert_eq!(sum, total);
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+// ---------------------------------------------------------------------------
+// optimizer plumbing
+// ---------------------------------------------------------------------------
+
+#[test]
+fn momentum_optimizer_trains_and_differs_from_sgd() {
+    let mut cm = native_config("fp32", 10);
+    cm.optimizer = "momentum".to_string();
+    let rm = trainer::train_native(&cm).unwrap();
+    assert_loss_decreases(&rm, "momentum");
+
+    let cs = native_config("fp32", 10);
+    let rs = trainer::train_native(&cs).unwrap();
+    assert_eq!(rm.final_state.len(), rs.final_state.len());
+    assert_ne!(rm.final_state, rs.final_state, "momentum must change the trajectory");
+}
+
+// ---------------------------------------------------------------------------
+// up-front config validation
+// ---------------------------------------------------------------------------
+
 #[test]
 fn unsupported_native_model_errors_clearly() {
     let mut c = native_config("fp32", 1);
-    c.model = "resnet_t".to_string();
+    c.model = "resnet20".to_string(); // a zoo network, but not native-trainable
     let err = trainer::train_native(&c).unwrap_err();
     let msg = format!("{err:#}");
     assert!(msg.contains("native"), "{msg}");
     assert!(msg.contains("pjrt"), "{msg}");
+    for name in ["cnn_t", "cnn_s", "resnet_t"] {
+        assert!(msg.contains(name), "must list {name}: {msg}");
+    }
+}
+
+#[test]
+fn unsupported_grouping_errors_up_front() {
+    let mut c = native_config("e2m4_gf_eg8mg1_sr", 1);
+    let err = trainer::train_native(&c).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("grouping"), "{msg}");
+    assert!(msg.contains("pjrt"), "{msg}");
+}
+
+#[test]
+fn unknown_optimizer_errors_up_front() {
+    let mut c = native_config("fp32", 1);
+    c.optimizer = "adam".to_string(); // bypasses the set() guard on purpose
+    let err = trainer::train_native(&c).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("sgd") && msg.contains("momentum"), "{msg}");
+}
+
+#[test]
+fn validate_native_config_accepts_all_native_models() {
+    for model in ["cnn_t", "cnn_s", "resnet_t"] {
+        let mut c = native_config("e2m4_gnc_eg8mg1_sr", 1);
+        c.model = model.to_string();
+        trainer::validate_native_config(&c)
+            .unwrap_or_else(|e| panic!("{model} must validate: {e:#}"));
+    }
 }

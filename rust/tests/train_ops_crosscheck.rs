@@ -26,7 +26,7 @@ use mls_train::data::{streams, DatasetConfig, SynthCifar};
 use mls_train::mls::quantizer::QuantConfig;
 use mls_train::nn::ops::count_training_ops;
 use mls_train::nn::train::native_model;
-use mls_train::nn::zoo::{Layer, Network};
+use mls_train::nn::zoo::{native_network, Layer};
 
 /// The quantized conv layers of `cnn_t`:
 /// (ci, co, k, stride, pad, hin, win, ho, wo). The first (fp32) conv is
@@ -66,45 +66,33 @@ fn inbounds_taps(
     axis(hin, ho) * axis(win, wo)
 }
 
-/// The zoo twin of `cnn_t`, so `count_training_ops` sees the same shapes
-/// the native model executes.
-fn cnn_t_network() -> Network {
-    let mut layers = vec![Layer::Conv {
-        name: "c0".to_string(),
-        cin: 3,
-        cout: 8,
-        k: 3,
-        stride: 1,
-        h: 16,
-        w: 16,
-        hin: 16,
-        win: 16,
-        quantized: false,
-    }];
-    layers.push(Layer::BatchNorm { c: 8, h: 16, w: 16 });
-    for (i, &(ci, co, k, stride, _pad, hin, win, ho, wo)) in QCONVS.iter().enumerate() {
-        layers.push(Layer::Conv {
-            name: format!("c{}", i + 1),
-            cin: ci,
-            cout: co,
-            k,
-            stride,
-            h: ho,
-            w: wo,
-            hin,
-            win,
-            quantized: true,
-        });
-        layers.push(Layer::BatchNorm { c: co, h: ho, w: wo });
-    }
-    layers.push(Layer::Fc { din: 16, dout: 10 });
-    Network { name: "cnn_t", input: (3, 16, 16), layers }
+/// The quantized conv shapes of the zoo twin of a native model, as
+/// `(ci, co, k, stride, pad, hin, win, ho, wo)` tuples — the native graph
+/// is LOWERED from this twin (`zoo::native_network` ->
+/// `nn::graph::lower`), so these are by construction the shapes the
+/// native model executes ("same" padding: `pad = (k - 1) / 2`).
+fn quantized_convs(model: &str) -> Vec<(usize, usize, usize, usize, usize, usize, usize, usize, usize)> {
+    native_network(model)
+        .unwrap()
+        .layers
+        .iter()
+        .filter_map(|l| match l {
+            Layer::Conv { cin, cout, k, stride, h, w, hin, win, quantized: true, .. } => {
+                Some((*cin, *cout, *k, *stride, (*k - 1) / 2, *hin, *win, *h, *w))
+            }
+            _ => None,
+        })
+        .collect()
 }
 
 #[test]
 fn executed_audit_counters_match_analytic_model() {
     let batch = 4usize;
     let b = batch as u64;
+
+    // the zoo twin's quantized conv shapes must be the pinned QCONVS set
+    // (the lowering executes exactly these)
+    assert_eq!(quantized_convs("cnn_t"), QCONVS.to_vec());
 
     // one native Alg. 1 step (nearest rounding: determinism is free)
     let mut cfg = QuantConfig::default();
@@ -149,7 +137,7 @@ fn executed_audit_counters_match_analytic_model() {
     );
 
     // ---- against count_training_ops (per-sample, 3 passes/layer) ----
-    let net = cnn_t_network();
+    let net = native_network("cnn_t").unwrap();
     let t = count_training_ops(&net, batch);
     let analytic_fwd_macs: f64 = QCONVS
         .iter()
@@ -218,4 +206,59 @@ fn executed_audit_counters_match_analytic_model() {
     let expect_dq_err: f64 =
         QCONVS.iter().map(|&(_, co, _, _, _, _, _, ho, wo)| (co * ho * wo) as f64).sum();
     assert_eq!(t.dq_err_elements, expect_dq_err);
+}
+
+#[test]
+fn resnet_executed_macs_match_geometry() {
+    // the residual model's executed counters obey the same geometric
+    // in-bounds tap law as the chain — including the 1x1 projection
+    // shortcuts, which are clip-free (pad 0) — and the three passes stay
+    // exactly equal per Alg. 1.
+    let batch = 2usize;
+    let b = batch as u64;
+    let qconvs = quantized_convs("resnet_t");
+    assert_eq!(qconvs.len(), 8, "stem excluded; 2 + 3 + 3 quantized convs");
+
+    let mut expect_macs = 0u64;
+    for &(ci, co, k, stride, pad, hin, win, ho, wo) in &qconvs {
+        expect_macs += b * (ci * co) as u64 * inbounds_taps(k, stride, pad, hin, win, ho, wo);
+    }
+
+    let mut cfg = QuantConfig::default();
+    cfg.rounding = mls_train::mls::Rounding::Nearest;
+    let mut model = native_model("resnet_t", cfg, 0).expect("resnet_t builds");
+    let ds = SynthCifar::new(DatasetConfig::default());
+    let (images, labels) = ds.batch(batch, streams::TRAIN, 0);
+    let out = model.train_step(&images, &labels, 0.01, 1);
+    assert!(out.loss.is_finite());
+    let audit = out.audit;
+
+    assert_eq!(audit.forward.mul_ops, expect_macs, "executed fwd MACs != geometric tap count");
+    assert_eq!(audit.wgrad.mul_ops, expect_macs, "executed wgrad MACs != geometric tap count");
+    assert_eq!(audit.dgrad.mul_ops, expect_macs, "executed dgrad MACs != geometric tap count");
+
+    // the analytic model counts the same conv set full-window, 3 passes
+    let net = native_network("resnet_t").unwrap();
+    let t = count_training_ops(&net, batch);
+    let full_window: f64 = qconvs
+        .iter()
+        .map(|&(ci, co, k, _, _, _, _, ho, wo)| (ci * co * k * k * ho * wo) as f64)
+        .sum();
+    assert_eq!(t.conv_macs_quantized, 3.0 * full_window);
+    assert!(audit.forward.mul_ops as f64 <= full_window * b as f64);
+    assert!(
+        audit.forward.mul_ops as f64 >= 0.84 * full_window * b as f64,
+        "clipping fraction implausible"
+    );
+    // the twin counts the residual joins the executed Add nodes implement
+    let ewadds: f64 = net
+        .layers
+        .iter()
+        .map(|l| match l {
+            Layer::EwAdd { c, h, w } => (c * h * w) as f64,
+            _ => 0.0,
+        })
+        .sum();
+    assert_eq!(t.ewadd_elements, ewadds);
+    assert!(t.ewadd_elements > 0.0);
 }

@@ -1,12 +1,15 @@
 #!/usr/bin/env python3
-"""Validate a BENCH_*.json bench report against its checked-in schema.
+"""Validate a BENCH_*.json / AUDIT_*.json report against its checked-in
+schema.
 
 Stdlib-only (CI's build-test job has no pip step), implementing the JSON
-Schema subset the bench schemas use: type, const, required, properties,
-additionalProperties (as a sub-schema), minProperties, minimum,
-exclusiveMinimum. A malformed bench report — missing ratio, empty results
-block, non-positive throughput — fails the build instead of silently
-shipping in the bench-trajectory artifact.
+Schema subset the bench/audit schemas use: type, const, required,
+properties, additionalProperties (as a sub-schema), minProperties,
+minimum, exclusiveMinimum, and for arrays minItems + items (as a
+sub-schema applied to every element — the per-layer audit stream's
+`layers` array needs it). A malformed report — missing ratio, empty
+results block, non-positive throughput, empty audit stream — fails the
+build instead of silently shipping in the bench-trajectory artifact.
 
 Usage: validate_bench.py <report.json> <schema.json>
 """
@@ -39,6 +42,15 @@ def check(value, schema, path, errors):
         errors.append(f"{path}: {value} < minimum {schema['minimum']}")
     if "exclusiveMinimum" in schema and value <= schema["exclusiveMinimum"]:
         errors.append(f"{path}: {value} <= exclusiveMinimum {schema['exclusiveMinimum']}")
+    if isinstance(value, list):
+        if "minItems" in schema and len(value) < schema["minItems"]:
+            errors.append(
+                f"{path}: has {len(value)} items, needs >= {schema['minItems']}"
+            )
+        items = schema.get("items")
+        if isinstance(items, dict):
+            for idx, sub in enumerate(value):
+                check(sub, items, f"{path}[{idx}]", errors)
     if isinstance(value, dict):
         for key in schema.get("required", []):
             if key not in value:
