@@ -1,11 +1,29 @@
-//! Run configuration: defaults + `key=value` overrides (CLI or file).
+//! Run configuration: one TYPED KEY REGISTRY shared by every surface.
 //!
-//! The format is a flat `key=value` list (one per line in a file, or
-//! repeated `--set key=value` on the CLI) — dependency-free and diffable.
+//! Every config key is declared exactly once in [`CONFIG_KEYS`] — name,
+//! docstring, default, renderer and parser — and everything else derives
+//! from that single declaration:
+//!
+//! * `--set key=value` on the CLI ([`TrainConfig::set`]) and key=value
+//!   config files ([`TrainConfig::load_file`]),
+//! * the per-subcommand `--help` key table ([`help_table`]),
+//! * the JSON round trip ([`TrainConfig::to_json`] /
+//!   [`TrainConfig::from_json`]) that the lab runner
+//!   ([`crate::coordinator::lab`]) uses for plan expansion,
+//!   `trial_input.json` and crash-resume validation,
+//! * the unknown-key error, which lists every valid key with its default
+//!   and docstring (so a typo is self-diagnosing).
+//!
+//! Enum-valued keys delegate to their own name registries
+//! ([`Backend::ALL`], [`crate::mls::Grouping::ALL`],
+//! [`crate::mls::Rounding::ALL`], [`crate::nn::optim::OPTIMIZERS`]), each
+//! of which parses by scanning the same array its `name()` reads from —
+//! the supported-name listings cannot drift from what parses.
 
 use anyhow::{anyhow, Result};
 
 use crate::data::DatasetConfig;
+use crate::util::json::Json;
 
 /// Learning-rate schedule: the paper's step decay (x0.1 at milestones).
 #[derive(Clone, Debug, PartialEq)]
@@ -35,11 +53,13 @@ pub enum Backend {
 }
 
 impl Backend {
+    /// Every supported backend; [`Self::parse`] scans this list so the
+    /// parseable set cannot drift from the `name()` outputs.
+    pub const ALL: [Backend; 2] = [Backend::Native, Backend::Pjrt];
+
     pub fn parse(s: &str) -> Result<Backend> {
-        Ok(match s {
-            "native" => Backend::Native,
-            "pjrt" => Backend::Pjrt,
-            _ => anyhow::bail!("unknown backend {s:?} (have \"native\", \"pjrt\")"),
+        Self::ALL.into_iter().find(|b| b.name() == s).ok_or_else(|| {
+            anyhow!("unknown backend {s:?} (have {:?})", Self::ALL.map(|b| b.name()))
         })
     }
 
@@ -52,7 +72,7 @@ impl Backend {
 }
 
 /// One training run.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct TrainConfig {
     pub model: String,
     /// quant config name as in the manifest (e.g. "e2m4_gnc_eg8mg1_sr", "fp32")
@@ -99,44 +119,298 @@ impl Default for TrainConfig {
     }
 }
 
+/// One config key: its name, docstring, default, renderer and parser.
+/// The registry ([`CONFIG_KEYS`]) is the ONLY place a key is declared;
+/// `set`/`get`/`to_json`/`from_json`/`help_table` all iterate it.
+pub struct KeySpec {
+    pub key: &'static str,
+    /// one-line help text (what the key does + accepted values)
+    pub doc: &'static str,
+    /// render the default value (what `--help` shows)
+    pub default: fn() -> String,
+    /// render the current value (what `to_json` writes)
+    pub get: fn(&TrainConfig) -> String,
+    /// parse and apply one value (what `--set`/`from_json` call)
+    pub set: fn(&mut TrainConfig, &str) -> Result<()>,
+}
+
+/// Accepted spellings that map onto a registry key (kept for CLI
+/// back-compat; the canonical key is what `to_json` emits).
+pub const KEY_ALIASES: &[(&str, &str)] = &[("cfg_name", "cfg")];
+
+/// The typed config key registry — every [`TrainConfig`] key, declared
+/// once. Order is the `--help` / `to_json` display order.
+pub static CONFIG_KEYS: &[KeySpec] = &[
+    KeySpec {
+        key: "model",
+        doc: "model to train (native: cnn_t | cnn_s | resnet_t; pjrt: manifest models)",
+        default: || TrainConfig::default().model,
+        get: |c| c.model.clone(),
+        set: |c, v| {
+            c.model = v.to_string();
+            Ok(())
+        },
+    },
+    KeySpec {
+        key: "cfg",
+        doc: "quant config name in QuantConfig::name() form (e.g. e2m4_gnc_eg8mg1_sr) or fp32",
+        default: || TrainConfig::default().cfg_name,
+        get: |c| c.cfg_name.clone(),
+        set: |c, v| {
+            // every accepted name must parse as a quantizer config (the
+            // manifest names use the same scheme), so typos fail here
+            // with the registry listing instead of mid-run
+            crate::mls::quantizer::QuantConfig::parse_name(v)?;
+            c.cfg_name = v.to_string();
+            Ok(())
+        },
+    },
+    KeySpec {
+        key: "backend",
+        doc: "execution backend: native | pjrt",
+        default: || TrainConfig::default().backend.name().to_string(),
+        get: |c| c.backend.name().to_string(),
+        set: |c, v| {
+            c.backend = Backend::parse(v)?;
+            Ok(())
+        },
+    },
+    KeySpec {
+        key: "steps",
+        doc: "number of training steps",
+        default: || TrainConfig::default().steps.to_string(),
+        get: |c| c.steps.to_string(),
+        set: |c, v| {
+            c.steps = v.parse()?;
+            Ok(())
+        },
+    },
+    KeySpec {
+        key: "batch",
+        doc: "native-backend batch size (pjrt batch is baked into the artifact)",
+        default: || TrainConfig::default().batch.to_string(),
+        get: |c| c.batch.to_string(),
+        set: |c, v| {
+            c.batch = v.parse()?;
+            Ok(())
+        },
+    },
+    KeySpec {
+        key: "eval_every",
+        doc: "run a validation eval every N steps (0 = never)",
+        default: || TrainConfig::default().eval_every.to_string(),
+        get: |c| c.eval_every.to_string(),
+        set: |c, v| {
+            c.eval_every = v.parse()?;
+            Ok(())
+        },
+    },
+    KeySpec {
+        key: "eval_batches",
+        doc: "batches per validation/test eval",
+        default: || TrainConfig::default().eval_batches.to_string(),
+        get: |c| c.eval_batches.to_string(),
+        set: |c, v| {
+            c.eval_batches = v.parse()?;
+            Ok(())
+        },
+    },
+    KeySpec {
+        key: "lr",
+        doc: "base learning rate of the step-decay schedule",
+        default: || TrainConfig::default().lr.base.to_string(),
+        get: |c| c.lr.base.to_string(),
+        set: |c, v| {
+            c.lr.base = v.parse()?;
+            Ok(())
+        },
+    },
+    KeySpec {
+        key: "milestones",
+        doc: "comma-separated steps at which lr decays x0.1 (empty = no decay)",
+        default: || render_milestones(&TrainConfig::default().lr.milestones),
+        get: |c| render_milestones(&c.lr.milestones),
+        set: |c, v| {
+            c.lr.milestones = v
+                .split(',')
+                .filter(|s| !s.is_empty())
+                .map(|s| s.parse().map_err(|e| anyhow!("milestone {s:?}: {e}")))
+                .collect::<Result<Vec<u64>>>()?;
+            Ok(())
+        },
+    },
+    KeySpec {
+        key: "optimizer",
+        doc: "native-backend parameter-update rule: sgd | momentum",
+        default: || TrainConfig::default().optimizer,
+        get: |c| c.optimizer.clone(),
+        set: |c, v| {
+            anyhow::ensure!(
+                crate::nn::optim::OPTIMIZERS.contains(&v),
+                "unknown optimizer {v:?} (have {:?})",
+                crate::nn::optim::OPTIMIZERS
+            );
+            c.optimizer = v.to_string();
+            Ok(())
+        },
+    },
+    KeySpec {
+        key: "momentum",
+        doc: "momentum coefficient (used when optimizer=momentum)",
+        default: || TrainConfig::default().momentum.to_string(),
+        get: |c| c.momentum.to_string(),
+        set: |c, v| {
+            c.momentum = v.parse()?;
+            Ok(())
+        },
+    },
+    KeySpec {
+        key: "weight_decay",
+        doc: "L2 weight decay folded into the gradient (0 = off)",
+        default: || TrainConfig::default().weight_decay.to_string(),
+        get: |c| c.weight_decay.to_string(),
+        set: |c, v| {
+            c.weight_decay = v.parse()?;
+            Ok(())
+        },
+    },
+    KeySpec {
+        key: "seed",
+        doc: "run seed: parameter init, data order and stochastic rounding",
+        default: || TrainConfig::default().seed.to_string(),
+        get: |c| c.seed.to_string(),
+        set: |c, v| {
+            c.seed = v.parse()?;
+            Ok(())
+        },
+    },
+    KeySpec {
+        key: "noise",
+        doc: "synthetic-dataset additive noise sigma (task difficulty)",
+        default: || TrainConfig::default().data.noise.to_string(),
+        get: |c| c.data.noise.to_string(),
+        set: |c, v| {
+            c.data.noise = v.parse()?;
+            Ok(())
+        },
+    },
+    KeySpec {
+        key: "label_noise",
+        doc: "synthetic-dataset wrong-label probability (error floor)",
+        default: || TrainConfig::default().data.label_noise.to_string(),
+        get: |c| c.data.label_noise.to_string(),
+        set: |c, v| {
+            c.data.label_noise = v.parse()?;
+            Ok(())
+        },
+    },
+    KeySpec {
+        key: "data_seed",
+        doc: "synthetic-dataset template seed (class templates + batches)",
+        default: || TrainConfig::default().data.seed.to_string(),
+        get: |c| c.data.seed.to_string(),
+        set: |c, v| {
+            c.data.seed = v.parse()?;
+            Ok(())
+        },
+    },
+    KeySpec {
+        key: "out_dir",
+        doc: "metrics CSV / checkpoint / audit-stream output directory (empty = no files)",
+        default: || TrainConfig::default().out_dir.unwrap_or_default(),
+        get: |c| c.out_dir.clone().unwrap_or_default(),
+        set: |c, v| {
+            c.out_dir = if v.is_empty() { None } else { Some(v.to_string()) };
+            Ok(())
+        },
+    },
+];
+
+fn render_milestones(m: &[u64]) -> String {
+    m.iter().map(|v| v.to_string()).collect::<Vec<_>>().join(",")
+}
+
+/// Resolve a key through [`KEY_ALIASES`] to its canonical registry name.
+pub fn canonical_key(key: &str) -> &str {
+    KEY_ALIASES
+        .iter()
+        .find(|(alias, _)| *alias == key)
+        .map(|(_, canon)| *canon)
+        .unwrap_or(key)
+}
+
+/// Look up a key's [`KeySpec`] (aliases resolved).
+pub fn key_spec(key: &str) -> Option<&'static KeySpec> {
+    let canon = canonical_key(key);
+    CONFIG_KEYS.iter().find(|s| s.key == canon)
+}
+
+/// The full valid-key listing (key, default, docstring) — the
+/// per-subcommand `--help` table and the tail of every unknown-key error.
+pub fn help_table() -> String {
+    let mut out = String::from("config keys (--set key=value; [default] shown):\n");
+    for s in CONFIG_KEYS {
+        out.push_str(&format!("  {:<13} {:<22} {}\n", s.key, format!("[{}]", (s.default)()), s.doc));
+    }
+    out
+}
+
 impl TrainConfig {
-    /// Apply one `key=value` override.
+    /// Apply one `key=value` override (the CLI `--set` form).
     pub fn set(&mut self, kv: &str) -> Result<()> {
         let (k, v) = kv
             .split_once('=')
             .ok_or_else(|| anyhow!("override must be key=value, got {kv:?}"))?;
-        match k {
-            "model" => self.model = v.to_string(),
-            "cfg" | "cfg_name" => self.cfg_name = v.to_string(),
-            "backend" => self.backend = Backend::parse(v)?,
-            "batch" => self.batch = v.parse()?,
-            "steps" => self.steps = v.parse()?,
-            "eval_every" => self.eval_every = v.parse()?,
-            "eval_batches" => self.eval_batches = v.parse()?,
-            "lr" => self.lr.base = v.parse()?,
-            "optimizer" => {
-                anyhow::ensure!(
-                    crate::nn::optim::OPTIMIZERS.contains(&v),
-                    "unknown optimizer {v:?} (have {:?})",
-                    crate::nn::optim::OPTIMIZERS
-                );
-                self.optimizer = v.to_string()
-            }
-            "momentum" => self.momentum = v.parse()?,
-            "weight_decay" => self.weight_decay = v.parse()?,
-            "milestones" => {
-                self.lr.milestones = v
-                    .split(',')
-                    .filter(|s| !s.is_empty())
-                    .map(|s| s.parse().map_err(|e| anyhow!("milestone {s:?}: {e}")))
-                    .collect::<Result<Vec<u64>>>()?
-            }
-            "seed" => self.seed = v.parse()?,
-            "noise" => self.data.noise = v.parse()?,
-            "label_noise" => self.data.label_noise = v.parse()?,
-            "data_seed" => self.data.seed = v.parse()?,
-            "out_dir" => self.out_dir = Some(v.to_string()),
-            _ => anyhow::bail!("unknown config key {k:?}"),
+        self.set_key(k, v)
+    }
+
+    /// Apply one override through the key registry. Unknown keys are
+    /// rejected with the full valid-key listing.
+    pub fn set_key(&mut self, key: &str, value: &str) -> Result<()> {
+        let spec = key_spec(key)
+            .ok_or_else(|| anyhow!("unknown config key {key:?}\n{}", help_table()))?;
+        (spec.set)(self, value).map_err(|e| e.context(format!("config key {}={value:?}", spec.key)))
+    }
+
+    /// Render one key's current value (aliases resolved).
+    pub fn get_key(&self, key: &str) -> Option<String> {
+        key_spec(key).map(|s| (s.get)(self))
+    }
+
+    /// The fully-resolved config as a JSON object: every registry key,
+    /// rendered by its own `get`. This is what the lab runner writes into
+    /// `trial_input.json` and compares for crash-resume validation;
+    /// [`Self::from_json`] inverts it exactly (round-trip pinned in the
+    /// tests below).
+    pub fn to_json(&self) -> Json {
+        let mut m = std::collections::BTreeMap::new();
+        for s in CONFIG_KEYS {
+            m.insert(s.key.to_string(), Json::Str((s.get)(self)));
+        }
+        Json::Obj(m)
+    }
+
+    /// Build a config from a JSON object of overrides over the defaults.
+    /// Values may be JSON strings, numbers or booleans (coerced through
+    /// their registry parser); unknown keys are rejected with the full
+    /// valid-key listing.
+    pub fn from_json(v: &Json) -> Result<TrainConfig> {
+        let mut c = TrainConfig::default();
+        c.apply_json(v)?;
+        Ok(c)
+    }
+
+    /// Apply a JSON object of overrides onto `self` (see
+    /// [`Self::from_json`]).
+    pub fn apply_json(&mut self, v: &Json) -> Result<()> {
+        let obj = v
+            .as_obj()
+            .ok_or_else(|| anyhow!("config overrides must be a JSON object of key: value"))?;
+        for (k, val) in obj {
+            let s = val.coerce_string().ok_or_else(|| {
+                anyhow!("config key {k:?}: value must be a scalar (string/number/bool), got {val:?}")
+            })?;
+            self.set_key(k, &s)?;
         }
         Ok(())
     }
@@ -180,6 +454,80 @@ mod tests {
         assert!((c.data.noise - 0.7).abs() < 1e-6);
         assert!(c.set("bogus=1").is_err());
         assert!(c.set("nokey").is_err());
+        // the cfg_name alias still works and maps onto "cfg"
+        c.set("cfg_name=e2m1_gnc_eg8mg1_sr").unwrap();
+        assert_eq!(c.cfg_name, "e2m1_gnc_eg8mg1_sr");
+        assert_eq!(c.get_key("cfg_name"), Some("e2m1_gnc_eg8mg1_sr".to_string()));
+    }
+
+    #[test]
+    fn unknown_key_error_lists_every_registry_key() {
+        let mut c = TrainConfig::default();
+        let msg = format!("{:#}", c.set("bogus=1").unwrap_err());
+        assert!(msg.contains("unknown config key \"bogus\""), "{msg}");
+        for s in CONFIG_KEYS {
+            assert!(msg.contains(s.key), "listing must contain {:?}: {msg}", s.key);
+            assert!(msg.contains(s.doc), "listing must contain the doc of {:?}", s.key);
+        }
+    }
+
+    #[test]
+    fn every_registry_key_get_set_round_trips() {
+        // self-consistency of the registry: defaults render as the
+        // default config's gets, and feeding any get back through set is
+        // the identity — the property to_json/from_json relies on
+        let c = TrainConfig::default();
+        for s in CONFIG_KEYS {
+            assert_eq!((s.default)(), (s.get)(&c), "default of {:?}", s.key);
+            let mut c2 = c.clone();
+            (s.set)(&mut c2, &(s.get)(&c)).unwrap_or_else(|e| panic!("{}: {e:#}", s.key));
+            assert_eq!(c2, c, "set(get()) must be the identity for {:?}", s.key);
+        }
+    }
+
+    #[test]
+    fn json_round_trip_is_exact() {
+        let mut c = TrainConfig::default();
+        c.set("model=resnet_t").unwrap();
+        c.set("cfg=e2m1_gnc_eg8mg1_sr").unwrap();
+        c.set("steps=77").unwrap();
+        c.set("milestones=").unwrap();
+        c.set("optimizer=momentum").unwrap();
+        c.set("momentum=0.85").unwrap();
+        c.set("weight_decay=0.0005").unwrap();
+        c.set("noise=1.25").unwrap();
+        c.set("out_dir=runs/x").unwrap();
+        let j = c.to_json();
+        let back = TrainConfig::from_json(&j).unwrap();
+        assert_eq!(back, c);
+        assert_eq!(back.to_json(), j, "second trip is stable");
+        // defaults round-trip too (incl. out_dir = None)
+        let d = TrainConfig::default();
+        assert_eq!(TrainConfig::from_json(&d.to_json()).unwrap(), d);
+    }
+
+    #[test]
+    fn apply_json_coerces_scalars_and_rejects_unknown() {
+        let v = Json::parse(r#"{"steps": 12, "lr": 0.125, "model": "cnn_t"}"#).unwrap();
+        let c = TrainConfig::from_json(&v).unwrap();
+        assert_eq!(c.steps, 12);
+        assert_eq!(c.model, "cnn_t");
+        assert!((c.lr.base - 0.125).abs() < 1e-9);
+        let bad = Json::parse(r#"{"stepz": 12}"#).unwrap();
+        let msg = format!("{:#}", TrainConfig::from_json(&bad).unwrap_err());
+        assert!(msg.contains("stepz") && msg.contains("steps"), "{msg}");
+        let nonscalar = Json::parse(r#"{"steps": [1, 2]}"#).unwrap();
+        assert!(TrainConfig::from_json(&nonscalar).is_err());
+    }
+
+    #[test]
+    fn cfg_values_are_validated_at_set_time() {
+        let mut c = TrainConfig::default();
+        c.set("cfg=fp32").unwrap();
+        c.set("cfg=e0m2_gnc_eg8mg1_sr").unwrap();
+        let msg = format!("{:#}", c.set("cfg=e2m4_gx_eg8mg1_sr").unwrap_err());
+        assert!(msg.contains("gnc"), "token listing expected: {msg}");
+        assert_eq!(c.cfg_name, "e0m2_gnc_eg8mg1_sr", "rejected value must not stick");
     }
 
     #[test]
@@ -211,6 +559,17 @@ mod tests {
         c.set("batch=8").unwrap();
         assert_eq!(c.batch, 8);
         assert_eq!(Backend::parse("pjrt").unwrap().name(), "pjrt");
+    }
+
+    #[test]
+    fn backend_registry_round_trips_and_lists() {
+        for b in Backend::ALL {
+            assert_eq!(Backend::parse(b.name()).unwrap(), b);
+        }
+        let msg = format!("{:#}", Backend::parse("tpu").unwrap_err());
+        for b in Backend::ALL {
+            assert!(msg.contains(b.name()), "{msg}");
+        }
     }
 
     #[test]

@@ -1,0 +1,937 @@
+//! The declarative lab runner: resumable experiment plans over the typed
+//! config registry (`mls-train lab run plan.json`).
+//!
+//! A **plan** is a JSON grid spec — named override axes (each axis a
+//! registry key with a list of values) × seeds — expanded deterministically
+//! into **trials**: fully-resolved [`TrainConfig`]s with stable ids. Each
+//! trial owns one directory under the run dir:
+//!
+//! ```text
+//!   <out>/<plan-name>/
+//!     plan.json                      # provenance copy of the parsed plan
+//!     t000__cnn_t__fp32__s0/
+//!       trial_input.json             # resolved config + ids (before running)
+//!       cnn_t_fp32_s0.csv            # metrics CSV (trainer output)
+//!       cnn_t_fp32_s0.state.bin      # final parameters
+//!       cnn_t_fp32_s0.audit.jsonl    # per-step audit stream (quantized runs)
+//!       trial_output.json            # curves + rolled-up audit + checksum
+//!     ...
+//!     analysis/ranked.jsonl          # one ranked record per trial
+//!     analysis/tables.md             # best-format-per-model + bitwidth frontier
+//! ```
+//!
+//! The runner is **crash-resumable**: a re-run skips every trial whose
+//! existing `trial_output.json` parses, carries the plan/trial ids, echoes
+//! the exact resolved config, and has the full result shape
+//! (`schemas/trial_output.schema.json`); anything else — missing, truncated
+//! mid-bytes, stale config — re-executes. Trials are deterministic in
+//! their seeds, so a re-executed trial reproduces its output bit-for-bit
+//! (everything except the wall-clock `timing` object; pinned by
+//! `rust/tests/lab_runner.rs`).
+//!
+//! Everything here is stdlib-only, like the rest of the crate: the plan
+//! parser sits on [`crate::util::json`], the trials run the native
+//! Alg. 1 trainer ([`trainer::train_native`]), and the analysis step is
+//! plain sorting + aggregation.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::time::Instant;
+
+use anyhow::{anyhow, ensure, Context, Result};
+
+use super::config::{Backend, TrainConfig};
+use super::trainer::{self, TrainResult};
+use crate::mls::quantizer::QuantConfig;
+use crate::nn::train::state_checksum;
+use crate::util::json::Json;
+
+// ---------------------------------------------------------------------------
+// Plan spec
+// ---------------------------------------------------------------------------
+
+/// A parsed plan: fixed base overrides, named grid axes, seeds. Axes are
+/// held sorted by key (JSON object order), values in file order — the
+/// expansion is a pure function of the file contents.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Plan {
+    pub name: String,
+    /// fixed `key=value` overrides applied to every trial, sorted by key
+    pub base: Vec<(String, String)>,
+    /// grid axes: (registry key, values), sorted by key; the LAST axis
+    /// varies fastest in the expansion
+    pub grid: Vec<(String, Vec<String>)>,
+    /// seeds swept innermost (faster than every grid axis)
+    pub seeds: Vec<u64>,
+}
+
+/// Keys a plan may not override: the runner owns them per trial.
+const RESERVED_KEYS: &[&str] = &["seed", "out_dir"];
+
+fn scalar_string(key: &str, v: &Json) -> Result<String> {
+    v.coerce_string()
+        .ok_or_else(|| anyhow!("plan key {key:?}: values must be scalars, got {v:?}"))
+}
+
+impl Plan {
+    /// Parse a plan from its JSON form (`schemas/plan.schema.json`):
+    /// required `name` + `grid`; optional `base`, and `seeds` (explicit
+    /// list) or `repeats` (N ⇒ seeds 0..N), default one trial per grid
+    /// point at seed 0. Unknown top-level keys and reserved/unknown
+    /// config keys are rejected up front.
+    pub fn from_json(v: &Json) -> Result<Plan> {
+        let obj = v.as_obj().ok_or_else(|| anyhow!("plan must be a JSON object"))?;
+        for k in obj.keys() {
+            ensure!(
+                ["name", "base", "grid", "seeds", "repeats"].contains(&k.as_str()),
+                "unknown plan key {k:?} (have name, base, grid, seeds, repeats)"
+            );
+        }
+        let name = v.req("name")?.as_str().ok_or_else(|| anyhow!("plan name must be a string"))?;
+        ensure!(!name.is_empty(), "plan name must be non-empty");
+        ensure!(
+            name.chars().all(|c| c.is_ascii_alphanumeric() || c == '_' || c == '-'),
+            "plan name {name:?} must be [A-Za-z0-9_-] (it becomes the run directory)"
+        );
+
+        let mut base = Vec::new();
+        if let Some(b) = v.get("base") {
+            let bo = b.as_obj().ok_or_else(|| anyhow!("plan base must be an object"))?;
+            for (k, val) in bo {
+                check_plan_key(k)?;
+                base.push((k.clone(), scalar_string(k, val)?));
+            }
+        }
+
+        let go = v
+            .req("grid")?
+            .as_obj()
+            .ok_or_else(|| anyhow!("plan grid must be an object of key: [values]"))?;
+        ensure!(!go.is_empty(), "plan grid must have at least one axis");
+        let mut grid = Vec::new();
+        for (k, vals) in go {
+            check_plan_key(k)?;
+            ensure!(
+                !base.iter().any(|(bk, _)| bk == k),
+                "plan key {k:?} appears in both base and grid"
+            );
+            let arr = vals
+                .as_arr()
+                .ok_or_else(|| anyhow!("plan grid axis {k:?} must be an array of values"))?;
+            ensure!(!arr.is_empty(), "plan grid axis {k:?} must be non-empty");
+            let vals: Vec<String> =
+                arr.iter().map(|x| scalar_string(k, x)).collect::<Result<_>>()?;
+            grid.push((k.clone(), vals));
+        }
+
+        ensure!(
+            !(obj.contains_key("seeds") && obj.contains_key("repeats")),
+            "plan may set seeds or repeats, not both"
+        );
+        let seeds = if let Some(s) = v.get("seeds") {
+            let arr = s.as_arr().ok_or_else(|| anyhow!("plan seeds must be an array"))?;
+            ensure!(!arr.is_empty(), "plan seeds must be non-empty");
+            arr.iter()
+                .map(|x| {
+                    x.as_f64()
+                        .filter(|n| n.fract() == 0.0 && *n >= 0.0)
+                        .map(|n| n as u64)
+                        .ok_or_else(|| anyhow!("plan seeds must be non-negative integers, got {x:?}"))
+                })
+                .collect::<Result<Vec<u64>>>()?
+        } else if let Some(r) = v.get("repeats") {
+            let n = r
+                .as_f64()
+                .filter(|n| n.fract() == 0.0 && *n >= 1.0)
+                .ok_or_else(|| anyhow!("plan repeats must be a positive integer, got {r:?}"))?
+                as u64;
+            (0..n).collect()
+        } else {
+            vec![0]
+        };
+
+        Ok(Plan { name: name.to_string(), base, grid, seeds })
+    }
+
+    /// Load a plan file.
+    pub fn load(path: &Path) -> Result<Plan> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading plan {}", path.display()))?;
+        let v = Json::parse(&text).map_err(|e| anyhow!("{}: {e}", path.display()))?;
+        Plan::from_json(&v).with_context(|| format!("plan {}", path.display()))
+    }
+
+    /// The normalized plan as JSON (the provenance copy written into the
+    /// run directory; `Plan::from_json(to_json(p)) == p`).
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("name".to_string(), Json::Str(self.name.clone()));
+        if !self.base.is_empty() {
+            let b = self.base.iter().map(|(k, v)| (k.clone(), Json::Str(v.clone()))).collect();
+            m.insert("base".to_string(), Json::Obj(b));
+        }
+        let g = self
+            .grid
+            .iter()
+            .map(|(k, vals)| {
+                (k.clone(), Json::Arr(vals.iter().map(|v| Json::Str(v.clone())).collect()))
+            })
+            .collect();
+        m.insert("grid".to_string(), Json::Obj(g));
+        m.insert(
+            "seeds".to_string(),
+            Json::Arr(self.seeds.iter().map(|s| Json::Num(*s as f64)).collect()),
+        );
+        Json::Obj(m)
+    }
+
+    /// Deterministic expansion into fully-resolved trials: the grid
+    /// odometer (last axis fastest) with seeds innermost. Every config is
+    /// resolved through the typed registry AND validated for the native
+    /// backend here, so a bad plan fails completely before any trial
+    /// runs.
+    pub fn trials(&self) -> Result<Vec<Trial>> {
+        let mut out = Vec::new();
+        let axes: Vec<usize> = self.grid.iter().map(|(_, v)| v.len()).collect();
+        let combos: usize = axes.iter().product::<usize>() * self.seeds.len();
+        let mut idx = vec![0usize; axes.len()];
+        loop {
+            let bindings: Vec<(String, String)> = self
+                .grid
+                .iter()
+                .zip(&idx)
+                .map(|((k, vals), &i)| (k.clone(), vals[i].clone()))
+                .collect();
+            for &seed in &self.seeds {
+                let index = out.len();
+                let mut config = TrainConfig::default();
+                for (k, v) in self.base.iter().chain(&bindings) {
+                    config.set_key(k, v).with_context(|| format!("plan {:?}", self.name))?;
+                }
+                config.seed = seed;
+                ensure!(
+                    config.backend == Backend::Native,
+                    "lab plans run the native backend only (trial {index} asks for {:?})",
+                    config.backend.name()
+                );
+                trainer::validate_native_config(&config)
+                    .with_context(|| format!("plan {:?} trial {index}", self.name))?;
+                let id = format!(
+                    "t{index:03}__{}__{}__s{seed}",
+                    config.model, config.cfg_name
+                );
+                out.push(Trial { id, index, seed, bindings: bindings.clone(), config });
+            }
+            // odometer: bump the last axis, carry left
+            let mut pos = idx.len();
+            loop {
+                if pos == 0 {
+                    ensure!(out.len() == combos, "expansion bug: {} != {combos}", out.len());
+                    return Ok(out);
+                }
+                pos -= 1;
+                idx[pos] += 1;
+                if idx[pos] < axes[pos] {
+                    break;
+                }
+                idx[pos] = 0;
+            }
+        }
+    }
+}
+
+fn check_plan_key(k: &str) -> Result<()> {
+    ensure!(
+        !RESERVED_KEYS.contains(&super::config::canonical_key(k)),
+        "plan key {k:?} is reserved: the lab runner assigns it per trial \
+         (seeds via the plan's seeds/repeats, out_dir per trial directory)"
+    );
+    ensure!(
+        super::config::key_spec(k).is_some(),
+        "unknown config key {k:?} in plan\n{}",
+        super::config::help_table()
+    );
+    Ok(())
+}
+
+/// One fully-resolved trial of a plan.
+#[derive(Clone, Debug)]
+pub struct Trial {
+    /// stable id, also the trial directory name:
+    /// `t<index>__<model>__<cfg>__s<seed>`
+    pub id: String,
+    pub index: usize,
+    pub seed: u64,
+    /// this trial's grid-axis values (key, value)
+    pub bindings: Vec<(String, String)>,
+    pub config: TrainConfig,
+}
+
+impl Trial {
+    /// `trial_input.json`: the ids plus the fully-resolved config,
+    /// written BEFORE the trial runs so a crashed run still records what
+    /// it was doing.
+    pub fn input_json(&self, plan: &Plan) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("plan".to_string(), Json::Str(plan.name.clone()));
+        m.insert("trial".to_string(), Json::Str(self.id.clone()));
+        m.insert("index".to_string(), Json::Num(self.index as f64));
+        m.insert("seed".to_string(), Json::Num(self.seed as f64));
+        m.insert(
+            "base".to_string(),
+            Json::Obj(plan.base.iter().map(|(k, v)| (k.clone(), Json::Str(v.clone()))).collect()),
+        );
+        m.insert(
+            "bindings".to_string(),
+            Json::Obj(
+                self.bindings.iter().map(|(k, v)| (k.clone(), Json::Str(v.clone()))).collect(),
+            ),
+        );
+        m.insert("config".to_string(), self.config.to_json());
+        Json::Obj(m)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Trial outputs
+// ---------------------------------------------------------------------------
+
+fn num_or_null(v: f64) -> Json {
+    if v.is_finite() {
+        Json::Num(v)
+    } else {
+        Json::Null
+    }
+}
+
+/// Build `trial_output.json` (`schemas/trial_output.schema.json`) from a
+/// finished run. Everything outside the `timing` object is a pure
+/// function of the resolved config — re-running a trial reproduces it
+/// bit-for-bit (the crash-resume test's invariant).
+fn output_json(plan: &Plan, trial: &Trial, r: &TrainResult, total_ms: f64) -> Json {
+    let mut result = BTreeMap::new();
+    result.insert(
+        "status".to_string(),
+        Json::Str(if r.diverged { "diverged" } else { "ok" }.to_string()),
+    );
+    result.insert("steps_run".to_string(), Json::Num(r.metrics.steps.len() as f64));
+    result.insert("final_loss".to_string(), num_or_null(r.metrics.final_loss(20)));
+    result.insert("test_loss".to_string(), num_or_null(r.test_loss as f64));
+    result.insert("test_acc".to_string(), num_or_null(r.test_acc as f64));
+    result.insert(
+        "loss_curve".to_string(),
+        Json::Arr(r.metrics.steps.iter().map(|s| num_or_null(s.loss as f64)).collect()),
+    );
+    result.insert(
+        "acc_curve".to_string(),
+        Json::Arr(r.metrics.steps.iter().map(|s| num_or_null(s.acc as f64)).collect()),
+    );
+    result.insert(
+        "eval".to_string(),
+        Json::Arr(
+            r.metrics
+                .evals
+                .iter()
+                .map(|e| {
+                    let mut em = BTreeMap::new();
+                    em.insert("step".to_string(), Json::Num(e.step as f64));
+                    em.insert("loss".to_string(), num_or_null(e.loss as f64));
+                    em.insert("acc".to_string(), num_or_null(e.acc as f64));
+                    Json::Obj(em)
+                })
+                .collect(),
+        ),
+    );
+    result.insert("audit_steps".to_string(), Json::Num(r.audit_steps as f64));
+    if r.audit_steps > 0 {
+        result.insert("audit_totals".to_string(), r.audit_totals.totals_json());
+    }
+    result.insert(
+        "state_checksum".to_string(),
+        Json::Str(format!("{:016x}", state_checksum(&r.final_state))),
+    );
+
+    let mut timing = BTreeMap::new();
+    timing.insert("mean_step_ms".to_string(), num_or_null(r.metrics.mean_step_ms()));
+    timing.insert("total_ms".to_string(), num_or_null(total_ms));
+
+    let mut m = BTreeMap::new();
+    m.insert("plan".to_string(), Json::Str(plan.name.clone()));
+    m.insert("trial".to_string(), Json::Str(trial.id.clone()));
+    m.insert("index".to_string(), Json::Num(trial.index as f64));
+    m.insert("seed".to_string(), Json::Num(trial.seed as f64));
+    m.insert("config".to_string(), trial.config.to_json());
+    m.insert("result".to_string(), Json::Obj(result));
+    m.insert("timing".to_string(), Json::Obj(timing));
+    Json::Obj(m)
+}
+
+/// Decide whether an existing `trial_output.json` makes its trial
+/// skippable: it must carry this plan's and trial's ids, echo the exact
+/// resolved config the plan expands to today, and have the full result
+/// shape of `schemas/trial_output.schema.json`. A truncated file fails
+/// the JSON parse upstream; a stale config (plan edited since) fails the
+/// echo comparison — both re-execute.
+pub fn validate_trial_output(v: &Json, plan: &Plan, trial: &Trial) -> Result<()> {
+    ensure!(v.req("plan")?.as_str() == Some(&plan.name), "plan id mismatch");
+    ensure!(v.req("trial")?.as_str() == Some(&trial.id), "trial id mismatch");
+    ensure!(v.req("index")?.as_usize() == Some(trial.index), "trial index mismatch");
+    ensure!(
+        *v.req("config")? == trial.config.to_json(),
+        "resolved config changed since this output was written"
+    );
+    let r = v.req("result")?;
+    let status = r.req("status")?.as_str().unwrap_or("");
+    ensure!(status == "ok" || status == "diverged", "bad result.status {status:?}");
+    r.req("steps_run")?.as_f64().ok_or_else(|| anyhow!("result.steps_run not a number"))?;
+    for k in ["final_loss", "test_loss", "test_acc"] {
+        r.req(k)?; // number, or null for a diverged run
+    }
+    for k in ["loss_curve", "acc_curve", "eval"] {
+        r.req(k)?.as_arr().ok_or_else(|| anyhow!("result.{k} not an array"))?;
+    }
+    r.req("audit_steps")?.as_f64().ok_or_else(|| anyhow!("result.audit_steps not a number"))?;
+    r.req("state_checksum")?
+        .as_str()
+        .ok_or_else(|| anyhow!("result.state_checksum not a string"))?;
+    let t = v.req("timing")?;
+    for k in ["mean_step_ms", "total_ms"] {
+        t.req(k)?;
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Runner
+// ---------------------------------------------------------------------------
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TrialStatus {
+    Ran,
+    Skipped,
+}
+
+/// What a `lab run` did: per-trial statuses plus where everything landed.
+#[derive(Debug)]
+pub struct LabReport {
+    pub plan_name: String,
+    pub run_dir: PathBuf,
+    pub statuses: Vec<(String, TrialStatus)>,
+    pub analysis_dir: PathBuf,
+}
+
+impl LabReport {
+    pub fn ran(&self) -> usize {
+        self.statuses.iter().filter(|(_, s)| *s == TrialStatus::Ran).count()
+    }
+
+    pub fn skipped(&self) -> usize {
+        self.statuses.iter().filter(|(_, s)| *s == TrialStatus::Skipped).count()
+    }
+
+    /// One-line summary (CI greps the "ran N, skipped M" counts to prove
+    /// resume worked).
+    pub fn summary(&self) -> String {
+        format!(
+            "plan {}: {} trials — ran {}, skipped {} — {}",
+            self.plan_name,
+            self.statuses.len(),
+            self.ran(),
+            self.skipped(),
+            self.run_dir.display()
+        )
+    }
+}
+
+fn write_atomic(path: &Path, text: &str) -> Result<()> {
+    let tmp = path.with_extension("json.tmp");
+    std::fs::write(&tmp, text)?;
+    std::fs::rename(&tmp, path)?;
+    Ok(())
+}
+
+/// Run a plan file end to end: expand, execute (or skip) every trial,
+/// then rebuild the analysis tables. `force` re-executes everything.
+pub fn run_plan_file(plan_path: &Path, out_root: &Path, force: bool) -> Result<LabReport> {
+    let plan = Plan::load(plan_path)?;
+    run_plan(&plan, out_root, force)
+}
+
+pub fn run_plan(plan: &Plan, out_root: &Path, force: bool) -> Result<LabReport> {
+    let trials = plan.trials()?;
+    let run_dir = out_root.join(&plan.name);
+    std::fs::create_dir_all(&run_dir)?;
+    // provenance: the normalized plan this run directory was built from
+    write_atomic(&run_dir.join("plan.json"), &plan.to_json().to_string_pretty())?;
+
+    let mut statuses = Vec::new();
+    for trial in &trials {
+        let trial_dir = run_dir.join(&trial.id);
+        let out_path = trial_dir.join("trial_output.json");
+
+        if !force {
+            if let Ok(text) = std::fs::read_to_string(&out_path) {
+                let valid = Json::parse(&text)
+                    .map_err(anyhow::Error::from)
+                    .and_then(|v| validate_trial_output(&v, plan, trial));
+                match valid {
+                    Ok(()) => {
+                        eprintln!(
+                            "[lab {}/{}] {}  skipped (valid output)",
+                            trial.index + 1,
+                            trials.len(),
+                            trial.id
+                        );
+                        statuses.push((trial.id.clone(), TrialStatus::Skipped));
+                        continue;
+                    }
+                    Err(e) => eprintln!(
+                        "[lab {}/{}] {}  stale output ({e:#}) — re-running",
+                        trial.index + 1,
+                        trials.len(),
+                        trial.id
+                    ),
+                }
+            }
+        }
+
+        std::fs::create_dir_all(&trial_dir)?;
+        let mut config = trial.config.clone();
+        config.out_dir = Some(trial_dir.to_string_lossy().into_owned());
+        write_atomic(
+            &trial_dir.join("trial_input.json"),
+            &trial.input_json(plan).to_string_pretty(),
+        )?;
+
+        eprintln!(
+            "[lab {}/{}] {}  running ({} steps)...",
+            trial.index + 1,
+            trials.len(),
+            trial.id,
+            config.steps
+        );
+        let t0 = Instant::now();
+        let result =
+            trainer::train_native(&config).with_context(|| format!("trial {}", trial.id))?;
+        let total_ms = t0.elapsed().as_secs_f64() * 1e3;
+        let out = output_json(plan, trial, &result, total_ms);
+        write_atomic(&out_path, &out.to_string_pretty())?;
+        eprintln!(
+            "[lab {}/{}] {}  done: test-acc {:.3}{} ({:.1}s)",
+            trial.index + 1,
+            trials.len(),
+            trial.id,
+            result.test_acc,
+            if result.diverged { " [DIVERGED]" } else { "" },
+            total_ms / 1e3
+        );
+        statuses.push((trial.id.clone(), TrialStatus::Ran));
+    }
+
+    let analysis_dir = analyze(&run_dir)?;
+    Ok(LabReport { plan_name: plan.name.clone(), run_dir, statuses, analysis_dir })
+}
+
+// ---------------------------------------------------------------------------
+// Analysis
+// ---------------------------------------------------------------------------
+
+/// One analyzed trial row, pulled back out of a `trial_output.json`.
+#[derive(Clone, Debug)]
+struct Row {
+    trial: String,
+    model: String,
+    cfg: String,
+    optimizer: String,
+    seed: u64,
+    /// stored bits per element (32 for fp32)
+    bits: u32,
+    status: String,
+    test_acc: Option<f64>,
+    test_loss: Option<f64>,
+    final_loss: Option<f64>,
+    mean_step_ms: Option<f64>,
+}
+
+fn read_row(v: &Json) -> Result<Row> {
+    let c = v.req("config")?;
+    let cfg = c.req("cfg")?.as_str().unwrap_or_default().to_string();
+    let bits = if cfg == "fp32" {
+        32
+    } else {
+        QuantConfig::parse_name(&cfg).map(|q| q.element_bits()).unwrap_or(0)
+    };
+    let r = v.req("result")?;
+    Ok(Row {
+        trial: v.req("trial")?.as_str().unwrap_or_default().to_string(),
+        model: c.req("model")?.as_str().unwrap_or_default().to_string(),
+        cfg,
+        optimizer: c.req("optimizer")?.as_str().unwrap_or_default().to_string(),
+        seed: v.req("seed")?.as_f64().unwrap_or(0.0) as u64,
+        bits,
+        status: r.req("status")?.as_str().unwrap_or_default().to_string(),
+        test_acc: r.req("test_acc")?.as_f64(),
+        test_loss: r.req("test_loss")?.as_f64(),
+        final_loss: r.req("final_loss")?.as_f64(),
+        mean_step_ms: v.req("timing")?.req("mean_step_ms")?.as_f64(),
+    })
+}
+
+fn fmt_opt(v: Option<f64>, prec: usize) -> String {
+    v.map(|x| format!("{x:.prec$}")).unwrap_or_else(|| "—".to_string())
+}
+
+/// Mean over the present values (diverged trials report null acc and are
+/// excluded from aggregates but listed in the ranking).
+fn mean_opt(vals: &[Option<f64>]) -> Option<f64> {
+    let present: Vec<f64> = vals.iter().flatten().copied().collect();
+    if present.is_empty() {
+        None
+    } else {
+        Some(present.iter().sum::<f64>() / present.len() as f64)
+    }
+}
+
+/// Rebuild `analysis/` from every `*/trial_output.json` under a run dir:
+/// `ranked.jsonl` (all trials, best test accuracy first, diverged last)
+/// and `tables.md` (ranked table, best format per model, and the
+/// accuracy-vs-bitwidth frontier). Pure aggregation — safe to re-run any
+/// time, including over a partially-finished run directory.
+pub fn analyze(run_dir: &Path) -> Result<PathBuf> {
+    let mut rows = Vec::new();
+    let mut entries: Vec<PathBuf> = std::fs::read_dir(run_dir)?
+        .filter_map(|e| e.ok().map(|e| e.path()))
+        .filter(|p| p.is_dir())
+        .collect();
+    entries.sort();
+    for dir in entries {
+        let path = dir.join("trial_output.json");
+        let Ok(text) = std::fs::read_to_string(&path) else { continue };
+        let v = Json::parse(&text).map_err(|e| anyhow!("{}: {e}", path.display()))?;
+        rows.push(read_row(&v).with_context(|| path.display().to_string())?);
+    }
+    ensure!(!rows.is_empty(), "no trial_output.json under {}", run_dir.display());
+
+    // rank: finished trials by test accuracy (desc), diverged trials
+    // last; ties broken by trial id for a stable order
+    rows.sort_by(|a, b| {
+        let ka = (a.status != "ok", std::cmp::Reverse(a.test_acc.map(F64Ord))) ;
+        let kb = (b.status != "ok", std::cmp::Reverse(b.test_acc.map(F64Ord)));
+        ka.cmp(&kb).then_with(|| a.trial.cmp(&b.trial))
+    });
+
+    let analysis_dir = run_dir.join("analysis");
+    std::fs::create_dir_all(&analysis_dir)?;
+
+    let mut jsonl = String::new();
+    for (rank, r) in rows.iter().enumerate() {
+        let mut m = BTreeMap::new();
+        m.insert("rank".to_string(), Json::Num((rank + 1) as f64));
+        m.insert("trial".to_string(), Json::Str(r.trial.clone()));
+        m.insert("model".to_string(), Json::Str(r.model.clone()));
+        m.insert("cfg".to_string(), Json::Str(r.cfg.clone()));
+        m.insert("optimizer".to_string(), Json::Str(r.optimizer.clone()));
+        m.insert("seed".to_string(), Json::Num(r.seed as f64));
+        m.insert("bits".to_string(), Json::Num(r.bits as f64));
+        m.insert("status".to_string(), Json::Str(r.status.clone()));
+        m.insert("test_acc".to_string(), r.test_acc.map(Json::Num).unwrap_or(Json::Null));
+        m.insert("test_loss".to_string(), r.test_loss.map(Json::Num).unwrap_or(Json::Null));
+        m.insert("final_loss".to_string(), r.final_loss.map(Json::Num).unwrap_or(Json::Null));
+        m.insert(
+            "mean_step_ms".to_string(),
+            r.mean_step_ms.map(Json::Num).unwrap_or(Json::Null),
+        );
+        jsonl.push_str(&Json::Obj(m).to_string_compact());
+        jsonl.push('\n');
+    }
+    std::fs::write(analysis_dir.join("ranked.jsonl"), jsonl)?;
+
+    std::fs::write(analysis_dir.join("tables.md"), tables_md(run_dir, &rows))?;
+    Ok(analysis_dir)
+}
+
+/// f64 with a total order (NaN never reaches it: rows hold Options).
+#[derive(PartialEq)]
+struct F64Ord(f64);
+impl Eq for F64Ord {}
+impl PartialOrd for F64Ord {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for F64Ord {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.0.total_cmp(&other.0)
+    }
+}
+
+fn tables_md(run_dir: &Path, rows: &[Row]) -> String {
+    let mut md = String::new();
+    md.push_str(&format!("# Lab analysis — {}\n\n", run_dir.display()));
+
+    md.push_str("## Ranked trials\n\n");
+    md.push_str("| rank | trial | model | cfg | optimizer | seed | bits | test acc | test loss | step ms |\n");
+    md.push_str("|---|---|---|---|---|---|---|---|---|---|\n");
+    for (rank, r) in rows.iter().enumerate() {
+        md.push_str(&format!(
+            "| {} | {} | {} | {} | {} | {} | {} | {} | {} | {} |\n",
+            rank + 1,
+            r.trial,
+            r.model,
+            r.cfg,
+            r.optimizer,
+            r.seed,
+            r.bits,
+            if r.status == "ok" { fmt_opt(r.test_acc, 4) } else { "Div.".to_string() },
+            fmt_opt(r.test_loss, 4),
+            fmt_opt(r.mean_step_ms, 1),
+        ));
+    }
+
+    // aggregate: mean test acc per (model, cfg) over seeds and optimizers
+    let mut agg: BTreeMap<(String, String), Vec<Option<f64>>> = BTreeMap::new();
+    for r in rows {
+        agg.entry((r.model.clone(), r.cfg.clone()))
+            .or_default()
+            .push(if r.status == "ok" { r.test_acc } else { None });
+    }
+    let models: Vec<String> = {
+        let mut m: Vec<String> = agg.keys().map(|(model, _)| model.clone()).collect();
+        m.dedup();
+        m
+    };
+
+    md.push_str("\n## Best format per model\n\n");
+    md.push_str("(mean test accuracy over seeds and optimizers; Δ vs the model's fp32 mean)\n\n");
+    md.push_str("| model | cfg | bits | mean acc | Δ vs fp32 | |\n");
+    md.push_str("|---|---|---|---|---|---|\n");
+    for model in &models {
+        let fp32 = agg.get(&(model.clone(), "fp32".to_string())).and_then(|v| mean_opt(v));
+        let mut cfgs: Vec<(&str, Option<f64>)> = agg
+            .iter()
+            .filter(|((m, _), _)| m == model)
+            .map(|((_, c), v)| (c.as_str(), mean_opt(v)))
+            .collect();
+        cfgs.sort_by(|a, b| {
+            b.1.map(F64Ord).cmp(&a.1.map(F64Ord)).then_with(|| a.0.cmp(b.0))
+        });
+        for (i, (cfg, acc)) in cfgs.iter().enumerate() {
+            let bits = bits_of(cfg);
+            let delta = match (acc, fp32) {
+                (Some(a), Some(f)) if *cfg != "fp32" => format!("{:+.4}", a - f),
+                _ => "—".to_string(),
+            };
+            md.push_str(&format!(
+                "| {} | {} | {} | {} | {} | {} |\n",
+                model,
+                cfg,
+                bits,
+                fmt_opt(*acc, 4),
+                delta,
+                if i == 0 { "**best**" } else { "" },
+            ));
+        }
+    }
+
+    md.push_str("\n## Accuracy-vs-bitwidth frontier\n\n");
+    md.push_str("(per model: the best mean accuracy at each element bitwidth; \"≤1%\" marks \
+configs within one point of the model's fp32 mean — the paper's Table II criterion)\n\n");
+    md.push_str("| model | bits | best cfg | mean acc | Δ vs fp32 | ≤1% |\n");
+    md.push_str("|---|---|---|---|---|---|\n");
+    for model in &models {
+        let fp32 = agg.get(&(model.clone(), "fp32".to_string())).and_then(|v| mean_opt(v));
+        let mut frontier: BTreeMap<u32, (&str, Option<f64>)> = BTreeMap::new();
+        for ((m, cfg), vals) in &agg {
+            if m != model {
+                continue;
+            }
+            let acc = mean_opt(vals);
+            let bits = bits_of(cfg);
+            let e = frontier.entry(bits).or_insert((cfg.as_str(), acc));
+            if acc.map(F64Ord) > e.1.map(F64Ord) {
+                *e = (cfg.as_str(), acc);
+            }
+        }
+        for (bits, (cfg, acc)) in frontier.iter().rev() {
+            let (delta, within) = match (acc, fp32) {
+                (Some(a), Some(f)) if *cfg != "fp32" => {
+                    (format!("{:+.4}", a - f), if f - a <= 0.01 { "yes" } else { "no" })
+                }
+                _ => ("—".to_string(), "—"),
+            };
+            md.push_str(&format!(
+                "| {} | {} | {} | {} | {} | {} |\n",
+                model,
+                bits,
+                cfg,
+                fmt_opt(*acc, 4),
+                delta,
+                within,
+            ));
+        }
+    }
+    md
+}
+
+fn bits_of(cfg: &str) -> u32 {
+    if cfg == "fp32" {
+        32
+    } else {
+        QuantConfig::parse_name(cfg).map(|q| q.element_bits()).unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn plan_json(text: &str) -> Json {
+        Json::parse(text).unwrap()
+    }
+
+    #[test]
+    fn plan_parses_and_round_trips() {
+        let p = Plan::from_json(&plan_json(
+            r#"{"name": "p", "base": {"steps": 5}, "grid": {"model": ["cnn_t"], "cfg": ["fp32", "e2m4_gnc_eg8mg1_sr"]}, "seeds": [0, 1]}"#,
+        ))
+        .unwrap();
+        assert_eq!(p.name, "p");
+        assert_eq!(p.base, vec![("steps".to_string(), "5".to_string())]);
+        assert_eq!(p.seeds, vec![0, 1]);
+        // axes are sorted by key: cfg before model
+        assert_eq!(p.grid[0].0, "cfg");
+        assert_eq!(p.grid[1].0, "model");
+        assert_eq!(Plan::from_json(&p.to_json()).unwrap(), p);
+    }
+
+    #[test]
+    fn plan_rejects_bad_shapes() {
+        for bad in [
+            r#"{"grid": {"model": ["cnn_t"]}}"#,                      // no name
+            r#"{"name": "p"}"#,                                       // no grid
+            r#"{"name": "p", "grid": {}}"#,                           // empty grid
+            r#"{"name": "p", "grid": {"model": []}}"#,                // empty axis
+            r#"{"name": "p", "grid": {"model": ["cnn_t"]}, "x": 1}"#, // unknown plan key
+            r#"{"name": "p", "grid": {"seed": [1]}}"#,                // reserved key
+            r#"{"name": "p", "grid": {"out_dir": ["x"]}}"#,           // reserved key
+            r#"{"name": "p", "grid": {"model": ["cnn_t"]}, "seeds": [1], "repeats": 2}"#,
+            r#"{"name": "p", "grid": {"model": ["cnn_t"]}, "seeds": [1.5]}"#,
+            r#"{"name": "p/q", "grid": {"model": ["cnn_t"]}}"#,       // bad dir name
+            r#"{"name": "p", "base": {"steps": 1}, "grid": {"steps": [1]}}"#, // both
+        ] {
+            assert!(Plan::from_json(&plan_json(bad)).is_err(), "{bad}");
+        }
+    }
+
+    #[test]
+    fn unknown_grid_key_error_lists_registry() {
+        let err = Plan::from_json(&plan_json(
+            r#"{"name": "p", "grid": {"stepz": [1]}}"#,
+        ))
+        .unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("stepz"), "{msg}");
+        for key in ["model", "cfg", "steps", "optimizer", "milestones"] {
+            assert!(msg.contains(key), "listing must contain {key:?}: {msg}");
+        }
+    }
+
+    #[test]
+    fn expansion_is_deterministic_with_seeds_innermost() {
+        let p = Plan::from_json(&plan_json(
+            r#"{"name": "p", "base": {"steps": 2, "batch": 4},
+                "grid": {"model": ["cnn_t"], "cfg": ["fp32", "e2m4_gnc_eg8mg1_sr"]},
+                "seeds": [0, 1]}"#,
+        ))
+        .unwrap();
+        let trials = p.trials().unwrap();
+        let ids: Vec<&str> = trials.iter().map(|t| t.id.as_str()).collect();
+        // axes sorted (cfg, model), last axis fastest, seeds innermost
+        assert_eq!(
+            ids,
+            vec![
+                "t000__cnn_t__fp32__s0",
+                "t001__cnn_t__fp32__s1",
+                "t002__cnn_t__e2m4_gnc_eg8mg1_sr__s0",
+                "t003__cnn_t__e2m4_gnc_eg8mg1_sr__s1",
+            ]
+        );
+        assert!(trials.iter().all(|t| t.config.steps == 2 && t.config.batch == 4));
+        assert_eq!(trials[1].config.seed, 1);
+        assert_eq!(p.trials().unwrap().len(), 4, "re-expansion is stable");
+    }
+
+    #[test]
+    fn expansion_rejects_pjrt_and_bad_configs() {
+        let pjrt = Plan::from_json(&plan_json(
+            r#"{"name": "p", "base": {"backend": "pjrt"}, "grid": {"model": ["cnn_t"]}}"#,
+        ))
+        .unwrap();
+        let msg = format!("{:#}", pjrt.trials().unwrap_err());
+        assert!(msg.contains("native"), "{msg}");
+        // a quant config the native backend cannot run fails at expansion
+        let bad = Plan::from_json(&plan_json(
+            r#"{"name": "p", "grid": {"cfg": ["e2m4_g1_eg8mg1_sr"]}}"#,
+        ))
+        .unwrap();
+        assert!(bad.trials().is_err());
+    }
+
+    #[test]
+    fn repeats_become_seed_range() {
+        let p = Plan::from_json(&plan_json(
+            r#"{"name": "p", "grid": {"model": ["cnn_t"]}, "repeats": 3}"#,
+        ))
+        .unwrap();
+        assert_eq!(p.seeds, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn validate_trial_output_rejects_mismatches() {
+        let p = Plan::from_json(&plan_json(
+            r#"{"name": "p", "base": {"steps": 2, "batch": 4}, "grid": {"model": ["cnn_t"]}}"#,
+        ))
+        .unwrap();
+        let trials = p.trials().unwrap();
+        let t = &trials[0];
+        // a synthetic minimal valid output
+        let mk = |cfg: Json| {
+            let mut m = BTreeMap::new();
+            m.insert("plan".to_string(), Json::Str("p".to_string()));
+            m.insert("trial".to_string(), Json::Str(t.id.clone()));
+            m.insert("index".to_string(), Json::Num(0.0));
+            m.insert("seed".to_string(), Json::Num(0.0));
+            m.insert("config".to_string(), cfg);
+            let mut r = BTreeMap::new();
+            r.insert("status".to_string(), Json::Str("ok".to_string()));
+            r.insert("steps_run".to_string(), Json::Num(2.0));
+            r.insert("final_loss".to_string(), Json::Num(1.0));
+            r.insert("test_loss".to_string(), Json::Num(1.0));
+            r.insert("test_acc".to_string(), Json::Num(0.5));
+            r.insert("loss_curve".to_string(), Json::Arr(vec![]));
+            r.insert("acc_curve".to_string(), Json::Arr(vec![]));
+            r.insert("eval".to_string(), Json::Arr(vec![]));
+            r.insert("audit_steps".to_string(), Json::Num(0.0));
+            r.insert("state_checksum".to_string(), Json::Str("00".to_string()));
+            m.insert("result".to_string(), Json::Obj(r));
+            let mut tm = BTreeMap::new();
+            tm.insert("mean_step_ms".to_string(), Json::Num(1.0));
+            tm.insert("total_ms".to_string(), Json::Num(2.0));
+            m.insert("timing".to_string(), Json::Obj(tm));
+            Json::Obj(m)
+        };
+        validate_trial_output(&mk(t.config.to_json()), &p, t).unwrap();
+        // a config echo that differs (stale plan) must invalidate
+        let mut other = t.config.clone();
+        other.steps = 99;
+        assert!(validate_trial_output(&mk(other.to_json()), &p, t).is_err());
+        // a missing result key must invalidate
+        let mut v = mk(t.config.to_json());
+        if let Json::Obj(m) = &mut v {
+            if let Some(Json::Obj(r)) = m.get_mut("result") {
+                r.remove("state_checksum");
+            }
+        }
+        assert!(validate_trial_output(&v, &p, t).is_err());
+    }
+}

@@ -9,8 +9,10 @@
 
 pub mod config;
 pub mod experiments;
+pub mod lab;
 pub mod metrics;
 pub mod trainer;
 
 pub use config::{Backend, TrainConfig};
+pub use lab::{LabReport, Plan};
 pub use trainer::{train, train_native, validate_native_config, TrainResult};

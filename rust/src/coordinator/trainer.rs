@@ -36,6 +36,13 @@ pub struct TrainResult {
     pub test_acc: f32,
     pub test_loss: f32,
     pub diverged: bool,
+    /// roll-up of the run's audit stream: per-pass counters summed over
+    /// every audited step (`layers` is left empty — the per-step stream
+    /// lives in `<tag>.audit.jsonl`). All-default for fp32 runs and the
+    /// pjrt backend, which collect no executed audit.
+    pub audit_totals: StepAudit,
+    /// number of steps that contributed to `audit_totals`
+    pub audit_steps: u64,
 }
 
 impl TrainResult {
@@ -103,29 +110,71 @@ pub fn evaluate_native(
     ((loss_sum / n as f64) as f32, (acc_sum / n as f64) as f32)
 }
 
-/// Write the metrics CSV + raw-f32 checkpoint for a finished run, plus —
-/// when the run collected one — the per-layer audit stream
-/// (`<tag>.audit.jsonl`, one `schemas/audit_step.schema.json` record per
-/// line per step; native backend only).
-fn write_outputs(
-    config: &TrainConfig,
-    metrics: &MetricsLog,
-    state: &[f32],
-    audit_jsonl: &str,
-) -> Result<()> {
+/// The run tag that names every per-run output file
+/// (`<model>_<cfg>_s<seed>.csv` / `.state.bin` / `.audit.jsonl`).
+pub fn run_tag(config: &TrainConfig) -> String {
+    format!("{}_{}_s{}", config.model, config.cfg_name, config.seed)
+}
+
+/// Write the metrics CSV + raw-f32 checkpoint for a finished run (the
+/// audit stream is written incrementally during the run by
+/// [`AuditStream`]).
+fn write_outputs(config: &TrainConfig, metrics: &MetricsLog, state: &[f32]) -> Result<()> {
     if let Some(dir) = &config.out_dir {
-        let tag = format!("{}_{}_s{}", config.model, config.cfg_name, config.seed);
+        let tag = run_tag(config);
         metrics.write_csv(std::path::Path::new(dir).join(format!("{tag}.csv")))?;
         let bytes: Vec<u8> = state.iter().flat_map(|v| v.to_le_bytes()).collect();
         std::fs::write(std::path::Path::new(dir).join(format!("{tag}.state.bin")), bytes)?;
-        if !audit_jsonl.is_empty() {
-            std::fs::write(
-                std::path::Path::new(dir).join(format!("{tag}.audit.jsonl")),
-                audit_jsonl,
-            )?;
-        }
     }
     Ok(())
+}
+
+/// Incremental writer for the per-layer audit stream
+/// (`<tag>.audit.jsonl`, one `schemas/audit_step.schema.json` record per
+/// line per audited step). Streams each record to disk as the step
+/// finishes — a long grid run holds no audit backlog in memory, and a
+/// killed run leaves the stream readable up to its last completed step.
+/// The file is created lazily on the first record, so runs that audit
+/// nothing (fp32, or no `out_dir`) leave no file, as before.
+struct AuditStream {
+    path: Option<std::path::PathBuf>,
+    file: Option<std::io::BufWriter<std::fs::File>>,
+}
+
+impl AuditStream {
+    fn new(config: &TrainConfig) -> AuditStream {
+        let path = config
+            .out_dir
+            .as_ref()
+            .map(|dir| std::path::Path::new(dir).join(format!("{}.audit.jsonl", run_tag(config))));
+        AuditStream { path, file: None }
+    }
+
+    fn record(&mut self, config: &TrainConfig, step: u64, audit: &StepAudit) -> Result<()> {
+        use std::io::Write;
+        let Some(path) = &self.path else { return Ok(()) };
+        if self.file.is_none() {
+            if let Some(parent) = path.parent() {
+                std::fs::create_dir_all(parent)?;
+            }
+            self.file = Some(std::io::BufWriter::new(std::fs::File::create(path)?));
+        }
+        let line = audit
+            .to_json(&config.model, &config.cfg_name, config.batch, step)
+            .to_string_compact();
+        let f = self.file.as_mut().expect("just created");
+        f.write_all(line.as_bytes())?;
+        f.write_all(b"\n")?;
+        Ok(())
+    }
+
+    fn finish(&mut self) -> Result<()> {
+        use std::io::Write;
+        if let Some(f) = &mut self.file {
+            f.flush()?;
+        }
+        Ok(())
+    }
 }
 
 /// Validate a native-backend config BEFORE any model construction: an
@@ -201,7 +250,7 @@ pub fn train(engine: &mut Engine, config: &TrainConfig) -> Result<TrainResult> {
         evaluate(engine, &model, &state, &ds, streams::TEST, config.eval_batches)?
     };
 
-    write_outputs(config, &metrics, &state, "")?;
+    write_outputs(config, &metrics, &state)?;
 
     Ok(TrainResult {
         config: config.clone(),
@@ -210,17 +259,9 @@ pub fn train(engine: &mut Engine, config: &TrainConfig) -> Result<TrainResult> {
         test_acc,
         test_loss,
         diverged,
+        audit_totals: StepAudit::default(),
+        audit_steps: 0,
     })
-}
-
-/// One line of the per-layer audit stream: the step's [`StepAudit`]
-/// (per-layer records + roll-up totals) tagged with the run context.
-fn audit_line(config: &TrainConfig, step: u64, audit: &StepAudit) -> String {
-    let mut line = audit
-        .to_json(&config.model, &config.cfg_name, config.batch, step)
-        .to_string_compact();
-    line.push('\n');
-    line
 }
 
 /// Run one full training experiment on the NATIVE backend: synthetic
@@ -247,7 +288,9 @@ pub fn train_native(config: &TrainConfig) -> Result<TrainResult> {
     );
 
     let mut metrics = MetricsLog::default();
-    let mut audit_jsonl = String::new();
+    let mut audit_stream = AuditStream::new(config);
+    let mut audit_totals = StepAudit::default();
+    let mut audit_steps = 0u64;
     for step in 0..config.steps {
         let (images, labels) = ds.batch(config.batch, streams::TRAIN, train_batch_index(config, step));
         let lr = config.lr.at(step);
@@ -263,8 +306,10 @@ pub fn train_native(config: &TrainConfig) -> Result<TrainResult> {
         });
         // fp32 runs execute no quantized convs, so they have no audit
         // stream (a record with an empty layer list would be vacuous)
-        if config.out_dir.is_some() && !out.audit.layers.is_empty() {
-            audit_jsonl.push_str(&audit_line(config, step, &out.audit));
+        if !out.audit.layers.is_empty() {
+            audit_totals.merge_totals(&out.audit);
+            audit_steps += 1;
+            audit_stream.record(config, step, &out.audit)?;
         }
         if !out.loss.is_finite() {
             break; // diverged — stop early, record as such (Table IV "Div.")
@@ -284,7 +329,8 @@ pub fn train_native(config: &TrainConfig) -> Result<TrainResult> {
     };
 
     let state = model.state();
-    write_outputs(config, &metrics, &state, &audit_jsonl)?;
+    audit_stream.finish()?;
+    write_outputs(config, &metrics, &state)?;
 
     Ok(TrainResult {
         config: config.clone(),
@@ -293,5 +339,7 @@ pub fn train_native(config: &TrainConfig) -> Result<TrainResult> {
         test_acc,
         test_loss,
         diverged,
+        audit_totals,
+        audit_steps,
     })
 }

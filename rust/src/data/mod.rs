@@ -10,7 +10,7 @@
 
 use crate::util::rng::Pcg32;
 
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct DatasetConfig {
     pub classes: usize,
     pub channels: usize,

@@ -1,17 +1,26 @@
 //! mls-train — CLI for the MLS low-bit training framework.
 //!
 //! ```text
-//! mls-train train   [--artifacts DIR] [--set key=value ...]
-//! mls-train eval    [--artifacts DIR] --model M --state FILE
-//! mls-train repro   --exp <table1|table2|...|fig7|eq12|ratios> [--set ...]
-//! mls-train energy  [--model resnet34] [--batch 64]
-//! mls-train info    [--artifacts DIR]
-//! mls-train quantize --e E --m M < in.f32 > report   (file-level codec demo)
+//! mls-train train        [--set key=value ...]                 one training run
+//! mls-train eval         --state FILE [--model M] [--set ...]  evaluate a checkpoint
+//! mls-train experiments  --exp <table1|...|ratios> [--set ...] paper tables/figures
+//! mls-train lab run      PLAN.json [--out DIR] [--force]       declarative grid runner
+//! mls-train lab expand   PLAN.json                             print the trial expansion
+//! mls-train lab analyze  RUN_DIR                               rebuild the analysis tables
+//! mls-train bench-info   [--artifacts DIR]                     artifacts + bench reports
+//! mls-train energy       [--model resnet34] [--batch 64]       Table VI energy breakdown
+//! mls-train quantize     --input F [--e 2] [--m 4]             file-level codec demo
 //! ```
+//!
+//! Every subcommand answers `--help`; `train`/`eval`/`experiments`/`lab`
+//! embed the typed config key table generated from the registry in
+//! `coordinator::config` (`--set key=value`, same keys in plan files).
+//! The pre-PR-6 spellings `repro` and `info` still work with a
+//! deprecation note.
 
 use anyhow::{anyhow, Result};
 
-use mls_train::coordinator::{experiments, trainer, Backend, TrainConfig};
+use mls_train::coordinator::{config, experiments, lab, trainer, Backend, TrainConfig};
 use mls_train::hw::report;
 use mls_train::hw::units::EnergyModel;
 use mls_train::mls::format::EmFormat;
@@ -26,19 +35,28 @@ fn main() {
 
 struct Args {
     cmd: String,
+    /// non-flag operands after the subcommand (`lab run PLAN.json`)
+    positional: Vec<String>,
     artifacts: String,
     sets: Vec<String>,
     flags: std::collections::BTreeMap<String, String>,
+    help: bool,
+    force: bool,
 }
 
 fn parse_args() -> Result<Args> {
     let mut it = std::env::args().skip(1);
     let cmd = it.next().unwrap_or_else(|| "help".to_string());
+    let mut positional = Vec::new();
     let mut artifacts = "artifacts".to_string();
     let mut sets = Vec::new();
     let mut flags = std::collections::BTreeMap::new();
+    let mut help = false;
+    let mut force = false;
     while let Some(a) = it.next() {
         match a.as_str() {
+            "--help" | "-h" => help = true,
+            "--force" => force = true,
             "--artifacts" => artifacts = it.next().ok_or_else(|| anyhow!("--artifacts needs a value"))?,
             "--set" => sets.push(it.next().ok_or_else(|| anyhow!("--set needs key=value"))?),
             f if f.starts_with("--") => {
@@ -46,10 +64,10 @@ fn parse_args() -> Result<Args> {
                 let val = it.next().ok_or_else(|| anyhow!("{f} needs a value"))?;
                 flags.insert(key, val);
             }
-            other => return Err(anyhow!("unexpected argument {other:?}")),
+            other => positional.push(other.to_string()),
         }
     }
-    Ok(Args { cmd, artifacts, sets, flags })
+    Ok(Args { cmd, positional, artifacts, sets, flags, help, force })
 }
 
 fn run() -> Result<()> {
@@ -57,12 +75,21 @@ fn run() -> Result<()> {
     match args.cmd.as_str() {
         "train" => cmd_train(&args),
         "eval" => cmd_eval(&args),
-        "repro" => cmd_repro(&args),
+        "experiments" => cmd_experiments(&args),
+        "repro" => {
+            eprintln!("note: `repro` is deprecated; use `mls-train experiments`");
+            cmd_experiments(&args)
+        }
+        "lab" => cmd_lab(&args),
+        "bench-info" => cmd_bench_info(&args),
+        "info" => {
+            eprintln!("note: `info` is deprecated; use `mls-train bench-info`");
+            cmd_bench_info(&args)
+        }
         "energy" => cmd_energy(&args),
-        "info" => cmd_info(&args),
         "quantize" => cmd_quantize(&args),
         "help" | "--help" | "-h" => {
-            println!("{}", HELP);
+            println!("{HELP}");
             Ok(())
         }
         other => Err(anyhow!("unknown command {other:?}\n{HELP}")),
@@ -73,20 +100,36 @@ const HELP: &str = "\
 mls-train — MLS low-bit CNN training framework (paper reproduction)
 
 commands:
-  train     run one training experiment (--set model=cnn_s --set cfg=e2m4_gnc_eg8mg1_sr --set steps=300);
-            backend=native (default) runs the self-contained Alg. 1 low-bit trainer
-            on the module-graph models cnn_t / cnn_s / resnet_t (residual), with
-            --set optimizer=sgd|momentum --set momentum=0.9 --set weight_decay=0;
-            backend=pjrt the AOT artifacts (needs make artifacts + the pjrt feature)
-  eval      evaluate a saved state (--model cnn_s --state runs/...state.bin; --set backend=...)
-  repro     regenerate a paper table/figure (--exp table1..table6, fig2, fig6, fig7, eq12, ratios)
-  energy    Table VI energy breakdown (--model resnet34 --batch 64)
-  info      list artifacts and models
-  quantize  quantize a raw f32 file to MLS and report stats (--input F --e 2 --m 4)
+  train        run one training experiment (--set model=cnn_s --set cfg=e2m4_gnc_eg8mg1_sr);
+               backend=native (default) is the self-contained Alg. 1 low-bit trainer
+  eval         evaluate a saved state (--state runs/...state.bin [--model cnn_s])
+  experiments  regenerate a paper table/figure (--exp table1..table6, fig2, fig6, fig7,
+               eq12, ratios)  [formerly `repro`]
+  lab          declarative grid runner over plan files:
+                 lab run PLAN.json [--out DIR] [--force]   execute (resumable)
+                 lab expand PLAN.json                      print the trial expansion
+                 lab analyze RUN_DIR                       rebuild ranked.jsonl + tables.md
+  bench-info   list artifacts/models and summarize BENCH_*.json reports  [formerly `info`]
+  energy       Table VI energy breakdown (--model resnet34 --batch 64)
+  quantize     quantize a raw f32 file to MLS and report stats (--input F --e 2 --m 4)
 
-common flags: --artifacts DIR (default: artifacts), --set key=value (repeatable)";
+common flags: --artifacts DIR (default: artifacts), --set key=value (repeatable),
+--help on any subcommand (train/eval/experiments/lab print the config key table)";
+
+fn print_config_help(cmd: &str, intro: &str) {
+    println!("mls-train {cmd} — {intro}\n");
+    println!("{}", config::help_table());
+}
 
 fn cmd_train(args: &Args) -> Result<()> {
+    if args.help {
+        print_config_help(
+            "train",
+            "run one training experiment (--set key=value over these defaults; \
+             output files under --set out_dir=..., default runs/)",
+        );
+        return Ok(());
+    }
     let mut config = TrainConfig::default();
     config.out_dir = Some("runs".to_string());
     for kv in &args.sets {
@@ -117,6 +160,14 @@ fn cmd_train(args: &Args) -> Result<()> {
 }
 
 fn cmd_eval(args: &Args) -> Result<()> {
+    if args.help {
+        print_config_help(
+            "eval",
+            "evaluate a saved .state.bin checkpoint on the test stream \
+             (--state FILE [--model M], --set for dataset/backend keys)",
+        );
+        return Ok(());
+    }
     let model = args.flags.get("model").cloned().unwrap_or_else(|| "cnn_s".into());
     let state_path = args
         .flags
@@ -158,14 +209,96 @@ fn cmd_eval(args: &Args) -> Result<()> {
     Ok(())
 }
 
-fn cmd_repro(args: &Args) -> Result<()> {
+fn cmd_experiments(args: &Args) -> Result<()> {
+    if args.help {
+        print_config_help(
+            "experiments",
+            &format!(
+                "regenerate a paper table/figure (--exp NAME, --set overrides); \
+                 have {:?}",
+                experiments::EXPERIMENTS
+            ),
+        );
+        return Ok(());
+    }
     let exp = args
         .flags
         .get("exp")
-        .ok_or_else(|| anyhow!("repro needs --exp <name>; have {:?}", experiments::EXPERIMENTS))?;
+        .ok_or_else(|| anyhow!("experiments needs --exp <name>; have {:?}", experiments::EXPERIMENTS))?;
     let report = experiments::run(exp, &args.artifacts, &args.sets)?;
     println!("{report}");
     Ok(())
+}
+
+const LAB_HELP: &str = "\
+mls-train lab — declarative grid runner (resumable experiment plans)
+
+  lab run PLAN.json [--out DIR] [--force]
+      Expand the plan into trials and execute each in its own directory
+      under DIR/<plan-name>/ (DIR default: runs/lab). Trials whose
+      existing trial_output.json validates (schemas/trial_output.schema.json
+      + exact config echo) are skipped, so a crashed or repeated run only
+      executes what is missing; --force re-runs everything. Finishes by
+      rebuilding analysis/ranked.jsonl + analysis/tables.md.
+
+  lab expand PLAN.json
+      Print the deterministic trial expansion (id and resolved overrides
+      per trial) without running anything.
+
+  lab analyze RUN_DIR
+      Rebuild the analysis tables from the trial_output.json files under
+      an existing run directory.
+
+A plan (schemas/plan.schema.json, example: examples/plan_table2.json):
+  { \"name\": \"table2\",               run-directory name
+    \"base\": {\"steps\": 40},          fixed overrides (any config key below)
+    \"grid\": {\"model\": [...], \"cfg\": [...]},   axes: key -> values
+    \"seeds\": [0, 1] }                or \"repeats\": N for seeds 0..N
+";
+
+fn cmd_lab(args: &Args) -> Result<()> {
+    let sub = args.positional.first().map(String::as_str);
+    if args.help || sub.is_none() {
+        println!("{LAB_HELP}");
+        println!("{}", config::help_table());
+        return Ok(());
+    }
+    let operand = |what: &str| {
+        args.positional
+            .get(1)
+            .ok_or_else(|| anyhow!("lab {} needs {what}\n\n{LAB_HELP}", sub.unwrap_or_default()))
+    };
+    match sub.unwrap_or_default() {
+        "run" => {
+            let plan = std::path::PathBuf::from(operand("a PLAN.json path")?);
+            let out = args
+                .flags
+                .get("out")
+                .cloned()
+                .unwrap_or_else(|| "runs/lab".to_string());
+            let report = lab::run_plan_file(&plan, std::path::Path::new(&out), args.force)?;
+            println!("{}", report.summary());
+            println!("analysis: {}", report.analysis_dir.display());
+            Ok(())
+        }
+        "expand" => {
+            let plan = lab::Plan::load(std::path::Path::new(operand("a PLAN.json path")?))?;
+            let trials = plan.trials()?;
+            println!("plan {}: {} trials", plan.name, trials.len());
+            for t in &trials {
+                let binds: Vec<String> =
+                    t.bindings.iter().map(|(k, v)| format!("{k}={v}")).collect();
+                println!("  {}  [{}] seed={}", t.id, binds.join(" "), t.seed);
+            }
+            Ok(())
+        }
+        "analyze" => {
+            let dir = lab::analyze(std::path::Path::new(operand("a run directory")?))?;
+            println!("analysis rebuilt: {}", dir.display());
+            Ok(())
+        }
+        other => Err(anyhow!("unknown lab subcommand {other:?}\n\n{LAB_HELP}")),
+    }
 }
 
 fn cmd_energy(args: &Args) -> Result<()> {
@@ -176,7 +309,7 @@ fn cmd_energy(args: &Args) -> Result<()> {
     Ok(())
 }
 
-fn cmd_info(args: &Args) -> Result<()> {
+fn cmd_bench_info(args: &Args) -> Result<()> {
     let engine = Engine::from_dir(&args.artifacts);
     match engine {
         Ok(e) => {
@@ -198,6 +331,35 @@ fn cmd_info(args: &Args) -> Result<()> {
         Err(e) => println!("no artifacts loaded: {e:#}"),
     }
     println!("\nanalytic networks: {:?}", mls_train::nn::zoo::NETWORKS);
+
+    // measured bench reports at the repo root (written by `cargo bench`)
+    let mut found = false;
+    for file in ["BENCH_conv.json", "BENCH_quantize.json", "BENCH_train.json"] {
+        let Ok(text) = std::fs::read_to_string(file) else { continue };
+        let Ok(v) = mls_train::util::json::Json::parse(&text) else {
+            println!("bench report {file}: unparseable");
+            continue;
+        };
+        if !found {
+            println!("\nbench reports:");
+            found = true;
+        }
+        let results = v.get("results").and_then(|r| r.as_obj().map(|m| m.len())).unwrap_or(0);
+        print!("  {file}: {results} results");
+        if let Some(ratios) = v.get("ratios").and_then(|r| r.as_obj()) {
+            let pairs: Vec<String> = ratios
+                .iter()
+                .filter_map(|(k, r)| r.as_f64().map(|x| format!("{k}={x:.2}")))
+                .collect();
+            if !pairs.is_empty() {
+                print!("  [{}]", pairs.join(", "));
+            }
+        }
+        println!();
+    }
+    if !found {
+        println!("\nno BENCH_*.json at the repo root (run `cargo bench` to produce them)");
+    }
     Ok(())
 }
 

@@ -19,13 +19,17 @@ pub enum Grouping {
 }
 
 impl Grouping {
+    /// Every supported grouping, in Table IV order. [`Self::parse`] and
+    /// [`Self::parse_short`] scan this list, so the set of parseable
+    /// names is BY CONSTRUCTION the set of `name()`/`short_name()`
+    /// outputs — the listings in error messages cannot drift from what
+    /// round-trips (pinned by the registry round-trip tests).
+    pub const ALL: [Grouping; 4] =
+        [Grouping::None, Grouping::First, Grouping::Second, Grouping::Both];
+
     pub fn parse(s: &str) -> anyhow::Result<Grouping> {
-        Ok(match s {
-            "none" => Grouping::None,
-            "first" => Grouping::First,
-            "second" => Grouping::Second,
-            "both" => Grouping::Both,
-            _ => anyhow::bail!("unknown grouping {s:?}"),
+        Self::ALL.into_iter().find(|g| g.name() == s).ok_or_else(|| {
+            anyhow::anyhow!("unknown grouping {s:?} (have {:?})", Self::ALL.map(|g| g.name()))
         })
     }
 
@@ -36,6 +40,28 @@ impl Grouping {
             Grouping::Second => "second",
             Grouping::Both => "both",
         }
+    }
+
+    /// Short token used inside [`crate::mls::QuantConfig`] names
+    /// (`"g1"`/`"gf"`/`"gs"`/`"gnc"`, e.g. the `gnc` in
+    /// `e2m4_gnc_eg8mg1_sr`).
+    pub fn short_name(&self) -> &'static str {
+        match self {
+            Grouping::None => "g1",
+            Grouping::First => "gf",
+            Grouping::Second => "gs",
+            Grouping::Both => "gnc",
+        }
+    }
+
+    /// Inverse of [`Self::short_name`], scanning [`Self::ALL`].
+    pub fn parse_short(s: &str) -> anyhow::Result<Grouping> {
+        Self::ALL.into_iter().find(|g| g.short_name() == s).ok_or_else(|| {
+            anyhow::anyhow!(
+                "unknown grouping token {s:?} (have {:?})",
+                Self::ALL.map(|g| g.short_name())
+            )
+        })
     }
 
     /// Number of groups for a shape.
@@ -124,5 +150,24 @@ mod tests {
             assert_eq!(Grouping::parse(name).unwrap().name(), name);
         }
         assert!(Grouping::parse("bogus").is_err());
+    }
+
+    #[test]
+    fn registry_round_trips_every_name_form() {
+        // both name forms round-trip for EVERY variant, and the error
+        // listings contain every valid name — the property the config
+        // redesign relies on (parse scans ALL, so drift is impossible;
+        // this pins ALL being complete)
+        assert_eq!(Grouping::ALL.len(), 4);
+        for g in Grouping::ALL {
+            assert_eq!(Grouping::parse(g.name()).unwrap(), g);
+            assert_eq!(Grouping::parse_short(g.short_name()).unwrap(), g);
+        }
+        let long = format!("{:#}", Grouping::parse("zzz").unwrap_err());
+        let short = format!("{:#}", Grouping::parse_short("zzz").unwrap_err());
+        for g in Grouping::ALL {
+            assert!(long.contains(g.name()), "{long}");
+            assert!(short.contains(g.short_name()), "{short}");
+        }
     }
 }

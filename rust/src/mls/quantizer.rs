@@ -24,11 +24,16 @@ pub enum Rounding {
 }
 
 impl Rounding {
+    /// Every supported rounding mode. [`Self::parse`] and
+    /// [`Self::parse_short`] scan this list, so parseable names cannot
+    /// drift from `name()`/`short_name()` outputs (same registry
+    /// discipline as [`Grouping::ALL`] and
+    /// [`crate::coordinator::Backend::ALL`]).
+    pub const ALL: [Rounding; 2] = [Rounding::Stochastic, Rounding::Nearest];
+
     pub fn parse(s: &str) -> anyhow::Result<Rounding> {
-        Ok(match s {
-            "stochastic" => Rounding::Stochastic,
-            "nearest" => Rounding::Nearest,
-            _ => anyhow::bail!("unknown rounding {s:?}"),
+        Self::ALL.into_iter().find(|r| r.name() == s).ok_or_else(|| {
+            anyhow::anyhow!("unknown rounding {s:?} (have {:?})", Self::ALL.map(|r| r.name()))
         })
     }
 
@@ -37,6 +42,24 @@ impl Rounding {
             Rounding::Stochastic => "stochastic",
             Rounding::Nearest => "nearest",
         }
+    }
+
+    /// Short token used inside [`QuantConfig`] names (`"sr"`/`"nr"`).
+    pub fn short_name(&self) -> &'static str {
+        match self {
+            Rounding::Stochastic => "sr",
+            Rounding::Nearest => "nr",
+        }
+    }
+
+    /// Inverse of [`Self::short_name`], scanning [`Self::ALL`].
+    pub fn parse_short(s: &str) -> anyhow::Result<Rounding> {
+        Self::ALL.into_iter().find(|r| r.short_name() == s).ok_or_else(|| {
+            anyhow::anyhow!(
+                "unknown rounding token {s:?} (have {:?})",
+                Self::ALL.map(|r| r.short_name())
+            )
+        })
     }
 }
 
@@ -91,24 +114,23 @@ impl QuantConfig {
         })
     }
 
-    /// Stable short name matching Python `QuantConfig.name()`.
+    /// Stable short name matching Python `QuantConfig.name()`. The
+    /// grouping/rounding tokens come from the same
+    /// [`Grouping::short_name`] / [`Rounding::short_name`] registries
+    /// that [`Self::parse_name`] scans, so `parse_name(name())` is a
+    /// round trip by construction for every supported config.
     pub fn name(&self) -> String {
         if !self.enabled {
             return "fp32".to_string();
         }
-        let g = match self.grouping {
-            Grouping::None => "g1",
-            Grouping::First => "gf",
-            Grouping::Second => "gs",
-            Grouping::Both => "gnc",
-        };
-        let r = match self.rounding {
-            Rounding::Stochastic => "sr",
-            Rounding::Nearest => "nr",
-        };
         format!(
             "e{}m{}_{}_eg{}mg{}_{}",
-            self.element.e, self.element.m, g, self.group.e, self.group.m, r
+            self.element.e,
+            self.element.m,
+            self.grouping.short_name(),
+            self.group.e,
+            self.group.m,
+            self.rounding.short_name()
         )
     }
 
@@ -139,18 +161,8 @@ impl QuantConfig {
             parts.len() == 4,
             "config {s:?}: expected eEmM_<grouping>_egEmgM_<rounding> or \"fp32\""
         );
-        let grouping = match parts[1] {
-            "g1" => Grouping::None,
-            "gf" => Grouping::First,
-            "gs" => Grouping::Second,
-            "gnc" => Grouping::Both,
-            other => anyhow::bail!("config {s:?}: unknown grouping {other:?}"),
-        };
-        let rounding = match parts[3] {
-            "sr" => Rounding::Stochastic,
-            "nr" => Rounding::Nearest,
-            other => anyhow::bail!("config {s:?}: unknown rounding {other:?}"),
-        };
+        let grouping = Grouping::parse_short(parts[1]).map_err(|e| e.context(format!("config {s:?}")))?;
+        let rounding = Rounding::parse_short(parts[3]).map_err(|e| e.context(format!("config {s:?}")))?;
         Ok(QuantConfig {
             element: parse_em(parts[0], "e", "m")?,
             group: parse_em(parts[2], "eg", "mg")?,
@@ -413,6 +425,52 @@ mod tests {
         assert!(QuantConfig::parse_name("nope").is_err());
         assert!(QuantConfig::parse_name("e2m4_gx_eg8mg1_sr").is_err());
         assert!(QuantConfig::parse_name("e2m4_gnc_eg8mg1_xx").is_err());
+    }
+
+    #[test]
+    fn every_supported_name_round_trips_through_the_registry() {
+        // property test over the full generator grid: parse_name is the
+        // exact inverse of name() for every grouping x rounding (from
+        // their ALL registries) x a spread of element/group formats, so
+        // validate_native_config error listings can never name a config
+        // that does not parse (or vice versa)
+        let mut count = 0usize;
+        for grouping in Grouping::ALL {
+            for rounding in Rounding::ALL {
+                for e_x in 0..=3u32 {
+                    for m_x in 0..=4u32 {
+                        for (e_g, m_g) in [(8u32, 1u32), (8, 0), (4, 2)] {
+                            let cfg = QuantConfig {
+                                element: EmFormat::new(e_x, m_x),
+                                group: EmFormat::new(e_g, m_g),
+                                grouping,
+                                rounding,
+                                enabled: true,
+                            };
+                            let name = cfg.name();
+                            let parsed = QuantConfig::parse_name(&name)
+                                .unwrap_or_else(|e| panic!("{name}: {e:#}"));
+                            assert_eq!(parsed, cfg, "{name}");
+                            assert_eq!(parsed.name(), name, "{name}: second trip");
+                            count += 1;
+                        }
+                    }
+                }
+            }
+        }
+        assert_eq!(count, 4 * 2 * 4 * 5 * 3, "grid fully enumerated");
+        let fp = QuantConfig::parse_name("fp32").unwrap();
+        assert_eq!(fp, QuantConfig::fp32());
+        assert_eq!(fp.name(), "fp32");
+        // unknown tokens list every valid short name
+        let err = format!("{:#}", QuantConfig::parse_name("e2m4_gx_eg8mg1_sr").unwrap_err());
+        for g in Grouping::ALL {
+            assert!(err.contains(g.short_name()), "{err}");
+        }
+        let err = format!("{:#}", QuantConfig::parse_name("e2m4_gnc_eg8mg1_xx").unwrap_err());
+        for r in Rounding::ALL {
+            assert!(err.contains(r.short_name()), "{err}");
+        }
     }
 
     #[test]

@@ -166,23 +166,39 @@ impl StepAudit {
         self.dgrad = dgrad;
     }
 
+    /// Accumulate another step's per-pass totals into `self` (sum over
+    /// counters, max over `peak_acc_bits`; the per-layer stream is not
+    /// accumulated). The lab runner uses this to roll a whole run's audit
+    /// stream up into the `audit_totals` of `trial_output.json`.
+    pub fn merge_totals(&mut self, other: &StepAudit) {
+        self.forward.merge(&other.forward);
+        self.wgrad.merge(&other.wgrad);
+        self.dgrad.merge(&other.dgrad);
+    }
+
+    /// Per-pass totals as a JSON object (the `totals` sub-object of
+    /// [`Self::to_json`], reused by the lab runner's `trial_output.json`).
+    pub fn totals_json(&self) -> Json {
+        let mut totals = BTreeMap::new();
+        totals.insert("forward".to_string(), self.forward.to_json());
+        totals.insert("wgrad".to_string(), self.wgrad.to_json());
+        totals.insert("dgrad".to_string(), self.dgrad.to_json());
+        Json::Obj(totals)
+    }
+
     /// One audit-stream record (`schemas/audit_step.schema.json`): the
     /// per-layer records plus the roll-up totals, tagged with the run
     /// context. `coordinator::train_native` writes one such record per
     /// step to `<tag>.audit.jsonl`; `bench_train_step` writes one to
     /// `AUDIT_step.json` for CI schema validation.
     pub fn to_json(&self, model: &str, cfg: &str, batch: usize, step: u64) -> Json {
-        let mut totals = BTreeMap::new();
-        totals.insert("forward".to_string(), self.forward.to_json());
-        totals.insert("wgrad".to_string(), self.wgrad.to_json());
-        totals.insert("dgrad".to_string(), self.dgrad.to_json());
         let mut m = BTreeMap::new();
         m.insert("audit".to_string(), Json::Str("train_step".to_string()));
         m.insert("model".to_string(), Json::Str(model.to_string()));
         m.insert("cfg".to_string(), Json::Str(cfg.to_string()));
         m.insert("batch".to_string(), Json::Num(batch as f64));
         m.insert("step".to_string(), Json::Num(step as f64));
-        m.insert("totals".to_string(), Json::Obj(totals));
+        m.insert("totals".to_string(), self.totals_json());
         m.insert(
             "layers".to_string(),
             Json::Arr(self.layers.iter().map(LayerAudit::to_json).collect()),

@@ -242,6 +242,22 @@ pub fn native_model(name: &str, qcfg: QuantConfig, seed: u64) -> Result<NativeMo
     })
 }
 
+/// FNV-1a checksum over the exact bit pattern of a flat parameter state
+/// (little-endian `to_bits` bytes). Two runs with identical configs and
+/// seeds end in the same checksum — the lab runner records it in
+/// `trial_output.json` as the bit-identity fingerprint that the
+/// crash-resume test compares across re-runs.
+pub fn state_checksum(state: &[f32]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for v in state {
+        for b in v.to_bits().to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    }
+    h
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -250,6 +266,17 @@ mod tests {
     fn batch(n: usize, seed: u64) -> (Vec<f32>, Vec<i32>) {
         let ds = SynthCifar::new(DatasetConfig { noise: 1.0, label_noise: 0.0, seed, ..Default::default() });
         ds.batch(n, streams::TRAIN, 0)
+    }
+
+    #[test]
+    fn state_checksum_is_bit_sensitive() {
+        let a = [0.5f32, -1.25, 3.0];
+        let mut b = a;
+        assert_eq!(state_checksum(&a), state_checksum(&b));
+        b[1] = f32::from_bits(b[1].to_bits() ^ 1); // one ULP flip
+        assert_ne!(state_checksum(&a), state_checksum(&b));
+        assert_ne!(state_checksum(&[0.0]), state_checksum(&[-0.0]), "sign bit counts");
+        assert_ne!(state_checksum(&[]), state_checksum(&[0.0]));
     }
 
     #[test]

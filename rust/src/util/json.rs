@@ -101,6 +101,18 @@ impl Json {
         }
     }
 
+    /// Render a scalar as the string the typed config registry parses:
+    /// strings pass through, numbers/bools print in their compact JSON
+    /// form (shortest round-trip for numbers, so `0.05` stays `"0.05"`).
+    /// Arrays, objects and null are not scalars — None.
+    pub fn coerce_string(&self) -> Option<String> {
+        match self {
+            Json::Str(s) => Some(s.clone()),
+            Json::Num(_) | Json::Bool(_) => Some(self.to_string_compact()),
+            _ => None,
+        }
+    }
+
     /// Required-field helpers that produce readable errors.
     pub fn req(&self, key: &str) -> anyhow::Result<&Json> {
         self.get(key)
@@ -438,6 +450,16 @@ mod tests {
         let line = v.to_string_compact();
         assert!(!line.contains('\n'), "{line:?}");
         assert_eq!(Json::parse(&line).unwrap(), v);
+    }
+
+    #[test]
+    fn coerce_string_scalars_only() {
+        assert_eq!(Json::Str("x".into()).coerce_string(), Some("x".into()));
+        assert_eq!(Json::Num(12.0).coerce_string(), Some("12".into()));
+        assert_eq!(Json::Num(0.05).coerce_string(), Some("0.05".into()));
+        assert_eq!(Json::Bool(true).coerce_string(), Some("true".into()));
+        assert_eq!(Json::Null.coerce_string(), None);
+        assert_eq!(Json::Arr(vec![]).coerce_string(), None);
     }
 
     #[test]

@@ -1,0 +1,266 @@
+//! End-to-end tests of the declarative lab runner: a plan file expands
+//! deterministically, `lab::run_plan` executes every trial into its own
+//! directory (trial_input.json + audit stream + trial_output.json),
+//! re-runs are crash-resumable — only trials whose existing output fails
+//! validation re-execute, and a re-executed trial reproduces its output
+//! bit-for-bit (fixed seeds) outside the wall-clock `timing` object — and
+//! the analysis step emits the ranked JSONL + markdown tables.
+
+use std::path::PathBuf;
+
+use mls_train::coordinator::lab::{self, Plan, TrialStatus};
+use mls_train::util::json::Json;
+
+/// A fresh scratch dir per test (tests run in parallel).
+fn scratch(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("mls_lab_test_{name}"));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// The 2×2 test plan: cnn_t × {fp32, e2m4} × seeds {0, 1}, tiny steps.
+fn plan_2x2() -> Plan {
+    let v = Json::parse(
+        r#"{
+            "name": "resume2x2",
+            "base": {"steps": 3, "batch": 4, "eval_every": 2, "eval_batches": 1,
+                     "noise": 1.0, "label_noise": 0.0},
+            "grid": {"cfg": ["fp32", "e2m4_gnc_eg8mg1_sr"], "model": ["cnn_t"]},
+            "seeds": [0, 1]
+        }"#,
+    )
+    .unwrap();
+    Plan::from_json(&v).unwrap()
+}
+
+fn statuses_of(report: &lab::LabReport) -> Vec<(&str, TrialStatus)> {
+    report.statuses.iter().map(|(id, s)| (id.as_str(), *s)).collect()
+}
+
+/// Parse a trial_output.json and drop the wall-clock `timing` object —
+/// everything left must be a pure function of the resolved config.
+fn parsed_minus_timing(path: &std::path::Path) -> Json {
+    let mut v = Json::parse(&std::fs::read_to_string(path).unwrap()).unwrap();
+    if let Json::Obj(m) = &mut v {
+        assert!(m.remove("timing").is_some(), "{}: no timing object", path.display());
+    }
+    v
+}
+
+#[test]
+fn committed_example_plans_expand() {
+    // integration tests run with cwd = rust/, the crate manifest dir
+    let smoke = Plan::load(std::path::Path::new("../examples/plan_smoke.json")).unwrap();
+    let trials = smoke.trials().unwrap();
+    assert_eq!(trials.len(), 4, "smoke: cnn_t x 2 cfgs x 2 seeds");
+    assert!(trials.iter().all(|t| t.config.steps == 6 && t.config.batch == 8));
+
+    let table2 = Plan::load(std::path::Path::new("../examples/plan_table2.json")).unwrap();
+    let trials = table2.trials().unwrap();
+    assert_eq!(trials.len(), 12, "table2: 2 models x 3 cfgs x 2 optimizers");
+    let ids: Vec<&str> = trials.iter().map(|t| t.id.as_str()).collect();
+    assert!(ids.contains(&"t000__cnn_t__fp32__s0"), "{ids:?}");
+    // every model/cfg/optimizer combination appears exactly once
+    let mut combos: Vec<(String, String, String)> = trials
+        .iter()
+        .map(|t| (t.config.model.clone(), t.config.cfg_name.clone(), t.config.optimizer.clone()))
+        .collect();
+    combos.sort();
+    combos.dedup();
+    assert_eq!(combos.len(), 12);
+}
+
+#[test]
+fn crash_resume_reruns_only_the_corrupted_trial_bit_identically() {
+    let out = scratch("crash_resume");
+    let plan = plan_2x2();
+
+    // fresh run: all four trials execute
+    let r1 = lab::run_plan(&plan, &out, false).unwrap();
+    assert_eq!(r1.ran(), 4);
+    assert_eq!(r1.skipped(), 0);
+    let ids: Vec<&str> = r1.statuses.iter().map(|(id, _)| id.as_str()).collect();
+    assert_eq!(
+        ids,
+        vec![
+            "t000__cnn_t__fp32__s0",
+            "t001__cnn_t__fp32__s1",
+            "t002__cnn_t__e2m4_gnc_eg8mg1_sr__s0",
+            "t003__cnn_t__e2m4_gnc_eg8mg1_sr__s1",
+        ]
+    );
+
+    let run_dir = out.join("resume2x2");
+    let victim = "t002__cnn_t__e2m4_gnc_eg8mg1_sr__s0";
+    let victim_out = run_dir.join(victim).join("trial_output.json");
+
+    // per-trial artifacts exist: input, output, and (quantized only) the
+    // streamed audit
+    for id in &ids {
+        let dir = run_dir.join(id);
+        assert!(dir.join("trial_input.json").is_file(), "{id}: no trial_input.json");
+        assert!(dir.join("trial_output.json").is_file(), "{id}: no trial_output.json");
+        let audit = dir.join(format!(
+            "cnn_t_{}_s{}.audit.jsonl",
+            if id.contains("fp32") { "fp32" } else { "e2m4_gnc_eg8mg1_sr" },
+            id.rsplit("__s").next().unwrap()
+        ));
+        assert_eq!(
+            audit.is_file(),
+            !id.contains("fp32"),
+            "{id}: audit stream presence (fp32 collects none)"
+        );
+        if audit.is_file() {
+            let text = std::fs::read_to_string(&audit).unwrap();
+            assert_eq!(text.lines().count(), 3, "one audit record per step");
+            for line in text.lines() {
+                Json::parse(line).unwrap();
+            }
+        }
+    }
+
+    let pristine = parsed_minus_timing(&victim_out);
+
+    // crash simulation: truncate the victim's output mid-bytes
+    let bytes = std::fs::read(&victim_out).unwrap();
+    std::fs::write(&victim_out, &bytes[..bytes.len() / 2]).unwrap();
+
+    // resume: ONLY the corrupted trial re-executes
+    let r2 = lab::run_plan(&plan, &out, false).unwrap();
+    let expect: Vec<(&str, TrialStatus)> = ids
+        .iter()
+        .map(|&id| (id, if id == victim { TrialStatus::Ran } else { TrialStatus::Skipped }))
+        .collect();
+    assert_eq!(statuses_of(&r2), expect);
+    assert_eq!(r2.ran(), 1);
+    assert_eq!(r2.skipped(), 3);
+
+    // fixed seeds: the re-run output is bit-identical outside `timing`
+    assert_eq!(
+        parsed_minus_timing(&victim_out).to_string_pretty(),
+        pristine.to_string_pretty(),
+        "re-executed trial must reproduce its output bit-for-bit"
+    );
+
+    // third invocation: everything validates, nothing runs
+    let r3 = lab::run_plan(&plan, &out, false).unwrap();
+    assert_eq!(r3.ran(), 0);
+    assert_eq!(r3.skipped(), 4);
+
+    // a stale config (edited plan) also invalidates: same name, new steps
+    let mut edited = plan.clone();
+    edited.base.iter_mut().find(|(k, _)| k == "steps").unwrap().1 = "4".to_string();
+    let r4 = lab::run_plan(&edited, &out, false).unwrap();
+    assert_eq!(r4.ran(), 4, "config echo mismatch must re-run every trial");
+}
+
+#[test]
+fn trial_outputs_have_the_documented_shape() {
+    let out = scratch("output_shape");
+    let plan = plan_2x2();
+    lab::run_plan(&plan, &out, false).unwrap();
+    let run_dir = out.join("resume2x2");
+
+    let v = Json::parse(
+        &std::fs::read_to_string(
+            run_dir.join("t002__cnn_t__e2m4_gnc_eg8mg1_sr__s0").join("trial_output.json"),
+        )
+        .unwrap(),
+    )
+    .unwrap();
+    assert_eq!(v.req("plan").unwrap().as_str(), Some("resume2x2"));
+    assert_eq!(v.req("seed").unwrap().as_usize(), Some(0));
+    let cfg = v.req("config").unwrap().as_obj().unwrap();
+    assert_eq!(cfg.get("model").unwrap().as_str(), Some("cnn_t"));
+    assert_eq!(cfg.get("steps").unwrap().as_str(), Some("3"));
+    let r = v.req("result").unwrap();
+    assert_eq!(r.req("status").unwrap().as_str(), Some("ok"));
+    assert_eq!(r.req("steps_run").unwrap().as_usize(), Some(3));
+    assert_eq!(r.req("loss_curve").unwrap().as_arr().unwrap().len(), 3);
+    assert_eq!(r.req("acc_curve").unwrap().as_arr().unwrap().len(), 3);
+    assert_eq!(r.req("eval").unwrap().as_arr().unwrap().len(), 1, "eval_every=2 over 3 steps");
+    assert_eq!(r.req("audit_steps").unwrap().as_usize(), Some(3));
+    let totals = r.req("audit_totals").unwrap();
+    assert!(totals.req("forward").unwrap().req("convs").unwrap().as_usize().unwrap() > 0);
+    let checksum = r.req("state_checksum").unwrap().as_str().unwrap();
+    assert_eq!(checksum.len(), 16, "fnv64 hex: {checksum:?}");
+    v.req("timing").unwrap().req("mean_step_ms").unwrap().as_f64().unwrap();
+
+    // fp32 trial: no audit totals, audit_steps 0
+    let v = Json::parse(
+        &std::fs::read_to_string(run_dir.join("t000__cnn_t__fp32__s0").join("trial_output.json"))
+            .unwrap(),
+    )
+    .unwrap();
+    let r = v.req("result").unwrap();
+    assert_eq!(r.req("audit_steps").unwrap().as_usize(), Some(0));
+    assert!(r.get("audit_totals").is_none());
+
+    // the run dir carries a provenance copy of the normalized plan
+    let prov = Json::parse(&std::fs::read_to_string(run_dir.join("plan.json")).unwrap()).unwrap();
+    assert_eq!(Plan::from_json(&prov).unwrap(), plan);
+}
+
+#[test]
+fn analysis_ranks_trials_and_builds_tables() {
+    let out = scratch("analysis");
+    let plan = plan_2x2();
+    let report = lab::run_plan(&plan, &out, false).unwrap();
+    let analysis = report.analysis_dir;
+
+    let ranked = std::fs::read_to_string(analysis.join("ranked.jsonl")).unwrap();
+    let rows: Vec<Json> = ranked.lines().map(|l| Json::parse(l).unwrap()).collect();
+    assert_eq!(rows.len(), 4, "one ranked record per trial");
+    let mut last_acc = f64::INFINITY;
+    for (i, row) in rows.iter().enumerate() {
+        assert_eq!(row.req("rank").unwrap().as_usize(), Some(i + 1));
+        assert_eq!(row.req("status").unwrap().as_str(), Some("ok"));
+        let acc = row.req("test_acc").unwrap().as_f64().unwrap();
+        assert!(acc <= last_acc, "ranking must be by descending accuracy");
+        last_acc = acc;
+        let bits = row.req("bits").unwrap().as_usize().unwrap();
+        let cfg = row.req("cfg").unwrap().as_str().unwrap();
+        assert_eq!(bits, if cfg == "fp32" { 32 } else { 7 }, "{cfg}: element bits");
+    }
+
+    let tables = std::fs::read_to_string(analysis.join("tables.md")).unwrap();
+    for needle in [
+        "## Ranked trials",
+        "## Best format per model",
+        "## Accuracy-vs-bitwidth frontier",
+        "**best**",
+        "| cnn_t |",
+        "e2m4_gnc_eg8mg1_sr",
+        "fp32",
+    ] {
+        assert!(tables.contains(needle), "tables.md missing {needle:?}:\n{tables}");
+    }
+
+    // the standalone analyze entry point rebuilds the same files
+    std::fs::remove_dir_all(&analysis).unwrap();
+    let rebuilt = lab::analyze(&report.run_dir).unwrap();
+    assert_eq!(std::fs::read_to_string(rebuilt.join("ranked.jsonl")).unwrap(), ranked);
+}
+
+#[test]
+fn run_plan_file_reads_a_plan_from_disk() {
+    let out = scratch("plan_file");
+    let plan_path = out.join("p.json");
+    std::fs::write(
+        &plan_path,
+        r#"{"name": "fileplan",
+            "base": {"steps": 2, "batch": 4, "eval_every": 0, "eval_batches": 1,
+                     "noise": 1.0, "label_noise": 0.0},
+            "grid": {"model": ["cnn_t"], "cfg": ["fp32"]}}"#,
+    )
+    .unwrap();
+    let report = lab::run_plan_file(&plan_path, &out, false).unwrap();
+    assert_eq!(report.ran(), 1);
+    assert!(report.summary().contains("ran 1, skipped 0"), "{}", report.summary());
+    assert!(out.join("fileplan").join("t000__cnn_t__fp32__s0").join("trial_output.json").is_file());
+    // --force re-executes validated trials
+    let forced = lab::run_plan_file(&plan_path, &out, true).unwrap();
+    assert_eq!(forced.ran(), 1);
+    assert_eq!(forced.skipped(), 0);
+}

@@ -1,9 +1,9 @@
 #!/usr/bin/env python3
-"""Validate a BENCH_*.json / AUDIT_*.json report against its checked-in
-schema.
+"""Validate BENCH_*.json / AUDIT_*.json / lab-runner JSON documents
+against their checked-in schemas.
 
 Stdlib-only (CI's build-test job has no pip step), implementing the JSON
-Schema subset the bench/audit schemas use: type, const, required,
+Schema subset the bench/audit/lab schemas use: type, const, required,
 properties, additionalProperties (as a sub-schema), minProperties,
 minimum, exclusiveMinimum, and for arrays minItems + items (as a
 sub-schema applied to every element — the per-layer audit stream's
@@ -11,7 +11,12 @@ sub-schema applied to every element — the per-layer audit stream's
 results block, non-positive throughput, empty audit stream — fails the
 build instead of silently shipping in the bench-trajectory artifact.
 
-Usage: validate_bench.py <report.json> <schema.json>
+Usage: validate_bench.py <report>... <schema.json>
+
+Every argument but the last is a document to validate against the final
+schema argument. A `.jsonl` document is validated line by line (each
+non-empty line one instance of the schema — the audit stream and the lab
+analysis ranking both use this form); anything else is one JSON document.
 """
 import json
 import sys
@@ -68,36 +73,63 @@ def check(value, schema, path, errors):
                 check(sub, extra, f"{path}.{key}", errors)
 
 
-def main():
-    if len(sys.argv) != 3:
-        sys.exit(__doc__)
-    report_path, schema_path = sys.argv[1], sys.argv[2]
-    try:
+def load_instances(report_path):
+    """One (label, parsed-document) pair per schema instance in the file:
+    the whole document, or one per non-empty line for `.jsonl`."""
+    if report_path.endswith(".jsonl"):
         with open(report_path) as f:
-            report = json.load(f)
-    except (OSError, json.JSONDecodeError) as e:
-        sys.exit(f"FAIL {report_path}: unreadable or not JSON: {e}")
-    with open(schema_path) as f:
-        schema = json.load(f)
-    errors = []
-    check(report, schema, "$", errors)
-    if errors:
-        if "awaiting first measured run" in str(report.get("status", "")) and not report.get(
-            "results"
-        ):
+            lines = [(i, ln) for i, ln in enumerate(f, 1) if ln.strip()]
+        if not lines:
+            raise ValueError("empty jsonl stream")
+        return [(f"{report_path}:{i}", json.loads(ln)) for i, ln in lines]
+    with open(report_path) as f:
+        return [(report_path, json.load(f))]
+
+
+def validate_one(report_path, schema, schema_path):
+    """Validate one file; return True if it passed, printing a verdict."""
+    try:
+        instances = load_instances(report_path)
+    except (OSError, ValueError, json.JSONDecodeError) as e:
+        print(f"FAIL {report_path}: unreadable or not JSON: {e}")
+        return False
+    ok = True
+    for label, report in instances:
+        errors = []
+        check(report, schema, "$", errors)
+        if not errors:
+            continue
+        if isinstance(report, dict) and "awaiting first measured run" in str(
+            report.get("status", "")
+        ) and not report.get("results"):
             # the committed tree ships an explicitly-labeled placeholder
             # (no toolchain in the authoring container); it is still a
             # failure — only a measured report may pass the gate
             print(
-                f"FAIL {report_path}: committed placeholder, not a measured report — "
+                f"FAIL {label}: committed placeholder, not a measured report — "
                 f"run `cargo bench` to produce one (status: {report['status'][:80]}...)"
             )
-            sys.exit(1)
-        print(f"FAIL {report_path} does not match {schema_path}:")
+            ok = False
+            continue
+        print(f"FAIL {label} does not match {schema_path}:")
         for e in errors:
             print(f"  - {e}")
+        ok = False
+    if ok:
+        n = len(instances)
+        suffix = f" ({n} records)" if n > 1 or report_path.endswith(".jsonl") else ""
+        print(f"OK {report_path} matches {schema_path}{suffix}")
+    return ok
+
+
+def main():
+    if len(sys.argv) < 3:
+        sys.exit(__doc__)
+    report_paths, schema_path = sys.argv[1:-1], sys.argv[-1]
+    with open(schema_path) as f:
+        schema = json.load(f)
+    if not all([validate_one(p, schema, schema_path) for p in report_paths]):
         sys.exit(1)
-    print(f"OK {report_path} matches {schema_path}")
 
 
 if __name__ == "__main__":
