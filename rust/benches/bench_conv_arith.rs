@@ -8,8 +8,9 @@
 //! the repo root (schema: `schemas/bench_conv.schema.json`, validated in
 //! CI). `--smoke` / `MLS_BENCH_SMOKE=1` switches to the fast CI
 //! anti-bit-rot mode; `MLS_BENCH_ENFORCE=1` turns the serial speedup
-//! ratios into hard gates (exit 1 on regression): packed >= planar and
-//! planar >= legacy at 1 thread.
+//! ratios into hard gates (exit 1 on regression): packed >= planar,
+//! planar >= legacy, and (when a vector ISA is active) the SIMD
+//! microkernel >= the forced-scalar kernel, all at 1 thread.
 
 use std::time::Duration;
 
@@ -23,6 +24,7 @@ use mls_train::util::bench::{bench, black_box, budget, enforce_mode, smoke_mode,
 use mls_train::util::json::Json;
 use mls_train::util::parallel;
 use mls_train::util::rng::Pcg32;
+use mls_train::util::simd::{self, Level};
 
 fn main() {
     let mut rng = Pcg32::seeded(2);
@@ -42,6 +44,9 @@ fn main() {
     let mut report = BenchReport::new("BENCH_conv.json", "bench_conv_arith");
     report.set("threads", Json::Num(threads as f64));
     report.set("macs_per_conv", Json::Num(macs as f64));
+    let simd_level = simd::active();
+    report.set("simd", Json::Str(simd_level.name().to_string()));
+    println!("# simd dispatch: {}", simd::describe());
     report.set(
         "shapes",
         Json::Str(format!("w[Co,Ci,Kh,Kw]={wshape:?} a[N,Ci,H,W]={ashape:?} stride=1 pad=1")),
@@ -127,6 +132,39 @@ fn main() {
     report.add_result(&dgrad_serial, macs, "mac");
     report.add_ratio("dgrad_vs_packed_serial", dgrad_vs_packed);
 
+    // SIMD microkernel vs the forced-scalar reference on the SAME packed
+    // engine, serial, for all three Alg. 1 passes — the ratio isolates the
+    // Eq. 7 vector MAC (pack/epilogue/scheduling are shared). On a scalar
+    // host (simd = "off") these ratios read ~1.0 by construction.
+    let prev = simd::set_level(Level::Off);
+    let scalar_fwd = bench("lowbit_conv/packed_e2m4_scalar_serial", b, || {
+        black_box(lowbit_conv_threaded(&tw, &ta, 1, 1, 1));
+    });
+    let scalar_wgrad = bench("lowbit_conv/wgrad_e2m4_scalar_serial", b, || {
+        black_box(spec.weight_grad(&te, &ta, 1));
+    });
+    let scalar_dgrad = bench("lowbit_conv/dgrad_e2m4_scalar_serial", b, || {
+        black_box(spec.input_grad(&te, &tw, 1));
+    });
+    simd::set_level(prev);
+    let simd_vs_scalar = scalar_fwd.median.as_secs_f64() / packed_serial.median.as_secs_f64();
+    let simd_wgrad_vs_scalar =
+        scalar_wgrad.median.as_secs_f64() / wgrad_serial.median.as_secs_f64();
+    let simd_dgrad_vs_scalar =
+        scalar_dgrad.median.as_secs_f64() / dgrad_serial.median.as_secs_f64();
+    println!(
+        "  -> {:.1} MMAC/s scalar fwd ({} is {simd_vs_scalar:.2}x scalar; wgrad \
+         {simd_wgrad_vs_scalar:.2}x, dgrad {simd_dgrad_vs_scalar:.2}x, bit-identical)",
+        scalar_fwd.throughput_items(macs) / 1e6,
+        simd_level.name()
+    );
+    report.add_result(&scalar_fwd, macs, "mac");
+    report.add_result(&scalar_wgrad, macs, "mac");
+    report.add_result(&scalar_dgrad, macs, "mac");
+    report.add_ratio("simd_vs_scalar_serial", simd_vs_scalar);
+    report.add_ratio("simd_wgrad_vs_scalar_serial", simd_wgrad_vs_scalar);
+    report.add_ratio("simd_dgrad_vs_scalar_serial", simd_dgrad_vs_scalar);
+
     let wq = tw.dequantize();
     let aq = ta.dequantize();
     let float_serial = bench("conv2d_f32/float_path_serial", b, || {
@@ -185,6 +223,17 @@ fn main() {
         eprintln!(
             "PERF REGRESSION: packed-GEMM kernel is {packed_vs_planar:.3}x the planar kernel at \
              1 thread (< {floor})"
+        );
+        std::process::exit(1);
+    }
+    // The vectorized microkernel must not lose to the scalar reference it
+    // replaces (acceptance floor 1.0; only meaningful when a vector ISA
+    // is actually active — on a scalar host both sides run the same code).
+    if enforce_mode() && simd_level != Level::Off && simd_vs_scalar < 1.0 {
+        eprintln!(
+            "PERF REGRESSION: {} microkernel is {simd_vs_scalar:.3}x the forced-scalar kernel \
+             at 1 thread (< 1.0)",
+            simd_level.name()
         );
         std::process::exit(1);
     }

@@ -16,6 +16,7 @@ use mls_train::util::bench::{bench, black_box, budget, smoke_mode, BenchReport};
 use mls_train::util::json::Json;
 use mls_train::util::parallel;
 use mls_train::util::rng::Pcg32;
+use mls_train::util::simd::{self, Level};
 
 fn main() {
     let mut rng = Pcg32::seeded(1);
@@ -39,6 +40,9 @@ fn main() {
     report.set("threads", Json::Num(threads as f64));
     report.set("elements", Json::Num(n as f64));
     report.set("shape", Json::Str(format!("{shape:?}")));
+    let simd_level = simd::active();
+    report.set("simd", Json::Str(simd_level.name().to_string()));
+    println!("# simd dispatch: {}", simd::describe());
 
     // serial vs parallel on the headline config
     let cfg = QuantConfig::default();
@@ -57,6 +61,23 @@ fn main() {
     );
     report.add_result(&par, n as u64, "elem");
     report.add_ratio("threaded_vs_serial", threaded_vs_serial);
+
+    // SIMD element pass vs the forced-scalar reference, serial — isolates
+    // the vectorized |max| reduce + quantize lane (bit-identical by
+    // construction; ~1.0 on a scalar host where simd = "off")
+    let prev = simd::set_level(Level::Off);
+    let scalar_serial = bench("quantize/e2m4_nc_stochastic_scalar_serial", b, || {
+        black_box(quantize_threaded(&x, &shape, &cfg, &r, 1));
+    });
+    simd::set_level(prev);
+    let simd_vs_scalar = scalar_serial.median.as_secs_f64() / serial.median.as_secs_f64();
+    println!(
+        "  -> {:.1} Melem/s scalar ({} is {simd_vs_scalar:.2}x scalar, bit-identical)",
+        scalar_serial.throughput_items(n as u64) / 1e6,
+        simd_level.name()
+    );
+    report.add_result(&scalar_serial, n as u64, "elem");
+    report.add_ratio("quantize_simd_vs_scalar", simd_vs_scalar);
 
     for (name, cfg) in [
         ("e2m4_nc_nearest", QuantConfig { rounding: Rounding::Nearest, ..Default::default() }),

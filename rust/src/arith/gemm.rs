@@ -22,14 +22,19 @@
 //! The microkernel is an [`MR`] x [`NR`] (4 x 8) register tile: MR output
 //! channels x NR output pixels accumulate in `i64` registers while both
 //! panel streams advance strictly forward; all trip counts are constants
-//! so the compiler unrolls the tile. Ragged edges (last channel block,
-//! last pixel block) run the same code over zero-padded lanes — a zero
-//! fraction is an arithmetic no-op for values AND for the running
-//! `|acc|` peak, so no separate edge kernel exists. The epilogue applies
-//! the per-`(co, ci)` [`GroupScaleFactor`] table hoisted per batch
-//! sample, and the inter-group adder tree writes each finished pixel
-//! straight into its `[N, Co, Ho, Wo]` row offset (no tile concatenation
-//! pass).
+//! so the compiler unrolls the tile. The tile reduction itself lives in
+//! [`super::simd`] — a scalar reference segment plus SSE4.1/AVX2/NEON
+//! vector segments over the pre-combined panels, selected per conv by
+//! [`crate::util::simd`] runtime dispatch and pinned bit-identical.
+//! Ragged edges (last channel block, last pixel block) run the same
+//! full-tile code over zero-padded lanes — a zero operand is an
+//! arithmetic no-op for values AND for the running `|acc|` peak, so no
+//! separate edge kernel exists; one masked-tail epilogue
+//! ([`flush_group_tile`] + [`write_tile_rows`], shared by every dispatch
+//! level) applies the per-`(co, ci)` [`GroupScaleFactor`] table hoisted
+//! per batch sample and the inter-group adder tree, writing each
+//! finished pixel straight into its `[N, Co, Ho, Wo]` row offset (no
+//! tile concatenation pass).
 //!
 //! ## Bit-identity
 //!
@@ -49,11 +54,13 @@
 //!
 //! [`GroupScaleFactor`]: super::group_scale::GroupScaleFactor
 
+use super::group_scale::GroupScaleFactor;
 use super::pack::{PackScratch, PackedWeights, MR, NR};
 use super::planes::DecodedPlanes;
 use super::spec::SpecDims;
 use super::tree::tree_sum;
 use crate::util::parallel::DisjointWriter;
+use crate::util::simd::Level;
 
 /// Physically in-bounds kernel *columns* summed over a row's output
 /// positions — the geometry-only half of the analytic `mul_ops` count
@@ -97,6 +104,7 @@ pub(crate) fn conv_row_packed(
     scale_log2: i32,
     st: f32,
     zw: &DisjointWriter<f32>,
+    level: Level,
 ) -> (i64, usize) {
     let rows_ib = scratch.pack_row(ap, u, oy, &d);
     let SpecDims { g_n, kh, kw, ho, wo, .. } = d;
@@ -106,7 +114,7 @@ pub(crate) fn conv_row_packed(
     let kk = kh * kw;
     let wo_p = wo.div_ceil(NR) * NR;
     // split the arena so the panel borrows stay disjoint
-    let PackScratch { a_frac, a_shift, cbuf, factors } = scratch;
+    let PackScratch { a_comb, cbuf, factors } = scratch;
     cbuf.resize(MR * NR * g_n, 0.0);
     let mut peak: i64 = 0;
 
@@ -115,55 +123,94 @@ pub(crate) fn conv_row_packed(
         for b in 0..pw.blocks {
             let m0 = b * MR;
             let mr = (v_n - m0).min(MR);
-            let wfrac = &pw.frac[b * kdim * MR..(b + 1) * kdim * MR];
-            let wshift = &pw.shift[b * kdim * MR..(b + 1) * kdim * MR];
+            let wcomb = &pw.comb[b * kdim * MR..(b + 1) * kdim * MR];
             for g in 0..g_n {
                 // Kc segment: one scaling group's kh*kw taps, register
-                // accumulators + lane-wise running |acc| peaks
+                // accumulators + lane-wise running |acc| peaks, at the
+                // runtime-dispatched ISA level (bit-identical across all)
                 let mut acc = [[0i64; NR]; MR];
                 let mut pk = [[0i64; NR]; MR];
-                for t in 0..kk {
-                    let k = g * kk + t;
-                    let wf = &wfrac[k * MR..k * MR + MR];
-                    let ws = &wshift[k * MR..k * MR + MR];
-                    let af = &a_frac[k * wo_p + x0..k * wo_p + x0 + NR];
-                    let ash = &a_shift[k * wo_p + x0..k * wo_p + x0 + NR];
-                    for (m, (accm, pkm)) in acc.iter_mut().zip(pk.iter_mut()).enumerate() {
-                        let wfm = wf[m] as i64;
-                        let wsm = ws[m] as u32;
-                        for x in 0..NR {
-                            let prod = wfm * af[x] as i64;
-                            accm[x] += prod << (wsm + ash[x] as u32);
-                            pkm[x] = pkm[x].max(accm[x].abs());
-                        }
-                    }
-                }
-                // epilogue: Eq. 8 group scale into the contribution rows
-                for m in 0..mr {
-                    let factor = factors[(m0 + m) * g_n + g];
-                    for x in 0..nr {
-                        cbuf[(m * NR + x) * g_n + g] = factor.apply(acc[m][x], scale_log2);
-                    }
-                }
-                for pkm in &pk {
-                    for &p in pkm {
-                        peak = peak.max(p);
-                    }
-                }
+                super::simd::mac_segment(
+                    level,
+                    &wcomb[g * kk * MR..(g + 1) * kk * MR],
+                    &a_comb[g * kk * wo_p + x0..],
+                    kk,
+                    wo_p,
+                    &mut acc,
+                    &mut pk,
+                );
+                peak = peak.max(flush_group_tile(
+                    &acc, &pk, mr, nr, m0, g, g_n, factors, cbuf, scale_log2,
+                ));
             }
-            // inter-group adder tree, straight into the output rows
-            for m in 0..mr {
-                let v = m0 + m;
-                // SAFETY: span (u, v, oy, x0..x0+nr) — work units own
-                // disjoint oy rows and x0 blocks are disjoint within one
-                // call, so no two live spans overlap
-                let out = unsafe { zw.span(((u * v_n + v) * ho + oy) * wo + x0, nr) };
-                for (x, slot) in out.iter_mut().enumerate() {
-                    let row = &cbuf[(m * NR + x) * g_n..(m * NR + x + 1) * g_n];
-                    *slot = st * tree_sum(row);
-                }
-            }
+            write_tile_rows(cbuf, mr, nr, m0, g_n, u, oy, x0, v_n, ho, wo, st, zw);
         }
     }
     (peak, rows_ib)
+}
+
+/// Masked-tail group epilogue shared by every dispatch level: apply the
+/// Eq. 8 [`GroupScaleFactor`] to the `mr` x `nr` live lanes of the
+/// finished register tile (scalar f32, never reordered) and return the
+/// tile's max running-|acc| peak merged over ALL lanes — padded lanes
+/// carry zero operands, hence zero peaks, so merging them is harmless
+/// and keeps the merge branch-free.
+#[allow(clippy::too_many_arguments)]
+fn flush_group_tile(
+    acc: &[[i64; NR]; MR],
+    pk: &[[i64; NR]; MR],
+    mr: usize,
+    nr: usize,
+    m0: usize,
+    g: usize,
+    g_n: usize,
+    factors: &[GroupScaleFactor],
+    cbuf: &mut [f32],
+    scale_log2: i32,
+) -> i64 {
+    for m in 0..mr {
+        let factor = factors[(m0 + m) * g_n + g];
+        for x in 0..nr {
+            cbuf[(m * NR + x) * g_n + g] = factor.apply(acc[m][x], scale_log2);
+        }
+    }
+    let mut peak = 0i64;
+    for pkm in pk {
+        for &p in pkm {
+            peak = peak.max(p);
+        }
+    }
+    peak
+}
+
+/// Masked-tail output flush shared by every dispatch level: adder-tree
+/// the `mr` x `nr` live contribution rows of a finished tile straight
+/// into their `[U, V, Ho, Wo]` offsets.
+#[allow(clippy::too_many_arguments)]
+fn write_tile_rows(
+    cbuf: &[f32],
+    mr: usize,
+    nr: usize,
+    m0: usize,
+    g_n: usize,
+    u: usize,
+    oy: usize,
+    x0: usize,
+    v_n: usize,
+    ho: usize,
+    wo: usize,
+    st: f32,
+    zw: &DisjointWriter<f32>,
+) {
+    for m in 0..mr {
+        let v = m0 + m;
+        // SAFETY: span (u, v, oy, x0..x0+nr) — work units own disjoint
+        // oy rows and x0 blocks are disjoint within one call, so no two
+        // live spans overlap
+        let out = unsafe { zw.span(((u * v_n + v) * ho + oy) * wo + x0, nr) };
+        for (x, slot) in out.iter_mut().enumerate() {
+            let row = &cbuf[(m * NR + x) * g_n..(m * NR + x + 1) * g_n];
+            *slot = st * tree_sum(row);
+        }
+    }
 }

@@ -17,10 +17,12 @@
 //! Eq. 7 MAC register-tiled, group scales applied in the epilogue);
 //! [`spec`] generalizes that engine to all three convolutions of the
 //! Alg. 1 training step (forward, weight-gradient, input-gradient) via
-//! the pass-generic [`spec::ConvSpec`] geometry; [`planes`] is the
-//! decode-once planar kernel kept as the bench baseline — all three
-//! forward kernels are bit-identical; [`bitwidth`] carries the Sec. V-C
-//! accumulation-width analysis.
+//! the pass-generic [`spec::ConvSpec`] geometry; [`simd`] holds the
+//! per-ISA (SSE4.1/AVX2/NEON) vector segment kernels the packed GEMM
+//! dispatches to at runtime — every level pinned bit-identical to the
+//! scalar reference; [`planes`] is the decode-once planar kernel kept as
+//! the bench baseline — all three forward kernels are bit-identical;
+//! [`bitwidth`] carries the Sec. V-C accumulation-width analysis.
 
 pub mod bitwidth;
 pub mod conv;
@@ -29,5 +31,6 @@ pub mod group_scale;
 pub mod intra;
 pub mod pack;
 pub mod planes;
+pub mod simd;
 pub mod spec;
 pub mod tree;

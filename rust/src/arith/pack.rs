@@ -12,7 +12,7 @@
 //! * [`PackedWeights`] — the decoded weight planes laid out once per conv
 //!   as `[co_blk][K]` panels (`K = Ci * Kh * Kw`), each panel interleaving
 //!   [`MR`] output-channel lanes per reduction step
-//!   (`frac[k * MR + m]`), so the microkernel reads one contiguous,
+//!   (`comb[k * MR + m]`), so the microkernel reads one contiguous,
 //!   forward-only stream no matter which output pixel it is producing.
 //!   Lanes past `Co` are zero (a zero fraction contributes nothing to
 //!   value, peak, or counters, so padded lanes are arithmetic no-ops).
@@ -21,9 +21,29 @@
 //!   [`NR`] lanes), zero-filled where the kernel window hangs over the
 //!   input border — or, under the pass-generic geometry of
 //!   [`super::spec::SpecDims`], where a dilated tap or a zero-upsampled
-//!   input hole contributes nothing (the Alg. 1 backward passes). Again
-//!   `frac`/`shift` are struct-of-arrays so the MAC reads two dense
-//!   streams.
+//!   input hole contributes nothing (the Alg. 1 backward passes).
+//!
+//! ## Pre-combined shift panels
+//!
+//! Earlier generations packed two struct-of-arrays streams per operand —
+//! i32 `signed_frac` plus u8 `shift` — and the microkernel computed
+//! Eq. 7's `acc += (wf * af) << (ws + as)` per lane. Vector ISAs dislike
+//! that shape: pre-AVX2 x86 has no per-lane variable 64-bit shift at
+//! all. Both panels therefore now carry ONE i32 plane of the
+//! **pre-combined** operand from [`DecodedPlanes::scaled_frac`]:
+//!
+//! ```text
+//! comb[i] = signed_frac[i] << shift[i]
+//! ```
+//!
+//! so the MAC collapses to a plain widening multiply-add,
+//! `acc += comb_w as i64 * comb_a as i64` — one `pmuldq`/`smlal` per
+//! vector of lanes, no shifts in the inner loop. This is exact (same
+//! i64 accumulator sequence, bit for bit) because decode asserts
+//! `(M+1) + (2^E - 2) <= 31`, so each shifted operand stays in i32 and
+//! each product in i64 — the same bound the shift-at-MAC form already
+//! needed to not overflow. Halving the stream count also drops the
+//! packed bytes per lane from 5 to 4.
 //!
 //! Both panels, the per-microtile contribution buffer, and the hoisted
 //! group-scale factor table live in a [`PackScratch`] arena owned by each
@@ -45,12 +65,12 @@ pub const MR: usize = 4;
 pub const NR: usize = 8;
 
 /// Decoded weight planes repacked into GEMM panels: `blocks` panels of
-/// `kdim * MR` lanes each, `frac[b * kdim * MR + k * MR + m]` holding
-/// `signed_frac` of output channel `b * MR + m` at reduction index `k`
-/// (zero for lanes past `co_n`), `shift` likewise.
+/// `kdim * MR` lanes each, `comb[b * kdim * MR + k * MR + m]` holding the
+/// pre-combined operand `scaled_frac` (`signed_frac << shift`) of output
+/// channel `b * MR + m` at reduction index `k` (zero for lanes past
+/// `co_n`).
 pub struct PackedWeights {
-    pub frac: Vec<i32>,
-    pub shift: Vec<u8>,
+    pub comb: Vec<i32>,
     pub co_n: usize,
     /// reduction length `Ci * Kh * Kw`
     pub kdim: usize,
@@ -65,31 +85,27 @@ pub fn pack_weights(wp: &DecodedPlanes, co_n: usize, kdim: usize, threads: usize
     assert_eq!(wp.len(), co_n * kdim, "weight planes do not match [Co, Ci*Kh*Kw]");
     let blocks = co_n.div_ceil(MR);
     // zero-init covers the padded lanes; ranges write straight into the
-    // final buffers at their block offsets (no collect-then-concat pass)
-    let mut frac = vec![0i32; blocks * kdim * MR];
-    let mut shift = vec![0u8; blocks * kdim * MR];
+    // final buffer at their block offsets (no collect-then-concat pass)
+    let mut comb = vec![0i32; blocks * kdim * MR];
     {
-        let frac_w = parallel::DisjointWriter::new(&mut frac);
-        let shift_w = parallel::DisjointWriter::new(&mut shift);
+        let comb_w = parallel::DisjointWriter::new(&mut comb);
         parallel::map_ranges(threads, blocks, |lo, hi| {
             // SAFETY: range [lo, hi) owns exactly the panel bytes
             // [lo*kdim*MR, hi*kdim*MR) and map_ranges ranges are disjoint
-            let f = unsafe { frac_w.span(lo * kdim * MR, (hi - lo) * kdim * MR) };
-            let s = unsafe { shift_w.span(lo * kdim * MR, (hi - lo) * kdim * MR) };
+            let c = unsafe { comb_w.span(lo * kdim * MR, (hi - lo) * kdim * MR) };
             for b in lo..hi {
                 let mr = (co_n - b * MR).min(MR);
                 let base = (b - lo) * kdim * MR;
                 for m in 0..mr {
                     let src = (b * MR + m) * kdim;
                     for k in 0..kdim {
-                        f[base + k * MR + m] = wp.signed_frac[src + k];
-                        s[base + k * MR + m] = wp.shift[src + k];
+                        c[base + k * MR + m] = wp.scaled_frac[src + k];
                     }
                 }
             }
         });
     }
-    PackedWeights { frac, shift, co_n, kdim, blocks }
+    PackedWeights { comb, co_n, kdim, blocks }
 }
 
 /// Reusable per-worker buffers for the packed kernel: the im2col row
@@ -98,9 +114,8 @@ pub fn pack_weights(wp: &DecodedPlanes, co_n: usize, kdim: usize, threads: usize
 /// hoisted per-`(co, ci)` group-scale factor table.
 #[derive(Default)]
 pub struct PackScratch {
-    /// activation row panel, `a_frac[k * wo_p + x]`
-    pub a_frac: Vec<i32>,
-    pub a_shift: Vec<u8>,
+    /// activation row panel of pre-combined operands, `a_comb[k * wo_p + x]`
+    pub a_comb: Vec<i32>,
     /// group-scale contributions per microtile lane, `[(m * NR + x)][ci]`
     pub cbuf: Vec<f32>,
     /// `factors[co * ci_n + ci]`, rebuilt per batch sample
@@ -110,20 +125,20 @@ pub struct PackScratch {
 impl PackScratch {
     /// Gather output row `oy` of gathered-operand index `u` into the
     /// im2col panel under the pass-generic geometry `d`
-    /// ([`SpecDims`]): `a_frac[k * wo_p + x]` = `signed_frac` of the
-    /// element under tap `k = (g * kh + i) * kw + j` at output column `x`
-    /// — zero when the tap's logical position `x*stride + j*dil - pad_x`
-    /// hangs over the border or (for `ups > 1`) falls in a zero-inserted
-    /// upsampling hole — with `x < wo_p` zero-padded to the [`NR`] lane
-    /// multiple. Every slot is (re)written, so the arena can be reused
-    /// without clearing. Returns the number of physically in-bounds
-    /// kernel rows for this `oy` (the analytic-counter input).
+    /// ([`SpecDims`]): `a_comb[k * wo_p + x]` = pre-combined
+    /// `scaled_frac` of the element under tap `k = (g * kh + i) * kw + j`
+    /// at output column `x` — zero when the tap's logical position
+    /// `x*stride + j*dil - pad_x` hangs over the border or (for
+    /// `ups > 1`) falls in a zero-inserted upsampling hole — with
+    /// `x < wo_p` zero-padded to the [`NR`] lane multiple. Every slot is
+    /// (re)written, so the arena can be reused without clearing. Returns
+    /// the number of physically in-bounds kernel rows for this `oy` (the
+    /// analytic-counter input).
     pub(crate) fn pack_row(&mut self, ap: &DecodedPlanes, u: usize, oy: usize, d: &SpecDims) -> usize {
         let SpecDims { g_n, kh, kw, h, wi, wo, stride, dil, ups, pad_y, pad_x, .. } = *d;
         let wo_p = wo.div_ceil(NR) * NR;
         let kdim = g_n * kh * kw;
-        self.a_frac.resize(kdim * wo_p, 0);
-        self.a_shift.resize(kdim * wo_p, 0);
+        self.a_comb.resize(kdim * wo_p, 0);
         let mut rows_ib = 0usize;
         for g in 0..g_n {
             for i in 0..kh {
@@ -139,11 +154,9 @@ impl PackScratch {
                 }
                 for j in 0..kw {
                     let k = (g * kh + i) * kw + j;
-                    let dst_f = &mut self.a_frac[k * wo_p..(k + 1) * wo_p];
-                    let dst_s = &mut self.a_shift[k * wo_p..(k + 1) * wo_p];
+                    let dst = &mut self.a_comb[k * wo_p..(k + 1) * wo_p];
                     if !row_ok {
-                        dst_f.fill(0);
-                        dst_s.fill(0);
+                        dst.fill(0);
                         continue;
                     }
                     let arow = ((u * g_n + g) * h + iy) * wi;
@@ -159,34 +172,28 @@ impl PackScratch {
                         };
                         let x_lo = x_lo.min(wo);
                         let x_hi = x_hi.clamp(x_lo, wo);
-                        dst_f[..x_lo].fill(0);
-                        dst_s[..x_lo].fill(0);
+                        dst[..x_lo].fill(0);
                         if x_hi > x_lo {
                             // x_lo*stride + off >= 0 and the last source
                             // index is < wi by the span construction above
                             let src0 = (arow as isize + (x_lo * stride) as isize + off) as usize;
                             if stride == 1 {
-                                dst_f[x_lo..x_hi]
-                                    .copy_from_slice(&ap.signed_frac[src0..src0 + (x_hi - x_lo)]);
-                                dst_s[x_lo..x_hi]
-                                    .copy_from_slice(&ap.shift[src0..src0 + (x_hi - x_lo)]);
+                                dst[x_lo..x_hi]
+                                    .copy_from_slice(&ap.scaled_frac[src0..src0 + (x_hi - x_lo)]);
                             } else {
                                 for (t, x) in (x_lo..x_hi).enumerate() {
-                                    dst_f[x] = ap.signed_frac[src0 + t * stride];
-                                    dst_s[x] = ap.shift[src0 + t * stride];
+                                    dst[x] = ap.scaled_frac[src0 + t * stride];
                                 }
                             }
                         }
-                        dst_f[x_hi..].fill(0);
-                        dst_s[x_hi..].fill(0);
+                        dst[x_hi..].fill(0);
                     } else {
                         // upsampled input view (stride == 1 by the engine
                         // invariant): tap j lands on a physical column only
                         // at x with (x + off) a non-negative multiple of
                         // `ups`; those x form an arithmetic progression of
                         // step `ups` whose source index advances by 1
-                        dst_f.fill(0);
-                        dst_s.fill(0);
+                        dst.fill(0);
                         let lo = if off >= 0 { 0usize } else { (-off) as usize };
                         if lo < wo {
                             let t0 = (lo as isize + off) as usize;
@@ -194,8 +201,7 @@ impl PackScratch {
                             let mut x = lo + delta;
                             let mut src = (x as isize + off) as usize / ups;
                             while x < wo && src < wi {
-                                dst_f[x] = ap.signed_frac[arow + src];
-                                dst_s[x] = ap.shift[arow + src];
+                                dst[x] = ap.scaled_frac[arow + src];
                                 x += ups;
                                 src += 1;
                             }
@@ -237,20 +243,21 @@ mod tests {
         for threads in [1usize, 2, 8] {
             let pw = pack_weights(&wp, 5, kdim, threads);
             assert_eq!(pw.blocks, 2);
-            assert_eq!(pw.frac.len(), 2 * kdim * MR);
+            assert_eq!(pw.comb.len(), 2 * kdim * MR);
             for b in 0..pw.blocks {
                 for m in 0..MR {
                     let co = b * MR + m;
                     for k in 0..kdim {
-                        let (f, s) = (
-                            pw.frac[b * kdim * MR + k * MR + m],
-                            pw.shift[b * kdim * MR + k * MR + m],
-                        );
+                        let c = pw.comb[b * kdim * MR + k * MR + m];
                         if co < 5 {
-                            assert_eq!(f, wp.signed_frac[co * kdim + k], "t{threads} co{co} k{k}");
-                            assert_eq!(s, wp.shift[co * kdim + k], "t{threads} co{co} k{k}");
+                            assert_eq!(c, wp.scaled_frac[co * kdim + k], "t{threads} co{co} k{k}");
+                            assert_eq!(
+                                c,
+                                wp.signed_frac[co * kdim + k] << wp.shift[co * kdim + k] as u32,
+                                "t{threads} co{co} k{k}: pre-combined operand"
+                            );
                         } else {
-                            assert_eq!((f, s), (0, 0), "padded lane co{co} k{k}");
+                            assert_eq!(c, 0, "padded lane co{co} k{k}");
                         }
                     }
                 }
@@ -325,12 +332,11 @@ mod tests {
                                     let want = match (x < wo, phys(iy, h), phys(ix, wi)) {
                                         (true, Some(py), Some(px)) => {
                                             let idx = ((u * ci_n + g) * h + py) * wi + px;
-                                            (ap.signed_frac[idx], ap.shift[idx])
+                                            ap.scaled_frac[idx]
                                         }
-                                        _ => (0, 0),
+                                        _ => 0,
                                     };
-                                    let got =
-                                        (scratch.a_frac[k * wo_p + x], scratch.a_shift[k * wo_p + x]);
+                                    let got = scratch.a_comb[k * wo_p + x];
                                     assert_eq!(
                                         got, want,
                                         "u{u} oy{oy} g{g} i{i} j{j} x{x} \

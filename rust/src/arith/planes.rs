@@ -56,6 +56,13 @@ pub struct DecodedPlanes {
     /// `exp_i - emin`: the per-element left shift aligning the product at
     /// the fixed point `2^(2*emin - 2M)` (0 for subnormals by definition).
     pub shift: Vec<u8>,
+    /// `signed_frac[i] << shift[i]`: the pre-combined Eq. 7 operand used
+    /// by the packed/SIMD kernel, turning the shifted MAC into one plain
+    /// widening multiply-add (`acc += scaled_w as i64 * scaled_a as i64`).
+    /// Exact because `(M+1) + smax <= 31` is asserted at decode time, so
+    /// the shifted fraction never leaves i32 and the product never leaves
+    /// i64 — the same bound the shift-at-MAC form already required.
+    pub scaled_frac: Vec<i32>,
     /// the element format the planes were decoded under — provenance, so
     /// conv entry points can reject planes built from a differently
     /// formatted tensor (the decoded fields are format-dependent).
@@ -73,32 +80,43 @@ impl DecodedPlanes {
     pub fn of_threaded(t: &MlsTensor, threads: usize) -> Self {
         let fmt = t.cfg.element;
         let emin = fmt.emin();
+        // hard assert (not debug): `scaled_frac` left-shifts the signed
+        // (M+1)-bit fraction by up to smax = 2^E - 2, so the combined
+        // width must fit i32 — otherwise the pre-combined operand (and
+        // equally the old shift-at-MAC i64 product) would overflow
+        let smax: u32 = if fmt.e == 0 { 0 } else { (1u32 << fmt.e) - 2 };
+        assert!(
+            fmt.m + 1 + smax <= 31,
+            "element format <{},{}> too wide for the conv planes: (M+1) + (2^E - 2) = {} must be <= 31 bits",
+            fmt.e,
+            fmt.m,
+            fmt.m + 1 + smax
+        );
         let n = t.len();
         let parts = parallel::map_ranges(threads, n, |lo, hi| {
             let mut frac = Vec::with_capacity(hi - lo);
             let mut shift = Vec::with_capacity(hi - lo);
+            let mut scaled = Vec::with_capacity(hi - lo);
             for idx in lo..hi {
                 let e = Element::of(t, idx);
-                frac.push(e.sign as i32 * e.frac_int(fmt) as i32);
+                let f = e.sign as i32 * e.frac_int(fmt) as i32;
                 let sh = e.exp_val(fmt) - emin;
-                // hard assert (not debug): a shift outside u8 would wrap
-                // silently in release and break the bit-identity-with-
-                // legacy invariant; E <= 8 keeps the max (2^E - 2) at 254
-                assert!(
-                    (0..=255).contains(&sh),
-                    "element shift {sh} exceeds the u8 plane (element format E must be <= 8)"
-                );
+                debug_assert!((0..=smax as i32).contains(&sh), "shift {sh} out of [0, {smax}]");
+                frac.push(f);
                 shift.push(sh as u8);
+                scaled.push(f << sh as u32);
             }
-            (frac, shift)
+            (frac, shift, scaled)
         });
         let mut signed_frac = Vec::with_capacity(n);
         let mut shift = Vec::with_capacity(n);
-        for (f, s) in parts {
+        let mut scaled_frac = Vec::with_capacity(n);
+        for (f, s, c) in parts {
             signed_frac.extend(f);
             shift.extend(s);
+            scaled_frac.extend(c);
         }
-        DecodedPlanes { signed_frac, shift, fmt }
+        DecodedPlanes { signed_frac, shift, scaled_frac, fmt }
     }
 
     pub fn len(&self) -> usize {
@@ -270,12 +288,18 @@ mod tests {
                     el.exp_val(fmt) - fmt.emin(),
                     "<{e},{m}> idx {idx}: shift"
                 );
+                assert_eq!(
+                    p.scaled_frac[idx],
+                    p.signed_frac[idx] << p.shift[idx] as u32,
+                    "<{e},{m}> idx {idx}: scaled_frac"
+                );
             }
             // plane build is element-wise: thread count cannot matter
             for threads in [2usize, 8] {
                 let pt = DecodedPlanes::of_threaded(&t, threads);
                 assert_eq!(pt.signed_frac, p.signed_frac, "t={threads}");
                 assert_eq!(pt.shift, p.shift, "t={threads}");
+                assert_eq!(pt.scaled_frac, p.scaled_frac, "t={threads}");
             }
         }
     }

@@ -1,0 +1,278 @@
+//! Per-ISA Eq. 7 MAC segment kernels + the dispatch shim the packed
+//! GEMM driver ([`super::gemm`]) calls per microtile group segment.
+//!
+//! One segment is the full reduction of a single `(x0, block, group)`
+//! microtile: `kk = kh * kw` taps of an [`MR`]x[`NR`] register tile over
+//! the pre-combined operand panels (see [`super::pack`]). With the
+//! `(ws + as)` shifts folded into the packed operands at decode time,
+//! each tap is a plain widening multiply-add
+//!
+//! ```text
+//! acc[m][x] += wcomb[t*MR + m] as i64 * acomb[t*wo_p + x] as i64
+//! pk[m][x]   = max(pk[m][x], |acc[m][x]|)      // after EVERY tap
+//! ```
+//!
+//! which SSE4.1 (`pmuldq`), AVX2 and NEON (`smlal`) execute directly on
+//! 2/4/2-wide i64 lanes. The bit-identity rules every vector path obeys:
+//!
+//! * vectorize ONLY across the `x` (output-pixel) axis; the tap loop `t`
+//!   stays serial, so every lane's i64 accumulator passes through
+//!   exactly the scalar sequence of partial sums — and therefore the
+//!   running `|acc|` peak (the `peak_acc_bits` audit input) matches the
+//!   scalar kernel at every step, not just at the end;
+//! * always run the full padded [`MR`]x[`NR`] tile — padded lanes hold
+//!   zero operands, contribute zero products and zero peaks, and the
+//!   caller's masked-tail epilogue (`gemm::flush_group_tile`) ignores
+//!   them for output while merging their (zero) peaks harmlessly;
+//! * the Eq. 8 group-scale epilogue and the adder tree stay scalar in
+//!   the caller — float ops are never reordered.
+//!
+//! `rust/tests/conv_fuzz.rs` pins every [`Level`](crate::util::simd::Level)
+//! bit-identical (values + all five audit counters) against the legacy
+//! kernel across the 200-geometry corpus; which path runs is decided by
+//! [`crate::util::simd`].
+
+use super::pack::{MR, NR};
+use crate::util::simd::Level;
+
+/// Run one microtile reduction segment at the given dispatch level.
+/// `wcomb` is the weight panel segment (`kk * MR` lanes), `acomb` the
+/// activation row panel starting at this group's first tap and pixel
+/// column (`(kk - 1) * wo_p + NR` lanes reachable).
+#[inline]
+pub(crate) fn mac_segment(
+    level: Level,
+    wcomb: &[i32],
+    acomb: &[i32],
+    kk: usize,
+    wo_p: usize,
+    acc: &mut [[i64; NR]; MR],
+    pk: &mut [[i64; NR]; MR],
+) {
+    debug_assert_eq!(wcomb.len(), kk * MR);
+    debug_assert!(kk == 0 || (kk - 1) * wo_p + NR <= acomb.len());
+    match level {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: dispatch invariant — `level` comes from util::simd,
+        // which only yields a vector level the running CPU supports
+        Level::Avx2 => unsafe { mac_segment_avx2(wcomb, acomb, kk, wo_p, acc, pk) },
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: as above (SSE4.1 verified by runtime detection)
+        Level::Sse41 => unsafe { mac_segment_sse41(wcomb, acomb, kk, wo_p, acc, pk) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: as above (NEON verified by runtime detection)
+        Level::Neon => unsafe { mac_segment_neon(wcomb, acomb, kk, wo_p, acc, pk) },
+        _ => mac_segment_scalar(wcomb, acomb, kk, wo_p, acc, pk),
+    }
+}
+
+/// Scalar reference segment — the bit-identity anchor every vector path
+/// is pinned against (and the `Level::Off` / unsupported-arch path).
+pub(crate) fn mac_segment_scalar(
+    wcomb: &[i32],
+    acomb: &[i32],
+    kk: usize,
+    wo_p: usize,
+    acc: &mut [[i64; NR]; MR],
+    pk: &mut [[i64; NR]; MR],
+) {
+    for t in 0..kk {
+        let wrow = &wcomb[t * MR..t * MR + MR];
+        let arow = &acomb[t * wo_p..t * wo_p + NR];
+        for (accm, (pkm, &wc)) in acc.iter_mut().zip(pk.iter_mut().zip(wrow.iter())) {
+            let wc = wc as i64;
+            for (x, (a, p)) in accm.iter_mut().zip(pkm.iter_mut()).enumerate() {
+                *a += wc * arow[x] as i64;
+                *p = (*p).max(a.abs());
+            }
+        }
+    }
+}
+
+/// AVX2 segment: the 8 pixel lanes split into two independent i64x4
+/// halves, each taken through the whole tap loop in registers (halving
+/// register pressure vs. interleaving; per-lane sequences unchanged).
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+#[allow(clippy::needless_range_loop)]
+unsafe fn mac_segment_avx2(
+    wcomb: &[i32],
+    acomb: &[i32],
+    kk: usize,
+    wo_p: usize,
+    acc: &mut [[i64; NR]; MR],
+    pk: &mut [[i64; NR]; MR],
+) {
+    use core::arch::x86_64::*;
+    let wptr = wcomb.as_ptr();
+    let aptr = acomb.as_ptr();
+    let zero = _mm256_setzero_si256();
+    for h in 0..NR / 4 {
+        let mut a = [zero; MR];
+        let mut p = [zero; MR];
+        for m in 0..MR {
+            a[m] = _mm256_loadu_si256(acc[m].as_ptr().add(h * 4) as *const __m256i);
+            p[m] = _mm256_loadu_si256(pk[m].as_ptr().add(h * 4) as *const __m256i);
+        }
+        for t in 0..kk {
+            // widen 4 activation lanes to i64 once per tap: each qword
+            // gets the value in its low dword, sign in the high dword —
+            // exactly what pmuldq (mul_epi32) consumes
+            let av = _mm256_cvtepi32_epi64(_mm_loadu_si128(
+                aptr.add(t * wo_p + h * 4) as *const __m128i
+            ));
+            let wrow = wptr.add(t * MR);
+            for m in 0..MR {
+                let wv = _mm256_set1_epi32(*wrow.add(m));
+                a[m] = _mm256_add_epi64(a[m], _mm256_mul_epi32(av, wv));
+                // |acc|: two's-complement abs via sign mask (no abs_epi64
+                // in AVX2); i64::MIN is unreachable (peaks would have
+                // overflowed long before)
+                let neg = _mm256_cmpgt_epi64(zero, a[m]);
+                let abs = _mm256_sub_epi64(_mm256_xor_si256(a[m], neg), neg);
+                // max(p, abs): no max_epi64 in AVX2 either
+                let gt = _mm256_cmpgt_epi64(abs, p[m]);
+                p[m] = _mm256_blendv_epi8(p[m], abs, gt);
+            }
+        }
+        for m in 0..MR {
+            _mm256_storeu_si256(acc[m].as_mut_ptr().add(h * 4) as *mut __m256i, a[m]);
+            _mm256_storeu_si256(pk[m].as_mut_ptr().add(h * 4) as *mut __m256i, p[m]);
+        }
+    }
+}
+
+/// SSE4.1 segment: i64x2 quarters of the pixel axis. `pcmpgtq` is
+/// SSE4.2, so 64-bit sign masks are built by replicating each qword's
+/// high dword and arithmetic-shifting it.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "sse4.1")]
+#[allow(clippy::needless_range_loop)]
+unsafe fn mac_segment_sse41(
+    wcomb: &[i32],
+    acomb: &[i32],
+    kk: usize,
+    wo_p: usize,
+    acc: &mut [[i64; NR]; MR],
+    pk: &mut [[i64; NR]; MR],
+) {
+    use core::arch::x86_64::*;
+    // replicate each qword's high dword into both of its dwords; srai
+    // by 31 then yields the qword's full 64-bit sign mask
+    #[inline]
+    unsafe fn sign_mask(v: __m128i) -> __m128i {
+        _mm_srai_epi32::<31>(_mm_shuffle_epi32::<0b11_11_01_01>(v))
+    }
+    let wptr = wcomb.as_ptr();
+    let aptr = acomb.as_ptr();
+    for h in 0..NR / 2 {
+        let mut a = [_mm_setzero_si128(); MR];
+        let mut p = [_mm_setzero_si128(); MR];
+        for m in 0..MR {
+            a[m] = _mm_loadu_si128(acc[m].as_ptr().add(h * 2) as *const __m128i);
+            p[m] = _mm_loadu_si128(pk[m].as_ptr().add(h * 2) as *const __m128i);
+        }
+        for t in 0..kk {
+            let av = _mm_cvtepi32_epi64(_mm_loadl_epi64(aptr.add(t * wo_p + h * 2) as *const __m128i));
+            let wrow = wptr.add(t * MR);
+            for m in 0..MR {
+                let wv = _mm_set1_epi32(*wrow.add(m));
+                a[m] = _mm_add_epi64(a[m], _mm_mul_epi32(av, wv));
+                let neg = sign_mask(a[m]);
+                let abs = _mm_sub_epi64(_mm_xor_si128(a[m], neg), neg);
+                // p and abs are both non-negative, so p - abs fits i64 and
+                // its sign says which is larger (pcmpgtq-free i64 max)
+                let lt = sign_mask(_mm_sub_epi64(p[m], abs));
+                p[m] = _mm_blendv_epi8(p[m], abs, lt);
+            }
+        }
+        for m in 0..MR {
+            _mm_storeu_si128(acc[m].as_mut_ptr().add(h * 2) as *mut __m128i, a[m]);
+            _mm_storeu_si128(pk[m].as_mut_ptr().add(h * 2) as *mut __m128i, p[m]);
+        }
+    }
+}
+
+/// NEON segment: i64x2 quarters via the `smlal` widening multiply-add.
+#[cfg(target_arch = "aarch64")]
+#[target_feature(enable = "neon")]
+#[allow(clippy::needless_range_loop)]
+unsafe fn mac_segment_neon(
+    wcomb: &[i32],
+    acomb: &[i32],
+    kk: usize,
+    wo_p: usize,
+    acc: &mut [[i64; NR]; MR],
+    pk: &mut [[i64; NR]; MR],
+) {
+    use core::arch::aarch64::*;
+    let wptr = wcomb.as_ptr();
+    let aptr = acomb.as_ptr();
+    for h in 0..NR / 2 {
+        let mut a = [vdupq_n_s64(0); MR];
+        let mut p = [vdupq_n_s64(0); MR];
+        for m in 0..MR {
+            a[m] = vld1q_s64(acc[m].as_ptr().add(h * 2));
+            p[m] = vld1q_s64(pk[m].as_ptr().add(h * 2));
+        }
+        for t in 0..kk {
+            let av = vld1_s32(aptr.add(t * wo_p + h * 2));
+            for m in 0..MR {
+                let wv = vdup_n_s32(*wptr.add(t * MR + m));
+                a[m] = vmlal_s32(a[m], av, wv);
+                let abs = vabsq_s64(a[m]);
+                // no vmaxq_s64: compare-and-select
+                p[m] = vbslq_s64(vcgtq_s64(abs, p[m]), abs, p[m]);
+            }
+        }
+        for m in 0..MR {
+            vst1q_s64(acc[m].as_mut_ptr().add(h * 2), a[m]);
+            vst1q_s64(pk[m].as_mut_ptr().add(h * 2), p[m]);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    /// Direct microtile-level pin of every supported vector segment
+    /// against the scalar segment — accumulators AND running peaks —
+    /// over random operands at full conv magnitude (the integration
+    /// suites pin the same invariant end to end through the engine).
+    #[test]
+    fn vector_segments_match_scalar_per_lane() {
+        let mut rng = Pcg32::seeded(0x51_4D_D0);
+        for case in 0..200 {
+            let kk = 1 + (rng.next_u32() % 17) as usize;
+            let wo_p = NR * (1 + (rng.next_u32() % 3) as usize);
+            // full-scale pre-combined operands for e2m4: |frac| <= 31
+            // shifted by up to 2 -> |comb| <= 124; scale up to stress
+            // the i64 peak lanes too
+            let amp = [1i32, 124, 1 << 20][case % 3];
+            let mut draw = |n: usize| -> Vec<i32> {
+                (0..n).map(|_| (rng.next_u32() as i32 % (2 * amp + 1)) - amp).collect()
+            };
+            let wcomb = draw(kk * MR);
+            let acomb = draw(kk * wo_p);
+            let mut acc_ref = [[0i64; NR]; MR];
+            let mut pk_ref = [[0i64; NR]; MR];
+            // nonzero warm start exercises the load-modify-store paths
+            for m in 0..MR {
+                for x in 0..NR {
+                    acc_ref[m][x] = (rng.next_u32() as i32 % 1000) as i64;
+                    pk_ref[m][x] = acc_ref[m][x].abs();
+                }
+            }
+            let (acc0, pk0) = (acc_ref, pk_ref);
+            mac_segment_scalar(&wcomb, &acomb, kk, wo_p, &mut acc_ref, &mut pk_ref);
+            for level in crate::util::simd::Level::supported() {
+                let (mut acc, mut pk) = (acc0, pk0);
+                mac_segment(level, &wcomb, &acomb, kk, wo_p, &mut acc, &mut pk);
+                assert_eq!(acc, acc_ref, "case {case} level {} acc", level.name());
+                assert_eq!(pk, pk_ref, "case {case} level {} peak", level.name());
+            }
+        }
+    }
+}

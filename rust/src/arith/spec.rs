@@ -354,6 +354,9 @@ pub(crate) fn run_engine(
     // geometry-only half of the analytic tap count, hoisted out of the
     // per-row work (rows_ib * col_taps = a row's in-bounds window taps)
     let col_taps = gemm::col_taps(d);
+    // SIMD dispatch level read once per conv so every row of this call
+    // runs the same microkernel (all levels are bit-identical anyway)
+    let level = crate::util::simd::active();
 
     let tile_len = d.ho * d.wo;
     let mut z = vec![0.0f32; u_n * v_n * tile_len];
@@ -387,8 +390,9 @@ pub(crate) fn run_engine(
                     }
                     last_u = u;
                 }
-                let (row_peak, rows_ib) =
-                    gemm::conv_row_packed(&pw, yp, scratch, u, oy, d, scale_log2, st, &writer);
+                let (row_peak, rows_ib) = gemm::conv_row_packed(
+                    &pw, yp, scratch, u, oy, d, scale_log2, st, &writer, level,
+                );
                 peak = peak.max(row_peak);
                 taps += rows_ib as u64 * col_taps;
             }

@@ -271,6 +271,10 @@ pub fn train(engine: &mut Engine, config: &TrainConfig) -> Result<TrainResult> {
 /// of every step is written alongside the metrics CSV as
 /// `<tag>.audit.jsonl`.
 pub fn train_native(config: &TrainConfig) -> Result<TrainResult> {
+    // audit reproducibility: record which Eq. 7 microkernel (scalar or
+    // which vector ISA) produced this run's numbers — they are all
+    // bit-identical, but the log line pins what actually ran
+    crate::util::simd::log_once();
     let qcfg = validate_native_config(config)?;
     let ds = SynthCifar::new(config.data.clone());
     let mut model = native_model(&config.model, qcfg, config.seed)?;

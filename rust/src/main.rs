@@ -331,6 +331,7 @@ fn cmd_bench_info(args: &Args) -> Result<()> {
         Err(e) => println!("no artifacts loaded: {e:#}"),
     }
     println!("\nanalytic networks: {:?}", mls_train::nn::zoo::NETWORKS);
+    println!("simd dispatch: {}", mls_train::util::simd::describe());
 
     // measured bench reports at the repo root (written by `cargo bench`)
     let mut found = false;
@@ -346,6 +347,9 @@ fn cmd_bench_info(args: &Args) -> Result<()> {
         }
         let results = v.get("results").and_then(|r| r.as_obj().map(|m| m.len())).unwrap_or(0);
         print!("  {file}: {results} results");
+        if let Some(simd) = v.get("simd").and_then(|s| s.as_str()) {
+            print!("  simd={simd}");
+        }
         if let Some(ratios) = v.get("ratios").and_then(|r| r.as_obj()) {
             let pairs: Vec<String> = ratios
                 .iter()

@@ -16,6 +16,7 @@
 pub mod error;
 pub mod format;
 pub mod grouping;
+mod qsimd;
 pub mod quantizer;
 pub mod tensor;
 

@@ -1,0 +1,522 @@
+//! Vectorized quantizer inner loops (Alg. 2): the per-group |max|
+//! reduce and the per-element quantize pass, with per-ISA paths selected
+//! by [`crate::util::simd`] and pinned bit-identical to the scalar
+//! reference in [`super::quantizer`].
+//!
+//! ## Why the vector element pass is exact
+//!
+//! The scalar path per element is: `xf = |v| / (S_g * S_t)`, then
+//! [`format::quantize_element`] — a subnormal/normal branch, each doing
+//! one f32 multiply, the rounding add, `floor`, an f32 clamp and a
+//! saturating `as u32` cast. The vector lane computes BOTH branch
+//! candidates branch-free and selects by the ordered compare
+//! `xf < 2^emin` (all-subnormal when `E == 0`), with two deliberate
+//! representation changes that are proven value-identical (exhaustively
+//! modeled against the scalar semantics over every reachable edge case —
+//! NaN from `0/0` under a zero group scale, denormals, overflowing
+//! candidates — before this file was written):
+//!
+//! * the float clamp + saturating cast becomes `cvttps` (out-of-range
+//!   and NaN produce `i32::MIN`) followed by an **integer** clamp to
+//!   `[0, 2^M - 1]` — identical because the scalar clamp bounds are
+//!   exactly representable and NaN claps to 0 on both paths;
+//! * `2^-exp_cl` is built per lane by bit assembly
+//!   (`(127 - exp_cl) << 23`) instead of a table — exact for
+//!   `-126 <= -exp_cl <= 127`, guaranteed by the eligibility gate below.
+//!
+//! Eligibility: `E <= 7` and `M - emin <= 127` (every registry format
+//! qualifies; exotic formats take the scalar path). Stochastic rounding
+//! offsets are already precomputed per element by the caller, so the
+//! vector pass consumes the same RNG sequence by construction. The
+//! group |max| reduce is exact for any input — including NaN, which both
+//! paths ignore — because vector lanes use "keep the accumulator unless
+//! strictly greater" select semantics matching `f32::max`, all lanes are
+//! non-negative, and max is order-independent on non-negative floats.
+//!
+//! `NEON` note: aarch64 gets the vector |max| reduce; its element pass
+//! currently falls back to scalar (no aarch64 hardware in CI to pin it).
+
+use super::format::{self, EmFormat};
+use crate::util::simd::Level;
+
+/// `max |x|` over one contiguous group chunk at the given dispatch
+/// level; bit-identical to the serial `fold(0.0, |m, v| m.max(v.abs()))`
+/// for every input.
+pub(super) fn abs_max(level: Level, chunk: &[f32]) -> f32 {
+    match level {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: dispatch invariant — util::simd only yields levels the
+        // running CPU supports
+        Level::Avx2 if chunk.len() >= 8 => unsafe { abs_max_avx2(chunk) },
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: as above; the 128-bit path only uses baseline SSE2 ops
+        Level::Sse41 if chunk.len() >= 4 => unsafe { abs_max_sse(chunk) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: as above (NEON verified by runtime detection)
+        Level::Neon if chunk.len() >= 4 => unsafe { abs_max_neon(chunk) },
+        _ => abs_max_scalar(chunk),
+    }
+}
+
+pub(super) fn abs_max_scalar(chunk: &[f32]) -> f32 {
+    let mut m = 0.0f32;
+    for &v in chunk {
+        m = m.max(v.abs());
+    }
+    m
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn abs_max_avx2(chunk: &[f32]) -> f32 {
+    use core::arch::x86_64::*;
+    let absmask = _mm256_castsi256_ps(_mm256_set1_epi32(0x7FFF_FFFF));
+    let mut acc = _mm256_setzero_ps();
+    let n8 = chunk.len() / 8 * 8;
+    let mut i = 0;
+    while i < n8 {
+        let v = _mm256_and_ps(_mm256_loadu_ps(chunk.as_ptr().add(i)), absmask);
+        // operand order matters: maxps returns the SECOND operand when
+        // the compare is unordered, so a NaN lane in `v` keeps `acc` —
+        // exactly f32::max's NaN-ignoring semantics
+        acc = _mm256_max_ps(v, acc);
+        i += 8;
+    }
+    let mut lanes = [0.0f32; 8];
+    _mm256_storeu_ps(lanes.as_mut_ptr(), acc);
+    let mut m = 0.0f32;
+    for &l in &lanes {
+        m = m.max(l);
+    }
+    for &v in &chunk[n8..] {
+        m = m.max(v.abs());
+    }
+    m
+}
+
+#[cfg(target_arch = "x86_64")]
+unsafe fn abs_max_sse(chunk: &[f32]) -> f32 {
+    use core::arch::x86_64::*;
+    let absmask = _mm_castsi128_ps(_mm_set1_epi32(0x7FFF_FFFF));
+    let mut acc = _mm_setzero_ps();
+    let n4 = chunk.len() / 4 * 4;
+    let mut i = 0;
+    while i < n4 {
+        let v = _mm_and_ps(_mm_loadu_ps(chunk.as_ptr().add(i)), absmask);
+        // v first: NaN lanes keep acc (see the AVX2 note)
+        acc = _mm_max_ps(v, acc);
+        i += 4;
+    }
+    let mut lanes = [0.0f32; 4];
+    _mm_storeu_ps(lanes.as_mut_ptr(), acc);
+    let mut m = 0.0f32;
+    for &l in &lanes {
+        m = m.max(l);
+    }
+    for &v in &chunk[n4..] {
+        m = m.max(v.abs());
+    }
+    m
+}
+
+#[cfg(target_arch = "aarch64")]
+#[target_feature(enable = "neon")]
+unsafe fn abs_max_neon(chunk: &[f32]) -> f32 {
+    use core::arch::aarch64::*;
+    let mut acc = vdupq_n_f32(0.0);
+    let n4 = chunk.len() / 4 * 4;
+    let mut i = 0;
+    while i < n4 {
+        let v = vabsq_f32(vld1q_f32(chunk.as_ptr().add(i)));
+        // compare-and-select instead of vmaxq (which would propagate
+        // NaN): a NaN lane compares false and keeps acc, like f32::max
+        acc = vbslq_f32(vcgtq_f32(v, acc), v, acc);
+        i += 4;
+    }
+    let mut lanes = [0.0f32; 4];
+    vst1q_f32(lanes.as_mut_ptr(), acc);
+    let mut m = 0.0f32;
+    for &l in &lanes {
+        m = m.max(l);
+    }
+    for &v in &chunk[n4..] {
+        m = m.max(v.abs());
+    }
+    m
+}
+
+/// Scalar per-element quantize — the exact op sequence of the historical
+/// closure in [`super::quantizer::quantize_threaded`], now the single
+/// source of truth for the scalar path, vector tails and fallbacks.
+#[inline]
+pub(super) fn quantize_one_scalar(v: f32, sg: f32, s_t_safe: f32, fmt: EmFormat, r: f32) -> (i8, u8, u32) {
+    let s = if v > 0.0 {
+        1
+    } else if v < 0.0 {
+        -1
+    } else {
+        0
+    };
+    // identical op order to ref.py: abs(x) / (s_g * s_t)
+    let xf = v.abs() / (sg * s_t_safe);
+    let (c, mm) = format::quantize_element(xf, fmt, r);
+    (s, c, mm)
+}
+
+/// Whether the vector element pass may run for this format at this
+/// level (see the module doc for why these bounds make it exact;
+/// `m <= 23` additionally keeps the integer clamp bound in i32 range).
+#[cfg_attr(not(target_arch = "x86_64"), allow(dead_code))]
+fn elem_eligible(fmt: EmFormat, level: Level) -> bool {
+    matches!(level, Level::Avx2 | Level::Sse41)
+        && fmt.e <= 7
+        && fmt.m <= 23
+        && (fmt.m as i32 - fmt.emin()) <= 127
+}
+
+/// Per-format constants hoisted out of the element loop.
+#[cfg_attr(not(target_arch = "x86_64"), allow(dead_code))]
+struct ElemConsts {
+    /// `2^(M - emin)`: subnormal-candidate scale
+    sub_scale: f32,
+    /// `2^emin`: the subnormal/normal threshold
+    min_normal: f32,
+    /// `2^M` as f32
+    two_m: f32,
+    /// `2^M - 1`: integer mantissa clamp bound
+    two_m_m1: i32,
+    emin: i32,
+    /// `E == 0`: every lane takes the subnormal path
+    all_sub: bool,
+}
+
+impl ElemConsts {
+    #[cfg_attr(not(target_arch = "x86_64"), allow(dead_code))]
+    fn of(fmt: EmFormat) -> Self {
+        let emin = fmt.emin();
+        ElemConsts {
+            sub_scale: format::exp2i(fmt.m as i32 - emin),
+            min_normal: format::exp2i(emin),
+            two_m: (1u32 << fmt.m) as f32,
+            two_m_m1: (1i32 << fmt.m) - 1,
+            emin,
+            all_sub: fmt.e == 0,
+        }
+    }
+}
+
+/// Quantize one contiguous run of elements sharing the group scale
+/// `sg`, appending `(sign, exp_code, man)` to the output planes.
+/// `offsets` (stochastic rounding, same length as `x`) or `None`
+/// (nearest). Bit-identical to calling [`quantize_one_scalar`] per
+/// element in order, at every dispatch level.
+#[allow(clippy::too_many_arguments)]
+#[cfg_attr(not(target_arch = "x86_64"), allow(unused_variables, unused_mut))]
+pub(super) fn quantize_run(
+    level: Level,
+    x: &[f32],
+    offsets: Option<&[f32]>,
+    sg: f32,
+    s_t_safe: f32,
+    fmt: EmFormat,
+    sv: &mut Vec<i8>,
+    cv: &mut Vec<u8>,
+    mv: &mut Vec<u32>,
+) {
+    if let Some(o) = offsets {
+        debug_assert_eq!(o.len(), x.len());
+    }
+    let mut i = 0usize;
+    #[cfg(target_arch = "x86_64")]
+    if elem_eligible(fmt, level) {
+        // same two ops (mul then div) per lane as the scalar path, with
+        // the product hoisted: sg * s_t_safe is bit-identical per run
+        let den = sg * s_t_safe;
+        let pre = ElemConsts::of(fmt);
+        match level {
+            Level::Avx2 => {
+                while i + 8 <= x.len() {
+                    // SAFETY: 8 lanes readable at i (loop bound), AVX2
+                    // supported per the dispatch invariant
+                    unsafe {
+                        quantize8_avx2(
+                            x.as_ptr().add(i),
+                            offsets.map(|o| o.as_ptr().add(i)),
+                            den,
+                            &pre,
+                            sv,
+                            cv,
+                            mv,
+                        )
+                    };
+                    i += 8;
+                }
+            }
+            Level::Sse41 => {
+                while i + 4 <= x.len() {
+                    // SAFETY: 4 lanes readable at i, SSE4.1 supported
+                    unsafe {
+                        quantize4_sse41(
+                            x.as_ptr().add(i),
+                            offsets.map(|o| o.as_ptr().add(i)),
+                            den,
+                            &pre,
+                            sv,
+                            cv,
+                            mv,
+                        )
+                    };
+                    i += 4;
+                }
+            }
+            _ => {}
+        }
+    }
+    // scalar tail (and the whole run for ineligible formats/levels)
+    for (k, &v) in x.iter().enumerate().skip(i) {
+        let r = offsets.map_or(0.0, |o| o[k]);
+        let (s, c, m) = quantize_one_scalar(v, sg, s_t_safe, fmt, r);
+        sv.push(s);
+        cv.push(c);
+        mv.push(m);
+    }
+}
+
+/// One AVX2 vector of 8 elements through the branch-free quantize lane.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn quantize8_avx2(
+    x: *const f32,
+    r: Option<*const f32>,
+    den: f32,
+    pre: &ElemConsts,
+    sv: &mut Vec<i8>,
+    cv: &mut Vec<u8>,
+    mv: &mut Vec<u32>,
+) {
+    use core::arch::x86_64::*;
+    let v = _mm256_loadu_ps(x);
+    let av = _mm256_and_ps(v, _mm256_castsi256_ps(_mm256_set1_epi32(0x7FFF_FFFF)));
+    let xf = _mm256_div_ps(av, _mm256_set1_ps(den));
+    let rv = match r {
+        Some(p) => _mm256_loadu_ps(p),
+        None => _mm256_setzero_ps(),
+    };
+    let half = _mm256_set1_ps(0.5);
+    let izero = _mm256_setzero_si256();
+    let man_hi = _mm256_set1_epi32(pre.two_m_m1);
+    // subnormal candidate: floor(xf * 2^(M-emin) + r + 0.5), same f32
+    // op order as the scalar branch, then cvtt + integer clamp
+    let t_sub = _mm256_floor_ps(_mm256_add_ps(
+        _mm256_add_ps(_mm256_mul_ps(xf, _mm256_set1_ps(pre.sub_scale)), rv),
+        half,
+    ));
+    let man_sub = _mm256_min_epi32(_mm256_max_epi32(_mm256_cvttps_epi32(t_sub), izero), man_hi);
+    // normal candidate: exponent by bit extraction, clamp to [emin, -1],
+    // 2^-exp_cl assembled per lane, then the scalar branch's op order
+    let ebits = _mm256_sub_epi32(
+        _mm256_and_si256(_mm256_srli_epi32::<23>(_mm256_castps_si256(xf)), _mm256_set1_epi32(0xFF)),
+        _mm256_set1_epi32(127),
+    );
+    let exp_cl = _mm256_min_epi32(
+        _mm256_max_epi32(ebits, _mm256_set1_epi32(pre.emin)),
+        _mm256_set1_epi32(-1),
+    );
+    let pow = _mm256_castsi256_ps(_mm256_slli_epi32::<23>(_mm256_sub_epi32(
+        _mm256_set1_epi32(127),
+        exp_cl,
+    )));
+    let y = _mm256_mul_ps(xf, pow);
+    let t_n = _mm256_floor_ps(_mm256_add_ps(
+        _mm256_add_ps(
+            _mm256_mul_ps(_mm256_sub_ps(y, _mm256_set1_ps(1.0)), _mm256_set1_ps(pre.two_m)),
+            rv,
+        ),
+        half,
+    ));
+    let man_n = _mm256_min_epi32(_mm256_max_epi32(_mm256_cvttps_epi32(t_n), izero), man_hi);
+    let code_n = _mm256_sub_epi32(izero, exp_cl);
+    // select: ordered xf < 2^emin (NaN lanes -> normal path, where both
+    // candidates yield man 0 / code 1 exactly like the scalar cast)
+    let sub_mask = if pre.all_sub {
+        _mm256_set1_epi32(-1)
+    } else {
+        _mm256_castps_si256(_mm256_cmp_ps::<_CMP_LT_OQ>(xf, _mm256_set1_ps(pre.min_normal)))
+    };
+    let man = _mm256_blendv_epi8(man_n, man_sub, sub_mask);
+    let code = _mm256_andnot_si256(sub_mask, code_n);
+    // sign: ordered compares, so NaN (and zero) lanes give 0
+    let fzero = _mm256_setzero_ps();
+    let pos = _mm256_castps_si256(_mm256_cmp_ps::<_CMP_GT_OQ>(v, fzero));
+    let neg = _mm256_castps_si256(_mm256_cmp_ps::<_CMP_LT_OQ>(v, fzero));
+    let sign = _mm256_or_si256(
+        _mm256_and_si256(pos, _mm256_set1_epi32(1)),
+        _mm256_and_si256(neg, _mm256_set1_epi32(-1)),
+    );
+    let mut sb = [0i32; 8];
+    let mut cb = [0i32; 8];
+    let mut mb = [0i32; 8];
+    _mm256_storeu_si256(sb.as_mut_ptr() as *mut __m256i, sign);
+    _mm256_storeu_si256(cb.as_mut_ptr() as *mut __m256i, code);
+    _mm256_storeu_si256(mb.as_mut_ptr() as *mut __m256i, man);
+    for l in 0..8 {
+        sv.push(sb[l] as i8);
+        cv.push(cb[l] as u8);
+        mv.push(mb[l] as u32);
+    }
+}
+
+/// One SSE4.1 vector of 4 elements — same lane recipe at half width.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "sse4.1")]
+unsafe fn quantize4_sse41(
+    x: *const f32,
+    r: Option<*const f32>,
+    den: f32,
+    pre: &ElemConsts,
+    sv: &mut Vec<i8>,
+    cv: &mut Vec<u8>,
+    mv: &mut Vec<u32>,
+) {
+    use core::arch::x86_64::*;
+    let v = _mm_loadu_ps(x);
+    let av = _mm_and_ps(v, _mm_castsi128_ps(_mm_set1_epi32(0x7FFF_FFFF)));
+    let xf = _mm_div_ps(av, _mm_set1_ps(den));
+    let rv = match r {
+        Some(p) => _mm_loadu_ps(p),
+        None => _mm_setzero_ps(),
+    };
+    let half = _mm_set1_ps(0.5);
+    let izero = _mm_setzero_si128();
+    let man_hi = _mm_set1_epi32(pre.two_m_m1);
+    let t_sub =
+        _mm_floor_ps(_mm_add_ps(_mm_add_ps(_mm_mul_ps(xf, _mm_set1_ps(pre.sub_scale)), rv), half));
+    let man_sub = _mm_min_epi32(_mm_max_epi32(_mm_cvttps_epi32(t_sub), izero), man_hi);
+    let ebits = _mm_sub_epi32(
+        _mm_and_si128(_mm_srli_epi32::<23>(_mm_castps_si128(xf)), _mm_set1_epi32(0xFF)),
+        _mm_set1_epi32(127),
+    );
+    let exp_cl = _mm_min_epi32(_mm_max_epi32(ebits, _mm_set1_epi32(pre.emin)), _mm_set1_epi32(-1));
+    let pow = _mm_castsi128_ps(_mm_slli_epi32::<23>(_mm_sub_epi32(_mm_set1_epi32(127), exp_cl)));
+    let y = _mm_mul_ps(xf, pow);
+    let t_n = _mm_floor_ps(_mm_add_ps(
+        _mm_add_ps(_mm_mul_ps(_mm_sub_ps(y, _mm_set1_ps(1.0)), _mm_set1_ps(pre.two_m)), rv),
+        half,
+    ));
+    let man_n = _mm_min_epi32(_mm_max_epi32(_mm_cvttps_epi32(t_n), izero), man_hi);
+    let code_n = _mm_sub_epi32(izero, exp_cl);
+    let sub_mask = if pre.all_sub {
+        _mm_set1_epi32(-1)
+    } else {
+        _mm_castps_si128(_mm_cmplt_ps(xf, _mm_set1_ps(pre.min_normal)))
+    };
+    let man = _mm_blendv_epi8(man_n, man_sub, sub_mask);
+    let code = _mm_andnot_si128(sub_mask, code_n);
+    let fzero = _mm_setzero_ps();
+    let pos = _mm_castps_si128(_mm_cmpgt_ps(v, fzero));
+    let neg = _mm_castps_si128(_mm_cmplt_ps(v, fzero));
+    let sign = _mm_or_si128(_mm_and_si128(pos, _mm_set1_epi32(1)), _mm_and_si128(neg, _mm_set1_epi32(-1)));
+    let mut sb = [0i32; 4];
+    let mut cb = [0i32; 4];
+    let mut mb = [0i32; 4];
+    _mm_storeu_si128(sb.as_mut_ptr() as *mut __m128i, sign);
+    _mm_storeu_si128(cb.as_mut_ptr() as *mut __m128i, code);
+    _mm_storeu_si128(mb.as_mut_ptr() as *mut __m128i, man);
+    for l in 0..4 {
+        sv.push(sb[l] as i8);
+        cv.push(cb[l] as u8);
+        mv.push(mb[l] as u32);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+    use crate::util::simd::Level;
+
+    #[test]
+    fn abs_max_matches_scalar_on_every_level() {
+        let mut rng = Pcg32::seeded(0xA85);
+        for n in [0usize, 1, 3, 4, 7, 8, 9, 31, 32, 100, 257] {
+            let mut v = rng.normal_vec(n, 2.0);
+            if n > 4 {
+                v[n / 2] = 0.0;
+                v[n - 1] = -v[n - 1].abs();
+            }
+            let want = abs_max_scalar(&v);
+            for level in Level::supported() {
+                assert_eq!(
+                    abs_max(level, &v).to_bits(),
+                    want.to_bits(),
+                    "n={n} level {}",
+                    level.name()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn abs_max_ignores_nan_like_scalar_fold() {
+        let mut v = vec![1.0f32, -3.5, f32::NAN, 2.0, -0.5, f32::NAN, 0.25, 1.75, 0.5];
+        for level in Level::supported() {
+            assert_eq!(abs_max(level, &v), 3.5, "level {}", level.name());
+        }
+        // NaN in a tail position too
+        v.push(f32::NAN);
+        for level in Level::supported() {
+            assert_eq!(abs_max(level, &v), 3.5, "tail, level {}", level.name());
+        }
+    }
+
+    /// Run-level pin: the vector quantize path equals the scalar path
+    /// element for element — values, edge cases (exact powers, tiny
+    /// denormal inputs, zeros, negatives) and the stochastic offset
+    /// sequence — for a spread of formats incl. the all-subnormal E=0.
+    #[test]
+    fn quantize_run_matches_scalar_on_every_level() {
+        let mut rng = Pcg32::seeded(0x9A11);
+        let formats =
+            [(0u32, 4u32), (0, 2), (1, 1), (2, 1), (2, 4), (3, 4), (3, 0), (5, 2), (7, 0)];
+        for (e, m) in formats {
+            let fmt = EmFormat::new(e, m);
+            for n in [1usize, 4, 7, 8, 9, 64, 129] {
+                let mut x = rng.normal_vec(n, 1.0);
+                if n >= 8 {
+                    x[0] = 0.0;
+                    x[1] = 1.0;
+                    x[2] = -1.0;
+                    x[3] = format::exp2i(fmt.emin());
+                    x[4] = format::exp2i(fmt.emin()) * 0.5;
+                    x[5] = f32::from_bits(1); // smallest denormal input
+                }
+                let offsets = rng.rounding_offsets(n);
+                for (sg, s_t) in [(1.0f32, 1.0f32), (0.5, 2.5), (0.015625, 100.0)] {
+                    for use_offsets in [false, true] {
+                        let o = use_offsets.then_some(&offsets[..]);
+                        let mut want = (Vec::new(), Vec::new(), Vec::new());
+                        for (k, &v) in x.iter().enumerate() {
+                            let r = o.map_or(0.0, |o| o[k]);
+                            let (s, c, mm) = quantize_one_scalar(v, sg, s_t, fmt, r);
+                            want.0.push(s);
+                            want.1.push(c);
+                            want.2.push(mm);
+                        }
+                        for level in Level::supported() {
+                            let mut got = (Vec::new(), Vec::new(), Vec::new());
+                            quantize_run(
+                                level, &x, o, sg, s_t, fmt, &mut got.0, &mut got.1, &mut got.2,
+                            );
+                            assert_eq!(
+                                got,
+                                want,
+                                "e{e}m{m} n={n} sg={sg} sr={use_offsets} level {}",
+                                level.name()
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+}

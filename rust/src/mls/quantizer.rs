@@ -7,9 +7,16 @@
 //!   S_g = ceil-quantized <E_g, M_g>(S_r / S_t)
 //!   X_f = |X| / (S_g * S_t)          (f32 mul then f32 div, same order)
 //!   Xbar = <E_x, M_x>(X_f) with stochastic rounding + gradual underflow
+//!
+//! The group |max| reduce and the contiguous element pass run through
+//! the vectorized kernels in [`super::qsimd`] (SSE4.1/AVX2, runtime
+//! dispatch via [`crate::util::simd`]), pinned bit-identical to the
+//! scalar path — including the stochastic-rounding offset sequence,
+//! which is drawn per element by the caller and merely consumed here.
 
 use super::format::{self, EmFormat};
 use super::grouping::Grouping;
+use super::qsimd;
 use super::tensor::MlsTensor;
 use crate::util::json::Json;
 use crate::util::parallel;
@@ -238,6 +245,9 @@ pub fn quantize_threaded(
     }
 
     let n_groups = cfg.grouping.group_count(shape);
+    // SIMD dispatch level read once per call: every shard of this call
+    // runs the same kernels (all levels are bit-identical anyway)
+    let level = crate::util::simd::active();
 
     // Per-element group ids cost a division each; all groupings except
     // Second are CONTIGUOUS runs of group_len elements in row-major
@@ -252,12 +262,7 @@ pub fn quantize_threaded(
         parallel::map_ranges(threads, n_groups, |lo, hi| {
             let mut part = Vec::with_capacity(hi - lo);
             for g in lo..hi {
-                let chunk = &x[g * group_len..(g + 1) * group_len];
-                let mut m = 0.0f32;
-                for &v in chunk {
-                    m = m.max(v.abs());
-                }
-                part.push(m);
+                part.push(qsimd::abs_max(level, &x[g * group_len..(g + 1) * group_len]));
             }
             part
         })
@@ -288,21 +293,13 @@ pub fn quantize_threaded(
         sg_val[g] = format::group_scale_value(c, m, cfg.group);
     }
 
-    // elements (lines 9-16) — per element, independent given its group scale
+    // elements (lines 9-16) — per element, independent given its group
+    // scale. Contiguous groupings walk single-scale runs through the
+    // (possibly vectorized) qsimd::quantize_run; the strided Second
+    // grouping stays scalar per element.
     let fmt = cfg.element;
-    let quantize_one = |idx: usize, v: f32, sg: f32| -> (i8, u8, u32) {
-        let s = if v > 0.0 {
-            1
-        } else if v < 0.0 {
-            -1
-        } else {
-            0
-        };
-        // identical op order to ref.py: abs(x) / (s_g * s_t)
-        let xf = v.abs() / (sg * s_t_safe);
-        let r = if stochastic { rounding_offsets[idx] } else { 0.0 };
-        let (c, mm) = format::quantize_element(xf, fmt, r);
-        (s, c, mm)
+    let run_offsets = |lo: usize, hi: usize| -> Option<&[f32]> {
+        stochastic.then(|| &rounding_offsets[lo..hi])
     };
     let parts: Vec<(Vec<i8>, Vec<u8>, Vec<u32>)> = if contiguous && n_groups >= threads {
         // shard over group ranges so each worker walks whole chunks
@@ -312,30 +309,46 @@ pub fn quantize_threaded(
             let mut cv = Vec::with_capacity(len);
             let mut mv = Vec::with_capacity(len);
             for g in lo..hi {
-                let sg = sg_val[g];
-                let base = g * group_len;
-                for (off, &v) in x[base..base + group_len].iter().enumerate() {
-                    let (s, c, m) = quantize_one(base + off, v, sg);
-                    sv.push(s);
-                    cv.push(c);
-                    mv.push(m);
-                }
+                let (base, end) = (g * group_len, (g + 1) * group_len);
+                qsimd::quantize_run(
+                    level,
+                    &x[base..end],
+                    run_offsets(base, end),
+                    sg_val[g],
+                    s_t_safe,
+                    fmt,
+                    &mut sv,
+                    &mut cv,
+                    &mut mv,
+                );
             }
             (sv, cv, mv)
         })
     } else if contiguous {
         // fewer groups than workers (e.g. Grouping::None has exactly one):
-        // shard over flat element ranges; the group of element idx is
-        // idx / group_len for every contiguous grouping
+        // shard over flat element ranges, split at group boundaries; the
+        // group of element idx is idx / group_len for every contiguous
+        // grouping
         parallel::map_ranges(threads, n, |lo, hi| {
             let mut sv = Vec::with_capacity(hi - lo);
             let mut cv = Vec::with_capacity(hi - lo);
             let mut mv = Vec::with_capacity(hi - lo);
-            for (idx, &v) in x[lo..hi].iter().enumerate().map(|(o, v)| (lo + o, v)) {
-                let (s, c, m) = quantize_one(idx, v, sg_val[idx / group_len]);
-                sv.push(s);
-                cv.push(c);
-                mv.push(m);
+            let mut idx = lo;
+            while idx < hi {
+                let g = idx / group_len;
+                let end = ((g + 1) * group_len).min(hi);
+                qsimd::quantize_run(
+                    level,
+                    &x[idx..end],
+                    run_offsets(idx, end),
+                    sg_val[g],
+                    s_t_safe,
+                    fmt,
+                    &mut sv,
+                    &mut cv,
+                    &mut mv,
+                );
+                idx = end;
             }
             (sv, cv, mv)
         })
@@ -347,7 +360,8 @@ pub fn quantize_threaded(
             let mut mv = Vec::with_capacity(hi - lo);
             for (idx, &v) in x[lo..hi].iter().enumerate().map(|(o, v)| (lo + o, v)) {
                 let g = cfg.grouping.group_of(shape, idx);
-                let (s, c, m) = quantize_one(idx, v, sg_val[g]);
+                let r = if stochastic { rounding_offsets[idx] } else { 0.0 };
+                let (s, c, m) = qsimd::quantize_one_scalar(v, sg_val[g], s_t_safe, fmt, r);
                 sv.push(s);
                 cv.push(c);
                 mv.push(m);

@@ -16,11 +16,14 @@
 //! * [`stats`] — summary statistics shared by metrics and benches,
 //! * [`parallel`] — deterministic fork/join on a persistent worker pool
 //!   for the hot kernels (rayon is not available offline), with an
-//!   `MLS_THREADS` override.
+//!   `MLS_THREADS` override,
+//! * [`simd`] — one-time runtime SIMD capability detection + the
+//!   `MLS_SIMD` dispatch override for the vectorized kernels.
 
 pub mod bench;
 pub mod json;
 pub mod parallel;
 pub mod prop;
 pub mod rng;
+pub mod simd;
 pub mod stats;

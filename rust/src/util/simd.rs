@@ -1,0 +1,245 @@
+//! Runtime SIMD capability detection + the `MLS_SIMD` dispatch override.
+//!
+//! The Eq. 7 microkernel ([`crate::arith::simd`]) and the quantizer inner
+//! loops ([`crate::mls::quantizer`]) ship explicit-intrinsics paths
+//! (SSE4.1 / AVX2 on `x86_64`, NEON on `aarch64`) next to the scalar
+//! reference kernels. Which path runs is decided HERE, once per process:
+//!
+//! * detection runs lazily via `is_x86_feature_detected!` /
+//!   `is_aarch64_feature_detected!` and is cached in a [`OnceLock`]
+//!   (detection order: `avx2 > sse41 > neon > off`),
+//! * `MLS_SIMD={auto,off,sse41,avx2,neon}` overrides detection for
+//!   testing and benching (`off` is the scalar escape hatch; requesting
+//!   an ISA this CPU lacks falls back to scalar with a warning),
+//! * [`set_level`] is an in-process override on top of both — the
+//!   identity tests and the `simd_vs_scalar` benches use it to force
+//!   each supported path inside one process.
+//!
+//! Every path is BIT-IDENTICAL by construction — values and all five
+//! hardware-audit counters — so the level is purely a speed choice,
+//! never a numerics choice (pinned by `rust/tests/conv_fuzz.rs` and
+//! `rust/tests/parallel_equivalence.rs` across every [`supported`]
+//! level).
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::OnceLock;
+
+/// One SIMD dispatch level. `Off` (the scalar reference kernels) exists
+/// on every architecture; the vector levels exist only where their ISA
+/// does, and [`Level::is_supported`] reports `false` elsewhere.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Level {
+    /// Scalar reference kernels — the bit-identity anchor.
+    Off,
+    /// 128-bit `core::arch::x86_64` path (SSE4.1).
+    Sse41,
+    /// 256-bit `core::arch::x86_64` path (AVX2).
+    Avx2,
+    /// 128-bit `core::arch::aarch64` path (NEON).
+    Neon,
+}
+
+const UNSET: u8 = u8::MAX;
+
+impl Level {
+    /// Every dispatch level, scalar first. [`Level::parse`] scans this
+    /// list, so parseable names cannot drift from `name()` outputs.
+    pub const ALL: [Level; 4] = [Level::Off, Level::Sse41, Level::Avx2, Level::Neon];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Level::Off => "off",
+            Level::Sse41 => "sse41",
+            Level::Avx2 => "avx2",
+            Level::Neon => "neon",
+        }
+    }
+
+    /// Parse an `MLS_SIMD` value. `"auto"` means "use runtime
+    /// detection" and returns `None`; anything else must name a level.
+    pub fn parse(s: &str) -> anyhow::Result<Option<Level>> {
+        if s == "auto" {
+            return Ok(None);
+        }
+        Self::ALL
+            .into_iter()
+            .find(|l| l.name() == s)
+            .map(Some)
+            .ok_or_else(|| {
+                anyhow::anyhow!(
+                    "unknown MLS_SIMD value {s:?} (have \"auto\" or {:?})",
+                    Self::ALL.map(|l| l.name())
+                )
+            })
+    }
+
+    /// Whether this CPU can execute the level's kernels.
+    pub fn is_supported(self) -> bool {
+        match self {
+            Level::Off => true,
+            Level::Sse41 => detect_sse41(),
+            Level::Avx2 => detect_avx2(),
+            Level::Neon => detect_neon(),
+        }
+    }
+
+    /// Every level this CPU supports, scalar first — the identity tests
+    /// force each of these in turn via [`set_level`].
+    pub fn supported() -> Vec<Level> {
+        Self::ALL.into_iter().filter(|l| l.is_supported()).collect()
+    }
+
+    fn from_u8(v: u8) -> Level {
+        Self::ALL[v as usize]
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+fn detect_sse41() -> bool {
+    std::arch::is_x86_feature_detected!("sse4.1")
+}
+#[cfg(not(target_arch = "x86_64"))]
+fn detect_sse41() -> bool {
+    false
+}
+
+#[cfg(target_arch = "x86_64")]
+fn detect_avx2() -> bool {
+    std::arch::is_x86_feature_detected!("avx2")
+}
+#[cfg(not(target_arch = "x86_64"))]
+fn detect_avx2() -> bool {
+    false
+}
+
+#[cfg(target_arch = "aarch64")]
+fn detect_neon() -> bool {
+    std::arch::is_aarch64_feature_detected!("neon")
+}
+#[cfg(not(target_arch = "aarch64"))]
+fn detect_neon() -> bool {
+    false
+}
+
+/// Widest supported level: `avx2 > sse41 > neon > off`.
+pub fn detect() -> Level {
+    if detect_avx2() {
+        Level::Avx2
+    } else if detect_sse41() {
+        Level::Sse41
+    } else if detect_neon() {
+        Level::Neon
+    } else {
+        Level::Off
+    }
+}
+
+/// In-process override set by [`set_level`]; `UNSET` defers to the
+/// cached env/detection default.
+static OVERRIDE: AtomicU8 = AtomicU8::new(UNSET);
+/// The process default: `MLS_SIMD` if set (and supported), else
+/// [`detect`]. Read once — env changes after first use are ignored.
+static DEFAULT: OnceLock<Level> = OnceLock::new();
+
+fn default_level() -> Level {
+    *DEFAULT.get_or_init(|| match std::env::var("MLS_SIMD") {
+        Err(_) => detect(),
+        Ok(s) => match Level::parse(&s) {
+            Ok(None) => detect(),
+            Ok(Some(l)) if l.is_supported() => l,
+            Ok(Some(l)) => {
+                eprintln!(
+                    "[mls] MLS_SIMD={} is not supported on this CPU; using the scalar kernels",
+                    l.name()
+                );
+                Level::Off
+            }
+            Err(e) => {
+                eprintln!("[mls] {e:#}; using runtime detection");
+                detect()
+            }
+        },
+    })
+}
+
+/// The dispatch level the kernels run at right now: the [`set_level`]
+/// override if one is active, else the `MLS_SIMD`/detection default.
+pub fn active() -> Level {
+    match OVERRIDE.load(Ordering::Relaxed) {
+        UNSET => default_level(),
+        v => Level::from_u8(v),
+    }
+}
+
+/// Force the dispatch level for this process, returning the previously
+/// active level so callers can restore it. Used by the identity tests
+/// and the `simd_vs_scalar` benches to pin each path in one process;
+/// safe to call at any time because every level is bit-identical.
+pub fn set_level(level: Level) -> Level {
+    let prev = active();
+    OVERRIDE.store(
+        Level::ALL.iter().position(|l| *l == level).unwrap() as u8,
+        Ordering::Relaxed,
+    );
+    prev
+}
+
+/// Human-readable dispatch line for `bench-info` and the trainer log.
+pub fn describe() -> String {
+    let source = if OVERRIDE.load(Ordering::Relaxed) != UNSET {
+        "forced via set_level"
+    } else if std::env::var_os("MLS_SIMD").is_some() {
+        "MLS_SIMD override"
+    } else {
+        "runtime-detected"
+    };
+    format!(
+        "{} ({source}; detection order avx2 > sse41 > neon > off, scalar fallback always available)",
+        active().name()
+    )
+}
+
+/// Log the selected dispatch path once per process (trainer startup —
+/// audit reproducibility: which microkernel produced a run's numbers).
+pub fn log_once() {
+    static ONCE: std::sync::Once = std::sync::Once::new();
+    ONCE.call_once(|| eprintln!("[mls] simd dispatch: {}", describe()));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_round_trips_the_registry() {
+        for l in Level::ALL {
+            assert_eq!(Level::parse(l.name()).unwrap(), Some(l), "{}", l.name());
+        }
+        assert_eq!(Level::parse("auto").unwrap(), None);
+        let err = format!("{:#}", Level::parse("bogus").unwrap_err());
+        for l in Level::ALL {
+            assert!(err.contains(l.name()), "{err}");
+        }
+    }
+
+    #[test]
+    fn supported_always_includes_scalar_and_the_detected_level() {
+        let sup = Level::supported();
+        assert_eq!(sup[0], Level::Off);
+        assert!(detect().is_supported());
+        assert!(sup.contains(&detect()));
+        // vector levels never co-exist across architectures
+        assert!(!(sup.contains(&Level::Neon) && sup.contains(&Level::Sse41)));
+    }
+
+    #[test]
+    fn set_level_overrides_and_restores() {
+        let before = active();
+        let prev = set_level(Level::Off);
+        assert_eq!(prev, before);
+        assert_eq!(active(), Level::Off);
+        assert!(describe().starts_with("off"));
+        set_level(before);
+        assert_eq!(active(), before);
+    }
+}

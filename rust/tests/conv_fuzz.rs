@@ -12,6 +12,13 @@
 //! reference backward conv. The authoring container has no Rust
 //! toolchain, so this is the fuzz CI actually runs; a failing case
 //! prints its full geometry for reproduction.
+//!
+//! Both sweeps additionally force every SIMD dispatch level the host
+//! supports (scalar `off` plus any of SSE4.1 / AVX2 / NEON) through
+//! `util::simd::set_level` and pin each one bit-identical to the legacy
+//! kernel — values and all five audit counters. Forcing a level is a
+//! benign global: every level is bit-identical by construction, so
+//! concurrent tests observing a forced level still pass.
 
 use mls_train::arith::conv::{
     conv2d_f32_dgrad, conv2d_f32_wgrad, lowbit_conv_legacy_threaded, lowbit_conv_planar_threaded,
@@ -21,6 +28,7 @@ use mls_train::arith::spec::ConvSpec;
 use mls_train::mls::quantizer::{quantize, QuantConfig, Rounding};
 use mls_train::util::prop::grouped_tensor;
 use mls_train::util::rng::Pcg32;
+use mls_train::util::simd;
 
 fn assert_convs_identical(a: &ConvOutput, b: &ConvOutput, tag: &str) {
     assert_eq!(a.shape, b.shape, "{tag}: shape");
@@ -83,6 +91,14 @@ fn packed_planar_legacy_bit_identical_on_random_geometries() {
         let planar = lowbit_conv_planar_threaded(&tw, &ta, stride, pad, threads);
         assert_convs_identical(&legacy, &packed, &format!("{tag} [packed]"));
         assert_convs_identical(&legacy, &planar, &format!("{tag} [planar]"));
+        // every SIMD dispatch level the host supports must reproduce the
+        // legacy kernel bit-for-bit
+        for lvl in simd::Level::supported() {
+            let prev = simd::set_level(lvl);
+            let forced = lowbit_conv_threaded(&tw, &ta, stride, pad, threads);
+            simd::set_level(prev);
+            assert_convs_identical(&legacy, &forced, &format!("{tag} [simd {}]", lvl.name()));
+        }
         cases += 1;
     }
 }
@@ -160,6 +176,19 @@ fn convspec_backward_passes_fuzz() {
             assert_convs_identical(&wg, &wgt, &format!("{tag} [wgrad t{threads}]"));
             let dgt = spec.input_grad(&te, &tw, threads);
             assert_convs_identical(&dg, &dgt, &format!("{tag} [dgrad t{threads}]"));
+        }
+
+        // bit-identity across SIMD dispatch levels, for all three passes
+        for lvl in simd::Level::supported() {
+            let prev = simd::set_level(lvl);
+            let fwd_l = spec.forward(&tw, &ta, 1);
+            let wg_l = spec.weight_grad(&te, &ta, 1);
+            let dg_l = spec.input_grad(&te, &tw, 1);
+            simd::set_level(prev);
+            let ltag = format!("{tag} [simd {}]", lvl.name());
+            assert_convs_identical(&fwd, &fwd_l, &format!("{ltag} fwd"));
+            assert_convs_identical(&wg, &wg_l, &format!("{ltag} wgrad"));
+            assert_convs_identical(&dg, &dg_l, &format!("{ltag} dgrad"));
         }
 
         // the f32 reference backward convs of the dequantized operands

@@ -12,6 +12,7 @@ use mls_train::mls::quantizer::{quantize, quantize_threaded, QuantConfig, Roundi
 use mls_train::mls::{Grouping, MlsTensor};
 use mls_train::util::prop::grouped_tensor;
 use mls_train::util::rng::Pcg32;
+use mls_train::util::simd;
 
 const THREAD_COUNTS: [usize; 3] = [1, 2, 8];
 
@@ -124,6 +125,60 @@ fn packed_and_planar_kernels_match_legacy_across_thread_counts() {
                 assert_convs_identical(&legacy, &planar, &tag);
             }
         }
+    }
+}
+
+#[test]
+fn simd_levels_identical_to_forced_scalar() {
+    // the runtime SIMD dispatch is a pure implementation choice, exactly
+    // like threading: for every supported ISA level, quantization (all
+    // grouping modes, both rounding modes) and the packed conv must
+    // reproduce the forced-scalar results bit-for-bit at every worker
+    // count — planes, scales, output values and audit counters alike
+    let mut rng = Pcg32::seeded(106);
+    let shape = [8usize, 12, 5, 5];
+    let x = grouped_tensor(&mut rng, shape);
+    let r = rng.rounding_offsets(x.len());
+
+    let configs = [
+        QuantConfig::default(), // <2,4> nc stochastic
+        QuantConfig { rounding: Rounding::Nearest, ..QuantConfig::new(2, 1) },
+        QuantConfig { grouping: Grouping::Second, ..QuantConfig::default() },
+        QuantConfig { grouping: Grouping::First, ..QuantConfig::new(0, 4) },
+        QuantConfig { grouping: Grouping::None, ..QuantConfig::default() },
+    ];
+    for cfg in configs {
+        let offsets: &[f32] = if cfg.rounding == Rounding::Stochastic { &r } else { &[] };
+        let prev = simd::set_level(simd::Level::Off);
+        let scalar = quantize_threaded(&x, &shape, &cfg, offsets, 1);
+        simd::set_level(prev);
+        for lvl in simd::Level::supported() {
+            let prev = simd::set_level(lvl);
+            for threads in THREAD_COUNTS {
+                let forced = quantize_threaded(&x, &shape, &cfg, offsets, threads);
+                let tag = format!("{} [simd {}] @ {threads} threads", cfg.name(), lvl.name());
+                assert_tensors_identical(&scalar, &forced, &tag);
+            }
+            simd::set_level(prev);
+        }
+    }
+
+    let wshape = [6usize, 5, 3, 3];
+    let mut ncfg = QuantConfig::new(2, 4);
+    ncfg.rounding = Rounding::Nearest;
+    let tw = quantize(&grouped_tensor(&mut rng, wshape), &wshape, &ncfg, &[]);
+    let ta = quantize(&x, &shape, &ncfg, &[]);
+    let prev = simd::set_level(simd::Level::Off);
+    let scalar = lowbit_conv_threaded(&tw, &ta, 1, 1, 1);
+    simd::set_level(prev);
+    for lvl in simd::Level::supported() {
+        let prev = simd::set_level(lvl);
+        for threads in THREAD_COUNTS {
+            let forced = lowbit_conv_threaded(&tw, &ta, 1, 1, threads);
+            let tag = format!("conv [simd {}] @ {threads} threads", lvl.name());
+            assert_convs_identical(&scalar, &forced, &tag);
+        }
+        simd::set_level(prev);
     }
 }
 

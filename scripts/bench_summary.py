@@ -1,0 +1,61 @@
+#!/usr/bin/env python3
+"""Render the measured BENCH_*.json perf trajectory as GitHub-flavored
+markdown for the CI job summary.
+
+Stdlib-only (CI's build-test job has no pip step). For each report this
+prints a section with the SIMD dispatch path the run used (when the
+report carries one) and a table of every speedup ratio — the numbers
+ROADMAP's perf-trajectory item tracks (packed_vs_planar_serial,
+simd_vs_scalar_serial, quantize_simd_vs_scalar, step_vs_sum_of_parts,
+...). CI appends the output to $GITHUB_STEP_SUMMARY after the bench
+smoke, so every push publishes its measured ratios on the job page even
+though the committed JSONs stay null placeholders (the authoring
+container has no Rust toolchain).
+
+Usage: bench_summary.py <BENCH_report.json>...
+
+A missing or unreadable report renders as a note instead of failing:
+the summary step must never mask the real bench/validate verdicts.
+"""
+import json
+import sys
+
+
+def render(path):
+    try:
+        with open(path) as f:
+            report = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        return [f"### `{path}`", "", f"_not available: {e}_", ""]
+    lines = [f"### `{path}` — {report.get('bench', '?')}", ""]
+    mode = "smoke" if report.get("smoke") else "full"
+    simd = report.get("simd")
+    context = [f"{mode} run"]
+    if simd is not None:
+        context.append(f"simd dispatch: `{simd}`")
+    if report.get("threads") is not None:
+        context.append(f"{report['threads']:g} threads")
+    lines.append(", ".join(context))
+    lines.append("")
+    ratios = report.get("ratios") or {}
+    measured = {k: v for k, v in ratios.items() if isinstance(v, (int, float))}
+    if measured:
+        lines += ["| ratio | value |", "|---|---|"]
+        lines += [f"| `{k}` | {v:.3f}x |" for k, v in measured.items()]
+    else:
+        lines.append("_no measured ratios (placeholder report)_")
+    lines.append("")
+    return lines
+
+
+def main():
+    if len(sys.argv) < 2:
+        sys.exit(__doc__)
+    out = ["## Bench trajectory", ""]
+    for path in sys.argv[1:]:
+        out += render(path)
+    print("\n".join(out))
+
+
+if __name__ == "__main__":
+    main()

@@ -3,9 +3,9 @@
 against their checked-in schemas.
 
 Stdlib-only (CI's build-test job has no pip step), implementing the JSON
-Schema subset the bench/audit/lab schemas use: type, const, required,
-properties, additionalProperties (as a sub-schema), minProperties,
-minimum, exclusiveMinimum, and for arrays minItems + items (as a
+Schema subset the bench/audit/lab schemas use: type, const, enum,
+required, properties, additionalProperties (as a sub-schema),
+minProperties, minimum, exclusiveMinimum, and for arrays minItems + items (as a
 sub-schema applied to every element — the per-layer audit stream's
 `layers` array needs it). A malformed report — missing ratio, empty
 results block, non-positive throughput, empty audit stream — fails the
@@ -43,6 +43,8 @@ def check(value, schema, path, errors):
             return
     if "const" in schema and value != schema["const"]:
         errors.append(f"{path}: expected {schema['const']!r}, got {value!r}")
+    if "enum" in schema and value not in schema["enum"]:
+        errors.append(f"{path}: {value!r} not one of {schema['enum']}")
     if "minimum" in schema and value < schema["minimum"]:
         errors.append(f"{path}: {value} < minimum {schema['minimum']}")
     if "exclusiveMinimum" in schema and value <= schema["exclusiveMinimum"]:
