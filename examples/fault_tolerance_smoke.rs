@@ -1,0 +1,159 @@
+//! CI smoke for the crash-safe training loop: inject a deterministic
+//! crash right after the step-3 checkpoint, resume from the checkpoint,
+//! and require the resumed run to be **bit-identical** to an
+//! uninterrupted baseline (losses, lr, evals, every parameter bit, the
+//! audit roll-up, and the test metrics). Then exercise each
+//! `on_divergence` health policy against an injected NaN gradient:
+//! `abort` must stop and mark the run diverged, `rollback` must recover
+//! onto the exact clean trajectory, and `halve_lr` must recover onto a
+//! *different* (half-lr) trajectory. Exits nonzero on any mismatch,
+//! failing the CI step, which also greps the bit-identity line.
+//!
+//! Artifacts (checkpoints + manifests + audit streams) land under
+//! `runs/fault/`, where CI schema-validates them.
+//!
+//! Run with: `cargo run --release --example fault_tolerance_smoke`
+
+use mls_train::coordinator::{trainer, TrainConfig};
+
+const STEPS: u64 = 6;
+const CRASH_AT: u64 = 3;
+
+fn config(out_dir: Option<&str>) -> TrainConfig {
+    let mut c = TrainConfig::default();
+    c.model = "cnn_t".to_string();
+    c.cfg_name = "e2m4_gnc_eg8mg1_sr".to_string();
+    c.steps = STEPS;
+    c.batch = 8;
+    c.eval_every = 2;
+    c.eval_batches = 2;
+    c.lr.base = 0.05;
+    c.lr.milestones = vec![];
+    c.optimizer = "momentum".to_string();
+    c.data.noise = 1.0;
+    c.data.label_noise = 0.0;
+    c.checkpoint_every = 1;
+    c.out_dir = out_dir.map(str::to_string);
+    c
+}
+
+fn assert_bit_identical(
+    a: &trainer::TrainResult,
+    b: &trainer::TrainResult,
+) -> anyhow::Result<()> {
+    anyhow::ensure!(a.metrics.steps.len() == b.metrics.steps.len(), "step row count differs");
+    for (x, y) in a.metrics.steps.iter().zip(&b.metrics.steps) {
+        anyhow::ensure!(
+            x.step == y.step
+                && x.lr.to_bits() == y.lr.to_bits()
+                && x.loss.to_bits() == y.loss.to_bits()
+                && x.acc.to_bits() == y.acc.to_bits(),
+            "step {} row differs bitwise",
+            x.step
+        );
+    }
+    anyhow::ensure!(a.metrics.evals.len() == b.metrics.evals.len(), "eval row count differs");
+    for (x, y) in a.metrics.evals.iter().zip(&b.metrics.evals) {
+        anyhow::ensure!(
+            x.step == y.step
+                && x.loss.to_bits() == y.loss.to_bits()
+                && x.acc.to_bits() == y.acc.to_bits(),
+            "eval row at step {} differs bitwise",
+            x.step
+        );
+    }
+    anyhow::ensure!(a.final_state.len() == b.final_state.len(), "state length differs");
+    let diff = a
+        .final_state
+        .iter()
+        .zip(&b.final_state)
+        .filter(|(x, y)| x.to_bits() != y.to_bits())
+        .count();
+    anyhow::ensure!(diff == 0, "{diff} parameter(s) differ bitwise");
+    anyhow::ensure!(a.audit_totals == b.audit_totals, "audit roll-up differs");
+    anyhow::ensure!(a.audit_steps == b.audit_steps, "audit step count differs");
+    anyhow::ensure!(a.test_loss.to_bits() == b.test_loss.to_bits(), "test loss differs");
+    anyhow::ensure!(a.test_acc.to_bits() == b.test_acc.to_bits(), "test acc differs");
+    Ok(())
+}
+
+fn main() -> anyhow::Result<()> {
+    println!("== fault-tolerance smoke (crash + bit-identical resume, health policies) ==");
+    // start from a clean slate so a leftover complete checkpoint from a
+    // previous invocation cannot swallow the injected crash
+    let _ = std::fs::remove_dir_all("runs/fault");
+
+    // 1. uninterrupted baseline
+    let baseline_dir = "runs/fault/baseline";
+    let clean = trainer::train_native(&config(Some(baseline_dir)))?;
+    anyhow::ensure!(!clean.diverged, "baseline diverged");
+
+    // 2. crash right after the step-{CRASH_AT} checkpoint...
+    let crash_dir = "runs/fault/crash_resume";
+    let mut c = config(Some(crash_dir));
+    c.fault = Some(format!("crash_after_ckpt@step{CRASH_AT}"));
+    match trainer::train_native(&c) {
+        Err(e) if format!("{e:#}").contains("MLS_FAULT crash injected") => {}
+        Err(e) => anyhow::bail!("crash run failed for the wrong reason: {e:#}"),
+        Ok(_) => anyhow::bail!("injected crash did not fire"),
+    }
+    println!("  crash injected after checkpoint at step {CRASH_AT}");
+
+    // ...and resume from the surviving checkpoint
+    let resumed = trainer::train_native(&c)?;
+    anyhow::ensure!(
+        resumed.resumed_from == Some(CRASH_AT + 1),
+        "expected resume at step {}, got {:?}",
+        CRASH_AT + 1,
+        resumed.resumed_from
+    );
+    anyhow::ensure!(
+        resumed.steps_executed == STEPS - (CRASH_AT + 1),
+        "resume must execute only the remaining steps"
+    );
+    assert_bit_identical(&clean, &resumed)?;
+    println!(
+        "  bit-identical resume OK (resumed at step {}, executed {} of {} steps)",
+        CRASH_AT + 1,
+        resumed.steps_executed,
+        STEPS
+    );
+
+    // 3. health policies against an injected NaN gradient
+    let mut abort = config(Some("runs/fault/policy_abort"));
+    abort.on_divergence = "abort".to_string();
+    abort.fault = Some("nan_grad@step2".to_string());
+    let r = trainer::train_native(&abort)?;
+    anyhow::ensure!(r.diverged && r.rollbacks == 0, "abort policy must stop the run");
+    println!("  on_divergence=abort OK (diverged at step 2, health record streamed)");
+
+    let mut clean_rb = config(Some("runs/fault/policy_rollback_clean"));
+    clean_rb.on_divergence = "rollback".to_string();
+    let clean_rb = trainer::train_native(&clean_rb)?;
+    let mut rb = config(Some("runs/fault/policy_rollback"));
+    rb.on_divergence = "rollback".to_string();
+    rb.fault = Some("nan_grad@step2".to_string());
+    let r = trainer::train_native(&rb)?;
+    anyhow::ensure!(!r.diverged && r.rollbacks == 1, "rollback policy must recover");
+    assert_bit_identical(&clean_rb, &r)?;
+    println!("  on_divergence=rollback OK (1 rollback, recovered bit-identically)");
+
+    let mut hl = config(Some("runs/fault/policy_halve_lr"));
+    hl.on_divergence = "halve_lr".to_string();
+    hl.fault = Some("nan_grad@step2".to_string());
+    let r = trainer::train_native(&hl)?;
+    anyhow::ensure!(!r.diverged && r.rollbacks == 1, "halve_lr policy must recover");
+    let base = hl.lr.base;
+    anyhow::ensure!(
+        r.metrics.steps[2].lr.to_bits() == (base * 0.5).to_bits(),
+        "replayed step must run at half lr"
+    );
+    anyhow::ensure!(
+        r.final_state != clean_rb.final_state,
+        "halve_lr must change the trajectory"
+    );
+    println!("  on_divergence=halve_lr OK (replay at half lr, trajectory moved)");
+
+    println!("OK");
+    Ok(())
+}

@@ -1,0 +1,538 @@
+//! Step checkpoints: the full mid-run training state, written atomically
+//! and durably every `checkpoint_every` steps, resumable bit-identically.
+//!
+//! A [`Checkpoint`] carries EVERYTHING the native trainer's step loop
+//! depends on: the flat parameter vector, the optimizer slots (momentum
+//! velocity), the next step index, the health-policy state (lr scale,
+//! rollback count, monitor best-loss/streak) and the run accumulators
+//! the final `TrainResult` is built from (metrics rows, eval rows, audit
+//! totals). Two state sources are deliberately NOT serialized because
+//! they are pure functions of `(config, step)` and reconstruct exactly:
+//! the per-step stochastic-rounding RNG (re-seeded fresh each step from
+//! `step_seed`) and the data order (`train_batch_index`); and BN layers
+//! carry no running statistics (batch stats + learnable gamma/beta, the
+//! latter in the parameter vector).
+//!
+//! On disk (all little-endian): an 8-byte magic, the fields, a
+//! length-prefixed echo of the exact `TrainConfig::to_json` string the
+//! run was launched with, and an FNV-1a-64 trailer over every preceding
+//! byte ([`crate::nn::train::Fnv1a`]). The loader rejects anything with
+//! a wrong magic, bad trailer, short buffer or mismatched config echo —
+//! a checkpoint from a different config must never silently seed a
+//! "resumed" run. [`CheckpointIo`] rotates `<tag>.ckpt.bin` to
+//! `<tag>.ckpt.prev.bin` before each save (so one corrupted latest file
+//! still leaves a good anchor) and mirrors the integrity metadata into a
+//! human/CI-readable `<tag>.ckpt.json` manifest
+//! (`schemas/checkpoint_manifest.schema.json`).
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, ensure, Context, Result};
+
+use super::metrics::{EvalRow, StepRow};
+use crate::nn::train::{Fnv1a, StepAudit};
+use crate::nn::PassCounters;
+use crate::util::fsio;
+use crate::util::json::Json;
+
+const MAGIC: &[u8; 8] = b"MLSCKPT1";
+
+/// Full mid-run trainer state at a step boundary: everything needed to
+/// continue bit-identically from `next_step`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Checkpoint {
+    /// the first step the resumed run executes
+    pub next_step: u64,
+    /// flat parameter vector (`NativeModel::state`)
+    pub state: Vec<f32>,
+    /// name of the optimizer that produced `opt_state`
+    pub opt_name: String,
+    /// flat optimizer slots (`Optimizer::state`; empty for sgd)
+    pub opt_state: Vec<f32>,
+    /// learning-rate scale accumulated by `halve_lr` recoveries
+    pub lr_scale: f32,
+    /// rollback recoveries so far (bounded by `health::MAX_ROLLBACKS`)
+    pub rollbacks: u64,
+    /// health-monitor best-loss (f32::INFINITY before the first step)
+    pub health_best_loss: f32,
+    /// health-monitor blow-up streak
+    pub health_streak: u64,
+    /// metrics rows of steps 0..next_step
+    pub steps: Vec<StepRow>,
+    /// eval rows recorded so far
+    pub evals: Vec<EvalRow>,
+    /// number of steps folded into `audit_totals`
+    pub audit_steps: u64,
+    /// audit roll-up so far (`layers` is always empty here — the
+    /// per-step stream lives in `<tag>.audit.jsonl`)
+    pub audit_totals: StepAudit,
+    /// exact `TrainConfig::to_json().to_string_compact()` of the run
+    pub config_echo: String,
+}
+
+fn push_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn push_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn push_f32(out: &mut Vec<u8>, v: f32) {
+    push_u32(out, v.to_bits());
+}
+
+fn push_f64(out: &mut Vec<u8>, v: f64) {
+    push_u64(out, v.to_bits());
+}
+
+fn push_bytes(out: &mut Vec<u8>, b: &[u8]) {
+    push_u64(out, b.len() as u64);
+    out.extend_from_slice(b);
+}
+
+fn push_f32s(out: &mut Vec<u8>, vs: &[f32]) {
+    push_u64(out, vs.len() as u64);
+    for v in vs {
+        push_f32(out, *v);
+    }
+}
+
+fn push_pass(out: &mut Vec<u8>, p: &PassCounters) {
+    push_u64(out, p.convs);
+    push_u64(out, p.mul_ops);
+    push_u64(out, p.int_add_ops);
+    push_u64(out, p.float_add_ops);
+    push_u64(out, p.group_scale_ops);
+    push_u32(out, p.peak_acc_bits);
+}
+
+/// Bounds-checked little-endian cursor for [`Checkpoint::decode`].
+struct Reader<'a> {
+    b: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        ensure!(
+            n <= self.b.len() - self.pos,
+            "checkpoint truncated: need {n} bytes at offset {}, have {}",
+            self.pos,
+            self.b.len() - self.pos
+        );
+        let s = &self.b[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().expect("8 bytes")))
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().expect("4 bytes")))
+    }
+
+    fn f32(&mut self) -> Result<f32> {
+        Ok(f32::from_bits(self.u32()?))
+    }
+
+    fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+
+    /// A length prefix for `elem` - byte elements, sanity - bounded by the
+    /// remaining buffer so a corrupt length cannot drive a huge alloc.
+    fn len(&mut self, elem: usize) -> Result<usize> {
+        let n = self.u64()? as usize;
+        ensure!(
+            n.checked_mul(elem).is_some_and(|total| total <= self.b.len() - self.pos),
+            "checkpoint corrupt: length {n} x {elem}B exceeds remaining {}B",
+            self.b.len() - self.pos
+        );
+        Ok(n)
+    }
+
+    fn f32s(&mut self) -> Result<Vec<f32>> {
+        let n = self.len(4)?;
+        (0..n).map(|_| self.f32()).collect()
+    }
+
+    fn bytes(&mut self) -> Result<&'a [u8]> {
+        let n = self.len(1)?;
+        self.take(n)
+    }
+
+    fn pass(&mut self) -> Result<PassCounters> {
+        Ok(PassCounters {
+            convs: self.u64()?,
+            mul_ops: self.u64()?,
+            int_add_ops: self.u64()?,
+            float_add_ops: self.u64()?,
+            group_scale_ops: self.u64()?,
+            peak_acc_bits: self.u32()?,
+        })
+    }
+}
+
+impl Checkpoint {
+    /// Serialize to the on-disk byte format (FNV-1a trailer included).
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        out.extend_from_slice(MAGIC);
+        push_u64(&mut out, self.next_step);
+        push_f32(&mut out, self.lr_scale);
+        push_u64(&mut out, self.rollbacks);
+        push_f32(&mut out, self.health_best_loss);
+        push_u64(&mut out, self.health_streak);
+        push_bytes(&mut out, self.opt_name.as_bytes());
+        push_f32s(&mut out, &self.state);
+        push_f32s(&mut out, &self.opt_state);
+        push_u64(&mut out, self.steps.len() as u64);
+        for r in &self.steps {
+            push_u64(&mut out, r.step);
+            push_f32(&mut out, r.lr);
+            push_f32(&mut out, r.loss);
+            push_f32(&mut out, r.acc);
+            push_f64(&mut out, r.step_ms);
+        }
+        push_u64(&mut out, self.evals.len() as u64);
+        for r in &self.evals {
+            push_u64(&mut out, r.step);
+            push_f32(&mut out, r.loss);
+            push_f32(&mut out, r.acc);
+        }
+        push_u64(&mut out, self.audit_steps);
+        push_pass(&mut out, &self.audit_totals.forward);
+        push_pass(&mut out, &self.audit_totals.wgrad);
+        push_pass(&mut out, &self.audit_totals.dgrad);
+        push_bytes(&mut out, self.config_echo.as_bytes());
+        let trailer = fnv1a_trailer(&out);
+        push_u64(&mut out, trailer);
+        out
+    }
+
+    /// Decode and verify a byte buffer written by [`Self::encode`].
+    pub fn decode(bytes: &[u8]) -> Result<Checkpoint> {
+        ensure!(bytes.len() >= MAGIC.len() + 8, "checkpoint truncated: {} bytes", bytes.len());
+        let (body, trailer) = bytes.split_at(bytes.len() - 8);
+        let stored = u64::from_le_bytes(trailer.try_into().expect("8 bytes"));
+        let computed = fnv1a_trailer(body);
+        ensure!(
+            stored == computed,
+            "checkpoint checksum mismatch: stored {stored:016x}, computed {computed:016x}"
+        );
+        let mut r = Reader { b: body, pos: 0 };
+        let magic = r.take(MAGIC.len())?;
+        ensure!(magic == MAGIC, "bad checkpoint magic {magic:?}");
+        let next_step = r.u64()?;
+        let lr_scale = r.f32()?;
+        let rollbacks = r.u64()?;
+        let health_best_loss = r.f32()?;
+        let health_streak = r.u64()?;
+        let opt_name = String::from_utf8(r.bytes()?.to_vec())
+            .map_err(|e| anyhow!("checkpoint optimizer name is not UTF-8: {e}"))?;
+        let state = r.f32s()?;
+        let opt_state = r.f32s()?;
+        let n_steps = r.len(8 + 4 + 4 + 4 + 8)?;
+        let steps = (0..n_steps)
+            .map(|_| {
+                Ok(StepRow {
+                    step: r.u64()?,
+                    lr: r.f32()?,
+                    loss: r.f32()?,
+                    acc: r.f32()?,
+                    step_ms: r.f64()?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let n_evals = r.len(8 + 4 + 4)?;
+        let evals = (0..n_evals)
+            .map(|_| Ok(EvalRow { step: r.u64()?, loss: r.f32()?, acc: r.f32()? }))
+            .collect::<Result<Vec<_>>>()?;
+        let audit_steps = r.u64()?;
+        let audit_totals = StepAudit {
+            forward: r.pass()?,
+            wgrad: r.pass()?,
+            dgrad: r.pass()?,
+            layers: Vec::new(),
+        };
+        let config_echo = String::from_utf8(r.bytes()?.to_vec())
+            .map_err(|e| anyhow!("checkpoint config echo is not UTF-8: {e}"))?;
+        ensure!(r.pos == body.len(), "checkpoint has {} trailing bytes", body.len() - r.pos);
+        Ok(Checkpoint {
+            next_step,
+            state,
+            opt_name,
+            opt_state,
+            lr_scale,
+            rollbacks,
+            health_best_loss,
+            health_streak,
+            steps,
+            evals,
+            audit_steps,
+            audit_totals,
+            config_echo,
+        })
+    }
+}
+
+/// The FNV-1a-64 integrity trailer over a checkpoint body.
+pub fn fnv1a_trailer(body: &[u8]) -> u64 {
+    let mut h = Fnv1a::new();
+    h.update(body);
+    h.finish()
+}
+
+/// File layout + rotation for one run's checkpoints:
+/// `<dir>/<tag>.ckpt.bin` (latest), `<dir>/<tag>.ckpt.prev.bin`
+/// (previous good, the corruption fallback) and `<dir>/<tag>.ckpt.json`
+/// (the manifest mirroring the latest file's integrity metadata).
+pub struct CheckpointIo {
+    dir: PathBuf,
+    tag: String,
+}
+
+impl CheckpointIo {
+    pub fn new(dir: &Path, tag: &str) -> CheckpointIo {
+        CheckpointIo { dir: dir.to_path_buf(), tag: tag.to_string() }
+    }
+
+    pub fn latest_path(&self) -> PathBuf {
+        self.dir.join(format!("{}.ckpt.bin", self.tag))
+    }
+
+    pub fn prev_path(&self) -> PathBuf {
+        self.dir.join(format!("{}.ckpt.prev.bin", self.tag))
+    }
+
+    pub fn manifest_path(&self) -> PathBuf {
+        self.dir.join(format!("{}.ckpt.json", self.tag))
+    }
+
+    /// Rotate latest -> prev, then durably write the new latest plus its
+    /// manifest.
+    pub fn save(&self, ckpt: &Checkpoint) -> Result<()> {
+        std::fs::create_dir_all(&self.dir)
+            .with_context(|| format!("checkpoint dir {:?}", self.dir))?;
+        let latest = self.latest_path();
+        if latest.exists() {
+            std::fs::rename(&latest, self.prev_path())
+                .with_context(|| format!("rotate {latest:?}"))?;
+            fsio::sync_parent_dir(&latest)?;
+        }
+        let bytes = ckpt.encode();
+        let trailer = u64::from_le_bytes(bytes[bytes.len() - 8..].try_into().expect("8 bytes"));
+        fsio::write_atomic(&latest, &bytes)?;
+        let manifest = self.manifest_json(ckpt, &bytes, trailer);
+        fsio::write_atomic(&self.manifest_path(), manifest.to_string_pretty().as_bytes())?;
+        Ok(())
+    }
+
+    fn manifest_json(&self, ckpt: &Checkpoint, bytes: &[u8], trailer: u64) -> Json {
+        let mut m = std::collections::BTreeMap::new();
+        m.insert("format".to_string(), Json::Str("MLSCKPT1".to_string()));
+        m.insert("tag".to_string(), Json::Str(self.tag.clone()));
+        m.insert(
+            "file".to_string(),
+            Json::Str(format!("{}.ckpt.bin", self.tag)),
+        );
+        m.insert("bytes".to_string(), Json::Num(bytes.len() as f64));
+        m.insert("checksum_fnv1a".to_string(), Json::Str(format!("{trailer:016x}")));
+        m.insert("next_step".to_string(), Json::Num(ckpt.next_step as f64));
+        m.insert("state_len".to_string(), Json::Num(ckpt.state.len() as f64));
+        m.insert("optimizer".to_string(), Json::Str(ckpt.opt_name.clone()));
+        m.insert("opt_slots".to_string(), Json::Num(ckpt.opt_state.len() as f64));
+        m.insert("lr_scale".to_string(), Json::Num(ckpt.lr_scale as f64));
+        m.insert("rollbacks".to_string(), Json::Num(ckpt.rollbacks as f64));
+        m.insert("steps_recorded".to_string(), Json::Num(ckpt.steps.len() as f64));
+        m.insert("evals_recorded".to_string(), Json::Num(ckpt.evals.len() as f64));
+        m.insert("audit_steps".to_string(), Json::Num(ckpt.audit_steps as f64));
+        Json::Obj(m)
+    }
+
+    /// Load the newest valid checkpoint matching `config_echo`: the
+    /// latest file first, then — with a warning — the rotated previous
+    /// one (the corrupt-latest recovery path). `None` when neither file
+    /// exists or validates; a checkpoint whose config echo differs is
+    /// treated as invalid (a stale run's state must not leak in).
+    pub fn load_for_resume(&self, config_echo: &str) -> Option<Checkpoint> {
+        for (path, is_prev) in [(self.latest_path(), false), (self.prev_path(), true)] {
+            let Ok(bytes) = std::fs::read(&path) else { continue };
+            match Checkpoint::decode(&bytes) {
+                Ok(ckpt) if ckpt.config_echo == config_echo => {
+                    if is_prev {
+                        eprintln!(
+                            "[checkpoint] {:?} invalid, resuming from previous good {path:?} \
+                             (step {})",
+                            self.latest_path(),
+                            ckpt.next_step
+                        );
+                    }
+                    return Some(ckpt);
+                }
+                Ok(_) => {
+                    eprintln!("[checkpoint] {path:?} is from a different config — ignoring");
+                }
+                Err(e) => {
+                    eprintln!("[checkpoint] {path:?} failed validation: {e:#}");
+                }
+            }
+        }
+        None
+    }
+
+    /// Delete every checkpoint artifact of this run (the lab's
+    /// `--force` path: a forced re-run must start from step 0).
+    pub fn remove_all(&self) -> Result<()> {
+        for p in [self.latest_path(), self.prev_path(), self.manifest_path()] {
+            if p.exists() {
+                std::fs::remove_file(&p).with_context(|| format!("remove {p:?}"))?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Flip one byte in the middle of the latest checkpoint file — the
+    /// `corrupt_ckpt` fault site (simulated disk damage, deliberately a
+    /// plain in-place write).
+    pub fn corrupt_latest(&self) -> Result<()> {
+        let path = self.latest_path();
+        let mut bytes = std::fs::read(&path).with_context(|| format!("corrupt {path:?}"))?;
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0xff;
+        std::fs::write(&path, bytes)?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Checkpoint {
+        Checkpoint {
+            next_step: 7,
+            state: vec![0.5, -1.25, f32::MIN_POSITIVE, -0.0, 3.5e-39],
+            opt_name: "momentum".to_string(),
+            opt_state: vec![0.125, -2.0],
+            lr_scale: 0.25,
+            rollbacks: 2,
+            health_best_loss: 1.375,
+            health_streak: 1,
+            steps: vec![
+                StepRow { step: 5, lr: 0.05, loss: 2.0, acc: 0.25, step_ms: 12.5 },
+                StepRow { step: 6, lr: 0.05, loss: f32::NAN, acc: 0.5, step_ms: 13.0 },
+            ],
+            evals: vec![EvalRow { step: 5, loss: 1.9, acc: 0.3 }],
+            audit_steps: 6,
+            audit_totals: StepAudit {
+                forward: PassCounters { convs: 3, mul_ops: 100, peak_acc_bits: 17, ..Default::default() },
+                wgrad: PassCounters { convs: 3, int_add_ops: 90, ..Default::default() },
+                dgrad: PassCounters { convs: 3, group_scale_ops: 12, ..Default::default() },
+                layers: Vec::new(),
+            },
+            config_echo: r#"{"batch":"4","model":"cnn_t"}"#.to_string(),
+        }
+    }
+
+    /// `PartialEq` on f32 treats NaN != NaN; compare through the encoded
+    /// bytes, which are exact.
+    fn assert_bit_identical(a: &Checkpoint, b: &Checkpoint) {
+        assert_eq!(a.encode(), b.encode());
+    }
+
+    #[test]
+    fn codec_round_trips_bit_exactly() {
+        let ckpt = sample();
+        let bytes = ckpt.encode();
+        let back = Checkpoint::decode(&bytes).unwrap();
+        assert_bit_identical(&ckpt, &back);
+        assert_eq!(back.next_step, 7);
+        assert_eq!(back.opt_name, "momentum");
+        assert!(back.steps[1].loss.is_nan(), "NaN rows must survive the trip");
+        assert_eq!(back.steps[1].loss.to_bits(), ckpt.steps[1].loss.to_bits());
+        assert!(back.audit_totals.layers.is_empty());
+        // empty-vec edge: a fresh sgd run right after step 0
+        let empty = Checkpoint {
+            state: Vec::new(),
+            opt_state: Vec::new(),
+            steps: Vec::new(),
+            evals: Vec::new(),
+            opt_name: "sgd".to_string(),
+            ..sample()
+        };
+        assert_bit_identical(&empty, &Checkpoint::decode(&empty.encode()).unwrap());
+    }
+
+    #[test]
+    fn every_single_byte_flip_is_detected() {
+        let bytes = sample().encode();
+        for i in 0..bytes.len() {
+            let mut bad = bytes.clone();
+            bad[i] ^= 0x01;
+            assert!(
+                Checkpoint::decode(&bad).is_err(),
+                "flip at byte {i}/{} must fail the checksum",
+                bytes.len()
+            );
+        }
+    }
+
+    #[test]
+    fn truncation_and_garbage_are_rejected() {
+        let bytes = sample().encode();
+        for cut in [0, 1, 8, 15, bytes.len() / 2, bytes.len() - 1] {
+            assert!(Checkpoint::decode(&bytes[..cut]).is_err(), "cut at {cut}");
+        }
+        assert!(Checkpoint::decode(&[0u8; 64]).is_err());
+        // valid trailer over a wrong-magic body must still fail
+        let mut body = bytes[..bytes.len() - 8].to_vec();
+        body[0] ^= 0xff;
+        let t = fnv1a_trailer(&body);
+        body.extend_from_slice(&t.to_le_bytes());
+        let err = format!("{:#}", Checkpoint::decode(&body).unwrap_err());
+        assert!(err.contains("magic"), "{err}");
+    }
+
+    #[test]
+    fn io_rotates_and_falls_back_on_corruption() {
+        let dir = std::env::temp_dir().join("mls_ckpt_test").join("rotate");
+        let _ = std::fs::remove_dir_all(&dir);
+        let io = CheckpointIo::new(&dir, "cnn_t_fp32_s0");
+        let echo = sample().config_echo.clone();
+        assert!(io.load_for_resume(&echo).is_none(), "no files yet");
+
+        let first = Checkpoint { next_step: 4, ..sample() };
+        io.save(&first).unwrap();
+        assert_eq!(io.load_for_resume(&echo).unwrap().next_step, 4);
+        assert!(!io.prev_path().exists(), "first save has nothing to rotate");
+
+        let second = Checkpoint { next_step: 6, ..sample() };
+        io.save(&second).unwrap();
+        assert_eq!(io.load_for_resume(&echo).unwrap().next_step, 6);
+        assert_eq!(Checkpoint::decode(&std::fs::read(io.prev_path()).unwrap()).unwrap().next_step, 4);
+
+        // corrupt the latest: resume falls back to the rotated previous
+        io.corrupt_latest().unwrap();
+        let recovered = io.load_for_resume(&echo).unwrap();
+        assert_eq!(recovered.next_step, 4, "must fall back to the previous good checkpoint");
+
+        // a different config echo must refuse both files
+        assert!(io.load_for_resume("{\"other\":\"config\"}").is_none());
+
+        // manifest mirrors the latest save
+        let manifest = Json::parse(&std::fs::read_to_string(io.manifest_path()).unwrap()).unwrap();
+        assert_eq!(manifest.get("next_step").and_then(|v| v.as_f64()), Some(6.0));
+        assert_eq!(
+            manifest.get("optimizer").and_then(|v| v.as_str()),
+            Some("momentum")
+        );
+
+        io.remove_all().unwrap();
+        assert!(io.load_for_resume(&echo).is_none());
+        assert!(!io.manifest_path().exists());
+    }
+}

@@ -93,9 +93,29 @@ pub struct TrainConfig {
     pub weight_decay: f32,
     pub seed: u64,
     pub data: DatasetConfig,
+    /// write a resumable step checkpoint every N steps (0 = off; needs
+    /// `out_dir`)
+    pub checkpoint_every: u64,
+    /// resume from a valid `<tag>.ckpt.bin` in `out_dir` when present
+    pub resume: bool,
+    /// numeric-health recovery policy: "abort" | "rollback" | "halve_lr"
+    /// ([`crate::nn::health::POLICIES`])
+    pub on_divergence: String,
+    /// consecutive loss-blow-up steps before `on_divergence` fires
+    /// (0 = NaN/Inf + scale-saturation guards only)
+    pub divergence_window: u64,
+    /// a step counts as a blow-up when loss > factor x best-so-far
+    pub divergence_factor: f32,
     /// where to write metrics CSV / checkpoints / the per-layer audit
     /// stream (None = no files)
     pub out_dir: Option<String>,
+    /// deterministic fault-injection spec
+    /// (`<site>@step<k>[:seed]`, [`crate::util::fault::FaultSpec`]).
+    /// NOT a registry key: it never round-trips through
+    /// `to_json`/`trial_input.json`, so a crashed faulted run and its
+    /// clean resume share one config echo. Tests set it directly; the
+    /// CLI path picks it up from `MLS_FAULT`.
+    pub fault: Option<String>,
 }
 
 impl Default for TrainConfig {
@@ -114,7 +134,13 @@ impl Default for TrainConfig {
             weight_decay: 0.0,
             seed: 0,
             data: DatasetConfig::default(),
+            checkpoint_every: 0,
+            resume: true,
+            on_divergence: "abort".to_string(),
+            divergence_window: 0,
+            divergence_factor: 10.0,
             out_dir: None,
+            fault: None,
         }
     }
 }
@@ -311,6 +337,62 @@ pub static CONFIG_KEYS: &[KeySpec] = &[
         get: |c| c.data.seed.to_string(),
         set: |c, v| {
             c.data.seed = v.parse()?;
+            Ok(())
+        },
+    },
+    KeySpec {
+        key: "checkpoint_every",
+        doc: "write a resumable step checkpoint every N steps (0 = off; needs out_dir)",
+        default: || TrainConfig::default().checkpoint_every.to_string(),
+        get: |c| c.checkpoint_every.to_string(),
+        set: |c, v| {
+            c.checkpoint_every = v.parse()?;
+            Ok(())
+        },
+    },
+    KeySpec {
+        key: "resume",
+        doc: "resume from a valid <tag>.ckpt.bin in out_dir when present: true | false",
+        default: || TrainConfig::default().resume.to_string(),
+        get: |c| c.resume.to_string(),
+        set: |c, v| {
+            c.resume = v.parse()?;
+            Ok(())
+        },
+    },
+    KeySpec {
+        key: "on_divergence",
+        doc: "numeric-health recovery policy: abort | rollback | halve_lr",
+        default: || TrainConfig::default().on_divergence,
+        get: |c| c.on_divergence.clone(),
+        set: |c, v| {
+            crate::nn::health::DivergencePolicy::parse(v)?;
+            c.on_divergence = v.to_string();
+            Ok(())
+        },
+    },
+    KeySpec {
+        key: "divergence_window",
+        doc: "consecutive loss-blow-up steps before on_divergence fires (0 = NaN/Inf guards only)",
+        default: || TrainConfig::default().divergence_window.to_string(),
+        get: |c| c.divergence_window.to_string(),
+        set: |c, v| {
+            c.divergence_window = v.parse()?;
+            Ok(())
+        },
+    },
+    KeySpec {
+        key: "divergence_factor",
+        doc: "a step counts as a loss blow-up when loss > factor x best-so-far (must be > 1)",
+        default: || TrainConfig::default().divergence_factor.to_string(),
+        get: |c| c.divergence_factor.to_string(),
+        set: |c, v| {
+            let f: f32 = v.parse()?;
+            anyhow::ensure!(
+                f.is_finite() && f > 1.0,
+                "divergence_factor must be a finite value > 1, got {f}"
+            );
+            c.divergence_factor = f;
             Ok(())
         },
     },
@@ -570,6 +652,35 @@ mod tests {
         for b in Backend::ALL {
             assert!(msg.contains(b.name()), "{msg}");
         }
+    }
+
+    #[test]
+    fn fault_tolerance_keys_validate_at_set_time() {
+        let mut c = TrainConfig::default();
+        assert_eq!(c.checkpoint_every, 0, "checkpointing is off by default");
+        assert!(c.resume, "resume is a no-op without a checkpoint, so default on");
+        assert_eq!(c.on_divergence, "abort", "abort is the pre-PR-8 behavior");
+        assert_eq!(c.divergence_window, 0);
+        c.set("checkpoint_every=5").unwrap();
+        c.set("resume=false").unwrap();
+        c.set("on_divergence=halve_lr").unwrap();
+        c.set("divergence_window=3").unwrap();
+        c.set("divergence_factor=4.5").unwrap();
+        assert_eq!(c.checkpoint_every, 5);
+        assert!(!c.resume);
+        assert_eq!(c.on_divergence, "halve_lr");
+        assert_eq!(c.divergence_window, 3);
+        assert!((c.divergence_factor - 4.5).abs() < 1e-6);
+        let msg = format!("{:#}", c.set("on_divergence=explode").unwrap_err());
+        assert!(msg.contains("abort") && msg.contains("rollback") && msg.contains("halve_lr"), "{msg}");
+        assert_eq!(c.on_divergence, "halve_lr", "rejected value must not stick");
+        assert!(c.set("divergence_factor=1.0").is_err(), "factor must exceed 1");
+        assert!(c.set("divergence_factor=inf").is_err());
+        assert!(c.set("resume=maybe").is_err());
+        // the fault field is NOT a registry key: never rendered, never set
+        assert!(c.set("fault=nan_grad@step1").is_err());
+        c.fault = Some("nan_grad@step1".to_string());
+        assert!(c.to_json().get("fault").is_none(), "fault must not leak into the echo");
     }
 
     #[test]

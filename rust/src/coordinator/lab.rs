@@ -20,14 +20,18 @@
 //!     analysis/tables.md             # best-format-per-model + bitwidth frontier
 //! ```
 //!
-//! The runner is **crash-resumable**: a re-run skips every trial whose
-//! existing `trial_output.json` parses, carries the plan/trial ids, echoes
-//! the exact resolved config, and has the full result shape
-//! (`schemas/trial_output.schema.json`); anything else — missing, truncated
-//! mid-bytes, stale config — re-executes. Trials are deterministic in
-//! their seeds, so a re-executed trial reproduces its output bit-for-bit
-//! (everything except the wall-clock `timing` object; pinned by
-//! `rust/tests/lab_runner.rs`).
+//! The runner is **crash-resumable** at two granularities. A re-run
+//! skips every trial whose existing `trial_output.json` parses, carries
+//! the plan/trial ids, echoes the exact resolved config, and has the
+//! full result shape (`schemas/trial_output.schema.json`); anything
+//! else — missing, truncated mid-bytes, stale config — re-executes. And
+//! a re-executed trial whose config sets `checkpoint_every` resumes
+//! **at step granularity** from its last good checkpoint inside the
+//! trial directory (see [`super::checkpoint`]). Trials are
+//! deterministic in their seeds, so either path reproduces the output
+//! bit-for-bit (everything except the wall-clock `timing` object;
+//! pinned by `rust/tests/lab_runner.rs` and
+//! `rust/tests/fault_tolerance.rs`).
 //!
 //! Everything here is stdlib-only, like the rest of the crate: the plan
 //! parser sits on [`crate::util::json`], the trials run the native
@@ -351,9 +355,16 @@ fn output_json(plan: &Plan, trial: &Trial, r: &TrainResult, total_ms: f64) -> Js
         Json::Str(format!("{:016x}", state_checksum(&r.final_state))),
     );
 
+    // steps_executed / resumed live under `timing`, the one object
+    // excluded from bit-identity: a resumed trial executes fewer steps
+    // than a fresh one, while producing the identical `result`
     let mut timing = BTreeMap::new();
     timing.insert("mean_step_ms".to_string(), num_or_null(r.metrics.mean_step_ms()));
     timing.insert("total_ms".to_string(), num_or_null(total_ms));
+    timing.insert("steps_executed".to_string(), Json::Num(r.steps_executed as f64));
+    if let Some(from) = r.resumed_from {
+        timing.insert("resumed".to_string(), Json::Num(from as f64));
+    }
 
     let mut m = BTreeMap::new();
     m.insert("plan".to_string(), Json::Str(plan.name.clone()));
@@ -398,6 +409,9 @@ pub fn validate_trial_output(v: &Json, plan: &Plan, trial: &Trial) -> Result<()>
     for k in ["mean_step_ms", "total_ms"] {
         t.req(k)?;
     }
+    t.req("steps_executed")?
+        .as_f64()
+        .ok_or_else(|| anyhow!("timing.steps_executed not a number"))?;
     Ok(())
 }
 
@@ -443,11 +457,11 @@ impl LabReport {
     }
 }
 
+/// Durable atomic write: tmp file, fsync, rename, fsync parent dir —
+/// a crash at any point leaves either the old file or the new one,
+/// never a torn or unsynced write ([`crate::util::fsio::write_atomic`]).
 fn write_atomic(path: &Path, text: &str) -> Result<()> {
-    let tmp = path.with_extension("json.tmp");
-    std::fs::write(&tmp, text)?;
-    std::fs::rename(&tmp, path)?;
-    Ok(())
+    crate::util::fsio::write_atomic(path, text.as_bytes())
 }
 
 /// Run a plan file end to end: expand, execute (or skip) every trial,
@@ -458,6 +472,20 @@ pub fn run_plan_file(plan_path: &Path, out_root: &Path, force: bool) -> Result<L
 }
 
 pub fn run_plan(plan: &Plan, out_root: &Path, force: bool) -> Result<LabReport> {
+    run_plan_opts(plan, out_root, force, None)
+}
+
+/// [`run_plan`] with a deterministic fault injected into every trial
+/// (`<site>@step<k>[:seed]`, see [`crate::util::fault`]) — the test
+/// harness behind crash/resume coverage at trial granularity. The fault
+/// spec never enters the config echo, so a crashed faulted trial and
+/// its clean resume validate against the same `trial_output.json`.
+pub fn run_plan_opts(
+    plan: &Plan,
+    out_root: &Path,
+    force: bool,
+    fault: Option<&str>,
+) -> Result<LabReport> {
     let trials = plan.trials()?;
     let run_dir = out_root.join(&plan.name);
     std::fs::create_dir_all(&run_dir)?;
@@ -498,6 +526,13 @@ pub fn run_plan(plan: &Plan, out_root: &Path, force: bool) -> Result<LabReport> 
         std::fs::create_dir_all(&trial_dir)?;
         let mut config = trial.config.clone();
         config.out_dir = Some(trial_dir.to_string_lossy().into_owned());
+        config.fault = fault.map(str::to_string);
+        if force {
+            // a forced re-run starts from scratch: drop any step
+            // checkpoints so the trainer cannot resume mid-trial
+            super::checkpoint::CheckpointIo::new(&trial_dir, &trainer::run_tag(&config))
+                .remove_all()?;
+        }
         write_atomic(
             &trial_dir.join("trial_input.json"),
             &trial.input_json(plan).to_string_pretty(),
@@ -917,6 +952,7 @@ mod tests {
             let mut tm = BTreeMap::new();
             tm.insert("mean_step_ms".to_string(), Json::Num(1.0));
             tm.insert("total_ms".to_string(), Json::Num(2.0));
+            tm.insert("steps_executed".to_string(), Json::Num(2.0));
             m.insert("timing".to_string(), Json::Obj(tm));
             Json::Obj(m)
         };
@@ -930,6 +966,14 @@ mod tests {
         if let Json::Obj(m) = &mut v {
             if let Some(Json::Obj(r)) = m.get_mut("result") {
                 r.remove("state_checksum");
+            }
+        }
+        assert!(validate_trial_output(&v, &p, t).is_err());
+        // pre-fault-tolerance outputs (no timing.steps_executed) re-run
+        let mut v = mk(t.config.to_json());
+        if let Json::Obj(m) = &mut v {
+            if let Some(Json::Obj(tm)) = m.get_mut("timing") {
+                tm.remove("steps_executed");
             }
         }
         assert!(validate_trial_output(&v, &p, t).is_err());

@@ -5,14 +5,18 @@
 //! training loop over a selectable backend (the self-contained native
 //! Alg. 1 trainer by default, the PJRT engine with `backend=pjrt`),
 //! metrics/checkpointing, and the registry that maps every paper
-//! table/figure to a runnable experiment.
+//! table/figure to a runnable experiment. [`checkpoint`] holds the
+//! step-checkpoint codec behind the trainer's crash-safe,
+//! bit-identical resume.
 
+pub mod checkpoint;
 pub mod config;
 pub mod experiments;
 pub mod lab;
 pub mod metrics;
 pub mod trainer;
 
+pub use checkpoint::{Checkpoint, CheckpointIo};
 pub use config::{Backend, TrainConfig};
 pub use lab::{LabReport, Plan};
 pub use trainer::{train, train_native, validate_native_config, TrainResult};

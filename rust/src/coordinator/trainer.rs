@@ -19,14 +19,18 @@ use std::time::Instant;
 
 use anyhow::Result;
 
+use super::checkpoint::{Checkpoint, CheckpointIo};
 use super::config::{Backend, TrainConfig};
 use super::metrics::{EvalRow, MetricsLog, StepRow};
 use crate::data::{streams, SynthCifar};
 use crate::mls::quantizer::QuantConfig;
 use crate::mls::Grouping;
+use crate::nn::health::{self, DivergencePolicy, HealthMonitor, HealthRecord, Verdict};
 use crate::nn::optim::parse_optimizer;
 use crate::nn::train::{native_model, NativeModel, StepAudit};
 use crate::runtime::Engine;
+use crate::util::fault::{FaultArm, FaultSite, FaultSpec};
+use crate::util::json::Json;
 
 #[derive(Clone, Debug)]
 pub struct TrainResult {
@@ -43,6 +47,14 @@ pub struct TrainResult {
     pub audit_totals: StepAudit,
     /// number of steps that contributed to `audit_totals`
     pub audit_steps: u64,
+    /// `Some(k)` when the run resumed from a step checkpoint at step `k`
+    /// instead of starting at 0 (native backend only)
+    pub resumed_from: Option<u64>,
+    /// training steps this call actually executed (replays after a
+    /// health rollback included; resumed-past steps excluded)
+    pub steps_executed: u64,
+    /// health-policy rollback recoveries performed during this call
+    pub rollbacks: u64,
 }
 
 impl TrainResult {
@@ -131,49 +143,122 @@ fn write_outputs(config: &TrainConfig, metrics: &MetricsLog, state: &[f32]) -> R
 
 /// Incremental writer for the per-layer audit stream
 /// (`<tag>.audit.jsonl`, one `schemas/audit_step.schema.json` record per
-/// line per audited step). Streams each record to disk as the step
-/// finishes — a long grid run holds no audit backlog in memory, and a
-/// killed run leaves the stream readable up to its last completed step.
-/// The file is created lazily on the first record, so runs that audit
-/// nothing (fp32, or no `out_dir`) leave no file, as before.
+/// line: per-layer `"train_step"` counters for audited steps, plus
+/// `"health"` events from the numeric guard). Streams each record to
+/// disk as the step finishes — a long grid run holds no audit backlog in
+/// memory, and a killed run leaves the stream readable up to its last
+/// completed step. The file is opened lazily on the first record, so
+/// runs that audit nothing (fp32, or no `out_dir`) leave no file, as
+/// before.
+///
+/// Step-level resume support: constructed with `resume_from = Some(k)`,
+/// the stream is first truncated back to records with `step < k`
+/// (appending then continues exactly where the checkpoint stops — no
+/// duplicate or out-of-order step indices, which
+/// `scripts/validate_bench.py --monotonic-steps` rejects); a health
+/// rollback does the same through [`Self::truncate_to`].
 struct AuditStream {
     path: Option<std::path::PathBuf>,
     file: Option<std::io::BufWriter<std::fs::File>>,
 }
 
+/// Durably rewrite a `.audit.jsonl` file keeping only the records whose
+/// `step` is below `before` (unparseable lines — e.g. a torn tail from a
+/// crash mid-write — are dropped too).
+fn truncate_stream(path: &std::path::Path, before: u64) -> Result<()> {
+    let text = std::fs::read_to_string(path)?;
+    let mut kept = String::new();
+    for line in text.lines() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let keep = Json::parse(line)
+            .ok()
+            .and_then(|j| j.get("step").and_then(|s| s.as_f64()))
+            .is_some_and(|s| (s as u64) < before);
+        if keep {
+            kept.push_str(line);
+            kept.push('\n');
+        }
+    }
+    crate::util::fsio::write_atomic(path, kept.as_bytes())
+}
+
 impl AuditStream {
-    fn new(config: &TrainConfig) -> AuditStream {
+    fn new(config: &TrainConfig, resume_from: Option<u64>) -> Result<AuditStream> {
         let path = config
             .out_dir
             .as_ref()
             .map(|dir| std::path::Path::new(dir).join(format!("{}.audit.jsonl", run_tag(config))));
-        AuditStream { path, file: None }
+        if let Some(p) = &path {
+            if p.exists() {
+                match resume_from {
+                    // resume: drop records at/after the checkpoint step
+                    Some(k) => truncate_stream(p, k)?,
+                    // fresh run: a stale stream from a previous run must
+                    // not survive (the old truncating File::create only
+                    // fired on the first record)
+                    None => std::fs::remove_file(p)?,
+                }
+            }
+        }
+        Ok(AuditStream { path, file: None })
     }
 
-    fn record(&mut self, config: &TrainConfig, step: u64, audit: &StepAudit) -> Result<()> {
+    fn write_line(&mut self, line: &str) -> Result<()> {
         use std::io::Write;
         let Some(path) = &self.path else { return Ok(()) };
         if self.file.is_none() {
             if let Some(parent) = path.parent() {
                 std::fs::create_dir_all(parent)?;
             }
-            self.file = Some(std::io::BufWriter::new(std::fs::File::create(path)?));
+            let f = std::fs::OpenOptions::new().create(true).append(true).open(path)?;
+            self.file = Some(std::io::BufWriter::new(f));
         }
-        let line = audit
-            .to_json(&config.model, &config.cfg_name, config.batch, step)
-            .to_string_compact();
         let f = self.file.as_mut().expect("just created");
         f.write_all(line.as_bytes())?;
         f.write_all(b"\n")?;
         Ok(())
     }
 
-    fn finish(&mut self) -> Result<()> {
+    fn record(&mut self, config: &TrainConfig, step: u64, audit: &StepAudit) -> Result<()> {
+        let line = audit
+            .to_json(&config.model, &config.cfg_name, config.batch, step)
+            .to_string_compact();
+        self.write_line(&line)
+    }
+
+    /// Append a health event and flush it immediately — a crash right
+    /// after a verdict must not lose the record explaining it.
+    fn health(&mut self, config: &TrainConfig, rec: &HealthRecord) -> Result<()> {
+        let line = rec.to_json(&config.model, &config.cfg_name).to_string_compact();
+        self.write_line(&line)?;
+        self.flush()
+    }
+
+    /// Rollback support: drop every record at/after `step` (the stream
+    /// is re-opened for append on the next record).
+    fn truncate_to(&mut self, step: u64) -> Result<()> {
+        self.flush()?;
+        self.file = None;
+        if let Some(p) = &self.path {
+            if p.exists() {
+                truncate_stream(p, step)?;
+            }
+        }
+        Ok(())
+    }
+
+    fn flush(&mut self) -> Result<()> {
         use std::io::Write;
         if let Some(f) = &mut self.file {
             f.flush()?;
         }
         Ok(())
+    }
+
+    fn finish(&mut self) -> Result<()> {
+        self.flush()
     }
 }
 
@@ -196,6 +281,15 @@ pub fn validate_native_config(config: &TrainConfig) -> Result<QuantConfig> {
         config.cfg_name
     );
     parse_optimizer(&config.optimizer, config.momentum, config.weight_decay)?;
+    DivergencePolicy::parse(&config.on_divergence)?;
+    anyhow::ensure!(
+        config.divergence_factor.is_finite() && config.divergence_factor > 1.0,
+        "divergence_factor must be a finite value > 1, got {}",
+        config.divergence_factor
+    );
+    if let Some(spec) = &config.fault {
+        FaultSpec::parse(spec)?;
+    }
     Ok(qcfg)
 }
 
@@ -261,7 +355,49 @@ pub fn train(engine: &mut Engine, config: &TrainConfig) -> Result<TrainResult> {
         diverged,
         audit_totals: StepAudit::default(),
         audit_steps: 0,
+        resumed_from: None,
+        steps_executed: config.steps,
+        rollbacks: 0,
     })
+}
+
+/// Snapshot the full step-loop state at a step boundary (`next_step` =
+/// the first step a resume would execute). Doubles as the in-memory
+/// rollback anchor, so health rollbacks work even with
+/// `checkpoint_every = 0` (they rewind to the run start / resume point).
+#[allow(clippy::too_many_arguments)]
+fn make_snapshot(
+    next_step: u64,
+    model: &NativeModel,
+    metrics: &MetricsLog,
+    audit_totals: &StepAudit,
+    audit_steps: u64,
+    lr_scale: f32,
+    rollbacks: u64,
+    monitor: &HealthMonitor,
+    config_echo: &str,
+) -> Checkpoint {
+    let (health_best_loss, health_streak) = monitor.state();
+    Checkpoint {
+        next_step,
+        state: model.state(),
+        opt_name: model.optimizer_name().to_string(),
+        opt_state: model.optimizer_state(),
+        lr_scale,
+        rollbacks,
+        health_best_loss,
+        health_streak,
+        steps: metrics.steps.clone(),
+        evals: metrics.evals.clone(),
+        audit_steps,
+        audit_totals: StepAudit {
+            forward: audit_totals.forward,
+            wgrad: audit_totals.wgrad,
+            dgrad: audit_totals.dgrad,
+            layers: Vec::new(),
+        },
+        config_echo: config_echo.to_string(),
+    }
 }
 
 /// Run one full training experiment on the NATIVE backend: synthetic
@@ -270,12 +406,34 @@ pub fn train(engine: &mut Engine, config: &TrainConfig) -> Result<TrainResult> {
 /// artifacts, no Python. With `out_dir` set, the per-layer audit stream
 /// of every step is written alongside the metrics CSV as
 /// `<tag>.audit.jsonl`.
+///
+/// Fault tolerance (PR 8): with `checkpoint_every > 0` (and `out_dir`
+/// set) the full step-loop state is checkpointed durably every N steps
+/// ([`super::checkpoint`]); with `resume = true` (default) a valid
+/// checkpoint matching this exact config is loaded and the run continues
+/// from its step — **bit-identical** to an uninterrupted run, because
+/// every per-step random source is a pure function of `(config, step)`
+/// and everything else rides in the checkpoint. A per-step numeric
+/// health guard ([`crate::nn::health`]) checks loss/gradients before
+/// each update and reacts per `on_divergence`
+/// (abort | rollback | halve_lr); deterministic faults for testing all
+/// of this come from `config.fault` or `MLS_FAULT`
+/// ([`crate::util::fault`]).
 pub fn train_native(config: &TrainConfig) -> Result<TrainResult> {
     // audit reproducibility: record which Eq. 7 microkernel (scalar or
     // which vector ISA) produced this run's numbers — they are all
     // bit-identical, but the log line pins what actually ran
     crate::util::simd::log_once();
     let qcfg = validate_native_config(config)?;
+    let policy = DivergencePolicy::parse(&config.on_divergence)?;
+    // in-process spec (tests; never part of the config echo) falls back
+    // to the MLS_FAULT environment variable (CLI / CI)
+    let fault_spec = match &config.fault {
+        Some(s) => Some(FaultSpec::parse(s)?),
+        None => FaultSpec::from_env()?,
+    };
+    let mut fault = FaultArm::new(fault_spec);
+
     let ds = SynthCifar::new(config.data.clone());
     let mut model = native_model(&config.model, qcfg, config.seed)?;
     model.set_optimizer(parse_optimizer(
@@ -291,41 +449,198 @@ pub fn train_native(config: &TrainConfig) -> Result<TrainResult> {
         model.input
     );
 
+    let config_echo = config.to_json().to_string_compact();
+    let ckpt_io = config
+        .out_dir
+        .as_ref()
+        .map(|dir| CheckpointIo::new(std::path::Path::new(dir), &run_tag(config)));
+
     let mut metrics = MetricsLog::default();
-    let mut audit_stream = AuditStream::new(config);
     let mut audit_totals = StepAudit::default();
     let mut audit_steps = 0u64;
-    for step in 0..config.steps {
+    let mut lr_scale = 1.0f32;
+    let mut rollbacks = 0u64;
+    let mut monitor = HealthMonitor::new(config.divergence_window, config.divergence_factor);
+    let mut resumed_from: Option<u64> = None;
+
+    if config.resume {
+        if let Some(io) = &ckpt_io {
+            if let Some(ckpt) = io.load_for_resume(&config_echo) {
+                model.load_state(&ckpt.state)?;
+                model.load_optimizer_state(&ckpt.opt_state)?;
+                metrics.steps = ckpt.steps;
+                metrics.evals = ckpt.evals;
+                audit_totals = ckpt.audit_totals;
+                audit_steps = ckpt.audit_steps;
+                lr_scale = ckpt.lr_scale;
+                rollbacks = ckpt.rollbacks;
+                monitor.restore(ckpt.health_best_loss, ckpt.health_streak);
+                resumed_from = Some(ckpt.next_step);
+            }
+        }
+    }
+    let start_step = resumed_from.unwrap_or(0);
+    let mut audit_stream = AuditStream::new(config, resumed_from)?;
+
+    // the rollback anchor: refreshed at every checkpoint boundary; until
+    // then it holds the run start (or resume point)
+    let mut last_good = make_snapshot(
+        start_step,
+        &model,
+        &metrics,
+        &audit_totals,
+        audit_steps,
+        lr_scale,
+        rollbacks,
+        &monitor,
+        &config_echo,
+    );
+
+    let mut step = start_step;
+    let mut steps_executed = 0u64;
+    let mut health_aborted = false;
+    while step < config.steps {
         let (images, labels) = ds.batch(config.batch, streams::TRAIN, train_batch_index(config, step));
-        let lr = config.lr.at(step);
+        let lr = config.lr.at(step) * lr_scale;
         let seed = step_seed(config, step) as i64;
         let t0 = Instant::now();
-        let out = model.train_step(&images, &labels, lr, seed);
+        let (loss, acc, mut grads, step_audit) = model.loss_and_grads(&images, &labels, seed);
+        steps_executed += 1;
+        fault.poison_grads(step, &mut grads);
+        let gstats = health::grad_stats(&grads);
+        let verdict = monitor.check(loss, &gstats);
+        let streak = monitor.state().1;
+
+        if let Some(verdict) = verdict {
+            // a fault the anchor cannot clear replays deterministically
+            // forever — cap the recoveries, then give up like `abort`
+            if policy == DivergencePolicy::Abort || rollbacks >= health::MAX_ROLLBACKS {
+                if verdict == Verdict::NonFiniteLoss {
+                    // legacy diverged-run shape: the update ran before
+                    // the loss check (pre-PR-8 `train_step` semantics)
+                    model.apply_update(&grads, lr);
+                }
+                metrics.record_step(StepRow {
+                    step,
+                    lr,
+                    loss,
+                    acc,
+                    step_ms: t0.elapsed().as_secs_f64() * 1e3,
+                });
+                if !step_audit.layers.is_empty() {
+                    audit_totals.merge_totals(&step_audit);
+                    audit_steps += 1;
+                    audit_stream.record(config, step, &step_audit)?;
+                }
+                audit_stream.health(
+                    config,
+                    &HealthRecord {
+                        step,
+                        verdict,
+                        action: "abort",
+                        loss,
+                        grad_nonfinite: gstats.nonfinite,
+                        grad_max_abs: gstats.max_abs,
+                        streak,
+                        rollback_to: None,
+                        lr_scale,
+                    },
+                )?;
+                health_aborted = true;
+                break; // diverged — stop early, record as such (Table IV "Div.")
+            }
+
+            // rollback / halve_lr recovery: restore the anchor, rewind
+            // the accumulators and the on-disk stream, replay. lr_scale
+            // and the rollback count deliberately survive the restore —
+            // repeated halvings must compound, and the cap must bind.
+            rollbacks += 1;
+            if policy == DivergencePolicy::HalveLr {
+                lr_scale *= 0.5;
+            }
+            let target = last_good.next_step;
+            model.load_state(&last_good.state)?;
+            model.load_optimizer_state(&last_good.opt_state)?;
+            metrics.steps = last_good.steps.clone();
+            metrics.evals = last_good.evals.clone();
+            audit_totals = StepAudit {
+                forward: last_good.audit_totals.forward,
+                wgrad: last_good.audit_totals.wgrad,
+                dgrad: last_good.audit_totals.dgrad,
+                layers: Vec::new(),
+            };
+            audit_steps = last_good.audit_steps;
+            monitor.restore(last_good.health_best_loss, last_good.health_streak);
+            audit_stream.truncate_to(target)?;
+            audit_stream.health(
+                config,
+                &HealthRecord {
+                    step,
+                    verdict,
+                    action: policy.name(),
+                    loss,
+                    grad_nonfinite: gstats.nonfinite,
+                    grad_max_abs: gstats.max_abs,
+                    streak,
+                    rollback_to: Some(target),
+                    lr_scale,
+                },
+            )?;
+            step = target;
+            continue;
+        }
+
+        model.apply_update(&grads, lr);
         metrics.record_step(StepRow {
             step,
             lr,
-            loss: out.loss,
-            acc: out.acc,
+            loss,
+            acc,
             step_ms: t0.elapsed().as_secs_f64() * 1e3,
         });
         // fp32 runs execute no quantized convs, so they have no audit
         // stream (a record with an empty layer list would be vacuous)
-        if !out.audit.layers.is_empty() {
-            audit_totals.merge_totals(&out.audit);
+        if !step_audit.layers.is_empty() {
+            audit_totals.merge_totals(&step_audit);
             audit_steps += 1;
-            audit_stream.record(config, step, &out.audit)?;
+            audit_stream.record(config, step, &step_audit)?;
         }
-        if !out.loss.is_finite() {
-            break; // diverged — stop early, record as such (Table IV "Div.")
-        }
+        // the eval must precede the checkpoint: its row belongs to this
+        // step, and a resume at step+1 would otherwise never produce it
         if config.eval_every > 0 && (step + 1) % config.eval_every == 0 {
             let (eloss, eacc) =
                 evaluate_native(&model, &ds, streams::VAL, config.eval_batches, config.batch);
             metrics.record_eval(EvalRow { step, loss: eloss, acc: eacc });
         }
+        fault.crash_point(FaultSite::CrashBeforeCkpt, step)?;
+        if config.checkpoint_every > 0 && (step + 1) % config.checkpoint_every == 0 {
+            let snap = make_snapshot(
+                step + 1,
+                &model,
+                &metrics,
+                &audit_totals,
+                audit_steps,
+                lr_scale,
+                rollbacks,
+                &monitor,
+                &config_echo,
+            );
+            if let Some(io) = &ckpt_io {
+                // the on-disk stream must cover every step the
+                // checkpoint claims before the checkpoint exists
+                audit_stream.flush()?;
+                io.save(&snap)?;
+                if fault.corrupt_due(step) {
+                    io.corrupt_latest()?;
+                }
+            }
+            last_good = snap;
+        }
+        fault.crash_point(FaultSite::CrashAfterCkpt, step)?;
+        step += 1;
     }
 
-    let diverged = metrics.diverged();
+    let diverged = metrics.diverged() || health_aborted;
     let (test_loss, test_acc) = if diverged {
         (f32::NAN, 0.0)
     } else {
@@ -345,5 +660,8 @@ pub fn train_native(config: &TrainConfig) -> Result<TrainResult> {
         diverged,
         audit_totals,
         audit_steps,
+        resumed_from,
+        steps_executed,
+        rollbacks,
     })
 }

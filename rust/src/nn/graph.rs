@@ -52,6 +52,7 @@ use crate::mls::quantizer::{quantize, QuantConfig, Rounding};
 use crate::mls::MlsTensor;
 use crate::nn::zoo::{Layer, Network};
 use crate::util::json::Json;
+use crate::util::parallel::with_label;
 use crate::util::rng::Pcg32;
 
 /// Index of a value: `0` is the graph input, the output of node `i` is
@@ -526,7 +527,11 @@ impl Executor<'_> {
                             self.qcfg,
                             rng.as_deref_mut(),
                         );
-                        let out = spec.forward(&qw, &qa, self.threads);
+                        // label the dispatch so a kernel panic names
+                        // this layer and pass (util::parallel rethrow)
+                        let out = with_label(&format!("{}:forward", node.name), || {
+                            spec.forward(&qw, &qa, self.threads)
+                        });
                         let slot = audit.layers.len();
                         let mut la = LayerAudit {
                             node: i,
@@ -537,15 +542,17 @@ impl Executor<'_> {
                         audit.layers.push(la);
                         (out.z, Some(qw), Some(qa), Some(slot))
                     } else {
-                        let (z, _) = conv2d_f32_threaded(
-                            &l.w,
-                            [l.co, l.ci, l.k, l.k],
-                            &x.data,
-                            [n, x.c, x.h, x.w],
-                            l.stride,
-                            l.pad,
-                            self.threads,
-                        );
+                        let (z, _) = with_label(&format!("{}:forward", node.name), || {
+                            conv2d_f32_threaded(
+                                &l.w,
+                                [l.co, l.ci, l.k, l.k],
+                                &x.data,
+                                [n, x.c, x.h, x.w],
+                                l.stride,
+                                l.pad,
+                                self.threads,
+                            )
+                        });
                         (z, None, None, None)
                     };
                     if let Some(tape) = tape.as_deref_mut() {
@@ -801,39 +808,47 @@ impl Executor<'_> {
                         // Alg. 1: quantize E once, reuse for both passes
                         let qe = quantize_dyn(&gout, &eshape, self.qcfg, Some(&mut *rng));
                         let slot = audit_slot.expect("quantized conv has an audit slot");
-                        let wg = spec.weight_grad(&qe, &qa, self.threads);
+                        let wg = with_label(&format!("{}:wgrad", node.name), || {
+                            spec.weight_grad(&qe, &qa, self.threads)
+                        });
                         audit.layers[slot].wgrad.absorb(&wg);
                         gw.copy_from_slice(&wg.z);
                         if need_dx {
-                            let dg = spec.input_grad(&qe, &qw, self.threads);
+                            let dg = with_label(&format!("{}:dgrad", node.name), || {
+                                spec.input_grad(&qe, &qw, self.threads)
+                            });
                             audit.layers[slot].dgrad.absorb(&dg);
                             accumulate(&mut gslots[node.inputs[0]], dg.z);
                         }
                     } else {
-                        let (wg, _) = conv2d_f32_wgrad(
-                            &gout,
-                            eshape,
-                            &x,
-                            [n, l.ci, l.hin, l.win],
-                            l.stride,
-                            l.pad,
-                            l.k,
-                            l.k,
-                            self.threads,
-                        );
-                        gw.copy_from_slice(&wg);
-                        if need_dx {
-                            let (dg, _) = conv2d_f32_dgrad(
+                        let (wg, _) = with_label(&format!("{}:wgrad", node.name), || {
+                            conv2d_f32_wgrad(
                                 &gout,
                                 eshape,
-                                &l.w,
-                                [l.co, l.ci, l.k, l.k],
+                                &x,
+                                [n, l.ci, l.hin, l.win],
                                 l.stride,
                                 l.pad,
-                                l.hin,
-                                l.win,
+                                l.k,
+                                l.k,
                                 self.threads,
-                            );
+                            )
+                        });
+                        gw.copy_from_slice(&wg);
+                        if need_dx {
+                            let (dg, _) = with_label(&format!("{}:dgrad", node.name), || {
+                                conv2d_f32_dgrad(
+                                    &gout,
+                                    eshape,
+                                    &l.w,
+                                    [l.co, l.ci, l.k, l.k],
+                                    l.stride,
+                                    l.pad,
+                                    l.hin,
+                                    l.win,
+                                    self.threads,
+                                )
+                            });
                             accumulate(&mut gslots[node.inputs[0]], dg);
                         }
                     }

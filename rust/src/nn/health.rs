@@ -1,0 +1,341 @@
+//! Per-step numeric health guard for the native trainer.
+//!
+//! Low-bit training dies in characteristic ways (DoReFa-Net; Ortiz et
+//! al.): a stochastic-rounded gradient goes NaN/Inf, tensor magnitudes
+//! blow past what the Alg. 2 tensor-max normalization can represent, or
+//! the loss diverges smoothly over a window of steps. The
+//! [`HealthMonitor`] inspects each step's loss and gradient statistics
+//! BEFORE the optimizer update, and the trainer reacts per the
+//! `on_divergence` policy ([`DivergencePolicy`]): abort the run, roll
+//! back to the last good checkpoint, or roll back AND halve the
+//! learning rate. Every verdict is emitted as a machine-readable
+//! [`HealthRecord`] line into the run's `<tag>.audit.jsonl` stream
+//! (`{"audit": "health", ...}`, discriminated from the per-layer
+//! `"train_step"` records by the `audit` tag —
+//! `schemas/audit_step.schema.json` covers both).
+//!
+//! Healthy steps emit nothing, so fault-free runs keep byte-identical
+//! audit streams to the pre-health trainer.
+
+use crate::util::json::Json;
+
+/// Recovery policies `TrainConfig.on_divergence` accepts.
+pub const POLICIES: &[&str] = &["abort", "rollback", "halve_lr"];
+
+/// Ceiling on rollback recoveries per run: a fault the rollback cannot
+/// clear (e.g. deterministic divergence that replays identically) must
+/// terminate instead of looping forever.
+pub const MAX_ROLLBACKS: u64 = 8;
+
+/// Gradient magnitude above which the group-scale pipeline is considered
+/// saturated. MLS group scales are ratios `S_r / S_t ∈ [0, 1]`
+/// normalized by the f32 tensor max (Alg. 2), so the failure mode is not
+/// a stored scale code overflowing but the tensor max itself nearing the
+/// f32 exponent ceiling, where `x / S_t` and the downstream shift-add
+/// arithmetic lose exactness. 2^120 leaves 7 doublings of headroom below
+/// f32::MAX.
+pub fn scale_sat_limit() -> f32 {
+    crate::mls::format::exp2i(120)
+}
+
+/// What the trainer does when the monitor returns a verdict.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DivergencePolicy {
+    /// stop the run, mark it diverged (the pre-PR-8 behavior)
+    Abort,
+    /// restore the last good checkpoint and replay from there
+    Rollback,
+    /// rollback + halve the learning-rate scale for the rest of the run
+    HalveLr,
+}
+
+impl DivergencePolicy {
+    /// Every supported policy; [`Self::parse`] scans this list so the
+    /// parseable set cannot drift from the `name()` outputs (and
+    /// [`POLICIES`] is pinned against it in the tests below).
+    pub const ALL: [DivergencePolicy; 3] =
+        [DivergencePolicy::Abort, DivergencePolicy::Rollback, DivergencePolicy::HalveLr];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            DivergencePolicy::Abort => "abort",
+            DivergencePolicy::Rollback => "rollback",
+            DivergencePolicy::HalveLr => "halve_lr",
+        }
+    }
+
+    pub fn parse(s: &str) -> anyhow::Result<DivergencePolicy> {
+        Self::ALL.into_iter().find(|p| p.name() == s).ok_or_else(|| {
+            anyhow::anyhow!(
+                "unknown on_divergence policy {s:?} (have {:?})",
+                Self::ALL.map(|p| p.name())
+            )
+        })
+    }
+}
+
+/// Cheap whole-gradient statistics, computed once per step.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct GradStats {
+    /// number of NaN/Inf entries
+    pub nonfinite: u64,
+    /// max |g| over the finite entries (0 for an all-nonfinite gradient)
+    pub max_abs: f32,
+}
+
+/// Scan a flat gradient vector (layout: `Graph::state`).
+pub fn grad_stats(grads: &[f32]) -> GradStats {
+    let mut s = GradStats::default();
+    for &g in grads {
+        if g.is_finite() {
+            s.max_abs = s.max_abs.max(g.abs());
+        } else {
+            s.nonfinite += 1;
+        }
+    }
+    s
+}
+
+/// What went wrong on a step.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Verdict {
+    /// the training loss itself is NaN/Inf
+    NonFiniteLoss,
+    /// NaN/Inf entries in the gradient
+    NanGrad,
+    /// finite but saturated gradient magnitude (see [`scale_sat_limit`])
+    ScaleOverflow,
+    /// loss exceeded `divergence_factor` x best-so-far for
+    /// `divergence_window` consecutive steps
+    LossDivergence,
+}
+
+impl Verdict {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Verdict::NonFiniteLoss => "non_finite_loss",
+            Verdict::NanGrad => "nan_grad",
+            Verdict::ScaleOverflow => "scale_overflow",
+            Verdict::LossDivergence => "loss_divergence",
+        }
+    }
+}
+
+/// The per-run monitor. Its whole mutable state is `(best_loss, streak)`
+/// — both ride inside the checkpoint, so a resumed run reaches every
+/// verdict on the same step as an uninterrupted one.
+#[derive(Clone, Copy, Debug)]
+pub struct HealthMonitor {
+    /// consecutive blow-up steps before [`Verdict::LossDivergence`]
+    /// (0 disables the window check)
+    window: u64,
+    /// a step counts as a blow-up when `loss > factor * best_loss`
+    factor: f32,
+    best_loss: f32,
+    streak: u64,
+}
+
+impl HealthMonitor {
+    pub fn new(window: u64, factor: f32) -> HealthMonitor {
+        HealthMonitor { window, factor, best_loss: f32::INFINITY, streak: 0 }
+    }
+
+    /// `(best_loss, streak)` for checkpointing.
+    pub fn state(&self) -> (f32, u64) {
+        (self.best_loss, self.streak)
+    }
+
+    /// Restore a checkpointed `(best_loss, streak)`.
+    pub fn restore(&mut self, best_loss: f32, streak: u64) {
+        self.best_loss = best_loss;
+        self.streak = streak;
+    }
+
+    /// Judge one step (pre-update). Returns the first verdict that
+    /// applies, in severity order; `None` means healthy.
+    pub fn check(&mut self, loss: f32, grads: &GradStats) -> Option<Verdict> {
+        if !loss.is_finite() {
+            return Some(Verdict::NonFiniteLoss);
+        }
+        if grads.nonfinite > 0 {
+            return Some(Verdict::NanGrad);
+        }
+        if grads.max_abs > scale_sat_limit() {
+            return Some(Verdict::ScaleOverflow);
+        }
+        if self.window > 0 {
+            // best_loss starts at +inf, so the first finite loss can
+            // never count as a blow-up
+            if loss > self.factor * self.best_loss {
+                self.streak += 1;
+                if self.streak >= self.window {
+                    return Some(Verdict::LossDivergence);
+                }
+            } else {
+                self.streak = 0;
+            }
+        }
+        self.best_loss = self.best_loss.min(loss);
+        None
+    }
+}
+
+/// One machine-readable health event in the audit stream.
+#[derive(Clone, Debug)]
+pub struct HealthRecord {
+    pub step: u64,
+    pub verdict: Verdict,
+    /// the policy action taken: "abort" | "rollback" | "halve_lr"
+    pub action: &'static str,
+    pub loss: f32,
+    pub grad_nonfinite: u64,
+    pub grad_max_abs: f32,
+    /// blow-up streak length at the verdict (window check only)
+    pub streak: u64,
+    /// step the run rolled back to (rollback/halve_lr actions)
+    pub rollback_to: Option<u64>,
+    /// learning-rate scale in effect AFTER the action
+    pub lr_scale: f32,
+}
+
+fn num_or_null(v: f64) -> Json {
+    if v.is_finite() {
+        Json::Num(v)
+    } else {
+        Json::Null
+    }
+}
+
+impl HealthRecord {
+    /// The `{"audit": "health", ...}` stream line
+    /// (`schemas/audit_step.schema.json`, health branch). Non-finite
+    /// numbers render as `null` — JSON has no NaN/Inf.
+    pub fn to_json(&self, model: &str, cfg: &str) -> Json {
+        let mut m = std::collections::BTreeMap::new();
+        m.insert("audit".to_string(), Json::Str("health".to_string()));
+        m.insert("model".to_string(), Json::Str(model.to_string()));
+        m.insert("cfg".to_string(), Json::Str(cfg.to_string()));
+        m.insert("step".to_string(), Json::Num(self.step as f64));
+        m.insert("verdict".to_string(), Json::Str(self.verdict.name().to_string()));
+        m.insert("action".to_string(), Json::Str(self.action.to_string()));
+        m.insert("loss".to_string(), num_or_null(self.loss as f64));
+        m.insert("grad_nonfinite".to_string(), Json::Num(self.grad_nonfinite as f64));
+        m.insert("grad_max_abs".to_string(), num_or_null(self.grad_max_abs as f64));
+        m.insert("streak".to_string(), Json::Num(self.streak as f64));
+        m.insert(
+            "rollback_to".to_string(),
+            match self.rollback_to {
+                Some(s) => Json::Num(s as f64),
+                None => Json::Null,
+            },
+        );
+        m.insert("lr_scale".to_string(), Json::Num(self.lr_scale as f64));
+        Json::Obj(m)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn policy_registry_round_trips_and_matches_listing() {
+        for p in DivergencePolicy::ALL {
+            assert_eq!(DivergencePolicy::parse(p.name()).unwrap(), p);
+        }
+        let names: Vec<&str> = DivergencePolicy::ALL.iter().map(|p| p.name()).collect();
+        assert_eq!(names, POLICIES, "POLICIES listing must match the enum");
+        let msg = format!("{:#}", DivergencePolicy::parse("explode").unwrap_err());
+        for p in POLICIES {
+            assert!(msg.contains(p), "{msg}");
+        }
+    }
+
+    #[test]
+    fn grad_stats_counts_and_maxes() {
+        let s = grad_stats(&[0.5, -2.0, f32::NAN, f32::INFINITY, 1.0]);
+        assert_eq!(s.nonfinite, 2);
+        assert_eq!(s.max_abs, 2.0);
+        let z = grad_stats(&[]);
+        assert_eq!((z.nonfinite, z.max_abs), (0, 0.0));
+    }
+
+    #[test]
+    fn verdict_priority_and_thresholds() {
+        let mut m = HealthMonitor::new(0, 10.0);
+        let clean = GradStats { nonfinite: 0, max_abs: 1.0 };
+        assert_eq!(m.check(1.0, &clean), None);
+        assert_eq!(m.check(f32::NAN, &clean), Some(Verdict::NonFiniteLoss));
+        assert_eq!(
+            m.check(f32::NAN, &GradStats { nonfinite: 3, max_abs: 0.0 }),
+            Some(Verdict::NonFiniteLoss),
+            "loss verdict outranks grad verdict"
+        );
+        assert_eq!(
+            m.check(1.0, &GradStats { nonfinite: 3, max_abs: 0.0 }),
+            Some(Verdict::NanGrad)
+        );
+        let sat = GradStats { nonfinite: 0, max_abs: f32::MAX };
+        assert_eq!(m.check(1.0, &sat), Some(Verdict::ScaleOverflow));
+        let near = GradStats { nonfinite: 0, max_abs: scale_sat_limit() };
+        assert_eq!(m.check(1.0, &near), None, "limit itself is not over");
+    }
+
+    #[test]
+    fn divergence_window_fires_on_consecutive_blowups_only() {
+        let clean = GradStats::default();
+        let mut m = HealthMonitor::new(3, 10.0);
+        assert_eq!(m.check(100.0, &clean), None, "first loss sets the baseline");
+        assert_eq!(m.check(2.0, &clean), None); // best -> 2.0
+        assert_eq!(m.check(25.0, &clean), None); // blow-up 1
+        assert_eq!(m.check(30.0, &clean), None); // blow-up 2
+        assert_eq!(m.check(3.0, &clean), None, "recovery resets the streak");
+        assert_eq!(m.check(25.0, &clean), None);
+        assert_eq!(m.check(26.0, &clean), None);
+        assert_eq!(m.check(27.0, &clean), Some(Verdict::LossDivergence), "3rd consecutive");
+        // window 0 disables the check entirely
+        let mut off = HealthMonitor::new(0, 10.0);
+        off.check(1.0, &clean);
+        for _ in 0..20 {
+            assert_eq!(off.check(1e9, &clean), None);
+        }
+    }
+
+    #[test]
+    fn monitor_state_round_trips() {
+        let clean = GradStats::default();
+        let mut a = HealthMonitor::new(3, 10.0);
+        a.check(2.0, &clean);
+        a.check(25.0, &clean);
+        let (best, streak) = a.state();
+        assert_eq!((best, streak), (2.0, 1));
+        let mut b = HealthMonitor::new(3, 10.0);
+        b.restore(best, streak);
+        // both reach the verdict on the same subsequent sequence
+        assert_eq!(a.check(26.0, &clean), b.check(26.0, &clean));
+        assert_eq!(a.check(27.0, &clean), b.check(27.0, &clean));
+        assert_eq!(a.check(27.0, &clean), Some(Verdict::LossDivergence));
+    }
+
+    #[test]
+    fn health_record_renders_nonfinite_as_null() {
+        let rec = HealthRecord {
+            step: 4,
+            verdict: Verdict::NanGrad,
+            action: "rollback",
+            loss: f32::NAN,
+            grad_nonfinite: 3,
+            grad_max_abs: 1.5,
+            streak: 0,
+            rollback_to: Some(2),
+            lr_scale: 1.0,
+        };
+        let s = rec.to_json("cnn_t", "fp32").to_string_compact();
+        assert!(s.contains("\"audit\":\"health\""), "{s}");
+        assert!(s.contains("\"verdict\":\"nan_grad\""), "{s}");
+        assert!(s.contains("\"loss\":null"), "{s}");
+        assert!(s.contains("\"rollback_to\":2"), "{s}");
+        let back = Json::parse(&s).unwrap();
+        assert_eq!(back.get("step").and_then(|v| v.as_f64()), Some(4.0));
+    }
+}

@@ -11,18 +11,23 @@
 //! trainer-owned activation [`graph::Tape`], per-layer audit stream);
 //! every native model lowers its zoo twin ([`zoo::native_network`]) into
 //! such a graph. [`optim`] provides the pluggable parameter-update rules
-//! (plain SGD, momentum SGD). [`train`] ties them together as the native
+//! (plain SGD, momentum SGD), each serializable for step checkpoints.
+//! [`health`] is the per-step numeric guard (NaN/Inf, scale saturation,
+//! loss-divergence windows) behind the trainer's `on_divergence`
+//! recovery policies. [`train`] ties them together as the native
 //! low-bit training step: per-layer Alg. 1 forward/backward on real MLS
 //! tensors through the pass-generic conv engine, whose executed audit
 //! counters cross-check the analytic model.
 
 pub mod graph;
+pub mod health;
 pub mod ops;
 pub mod optim;
 pub mod train;
 pub mod zoo;
 
 pub use graph::{Graph, LayerAudit, PassCounters, StepAudit, Tape};
+pub use health::{DivergencePolicy, GradStats, HealthMonitor, HealthRecord};
 pub use ops::{count_training_ops, TrainingOps};
 pub use optim::{parse_optimizer, Optimizer};
 pub use train::{native_model, NativeModel, NativeStepOutput};

@@ -25,6 +25,26 @@ pub trait Optimizer {
     /// Apply one update in place. `params` and `grads` share the layout
     /// of [`crate::nn::graph::Graph::state`].
     fn step(&mut self, params: &mut [f32], grads: &[f32], lr: f32);
+
+    /// Flatten the optimizer's internal slots (momentum velocity, ...)
+    /// for checkpointing. Stateless rules return the default empty vec.
+    fn state(&self) -> Vec<f32> {
+        Vec::new()
+    }
+
+    /// Restore slots written by [`Self::state`]. The default (stateless)
+    /// implementation accepts only an empty vector, so a checkpoint
+    /// written under a stateful rule cannot silently load into a
+    /// stateless one.
+    fn load_state(&mut self, state: &[f32]) -> Result<()> {
+        anyhow::ensure!(
+            state.is_empty(),
+            "optimizer {:?} is stateless but the checkpoint carries {} slot values",
+            self.name(),
+            state.len()
+        );
+        Ok(())
+    }
 }
 
 /// Plain SGD: `p -= lr * g` (bit-identical to the historical inlined
@@ -83,6 +103,17 @@ impl Optimizer for MomentumSgd {
             *v = self.momentum * *v + ge;
             *p -= lr * *v;
         }
+    }
+
+    fn state(&self) -> Vec<f32> {
+        self.v.clone()
+    }
+
+    fn load_state(&mut self, state: &[f32]) -> Result<()> {
+        // an empty slot vector is the pre-first-step state (v lazily
+        // sized on the first update), so it always loads
+        self.v = state.to_vec();
+        Ok(())
     }
 }
 
@@ -188,6 +219,35 @@ mod tests {
         let d2 = before - p[0];
         assert!((d1 - 0.1).abs() < 1e-6);
         assert!((d2 - 0.19).abs() < 1e-6, "second step must carry 0.9 * v");
+    }
+
+    #[test]
+    fn optimizer_state_round_trips_bit_identically() {
+        // momentum: checkpoint after step 1, restore into a fresh
+        // optimizer, and step 2 must land bit-identically
+        let grads: Vec<f32> = (0..32).map(|i| (i as f32 * 0.23).sin()).collect();
+        let p0: Vec<f32> = (0..32).map(|i| (i as f32 * 0.71).cos()).collect();
+        let mut a = MomentumSgd::new(0.9, 0.0005);
+        assert!(a.state().is_empty(), "pre-first-step velocity is empty");
+        let mut pa = p0.clone();
+        a.step(&mut pa, &grads, 0.1);
+        let snapshot = a.state();
+        assert_eq!(snapshot.len(), 32);
+
+        let mut b = MomentumSgd::new(0.9, 0.0005);
+        b.load_state(&snapshot).unwrap();
+        let mut pb = pa.clone();
+        a.step(&mut pa, &grads, 0.1);
+        b.step(&mut pb, &grads, 0.1);
+        for (x, y) in pa.iter().zip(&pb) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+
+        // stateless SGD: empty state loads, non-empty is rejected
+        let mut s = Sgd::default();
+        assert!(s.state().is_empty());
+        s.load_state(&[]).unwrap();
+        assert!(s.load_state(&[1.0]).is_err(), "slots into stateless rule must fail");
     }
 
     #[test]

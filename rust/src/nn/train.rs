@@ -186,6 +186,28 @@ impl NativeModel {
         (loss, acc, grads, audit)
     }
 
+    /// The optimizer-update half of a training step: apply `grads` to
+    /// the graph parameters through the active optimizer. Split out so
+    /// the fault-tolerant trainer can inspect the gradients (health
+    /// guard, fault injection) BETWEEN backward and update; calling
+    /// [`Self::loss_and_grads`] then this is bit-identical to
+    /// [`Self::train_step`].
+    pub fn apply_update(&mut self, grads: &[f32], lr: f32) {
+        let mut state = self.graph.state();
+        self.optimizer.step(&mut state, grads, lr);
+        self.graph.load_state(&state).expect("state length is stable");
+    }
+
+    /// Flatten the optimizer's internal slots (see [`Optimizer::state`]).
+    pub fn optimizer_state(&self) -> Vec<f32> {
+        self.optimizer.state()
+    }
+
+    /// Restore optimizer slots written by [`Self::optimizer_state`].
+    pub fn load_optimizer_state(&mut self, state: &[f32]) -> Result<()> {
+        self.optimizer.load_state(state)
+    }
+
     /// One Alg. 1 training step: [`Self::loss_and_grads`] followed by the
     /// optimizer update over the flat state vector.
     pub fn train_step(
@@ -196,9 +218,7 @@ impl NativeModel {
         seed: i64,
     ) -> NativeStepOutput {
         let (loss, acc, grads, audit) = self.loss_and_grads(images, labels, seed);
-        let mut state = self.graph.state();
-        self.optimizer.step(&mut state, &grads, lr);
-        self.graph.load_state(&state).expect("state length is stable");
+        self.apply_update(&grads, lr);
         NativeStepOutput { loss, acc, audit }
     }
 
@@ -242,20 +262,55 @@ pub fn native_model(name: &str, qcfg: QuantConfig, seed: u64) -> Result<NativeMo
     })
 }
 
+/// Incremental FNV-1a-64 hasher — the one checksum primitive shared by
+/// [`state_checksum`] and the step-checkpoint codec
+/// ([`crate::coordinator::checkpoint`]), so the fingerprint the lab
+/// records and the integrity trailer the resume path verifies cannot
+/// drift apart.
+#[derive(Clone, Copy, Debug)]
+pub struct Fnv1a(u64);
+
+impl Default for Fnv1a {
+    fn default() -> Self {
+        Fnv1a(0xcbf2_9ce4_8422_2325)
+    }
+}
+
+impl Fnv1a {
+    pub fn new() -> Fnv1a {
+        Fnv1a::default()
+    }
+
+    pub fn update(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.0 ^= b as u64;
+            self.0 = self.0.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    }
+
+    pub fn finish(&self) -> u64 {
+        self.0
+    }
+}
+
+/// FNV-1a-64 over a byte slice.
+pub fn fnv1a_bytes(bytes: &[u8]) -> u64 {
+    let mut h = Fnv1a::new();
+    h.update(bytes);
+    h.finish()
+}
+
 /// FNV-1a checksum over the exact bit pattern of a flat parameter state
 /// (little-endian `to_bits` bytes). Two runs with identical configs and
 /// seeds end in the same checksum — the lab runner records it in
 /// `trial_output.json` as the bit-identity fingerprint that the
 /// crash-resume test compares across re-runs.
 pub fn state_checksum(state: &[f32]) -> u64 {
-    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    let mut h = Fnv1a::new();
     for v in state {
-        for b in v.to_bits().to_le_bytes() {
-            h ^= b as u64;
-            h = h.wrapping_mul(0x0000_0100_0000_01b3);
-        }
+        h.update(&v.to_bits().to_le_bytes());
     }
-    h
+    h.finish()
 }
 
 #[cfg(test)]
@@ -277,6 +332,30 @@ mod tests {
         assert_ne!(state_checksum(&a), state_checksum(&b));
         assert_ne!(state_checksum(&[0.0]), state_checksum(&[-0.0]), "sign bit counts");
         assert_ne!(state_checksum(&[]), state_checksum(&[0.0]));
+        // the incremental hasher IS state_checksum over the same bytes
+        let bytes: Vec<u8> = a.iter().flat_map(|v| v.to_bits().to_le_bytes()).collect();
+        assert_eq!(fnv1a_bytes(&bytes), state_checksum(&a));
+        let mut inc = Fnv1a::new();
+        inc.update(&bytes[..5]);
+        inc.update(&bytes[5..]);
+        assert_eq!(inc.finish(), fnv1a_bytes(&bytes), "chunking must not change the hash");
+    }
+
+    #[test]
+    fn apply_update_split_matches_train_step_bitwise() {
+        let (images, labels) = batch(3, 6);
+        let run_fused = || {
+            let mut m = native_model("cnn_t", QuantConfig::default(), 9).unwrap();
+            let out = m.train_step(&images, &labels, 0.05, 21);
+            (out.loss.to_bits(), m.state())
+        };
+        let run_split = || {
+            let mut m = native_model("cnn_t", QuantConfig::default(), 9).unwrap();
+            let (loss, _, grads, _) = m.loss_and_grads(&images, &labels, 21);
+            m.apply_update(&grads, 0.05);
+            (loss.to_bits(), m.state())
+        };
+        assert_eq!(run_fused(), run_split(), "the split step must be bit-identical");
     }
 
     #[test]

@@ -1,0 +1,294 @@
+//! Deterministic fault injection for the crash-safety test harness.
+//!
+//! A fault spec names ONE site and ONE step:
+//!
+//! ```text
+//!   MLS_FAULT=<site>@step<k>[:seed]
+//! ```
+//!
+//! sites ([`SITES`]):
+//!
+//! * `nan_grad`        — poison a few gradient entries with NaN right
+//!   after the backward pass of step `k` (before the health check and
+//!   the optimizer update), the classic low-bit divergence signature;
+//! * `scale_overflow`  — poison gradient entries with `1e38` at step
+//!   `k`, driving the magnitude past the group-scale saturation limit
+//!   ([`crate::nn::health::SCALE_SAT_LIMIT`]);
+//! * `crash_before_ckpt` — abort the run at the end of step `k`,
+//!   BEFORE the step's checkpoint would be written (the checkpoint
+//!   interval that covers step `k` is lost);
+//! * `crash_after_ckpt`  — abort the run at the end of step `k`, AFTER
+//!   any checkpoint write for that step (resume restarts at `k + 1`);
+//! * `corrupt_ckpt`    — flip one byte inside the checkpoint written at
+//!   step `k` after it lands on disk (latent corruption: the run
+//!   continues, the damage surfaces at the next resume's checksum
+//!   verification).
+//!
+//! Every site fires **once** per armed run ([`FaultArm`]): a rollback
+//! recovery that replays step `k` sees clean gradients the second time,
+//! which is exactly what makes the `on_divergence=rollback` policy
+//! testable deterministically. The optional `:seed` varies which
+//! gradient entries are poisoned (default seed 0); the choice is a pure
+//! function of `(seed, step)`, never of wall clock or thread timing.
+//!
+//! Faults reach the trainer either through `TrainConfig::fault`
+//! (in-process tests set it directly — no global state, safe under the
+//! parallel test harness) or the `MLS_FAULT` environment variable
+//! ([`FaultSpec::from_env`], for CLI / CI use).
+
+use anyhow::{anyhow, ensure, Result};
+
+use crate::util::rng::Pcg32;
+
+/// One injectable fault site.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultSite {
+    NanGrad,
+    ScaleOverflow,
+    CrashBeforeCkpt,
+    CrashAfterCkpt,
+    CorruptCkpt,
+}
+
+impl FaultSite {
+    /// Every supported site; [`Self::parse`] scans this list so the
+    /// parseable set cannot drift from the `name()` outputs.
+    pub const ALL: [FaultSite; 5] = [
+        FaultSite::NanGrad,
+        FaultSite::ScaleOverflow,
+        FaultSite::CrashBeforeCkpt,
+        FaultSite::CrashAfterCkpt,
+        FaultSite::CorruptCkpt,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            FaultSite::NanGrad => "nan_grad",
+            FaultSite::ScaleOverflow => "scale_overflow",
+            FaultSite::CrashBeforeCkpt => "crash_before_ckpt",
+            FaultSite::CrashAfterCkpt => "crash_after_ckpt",
+            FaultSite::CorruptCkpt => "corrupt_ckpt",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<FaultSite> {
+        Self::ALL.into_iter().find(|f| f.name() == s).ok_or_else(|| {
+            anyhow!("unknown fault site {s:?} (have {:?})", Self::ALL.map(|f| f.name()))
+        })
+    }
+}
+
+/// The site names `MLS_FAULT` accepts (doc/help listings).
+pub const SITES: [&str; 5] = [
+    "nan_grad",
+    "scale_overflow",
+    "crash_before_ckpt",
+    "crash_after_ckpt",
+    "corrupt_ckpt",
+];
+
+/// A parsed `<site>@step<k>[:seed]` spec.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FaultSpec {
+    pub site: FaultSite,
+    pub step: u64,
+    /// varies which gradient entries a poison site hits (default 0)
+    pub seed: u64,
+}
+
+impl std::fmt::Display for FaultSpec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}@step{}", self.site.name(), self.step)?;
+        if self.seed != 0 {
+            write!(f, ":{}", self.seed)?;
+        }
+        Ok(())
+    }
+}
+
+impl FaultSpec {
+    /// Parse `<site>@step<k>[:seed]` (the `MLS_FAULT` grammar).
+    pub fn parse(s: &str) -> Result<FaultSpec> {
+        let (site, rest) = s
+            .split_once('@')
+            .ok_or_else(|| anyhow!("fault spec {s:?} must be <site>@step<k>[:seed]"))?;
+        let site = FaultSite::parse(site)?;
+        let rest = rest
+            .strip_prefix("step")
+            .ok_or_else(|| anyhow!("fault spec {s:?}: expected step<k> after '@'"))?;
+        let (step, seed) = match rest.split_once(':') {
+            Some((k, seed)) => (k, Some(seed)),
+            None => (rest, None),
+        };
+        ensure!(!step.is_empty(), "fault spec {s:?}: empty step index");
+        let step: u64 =
+            step.parse().map_err(|e| anyhow!("fault spec {s:?}: bad step index: {e}"))?;
+        let seed: u64 = match seed {
+            Some(v) => v.parse().map_err(|e| anyhow!("fault spec {s:?}: bad seed: {e}"))?,
+            None => 0,
+        };
+        Ok(FaultSpec { site, step, seed })
+    }
+
+    /// The ambient `MLS_FAULT` spec, if set (a malformed value is a hard
+    /// error — a typo must not silently run fault-free).
+    pub fn from_env() -> Result<Option<FaultSpec>> {
+        match std::env::var("MLS_FAULT") {
+            Ok(v) if !v.trim().is_empty() => Ok(Some(Self::parse(v.trim())?)),
+            _ => Ok(None),
+        }
+    }
+}
+
+/// How many gradient entries a poison site overwrites.
+const POISON_ENTRIES: usize = 3;
+
+/// An armed (one-shot) fault for one training run. Every query marks the
+/// fault as fired when it matches, so a deterministic rollback replay of
+/// the same step proceeds clean.
+#[derive(Debug)]
+pub struct FaultArm {
+    spec: Option<FaultSpec>,
+    fired: bool,
+}
+
+impl FaultArm {
+    pub fn new(spec: Option<FaultSpec>) -> FaultArm {
+        FaultArm { spec, fired: false }
+    }
+
+    pub fn spec(&self) -> Option<&FaultSpec> {
+        self.spec.as_ref()
+    }
+
+    fn take(&mut self, site: FaultSite, step: u64) -> Option<FaultSpec> {
+        match self.spec {
+            Some(s) if !self.fired && s.site == site && s.step == step => {
+                self.fired = true;
+                Some(s)
+            }
+            _ => None,
+        }
+    }
+
+    /// Apply a gradient-poison site (`nan_grad` / `scale_overflow`) for
+    /// `step`, returning the site that fired. The poisoned indices are a
+    /// pure function of `(spec.seed, step)`.
+    pub fn poison_grads(&mut self, step: u64, grads: &mut [f32]) -> Option<FaultSite> {
+        for site in [FaultSite::NanGrad, FaultSite::ScaleOverflow] {
+            if let Some(spec) = self.take(site, step) {
+                let value = match site {
+                    FaultSite::NanGrad => f32::NAN,
+                    _ => 1.0e38,
+                };
+                let mut rng = Pcg32::new(spec.seed ^ 0xfa_17_fa_17, step);
+                for _ in 0..POISON_ENTRIES.min(grads.len()) {
+                    let idx = rng.next_u32() as usize % grads.len();
+                    grads[idx] = value;
+                }
+                return Some(site);
+            }
+        }
+        None
+    }
+
+    /// Fire a crash site at `step`: returns the error the trainer
+    /// propagates (the process-level analogue of a SIGKILL mid-run).
+    pub fn crash_point(&mut self, site: FaultSite, step: u64) -> Result<()> {
+        debug_assert!(matches!(site, FaultSite::CrashBeforeCkpt | FaultSite::CrashAfterCkpt));
+        if let Some(spec) = self.take(site, step) {
+            anyhow::bail!("MLS_FAULT crash injected: {spec}");
+        }
+        Ok(())
+    }
+
+    /// Whether the `corrupt_ckpt` site fires for the checkpoint written
+    /// at `step`.
+    pub fn corrupt_due(&mut self, step: u64) -> bool {
+        self.take(FaultSite::CorruptCkpt, step).is_some()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_every_site() {
+        for name in SITES {
+            let spec = FaultSpec::parse(&format!("{name}@step7")).unwrap();
+            assert_eq!(spec.site.name(), name);
+            assert_eq!(spec.step, 7);
+            assert_eq!(spec.seed, 0);
+        }
+        let spec = FaultSpec::parse("nan_grad@step3:42").unwrap();
+        assert_eq!(spec, FaultSpec { site: FaultSite::NanGrad, step: 3, seed: 42 });
+        assert_eq!(spec.to_string(), "nan_grad@step3:42");
+        assert_eq!(FaultSpec::parse(&spec.to_string()).unwrap(), spec);
+    }
+
+    #[test]
+    fn rejects_bad_specs() {
+        for bad in [
+            "nan_grad",          // no step
+            "nan_grad@3",        // missing 'step'
+            "nan_grad@step",     // empty index
+            "nan_grad@stepx",    // non-numeric index
+            "nan_grad@step3:",   // empty seed
+            "bad_site@step3",    // unknown site
+            "@step3",            // empty site
+        ] {
+            assert!(FaultSpec::parse(bad).is_err(), "{bad:?} must not parse");
+        }
+        let msg = format!("{:#}", FaultSpec::parse("bogus@step1").unwrap_err());
+        for name in SITES {
+            assert!(msg.contains(name), "site listing must contain {name:?}: {msg}");
+        }
+    }
+
+    #[test]
+    fn poison_is_one_shot_and_deterministic() {
+        let spec = FaultSpec::parse("nan_grad@step2:5").unwrap();
+        let poison = |grads: &mut [f32]| {
+            let mut arm = FaultArm::new(Some(spec));
+            assert!(arm.poison_grads(1, grads).is_none(), "wrong step must not fire");
+            arm.poison_grads(2, grads)
+        };
+        let mut a = vec![1.0f32; 64];
+        let mut b = vec![1.0f32; 64];
+        assert_eq!(poison(&mut a), Some(FaultSite::NanGrad));
+        assert_eq!(poison(&mut b), Some(FaultSite::NanGrad));
+        let hits: Vec<usize> = a.iter().enumerate().filter(|(_, v)| v.is_nan()).map(|(i, _)| i).collect();
+        assert!(!hits.is_empty() && hits.len() <= POISON_ENTRIES);
+        for i in &hits {
+            assert!(b[*i].is_nan(), "same (seed, step) must poison the same entries");
+        }
+        // one-shot: a second query on the same arm stays clean
+        let mut arm = FaultArm::new(Some(spec));
+        let mut g = vec![1.0f32; 8];
+        assert!(arm.poison_grads(2, &mut g).is_some());
+        let mut g2 = vec![1.0f32; 8];
+        assert!(arm.poison_grads(2, &mut g2).is_none(), "fired faults must not re-fire");
+        assert!(g2.iter().all(|v| *v == 1.0));
+    }
+
+    #[test]
+    fn crash_sites_error_once() {
+        let spec = FaultSpec::parse("crash_after_ckpt@step3").unwrap();
+        let mut arm = FaultArm::new(Some(spec));
+        arm.crash_point(FaultSite::CrashAfterCkpt, 2).unwrap();
+        arm.crash_point(FaultSite::CrashBeforeCkpt, 3).unwrap(); // wrong site
+        let err = arm.crash_point(FaultSite::CrashAfterCkpt, 3).unwrap_err();
+        assert!(format!("{err:#}").contains("MLS_FAULT crash injected"));
+        arm.crash_point(FaultSite::CrashAfterCkpt, 3).unwrap(); // one-shot
+    }
+
+    #[test]
+    fn unarmed_is_inert() {
+        let mut arm = FaultArm::new(None);
+        let mut g = vec![1.0f32; 4];
+        assert!(arm.poison_grads(0, &mut g).is_none());
+        assert!(!arm.corrupt_due(0));
+        arm.crash_point(FaultSite::CrashAfterCkpt, 0).unwrap();
+    }
+}

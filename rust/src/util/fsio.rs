@@ -1,0 +1,90 @@
+//! Crash-durable file writes.
+//!
+//! [`write_atomic`] is the write primitive for every artifact a resume
+//! path trusts (checkpoints, manifests, `trial_output.json`, truncated
+//! audit streams): write to a sibling temp file, `fsync` the FILE, rename
+//! over the destination, then `fsync` the parent DIRECTORY. A plain
+//! write+rename survives a process crash but not a power-loss-shaped one
+//! — without the file fsync the rename can land while the data blocks
+//! are still dirty (an empty-but-renamed output that resume would
+//! trust), and without the directory fsync the rename itself can vanish.
+//! Readers therefore see either the complete old content or the complete
+//! new content, never a prefix.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+/// Atomically and durably replace `path` with `bytes`.
+pub fn write_atomic(path: &Path, bytes: &[u8]) -> Result<()> {
+    let name = path
+        .file_name()
+        .and_then(|n| n.to_str())
+        .with_context(|| format!("write_atomic: {path:?} has no file name"))?;
+    let tmp = path.with_file_name(format!("{name}.tmp"));
+    {
+        let mut f = std::fs::File::create(&tmp)
+            .with_context(|| format!("write_atomic: create {tmp:?}"))?;
+        use std::io::Write;
+        f.write_all(bytes).with_context(|| format!("write_atomic: write {tmp:?}"))?;
+        f.sync_all().with_context(|| format!("write_atomic: fsync {tmp:?}"))?;
+    }
+    std::fs::rename(&tmp, path)
+        .with_context(|| format!("write_atomic: rename {tmp:?} -> {path:?}"))?;
+    sync_parent_dir(path)
+}
+
+/// Fsync the directory holding `path`, making a completed rename of
+/// `path` durable. Directory handles are not openable for sync on every
+/// platform; non-unix targets fall back to a no-op (the rename is still
+/// atomic there, just not power-loss durable).
+pub fn sync_parent_dir(path: &Path) -> Result<()> {
+    #[cfg(unix)]
+    {
+        let parent = match path.parent() {
+            Some(p) if !p.as_os_str().is_empty() => p.to_path_buf(),
+            _ => std::path::PathBuf::from("."),
+        };
+        let dir = std::fs::File::open(&parent)
+            .with_context(|| format!("write_atomic: open dir {parent:?}"))?;
+        dir.sync_all().with_context(|| format!("write_atomic: fsync dir {parent:?}"))?;
+    }
+    #[cfg(not(unix))]
+    let _ = path;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn scratch(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("mls_fsio_test").join(name);
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    #[test]
+    fn writes_and_replaces() {
+        let dir = scratch("replace");
+        let path = dir.join("out.json");
+        write_atomic(&path, b"first").unwrap();
+        assert_eq!(std::fs::read(&path).unwrap(), b"first");
+        write_atomic(&path, b"second, longer content").unwrap();
+        assert_eq!(std::fs::read(&path).unwrap(), b"second, longer content");
+        // no temp file left behind
+        let names: Vec<String> = std::fs::read_dir(&dir)
+            .unwrap()
+            .map(|e| e.unwrap().file_name().to_string_lossy().into_owned())
+            .collect();
+        assert_eq!(names, vec!["out.json".to_string()], "{names:?}");
+    }
+
+    #[test]
+    fn missing_parent_fails_cleanly() {
+        let dir = scratch("noparent");
+        let path = dir.join("missing_subdir").join("out.json");
+        assert!(write_atomic(&path, b"x").is_err());
+    }
+}

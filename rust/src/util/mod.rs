@@ -18,9 +18,15 @@
 //!   for the hot kernels (rayon is not available offline), with an
 //!   `MLS_THREADS` override,
 //! * [`simd`] — one-time runtime SIMD capability detection + the
-//!   `MLS_SIMD` dispatch override for the vectorized kernels.
+//!   `MLS_SIMD` dispatch override for the vectorized kernels,
+//! * [`fsio`] — crash-durable atomic file replacement (fsync file +
+//!   parent directory around the rename),
+//! * [`fault`] — the deterministic `MLS_FAULT=<site>@step<k>[:seed]`
+//!   fault-injection harness the crash-safety tests drive.
 
 pub mod bench;
+pub mod fault;
+pub mod fsio;
 pub mod json;
 pub mod parallel;
 pub mod prop;

@@ -37,8 +37,10 @@
 //!   guaranteed;
 //! * worker panics are caught per chunk, the job is drained to
 //!   completion, and the first panic payload is rethrown on the
-//!   submitting thread — kernel assertions read the same as on the
-//!   serial path.
+//!   submitting thread, prefixed with the submitter's [`with_label`]
+//!   scope (e.g. `conv1:forward`) and the failing chunk's index and
+//!   range — a kernel assertion deep in a parallel conv names the layer
+//!   and pass that tripped it.
 //!
 //! The default worker count for the *chunking* is
 //! `available_parallelism()`, overridable with the `MLS_THREADS`
@@ -49,9 +51,58 @@
 //! keeps its per-call meaning afterwards — it decides how many chunks a
 //! dispatch is split into, the pool only caps how many run concurrently.
 
+use std::cell::RefCell;
 use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex, OnceLock};
+
+thread_local! {
+    /// The submitting thread's current panic label (see [`with_label`]).
+    static LABEL: RefCell<Option<String>> = const { RefCell::new(None) };
+}
+
+/// Run `f` with a panic label attached to the calling thread: any panic
+/// rethrown by a [`map_ranges`] dispatch submitted inside `f` is
+/// prefixed with `label` and the failing chunk's range, so an assertion
+/// deep in a parallel kernel names the call site (the trainer labels
+/// every conv as `<layer>:<pass>`). Scopes nest — the previous label is
+/// restored on exit, panicking or not.
+pub fn with_label<R>(label: &str, f: impl FnOnce() -> R) -> R {
+    struct Restore(Option<String>);
+    impl Drop for Restore {
+        fn drop(&mut self) {
+            LABEL.with(|l| *l.borrow_mut() = self.0.take());
+        }
+    }
+    let _restore = Restore(LABEL.with(|l| l.replace(Some(label.to_string()))));
+    f()
+}
+
+fn current_label() -> Option<String> {
+    LABEL.with(|l| l.borrow().clone())
+}
+
+/// Prefix a string panic payload with the dispatch context; opaque
+/// (non-string) payloads pass through unchanged.
+fn relabel_payload(
+    payload: Box<dyn std::any::Any + Send>,
+    label: Option<&str>,
+    idx: usize,
+    lo: usize,
+    hi: usize,
+) -> Box<dyn std::any::Any + Send> {
+    let msg = if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else {
+        return payload;
+    };
+    match label {
+        Some(l) => Box::new(format!("{l}: chunk {idx} [{lo}..{hi}): {msg}")),
+        None => Box::new(format!("chunk {idx} [{lo}..{hi}): {msg}")),
+    }
+}
 
 /// Worker count: `MLS_THREADS` if set to a positive integer, else the
 /// machine's available parallelism.
@@ -87,7 +138,8 @@ struct Job {
     next: AtomicUsize,
     done: AtomicUsize,
     total: usize,
-    panic: Mutex<Option<Box<dyn std::any::Any + Send>>>,
+    /// first panicked chunk: (chunk index, payload)
+    panic: Mutex<Option<(usize, Box<dyn std::any::Any + Send>)>>,
 }
 
 // Publication of `data` happens through the pool mutex (push under lock),
@@ -127,7 +179,7 @@ impl Pool {
             if let Err(payload) = result {
                 let mut slot = job.panic.lock().unwrap();
                 if slot.is_none() {
-                    *slot = Some(payload);
+                    *slot = Some((idx, payload));
                 }
             }
             // Release pairs with the submitter's Acquire load: everything
@@ -187,22 +239,31 @@ fn pool() -> &'static Pool {
 }
 
 /// Run `f(0), f(1), ..., f(chunks - 1)` to completion, using the pool for
-/// concurrency; the calling thread participates. Panics in `f` are
-/// rethrown here after the job drains.
-fn dispatch<F: Fn(usize) + Sync>(chunks: usize, f: F) {
+/// concurrency; the calling thread participates. Returns the first
+/// panicked chunk (index + payload) after the job drains — the caller
+/// decides how to rethrow (see [`map_ranges`], which adds the chunk
+/// range and submitter label). The single-chunk fast path runs inline
+/// and lets a panic unwind naturally.
+fn dispatch<F: Fn(usize) + Sync>(
+    chunks: usize,
+    f: F,
+) -> Option<(usize, Box<dyn std::any::Any + Send>)> {
     if chunks == 0 {
-        return;
+        return None;
     }
     if chunks == 1 {
         f(0);
-        return;
+        return None;
     }
     let pool = pool();
     if pool.workers == 0 {
+        // serial fallback: same caught-panic shape as the pool path
         for idx in 0..chunks {
-            f(idx);
+            if let Err(payload) = catch_unwind(AssertUnwindSafe(|| f(idx))) {
+                return Some((idx, payload));
+            }
         }
-        return;
+        return None;
     }
     let job = Arc::new(Job {
         data: &f as *const F as *const (),
@@ -234,12 +295,7 @@ fn dispatch<F: Fn(usize) + Sync>(chunks: usize, f: F) {
         }
         guard.retain(|j| !Arc::ptr_eq(j, &job));
     }
-    let payload = job.panic.lock().unwrap().take();
-    if let Some(payload) = payload {
-        // rethrow with the original payload so kernel assertions read the
-        // same as on the serial path
-        resume_unwind(payload);
-    }
+    job.panic.lock().unwrap().take()
 }
 
 /// Split `0..n` into at most `threads` contiguous ranges and run
@@ -264,11 +320,17 @@ where
         .filter(|&(lo, hi)| lo < hi)
         .collect();
     let slots: Vec<Mutex<Option<T>>> = ranges.iter().map(|_| Mutex::new(None)).collect();
-    dispatch(ranges.len(), |i| {
+    let label = current_label();
+    if let Some((idx, payload)) = dispatch(ranges.len(), |i| {
         let (lo, hi) = ranges[i];
         let value = f(lo, hi);
         *slots[i].lock().unwrap() = Some(value);
-    });
+    }) {
+        // rethrow on the submitting thread, naming the failing chunk and
+        // the caller's with_label scope (e.g. `conv1:forward`)
+        let (lo, hi) = ranges[idx];
+        resume_unwind(relabel_payload(payload, label.as_deref(), idx, lo, hi));
+    }
     slots
         .into_iter()
         .map(|s| s.into_inner().unwrap().expect("every range chunk completed"))
@@ -387,9 +449,71 @@ mod tests {
             .cloned()
             .unwrap_or_else(|| payload.downcast_ref::<&str>().unwrap_or(&"?").to_string());
         assert!(msg.contains("chunk boom"), "unexpected payload {msg:?}");
+        // the rethrown payload names the failing chunk and its range
+        assert!(msg.contains("chunk 2 [8..12)"), "missing chunk context: {msg:?}");
         // the pool must still be serviceable after a panicked job
         let got = map_ranges(4, 10, |lo, hi| (lo..hi).map(|i| i * 3).sum::<usize>());
         assert_eq!(got.iter().sum::<usize>(), (0..10).map(|i| i * 3).sum::<usize>());
+    }
+
+    fn panic_message(payload: Box<dyn std::any::Any + Send>) -> String {
+        payload
+            .downcast_ref::<String>()
+            .cloned()
+            .unwrap_or_else(|| payload.downcast_ref::<&str>().unwrap_or(&"?").to_string())
+    }
+
+    #[test]
+    fn with_label_prefixes_rethrown_panics_and_restores() {
+        let result = catch_unwind(AssertUnwindSafe(|| {
+            with_label("conv1:forward", || {
+                map_ranges(4, 16, |lo, _hi| {
+                    assert!(lo != 4, "tile boom {lo}");
+                    lo
+                })
+            })
+        }));
+        let msg = panic_message(result.expect_err("must rethrow"));
+        assert!(
+            msg.contains("conv1:forward: chunk 1 [4..8): tile boom 4"),
+            "unexpected payload {msg:?}"
+        );
+        // the label scope ended (by unwinding, even): a fresh dispatch
+        // panics without it
+        let result = catch_unwind(AssertUnwindSafe(|| {
+            map_ranges(4, 16, |lo, _hi| {
+                assert!(lo != 4, "tile boom {lo}");
+                lo
+            })
+        }));
+        let msg = panic_message(result.expect_err("must rethrow"));
+        assert!(!msg.contains("conv1:forward"), "stale label leaked: {msg:?}");
+        assert!(msg.contains("chunk 1 [4..8)"), "{msg:?}");
+    }
+
+    #[test]
+    fn with_label_scopes_nest() {
+        let outer = with_label("outer", || {
+            let inner = catch_unwind(AssertUnwindSafe(|| {
+                with_label("inner", || {
+                    map_ranges(2, 4, |lo, _hi| {
+                        assert!(lo != 2, "nested boom");
+                        lo
+                    })
+                })
+            }));
+            let msg = panic_message(inner.expect_err("must rethrow"));
+            assert!(msg.contains("inner: chunk 1 [2..4)"), "{msg:?}");
+            // back in the outer scope after the inner one unwound
+            catch_unwind(AssertUnwindSafe(|| {
+                map_ranges(2, 4, |lo, _hi| {
+                    assert!(lo != 2, "outer boom");
+                    lo
+                })
+            }))
+        });
+        let msg = panic_message(outer.expect_err("must rethrow"));
+        assert!(msg.contains("outer: chunk 1 [2..4)"), "{msg:?}");
     }
 
     #[test]

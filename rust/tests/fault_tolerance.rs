@@ -1,0 +1,427 @@
+//! End-to-end tests of the crash-safe, self-healing training loop
+//! (PR 8): step checkpoints with **bit-identical** resume (a run killed
+//! by an injected crash at step k and resumed must match an
+//! uninterrupted run bit for bit — metrics, evals, final state, audit
+//! roll-up, test metrics), corrupt-checkpoint detection with fallback
+//! to the rotated previous checkpoint, every `on_divergence` policy
+//! (abort / rollback / halve_lr) driven by deterministic injected
+//! faults, and lab trials that resume at step (not trial) granularity.
+
+use std::path::{Path, PathBuf};
+
+use mls_train::coordinator::lab::{self, Plan};
+use mls_train::coordinator::{trainer, TrainConfig};
+use mls_train::util::json::Json;
+
+/// A fresh scratch dir per test case (tests run in parallel).
+fn scratch(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("mls_fault_test_{name}"));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// Tiny quantized config: every per-step random source is a pure
+/// function of (config, step), so checkpoint resume can be bit-exact.
+fn cfg(model: &str, optimizer: &str, steps: u64) -> TrainConfig {
+    let mut c = TrainConfig::default();
+    c.model = model.to_string();
+    c.cfg_name = "e2m4_gnc_eg8mg1_sr".to_string();
+    c.steps = steps;
+    c.batch = if model == "resnet_t" { 2 } else { 4 };
+    c.eval_every = 2;
+    c.eval_batches = 1;
+    c.lr.base = 0.05;
+    c.lr.milestones = vec![];
+    c.optimizer = optimizer.to_string();
+    c.data.noise = 1.0;
+    c.data.label_noise = 0.0;
+    c.out_dir = None;
+    c
+}
+
+/// The full bit-identity contract between two runs of the same
+/// trajectory: everything except wall-clock `step_ms`.
+fn assert_bit_identical(a: &trainer::TrainResult, b: &trainer::TrainResult, tag: &str) {
+    assert_eq!(a.metrics.steps.len(), b.metrics.steps.len(), "{tag}: step row count");
+    for (x, y) in a.metrics.steps.iter().zip(&b.metrics.steps) {
+        assert_eq!(x.step, y.step, "{tag}: step index");
+        assert_eq!(x.lr.to_bits(), y.lr.to_bits(), "{tag}: lr at step {}", x.step);
+        assert_eq!(x.loss.to_bits(), y.loss.to_bits(), "{tag}: loss at step {}", x.step);
+        assert_eq!(x.acc.to_bits(), y.acc.to_bits(), "{tag}: acc at step {}", x.step);
+    }
+    assert_eq!(a.metrics.evals.len(), b.metrics.evals.len(), "{tag}: eval row count");
+    for (x, y) in a.metrics.evals.iter().zip(&b.metrics.evals) {
+        assert_eq!(x.step, y.step, "{tag}: eval step");
+        assert_eq!(x.loss.to_bits(), y.loss.to_bits(), "{tag}: eval loss at step {}", x.step);
+        assert_eq!(x.acc.to_bits(), y.acc.to_bits(), "{tag}: eval acc at step {}", x.step);
+    }
+    assert_eq!(a.final_state.len(), b.final_state.len(), "{tag}: state length");
+    let diff = a
+        .final_state
+        .iter()
+        .zip(&b.final_state)
+        .filter(|(x, y)| x.to_bits() != y.to_bits())
+        .count();
+    assert_eq!(diff, 0, "{tag}: {diff} parameter(s) differ bitwise");
+    assert_eq!(a.audit_totals, b.audit_totals, "{tag}: audit roll-up");
+    assert_eq!(a.audit_steps, b.audit_steps, "{tag}: audit step count");
+    assert_eq!(a.diverged, b.diverged, "{tag}: diverged flag");
+    assert_eq!(a.test_loss.to_bits(), b.test_loss.to_bits(), "{tag}: test loss");
+    assert_eq!(a.test_acc.to_bits(), b.test_acc.to_bits(), "{tag}: test acc");
+}
+
+fn audit_lines(dir: &Path, tag: &str) -> Vec<Json> {
+    let text = std::fs::read_to_string(dir.join(format!("{tag}.audit.jsonl"))).unwrap();
+    text.lines().map(|l| Json::parse(l).unwrap()).collect()
+}
+
+// ---------------------------------------------------------------------------
+// Tentpole: interrupted-at-arbitrary-step resume is bit-identical, for
+// both optimizers on both graph models, crashing at the first step, a
+// middle step, and the last step before the end.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn crash_and_resume_is_bit_identical_across_models_optimizers_and_steps() {
+    const STEPS: u64 = 6;
+    for model in ["cnn_t", "resnet_t"] {
+        for optimizer in ["sgd", "momentum"] {
+            // one uninterrupted baseline per (model, optimizer), reused
+            // for every crash step
+            let base_dir = scratch(&format!("base_{model}_{optimizer}"));
+            let mut base = cfg(model, optimizer, STEPS);
+            base.checkpoint_every = 1;
+            base.out_dir = Some(base_dir.to_string_lossy().into_owned());
+            let clean = trainer::train_native(&base).unwrap();
+            assert!(!clean.diverged);
+            assert_eq!(clean.resumed_from, None);
+            assert_eq!(clean.steps_executed, STEPS);
+
+            for crash_at in [1, STEPS / 2, STEPS - 1] {
+                let tag = format!("{model}/{optimizer} crash@{crash_at}");
+                let dir = scratch(&format!("resume_{model}_{optimizer}_{crash_at}"));
+                let mut c = cfg(model, optimizer, STEPS);
+                c.checkpoint_every = 1;
+                c.out_dir = Some(dir.to_string_lossy().into_owned());
+                c.fault = Some(format!("crash_after_ckpt@step{crash_at}"));
+
+                let err = trainer::train_native(&c).expect_err("the injected crash must kill");
+                assert!(
+                    format!("{err:#}").contains("MLS_FAULT crash injected"),
+                    "{tag}: unexpected error {err:#}"
+                );
+                let ckpt = dir.join(format!("{}_e2m4_gnc_eg8mg1_sr_s{}.ckpt.bin", model, 0));
+                assert!(ckpt.is_file(), "{tag}: crash left no checkpoint");
+
+                // resume: same config, same injected fault (one-shot and
+                // behind the resume point — it must not re-fire)
+                let resumed = trainer::train_native(&c).unwrap();
+                assert_eq!(resumed.resumed_from, Some(crash_at + 1), "{tag}");
+                assert_eq!(resumed.steps_executed, STEPS - (crash_at + 1), "{tag}");
+                assert_bit_identical(&clean, &resumed, &tag);
+            }
+        }
+    }
+}
+
+#[test]
+fn corrupt_checkpoint_is_detected_and_falls_back_to_previous_good() {
+    let dir = scratch("corrupt_fallback");
+    let mut c = cfg("cnn_t", "momentum", 6);
+    c.checkpoint_every = 2; // checkpoints with next_step 2, 4, 6
+    c.out_dir = Some(dir.to_string_lossy().into_owned());
+
+    let clean_dir = scratch("corrupt_fallback_clean");
+    let mut clean_cfg = c.clone();
+    clean_cfg.out_dir = Some(clean_dir.to_string_lossy().into_owned());
+    let clean = trainer::train_native(&clean_cfg).unwrap();
+
+    // the run completes but its LATEST checkpoint (next_step 6) is
+    // corrupted in place right after the save
+    c.fault = Some("corrupt_ckpt@step5".to_string());
+    trainer::train_native(&c).unwrap();
+    let tag = "cnn_t_e2m4_gnc_eg8mg1_sr_s0";
+    assert!(dir.join(format!("{tag}.ckpt.bin")).is_file());
+    assert!(dir.join(format!("{tag}.ckpt.prev.bin")).is_file(), "rotation must keep prev");
+
+    // a re-run must reject the corrupt latest (checksum), fall back to
+    // the rotated previous checkpoint (next_step 4), and still land
+    // bit-identical
+    let resumed = trainer::train_native(&c).unwrap();
+    assert_eq!(
+        resumed.resumed_from,
+        Some(4),
+        "corrupt latest must fall back to the previous checkpoint"
+    );
+    assert_eq!(resumed.steps_executed, 2);
+    assert_bit_identical(&clean, &resumed, "corrupt fallback");
+
+    // the manifest sidecar documents the (re-written) latest checkpoint
+    let manifest =
+        Json::parse(&std::fs::read_to_string(dir.join(format!("{tag}.ckpt.json"))).unwrap())
+            .unwrap();
+    assert_eq!(manifest.req("format").unwrap().as_str(), Some("MLSCKPT1"));
+    assert_eq!(manifest.req("next_step").unwrap().as_usize(), Some(6));
+    assert_eq!(manifest.req("optimizer").unwrap().as_str(), Some("momentum"));
+    let checksum = manifest.req("checksum_fnv1a").unwrap().as_str().unwrap();
+    assert_eq!(checksum.len(), 16, "fnv64 hex: {checksum:?}");
+}
+
+// ---------------------------------------------------------------------------
+// Health policies: a NaN gradient at a deterministic step exercises
+// abort, rollback, and halve_lr.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn nan_gradient_with_abort_policy_stops_and_records_the_verdict() {
+    let dir = scratch("nan_abort");
+    let mut c = cfg("cnn_t", "sgd", 5);
+    c.out_dir = Some(dir.to_string_lossy().into_owned());
+    c.fault = Some("nan_grad@step2".to_string());
+    assert_eq!(c.on_divergence, "abort", "abort must be the default policy");
+
+    let r = trainer::train_native(&c).unwrap();
+    assert!(r.diverged, "a health abort is a diverged run");
+    assert_eq!(r.metrics.steps.len(), 3, "steps 0..=2 recorded, then the abort");
+    assert_eq!(r.rollbacks, 0);
+    assert_eq!(r.steps_executed, 3);
+    assert!(r.test_loss.is_nan(), "no test eval after an abort");
+
+    // the audit stream carries the health record explaining the stop:
+    // 3 train_step records then 1 health record
+    let lines = audit_lines(&dir, "cnn_t_e2m4_gnc_eg8mg1_sr_s0");
+    assert_eq!(lines.len(), 4, "3 train_step + 1 health");
+    let health = lines.last().unwrap();
+    assert_eq!(health.req("audit").unwrap().as_str(), Some("health"));
+    assert_eq!(health.req("verdict").unwrap().as_str(), Some("nan_grad"));
+    assert_eq!(health.req("action").unwrap().as_str(), Some("abort"));
+    assert_eq!(health.req("step").unwrap().as_usize(), Some(2));
+    assert!(health.req("grad_nonfinite").unwrap().as_usize().unwrap() > 0);
+}
+
+#[test]
+fn nan_gradient_with_rollback_policy_recovers_bit_identically() {
+    // no checkpoints at all: the anchor is the run start, so the
+    // rollback replays from step 0 — and must still converge to the
+    // exact same trajectory as a run that never faulted
+    let clean = trainer::train_native(&{
+        let mut c = cfg("cnn_t", "momentum", 5);
+        c.on_divergence = "rollback".to_string();
+        c
+    })
+    .unwrap();
+
+    let mut c = cfg("cnn_t", "momentum", 5);
+    c.on_divergence = "rollback".to_string();
+    c.fault = Some("nan_grad@step2".to_string());
+    let r = trainer::train_native(&c).unwrap();
+    assert!(!r.diverged, "rollback must recover");
+    assert_eq!(r.rollbacks, 1);
+    // steps 0..=2 executed, fault fires, replay of 0..5: 3 + 5
+    assert_eq!(r.steps_executed, 8);
+    assert_bit_identical(&clean, &r, "rollback from run start");
+}
+
+#[test]
+fn nan_gradient_rollback_restores_the_last_checkpoint_not_step_zero() {
+    let dir = scratch("nan_rollback_ckpt");
+    let mut c = cfg("cnn_t", "sgd", 6);
+    c.on_divergence = "rollback".to_string();
+    c.checkpoint_every = 2; // anchor at next_step 2 when the fault fires
+    c.out_dir = Some(dir.to_string_lossy().into_owned());
+
+    let clean_dir = scratch("nan_rollback_ckpt_clean");
+    let mut clean_cfg = c.clone();
+    clean_cfg.out_dir = Some(clean_dir.to_string_lossy().into_owned());
+    let clean = trainer::train_native(&clean_cfg).unwrap();
+
+    c.fault = Some("nan_grad@step3".to_string());
+    let r = trainer::train_native(&c).unwrap();
+    assert!(!r.diverged);
+    assert_eq!(r.rollbacks, 1);
+    // 0..=3 executed (4), rollback to 2, replay 2..6 (4)
+    assert_eq!(r.steps_executed, 8);
+    assert_bit_identical(&clean, &r, "rollback to checkpoint");
+
+    // the audit stream was truncated back to the anchor before the
+    // replay: train_step records stay strictly monotonic (the invariant
+    // `validate_bench.py --monotonic-steps` enforces in CI), and the
+    // rollback health record names its target
+    let lines = audit_lines(&dir, "cnn_t_e2m4_gnc_eg8mg1_sr_s0");
+    let mut last_step = None;
+    for l in &lines {
+        if l.req("audit").unwrap().as_str() == Some("train_step") {
+            let s = l.req("step").unwrap().as_usize().unwrap();
+            assert!(!last_step.is_some_and(|p| s <= p), "non-monotonic step {s} in {lines:?}");
+            last_step = Some(s);
+        }
+    }
+    assert_eq!(last_step, Some(5), "the replayed stream covers every step");
+    let health: Vec<&Json> =
+        lines.iter().filter(|l| l.req("audit").unwrap().as_str() == Some("health")).collect();
+    assert_eq!(health.len(), 1);
+    assert_eq!(health[0].req("action").unwrap().as_str(), Some("rollback"));
+    assert_eq!(health[0].req("rollback_to").unwrap().as_usize(), Some(2));
+}
+
+#[test]
+fn nan_gradient_with_halve_lr_policy_compounds_into_the_replay() {
+    let dir = scratch("nan_halve_lr");
+    let mut c = cfg("cnn_t", "sgd", 5);
+    c.on_divergence = "halve_lr".to_string();
+    c.checkpoint_every = 1;
+    c.out_dir = Some(dir.to_string_lossy().into_owned());
+    c.fault = Some("nan_grad@step2".to_string());
+
+    let r = trainer::train_native(&c).unwrap();
+    assert!(!r.diverged, "halve_lr must recover");
+    assert_eq!(r.rollbacks, 1);
+    let base = c.lr.base;
+    assert_eq!(
+        r.metrics.steps[1].lr.to_bits(),
+        base.to_bits(),
+        "pre-fault steps keep the configured lr"
+    );
+    for row in &r.metrics.steps[2..] {
+        assert_eq!(
+            row.lr.to_bits(),
+            (base * 0.5).to_bits(),
+            "step {}: replay and every later step run at half lr",
+            row.step
+        );
+    }
+
+    // the halved lr changes the trajectory — this is recovery, not replay
+    let clean = trainer::train_native(&{
+        let mut c2 = cfg("cnn_t", "sgd", 5);
+        c2.on_divergence = "halve_lr".to_string();
+        c2
+    })
+    .unwrap();
+    assert_ne!(
+        clean.final_state, r.final_state,
+        "halve_lr must actually perturb the trajectory"
+    );
+}
+
+#[test]
+fn scale_overflow_verdict_triggers_and_rollback_recovers() {
+    let clean = trainer::train_native(&{
+        let mut c = cfg("cnn_t", "sgd", 4);
+        c.on_divergence = "rollback".to_string();
+        c
+    })
+    .unwrap();
+
+    let mut c = cfg("cnn_t", "sgd", 4);
+    c.on_divergence = "rollback".to_string();
+    c.fault = Some("scale_overflow@step1".to_string());
+    let r = trainer::train_native(&c).unwrap();
+    assert!(!r.diverged);
+    assert_eq!(r.rollbacks, 1);
+    assert_bit_identical(&clean, &r, "scale_overflow rollback");
+
+    // under abort, the same fault is terminal with its own verdict name
+    let mut ca = cfg("cnn_t", "sgd", 4);
+    ca.on_divergence = "abort".to_string();
+    let dir = scratch("scale_abort");
+    ca.out_dir = Some(dir.to_string_lossy().into_owned());
+    ca.fault = Some("scale_overflow@step1".to_string());
+    let ra = trainer::train_native(&ca).unwrap();
+    assert!(ra.diverged);
+    let lines = audit_lines(&dir, "cnn_t_e2m4_gnc_eg8mg1_sr_s0");
+    let health = lines.last().unwrap();
+    assert_eq!(health.req("verdict").unwrap().as_str(), Some("scale_overflow"));
+}
+
+// ---------------------------------------------------------------------------
+// Lab integration: a trial killed mid-run resumes at STEP granularity.
+// ---------------------------------------------------------------------------
+
+fn fault_plan() -> Plan {
+    let v = Json::parse(
+        r#"{
+            "name": "faultlab",
+            "base": {"steps": 6, "batch": 4, "eval_every": 2, "eval_batches": 1,
+                     "checkpoint_every": 1, "noise": 1.0, "label_noise": 0.0},
+            "grid": {"cfg": ["e2m4_gnc_eg8mg1_sr"], "model": ["cnn_t"]}
+        }"#,
+    )
+    .unwrap();
+    Plan::from_json(&v).unwrap()
+}
+
+/// Parse a trial_output.json and drop the wall-clock `timing` object —
+/// everything left must be a pure function of the resolved config.
+fn parsed_minus_timing(path: &Path) -> Json {
+    let mut v = Json::parse(&std::fs::read_to_string(path).unwrap()).unwrap();
+    if let Json::Obj(m) = &mut v {
+        assert!(m.remove("timing").is_some(), "{}: no timing object", path.display());
+    }
+    v
+}
+
+#[test]
+fn lab_trial_crash_resumes_at_step_granularity() {
+    let plan = fault_plan();
+    let trial_id = "t000__cnn_t__e2m4_gnc_eg8mg1_sr__s0";
+
+    // uninterrupted baseline in its own run root
+    let clean_out = scratch("lab_clean");
+    let r = lab::run_plan(&plan, &clean_out, false).unwrap();
+    assert_eq!(r.ran(), 1);
+    let clean_output = clean_out.join("faultlab").join(trial_id).join("trial_output.json");
+    let clean = parsed_minus_timing(&clean_output);
+
+    // crash the trial mid-run: the plan invocation fails, leaving the
+    // checkpoint but no trial_output.json
+    let out = scratch("lab_crash");
+    let err = lab::run_plan_opts(&plan, &out, false, Some("crash_after_ckpt@step3"))
+        .expect_err("the injected crash must fail the plan run");
+    assert!(format!("{err:#}").contains("MLS_FAULT crash injected"), "{err:#}");
+    let trial_dir = out.join("faultlab").join(trial_id);
+    let tag = "cnn_t_e2m4_gnc_eg8mg1_sr_s0";
+    assert!(trial_dir.join(format!("{tag}.ckpt.bin")).is_file());
+    assert!(!trial_dir.join("trial_output.json").exists());
+
+    // resume WITHOUT the fault: the trial re-runs, picks up the
+    // checkpoint, and executes only the remaining steps
+    let r2 = lab::run_plan(&plan, &out, false).unwrap();
+    assert_eq!(r2.ran(), 1);
+    let output_path = trial_dir.join("trial_output.json");
+    let v = Json::parse(&std::fs::read_to_string(&output_path).unwrap()).unwrap();
+    let timing = v.req("timing").unwrap();
+    assert_eq!(timing.req("resumed").unwrap().as_usize(), Some(4), "resumed at step 4");
+    assert_eq!(timing.req("steps_executed").unwrap().as_usize(), Some(2), "only steps 4..6 ran");
+
+    // ...and the output is bit-identical to the uninterrupted baseline
+    assert_eq!(
+        parsed_minus_timing(&output_path).to_string_pretty(),
+        clean.to_string_pretty(),
+        "resumed trial must reproduce the clean output bit-for-bit"
+    );
+
+    // the resumed audit stream has no duplicate / out-of-order steps
+    let lines = audit_lines(&trial_dir, tag);
+    let steps: Vec<usize> = lines
+        .iter()
+        .filter(|l| l.req("audit").unwrap().as_str() == Some("train_step"))
+        .map(|l| l.req("step").unwrap().as_usize().unwrap())
+        .collect();
+    assert_eq!(steps, vec![0, 1, 2, 3, 4, 5], "strictly monotonic, no duplicates");
+
+    // a third invocation skips the (now valid) trial entirely
+    let r3 = lab::run_plan(&plan, &out, false).unwrap();
+    assert_eq!(r3.ran(), 0);
+    assert_eq!(r3.skipped(), 1);
+
+    // --force starts over: checkpoints are deleted first, so the forced
+    // run executes every step instead of resuming
+    let r4 = lab::run_plan(&plan, &out, true).unwrap();
+    assert_eq!(r4.ran(), 1);
+    let v = Json::parse(&std::fs::read_to_string(&output_path).unwrap()).unwrap();
+    let timing = v.req("timing").unwrap();
+    assert!(timing.get("resumed").is_none(), "forced run must not resume");
+    assert_eq!(timing.req("steps_executed").unwrap().as_usize(), Some(6));
+}

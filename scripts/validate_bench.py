@@ -5,18 +5,27 @@ against their checked-in schemas.
 Stdlib-only (CI's build-test job has no pip step), implementing the JSON
 Schema subset the bench/audit/lab schemas use: type, const, enum,
 required, properties, additionalProperties (as a sub-schema),
-minProperties, minimum, exclusiveMinimum, and for arrays minItems + items (as a
-sub-schema applied to every element — the per-layer audit stream's
-`layers` array needs it). A malformed report — missing ratio, empty
-results block, non-positive throughput, empty audit stream — fails the
-build instead of silently shipping in the bench-trajectory artifact.
+minProperties, minimum, exclusiveMinimum, oneOf (exactly one branch must
+match — the audit stream mixes train_step and health records), and for
+arrays minItems + items (as a sub-schema applied to every element — the
+per-layer audit stream's `layers` array needs it). A malformed report —
+missing ratio, empty results block, non-positive throughput, empty audit
+stream — fails the build instead of silently shipping in the
+bench-trajectory artifact.
 
-Usage: validate_bench.py <report>... <schema.json>
+Usage: validate_bench.py [--monotonic-steps] <report>... <schema.json>
 
 Every argument but the last is a document to validate against the final
 schema argument. A `.jsonl` document is validated line by line (each
 non-empty line one instance of the schema — the audit stream and the lab
 analysis ranking both use this form); anything else is one JSON document.
+
+With --monotonic-steps, every `.jsonl` document must additionally carry
+strictly increasing `step` indices across its train_step records
+(records whose "audit" field is "train_step", or that have a "step" but
+no "audit" discriminator). Duplicate or backwards steps mean a crashed
+run resumed without truncating its audit stream back to the checkpoint
+— exactly the bug the fault-tolerance harness exists to catch.
 """
 import json
 import sys
@@ -31,6 +40,22 @@ TYPES = {
 
 
 def check(value, schema, path, errors):
+    if "oneOf" in schema:
+        branch_errors = []
+        for branch in schema["oneOf"]:
+            errs = []
+            check(value, branch, path, errs)
+            branch_errors.append(errs)
+        matches = [i for i, errs in enumerate(branch_errors) if not errs]
+        if len(matches) != 1:
+            if not matches:
+                detail = "; ".join(
+                    f"branch {i}: {errs[0]}" for i, errs in enumerate(branch_errors)
+                )
+                errors.append(f"{path}: matches no oneOf branch ({detail})")
+            else:
+                errors.append(f"{path}: matches oneOf branches {matches}, want exactly 1")
+        return
     t = schema.get("type")
     if t is not None:
         py = TYPES[t]
@@ -88,7 +113,32 @@ def load_instances(report_path):
         return [(report_path, json.load(f))]
 
 
-def validate_one(report_path, schema, schema_path):
+def check_monotonic_steps(report_path, instances):
+    """Strictly increasing `step` over a stream's train_step records —
+    duplicates or backwards jumps betray a resume that did not truncate
+    the audit stream back to its checkpoint. Returns error strings."""
+    errors = []
+    last = None  # (step, label)
+    for label, rec in instances:
+        if not isinstance(rec, dict) or "step" not in rec:
+            continue
+        if rec.get("audit", "train_step") != "train_step":
+            continue  # health / other interleaved records may repeat steps
+        step = rec["step"]
+        if not isinstance(step, (int, float)) or isinstance(step, bool):
+            errors.append(f"{label}: step {step!r} is not a number")
+            continue
+        if last is not None and step <= last[0]:
+            kind = "duplicate" if step == last[0] else "non-monotonic"
+            errors.append(
+                f"{label}: {kind} step {step} (previous train_step record "
+                f"{last[1]} had step {last[0]})"
+            )
+        last = (step, label)
+    return errors
+
+
+def validate_one(report_path, schema, schema_path, monotonic_steps=False):
     """Validate one file; return True if it passed, printing a verdict."""
     try:
         instances = load_instances(report_path)
@@ -96,6 +146,13 @@ def validate_one(report_path, schema, schema_path):
         print(f"FAIL {report_path}: unreadable or not JSON: {e}")
         return False
     ok = True
+    if monotonic_steps and report_path.endswith(".jsonl"):
+        step_errors = check_monotonic_steps(report_path, instances)
+        if step_errors:
+            print(f"FAIL {report_path}: step indices are not strictly increasing:")
+            for e in step_errors:
+                print(f"  - {e}")
+            ok = False
     for label, report in instances:
         errors = []
         check(report, schema, "$", errors)
@@ -125,12 +182,18 @@ def validate_one(report_path, schema, schema_path):
 
 
 def main():
-    if len(sys.argv) < 3:
+    argv = sys.argv[1:]
+    monotonic_steps = "--monotonic-steps" in argv
+    argv = [a for a in argv if a != "--monotonic-steps"]
+    if len(argv) < 2:
         sys.exit(__doc__)
-    report_paths, schema_path = sys.argv[1:-1], sys.argv[-1]
+    report_paths, schema_path = argv[:-1], argv[-1]
     with open(schema_path) as f:
         schema = json.load(f)
-    if not all([validate_one(p, schema, schema_path) for p in report_paths]):
+    results = [
+        validate_one(p, schema, schema_path, monotonic_steps) for p in report_paths
+    ]
+    if not all(results):
         sys.exit(1)
 
 
