@@ -4,20 +4,58 @@
 //! on the `cnn_t` chain model and the `resnet_t` residual module-graph
 //! model over synthetic-CIFAR batches. Reports steps/s and the low-bit
 //! MMAC/s of the executed conv work (from each step's own audit
-//! counters), serial vs pool-threaded, writes the trajectory to
+//! counters), serial vs pool-threaded, plus the step-arena path: measured
+//! heap bytes per warm arena step (`bytes_allocated_per_step`, must be 0)
+//! and the `arena_vs_alloc_step` speedup of the zero-alloc step over the
+//! allocating step at 1 thread. Writes the trajectory to
 //! `BENCH_train.json` (schema: `schemas/bench_train.schema.json`) and one
 //! per-layer audit stream record of the resnet_t probe step to
 //! `AUDIT_step.json` (schema: `schemas/audit_step.schema.json`, validated
 //! in CI).
 
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Duration;
 
 use mls_train::data::{streams, DatasetConfig, SynthCifar};
 use mls_train::mls::quantizer::QuantConfig;
 use mls_train::nn::train::native_model;
-use mls_train::util::bench::{bench, black_box, budget, repo_root, smoke_mode, BenchReport};
+use mls_train::util::bench::{
+    bench, black_box, budget, enforce_mode, repo_root, smoke_mode, BenchReport,
+};
 use mls_train::util::json::Json;
 use mls_train::util::parallel;
+
+/// [`System`] plus a byte counter, so this bench can MEASURE (not just
+/// claim) the heap traffic of a warm arena step. Frees are uncounted:
+/// the reported number is allocation pressure, not net growth.
+struct Counting;
+
+static BYTES: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for Counting {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        BYTES.fetch_add(layout.size() as u64, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        BYTES.fetch_add(layout.size() as u64, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        BYTES.fetch_add(new_size as u64, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static COUNTER: Counting = Counting;
 
 fn main() {
     let threads = parallel::num_threads();
@@ -57,6 +95,50 @@ fn main() {
         serial.throughput_items(macs) / 1e6
     );
     report.add_result(&serial, macs, "mac");
+
+    // the zero-alloc arena step, same model/batch/seed at 1 thread: first
+    // measure the actual heap bytes of warm steps with the counting
+    // allocator (the steady-state contract is exactly 0), then time it
+    // against the allocating serial step above
+    let mut arena = native_model("cnn_t", QuantConfig::default(), 0).expect("cnn_t builds");
+    arena.set_threads(1);
+    arena.enable_step_arena();
+    arena.train_step_quiet(&images, &labels, 0.0, 2); // warm-up step
+    let warm_steps = 4u64;
+    let bytes0 = BYTES.load(Ordering::Relaxed);
+    for _ in 0..warm_steps {
+        black_box(arena.train_step_quiet(&images, &labels, 0.0, 2));
+    }
+    let bytes_per_step = (BYTES.load(Ordering::Relaxed) - bytes0) as f64 / warm_steps as f64;
+    report.set("bytes_allocated_per_step", Json::Num(bytes_per_step));
+
+    let arena_r = bench("train_step/cnn_t_e2m4_b16_arena_serial", b, || {
+        black_box(arena.train_step_quiet(&images, &labels, 0.0, 2));
+    });
+    let arena_vs_alloc = serial.median.as_secs_f64() / arena_r.median.as_secs_f64();
+    println!(
+        "  -> {:.2} steps/s, {bytes_per_step:.0} bytes allocated per warm step \
+         ({arena_vs_alloc:.2}x vs allocating serial step, bit-identical)",
+        1.0 / arena_r.median.as_secs_f64(),
+    );
+    report.add_result(&arena_r, macs, "mac");
+    report.add_ratio("arena_vs_alloc_step", arena_vs_alloc);
+
+    // deterministic gate: a warm arena step may not touch the heap at all
+    if enforce_mode() && bytes_per_step != 0.0 {
+        eprintln!("ALLOC REGRESSION: warm arena step allocates {bytes_per_step:.0} bytes (!= 0)");
+        std::process::exit(1);
+    }
+    // smoke iterations are few and noisy; the 0.9 floor avoids flaking
+    // without a real regression — an actual regression reads well below
+    let floor = if smoke_mode() { 0.9 } else { 1.0 };
+    if enforce_mode() && arena_vs_alloc < floor {
+        eprintln!(
+            "PERF REGRESSION: arena step is {arena_vs_alloc:.3}x the allocating step at 1 \
+             thread (< {floor})"
+        );
+        std::process::exit(1);
+    }
 
     model.set_threads(threads);
     let par = bench(&format!("train_step/cnn_t_e2m4_b16_t{threads}"), b, || {

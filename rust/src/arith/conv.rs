@@ -334,18 +334,50 @@ pub fn conv2d_f32_threaded(
     pad: usize,
     threads: usize,
 ) -> (Vec<f32>, [usize; 4]) {
+    let [co_n, _, kh, kw] = wshape;
+    let [n_n, _, h, wi] = ashape;
+    let ho = (h + 2 * pad - kh) / stride + 1;
+    let wo = (wi + 2 * pad - kw) / stride + 1;
+    let mut z = vec![0.0f32; n_n * co_n * ho * wo];
+    let shape = conv2d_f32_into(w, wshape, a, ashape, stride, pad, threads, &mut z);
+    (z, shape)
+}
+
+/// [`conv2d_f32_threaded`] into a caller-owned output buffer (must be
+/// exactly `N * Co * Ho * Wo` long; every element is overwritten), so the
+/// warm train-step loop pays no per-call allocation. Same tiles, same
+/// per-tile element order — bit-identical to the allocating entry point.
+#[allow(clippy::too_many_arguments)]
+pub fn conv2d_f32_into(
+    w: &[f32],
+    wshape: [usize; 4],
+    a: &[f32],
+    ashape: [usize; 4],
+    stride: usize,
+    pad: usize,
+    threads: usize,
+    z: &mut [f32],
+) -> [usize; 4] {
     let [co_n, ci_n, kh, kw] = wshape;
     let [n_n, a_ci, h, wi] = ashape;
     assert_eq!(ci_n, a_ci);
     let ho = (h + 2 * pad - kh) / stride + 1;
     let wo = (wi + 2 * pad - kw) / stride + 1;
     let dims = ConvDims { ci_n, kh, kw, h, wi, ho, wo, stride, pad };
+    let tile_len = ho * wo;
+    assert_eq!(z.len(), n_n * co_n * tile_len, "f32 conv output buffer length");
 
-    let out = run_tiled(n_n, co_n, dims, threads, |n, co, tile| {
-        conv2d_f32_tile(w, a, n, co, dims, tile);
-        TileStats::default()
+    let writer = DisjointWriter::new(z);
+    parallel::for_ranges(threads, n_n * co_n, |lo, hi| {
+        for t in lo..hi {
+            // SAFETY: tile t owns exactly z[t*tile_len .. (t+1)*tile_len]
+            // and ranges are disjoint, so no two spans overlap
+            let tile = unsafe { writer.span(t * tile_len, tile_len) };
+            conv2d_f32_tile(w, a, t / co_n, t % co_n, dims, tile);
+        }
     });
-    (out.z, out.shape)
+    drop(writer);
+    [n_n, co_n, ho, wo]
 }
 
 /// One `(n, co)` plane of the f32 reference conv, interior/halo split.
@@ -414,15 +446,38 @@ pub fn conv2d_f32_wgrad(
     kw: usize,
     threads: usize,
 ) -> (Vec<f32>, [usize; 4]) {
+    let [_, co_n, _, _] = eshape;
+    let [_, ci_n, _, _] = ashape;
+    let mut out = vec![0.0f32; co_n * ci_n * kh * kw];
+    let shape = conv2d_f32_wgrad_into(e, eshape, a, ashape, stride, pad, kh, kw, threads, &mut out);
+    (out, shape)
+}
+
+/// [`conv2d_f32_wgrad`] into a caller-owned `[Co, Ci, Kh, Kw]` buffer
+/// (every element is overwritten). Bit-identical to the allocating entry
+/// point — same plane sharding, same per-plane element order.
+#[allow(clippy::too_many_arguments)]
+pub fn conv2d_f32_wgrad_into(
+    e: &[f32],
+    eshape: [usize; 4],
+    a: &[f32],
+    ashape: [usize; 4],
+    stride: usize,
+    pad: usize,
+    kh: usize,
+    kw: usize,
+    threads: usize,
+    out: &mut [f32],
+) -> [usize; 4] {
     let [n_n, co_n, ho, wo] = eshape;
     let [a_n, ci_n, h, wi] = ashape;
     assert_eq!(n_n, a_n, "error/activation batch mismatch");
     assert_eq!(e.len(), n_n * co_n * ho * wo);
     assert_eq!(a.len(), a_n * ci_n * h * wi);
     let kk = kh * kw;
-    let mut out = vec![0.0f32; co_n * ci_n * kk];
-    let writer = DisjointWriter::new(&mut out);
-    parallel::map_ranges(threads, co_n * ci_n, |lo, hi| {
+    assert_eq!(out.len(), co_n * ci_n * kk, "wgrad output buffer length");
+    let writer = DisjointWriter::new(out);
+    parallel::for_ranges(threads, co_n * ci_n, |lo, hi| {
         for u in lo..hi {
             let (co, ci) = (u / ci_n, u % ci_n);
             // SAFETY: unit u owns exactly out[u*kk .. (u+1)*kk] and
@@ -455,7 +510,7 @@ pub fn conv2d_f32_wgrad(
         }
     });
     drop(writer);
-    (out, [co_n, ci_n, kh, kw])
+    [co_n, ci_n, kh, kw]
 }
 
 /// f32 reference input-gradient conv (Alg. 1 `Conv^T(E, W)`):
@@ -479,15 +534,38 @@ pub fn conv2d_f32_dgrad(
     in_w: usize,
     threads: usize,
 ) -> (Vec<f32>, [usize; 4]) {
+    let [n_n, _, _, _] = eshape;
+    let [_, ci_n, _, _] = wshape;
+    let mut out = vec![0.0f32; n_n * ci_n * in_h * in_w];
+    let shape = conv2d_f32_dgrad_into(e, eshape, w, wshape, stride, pad, in_h, in_w, threads, &mut out);
+    (out, shape)
+}
+
+/// [`conv2d_f32_dgrad`] into a caller-owned `[N, Ci, in_h, in_w]` buffer
+/// (every element is overwritten). Bit-identical to the allocating entry
+/// point — same plane sharding, same per-plane element order.
+#[allow(clippy::too_many_arguments)]
+pub fn conv2d_f32_dgrad_into(
+    e: &[f32],
+    eshape: [usize; 4],
+    w: &[f32],
+    wshape: [usize; 4],
+    stride: usize,
+    pad: usize,
+    in_h: usize,
+    in_w: usize,
+    threads: usize,
+    out: &mut [f32],
+) -> [usize; 4] {
     let [n_n, co_n, ho, wo] = eshape;
     let [w_co, ci_n, kh, kw] = wshape;
     assert_eq!(co_n, w_co, "error/weight channel mismatch");
     assert_eq!(e.len(), n_n * co_n * ho * wo);
     assert_eq!(w.len(), w_co * ci_n * kh * kw);
     let plane_len = in_h * in_w;
-    let mut out = vec![0.0f32; n_n * ci_n * plane_len];
-    let writer = DisjointWriter::new(&mut out);
-    parallel::map_ranges(threads, n_n * ci_n, |lo, hi| {
+    assert_eq!(out.len(), n_n * ci_n * plane_len, "dgrad output buffer length");
+    let writer = DisjointWriter::new(out);
+    parallel::for_ranges(threads, n_n * ci_n, |lo, hi| {
         for u in lo..hi {
             let (n, ci) = (u / ci_n, u % ci_n);
             // SAFETY: unit u owns exactly out[u*plane_len ..
@@ -527,7 +605,7 @@ pub fn conv2d_f32_dgrad(
         }
     });
     drop(writer);
-    (out, [n_n, ci_n, in_h, in_w])
+    [n_n, ci_n, in_h, in_w]
 }
 
 #[cfg(test)]

@@ -69,6 +69,7 @@ pub const NR: usize = 8;
 /// pre-combined operand `scaled_frac` (`signed_frac << shift`) of output
 /// channel `b * MR + m` at reduction index `k` (zero for lanes past
 /// `co_n`).
+#[derive(Default)]
 pub struct PackedWeights {
     pub comb: Vec<i32>,
     pub co_n: usize,
@@ -82,16 +83,35 @@ pub struct PackedWeights {
 /// [`MR`]-lane panels, once per conv (parallel over channel blocks; the
 /// layout is deterministic, so the thread count cannot matter).
 pub fn pack_weights(wp: &DecodedPlanes, co_n: usize, kdim: usize, threads: usize) -> PackedWeights {
+    let mut out = PackedWeights::default();
+    pack_weights_into(wp, co_n, kdim, threads, &mut out);
+    out
+}
+
+/// [`pack_weights`] into a caller-owned panel set: same layout, same
+/// zeroed padding lanes, but reusing `out.comb`'s capacity, so the warm
+/// step loop repacks persistent per-layer panels without allocating.
+pub fn pack_weights_into(
+    wp: &DecodedPlanes,
+    co_n: usize,
+    kdim: usize,
+    threads: usize,
+    out: &mut PackedWeights,
+) {
     assert_eq!(wp.len(), co_n * kdim, "weight planes do not match [Co, Ci*Kh*Kw]");
     let blocks = co_n.div_ceil(MR);
+    out.co_n = co_n;
+    out.kdim = kdim;
+    out.blocks = blocks;
     // zero-init covers the padded lanes; ranges write straight into the
     // final buffer at their block offsets (no collect-then-concat pass)
-    let mut comb = vec![0i32; blocks * kdim * MR];
+    out.comb.clear();
+    out.comb.resize(blocks * kdim * MR, 0);
     {
-        let comb_w = parallel::DisjointWriter::new(&mut comb);
-        parallel::map_ranges(threads, blocks, |lo, hi| {
+        let comb_w = parallel::DisjointWriter::new(&mut out.comb);
+        parallel::for_ranges(threads, blocks, |lo, hi| {
             // SAFETY: range [lo, hi) owns exactly the panel bytes
-            // [lo*kdim*MR, hi*kdim*MR) and map_ranges ranges are disjoint
+            // [lo*kdim*MR, hi*kdim*MR) and for_ranges ranges are disjoint
             let c = unsafe { comb_w.span(lo * kdim * MR, (hi - lo) * kdim * MR) };
             for b in lo..hi {
                 let mr = (co_n - b * MR).min(MR);
@@ -105,7 +125,6 @@ pub fn pack_weights(wp: &DecodedPlanes, co_n: usize, kdim: usize, threads: usize
             }
         });
     }
-    PackedWeights { comb, co_n, kdim, blocks }
 }
 
 /// Reusable per-worker buffers for the packed kernel: the im2col row
@@ -309,45 +328,48 @@ mod tests {
                 pad_y: pad,
                 pad_x: pad,
             };
-            let mut scratch = PackScratch::default();
-            for u in 0..ashape[0] {
-                for oy in 0..ho {
-                    scratch.pack_row(&ap, u, oy, &d);
-                    for g in 0..ci_n {
-                        for i in 0..kh {
-                            for j in 0..kw {
-                                let k = (g * kh + i) * kw + j;
-                                for x in 0..wo_p {
-                                    let iy = (oy * stride + i * dil) as isize - pad;
-                                    let ix = (x * stride + j * dil) as isize - pad;
-                                    let phys = |v: isize, len: usize| {
-                                        if v >= 0 && v % ups as isize == 0 {
-                                            let q = (v / ups as isize) as usize;
-                                            if q < len {
-                                                return Some(q);
+            // exercise the production arena entry point rather than a
+            // private scratch instance
+            with_scratch(|scratch| {
+                for u in 0..ashape[0] {
+                    for oy in 0..ho {
+                        scratch.pack_row(&ap, u, oy, &d);
+                        for g in 0..ci_n {
+                            for i in 0..kh {
+                                for j in 0..kw {
+                                    let k = (g * kh + i) * kw + j;
+                                    for x in 0..wo_p {
+                                        let iy = (oy * stride + i * dil) as isize - pad;
+                                        let ix = (x * stride + j * dil) as isize - pad;
+                                        let phys = |v: isize, len: usize| {
+                                            if v >= 0 && v % ups as isize == 0 {
+                                                let q = (v / ups as isize) as usize;
+                                                if q < len {
+                                                    return Some(q);
+                                                }
                                             }
-                                        }
-                                        None
-                                    };
-                                    let want = match (x < wo, phys(iy, h), phys(ix, wi)) {
-                                        (true, Some(py), Some(px)) => {
-                                            let idx = ((u * ci_n + g) * h + py) * wi + px;
-                                            ap.scaled_frac[idx]
-                                        }
-                                        _ => 0,
-                                    };
-                                    let got = scratch.a_comb[k * wo_p + x];
-                                    assert_eq!(
-                                        got, want,
-                                        "u{u} oy{oy} g{g} i{i} j{j} x{x} \
-                                         (k{kh}x{kw} s{stride} d{dil} up{ups} p{pad})"
-                                    );
+                                            None
+                                        };
+                                        let want = match (x < wo, phys(iy, h), phys(ix, wi)) {
+                                            (true, Some(py), Some(px)) => {
+                                                let idx = ((u * ci_n + g) * h + py) * wi + px;
+                                                ap.scaled_frac[idx]
+                                            }
+                                            _ => 0,
+                                        };
+                                        let got = scratch.a_comb[k * wo_p + x];
+                                        assert_eq!(
+                                            got, want,
+                                            "u{u} oy{oy} g{g} i{i} j{j} x{x} \
+                                             (k{kh}x{kw} s{stride} d{dil} up{ups} p{pad})"
+                                        );
+                                    }
                                 }
                             }
                         }
                     }
                 }
-            }
+            });
         }
     }
 }

@@ -40,6 +40,7 @@
 use super::conv::{ConvDims, TileStats};
 use super::group_scale::GroupScaleFactor;
 use super::intra::Element;
+use super::pack::{self, PackScratch};
 use super::tree::tree_sum;
 use crate::mls::format::EmFormat;
 use crate::mls::MlsTensor;
@@ -173,21 +174,27 @@ pub(crate) fn conv_tile_planar(
     // running max reproduces the legacy per-group peak_bits() max exactly
     let mut peak: i64 = 0;
 
+    // per-tile buffers live in the worker's pack arena, so the planar
+    // kernel allocates nothing per tile once the pool is warm
+    pack::with_scratch(|scratch| {
+    let PackScratch { cbuf, factors, .. } = scratch;
     // group-scale factors hoisted out of the pixel loop: one combine per
     // (co, ci)/(n, ci) pair per tile instead of one per output pixel
-    let factors: Vec<GroupScaleFactor> = (0..ci_n)
-        .map(|ci| {
-            let wg = co * ci_n + ci;
-            let ag = n * ci_n + ci;
-            GroupScaleFactor::combine(w.sg_exp[wg], w.sg_man[wg], a.sg_exp[ag], a.sg_man[ag])
-        })
-        .collect();
+    factors.clear();
+    factors.extend((0..ci_n).map(|ci| {
+        let wg = co * ci_n + ci;
+        let ag = n * ci_n + ci;
+        GroupScaleFactor::combine(w.sg_exp[wg], w.sg_man[wg], a.sg_exp[ag], a.sg_man[ag])
+    }));
     let scale_log2 = 2 * fmt.emin() - 2 * fmt.m as i32;
 
     let (oy_lo, oy_hi) = interior_span(h, kh, stride, pad, ho);
     let (ox_lo, ox_hi) = interior_span(wi, kw, stride, pad, wo);
 
-    let mut contribs = vec![0.0f32; ci_n];
+    if cbuf.len() < ci_n {
+        cbuf.resize(ci_n, 0.0);
+    }
+    let contribs = &mut cbuf[..ci_n];
     for oy in 0..ho {
         let row_interior = oy >= oy_lo && oy < oy_hi;
         for ox in 0..wo {
@@ -243,9 +250,10 @@ pub(crate) fn conv_tile_planar(
             }
             gscales += ci_n as u64;
             fadds += (ci_n - 1) as u64;
-            z[oy * wo + ox] = st * tree_sum(&contribs);
+            z[oy * wo + ox] = st * tree_sum(contribs);
         }
     }
+    });
 
     // same formula as PartialSum::peak_bits on the tile-wide max |acc|;
     // a tile that ran at least one (pixel, group) MAC reports >= 1 even
@@ -256,6 +264,79 @@ pub(crate) fn conv_tile_planar(
         64 - peak.unsigned_abs().leading_zeros() + 1
     };
     TileStats { peak_bits, muls, iadds, fadds, gscales }
+}
+
+/// Permute the leading-axes-swapped view of decoded planes into a
+/// caller-owned destination: element `(i0, i1, k)` of a `[d0, d1, inner]`
+/// source lands at `(i1, i0, k)` — or `(i1, i0, inner - 1 - k)` when
+/// `flip` is set (the `transpose01_flip23` relayout of the input-gradient
+/// stationary operand). Decode is element-wise, so permuting decoded
+/// planes is bit-identical to decoding a permuted tensor; this lets the
+/// arena path build the backward operand layouts without materializing
+/// transposed `MlsTensor`s.
+pub(crate) fn transpose01_planes(
+    src: &DecodedPlanes,
+    d0: usize,
+    d1: usize,
+    inner: usize,
+    flip: bool,
+    dst: &mut DecodedPlanes,
+) {
+    let n = src.len();
+    assert_eq!(n, d0 * d1 * inner, "transpose01_planes: source shape mismatch");
+    dst.fmt = src.fmt;
+    dst.signed_frac.clear();
+    dst.signed_frac.resize(n, 0);
+    dst.shift.clear();
+    dst.shift.resize(n, 0);
+    dst.scaled_frac.clear();
+    dst.scaled_frac.resize(n, 0);
+    for i0 in 0..d0 {
+        for i1 in 0..d1 {
+            let s0 = (i0 * d1 + i1) * inner;
+            let t0 = (i1 * d0 + i0) * inner;
+            if flip {
+                for k in 0..inner {
+                    let s = s0 + inner - 1 - k;
+                    let t = t0 + k;
+                    dst.signed_frac[t] = src.signed_frac[s];
+                    dst.shift[t] = src.shift[s];
+                    dst.scaled_frac[t] = src.scaled_frac[s];
+                }
+            } else {
+                dst.signed_frac[t0..t0 + inner].copy_from_slice(&src.signed_frac[s0..s0 + inner]);
+                dst.shift[t0..t0 + inner].copy_from_slice(&src.shift[s0..s0 + inner]);
+                dst.scaled_frac[t0..t0 + inner].copy_from_slice(&src.scaled_frac[s0..s0 + inner]);
+            }
+        }
+    }
+}
+
+/// The group-scale half of a leading-axes transpose: `Grouping::Both`
+/// groups are the `[d0, d1]` leading pairs, so the per-group scale codes
+/// permute exactly like the group blocks (scales travel with their
+/// groups; `s_t` is layout-independent and untouched).
+pub(crate) fn transpose01_groups(
+    sg_exp: &[u8],
+    sg_man: &[u32],
+    d0: usize,
+    d1: usize,
+    out_exp: &mut Vec<u8>,
+    out_man: &mut Vec<u32>,
+) {
+    let n = d0 * d1;
+    assert_eq!(sg_exp.len(), n, "transpose01_groups: sg_exp shape mismatch");
+    assert_eq!(sg_man.len(), n, "transpose01_groups: sg_man shape mismatch");
+    out_exp.clear();
+    out_exp.resize(n, 0);
+    out_man.clear();
+    out_man.resize(n, 0);
+    for i0 in 0..d0 {
+        for i1 in 0..d1 {
+            out_exp[i1 * d0 + i0] = sg_exp[i0 * d1 + i1];
+            out_man[i1 * d0 + i0] = sg_man[i0 * d1 + i1];
+        }
+    }
 }
 
 #[cfg(test)]
@@ -301,6 +382,37 @@ mod tests {
                 assert_eq!(pt.shift, p.shift, "t={threads}");
                 assert_eq!(pt.scaled_frac, p.scaled_frac, "t={threads}");
             }
+        }
+    }
+
+    #[test]
+    fn plane_transposes_match_tensor_relayouts() {
+        let shape = [3usize, 4, 2, 3];
+        let mut rng = Pcg32::seeded(33);
+        let x = crate::util::prop::grouped_tensor(&mut rng, shape);
+        let cfg = QuantConfig { rounding: Rounding::Nearest, ..QuantConfig::new(2, 4) };
+        let t = quantize(&x, &shape, &cfg, &[]);
+        let p = t.decoded_planes();
+        let [d0, d1, d2, d3] = shape;
+        for flip in [false, true] {
+            // reference: relayout the tensor, then decode
+            let tt = if flip { t.transpose01_flip23() } else { t.transpose01() };
+            let want = tt.decoded_planes();
+            let mut got = DecodedPlanes {
+                signed_frac: Vec::new(),
+                shift: Vec::new(),
+                scaled_frac: Vec::new(),
+                fmt: t.cfg.element,
+            };
+            transpose01_planes(&p, d0, d1, d2 * d3, flip, &mut got);
+            assert_eq!(got.fmt, want.fmt, "flip {flip}");
+            assert_eq!(got.signed_frac, want.signed_frac, "flip {flip}: signed_frac");
+            assert_eq!(got.shift, want.shift, "flip {flip}: shift");
+            assert_eq!(got.scaled_frac, want.scaled_frac, "flip {flip}: scaled_frac");
+            let (mut oe, mut om) = (Vec::new(), Vec::new());
+            transpose01_groups(&t.sg_exp, &t.sg_man, d0, d1, &mut oe, &mut om);
+            assert_eq!(oe, tt.sg_exp, "flip {flip}: sg_exp");
+            assert_eq!(om, tt.sg_man, "flip {flip}: sg_man");
         }
     }
 

@@ -63,8 +63,11 @@ use super::gemm;
 use super::group_scale::GroupScaleFactor;
 use super::pack;
 use super::planes::DecodedPlanes;
+use crate::mls::format::EmFormat;
+use crate::mls::quantizer::FusedQuant;
 use crate::mls::{Grouping, MlsTensor};
 use crate::util::parallel::{self, DisjointWriter};
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
 
 /// Which Alg. 1 conv this execution is.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -180,20 +183,7 @@ impl ConvSpec {
                 let at = qa.transpose01();
                 let ep = DecodedPlanes::of_threaded(&et, threads);
                 let ap = DecodedPlanes::of_threaded(&at, threads);
-                let d = SpecDims {
-                    g_n: n_n,
-                    kh: ho,
-                    kw: wo,
-                    h: self.in_h,
-                    wi: self.in_w,
-                    ho: self.kh,
-                    wo: self.kw,
-                    stride: 1,
-                    dil: self.stride,
-                    ups: 1,
-                    pad_y: self.pad as isize,
-                    pad_x: self.pad as isize,
-                };
+                let d = self.wgrad_dims(n_n);
                 let out = run_engine(&et, &ep, &at, &ap, ci_n, co_n, d, threads);
                 transpose01_output(out)
             }
@@ -221,22 +211,66 @@ impl ConvSpec {
                 let wt = qw.transpose01_flip23();
                 let wp = DecodedPlanes::of_threaded(&wt, threads);
                 let ep = DecodedPlanes::of_threaded(qe, threads);
-                let d = SpecDims {
-                    g_n: co_n,
-                    kh: self.kh,
-                    kw: self.kw,
-                    h: ho,
-                    wi: wo,
-                    ho: self.in_h,
-                    wo: self.in_w,
-                    stride: 1,
-                    dil: 1,
-                    ups: self.stride,
-                    pad_y: self.kh as isize - 1 - self.pad as isize,
-                    pad_x: self.kw as isize - 1 - self.pad as isize,
-                };
+                let d = self.dgrad_dims(co_n);
                 run_engine(&wt, &wp, qe, &ep, n_n, ci_n, d, threads)
             }
+        }
+    }
+
+    /// Engine geometry of the forward pass (`X = qW [Co, Ci, Kh, Kw]`,
+    /// `Y = qA [N, Ci, H, W]`).
+    pub(crate) fn forward_dims(&self, ci_n: usize) -> SpecDims {
+        SpecDims {
+            g_n: ci_n,
+            kh: self.kh,
+            kw: self.kw,
+            h: self.in_h,
+            wi: self.in_w,
+            ho: self.out_h(),
+            wo: self.out_w(),
+            stride: self.stride,
+            dil: 1,
+            ups: 1,
+            pad_y: self.pad as isize,
+            pad_x: self.pad as isize,
+        }
+    }
+
+    /// Engine geometry of the weight-gradient pass (`X = qE^T`,
+    /// `Y = qA^T`, batch as the reduction group).
+    pub(crate) fn wgrad_dims(&self, n_n: usize) -> SpecDims {
+        SpecDims {
+            g_n: n_n,
+            kh: self.out_h(),
+            kw: self.out_w(),
+            h: self.in_h,
+            wi: self.in_w,
+            ho: self.kh,
+            wo: self.kw,
+            stride: 1,
+            dil: self.stride,
+            ups: 1,
+            pad_y: self.pad as isize,
+            pad_x: self.pad as isize,
+        }
+    }
+
+    /// Engine geometry of the input-gradient pass (`X = qW^T` flipped,
+    /// `Y = qE` native, zero-upsampled by the forward stride).
+    pub(crate) fn dgrad_dims(&self, co_n: usize) -> SpecDims {
+        SpecDims {
+            g_n: co_n,
+            kh: self.kh,
+            kw: self.kw,
+            h: self.out_h(),
+            wi: self.out_w(),
+            ho: self.in_h,
+            wo: self.in_w,
+            stride: 1,
+            dil: 1,
+            ups: self.stride,
+            pad_y: self.kh as isize - 1 - self.pad as isize,
+            pad_x: self.kw as isize - 1 - self.pad as isize,
         }
     }
 }
@@ -246,15 +280,8 @@ impl ConvSpec {
 /// audit counters are layout-independent and carry through unchanged.
 fn transpose01_output(out: ConvOutput) -> ConvOutput {
     let [d0, d1, d2, d3] = out.shape;
-    let inner = d2 * d3;
     let mut z = vec![0.0f32; out.z.len()];
-    for i0 in 0..d0 {
-        for i1 in 0..d1 {
-            let src = (i0 * d1 + i1) * inner;
-            let dst = (i1 * d0 + i0) * inner;
-            z[dst..dst + inner].copy_from_slice(&out.z[src..src + inner]);
-        }
-    }
+    transpose01_copy(&out.z, d0, d1, d2 * d3, &mut z);
     ConvOutput {
         z,
         shape: [d1, d0, d2, d3],
@@ -263,6 +290,22 @@ fn transpose01_output(out: ConvOutput) -> ConvOutput {
         int_add_ops: out.int_add_ops,
         float_add_ops: out.float_add_ops,
         group_scale_ops: out.group_scale_ops,
+    }
+}
+
+/// Swap the two leading axes of a `[d0, d1, inner]` f32 buffer into a
+/// caller-owned destination (the arena-mode weight-gradient fixup reuses
+/// its destination across steps). `dst` must hold exactly
+/// `d0 * d1 * inner` elements; every one is overwritten.
+pub(crate) fn transpose01_copy(src: &[f32], d0: usize, d1: usize, inner: usize, dst: &mut [f32]) {
+    assert_eq!(src.len(), d0 * d1 * inner, "transpose01_copy: src shape mismatch");
+    assert_eq!(dst.len(), src.len(), "transpose01_copy: dst length mismatch");
+    for i0 in 0..d0 {
+        for i1 in 0..d1 {
+            let s = (i0 * d1 + i1) * inner;
+            let d = (i1 * d0 + i0) * inner;
+            dst[d..d + inner].copy_from_slice(&src[s..s + inner]);
+        }
     }
 }
 
@@ -338,19 +381,99 @@ pub(crate) fn run_engine(
     d: SpecDims,
     threads: usize,
 ) -> ConvOutput {
+    let kdim = d.g_n * d.kh * d.kw;
+    assert_eq!(xp.len(), v_n * kdim, "stationary planes do not match [V, G*Kh*Kw]");
+    let pw = pack::pack_weights(xp, v_n, kdim, threads);
+    let mut z = vec![0.0f32; u_n * v_n * d.ho * d.wo];
+    let audit = run_engine_view(
+        OperandView::of_tensor(x),
+        xp,
+        OperandView::of_tensor(y),
+        yp,
+        u_n,
+        v_n,
+        d,
+        threads,
+        &pw,
+        &mut z,
+    );
+    ConvOutput {
+        z,
+        shape: [u_n, v_n, d.ho, d.wo],
+        peak_acc_bits: audit.peak_acc_bits,
+        mul_ops: audit.mul_ops,
+        int_add_ops: audit.int_add_ops,
+        float_add_ops: audit.float_add_ops,
+        group_scale_ops: audit.group_scale_ops,
+    }
+}
+
+/// The scale metadata of one engine operand: the tensor scale plus the
+/// per-group scale codes the factor table is built from. Borrows from
+/// either an [`MlsTensor`] or a [`FusedQuant`] slot, so the arena path
+/// can drive the engine without ever materializing an element tensor.
+#[derive(Clone, Copy)]
+pub(crate) struct OperandView<'a> {
+    pub(crate) s_t: f32,
+    pub(crate) sg_exp: &'a [u8],
+    pub(crate) sg_man: &'a [u32],
+    pub(crate) fmt: EmFormat,
+}
+
+impl<'a> OperandView<'a> {
+    pub(crate) fn of_tensor(t: &'a MlsTensor) -> Self {
+        OperandView { s_t: t.s_t, sg_exp: &t.sg_exp, sg_man: &t.sg_man, fmt: t.cfg.element }
+    }
+
+    pub(crate) fn of_fused(q: &'a FusedQuant) -> Self {
+        OperandView { s_t: q.s_t, sg_exp: &q.sg_exp, sg_man: &q.sg_man, fmt: q.planes.fmt }
+    }
+}
+
+/// The five hardware-audit counters of one engine execution, for callers
+/// that own the output buffer (see [`run_engine_view`]).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub(crate) struct EngineAudit {
+    pub(crate) peak_acc_bits: u32,
+    pub(crate) mul_ops: u64,
+    pub(crate) int_add_ops: u64,
+    pub(crate) float_add_ops: u64,
+    pub(crate) group_scale_ops: u64,
+}
+
+/// Allocation-free core of [`run_engine`]: the stationary panels (`pw`)
+/// and the `[U, V, Ho, Wo]` output buffer (`z`, fully overwritten) are
+/// caller-owned, so the warm training step can reuse both across calls.
+/// Per-part peak/tap counters merge through atomics (max and sum are
+/// order-independent, so the merged values are bit-identical to the
+/// in-order fold the allocating driver used).
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn run_engine_view(
+    xv: OperandView,
+    xp: &DecodedPlanes,
+    yv: OperandView,
+    yp: &DecodedPlanes,
+    u_n: usize,
+    v_n: usize,
+    d: SpecDims,
+    threads: usize,
+    pw: &pack::PackedWeights,
+    z: &mut [f32],
+) -> EngineAudit {
     debug_assert!(d.ups == 1 || d.stride == 1, "strided AND upsampled is never needed");
-    assert_eq!(x.cfg.element, y.cfg.element, "operand formats must match");
-    assert_eq!(xp.fmt, x.cfg.element, "stationary planes decoded under a different format");
-    assert_eq!(yp.fmt, y.cfg.element, "gathered planes decoded under a different format");
-    let fmt = x.cfg.element;
-    let st = x.s_t * y.s_t;
+    assert_eq!(xv.fmt, yv.fmt, "operand formats must match");
+    assert_eq!(xp.fmt, xv.fmt, "stationary planes decoded under a different format");
+    assert_eq!(yp.fmt, yv.fmt, "gathered planes decoded under a different format");
+    let fmt = xv.fmt;
+    let st = xv.s_t * yv.s_t;
     let scale_log2 = 2 * fmt.emin() - 2 * fmt.m as i32;
     let g_n = d.g_n;
 
     let kdim = g_n * d.kh * d.kw;
     assert_eq!(xp.len(), v_n * kdim, "stationary planes do not match [V, G*Kh*Kw]");
     assert_eq!(yp.len(), u_n * g_n * d.h * d.wi, "gathered planes do not match [U, G, H, W]");
-    let pw = pack::pack_weights(xp, v_n, kdim, threads);
+    assert_eq!(pw.co_n, v_n, "packed panels do not match the stationary operand");
+    assert_eq!(pw.kdim, kdim, "packed panels do not match the reduction depth");
     // geometry-only half of the analytic tap count, hoisted out of the
     // per-row work (rows_ib * col_taps = a row's in-bounds window taps)
     let col_taps = gemm::col_taps(d);
@@ -359,12 +482,14 @@ pub(crate) fn run_engine(
     let level = crate::util::simd::active();
 
     let tile_len = d.ho * d.wo;
-    let mut z = vec![0.0f32; u_n * v_n * tile_len];
-    let writer = DisjointWriter::new(&mut z);
+    assert_eq!(z.len(), u_n * v_n * tile_len, "output buffer does not match [U, V, Ho, Wo]");
+    let writer = DisjointWriter::new(z);
+    let peak_acc = AtomicI64::new(0);
+    let taps_acc = AtomicU64::new(0);
     // work units are (u, oy) output rows: the im2col row panel is packed
     // once and reused by every output channel of that row
     let units = u_n * d.ho;
-    let parts = parallel::map_ranges(threads, units, |lo, hi| {
+    parallel::for_ranges(threads, units, |lo, hi| {
         pack::with_scratch(|scratch| {
             let mut peak: i64 = 0;
             let mut taps: u64 = 0;
@@ -381,32 +506,29 @@ pub(crate) fn run_engine(
                             let xg = v * g_n + g;
                             let yg = u * g_n + g;
                             scratch.factors.push(GroupScaleFactor::combine(
-                                x.sg_exp[xg],
-                                x.sg_man[xg],
-                                y.sg_exp[yg],
-                                y.sg_man[yg],
+                                xv.sg_exp[xg],
+                                xv.sg_man[xg],
+                                yv.sg_exp[yg],
+                                yv.sg_man[yg],
                             ));
                         }
                     }
                     last_u = u;
                 }
                 let (row_peak, rows_ib) = gemm::conv_row_packed(
-                    &pw, yp, scratch, u, oy, d, scale_log2, st, &writer, level,
+                    pw, yp, scratch, u, oy, d, scale_log2, st, &writer, level,
                 );
                 peak = peak.max(row_peak);
                 taps += rows_ib as u64 * col_taps;
             }
-            (peak, taps)
+            peak_acc.fetch_max(peak, Ordering::Relaxed);
+            taps_acc.fetch_add(taps, Ordering::Relaxed);
         })
     });
     drop(writer);
 
-    let mut peak: i64 = 0;
-    let mut taps = 0u64;
-    for (p, t) in parts {
-        peak = peak.max(p);
-        taps += t;
-    }
+    let peak = peak_acc.load(Ordering::Relaxed);
+    let taps = taps_acc.load(Ordering::Relaxed);
     let pixels = (u_n * v_n) as u64 * tile_len as u64;
     // same peak-bits semantics as the planar/legacy per-tile merge: any
     // processed (pixel, group) reports at least the 1-bit sign floor
@@ -415,9 +537,7 @@ pub(crate) fn run_engine(
     } else {
         64 - peak.unsigned_abs().leading_zeros() + 1
     };
-    ConvOutput {
-        z,
-        shape: [u_n, v_n, d.ho, d.wo],
+    EngineAudit {
         peak_acc_bits,
         mul_ops: taps * (v_n * g_n) as u64,
         int_add_ops: taps * (v_n * g_n) as u64,

@@ -429,6 +429,153 @@ unsafe fn quantize4_sse41(
     }
 }
 
+/// Whether the vector dequantize pass may run for this format at this
+/// level: `e <= 6` keeps every exponent code `<= 63` so `2^-code` can be
+/// assembled per lane as a normal f32 (`(127 - code) << 23`) and the
+/// subnormal-branch product `(man/2^M) * 2^emin >= 2^-86` stays normal;
+/// `m <= 23` keeps the mantissa exact under `cvtepi32_ps`.
+#[cfg_attr(not(target_arch = "x86_64"), allow(dead_code))]
+fn deq_eligible(fmt: EmFormat, level: Level) -> bool {
+    matches!(level, Level::Avx2 | Level::Sse41) && fmt.e <= 6 && fmt.m <= 23
+}
+
+/// Dequantize one contiguous run of elements sharing the hoisted scale
+/// `sg` (`= S_t * S_g`), appending to `out`. Bit-identical to the scalar
+/// per-element expression `sign as f32 * sg * fmt.decode(code, man)` at
+/// every dispatch level (the vector lane reproduces each scalar f32 op
+/// in the same order: `man/2^M`, the normal/subnormal decode branch as a
+/// branch-free select, then the two scale multiplies left to right).
+pub(super) fn dequantize_run(
+    level: Level,
+    sign: &[i8],
+    exp_code: &[u8],
+    man: &[u32],
+    sg: f32,
+    fmt: EmFormat,
+    out: &mut Vec<f32>,
+) {
+    let n = sign.len();
+    debug_assert_eq!(exp_code.len(), n);
+    debug_assert_eq!(man.len(), n);
+    let start = out.len();
+    out.resize(start + n, 0.0);
+    let dst = &mut out[start..];
+    let mut i = 0usize;
+    #[cfg(target_arch = "x86_64")]
+    if deq_eligible(fmt, level) {
+        let two_m = (1u32 << fmt.m) as f32;
+        let emin_pow = format::exp2i(fmt.emin());
+        match level {
+            Level::Avx2 => {
+                while i + 8 <= n {
+                    // SAFETY: 8 lanes readable/writable at i (loop
+                    // bound), AVX2 supported per the dispatch invariant
+                    unsafe {
+                        dequantize8_avx2(
+                            sign.as_ptr().add(i),
+                            exp_code.as_ptr().add(i),
+                            man.as_ptr().add(i),
+                            sg,
+                            two_m,
+                            emin_pow,
+                            dst.as_mut_ptr().add(i),
+                        )
+                    };
+                    i += 8;
+                }
+            }
+            Level::Sse41 => {
+                while i + 4 <= n {
+                    // SAFETY: 4 lanes readable/writable at i, SSE4.1
+                    // supported
+                    unsafe {
+                        dequantize4_sse41(
+                            sign.as_ptr().add(i),
+                            exp_code.as_ptr().add(i),
+                            man.as_ptr().add(i),
+                            sg,
+                            two_m,
+                            emin_pow,
+                            dst.as_mut_ptr().add(i),
+                        )
+                    };
+                    i += 4;
+                }
+            }
+            _ => {}
+        }
+    }
+    // scalar tail (and the whole run for ineligible formats/levels) —
+    // the exact op order of MlsTensor::dequantize_threaded
+    for k in i..n {
+        let xbar = fmt.decode(exp_code[k], man[k]);
+        dst[k] = sign[k] as f32 * sg * xbar;
+    }
+}
+
+/// One AVX2 vector of 8 elements through the branch-free decode lane.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn dequantize8_avx2(
+    sign: *const i8,
+    code: *const u8,
+    man: *const u32,
+    sg: f32,
+    two_m: f32,
+    emin_pow: f32,
+    out: *mut f32,
+) {
+    use core::arch::x86_64::*;
+    let sign_i = _mm256_cvtepi8_epi32(_mm_loadl_epi64(sign as *const __m128i));
+    let code_i = _mm256_cvtepu8_epi32(_mm_loadl_epi64(code as *const __m128i));
+    // exact: man <= 2^M - 1 <= 2^23 - 1 fits f32's mantissa
+    let man_f = _mm256_cvtepi32_ps(_mm256_loadu_si256(man as *const __m256i));
+    let frac = _mm256_div_ps(man_f, _mm256_set1_ps(two_m));
+    // normal candidate: (1 + man/2^M) * 2^-code, 2^-code assembled per
+    // lane (code <= 63 by the eligibility gate, so always normal)
+    let pow = _mm256_castsi256_ps(_mm256_slli_epi32::<23>(_mm256_sub_epi32(
+        _mm256_set1_epi32(127),
+        code_i,
+    )));
+    let normal = _mm256_mul_ps(_mm256_add_ps(_mm256_set1_ps(1.0), frac), pow);
+    // subnormal candidate: (man/2^M) * 2^emin
+    let sub = _mm256_mul_ps(frac, _mm256_set1_ps(emin_pow));
+    let is_sub = _mm256_castsi256_ps(_mm256_cmpeq_epi32(code_i, _mm256_setzero_si256()));
+    let xbar = _mm256_blendv_ps(normal, sub, is_sub);
+    // (sign * sg) * xbar — the scalar left-to-right multiply order
+    let sign_f = _mm256_cvtepi32_ps(sign_i);
+    let res = _mm256_mul_ps(_mm256_mul_ps(sign_f, _mm256_set1_ps(sg)), xbar);
+    _mm256_storeu_ps(out, res);
+}
+
+/// One SSE4.1 vector of 4 elements — same lane recipe at half width.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "sse4.1")]
+unsafe fn dequantize4_sse41(
+    sign: *const i8,
+    code: *const u8,
+    man: *const u32,
+    sg: f32,
+    two_m: f32,
+    emin_pow: f32,
+    out: *mut f32,
+) {
+    use core::arch::x86_64::*;
+    let sign_i = _mm_cvtepi8_epi32(_mm_cvtsi32_si128((sign as *const i32).read_unaligned()));
+    let code_i = _mm_cvtepu8_epi32(_mm_cvtsi32_si128((code as *const i32).read_unaligned()));
+    let man_f = _mm_cvtepi32_ps(_mm_loadu_si128(man as *const __m128i));
+    let frac = _mm_div_ps(man_f, _mm_set1_ps(two_m));
+    let pow =
+        _mm_castsi128_ps(_mm_slli_epi32::<23>(_mm_sub_epi32(_mm_set1_epi32(127), code_i)));
+    let normal = _mm_mul_ps(_mm_add_ps(_mm_set1_ps(1.0), frac), pow);
+    let sub = _mm_mul_ps(frac, _mm_set1_ps(emin_pow));
+    let is_sub = _mm_castsi128_ps(_mm_cmpeq_epi32(code_i, _mm_setzero_si128()));
+    let xbar = _mm_blendv_ps(normal, sub, is_sub);
+    let sign_f = _mm_cvtepi32_ps(sign_i);
+    let res = _mm_mul_ps(_mm_mul_ps(sign_f, _mm_set1_ps(sg)), xbar);
+    _mm_storeu_ps(out, res);
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -511,6 +658,47 @@ mod tests {
                                 got,
                                 want,
                                 "e{e}m{m} n={n} sg={sg} sr={use_offsets} level {}",
+                                level.name()
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// Run-level pin for the decode direction: the vector dequantize
+    /// path equals the scalar per-element expression bit for bit —
+    /// including the e=7 format that fails the eligibility gate and must
+    /// fall back to scalar — for every supported level.
+    #[test]
+    fn dequantize_run_matches_scalar_on_every_level() {
+        let mut rng = Pcg32::seeded(0xDE09);
+        let formats =
+            [(0u32, 4u32), (0, 2), (1, 1), (2, 1), (2, 4), (3, 4), (3, 0), (5, 2), (6, 3), (7, 0)];
+        for (e, m) in formats {
+            let fmt = EmFormat::new(e, m);
+            let code_hi = (1u32 << e) as u32; // codes in [0, 2^e - 1]
+            let man_hi = 1u32 << m;
+            for n in [1usize, 3, 4, 7, 8, 9, 64, 129] {
+                let sign: Vec<i8> =
+                    (0..n).map(|_| [(-1i8), 0, 1][rng.below(3) as usize]).collect();
+                let code: Vec<u8> = (0..n).map(|_| rng.below(code_hi) as u8).collect();
+                let man: Vec<u32> = (0..n).map(|_| rng.below(man_hi)).collect();
+                for sg in [1.0f32, 0.37, 2.5e-3] {
+                    let want: Vec<f32> = (0..n)
+                        .map(|k| sign[k] as f32 * sg * fmt.decode(code[k], man[k]))
+                        .collect();
+                    for level in Level::supported() {
+                        let mut got = vec![99.0f32]; // nonempty: append semantics
+                        dequantize_run(level, &sign, &code, &man, sg, fmt, &mut got);
+                        assert_eq!(got.len(), n + 1, "e{e}m{m} n={n}");
+                        assert_eq!(got[0], 99.0);
+                        for (k, (a, b)) in got[1..].iter().zip(&want).enumerate() {
+                            assert_eq!(
+                                a.to_bits(),
+                                b.to_bits(),
+                                "e{e}m{m} n={n} sg={sg} k={k} level {}",
                                 level.name()
                             );
                         }

@@ -268,13 +268,23 @@ pub fn quantize_threaded(
         })
         .concat()
     } else {
+        // strided (Second) groups still form contiguous runs of
+        // `inner = d2*d3` elements, each owned by one group, so the
+        // vector |max| reduce applies run-wise; folding run maxima into
+        // s_r in element order reproduces the per-element fold exactly
+        // (max over non-negative floats is order-independent and both
+        // paths ignore NaN)
+        let inner: usize = shape.iter().skip(2).product::<usize>().max(1);
         let mut s_r = vec![0.0f32; n_groups];
-        for (idx, &v) in x.iter().enumerate() {
+        let mut idx = 0usize;
+        while idx < n {
+            let end = (idx + inner).min(n);
             let g = cfg.grouping.group_of(shape, idx);
-            let a = v.abs();
+            let a = qsimd::abs_max(level, &x[idx..end]);
             if a > s_r[g] {
                 s_r[g] = a;
             }
+            idx = end;
         }
         s_r
     };
@@ -294,9 +304,10 @@ pub fn quantize_threaded(
     }
 
     // elements (lines 9-16) — per element, independent given its group
-    // scale. Contiguous groupings walk single-scale runs through the
-    // (possibly vectorized) qsimd::quantize_run; the strided Second
-    // grouping stays scalar per element.
+    // scale. Every grouping walks single-scale runs through the
+    // (possibly vectorized) qsimd::quantize_run: contiguous groupings
+    // chunk whole groups, the strided Second grouping chunks the
+    // contiguous inner blocks each group owns.
     let fmt = cfg.element;
     let run_offsets = |lo: usize, hi: usize| -> Option<&[f32]> {
         stochastic.then(|| &rounding_offsets[lo..hi])
@@ -353,18 +364,30 @@ pub fn quantize_threaded(
             (sv, cv, mv)
         })
     } else {
-        // strided groups: shard over flat element ranges instead
+        // strided (Second) groups: shard over flat element ranges, split
+        // at the inner-block run boundaries so each run shares one group
+        // scale and flows through the vector quantize kernel
+        let inner: usize = shape.iter().skip(2).product::<usize>().max(1);
         parallel::map_ranges(threads, n, |lo, hi| {
             let mut sv = Vec::with_capacity(hi - lo);
             let mut cv = Vec::with_capacity(hi - lo);
             let mut mv = Vec::with_capacity(hi - lo);
-            for (idx, &v) in x[lo..hi].iter().enumerate().map(|(o, v)| (lo + o, v)) {
+            let mut idx = lo;
+            while idx < hi {
+                let end = ((idx / inner + 1) * inner).min(hi);
                 let g = cfg.grouping.group_of(shape, idx);
-                let r = if stochastic { rounding_offsets[idx] } else { 0.0 };
-                let (s, c, m) = qsimd::quantize_one_scalar(v, sg_val[g], s_t_safe, fmt, r);
-                sv.push(s);
-                cv.push(c);
-                mv.push(m);
+                qsimd::quantize_run(
+                    level,
+                    &x[idx..end],
+                    run_offsets(idx, end),
+                    sg_val[g],
+                    s_t_safe,
+                    fmt,
+                    &mut sv,
+                    &mut cv,
+                    &mut mv,
+                );
+                idx = end;
             }
             (sv, cv, mv)
         })
@@ -398,6 +421,165 @@ pub fn fake_quant(x: &[f32], shape: &[usize], cfg: &QuantConfig, rounding_offset
     }
     let t = quantize(x, shape, cfg, rounding_offsets);
     t.dequantize()
+}
+
+/// Caller-owned output + scratch of the fused [`quantize_into_planes`]
+/// pass: a quantized tensor's conv-ready decoded element planes and
+/// stored group scales, produced WITHOUT the intermediate [`MlsTensor`]
+/// field arrays ever materializing. Every buffer is grow-only and reused
+/// across calls, so a warm trainer step pays no allocation here.
+pub struct FusedQuant {
+    /// decoded element planes (what the conv engine consumes)
+    pub planes: crate::arith::planes::DecodedPlanes,
+    /// per-group scale exponent codes (the group-scale epilogue inputs)
+    pub sg_exp: Vec<u8>,
+    /// per-group scale mantissas
+    pub sg_man: Vec<u32>,
+    /// tensor-wise scale (0 for the all-zero tensor, like [`MlsTensor::s_t`])
+    pub s_t: f32,
+    // group-pass and run-length field scratch, reused across calls
+    sg_val: Vec<f32>,
+    s_r: Vec<f32>,
+    sv: Vec<i8>,
+    cv: Vec<u8>,
+    mv: Vec<u32>,
+}
+
+impl Default for FusedQuant {
+    fn default() -> Self {
+        FusedQuant {
+            planes: crate::arith::planes::DecodedPlanes {
+                signed_frac: Vec::new(),
+                shift: Vec::new(),
+                scaled_frac: Vec::new(),
+                fmt: EmFormat::new(0, 0),
+            },
+            sg_exp: Vec::new(),
+            sg_man: Vec::new(),
+            sg_val: Vec::new(),
+            s_r: Vec::new(),
+            sv: Vec::new(),
+            cv: Vec::new(),
+            mv: Vec::new(),
+            s_t: 0.0,
+        }
+    }
+}
+
+impl FusedQuant {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+/// Fused quantize-into-planes: quantize `x` exactly like
+/// [`quantize_threaded`] would (same kernels, same group order, same
+/// rounding-offset consumption) but decode every element straight into
+/// [`crate::arith::planes::DecodedPlanes`] form, so the `MlsTensor`
+/// sign/exponent-code/mantissa arrays never exist. The per-element
+/// decode replicates [`crate::arith::planes::DecodedPlanes::of_threaded`]
+/// operation-for-operation, so
+/// `(out.planes, out.sg_exp, out.sg_man, out.s_t)` is bit-identical to
+/// `(t.decoded_planes(), t.sg_exp, t.sg_man, t.s_t)` for
+/// `t = quantize(x, ..)` — pinned by `quantize_into_planes_matches_unfused`.
+///
+/// Requires a contiguous grouping (`None`/`First`/`Both` — the trainer
+/// always quantizes `Both`). Serial by design: the conv the planes feed
+/// dominates the step, and a serial pass keeps the warm-step loop free
+/// of pool-dispatch allocations; the output is element-wise, so it is
+/// identical to the threaded unfused path regardless.
+pub fn quantize_into_planes(
+    x: &[f32],
+    shape: &[usize],
+    cfg: &QuantConfig,
+    rounding_offsets: &[f32],
+    out: &mut FusedQuant,
+) {
+    let n: usize = shape.iter().product::<usize>().max(1);
+    assert_eq!(x.len(), n, "shape/element mismatch");
+    let stochastic = cfg.rounding == Rounding::Stochastic;
+    if stochastic {
+        assert_eq!(rounding_offsets.len(), n, "need one rounding offset per element");
+    }
+    assert!(
+        !matches!(cfg.grouping, Grouping::Second),
+        "fused quantize requires contiguous scaling groups"
+    );
+    let fmt = cfg.element;
+    let emin = fmt.emin();
+    // same hard width guard as DecodedPlanes::of_threaded: the combined
+    // (M+1) + (2^E - 2) shifted-fraction width must fit i32
+    let smax: u32 = if fmt.e == 0 { 0 } else { (1u32 << fmt.e) - 2 };
+    assert!(
+        fmt.m + 1 + smax <= 31,
+        "element format <{},{}> too wide for the conv planes: (M+1) + (2^E - 2) = {} must be <= 31 bits",
+        fmt.e,
+        fmt.m,
+        fmt.m + 1 + smax
+    );
+    let n_groups = cfg.grouping.group_count(shape);
+    let group_len = cfg.grouping.group_len(shape);
+    let level = crate::util::simd::active();
+
+    // group maxima S_r and tensor max S_t — same kernel, same group order
+    // as the unfused path
+    out.s_r.clear();
+    for g in 0..n_groups {
+        out.s_r.push(qsimd::abs_max(level, &x[g * group_len..(g + 1) * group_len]));
+    }
+    let s_t = out.s_r.iter().cloned().fold(0.0f32, f32::max);
+    let s_t_safe = if s_t > 0.0 { s_t } else { 1.0 };
+    out.s_t = if s_t > 0.0 { s_t } else { 0.0 };
+
+    // group scales
+    out.sg_exp.clear();
+    out.sg_man.clear();
+    out.sg_val.clear();
+    for g in 0..n_groups {
+        let sgf = out.s_r[g] / s_t_safe;
+        let (c, m) = format::quantize_group_scale(sgf, cfg.group);
+        out.sg_exp.push(c);
+        out.sg_man.push(m);
+        out.sg_val.push(format::group_scale_value(c, m, cfg.group));
+    }
+
+    // elements: quantize each group run into the run-length field
+    // scratch, then decode straight into the planes
+    out.planes.fmt = fmt;
+    out.planes.signed_frac.clear();
+    out.planes.shift.clear();
+    out.planes.scaled_frac.clear();
+    out.planes.signed_frac.reserve(n);
+    out.planes.shift.reserve(n);
+    out.planes.scaled_frac.reserve(n);
+    for g in 0..n_groups {
+        let (base, end) = (g * group_len, (g + 1) * group_len);
+        out.sv.clear();
+        out.cv.clear();
+        out.mv.clear();
+        qsimd::quantize_run(
+            level,
+            &x[base..end],
+            stochastic.then(|| &rounding_offsets[base..end]),
+            out.sg_val[g],
+            s_t_safe,
+            fmt,
+            &mut out.sv,
+            &mut out.cv,
+            &mut out.mv,
+        );
+        for k in 0..group_len {
+            let (s, c, m) = (out.sv[k], out.cv[k], out.mv[k]);
+            // the exact Element::frac_int / exp_val decode of planes.rs
+            let frac = (if c >= 1 { m + (1u32 << fmt.m) } else { m }) as i32;
+            let f = s as i32 * frac;
+            let sh = (if c >= 1 { -(c as i32) - emin } else { 0 }) as u32;
+            debug_assert!(sh <= smax, "shift {sh} out of [0, {smax}]");
+            out.planes.signed_frac.push(f);
+            out.planes.shift.push(sh as u8);
+            out.planes.scaled_frac.push(f << sh);
+        }
+    }
 }
 
 #[cfg(test)]
@@ -524,6 +706,110 @@ mod tests {
             let bound = t.s_t * sg * 0.5 * 0.5f32.powi(cfg.element.m as i32);
             assert!((qi - xi).abs() <= bound + 1e-7, "idx {idx}: {xi} -> {qi}");
         }
+    }
+
+    /// The run-wise (vectorized) `Grouping::Second` path equals the
+    /// historical per-element scalar loop — maxima fold, stored group
+    /// scales, and every element field — for both rounding modes and
+    /// every thread count, at whatever dispatch level is active (CI runs
+    /// the suite under both `MLS_SIMD=auto` and `MLS_SIMD=off`).
+    #[test]
+    fn second_grouping_matches_per_element_reference() {
+        let shape = [3usize, 5, 4, 3];
+        let n: usize = shape.iter().product();
+        let mut rng = Pcg32::seeded(0x5EC);
+        let x = rng.normal_vec(n, 1.0);
+        let offsets = rng.rounding_offsets(n);
+        for rounding in Rounding::ALL {
+            let mut cfg = QuantConfig::new(2, 4);
+            cfg.grouping = Grouping::Second;
+            cfg.rounding = rounding;
+            let off: &[f32] = if rounding == Rounding::Stochastic { &offsets } else { &[] };
+            // scalar reference: the historical per-element fold + element loop
+            let n_groups = cfg.grouping.group_count(&shape);
+            let mut s_r = vec![0.0f32; n_groups];
+            for (idx, &v) in x.iter().enumerate() {
+                let g = cfg.grouping.group_of(&shape, idx);
+                let a = v.abs();
+                if a > s_r[g] {
+                    s_r[g] = a;
+                }
+            }
+            let s_t = s_r.iter().cloned().fold(0.0f32, f32::max);
+            let s_t_safe = if s_t > 0.0 { s_t } else { 1.0 };
+            let mut sg_exp = vec![0u8; n_groups];
+            let mut sg_man = vec![0u32; n_groups];
+            let mut sg_val = vec![0.0f32; n_groups];
+            for g in 0..n_groups {
+                let (c, m) = format::quantize_group_scale(s_r[g] / s_t_safe, cfg.group);
+                sg_exp[g] = c;
+                sg_man[g] = m;
+                sg_val[g] = format::group_scale_value(c, m, cfg.group);
+            }
+            for threads in [1usize, 2, 8] {
+                let t = quantize_threaded(&x, &shape, &cfg, off, threads);
+                let tag = format!("{} t{threads}", rounding.name());
+                assert_eq!(t.s_t.to_bits(), s_t.to_bits(), "{tag}: s_t");
+                assert_eq!(t.sg_exp, sg_exp, "{tag}: sg_exp");
+                assert_eq!(t.sg_man, sg_man, "{tag}: sg_man");
+                for idx in 0..n {
+                    let g = cfg.grouping.group_of(&shape, idx);
+                    let r = if rounding == Rounding::Stochastic { offsets[idx] } else { 0.0 };
+                    let (s, c, m) =
+                        qsimd::quantize_one_scalar(x[idx], sg_val[g], s_t_safe, cfg.element, r);
+                    assert_eq!(
+                        (t.sign[idx], t.exp_code[idx], t.man[idx]),
+                        (s, c, m),
+                        "{tag}: idx {idx}"
+                    );
+                }
+            }
+        }
+    }
+
+    /// The fused quantize-into-planes pass is bit-identical to quantize
+    /// followed by a separate plane decode — planes, group scales, and
+    /// tensor scale — for every contiguous grouping, format, and
+    /// rounding mode, with the output buffers reused across every
+    /// combination.
+    #[test]
+    fn quantize_into_planes_matches_unfused() {
+        let shape = [4usize, 3, 3, 3];
+        let n: usize = shape.iter().product();
+        let mut rng = Pcg32::seeded(0xF0D);
+        let x = rng.normal_vec(n, 1.0);
+        let offsets = rng.rounding_offsets(n);
+        let mut fused = FusedQuant::new();
+        for grouping in [Grouping::Both, Grouping::First, Grouping::None] {
+            for (e, m) in [(2u32, 4u32), (2, 1), (0, 2)] {
+                for rounding in Rounding::ALL {
+                    let cfg = QuantConfig {
+                        element: EmFormat::new(e, m),
+                        grouping,
+                        rounding,
+                        ..QuantConfig::default()
+                    };
+                    let off: &[f32] =
+                        if rounding == Rounding::Stochastic { &offsets } else { &[] };
+                    let t = quantize(&x, &shape, &cfg, off);
+                    let planes = t.decoded_planes();
+                    quantize_into_planes(&x, &shape, &cfg, off, &mut fused);
+                    let tag = format!("{} e{e}m{m} {}", grouping.name(), rounding.name());
+                    assert_eq!(fused.s_t.to_bits(), t.s_t.to_bits(), "{tag}: s_t");
+                    assert_eq!(fused.sg_exp, t.sg_exp, "{tag}: sg_exp");
+                    assert_eq!(fused.sg_man, t.sg_man, "{tag}: sg_man");
+                    assert_eq!(fused.planes.fmt, cfg.element, "{tag}: fmt");
+                    assert_eq!(fused.planes.signed_frac, planes.signed_frac, "{tag}: frac");
+                    assert_eq!(fused.planes.shift, planes.shift, "{tag}: shift");
+                    assert_eq!(fused.planes.scaled_frac, planes.scaled_frac, "{tag}: scaled");
+                }
+            }
+        }
+        // the all-zero tensor pins s_t = 0 exactly like the unfused path
+        let z = vec![0.0f32; n];
+        quantize_into_planes(&z, &shape, &QuantConfig::default(), &offsets, &mut fused);
+        assert_eq!(fused.s_t, 0.0);
+        assert!(fused.planes.signed_frac.iter().all(|&f| f == 0));
     }
 
     #[test]

@@ -69,6 +69,13 @@ impl MlsTensor {
     }
 
     /// [`Self::dequantize`] with an explicit worker count.
+    ///
+    /// Every grouping walks single-scale element runs through the
+    /// vectorized [`super::qsimd::dequantize_run`] kernel (bit-identical
+    /// to the scalar per-element decode at every dispatch level): the
+    /// contiguous groupings chunk whole groups; the strided `Second`
+    /// grouping still forms contiguous runs of `inner = d2*d3` elements
+    /// per group, so it runs the same kernel run-wise.
     pub fn dequantize_threaded(&self, threads: usize) -> Vec<f32> {
         let n = self.len();
         let mut sg_cache: Vec<f32> = (0..self.group_count()).map(|g| self.group_scale(g)).collect();
@@ -78,6 +85,10 @@ impl MlsTensor {
         for s in sg_cache.iter_mut() {
             *s = self.s_t * *s; // hoist s_t * s_g per group
         }
+        let fmt = self.cfg.element;
+        // dispatch level read once per call: every shard runs the same
+        // kernels (all levels are bit-identical anyway)
+        let level = crate::util::simd::active();
         let contiguous = !matches!(self.cfg.grouping, super::Grouping::Second);
         let parts: Vec<Vec<f32>> = if contiguous && self.group_count() >= threads {
             // contiguous groups: chunk-wise walk avoids per-element divides
@@ -85,35 +96,65 @@ impl MlsTensor {
             parallel::map_ranges(threads, self.group_count(), |lo, hi| {
                 let mut out = Vec::with_capacity((hi - lo) * group_len);
                 for g in lo..hi {
-                    let sg = sg_cache[g];
                     let base = g * group_len;
-                    for idx in base..base + group_len {
-                        let xbar = self.cfg.element.decode(self.exp_code[idx], self.man[idx]);
-                        out.push(self.sign[idx] as f32 * sg * xbar);
-                    }
+                    let end = base + group_len;
+                    super::qsimd::dequantize_run(
+                        level,
+                        &self.sign[base..end],
+                        &self.exp_code[base..end],
+                        &self.man[base..end],
+                        sg_cache[g],
+                        fmt,
+                        &mut out,
+                    );
                 }
                 out
             })
         } else if contiguous {
             // fewer groups than workers (e.g. Grouping::None): shard over
-            // flat element ranges, group of idx is idx / group_len
+            // flat element ranges, split at the group boundaries (the
+            // group of idx is idx / group_len)
             let group_len = self.cfg.grouping.group_len(&self.shape);
             parallel::map_ranges(threads, n, |lo, hi| {
                 let mut out = Vec::with_capacity(hi - lo);
-                for idx in lo..hi {
-                    let xbar = self.cfg.element.decode(self.exp_code[idx], self.man[idx]);
-                    out.push(self.sign[idx] as f32 * sg_cache[idx / group_len] * xbar);
+                let mut idx = lo;
+                while idx < hi {
+                    let g = idx / group_len;
+                    let end = ((g + 1) * group_len).min(hi);
+                    super::qsimd::dequantize_run(
+                        level,
+                        &self.sign[idx..end],
+                        &self.exp_code[idx..end],
+                        &self.man[idx..end],
+                        sg_cache[g],
+                        fmt,
+                        &mut out,
+                    );
+                    idx = end;
                 }
                 out
             })
         } else {
-            // strided groups: shard over flat element ranges instead
+            // strided (Second) groups: shard over flat element ranges,
+            // split at the inner-block boundaries so each run shares one
+            // group scale
+            let inner: usize = self.shape.iter().skip(2).product::<usize>().max(1);
             parallel::map_ranges(threads, n, |lo, hi| {
                 let mut out = Vec::with_capacity(hi - lo);
-                for idx in lo..hi {
+                let mut idx = lo;
+                while idx < hi {
+                    let end = ((idx / inner + 1) * inner).min(hi);
                     let g = self.cfg.grouping.group_of(&self.shape, idx);
-                    let xbar = self.cfg.element.decode(self.exp_code[idx], self.man[idx]);
-                    out.push(self.sign[idx] as f32 * sg_cache[g] * xbar);
+                    super::qsimd::dequantize_run(
+                        level,
+                        &self.sign[idx..end],
+                        &self.exp_code[idx..end],
+                        &self.man[idx..end],
+                        sg_cache[g],
+                        fmt,
+                        &mut out,
+                    );
+                    idx = end;
                 }
                 out
             })
@@ -235,6 +276,40 @@ mod tests {
         let q = t.dequantize();
         for idx in 0..t.len() {
             assert_eq!(q[idx], t.value(idx));
+        }
+    }
+
+    /// The run-wise (vectorized) dequantize equals the per-element
+    /// scalar expression bit for bit, for every grouping — including the
+    /// strided `Second` — and every thread count.
+    #[test]
+    fn dequantize_is_bit_stable_for_every_grouping_and_thread_count() {
+        use crate::mls::Grouping;
+        let shape = [3usize, 5, 4, 3];
+        let mut rng = Pcg32::seeded(0x0DE);
+        let x = rng.normal_vec(shape.iter().product(), 1.0);
+        for grouping in Grouping::ALL {
+            let mut cfg = QuantConfig::new(2, 4);
+            cfg.grouping = grouping;
+            let t = quantize(&x, &shape, &cfg, &rng.rounding_offsets(x.len()));
+            let want: Vec<f32> = (0..t.len())
+                .map(|idx| {
+                    let g = grouping.group_of(&shape, idx);
+                    let xbar = t.cfg.element.decode(t.exp_code[idx], t.man[idx]);
+                    t.sign[idx] as f32 * (t.s_t * t.group_scale(g)) * xbar
+                })
+                .collect();
+            for threads in [1usize, 2, 8] {
+                let got = t.dequantize_threaded(threads);
+                for (idx, (a, b)) in got.iter().zip(&want).enumerate() {
+                    assert_eq!(
+                        a.to_bits(),
+                        b.to_bits(),
+                        "{} t{threads} idx {idx}",
+                        grouping.name()
+                    );
+                }
+            }
         }
     }
 

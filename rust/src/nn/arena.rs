@@ -1,0 +1,476 @@
+//! Step-owned memory for the zero-alloc steady-state training step.
+//!
+//! [`StepArena`] owns every buffer the train-step loop needs: an
+//! exact-size-class pool for the transient `f32`/`bool` tensors, the
+//! graph value/gradient slot tables, and one [`ConvSlots`] per node
+//! holding the persistent quantized operands (decoded element planes,
+//! group scales, packed weight panels) of the low-bit convolutions.
+//!
+//! The lifecycle is warm-up-on-first-step: step 1 runs with an empty
+//! pool and allocates each buffer once (a take that misses falls back
+//! to the heap); every buffer is recycled by the end of the step, so
+//! step 2 onward replays the identical take/recycle sequence entirely
+//! from the pool. After [`StepArena::end_step`] flips the pool into
+//! strict mode, a pool miss is a bug — the step shape changed — and
+//! panics with the dispatch label of the offending section instead of
+//! silently re-allocating.
+//!
+//! [`StepMem`] is how the executor sees all this: `Heap` preserves the
+//! historical allocate-and-drop behavior bit-for-bit (it is the
+//! bit-identity anchor), `Arena` routes the same requests through the
+//! pool. Both variants hand out zero-filled buffers, so the executor
+//! code is identical under either.
+
+use crate::arith::pack::PackedWeights;
+use crate::arith::planes::DecodedPlanes;
+use crate::mls::quantizer::FusedQuant;
+use crate::mls::EmFormat;
+use crate::nn::graph::{Feat, Graph, Op};
+use crate::util::parallel;
+
+/// Exact-size-class free lists for one element type. `classes` is kept
+/// sorted by buffer length so take/recycle are a binary search plus a
+/// push/pop — no allocation once every class seen in the warm-up step
+/// has been registered.
+struct SizeClasses<T> {
+    classes: Vec<(usize, Vec<Vec<T>>)>,
+}
+
+impl<T: Copy> SizeClasses<T> {
+    fn new() -> Self {
+        SizeClasses {
+            classes: Vec::new(),
+        }
+    }
+
+    /// Pop a pooled buffer of exactly `len` elements, reset to `zero`.
+    /// A miss allocates fresh — unless `strict`, where it panics: after
+    /// warm-up every take must hit the pool.
+    fn take(&mut self, len: usize, zero: T, strict: bool, kind: &str) -> Vec<T> {
+        if len == 0 {
+            return Vec::new();
+        }
+        if let Ok(i) = self.classes.binary_search_by_key(&len, |c| c.0) {
+            if let Some(mut v) = self.classes[i].1.pop() {
+                v.fill(zero);
+                return v;
+            }
+        }
+        if strict {
+            strict_miss(kind, len);
+        }
+        vec![zero; len]
+    }
+
+    /// Return a buffer to its size class (registered on first sight).
+    fn recycle(&mut self, v: Vec<T>) {
+        if v.is_empty() {
+            return;
+        }
+        match self.classes.binary_search_by_key(&v.len(), |c| c.0) {
+            Ok(i) => self.classes[i].1.push(v),
+            Err(i) => self.classes.insert(i, (v.len(), vec![v])),
+        }
+    }
+}
+
+#[cold]
+#[inline(never)]
+fn strict_miss(kind: &str, len: usize) -> ! {
+    let site = parallel::current_label().unwrap_or_else(|| "unlabeled step section".to_string());
+    panic!(
+        "step arena: no pooled {kind} buffer of {len} elements in strict (warm) mode at `{site}`; \
+         after the warm-up step the step shape must stay fixed (same batch size, model, \
+         quantization config, and thread count)"
+    );
+}
+
+/// The transient-buffer pool of a [`StepArena`].
+struct BufPool {
+    f32s: SizeClasses<f32>,
+    bools: SizeClasses<bool>,
+    /// set after the warm-up step: a pool miss becomes a panic
+    strict: bool,
+}
+
+impl BufPool {
+    fn new() -> Self {
+        BufPool {
+            f32s: SizeClasses::new(),
+            bools: SizeClasses::new(),
+            strict: false,
+        }
+    }
+
+    fn take_f32(&mut self, len: usize) -> Vec<f32> {
+        self.f32s.take(len, 0.0, self.strict, "f32")
+    }
+
+    fn recycle_f32(&mut self, v: Vec<f32>) {
+        self.f32s.recycle(v);
+    }
+
+    fn take_bool(&mut self, len: usize) -> Vec<bool> {
+        self.bools.take(len, false, self.strict, "bool")
+    }
+
+    fn recycle_bool(&mut self, v: Vec<bool>) {
+        self.bools.recycle(v);
+    }
+}
+
+/// Persistent per-node quantized-conv storage: the step-`i` quantized
+/// operands of one low-bit convolution, plus the transposed plane /
+/// group-scale relayouts and packed panels its backward passes need.
+/// Everything is grow-only `Vec` scratch inside, so after the warm-up
+/// step refilling these allocates nothing.
+pub(crate) struct ConvSlots {
+    /// quantized weights (packed once per step, reused by forward+dgrad)
+    pub(crate) qw: FusedQuant,
+    /// quantized activations
+    pub(crate) qa: FusedQuant,
+    /// quantized output error
+    pub(crate) qe: FusedQuant,
+    /// `qw` relayout for dgrad: transpose01 + kernel flip of the planes
+    pub(crate) wt_planes: DecodedPlanes,
+    pub(crate) wt_sg_exp: Vec<u8>,
+    pub(crate) wt_sg_man: Vec<u32>,
+    /// `qe` relayout for wgrad (the stationary operand)
+    pub(crate) et_planes: DecodedPlanes,
+    pub(crate) et_sg_exp: Vec<u8>,
+    pub(crate) et_sg_man: Vec<u32>,
+    /// `qa` relayout for wgrad (the gathered operand)
+    pub(crate) at_planes: DecodedPlanes,
+    pub(crate) at_sg_exp: Vec<u8>,
+    pub(crate) at_sg_man: Vec<u32>,
+    /// packed stationary panels, one per pass
+    pub(crate) pw_fwd: PackedWeights,
+    pub(crate) pw_wgrad: PackedWeights,
+    pub(crate) pw_dgrad: PackedWeights,
+    /// pre-built dispatch labels so the warm loop never formats
+    pub(crate) label_fwd: String,
+    pub(crate) label_wgrad: String,
+    pub(crate) label_dgrad: String,
+}
+
+fn empty_planes() -> DecodedPlanes {
+    DecodedPlanes {
+        signed_frac: Vec::new(),
+        shift: Vec::new(),
+        scaled_frac: Vec::new(),
+        fmt: EmFormat::new(0, 0),
+    }
+}
+
+impl Default for ConvSlots {
+    fn default() -> Self {
+        ConvSlots {
+            qw: FusedQuant::new(),
+            qa: FusedQuant::new(),
+            qe: FusedQuant::new(),
+            wt_planes: empty_planes(),
+            wt_sg_exp: Vec::new(),
+            wt_sg_man: Vec::new(),
+            et_planes: empty_planes(),
+            et_sg_exp: Vec::new(),
+            et_sg_man: Vec::new(),
+            at_planes: empty_planes(),
+            at_sg_exp: Vec::new(),
+            at_sg_man: Vec::new(),
+            pw_fwd: PackedWeights::default(),
+            pw_wgrad: PackedWeights::default(),
+            pw_dgrad: PackedWeights::default(),
+            label_fwd: String::new(),
+            label_wgrad: String::new(),
+            label_dgrad: String::new(),
+        }
+    }
+}
+
+/// forward / wgrad / dgrad pass indices for [`StepArena::conv_label`].
+pub(crate) const PASS_FORWARD: usize = 0;
+pub(crate) const PASS_WGRAD: usize = 1;
+pub(crate) const PASS_DGRAD: usize = 2;
+
+/// Every buffer one training step needs, owned across steps.
+pub struct StepArena {
+    pool: BufPool,
+    /// one slot per graph node (non-conv nodes keep an empty default)
+    pub(crate) convs: Vec<ConvSlots>,
+    /// graph value slots + remaining-use counts (executor forward)
+    pub(crate) vals: Vec<Option<Feat>>,
+    pub(crate) uses: Vec<usize>,
+    /// gradient slots (executor backward)
+    pub(crate) gslots: Vec<Option<Vec<f32>>>,
+    /// stochastic-rounding offset scratch, shared by every quantize
+    pub(crate) offsets: Vec<f32>,
+}
+
+impl StepArena {
+    /// Size the per-node storage (and pre-format the dispatch labels)
+    /// from the lowered graph. Transient buffers are warm-up-sized: the
+    /// first step through the executor allocates them, later steps
+    /// replay the same take/recycle sequence from the pool.
+    pub fn for_graph(g: &Graph) -> StepArena {
+        let convs = g
+            .nodes
+            .iter()
+            .map(|node| {
+                let mut cs = ConvSlots::default();
+                if matches!(node.op, Op::Conv(_)) {
+                    cs.label_fwd = format!("{}:forward", node.name);
+                    cs.label_wgrad = format!("{}:wgrad", node.name);
+                    cs.label_dgrad = format!("{}:dgrad", node.name);
+                }
+                cs
+            })
+            .collect();
+        StepArena {
+            pool: BufPool::new(),
+            convs,
+            vals: Vec::new(),
+            uses: Vec::new(),
+            gslots: Vec::new(),
+            offsets: Vec::new(),
+        }
+    }
+
+    /// Mark warm-up done: from here on a pool miss panics instead of
+    /// allocating. Idempotent; call at the end of every step.
+    pub fn end_step(&mut self) {
+        self.pool.strict = true;
+    }
+
+    /// The pre-formatted dispatch label of conv node `node`, pass
+    /// [`PASS_FORWARD`]/[`PASS_WGRAD`]/[`PASS_DGRAD`].
+    pub(crate) fn conv_label(&self, node: usize, pass: usize) -> &str {
+        let cs = &self.convs[node];
+        match pass {
+            PASS_FORWARD => &cs.label_fwd,
+            PASS_WGRAD => &cs.label_wgrad,
+            _ => &cs.label_dgrad,
+        }
+    }
+}
+
+/// How the executor obtains and releases step-transient buffers.
+///
+/// `Heap` reproduces the historical behavior exactly: takes are fresh
+/// zeroed allocations, recycles are drops. `Arena` serves the same
+/// requests from a [`StepArena`]. Values are identical either way —
+/// only the allocation behavior differs.
+pub enum StepMem<'a> {
+    Heap,
+    Arena(&'a mut StepArena),
+}
+
+impl StepMem<'_> {
+    pub(crate) fn is_arena(&self) -> bool {
+        matches!(self, StepMem::Arena(_))
+    }
+
+    /// A zero-filled `f32` buffer of exactly `len` elements.
+    pub(crate) fn take_f32(&mut self, len: usize) -> Vec<f32> {
+        match self {
+            StepMem::Heap => vec![0.0; len],
+            StepMem::Arena(a) => a.pool.take_f32(len),
+        }
+    }
+
+    pub(crate) fn recycle_f32(&mut self, v: Vec<f32>) {
+        match self {
+            StepMem::Heap => drop(v),
+            StepMem::Arena(a) => a.pool.recycle_f32(v),
+        }
+    }
+
+    /// A `false`-filled `bool` buffer of exactly `len` elements.
+    pub(crate) fn take_bool(&mut self, len: usize) -> Vec<bool> {
+        match self {
+            StepMem::Heap => vec![false; len],
+            StepMem::Arena(a) => a.pool.take_bool(len),
+        }
+    }
+
+    pub(crate) fn recycle_bool(&mut self, v: Vec<bool>) {
+        match self {
+            StepMem::Heap => drop(v),
+            StepMem::Arena(a) => a.pool.recycle_bool(v),
+        }
+    }
+
+    /// The forward value-slot tables: `n_vals` empty slots plus zeroed
+    /// use counts. Arena mode reuses the persistent tables.
+    pub(crate) fn take_graph_slots(&mut self, n_vals: usize) -> (Vec<Option<Feat>>, Vec<usize>) {
+        match self {
+            StepMem::Heap => (vec![None; n_vals], vec![0; n_vals]),
+            StepMem::Arena(a) => {
+                let mut vals = std::mem::take(&mut a.vals);
+                vals.clear();
+                vals.resize_with(n_vals, || None);
+                let mut uses = std::mem::take(&mut a.uses);
+                uses.clear();
+                uses.resize(n_vals, 0);
+                (vals, uses)
+            }
+        }
+    }
+
+    /// Return the value-slot tables, sweeping any residual features
+    /// (e.g. values an eval-style walk never consumed) into the pool.
+    pub(crate) fn put_graph_slots(&mut self, mut vals: Vec<Option<Feat>>, uses: Vec<usize>) {
+        match self {
+            StepMem::Heap => {}
+            StepMem::Arena(a) => {
+                for slot in vals.iter_mut() {
+                    if let Some(f) = slot.take() {
+                        a.pool.recycle_f32(f.data);
+                    }
+                }
+                a.vals = vals;
+                a.uses = uses;
+            }
+        }
+    }
+
+    /// The backward gradient-slot table: `n_vals` empty slots.
+    pub(crate) fn take_grad_slots(&mut self, n_vals: usize) -> Vec<Option<Vec<f32>>> {
+        match self {
+            StepMem::Heap => vec![None; n_vals],
+            StepMem::Arena(a) => {
+                let mut g = std::mem::take(&mut a.gslots);
+                g.clear();
+                g.resize_with(n_vals, || None);
+                g
+            }
+        }
+    }
+
+    /// Return the gradient-slot table, recycling residual gradients
+    /// (the input slot's gradient is never consumed).
+    pub(crate) fn put_grad_slots(&mut self, mut gslots: Vec<Option<Vec<f32>>>) {
+        match self {
+            StepMem::Heap => {}
+            StepMem::Arena(a) => {
+                for slot in gslots.iter_mut() {
+                    if let Some(v) = slot.take() {
+                        a.pool.recycle_f32(v);
+                    }
+                }
+                a.gslots = gslots;
+            }
+        }
+    }
+
+    /// Detach node `i`'s conv storage for the duration of one pass
+    /// (the executor needs it and the pool borrowed simultaneously).
+    /// Arena-only: the heap path keeps per-step quantized tensors.
+    pub(crate) fn take_conv_slots(&mut self, i: usize) -> ConvSlots {
+        match self {
+            StepMem::Heap => unreachable!("conv slots are arena-only"),
+            StepMem::Arena(a) => std::mem::take(&mut a.convs[i]),
+        }
+    }
+
+    pub(crate) fn put_conv_slots(&mut self, i: usize, cs: ConvSlots) {
+        match self {
+            StepMem::Heap => unreachable!("conv slots are arena-only"),
+            StepMem::Arena(a) => a.convs[i] = cs,
+        }
+    }
+
+    /// The shared stochastic-rounding offset scratch.
+    pub(crate) fn take_offsets(&mut self) -> Vec<f32> {
+        match self {
+            StepMem::Heap => Vec::new(),
+            StepMem::Arena(a) => std::mem::take(&mut a.offsets),
+        }
+    }
+
+    pub(crate) fn put_offsets(&mut self, off: Vec<f32>) {
+        match self {
+            StepMem::Heap => {}
+            StepMem::Arena(a) => a.offsets = off,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn recycle_then_take_reuses_the_buffer_zeroed() {
+        let mut p = BufPool::new();
+        let mut v = p.take_f32(16);
+        v.iter_mut().for_each(|x| *x = 3.5);
+        let ptr = v.as_ptr();
+        p.recycle_f32(v);
+        let w = p.take_f32(16);
+        assert_eq!(w.as_ptr(), ptr, "same-size take must reuse the pooled buffer");
+        assert!(w.iter().all(|&x| x == 0.0), "pooled buffers are handed out zeroed");
+    }
+
+    #[test]
+    fn non_strict_miss_allocates_fresh() {
+        let mut p = BufPool::new();
+        let v = p.take_f32(8);
+        p.recycle_f32(v);
+        let w = p.take_f32(24); // unseen size class
+        assert_eq!(w.len(), 24);
+        assert!(w.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    #[should_panic(expected = "strict (warm) mode")]
+    fn strict_miss_panics() {
+        let mut p = BufPool::new();
+        p.strict = true;
+        let _ = p.take_f32(8);
+    }
+
+    #[test]
+    #[should_panic(expected = "conv3:wgrad")]
+    fn strict_miss_names_the_dispatch_label() {
+        let mut p = BufPool::new();
+        p.strict = true;
+        parallel::with_label("conv3:wgrad", || {
+            let _ = p.take_f32(8);
+        });
+    }
+
+    #[test]
+    fn bool_pool_round_trips() {
+        let mut p = BufPool::new();
+        let mut v = p.take_bool(5);
+        v[3] = true;
+        let ptr = v.as_ptr();
+        p.recycle_bool(v);
+        let w = p.take_bool(5);
+        assert_eq!(w.as_ptr(), ptr);
+        assert!(w.iter().all(|&x| !x));
+    }
+
+    #[test]
+    fn zero_len_takes_are_free() {
+        let mut p = BufPool::new();
+        p.strict = true; // a zero-length take never consults the pool
+        assert!(p.take_f32(0).is_empty());
+        p.recycle_f32(Vec::new());
+    }
+
+    #[test]
+    fn size_classes_stay_sorted_and_exact() {
+        let mut p = BufPool::new();
+        for len in [32usize, 8, 16, 8] {
+            let v = p.take_f32(len);
+            p.recycle_f32(v);
+        }
+        assert!(p.f32s.classes.windows(2).all(|w| w[0].0 < w[1].0));
+        // an exact-size take drains only its own class
+        let _ = p.take_f32(16);
+        let sizes: Vec<usize> = p.f32s.classes.iter().map(|c| c.0).collect();
+        assert_eq!(sizes, vec![8, 16, 32]);
+        assert!(p.f32s.classes[1].1.is_empty());
+    }
+}

@@ -46,10 +46,12 @@ use std::collections::BTreeMap;
 
 use anyhow::{bail, ensure, Result};
 
-use crate::arith::conv::{conv2d_f32_dgrad, conv2d_f32_threaded, conv2d_f32_wgrad, ConvOutput};
-use crate::arith::spec::ConvSpec;
-use crate::mls::quantizer::{quantize, QuantConfig, Rounding};
+use crate::arith::conv::{conv2d_f32_dgrad_into, conv2d_f32_into, conv2d_f32_wgrad_into, ConvOutput};
+use crate::arith::spec::{self, ConvSpec, OperandView};
+use crate::arith::{pack, planes};
+use crate::mls::quantizer::{quantize, quantize_into_planes, QuantConfig, Rounding};
 use crate::mls::MlsTensor;
+use crate::nn::arena::{StepMem, PASS_DGRAD, PASS_FORWARD, PASS_WGRAD};
 use crate::nn::zoo::{Layer, Network};
 use crate::util::json::Json;
 use crate::util::parallel::with_label;
@@ -89,6 +91,15 @@ impl PassCounters {
         self.float_add_ops += out.float_add_ops;
         self.group_scale_ops += out.group_scale_ops;
         self.peak_acc_bits = self.peak_acc_bits.max(out.peak_acc_bits);
+    }
+
+    pub(crate) fn absorb_engine(&mut self, a: &spec::EngineAudit) {
+        self.convs += 1;
+        self.mul_ops += a.mul_ops;
+        self.int_add_ops += a.int_add_ops;
+        self.float_add_ops += a.float_add_ops;
+        self.group_scale_ops += a.group_scale_ops;
+        self.peak_acc_bits = self.peak_acc_bits.max(a.peak_acc_bits);
     }
 
     pub(crate) fn merge(&mut self, other: &PassCounters) {
@@ -326,6 +337,27 @@ impl Graph {
         out
     }
 
+    /// [`Self::state`] into a caller-owned buffer (cleared first), so the
+    /// warm train-step loop reuses one state vector across steps.
+    pub fn state_into(&self, out: &mut Vec<f32>) {
+        out.clear();
+        out.reserve(self.state_len());
+        for n in &self.nodes {
+            match &n.op {
+                Op::Conv(c) => out.extend_from_slice(&c.w),
+                Op::BatchNorm(b) => {
+                    out.extend_from_slice(&b.gamma);
+                    out.extend_from_slice(&b.beta);
+                }
+                Op::Fc(f) => {
+                    out.extend_from_slice(&f.w);
+                    out.extend_from_slice(&f.b);
+                }
+                _ => {}
+            }
+        }
+    }
+
     /// Load a flat state vector written by [`Self::state`].
     pub fn load_state(&mut self, state: &[f32]) -> Result<()> {
         ensure!(
@@ -408,11 +440,11 @@ pub struct Tape {
 
 /// One feature-map value flowing through the graph.
 #[derive(Clone)]
-struct Feat {
-    data: Vec<f32>,
-    c: usize,
-    h: usize,
-    w: usize,
+pub(crate) struct Feat {
+    pub(crate) data: Vec<f32>,
+    pub(crate) c: usize,
+    pub(crate) h: usize,
+    pub(crate) w: usize,
 }
 
 /// Quantize under `cfg`, drawing stochastic-rounding offsets from `rng`
@@ -432,24 +464,61 @@ fn quantize_dyn(x: &[f32], shape: &[usize], cfg: &QuantConfig, rng: Option<&mut 
     }
 }
 
-/// Consume one input value: moved into its last consumer, cloned for
+/// [`quantize_dyn`]'s rounding-offset rule without the quantize: draw the
+/// offsets into `out` (training) or fall back to nearest rounding (no
+/// RNG), returning the effective config. The arena forward/backward pair
+/// this with [`quantize_into_planes`], consuming the RNG stream in the
+/// exact order the heap path's [`quantize_dyn`] calls do.
+fn offsets_dyn(
+    cfg: &QuantConfig,
+    rng: Option<&mut Pcg32>,
+    n: usize,
+    out: &mut Vec<f32>,
+) -> QuantConfig {
+    match (cfg.rounding, rng) {
+        (Rounding::Stochastic, Some(rng)) => {
+            rng.rounding_offsets_into(out, n);
+            *cfg
+        }
+        (Rounding::Stochastic, None) => {
+            out.clear();
+            QuantConfig { rounding: Rounding::Nearest, ..*cfg }
+        }
+        (Rounding::Nearest, _) => {
+            out.clear();
+            *cfg
+        }
+    }
+}
+
+/// Consume one input value: moved into its last consumer, copied for
 /// earlier consumers at a residual fan-out. Chains therefore move every
-/// buffer, exactly like the historical trainer.
-fn take_val(vals: &mut [Option<Feat>], uses: &mut [usize], vid: ValueId, who: &str) -> Feat {
+/// buffer, exactly like the historical trainer; the fan-out copy goes
+/// through `mem` so the warm arena step reuses a pooled buffer.
+fn take_val(
+    mem: &mut StepMem,
+    vals: &mut [Option<Feat>],
+    uses: &mut [usize],
+    vid: ValueId,
+    who: &str,
+) -> Feat {
     assert!(uses[vid] > 0, "{who}: value {vid} over-consumed");
     uses[vid] -= 1;
     let slot = &mut vals[vid];
     if uses[vid] == 0 {
         slot.take().unwrap_or_else(|| panic!("{who}: value {vid} missing"))
     } else {
-        slot.clone().unwrap_or_else(|| panic!("{who}: value {vid} missing"))
+        let f = slot.as_ref().unwrap_or_else(|| panic!("{who}: value {vid} missing"));
+        let mut data = mem.take_f32(f.data.len());
+        data.copy_from_slice(&f.data);
+        Feat { data, c: f.c, h: f.h, w: f.w }
     }
 }
 
 /// Accumulate a gradient contribution into a value's gradient slot: the
 /// first contribution moves, later ones add element-wise (residual
-/// fan-in).
-fn accumulate(slot: &mut Option<Vec<f32>>, dx: Vec<f32>) {
+/// fan-in) and the spent buffer returns to `mem`.
+fn accumulate(mem: &mut StepMem, slot: &mut Option<Vec<f32>>, dx: Vec<f32>) {
     match slot {
         None => *slot = Some(dx),
         Some(acc) => {
@@ -457,6 +526,42 @@ fn accumulate(slot: &mut Option<Vec<f32>>, dx: Vec<f32>) {
             for (a, d) in acc.iter_mut().zip(&dx) {
                 *a += *d;
             }
+            mem.recycle_f32(dx);
+        }
+    }
+}
+
+/// Claim the audit record for the next quantized conv of this forward
+/// pass: appended on first sight (warm-up / fresh audits), reset in place
+/// when the audit stream is persistent across steps (arena mode).
+fn layer_slot(audit: &mut StepAudit, cursor: &mut usize, node: usize, name: &str) -> usize {
+    let i = *cursor;
+    *cursor += 1;
+    if i == audit.layers.len() {
+        audit.layers.push(LayerAudit { node, name: name.to_string(), ..Default::default() });
+    } else {
+        let la = &mut audit.layers[i];
+        debug_assert_eq!(la.node, node, "audit stream shape changed across steps");
+        la.forward = PassCounters::default();
+        la.wgrad = PassCounters::default();
+        la.dgrad = PassCounters::default();
+    }
+    i
+}
+
+/// Run `f` under the conv node's dispatch label: arena mode borrows the
+/// pre-formatted label (no allocation in the warm loop), heap mode
+/// formats it like the historical code.
+fn with_conv_label<R>(mem: &StepMem, i: usize, pass: usize, name: &str, f: impl FnOnce() -> R) -> R {
+    match mem {
+        StepMem::Arena(a) => with_label(a.conv_label(i, pass), f),
+        StepMem::Heap => {
+            let pass_name = match pass {
+                PASS_FORWARD => "forward",
+                PASS_WGRAD => "wgrad",
+                _ => "dgrad",
+            };
+            with_label(&format!("{name}:{pass_name}"), f)
         }
     }
 }
@@ -481,30 +586,49 @@ impl Executor<'_> {
         &self,
         images: &[f32],
         n: usize,
+        rng: Option<&mut Pcg32>,
+        tape: Option<&mut Tape>,
+        audit: &mut StepAudit,
+    ) -> Vec<f32> {
+        self.forward_mem(images, n, rng, tape, audit, &mut StepMem::Heap)
+    }
+
+    /// [`Self::forward`] with explicit step memory: `StepMem::Heap`
+    /// reproduces the historical allocate-per-step behavior bit-for-bit;
+    /// `StepMem::Arena` serves every buffer from the step arena and
+    /// quantizes convs straight into their persistent plane slots
+    /// (identical values — pinned by `rust/tests/zero_alloc.rs`).
+    pub(crate) fn forward_mem(
+        &self,
+        images: &[f32],
+        n: usize,
         mut rng: Option<&mut Pcg32>,
         mut tape: Option<&mut Tape>,
         audit: &mut StepAudit,
+        mem: &mut StepMem,
     ) -> Vec<f32> {
         let g = self.graph;
         let (c0, h0, w0) = g.input;
         assert_eq!(images.len(), n * c0 * h0 * w0, "image batch shape mismatch");
         let n_vals = g.nodes.len() + 1;
-        let mut uses = vec![0usize; n_vals];
+        let (mut vals, mut uses) = mem.take_graph_slots(n_vals);
         for node in &g.nodes {
             for &vid in &node.inputs {
                 uses[vid] += 1;
             }
         }
-        let mut vals: Vec<Option<Feat>> = vec![None; n_vals];
-        vals[INPUT] = Some(Feat { data: images.to_vec(), c: c0, h: h0, w: w0 });
+        let mut inp = mem.take_f32(images.len());
+        inp.copy_from_slice(images);
+        vals[INPUT] = Some(Feat { data: inp, c: c0, h: h0, w: w0 });
         if let Some(tape) = tape.as_deref_mut() {
             tape.caches.clear();
         }
+        let mut audit_cursor = 0usize;
 
         for (i, node) in g.nodes.iter().enumerate() {
             let out = match &node.op {
                 Op::Conv(l) => {
-                    let x = take_val(&mut vals, &mut uses, node.inputs[0], &node.name);
+                    let x = take_val(mem, &mut vals, &mut uses, node.inputs[0], &node.name);
                     assert_eq!(x.c, l.ci, "{}: conv input channel mismatch", node.name);
                     assert_eq!(
                         (x.h, x.w),
@@ -515,35 +639,45 @@ impl Executor<'_> {
                     let spec = l.spec();
                     let (ho, wo) = (spec.out_h(), spec.out_w());
                     let (z, qw, qa, audit_slot) = if l.quantized && self.qcfg.enabled {
-                        let qw = quantize_dyn(
-                            &l.w,
-                            &[l.co, l.ci, l.k, l.k],
-                            self.qcfg,
-                            rng.as_deref_mut(),
-                        );
-                        let qa = quantize_dyn(
-                            &x.data,
-                            &[n, x.c, x.h, x.w],
-                            self.qcfg,
-                            rng.as_deref_mut(),
-                        );
-                        // label the dispatch so a kernel panic names
-                        // this layer and pass (util::parallel rethrow)
-                        let out = with_label(&format!("{}:forward", node.name), || {
-                            spec.forward(&qw, &qa, self.threads)
-                        });
-                        let slot = audit.layers.len();
-                        let mut la = LayerAudit {
-                            node: i,
-                            name: node.name.clone(),
-                            ..Default::default()
-                        };
-                        la.forward.absorb(&out);
-                        audit.layers.push(la);
-                        (out.z, Some(qw), Some(qa), Some(slot))
+                        let slot = layer_slot(audit, &mut audit_cursor, i, &node.name);
+                        if mem.is_arena() {
+                            let z = self.arena_conv_forward(
+                                mem,
+                                i,
+                                l,
+                                &spec,
+                                &x,
+                                n,
+                                rng.as_deref_mut(),
+                                audit,
+                                slot,
+                            );
+                            (z, None, None, Some(slot))
+                        } else {
+                            let qw = quantize_dyn(
+                                &l.w,
+                                &[l.co, l.ci, l.k, l.k],
+                                self.qcfg,
+                                rng.as_deref_mut(),
+                            );
+                            let qa = quantize_dyn(
+                                &x.data,
+                                &[n, x.c, x.h, x.w],
+                                self.qcfg,
+                                rng.as_deref_mut(),
+                            );
+                            // label the dispatch so a kernel panic names
+                            // this layer and pass (util::parallel rethrow)
+                            let out = with_label(&format!("{}:forward", node.name), || {
+                                spec.forward(&qw, &qa, self.threads)
+                            });
+                            audit.layers[slot].forward.absorb(&out);
+                            (out.z, Some(qw), Some(qa), Some(slot))
+                        }
                     } else {
-                        let (z, _) = with_label(&format!("{}:forward", node.name), || {
-                            conv2d_f32_threaded(
+                        let mut z = mem.take_f32(n * l.co * ho * wo);
+                        with_conv_label(mem, i, PASS_FORWARD, &node.name, || {
+                            conv2d_f32_into(
                                 &l.w,
                                 [l.co, l.ci, l.k, l.k],
                                 &x.data,
@@ -551,27 +685,33 @@ impl Executor<'_> {
                                 l.stride,
                                 l.pad,
                                 self.threads,
-                            )
+                                &mut z,
+                            );
                         });
                         (z, None, None, None)
                     };
+                    // the quantized backward only ever reads the quantized
+                    // operands — keep the f32 activations alive only for
+                    // the f32 backward path
+                    let xf = if audit_slot.is_none() && tape.is_some() {
+                        x.data
+                    } else {
+                        mem.recycle_f32(x.data);
+                        Vec::new()
+                    };
                     if let Some(tape) = tape.as_deref_mut() {
-                        // the quantized backward only ever reads qW/qA —
-                        // keep the f32 activations alive only for the f32
-                        // backward path
-                        let xf = if qa.is_some() { Vec::new() } else { x.data };
                         tape.caches.push(NodeCache::Conv { x: xf, qw, qa, audit_slot });
                     }
                     Feat { data: z, c: l.co, h: ho, w: wo }
                 }
                 Op::BatchNorm(l) => {
-                    let mut x = take_val(&mut vals, &mut uses, node.inputs[0], &node.name);
+                    let mut x = take_val(mem, &mut vals, &mut uses, node.inputs[0], &node.name);
                     assert_eq!(x.c, l.c, "{}: BN channel mismatch", node.name);
                     let (h, w) = (x.h, x.w);
                     let m = (n * h * w) as f64;
                     let plane = h * w;
-                    let mut xhat = vec![0.0f32; x.data.len()];
-                    let mut inv_std = vec![0.0f32; l.c];
+                    let mut xhat = mem.take_f32(x.data.len());
+                    let mut inv_std = mem.take_f32(l.c);
                     for ch in 0..l.c {
                         let mut sum = 0.0f64;
                         let mut sq = 0.0f64;
@@ -598,14 +738,20 @@ impl Executor<'_> {
                     }
                     if let Some(tape) = tape.as_deref_mut() {
                         tape.caches.push(NodeCache::Bn { xhat, inv_std, h, w });
+                    } else {
+                        mem.recycle_f32(xhat);
+                        mem.recycle_f32(inv_std);
                     }
                     x
                 }
                 Op::Relu => {
-                    let mut x = take_val(&mut vals, &mut uses, node.inputs[0], &node.name);
+                    let mut x = take_val(mem, &mut vals, &mut uses, node.inputs[0], &node.name);
                     let mut pos = Vec::new();
                     if tape.is_some() {
-                        pos = x.data.iter().map(|&v| v > 0.0).collect();
+                        pos = mem.take_bool(x.data.len());
+                        for (p, &v) in pos.iter_mut().zip(x.data.iter()) {
+                            *p = v > 0.0;
+                        }
                     }
                     for v in x.data.iter_mut() {
                         if *v < 0.0 {
@@ -618,9 +764,9 @@ impl Executor<'_> {
                     x
                 }
                 Op::GlobalAvgPool => {
-                    let x = take_val(&mut vals, &mut uses, node.inputs[0], &node.name);
+                    let x = take_val(mem, &mut vals, &mut uses, node.inputs[0], &node.name);
                     let plane = x.h * x.w;
-                    let mut y = vec![0.0f32; n * x.c];
+                    let mut y = mem.take_f32(n * x.c);
                     for nb in 0..n {
                         for ch in 0..x.c {
                             let base = (nb * x.c + ch) * plane;
@@ -634,13 +780,14 @@ impl Executor<'_> {
                     if let Some(tape) = tape.as_deref_mut() {
                         tape.caches.push(NodeCache::Gap { c: x.c, h: x.h, w: x.w });
                     }
+                    mem.recycle_f32(x.data);
                     Feat { data: y, c: x.c, h: 1, w: 1 }
                 }
                 Op::Fc(l) => {
-                    let x = take_val(&mut vals, &mut uses, node.inputs[0], &node.name);
+                    let x = take_val(mem, &mut vals, &mut uses, node.inputs[0], &node.name);
                     let din = x.c * x.h * x.w;
                     assert_eq!(din, l.din, "{}: FC input dim mismatch", node.name);
-                    let mut y = vec![0.0f32; n * l.dout];
+                    let mut y = mem.take_f32(n * l.dout);
                     for nb in 0..n {
                         let xin = &x.data[nb * din..(nb + 1) * din];
                         for o in 0..l.dout {
@@ -654,12 +801,14 @@ impl Executor<'_> {
                     }
                     if let Some(tape) = tape.as_deref_mut() {
                         tape.caches.push(NodeCache::Fc { x: x.data });
+                    } else {
+                        mem.recycle_f32(x.data);
                     }
                     Feat { data: y, c: l.dout, h: 1, w: 1 }
                 }
                 Op::Add => {
-                    let mut a = take_val(&mut vals, &mut uses, node.inputs[0], &node.name);
-                    let b = take_val(&mut vals, &mut uses, node.inputs[1], &node.name);
+                    let mut a = take_val(mem, &mut vals, &mut uses, node.inputs[0], &node.name);
+                    let b = take_val(mem, &mut vals, &mut uses, node.inputs[1], &node.name);
                     assert_eq!(
                         (a.c, a.h, a.w),
                         (b.c, b.h, b.w),
@@ -669,6 +818,7 @@ impl Executor<'_> {
                     for (av, bv) in a.data.iter_mut().zip(&b.data) {
                         *av += *bv;
                     }
+                    mem.recycle_f32(b.data);
                     if let Some(tape) = tape.as_deref_mut() {
                         tape.caches.push(NodeCache::None);
                     }
@@ -679,6 +829,7 @@ impl Executor<'_> {
         }
 
         let out = vals[n_vals - 1].take().expect("graph output value");
+        mem.put_graph_slots(vals, uses);
         assert_eq!(
             out.c * out.h * out.w,
             g.classes,
@@ -703,22 +854,42 @@ impl Executor<'_> {
         grads: &mut [f32],
         audit: &mut StepAudit,
     ) {
+        self.backward_mem(&mut tape, dlogits, n, rng, grads, audit, &mut StepMem::Heap);
+    }
+
+    /// [`Self::backward`] with explicit step memory (see
+    /// [`Self::forward_mem`]). The tape is drained in place, so arena
+    /// steps reuse its cache-entry capacity across steps.
+    pub(crate) fn backward_mem(
+        &self,
+        tape: &mut Tape,
+        dlogits: Vec<f32>,
+        n: usize,
+        rng: &mut Pcg32,
+        grads: &mut [f32],
+        audit: &mut StepAudit,
+        mem: &mut StepMem,
+    ) {
         let g = self.graph;
         assert_eq!(grads.len(), g.state_len(), "gradient buffer length mismatch");
         assert_eq!(tape.caches.len(), g.nodes.len(), "one cache entry per node");
-        let offs = g.param_offsets();
         let n_vals = g.nodes.len() + 1;
-        let mut gslots: Vec<Option<Vec<f32>>> = vec![None; n_vals];
+        let mut gslots = mem.take_grad_slots(n_vals);
         gslots[n_vals - 1] = Some(dlogits);
+        // reverse-cursor parameter offsets: walking the nodes in reverse
+        // while subtracting each `param_len` reproduces `param_offsets()`
+        // without materializing the offset table
+        let mut off_i = g.state_len();
 
         for (i, node) in g.nodes.iter().enumerate().rev() {
+            off_i -= node.param_len();
             let gout = gslots[i + 1]
                 .take()
                 .unwrap_or_else(|| panic!("{}: missing output gradient", node.name));
             let cache = std::mem::replace(&mut tape.caches[i], NodeCache::None);
             match (&node.op, cache) {
                 (Op::Fc(l), NodeCache::Fc { x }) => {
-                    let gw = &mut grads[offs[i]..offs[i] + l.w.len() + l.b.len()];
+                    let gw = &mut grads[off_i..off_i + l.w.len() + l.b.len()];
                     for nb in 0..n {
                         let xin = &x[nb * l.din..(nb + 1) * l.din];
                         let grow = &gout[nb * l.dout..(nb + 1) * l.dout];
@@ -730,7 +901,7 @@ impl Executor<'_> {
                             gw[l.w.len() + o] += go;
                         }
                     }
-                    let mut dx = vec![0.0f32; x.len()];
+                    let mut dx = mem.take_f32(x.len());
                     for nb in 0..n {
                         let grow = &gout[nb * l.dout..(nb + 1) * l.dout];
                         let drow = &mut dx[nb * l.din..(nb + 1) * l.din];
@@ -742,11 +913,13 @@ impl Executor<'_> {
                             }
                         }
                     }
-                    accumulate(&mut gslots[node.inputs[0]], dx);
+                    accumulate(mem, &mut gslots[node.inputs[0]], dx);
+                    mem.recycle_f32(gout);
+                    mem.recycle_f32(x);
                 }
                 (Op::GlobalAvgPool, NodeCache::Gap { c, h, w }) => {
                     let plane = h * w;
-                    let mut dx = vec![0.0f32; n * c * plane];
+                    let mut dx = mem.take_f32(n * c * plane);
                     for nb in 0..n {
                         for ch in 0..c {
                             let gv = gout[nb * c + ch] / plane as f32;
@@ -756,7 +929,8 @@ impl Executor<'_> {
                             }
                         }
                     }
-                    accumulate(&mut gslots[node.inputs[0]], dx);
+                    accumulate(mem, &mut gslots[node.inputs[0]], dx);
+                    mem.recycle_f32(gout);
                 }
                 (Op::Relu, NodeCache::Relu { pos }) => {
                     let mut gv = gout;
@@ -765,13 +939,14 @@ impl Executor<'_> {
                             *gvv = 0.0;
                         }
                     }
-                    accumulate(&mut gslots[node.inputs[0]], gv);
+                    accumulate(mem, &mut gslots[node.inputs[0]], gv);
+                    mem.recycle_bool(pos);
                 }
                 (Op::BatchNorm(l), NodeCache::Bn { xhat, inv_std, h, w }) => {
                     let mut gv = gout;
                     let plane = h * w;
                     let m = (n * plane) as f64;
-                    let gg = &mut grads[offs[i]..offs[i] + 2 * l.c];
+                    let gg = &mut grads[off_i..off_i + 2 * l.c];
                     for ch in 0..l.c {
                         let mut sum_dy = 0.0f64;
                         let mut sum_dy_xhat = 0.0f64;
@@ -796,33 +971,46 @@ impl Executor<'_> {
                             }
                         }
                     }
-                    accumulate(&mut gslots[node.inputs[0]], gv);
+                    accumulate(mem, &mut gslots[node.inputs[0]], gv);
+                    mem.recycle_f32(xhat);
+                    mem.recycle_f32(inv_std);
                 }
                 (Op::Conv(l), NodeCache::Conv { x, qw, qa, audit_slot }) => {
                     let spec = l.spec();
                     let (ho, wo) = (spec.out_h(), spec.out_w());
                     let eshape = [n, l.co, ho, wo];
                     let need_dx = node.inputs[0] != INPUT;
-                    let gw = &mut grads[offs[i]..offs[i] + l.w.len()];
-                    if let (Some(qw), Some(qa)) = (qw, qa) {
-                        // Alg. 1: quantize E once, reuse for both passes
-                        let qe = quantize_dyn(&gout, &eshape, self.qcfg, Some(&mut *rng));
+                    if l.quantized && self.qcfg.enabled {
                         let slot = audit_slot.expect("quantized conv has an audit slot");
-                        let wg = with_label(&format!("{}:wgrad", node.name), || {
-                            spec.weight_grad(&qe, &qa, self.threads)
-                        });
-                        audit.layers[slot].wgrad.absorb(&wg);
-                        gw.copy_from_slice(&wg.z);
-                        if need_dx {
-                            let dg = with_label(&format!("{}:dgrad", node.name), || {
-                                spec.input_grad(&qe, &qw, self.threads)
+                        if let (Some(qw), Some(qa)) = (qw, qa) {
+                            // Alg. 1: quantize E once, reuse for both passes
+                            let qe = quantize_dyn(&gout, &eshape, self.qcfg, Some(&mut *rng));
+                            mem.recycle_f32(gout);
+                            let gw = &mut grads[off_i..off_i + l.w.len()];
+                            let wg = with_label(&format!("{}:wgrad", node.name), || {
+                                spec.weight_grad(&qe, &qa, self.threads)
                             });
-                            audit.layers[slot].dgrad.absorb(&dg);
-                            accumulate(&mut gslots[node.inputs[0]], dg.z);
+                            audit.layers[slot].wgrad.absorb(&wg);
+                            gw.copy_from_slice(&wg.z);
+                            if need_dx {
+                                let dg = with_label(&format!("{}:dgrad", node.name), || {
+                                    spec.input_grad(&qe, &qw, self.threads)
+                                });
+                                audit.layers[slot].dgrad.absorb(&dg);
+                                accumulate(mem, &mut gslots[node.inputs[0]], dg.z);
+                            }
+                        } else {
+                            let gw = &mut grads[off_i..off_i + l.w.len()];
+                            let dx_slot =
+                                if need_dx { Some(&mut gslots[node.inputs[0]]) } else { None };
+                            self.arena_conv_backward(
+                                mem, i, l, &spec, gout, n, rng, gw, audit, slot, dx_slot,
+                            );
                         }
                     } else {
-                        let (wg, _) = with_label(&format!("{}:wgrad", node.name), || {
-                            conv2d_f32_wgrad(
+                        let gw = &mut grads[off_i..off_i + l.w.len()];
+                        with_conv_label(mem, i, PASS_WGRAD, &node.name, || {
+                            conv2d_f32_wgrad_into(
                                 &gout,
                                 eshape,
                                 &x,
@@ -832,12 +1020,13 @@ impl Executor<'_> {
                                 l.k,
                                 l.k,
                                 self.threads,
-                            )
+                                gw,
+                            );
                         });
-                        gw.copy_from_slice(&wg);
                         if need_dx {
-                            let (dg, _) = with_label(&format!("{}:dgrad", node.name), || {
-                                conv2d_f32_dgrad(
+                            let mut dx = mem.take_f32(n * l.ci * l.hin * l.win);
+                            with_conv_label(mem, i, PASS_DGRAD, &node.name, || {
+                                conv2d_f32_dgrad_into(
                                     &gout,
                                     eshape,
                                     &l.w,
@@ -847,20 +1036,211 @@ impl Executor<'_> {
                                     l.hin,
                                     l.win,
                                     self.threads,
-                                )
+                                    &mut dx,
+                                );
                             });
-                            accumulate(&mut gslots[node.inputs[0]], dg);
+                            accumulate(mem, &mut gslots[node.inputs[0]], dx);
                         }
+                        mem.recycle_f32(gout);
+                        mem.recycle_f32(x);
                     }
                 }
                 (Op::Add, NodeCache::None) => {
-                    let dup = gout.clone();
-                    accumulate(&mut gslots[node.inputs[0]], gout);
-                    accumulate(&mut gslots[node.inputs[1]], dup);
+                    let mut dup = mem.take_f32(gout.len());
+                    dup.copy_from_slice(&gout);
+                    accumulate(mem, &mut gslots[node.inputs[0]], gout);
+                    accumulate(mem, &mut gslots[node.inputs[1]], dup);
                 }
                 _ => unreachable!("cache kind does not match node kind"),
             }
         }
+        mem.put_grad_slots(gslots);
+    }
+
+    /// Forward one quantized conv from the step arena: W and A quantize
+    /// straight into the node's persistent plane slots (RNG stream order
+    /// identical to the heap path's two [`quantize_dyn`] calls), the
+    /// weight panel packs once into its persistent buffer, and the
+    /// engine runs into a pooled output. Values are bit-identical to
+    /// `spec.forward(&qw, &qa, ..)` on freshly quantized tensors.
+    #[allow(clippy::too_many_arguments)]
+    fn arena_conv_forward(
+        &self,
+        mem: &mut StepMem,
+        i: usize,
+        l: &ConvLayer,
+        spec: &ConvSpec,
+        x: &Feat,
+        n: usize,
+        mut rng: Option<&mut Pcg32>,
+        audit: &mut StepAudit,
+        slot: usize,
+    ) -> Vec<f32> {
+        let mut cs = mem.take_conv_slots(i);
+        let mut off = mem.take_offsets();
+        let wcfg = offsets_dyn(self.qcfg, rng.as_deref_mut(), l.w.len(), &mut off);
+        quantize_into_planes(&l.w, &[l.co, l.ci, l.k, l.k], &wcfg, &off, &mut cs.qw);
+        let acfg = offsets_dyn(self.qcfg, rng.as_deref_mut(), x.data.len(), &mut off);
+        quantize_into_planes(&x.data, &[n, x.c, x.h, x.w], &acfg, &off, &mut cs.qa);
+        pack::pack_weights_into(
+            &cs.qw.planes,
+            l.co,
+            l.ci * l.k * l.k,
+            self.threads,
+            &mut cs.pw_fwd,
+        );
+        let (ho, wo) = (spec.out_h(), spec.out_w());
+        let mut z = mem.take_f32(n * l.co * ho * wo);
+        let au = with_label(&cs.label_fwd, || {
+            spec::run_engine_view(
+                OperandView::of_fused(&cs.qw),
+                &cs.qw.planes,
+                OperandView::of_fused(&cs.qa),
+                &cs.qa.planes,
+                n,
+                l.co,
+                spec.forward_dims(l.ci),
+                self.threads,
+                &cs.pw_fwd,
+                &mut z,
+            )
+        });
+        audit.layers[slot].forward.absorb_engine(&au);
+        mem.put_offsets(off);
+        mem.put_conv_slots(i, cs);
+        z
+    }
+
+    /// Backward one quantized conv from the step arena: E quantizes into
+    /// the node's persistent slots (same RNG draw as the heap path's
+    /// [`quantize_dyn`]), then both Alg. 1 passes reuse the forward's
+    /// quantized W/A — the transposed operand layouts the engine needs
+    /// are produced by relaying out the decoded planes and group scales
+    /// directly (pinned against the `MlsTensor` transposes by
+    /// `plane_transposes_match_tensor_relayouts`), never rebuilding an
+    /// element-wise tensor.
+    #[allow(clippy::too_many_arguments)]
+    fn arena_conv_backward(
+        &self,
+        mem: &mut StepMem,
+        i: usize,
+        l: &ConvLayer,
+        spec: &ConvSpec,
+        gout: Vec<f32>,
+        n: usize,
+        rng: &mut Pcg32,
+        gw: &mut [f32],
+        audit: &mut StepAudit,
+        slot: usize,
+        dx_slot: Option<&mut Option<Vec<f32>>>,
+    ) {
+        let (ho, wo) = (spec.out_h(), spec.out_w());
+        let mut cs = mem.take_conv_slots(i);
+        let mut off = mem.take_offsets();
+        let ecfg = offsets_dyn(self.qcfg, Some(rng), gout.len(), &mut off);
+        quantize_into_planes(&gout, &[n, l.co, ho, wo], &ecfg, &off, &mut cs.qe);
+        mem.recycle_f32(gout);
+
+        // wgrad: stationary E^T [Co, N, Ho, Wo], gathered A^T [Ci, N, H, W]
+        planes::transpose01_planes(&cs.qe.planes, n, l.co, ho * wo, false, &mut cs.et_planes);
+        planes::transpose01_groups(
+            &cs.qe.sg_exp,
+            &cs.qe.sg_man,
+            n,
+            l.co,
+            &mut cs.et_sg_exp,
+            &mut cs.et_sg_man,
+        );
+        planes::transpose01_planes(
+            &cs.qa.planes,
+            n,
+            l.ci,
+            l.hin * l.win,
+            false,
+            &mut cs.at_planes,
+        );
+        planes::transpose01_groups(
+            &cs.qa.sg_exp,
+            &cs.qa.sg_man,
+            n,
+            l.ci,
+            &mut cs.at_sg_exp,
+            &mut cs.at_sg_man,
+        );
+        pack::pack_weights_into(&cs.et_planes, l.co, n * ho * wo, self.threads, &mut cs.pw_wgrad);
+        let mut zt = mem.take_f32(l.ci * l.co * l.k * l.k);
+        let au = with_label(&cs.label_wgrad, || {
+            spec::run_engine_view(
+                OperandView {
+                    s_t: cs.qe.s_t,
+                    sg_exp: &cs.et_sg_exp,
+                    sg_man: &cs.et_sg_man,
+                    fmt: cs.qe.planes.fmt,
+                },
+                &cs.et_planes,
+                OperandView {
+                    s_t: cs.qa.s_t,
+                    sg_exp: &cs.at_sg_exp,
+                    sg_man: &cs.at_sg_man,
+                    fmt: cs.qa.planes.fmt,
+                },
+                &cs.at_planes,
+                l.ci,
+                l.co,
+                spec.wgrad_dims(n),
+                self.threads,
+                &cs.pw_wgrad,
+                &mut zt,
+            )
+        });
+        audit.layers[slot].wgrad.absorb_engine(&au);
+        // the engine emits [Ci, Co, Kh, Kw]; parameters are [Co, Ci, Kh, Kw]
+        spec::transpose01_copy(&zt, l.ci, l.co, l.k * l.k, gw);
+        mem.recycle_f32(zt);
+
+        if let Some(dx_slot) = dx_slot {
+            // dgrad: stationary kernel-flipped W^T [Ci, Co, Kh, Kw], gathered E
+            planes::transpose01_planes(&cs.qw.planes, l.co, l.ci, l.k * l.k, true, &mut cs.wt_planes);
+            planes::transpose01_groups(
+                &cs.qw.sg_exp,
+                &cs.qw.sg_man,
+                l.co,
+                l.ci,
+                &mut cs.wt_sg_exp,
+                &mut cs.wt_sg_man,
+            );
+            pack::pack_weights_into(
+                &cs.wt_planes,
+                l.ci,
+                l.co * l.k * l.k,
+                self.threads,
+                &mut cs.pw_dgrad,
+            );
+            let mut dx = mem.take_f32(n * l.ci * l.hin * l.win);
+            let au = with_label(&cs.label_dgrad, || {
+                spec::run_engine_view(
+                    OperandView {
+                        s_t: cs.qw.s_t,
+                        sg_exp: &cs.wt_sg_exp,
+                        sg_man: &cs.wt_sg_man,
+                        fmt: cs.qw.planes.fmt,
+                    },
+                    &cs.wt_planes,
+                    OperandView::of_fused(&cs.qe),
+                    &cs.qe.planes,
+                    n,
+                    l.ci,
+                    spec.dgrad_dims(l.co),
+                    self.threads,
+                    &cs.pw_dgrad,
+                    &mut dx,
+                )
+            });
+            audit.layers[slot].dgrad.absorb_engine(&au);
+            accumulate(mem, dx_slot, dx);
+        }
+        mem.put_offsets(off);
+        mem.put_conv_slots(i, cs);
     }
 }
 

@@ -19,6 +19,7 @@
 //! tensors through the pass-generic conv engine, whose executed audit
 //! counters cross-check the analytic model.
 
+pub mod arena;
 pub mod graph;
 pub mod health;
 pub mod ops;
@@ -26,6 +27,7 @@ pub mod optim;
 pub mod train;
 pub mod zoo;
 
+pub use arena::{StepArena, StepMem};
 pub use graph::{Graph, LayerAudit, PassCounters, StepAudit, Tape};
 pub use health::{DivergencePolicy, GradStats, HealthMonitor, HealthRecord};
 pub use ops::{count_training_ops, TrainingOps};

@@ -46,6 +46,7 @@ use anyhow::Result;
 
 use crate::mls::quantizer::QuantConfig;
 use crate::mls::Grouping;
+use crate::nn::arena::{StepArena, StepMem};
 use crate::nn::graph::{lower, Executor, Graph, Tape};
 use crate::nn::optim::{Optimizer, Sgd};
 use crate::nn::zoo;
@@ -66,9 +67,22 @@ pub struct NativeStepOutput {
 }
 
 fn softmax_ce(logits: &[f32], labels: &[i32], classes: usize) -> (f32, f32, Vec<f32>) {
+    let mut dlogits = vec![0.0f32; labels.len() * classes];
+    let (loss, acc) = softmax_ce_into(logits, labels, classes, &mut dlogits);
+    (loss, acc, dlogits)
+}
+
+/// [`softmax_ce`] into a caller-owned gradient buffer (every element is
+/// overwritten), so the warm step loop reuses one `dlogits` allocation.
+fn softmax_ce_into(
+    logits: &[f32],
+    labels: &[i32],
+    classes: usize,
+    dlogits: &mut [f32],
+) -> (f32, f32) {
     let n = labels.len();
     assert_eq!(logits.len(), n * classes, "logit/label shape mismatch");
-    let mut dlogits = vec![0.0f32; n * classes];
+    assert_eq!(dlogits.len(), n * classes, "dlogits buffer length mismatch");
     let mut loss = 0.0f64;
     let mut correct = 0usize;
     for (nb, &label) in labels.iter().enumerate() {
@@ -95,7 +109,18 @@ fn softmax_ce(logits: &[f32], labels: &[i32], classes: usize) -> (f32, f32, Vec<
             correct += 1;
         }
     }
-    ((loss / n as f64) as f32, correct as f32 / n as f32, dlogits)
+    ((loss / n as f64) as f32, correct as f32 / n as f32)
+}
+
+/// The persistent step memory of [`NativeModel::train_step_quiet`]: the
+/// arena plus every trainer-level buffer the step loop needs, so a warm
+/// step allocates nothing at all.
+struct StepScratch {
+    arena: StepArena,
+    tape: Tape,
+    audit: StepAudit,
+    grads: Vec<f32>,
+    state: Vec<f32>,
 }
 
 /// A module-graph network trainable natively under Alg. 1.
@@ -115,6 +140,9 @@ pub struct NativeModel {
     pub graph: Graph,
     optimizer: Box<dyn Optimizer>,
     threads: usize,
+    /// persistent step memory, present once [`Self::enable_step_arena`]
+    /// has run; `train_step` routes through the zero-alloc path when set
+    scratch: Option<StepScratch>,
 }
 
 impl NativeModel {
@@ -217,9 +245,79 @@ impl NativeModel {
         lr: f32,
         seed: i64,
     ) -> NativeStepOutput {
+        if self.scratch.is_some() {
+            let (loss, acc) = self.train_step_quiet(images, labels, lr, seed);
+            let audit = self.scratch.as_ref().unwrap().audit.clone();
+            return NativeStepOutput { loss, acc, audit };
+        }
         let (loss, acc, grads, audit) = self.loss_and_grads(images, labels, seed);
         self.apply_update(&grads, lr);
         NativeStepOutput { loss, acc, audit }
+    }
+
+    /// Attach the persistent step arena. The first step after this call
+    /// warms every pool/slot up to its steady-state capacity; every later
+    /// step runs the arena in strict mode and performs zero heap
+    /// allocation (proved by `rust/tests/zero_alloc.rs`). Values and
+    /// audit counters are bit-identical to the allocating path.
+    /// Idempotent; once enabled, [`Self::train_step`] routes through
+    /// [`Self::train_step_quiet`].
+    pub fn enable_step_arena(&mut self) {
+        if self.scratch.is_none() {
+            self.scratch = Some(StepScratch {
+                arena: StepArena::for_graph(&self.graph),
+                tape: Tape::default(),
+                audit: StepAudit::default(),
+                grads: vec![0.0f32; self.graph.state_len()],
+                state: Vec::with_capacity(self.graph.state_len()),
+            });
+        }
+    }
+
+    /// Whether [`Self::enable_step_arena`] has attached the arena.
+    pub fn step_arena_enabled(&self) -> bool {
+        self.scratch.is_some()
+    }
+
+    /// The audit of the last arena-path step (None before the first
+    /// [`Self::train_step_quiet`], or when the arena is not enabled).
+    pub fn last_audit(&self) -> Option<&StepAudit> {
+        self.scratch.as_ref().map(|s| &s.audit)
+    }
+
+    /// [`Self::train_step`] on the arena path, returning only `(loss,
+    /// acc)` so the warm loop never clones the audit stream (read it via
+    /// [`Self::last_audit`]). Enables the arena on first use; after the
+    /// warm-up step this performs zero heap allocation end to end —
+    /// executor buffers, quantized planes, weight panels, gradient and
+    /// optimizer-state staging all live in the persistent [`StepScratch`].
+    pub fn train_step_quiet(
+        &mut self,
+        images: &[f32],
+        labels: &[i32],
+        lr: f32,
+        seed: i64,
+    ) -> (f32, f32) {
+        self.enable_step_arena();
+        let n = labels.len();
+        let mut rng = Pcg32::new(seed as u64, 0x51e9_a1b2);
+        let NativeModel { graph, qcfg, optimizer, scratch, threads, classes, .. } = self;
+        let s = scratch.as_mut().expect("enable_step_arena ran above");
+        let ex = Executor { graph: &*graph, qcfg, threads: *threads };
+        let mut mem = StepMem::Arena(&mut s.arena);
+        let logits = ex.forward_mem(images, n, Some(&mut rng), Some(&mut s.tape), &mut s.audit, &mut mem);
+        let mut dlogits = mem.take_f32(n * *classes);
+        let (loss, acc) = softmax_ce_into(&logits, labels, *classes, &mut dlogits);
+        mem.recycle_f32(logits);
+        s.grads.fill(0.0);
+        ex.backward_mem(&mut s.tape, dlogits, n, &mut rng, &mut s.grads, &mut s.audit, &mut mem);
+        s.audit.roll_up();
+        drop(mem);
+        graph.state_into(&mut s.state);
+        optimizer.step(&mut s.state, &s.grads, lr);
+        graph.load_state(&s.state).expect("state length is stable");
+        s.arena.end_step();
+        (loss, acc)
     }
 
     /// Evaluate one batch: forward with deterministic nearest rounding,
@@ -259,6 +357,7 @@ pub fn native_model(name: &str, qcfg: QuantConfig, seed: u64) -> Result<NativeMo
         graph,
         optimizer: Box::new(Sgd::default()),
         threads: parallel::num_threads(),
+        scratch: None,
     })
 }
 

@@ -56,30 +56,59 @@ use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex, OnceLock};
 
+/// Reusable label scopes of one thread: a stack of owned `String`
+/// buffers that are cleared and refilled instead of reallocated, so
+/// entering a [`with_label`] scope in the steady-state step loop costs
+/// no heap traffic once every nesting depth has been visited once.
+#[derive(Default)]
+struct LabelStack {
+    bufs: Vec<String>,
+    depth: usize,
+}
+
 thread_local! {
-    /// The submitting thread's current panic label (see [`with_label`]).
-    static LABEL: RefCell<Option<String>> = const { RefCell::new(None) };
+    /// The submitting thread's current panic-label scopes (see
+    /// [`with_label`]).
+    static LABEL: RefCell<LabelStack> = RefCell::new(LabelStack::default());
 }
 
 /// Run `f` with a panic label attached to the calling thread: any panic
-/// rethrown by a [`map_ranges`] dispatch submitted inside `f` is
-/// prefixed with `label` and the failing chunk's range, so an assertion
-/// deep in a parallel kernel names the call site (the trainer labels
-/// every conv as `<layer>:<pass>`). Scopes nest — the previous label is
-/// restored on exit, panicking or not.
+/// rethrown by a [`map_ranges`] or [`for_ranges`] dispatch submitted
+/// inside `f` is prefixed with `label` and the failing chunk's range, so
+/// an assertion deep in a parallel kernel names the call site (the
+/// trainer labels every conv as `<layer>:<pass>`). Scopes nest — the
+/// previous label is restored on exit, panicking or not. Scope buffers
+/// are pooled per thread and per depth, so re-entering a scope
+/// allocates nothing after its first use.
 pub fn with_label<R>(label: &str, f: impl FnOnce() -> R) -> R {
-    struct Restore(Option<String>);
+    struct Restore;
     impl Drop for Restore {
         fn drop(&mut self) {
-            LABEL.with(|l| *l.borrow_mut() = self.0.take());
+            LABEL.with(|l| l.borrow_mut().depth -= 1);
         }
     }
-    let _restore = Restore(LABEL.with(|l| l.replace(Some(label.to_string()))));
+    LABEL.with(|l| {
+        let mut stack = l.borrow_mut();
+        let depth = stack.depth;
+        if depth == stack.bufs.len() {
+            stack.bufs.push(String::with_capacity(label.len()));
+        }
+        stack.bufs[depth].clear();
+        stack.bufs[depth].push_str(label);
+        stack.depth = depth + 1;
+    });
+    let _restore = Restore;
     f()
 }
 
-fn current_label() -> Option<String> {
-    LABEL.with(|l| l.borrow().clone())
+/// The innermost active [`with_label`] scope of the calling thread, if
+/// any. Allocates the returned clone — callers keep it off hot paths
+/// (it runs on panic rethrow and on arena-miss diagnostics only).
+pub(crate) fn current_label() -> Option<String> {
+    LABEL.with(|l| {
+        let stack = l.borrow();
+        stack.depth.checked_sub(1).map(|top| stack.bufs[top].clone())
+    })
 }
 
 /// Prefix a string panic payload with the dispatch context; opaque
@@ -320,21 +349,58 @@ where
         .filter(|&(lo, hi)| lo < hi)
         .collect();
     let slots: Vec<Mutex<Option<T>>> = ranges.iter().map(|_| Mutex::new(None)).collect();
-    let label = current_label();
     if let Some((idx, payload)) = dispatch(ranges.len(), |i| {
         let (lo, hi) = ranges[i];
         let value = f(lo, hi);
         *slots[i].lock().unwrap() = Some(value);
     }) {
         // rethrow on the submitting thread, naming the failing chunk and
-        // the caller's with_label scope (e.g. `conv1:forward`)
+        // the caller's with_label scope (e.g. `conv1:forward`); the label
+        // is read here, not before the dispatch, so the non-panicking hot
+        // path never clones it
         let (lo, hi) = ranges[idx];
+        let label = current_label();
         resume_unwind(relabel_payload(payload, label.as_deref(), idx, lo, hi));
     }
     slots
         .into_iter()
         .map(|s| s.into_inner().unwrap().expect("every range chunk completed"))
         .collect()
+}
+
+/// [`map_ranges`] without result collection: split `0..n` into at most
+/// `threads` contiguous ranges and run `f(lo, hi)` on each, returning
+/// nothing. The chunk boundaries are exactly [`map_ranges`]' (derived
+/// from the requested `threads`, never from the pool size), so the two
+/// shapes are interchangeable for kernels that write through a
+/// [`DisjointWriter`] and merge their statistics through atomics.
+///
+/// Unlike [`map_ranges`] this path performs **zero heap allocation** on
+/// the submitting thread for single-chunk dispatches (`threads <= 1` or
+/// `n` small enough to collapse to one range) — there is no slot vector
+/// and no range vector — which is what the steady-state training step
+/// relies on at 1 thread. Multi-chunk dispatches allocate only the one
+/// `Arc<Job>` publication inside [`dispatch`].
+pub fn for_ranges<F>(threads: usize, n: usize, f: F)
+where
+    F: Fn(usize, usize) + Sync,
+{
+    if n == 0 {
+        return;
+    }
+    let threads = threads.clamp(1, n);
+    let chunk = n.div_ceil(threads);
+    // number of non-empty ranges (the filtered count map_ranges builds)
+    let chunks = n.div_ceil(chunk);
+    if let Some((idx, payload)) = dispatch(chunks, |i| {
+        let lo = i * chunk;
+        let hi = ((i + 1) * chunk).min(n);
+        f(lo, hi);
+    }) {
+        let (lo, hi) = (idx * chunk, ((idx + 1) * chunk).min(n));
+        let label = current_label();
+        resume_unwind(relabel_payload(payload, label.as_deref(), idx, lo, hi));
+    }
 }
 
 /// Shared-output writer for parallel kernels whose work units fill
@@ -514,6 +580,36 @@ mod tests {
         });
         let msg = panic_message(outer.expect_err("must rethrow"));
         assert!(msg.contains("outer: chunk 1 [2..4)"), "{msg:?}");
+    }
+
+    #[test]
+    fn for_ranges_matches_map_ranges_chunking() {
+        for threads in [1usize, 2, 5, 7, 16] {
+            for n in [0usize, 1, 2, 9, 100] {
+                let want = map_ranges(threads, n, |lo, hi| (lo, hi));
+                let got = Mutex::new(Vec::new());
+                for_ranges(threads, n, |lo, hi| got.lock().unwrap().push((lo, hi)));
+                let mut got = got.into_inner().unwrap();
+                got.sort_unstable();
+                assert_eq!(got, want, "threads={threads} n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn for_ranges_panic_carries_label_and_range() {
+        let result = catch_unwind(AssertUnwindSafe(|| {
+            with_label("conv2:wgrad", || {
+                for_ranges(4, 16, |lo, _hi| {
+                    assert!(lo != 8, "span boom {lo}");
+                })
+            })
+        }));
+        let msg = panic_message(result.expect_err("must rethrow"));
+        assert!(
+            msg.contains("conv2:wgrad: chunk 2 [8..12): span boom 8"),
+            "unexpected payload {msg:?}"
+        );
     }
 
     #[test]

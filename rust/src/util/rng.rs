@@ -73,6 +73,14 @@ impl Pcg32 {
         (0..n).map(|_| self.uniform() - 0.5).collect()
     }
 
+    /// [`Self::rounding_offsets`] into a caller-owned buffer: same draws
+    /// in the same order, but reusing `out`'s capacity, so the warm step
+    /// loop pays no allocation for its offset tensors.
+    pub fn rounding_offsets_into(&mut self, out: &mut Vec<f32>, n: usize) {
+        out.clear();
+        out.extend((0..n).map(|_| self.uniform() - 0.5));
+    }
+
     /// Fisher–Yates shuffle.
     pub fn shuffle<T>(&mut self, xs: &mut [T]) {
         for i in (1..xs.len()).rev() {
@@ -141,6 +149,21 @@ mod tests {
             seen[v] = true;
         }
         assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn rounding_offsets_into_matches_allocating_draws() {
+        let mut a = Pcg32::seeded(12);
+        let mut b = Pcg32::seeded(12);
+        let mut buf = Vec::new();
+        for n in [0usize, 1, 7, 64, 3] {
+            let want = a.rounding_offsets(n);
+            b.rounding_offsets_into(&mut buf, n);
+            assert_eq!(buf.len(), n);
+            assert!(want.iter().zip(&buf).all(|(x, y)| x.to_bits() == y.to_bits()));
+        }
+        // and the streams stay in lockstep afterwards
+        assert_eq!(a.next_u32(), b.next_u32());
     }
 
     #[test]

@@ -1,0 +1,145 @@
+//! The zero-alloc steady-state contract of the step arena
+//! ([`mls_train::nn::arena`]), pinned with a counting global allocator:
+//!
+//! 1. After the one-step warm-up, `train_step_quiet` performs ZERO heap
+//!    allocation — not "little", zero — for whole 3-step replays of
+//!    `cnn_t` and `resnet_t`. Pinned at `threads = 1`: the worker pool's
+//!    dispatch machinery (one `Arc` job per multi-chunk fan-out, lazily
+//!    spawned threads) allocates on purpose, which is why the strict
+//!    claim is single-threaded while the arena's own strict mode (pool
+//!    misses panic) holds at every thread count.
+//! 2. The arena path is bit-identical to the historical allocating path
+//!    — loss, accuracy, every per-layer audit counter, and the
+//!    post-update parameter state — across {1, 2, 8} threads and every
+//!    SIMD dispatch level this CPU supports.
+//!
+//! One `#[test]` on purpose: the allocation counters are process-global,
+//! so no concurrent test may run in this binary.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use mls_train::data::{streams, DatasetConfig, SynthCifar};
+use mls_train::mls::quantizer::QuantConfig;
+use mls_train::nn::train::{native_model, state_checksum};
+use mls_train::util::simd::{self, Level};
+
+/// [`System`] plus allocation counters. Deallocation is passed through
+/// uncounted: the contract is "no heap growth", and frees of warm-up
+/// buffers are not evidence against it.
+struct Counting;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+static BYTES: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for Counting {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        BYTES.fetch_add(layout.size() as u64, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        BYTES.fetch_add(layout.size() as u64, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        BYTES.fetch_add(new_size as u64, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static COUNTER: Counting = Counting;
+
+/// The paper's default quantized training config: `<2,4>` element
+/// format, (n, c) grouping, stochastic rounding — the config whose step
+/// loop the arena was built for.
+fn qcfg() -> QuantConfig {
+    QuantConfig::parse_name("e2m4_gnc_eg8mg1_sr").unwrap()
+}
+
+fn dataset() -> SynthCifar {
+    SynthCifar::new(DatasetConfig { noise: 1.0, label_noise: 0.0, seed: 5, ..Default::default() })
+}
+
+/// Warm one step, then replay two more and assert the allocator counters
+/// did not move at all.
+fn assert_zero_alloc_steps(name: &str) {
+    let mut m = native_model(name, qcfg(), 9).unwrap();
+    m.set_threads(1);
+    m.enable_step_arena();
+    let ds = dataset();
+    let batches: Vec<_> = (0..3).map(|step| ds.batch(4, streams::TRAIN, step)).collect();
+
+    // step 1: every pool and conv slot grows to steady-state capacity
+    let (images, labels) = &batches[0];
+    m.train_step_quiet(images, labels, 0.05, 31);
+
+    let (allocs0, bytes0) = (ALLOCS.load(Ordering::Relaxed), BYTES.load(Ordering::Relaxed));
+    for (step, (images, labels)) in batches.iter().enumerate().skip(1) {
+        m.train_step_quiet(images, labels, 0.05, 31 + step as i64);
+    }
+    let allocs = ALLOCS.load(Ordering::Relaxed) - allocs0;
+    let bytes = BYTES.load(Ordering::Relaxed) - bytes0;
+    assert_eq!(
+        (allocs, bytes),
+        (0, 0),
+        "{name}: warm arena steps hit the heap ({allocs} allocations, {bytes} bytes)"
+    );
+}
+
+/// Fresh allocating model vs fresh arena model, same seeds and batches:
+/// loss, accuracy, the full per-layer audit stream and the post-update
+/// parameter state must agree bit for bit.
+fn assert_arena_matches_heap(name: &str, threads: usize) {
+    let mut heap = native_model(name, qcfg(), 9).unwrap();
+    let mut arena = native_model(name, qcfg(), 9).unwrap();
+    heap.set_threads(threads);
+    arena.set_threads(threads);
+    arena.enable_step_arena();
+    let ds = dataset();
+    for step in 0..2u64 {
+        let (images, labels) = ds.batch(2, streams::TRAIN, step);
+        let sseed = 31 + step as i64;
+        let out = heap.train_step(&images, &labels, 0.05, sseed);
+        let (loss, acc) = arena.train_step_quiet(&images, &labels, 0.05, sseed);
+        let tag = format!("{name} threads={threads} simd={:?} step {step}", simd::active());
+        assert_eq!(out.loss.to_bits(), loss.to_bits(), "{tag}: loss");
+        assert_eq!(out.acc.to_bits(), acc.to_bits(), "{tag}: acc");
+        assert_eq!(&out.audit, arena.last_audit().unwrap(), "{tag}: audit stream");
+        assert_eq!(
+            state_checksum(&heap.state()),
+            state_checksum(&arena.state()),
+            "{tag}: post-update state"
+        );
+    }
+}
+
+#[test]
+fn arena_steps_allocate_nothing_and_match_the_heap_path() {
+    // the strict-zero phase runs FIRST: nothing may have dispatched to
+    // the worker pool yet, so the single-threaded warm loop is provably
+    // the only allocation source being measured
+    for name in ["cnn_t", "resnet_t"] {
+        assert_zero_alloc_steps(name);
+    }
+
+    let prev = simd::active();
+    for name in ["cnn_t", "resnet_t"] {
+        for threads in [1usize, 2, 8] {
+            for level in Level::supported() {
+                simd::set_level(level);
+                assert_arena_matches_heap(name, threads);
+            }
+        }
+    }
+    simd::set_level(prev);
+}

@@ -35,6 +35,14 @@ def render(path):
         context.append(f"simd dispatch: `{simd}`")
     if report.get("threads") is not None:
         context.append(f"{report['threads']:g} threads")
+    bytes_per_step = report.get("bytes_allocated_per_step")
+    if bytes_per_step is not None:
+        # the step-arena contract: a warm training step allocates exactly
+        # 0 bytes — any other number is a regression worth seeing here
+        verdict = "zero-alloc" if bytes_per_step == 0 else "REGRESSION"
+        context.append(
+            f"warm arena step: {bytes_per_step:g} heap bytes ({verdict})"
+        )
     lines.append(", ".join(context))
     lines.append("")
     ratios = report.get("ratios") or {}

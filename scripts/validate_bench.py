@@ -5,7 +5,7 @@ against their checked-in schemas.
 Stdlib-only (CI's build-test job has no pip step), implementing the JSON
 Schema subset the bench/audit/lab schemas use: type, const, enum,
 required, properties, additionalProperties (as a sub-schema),
-minProperties, minimum, exclusiveMinimum, oneOf (exactly one branch must
+minProperties, minimum, maximum, exclusiveMinimum, oneOf (exactly one branch must
 match — the audit stream mixes train_step and health records), and for
 arrays minItems + items (as a sub-schema applied to every element — the
 per-layer audit stream's `layers` array needs it). A malformed report —
@@ -72,6 +72,8 @@ def check(value, schema, path, errors):
         errors.append(f"{path}: {value!r} not one of {schema['enum']}")
     if "minimum" in schema and value < schema["minimum"]:
         errors.append(f"{path}: {value} < minimum {schema['minimum']}")
+    if "maximum" in schema and value > schema["maximum"]:
+        errors.append(f"{path}: {value} > maximum {schema['maximum']}")
     if "exclusiveMinimum" in schema and value <= schema["exclusiveMinimum"]:
         errors.append(f"{path}: {value} <= exclusiveMinimum {schema['exclusiveMinimum']}")
     if isinstance(value, list):
