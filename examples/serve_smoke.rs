@@ -1,0 +1,134 @@
+//! CI smoke for the inference server: build a fresh `cnn_t` behind the
+//! quantize-once weight/panel cache, require the cached served forward
+//! to be **bit-identical** to the `eval_logits` oracle (logits bits AND
+//! every audit counter), then round-trip the framed protocol end to end
+//! over both transports — an in-memory jsonl stream (FIFO order, exact
+//! logits through JSON, error containment for garbage frames) and a TCP
+//! loopback connection. Exits nonzero on any mismatch; CI also greps the
+//! `serve bit-identity OK` line so a silently-skipped check cannot pass.
+//!
+//! Run with: `cargo run --release --example serve_smoke`
+
+use std::collections::BTreeMap;
+use std::io::Cursor;
+use std::net::{TcpListener, TcpStream};
+use std::time::Duration;
+
+use mls_train::data::{streams, DatasetConfig, SynthCifar};
+use mls_train::serve::{serve_stream, serve_tcp, ServeOptions, ServedModel};
+use mls_train::util::frame;
+use mls_train::util::json::Json;
+
+const CFG: &str = "e2m4_gnc_eg8mg1_sr";
+
+fn req_frame(id: u64, image: &[f32]) -> anyhow::Result<Vec<u8>> {
+    let mut m = BTreeMap::new();
+    m.insert("id".to_string(), Json::Num(id as f64));
+    m.insert(
+        "image".to_string(),
+        Json::Arr(image.iter().map(|&v| Json::Num(v as f64)).collect()),
+    );
+    let mut buf = Vec::new();
+    frame::write_frame(&mut buf, Json::Obj(m).to_string_compact().as_bytes())?;
+    Ok(buf)
+}
+
+fn main() -> anyhow::Result<()> {
+    println!("== serve smoke (quantize-once cache, framed protocol, TCP loopback) ==");
+    let threads = mls_train::util::parallel::num_threads();
+    let mut served = ServedModel::fresh("cnn_t", CFG, 9, threads)?;
+    let elems = served.input_elems();
+    let classes = served.classes();
+    let ds = SynthCifar::new(DatasetConfig { noise: 1.0, seed: 5, ..Default::default() });
+    let (images, _) = ds.batch(4, streams::TEST, 0);
+
+    // 1. bit-identity: warm (quantize + pack once), then compare the
+    // CACHED steady-state forward against the heap-path oracle
+    let mut logits = Vec::new();
+    served.infer_batch(&images, 4, &mut logits);
+    served.infer_batch(&images, 4, &mut logits);
+    let (oracle, oracle_audit) = served.model().eval_logits(&images, 4);
+    let bad_bits = logits
+        .iter()
+        .zip(&oracle)
+        .filter(|(a, b)| a.to_bits() != b.to_bits())
+        .count();
+    anyhow::ensure!(bad_bits == 0, "{bad_bits} served logit(s) differ from the eval oracle");
+    anyhow::ensure!(
+        served.last_audit() == &oracle_audit,
+        "served audit counters differ from the eval oracle"
+    );
+    println!(
+        "  serve bit-identity OK (batch 4, {} logits + all audit counters, {threads} threads)",
+        logits.len()
+    );
+
+    // 2. jsonl transport: 3 requests + 1 garbage frame + shutdown; FIFO
+    // responses, exact logits through JSON, garbage answered not fatal
+    let mut input = Vec::new();
+    for (i, id) in [5u64, 6, 7].iter().enumerate() {
+        input.extend_from_slice(&req_frame(*id, &images[i * elems..(i + 1) * elems])?);
+    }
+    frame::write_frame(&mut input, b"{definitely not json")?;
+    frame::write_frame(&mut input, br#"{"cmd": "shutdown"}"#)?;
+    let opts = ServeOptions { batch_max: 2, batch_wait: Duration::ZERO, ..Default::default() };
+    let mut out = Vec::new();
+    let stats = serve_stream(&mut served, Cursor::new(input), &mut out, &opts)?;
+    anyhow::ensure!(stats.requests == 3, "expected 3 served requests, got {}", stats.requests);
+
+    let mut reader = &out[..];
+    let mut resps = Vec::new();
+    while let Some(p) = frame::read_frame(&mut reader, 1 << 22)? {
+        resps.push(Json::parse(std::str::from_utf8(&p)?).map_err(|e| anyhow::anyhow!("{e}"))?);
+    }
+    anyhow::ensure!(resps.len() == 4, "expected 3 answers + 1 error, got {}", resps.len());
+    for (i, (resp, want_id)) in resps.iter().zip([5u64, 6, 7]).enumerate() {
+        let id = resp.get("id").and_then(|v| v.as_f64()).unwrap_or(-1.0) as u64;
+        anyhow::ensure!(id == want_id, "response {i}: id {id}, want {want_id} (FIFO)");
+        let n = resp.get("batch").and_then(|v| v.as_f64()).unwrap_or(0.0) as usize;
+        anyhow::ensure!(n >= 1, "response {i} reports batch {n}");
+        let got = resp
+            .get("logits")
+            .ok_or_else(|| anyhow::anyhow!("response {i} has no logits"))?
+            .f32s()
+            .map_err(|e| anyhow::anyhow!("response {i} logits: {e}"))?;
+        anyhow::ensure!(got.len() == classes, "response {i}: {} logits", got.len());
+    }
+    anyhow::ensure!(
+        resps[3].get("error").and_then(|v| v.as_str()).is_some_and(|e| e.contains("JSON")),
+        "the garbage frame must be answered with a JSON error"
+    );
+    println!("  jsonl transport OK ({})", stats.summary());
+
+    // 3. TCP loopback: one connection, one request, clean shutdown
+    let listener = TcpListener::bind("127.0.0.1:0")?;
+    let addr = listener.local_addr()?;
+    let img = images[..elems].to_vec();
+    let frame0 = req_frame(42, &img)?;
+    let client = std::thread::spawn(move || -> anyhow::Result<u64> {
+        use std::io::Write;
+        let mut s = TcpStream::connect(addr)?;
+        s.write_all(&frame0)?;
+        s.flush()?;
+        let payload = frame::read_frame(&mut s, 1 << 22)?
+            .ok_or_else(|| anyhow::anyhow!("connection closed before the response"))?;
+        let resp = Json::parse(std::str::from_utf8(&payload)?)
+            .map_err(|e| anyhow::anyhow!("response is not JSON: {e}"))?;
+        let mut shutdown = Vec::new();
+        frame::write_frame(&mut shutdown, br#"{"cmd": "shutdown"}"#)?;
+        s.write_all(&shutdown)?;
+        s.flush()?;
+        resp.get("id")
+            .and_then(|v| v.as_f64())
+            .map(|v| v as u64)
+            .ok_or_else(|| anyhow::anyhow!("response has no id"))
+    });
+    let stats = serve_tcp(&mut served, listener, &ServeOptions::default())?;
+    let id = client.join().map_err(|_| anyhow::anyhow!("TCP client panicked"))??;
+    anyhow::ensure!(id == 42, "TCP response id {id}, want 42");
+    anyhow::ensure!(stats.requests == 1, "TCP served {} requests, want 1", stats.requests);
+    println!("  tcp transport OK ({})", stats.summary());
+
+    println!("OK");
+    Ok(())
+}

@@ -1,0 +1,179 @@
+//! Bench: the served inference path — deterministic batched forward on
+//! the quantize-once weight/panel cache ([`mls_train::serve`]). Measures
+//! the two structural claims of the serving design: coalescing wins
+//! (`batched_vs_single_throughput`: req/s of a batch-8 forward vs eight
+//! batch-1 forwards) and quantize-once wins
+//! (`cached_vs_requantize_latency`: a batch-1 forward with the weight
+//! cache on vs re-quantizing + re-packing every call), plus served
+//! request latency percentiles (p50/p99 of warm batch-1 forwards) and
+//! req/s rows at offered batch sizes {1, 2, 8}. Steady-state heap
+//! traffic per request is measured by a counting allocator and reported
+//! (not gated: the worker pool's per-call overhead is thread-count
+//! dependent). Writes `BENCH_serve.json`
+//! (schema: `schemas/bench_serve.schema.json`, validated in CI); under
+//! `MLS_BENCH_ENFORCE=1` both ratios gate the build.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::{Duration, Instant};
+
+use mls_train::data::{streams, DatasetConfig, SynthCifar};
+use mls_train::serve::ServedModel;
+use mls_train::util::bench::{bench, black_box, budget, enforce_mode, smoke_mode, BenchReport};
+use mls_train::util::json::Json;
+use mls_train::util::{parallel, stats};
+
+/// [`System`] plus a byte counter (see `bench_train_step.rs`): measure,
+/// don't claim, the steady-state allocation pressure of a served request.
+struct Counting;
+
+static BYTES: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for Counting {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        BYTES.fetch_add(layout.size() as u64, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        BYTES.fetch_add(layout.size() as u64, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        BYTES.fetch_add(new_size as u64, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static COUNTER: Counting = Counting;
+
+const MODEL: &str = "cnn_t";
+const CFG: &str = "e2m4_gnc_eg8mg1_sr";
+
+fn main() {
+    let threads = parallel::num_threads();
+    let b = budget(Duration::from_secs(2));
+    let batch_sizes = [1usize, 2, 8];
+
+    let ds = SynthCifar::new(DatasetConfig::default());
+    let (images, _) = ds.batch(*batch_sizes.iter().max().unwrap(), streams::TEST, 0);
+
+    let mut served = ServedModel::fresh(MODEL, CFG, 0, threads).expect("cnn_t builds");
+    let elems = served.input_elems();
+    let mut logits = Vec::new();
+
+    // warm every offered batch size: first touch quantizes + packs the
+    // weights (once ever) and grows the arena size classes (once per
+    // batch size); everything after is the steady state being measured
+    for &n in &batch_sizes {
+        served.infer_batch(&images[..n * elems], n, &mut logits);
+    }
+    let fwd_macs = served.last_audit().forward.mul_ops; // batch-8 probe
+    println!(
+        "# bench_serve — {MODEL} {CFG}, {fwd_macs} low-bit forward MACs per batch-8 request \
+         wave, {threads} worker threads{}",
+        if smoke_mode() { " [smoke]" } else { "" }
+    );
+
+    let mut report = BenchReport::new("BENCH_serve.json", "bench_serve");
+    report.set("threads", Json::Num(threads as f64));
+    report.set("model", Json::Str(MODEL.to_string()));
+    report.set("cfg", Json::Str(CFG.to_string()));
+
+    // steady-state allocation pressure of a warm batch-1 request
+    let warm_reqs = 8u64;
+    let bytes0 = BYTES.load(Ordering::Relaxed);
+    for _ in 0..warm_reqs {
+        served.infer_batch(&images[..elems], 1, &mut logits);
+        black_box(logits.len());
+    }
+    let bytes_per_request = (BYTES.load(Ordering::Relaxed) - bytes0) as f64 / warm_reqs as f64;
+    report.set("bytes_allocated_per_request", Json::Num(bytes_per_request));
+
+    // offered-load rows: req/s at each coalesced batch size
+    let mut medians = [0.0f64; 3];
+    for (i, &n) in batch_sizes.iter().enumerate() {
+        let r = bench(&format!("serve/{MODEL}_b{n}_t{threads}"), b, || {
+            served.infer_batch(&images[..n * elems], n, &mut logits);
+            black_box(logits.len());
+        });
+        println!(
+            "  -> {:.1} req/s at batch {n} ({:.1} low-bit forward MMAC/s)",
+            r.throughput_items(n as u64),
+            r.throughput_items(fwd_macs * n as u64 / 8) / 1e6
+        );
+        medians[i] = r.median.as_secs_f64();
+        report.add_result(&r, n as u64, "req");
+    }
+    let (t1, t8) = (medians[0], medians[2]);
+
+    // served latency percentiles: per-request wall time of warm batch-1
+    // forwards (the queue-empty service floor; bench() only reports
+    // p10/p90, the serving SLO wants p50/p99)
+    let lat_iters = if smoke_mode() { 60 } else { 2000 };
+    let mut lat_s = Vec::with_capacity(lat_iters);
+    for _ in 0..lat_iters {
+        let t0 = Instant::now();
+        served.infer_batch(&images[..elems], 1, &mut logits);
+        black_box(logits.len());
+        lat_s.push(t0.elapsed().as_secs_f64());
+    }
+    let p50_us = stats::quantile(&lat_s, 0.5) * 1e6;
+    let p99_us = stats::quantile(&lat_s, 0.99) * 1e6;
+    println!("  -> served batch-1 latency: p50 {p50_us:.1}us  p99 {p99_us:.1}us");
+    report.set("p50_us", Json::Num(p50_us));
+    report.set("p99_us", Json::Num(p99_us));
+
+    // the quantize-once claim: same forward with the weight cache off
+    // (every call re-quantizes weights and re-packs panels — what a
+    // server without a persistent cache would pay per request)
+    served.set_weight_cache(false);
+    served.infer_batch(&images[..elems], 1, &mut logits); // warm the toggle
+    let requant = bench(&format!("serve/{MODEL}_b1_requantize_t{threads}"), b, || {
+        served.infer_batch(&images[..elems], 1, &mut logits);
+        black_box(logits.len());
+    });
+    served.set_weight_cache(true);
+    report.add_result(&requant, 1, "req");
+
+    let batched_vs_single = (8.0 / t8) / (1.0 / t1);
+    let cached_vs_requantize = requant.median.as_secs_f64() / t1;
+    println!(
+        "  -> batched_vs_single_throughput {batched_vs_single:.2}x, \
+         cached_vs_requantize_latency {cached_vs_requantize:.2}x"
+    );
+    report.add_ratio("batched_vs_single_throughput", batched_vs_single);
+    report.add_ratio("cached_vs_requantize_latency", cached_vs_requantize);
+
+    // smoke iterations are few and noisy; the 0.9 floor avoids flaking
+    // without a real regression — an actual regression reads well below
+    let floor = if smoke_mode() { 0.9 } else { 1.0 };
+    if enforce_mode() && batched_vs_single < floor {
+        eprintln!(
+            "PERF REGRESSION: batch-8 serving is {batched_vs_single:.3}x the throughput of \
+             batch-1 serving (< {floor})"
+        );
+        std::process::exit(1);
+    }
+    if enforce_mode() && cached_vs_requantize < floor {
+        eprintln!(
+            "PERF REGRESSION: the quantize-once cache saves {cached_vs_requantize:.3}x vs \
+             re-quantizing per request (< {floor})"
+        );
+        std::process::exit(1);
+    }
+
+    match report.write() {
+        Ok(path) => println!("wrote {}", path.display()),
+        Err(e) => {
+            eprintln!("failed to write BENCH_serve.json: {e}");
+            std::process::exit(1);
+        }
+    }
+}

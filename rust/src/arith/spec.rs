@@ -236,6 +236,32 @@ impl ConvSpec {
         }
     }
 
+    /// Forward-only engine-view entry: run the Eq. 7 packed-GEMM forward
+    /// of this conv over caller-owned quantized operands, pre-packed
+    /// stationary panels, and a caller-owned output buffer. This is the
+    /// whole per-request arithmetic of the inference server — with the
+    /// weight planes and panels cached per model, a served forward calls
+    /// exactly this and nothing else — and the same entry the arena
+    /// trainer's forward uses, so served results are bit-identical to
+    /// training-path forwards by construction (values and all five audit
+    /// counters).
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn forward_view(
+        &self,
+        wv: OperandView,
+        wp: &DecodedPlanes,
+        av: OperandView,
+        ap: &DecodedPlanes,
+        n: usize,
+        co_n: usize,
+        ci_n: usize,
+        threads: usize,
+        panels: &pack::PackedWeights,
+        z: &mut [f32],
+    ) -> EngineAudit {
+        run_engine_view(wv, wp, av, ap, n, co_n, self.forward_dims(ci_n), threads, panels, z)
+    }
+
     /// Engine geometry of the weight-gradient pass (`X = qE^T`,
     /// `Y = qA^T`, batch as the reduction group).
     pub(crate) fn wgrad_dims(&self, n_n: usize) -> SpecDims {

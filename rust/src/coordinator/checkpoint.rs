@@ -277,6 +277,16 @@ impl Checkpoint {
             config_echo,
         })
     }
+
+    /// Read and verify a checkpoint at an explicit path (the serve
+    /// loader). Unlike [`CheckpointIo::load_for_resume`] this imposes no
+    /// config-echo equality — an inference config legitimately differs
+    /// from the training config that wrote the file, so the caller
+    /// decides which echo fields matter (model, cfg, seed).
+    pub fn load_file(path: &Path) -> Result<Checkpoint> {
+        let bytes = std::fs::read(path).with_context(|| format!("read checkpoint {path:?}"))?;
+        Checkpoint::decode(&bytes).with_context(|| format!("decode checkpoint {path:?}"))
+    }
 }
 
 /// The FNV-1a-64 integrity trailer over a checkpoint body.
@@ -534,5 +544,22 @@ mod tests {
         io.remove_all().unwrap();
         assert!(io.load_for_resume(&echo).is_none());
         assert!(!io.manifest_path().exists());
+    }
+
+    #[test]
+    fn load_file_verifies_but_skips_the_echo_check() {
+        let dir = std::env::temp_dir().join("mls_ckpt_test").join("load_file");
+        let _ = std::fs::remove_dir_all(&dir);
+        let io = CheckpointIo::new(&dir, "cnn_t_fp32_s0");
+        let ckpt = sample();
+        io.save(&ckpt).unwrap();
+        // explicit-path load succeeds regardless of who asks (no echo)
+        let back = Checkpoint::load_file(&io.latest_path()).unwrap();
+        assert_bit_identical(&ckpt, &back);
+        // ... but integrity is still enforced
+        io.corrupt_latest().unwrap();
+        let err = format!("{:#}", Checkpoint::load_file(&io.latest_path()).unwrap_err());
+        assert!(err.contains("checksum"), "{err}");
+        assert!(Checkpoint::load_file(&dir.join("missing.ckpt.bin")).is_err());
     }
 }

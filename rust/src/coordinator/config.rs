@@ -109,6 +109,17 @@ pub struct TrainConfig {
     /// where to write metrics CSV / checkpoints / the per-layer audit
     /// stream (None = no files)
     pub out_dir: Option<String>,
+    /// serve: max requests coalesced into one forward batch (>= 1)
+    pub serve_batch_max: usize,
+    /// serve: microseconds an open batch waits for more requests before
+    /// dispatch (0 = dispatch whatever is pending immediately)
+    pub serve_batch_wait_us: u64,
+    /// serve transport: "jsonl" (length-prefixed frames on stdin/stdout)
+    /// or "tcp" ([`std::net::TcpListener`], same framing per connection)
+    pub serve_mode: String,
+    /// serve: TCP listen port for `serve_mode=tcp` (0 = OS-assigned,
+    /// printed on startup)
+    pub serve_port: u16,
     /// deterministic fault-injection spec
     /// (`<site>@step<k>[:seed]`, [`crate::util::fault::FaultSpec`]).
     /// NOT a registry key: it never round-trips through
@@ -140,6 +151,10 @@ impl Default for TrainConfig {
             divergence_window: 0,
             divergence_factor: 10.0,
             out_dir: None,
+            serve_batch_max: 8,
+            serve_batch_wait_us: 200,
+            serve_mode: "jsonl".to_string(),
+            serve_port: 0,
             fault: None,
         }
     }
@@ -403,6 +418,52 @@ pub static CONFIG_KEYS: &[KeySpec] = &[
         get: |c| c.out_dir.clone().unwrap_or_default(),
         set: |c, v| {
             c.out_dir = if v.is_empty() { None } else { Some(v.to_string()) };
+            Ok(())
+        },
+    },
+    KeySpec {
+        key: "serve_batch_max",
+        doc: "serve: max requests coalesced into one forward batch (>= 1)",
+        default: || TrainConfig::default().serve_batch_max.to_string(),
+        get: |c| c.serve_batch_max.to_string(),
+        set: |c, v| {
+            let n: usize = v.parse()?;
+            anyhow::ensure!(n >= 1, "serve_batch_max must be >= 1, got {n}");
+            c.serve_batch_max = n;
+            Ok(())
+        },
+    },
+    KeySpec {
+        key: "serve_batch_wait_us",
+        doc: "serve: microseconds an open batch waits for more requests (0 = dispatch immediately)",
+        default: || TrainConfig::default().serve_batch_wait_us.to_string(),
+        get: |c| c.serve_batch_wait_us.to_string(),
+        set: |c, v| {
+            c.serve_batch_wait_us = v.parse()?;
+            Ok(())
+        },
+    },
+    KeySpec {
+        key: "serve_mode",
+        doc: "serve transport: jsonl (length-prefixed frames on stdin/stdout) | tcp",
+        default: || TrainConfig::default().serve_mode,
+        get: |c| c.serve_mode.clone(),
+        set: |c, v| {
+            anyhow::ensure!(
+                v == "jsonl" || v == "tcp",
+                "unknown serve_mode {v:?} (have [\"jsonl\", \"tcp\"])"
+            );
+            c.serve_mode = v.to_string();
+            Ok(())
+        },
+    },
+    KeySpec {
+        key: "serve_port",
+        doc: "serve: TCP listen port for serve_mode=tcp (0 = OS-assigned, printed on startup)",
+        default: || TrainConfig::default().serve_port.to_string(),
+        get: |c| c.serve_port.to_string(),
+        set: |c, v| {
+            c.serve_port = v.parse()?;
             Ok(())
         },
     },
@@ -681,6 +742,27 @@ mod tests {
         assert!(c.set("fault=nan_grad@step1").is_err());
         c.fault = Some("nan_grad@step1".to_string());
         assert!(c.to_json().get("fault").is_none(), "fault must not leak into the echo");
+    }
+
+    #[test]
+    fn serve_keys_validate_at_set_time() {
+        let mut c = TrainConfig::default();
+        assert_eq!(c.serve_batch_max, 8);
+        assert_eq!(c.serve_batch_wait_us, 200);
+        assert_eq!(c.serve_mode, "jsonl");
+        assert_eq!(c.serve_port, 0);
+        c.set("serve_batch_max=32").unwrap();
+        c.set("serve_batch_wait_us=500").unwrap();
+        c.set("serve_mode=tcp").unwrap();
+        c.set("serve_port=7070").unwrap();
+        assert_eq!(c.serve_batch_max, 32);
+        assert_eq!(c.serve_batch_wait_us, 500);
+        assert_eq!(c.serve_mode, "tcp");
+        assert_eq!(c.serve_port, 7070);
+        assert!(c.set("serve_batch_max=0").is_err(), "batch max must be >= 1");
+        let msg = format!("{:#}", c.set("serve_mode=udp").unwrap_err());
+        assert!(msg.contains("jsonl") && msg.contains("tcp"), "{msg}");
+        assert_eq!(c.serve_mode, "tcp", "rejected value must not stick");
     }
 
     #[test]

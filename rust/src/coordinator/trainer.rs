@@ -504,10 +504,14 @@ pub fn train_native(config: &TrainConfig) -> Result<TrainResult> {
         let lr = config.lr.at(step) * lr_scale;
         let seed = step_seed(config, step) as i64;
         let t0 = Instant::now();
-        let (loss, acc, mut grads, step_audit) = model.loss_and_grads(&images, &labels, seed);
+        // the zero-alloc arena path (PR 9), split so the health guard and
+        // fault injection see the gradients BEFORE the update commits:
+        // forward/backward into the step arena, grads parked in the
+        // model's step scratch until finish/discard below
+        let (loss, acc) = model.forward_backward_quiet(&images, &labels, seed);
         steps_executed += 1;
-        fault.poison_grads(step, &mut grads);
-        let gstats = health::grad_stats(&grads);
+        fault.poison_grads(step, model.step_grads_mut());
+        let gstats = health::grad_stats(model.step_grads());
         let verdict = monitor.check(loss, &gstats);
         let streak = monitor.state().1;
 
@@ -518,7 +522,9 @@ pub fn train_native(config: &TrainConfig) -> Result<TrainResult> {
                 if verdict == Verdict::NonFiniteLoss {
                     // legacy diverged-run shape: the update ran before
                     // the loss check (pre-PR-8 `train_step` semantics)
-                    model.apply_update(&grads, lr);
+                    model.finish_step_quiet(lr);
+                } else {
+                    model.discard_step_quiet();
                 }
                 metrics.record_step(StepRow {
                     step,
@@ -527,10 +533,12 @@ pub fn train_native(config: &TrainConfig) -> Result<TrainResult> {
                     acc,
                     step_ms: t0.elapsed().as_secs_f64() * 1e3,
                 });
-                if !step_audit.layers.is_empty() {
-                    audit_totals.merge_totals(&step_audit);
-                    audit_steps += 1;
-                    audit_stream.record(config, step, &step_audit)?;
+                if let Some(step_audit) = model.last_audit() {
+                    if !step_audit.layers.is_empty() {
+                        audit_totals.merge_totals(step_audit);
+                        audit_steps += 1;
+                        audit_stream.record(config, step, step_audit)?;
+                    }
                 }
                 audit_stream.health(
                     config,
@@ -559,6 +567,7 @@ pub fn train_native(config: &TrainConfig) -> Result<TrainResult> {
                 lr_scale *= 0.5;
             }
             let target = last_good.next_step;
+            model.discard_step_quiet();
             model.load_state(&last_good.state)?;
             model.load_optimizer_state(&last_good.opt_state)?;
             metrics.steps = last_good.steps.clone();
@@ -590,7 +599,7 @@ pub fn train_native(config: &TrainConfig) -> Result<TrainResult> {
             continue;
         }
 
-        model.apply_update(&grads, lr);
+        model.finish_step_quiet(lr);
         metrics.record_step(StepRow {
             step,
             lr,
@@ -600,10 +609,12 @@ pub fn train_native(config: &TrainConfig) -> Result<TrainResult> {
         });
         // fp32 runs execute no quantized convs, so they have no audit
         // stream (a record with an empty layer list would be vacuous)
-        if !step_audit.layers.is_empty() {
-            audit_totals.merge_totals(&step_audit);
-            audit_steps += 1;
-            audit_stream.record(config, step, &step_audit)?;
+        if let Some(step_audit) = model.last_audit() {
+            if !step_audit.layers.is_empty() {
+                audit_totals.merge_totals(step_audit);
+                audit_steps += 1;
+                audit_stream.record(config, step, step_audit)?;
+            }
         }
         // the eval must precede the checkpoint: its row belongs to this
         // step, and a resume at step+1 would otherwise never produce it

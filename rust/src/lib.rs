@@ -26,4 +26,5 @@ pub mod hw;
 pub mod mls;
 pub mod nn;
 pub mod runtime;
+pub mod serve;
 pub mod util;

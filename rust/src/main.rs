@@ -3,6 +3,7 @@
 //! ```text
 //! mls-train train        [--set key=value ...]                 one training run
 //! mls-train eval         --state FILE [--model M] [--set ...]  evaluate a checkpoint
+//! mls-train serve        [--checkpoint F.ckpt.bin] [--set ...]  batched inference server
 //! mls-train experiments  --exp <table1|...|ratios> [--set ...] paper tables/figures
 //! mls-train lab run      PLAN.json [--out DIR] [--force]       declarative grid runner
 //! mls-train lab expand   PLAN.json                             print the trial expansion
@@ -75,6 +76,7 @@ fn run() -> Result<()> {
     match args.cmd.as_str() {
         "train" => cmd_train(&args),
         "eval" => cmd_eval(&args),
+        "serve" => cmd_serve(&args),
         "experiments" => cmd_experiments(&args),
         "repro" => {
             eprintln!("note: `repro` is deprecated; use `mls-train experiments`");
@@ -103,6 +105,9 @@ commands:
   train        run one training experiment (--set model=cnn_s --set cfg=e2m4_gnc_eg8mg1_sr);
                backend=native (default) is the self-contained Alg. 1 low-bit trainer
   eval         evaluate a saved state (--state runs/...state.bin [--model cnn_s])
+  serve        batched low-bit inference server over quantize-once panel caches
+               (--checkpoint runs/...ckpt.bin or a fresh init; --set serve_mode=jsonl|tcp,
+               serve_batch_max, serve_batch_wait_us, serve_port)
   experiments  regenerate a paper table/figure (--exp table1..table6, fig2, fig6, fig7,
                eq12, ratios)  [formerly `repro`]
   lab          declarative grid runner over plan files:
@@ -206,6 +211,58 @@ fn cmd_eval(args: &Args) -> Result<()> {
         )?
     };
     println!("{model}: test loss {loss:.4} acc {acc:.3}");
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    if args.help {
+        print_config_help(
+            "serve",
+            "batched low-bit inference server (--checkpoint FILE.ckpt.bin serves a trained \
+             model; otherwise a fresh seeded init of --set model=.../cfg=...); the serve_* \
+             keys below control coalescing and transport. Protocol: 4-byte-LE length-prefixed \
+             JSON frames, requests {\"id\":N,\"image\":[C*H*W floats]}, shutdown \
+             {\"cmd\":\"shutdown\"}",
+        );
+        return Ok(());
+    }
+    let mut config = TrainConfig::default();
+    for kv in &args.sets {
+        config.set(kv)?;
+    }
+    let threads = mls_train::util::parallel::num_threads();
+    let mut served = match args.flags.get("checkpoint") {
+        Some(path) => {
+            mls_train::serve::ServedModel::from_checkpoint(std::path::Path::new(path), threads)?
+        }
+        None => {
+            mls_train::serve::ServedModel::fresh(&config.model, &config.cfg_name, config.seed, threads)?
+        }
+    };
+    let opts = mls_train::serve::ServeOptions::from_config(&config);
+    // status on stderr: stdout is the response channel in jsonl mode
+    eprintln!(
+        "[serve] model {} ({} input floats -> {} classes), batch_max {}, batch_wait {}us",
+        served.name(),
+        served.input_elems(),
+        served.classes(),
+        opts.batch_max,
+        config.serve_batch_wait_us,
+    );
+    let stats = match config.serve_mode.as_str() {
+        "jsonl" => {
+            let stdin = std::io::stdin();
+            let mut stdout = std::io::stdout().lock();
+            mls_train::serve::serve_stream(&mut served, stdin, &mut stdout, &opts)?
+        }
+        "tcp" => {
+            let listener = std::net::TcpListener::bind(("127.0.0.1", config.serve_port))?;
+            eprintln!("[serve] listening on {}", listener.local_addr()?);
+            mls_train::serve::serve_tcp(&mut served, listener, &opts)?
+        }
+        other => return Err(anyhow!("unknown serve_mode {other:?} (have [\"jsonl\", \"tcp\"])")),
+    };
+    eprintln!("[serve] {}", stats.summary());
     Ok(())
 }
 
@@ -335,7 +392,7 @@ fn cmd_bench_info(args: &Args) -> Result<()> {
 
     // measured bench reports at the repo root (written by `cargo bench`)
     let mut found = false;
-    for file in ["BENCH_conv.json", "BENCH_quantize.json", "BENCH_train.json"] {
+    for file in ["BENCH_conv.json", "BENCH_quantize.json", "BENCH_train.json", "BENCH_serve.json"] {
         let Ok(text) = std::fs::read_to_string(file) else { continue };
         let Ok(v) = mls_train::util::json::Json::parse(&text) else {
             println!("bench report {file}: unparseable");

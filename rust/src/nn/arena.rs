@@ -119,14 +119,43 @@ impl BufPool {
     }
 }
 
+/// One conv's quantize-once weight cache: the quantized weight planes
+/// plus their packed forward panels, the pair every forward execution
+/// of the conv consumes. The trainer refreshes it once per step (the
+/// parameter update invalidates the *contents*, never the capacity);
+/// the inference server freezes it once per model
+/// ([`StepArena::freeze_weights`]) and replays it for every request,
+/// so the steady-state serve path never touches the quantizer.
+pub(crate) struct WeightPanels {
+    /// quantized weights (decoded planes + group scales)
+    pub(crate) qw: FusedQuant,
+    /// packed stationary panels of the forward pass
+    pub(crate) pw: PackedWeights,
+    /// contents are valid for the current parameters (set after the
+    /// first quantize+pack; only consulted when the arena is frozen)
+    pub(crate) ready: bool,
+}
+
+impl Default for WeightPanels {
+    fn default() -> Self {
+        WeightPanels {
+            qw: FusedQuant::new(),
+            pw: PackedWeights::default(),
+            ready: false,
+        }
+    }
+}
+
 /// Persistent per-node quantized-conv storage: the step-`i` quantized
 /// operands of one low-bit convolution, plus the transposed plane /
 /// group-scale relayouts and packed panels its backward passes need.
 /// Everything is grow-only `Vec` scratch inside, so after the warm-up
 /// step refilling these allocates nothing.
 pub(crate) struct ConvSlots {
-    /// quantized weights (packed once per step, reused by forward+dgrad)
-    pub(crate) qw: FusedQuant,
+    /// quantized weights + packed forward panels (refilled once per
+    /// step when training, frozen across requests when serving; dgrad
+    /// relayouts read the same `wp.qw` planes)
+    pub(crate) wp: WeightPanels,
     /// quantized activations
     pub(crate) qa: FusedQuant,
     /// quantized output error
@@ -143,8 +172,7 @@ pub(crate) struct ConvSlots {
     pub(crate) at_planes: DecodedPlanes,
     pub(crate) at_sg_exp: Vec<u8>,
     pub(crate) at_sg_man: Vec<u32>,
-    /// packed stationary panels, one per pass
-    pub(crate) pw_fwd: PackedWeights,
+    /// packed stationary panels of the backward passes
     pub(crate) pw_wgrad: PackedWeights,
     pub(crate) pw_dgrad: PackedWeights,
     /// pre-built dispatch labels so the warm loop never formats
@@ -165,7 +193,7 @@ fn empty_planes() -> DecodedPlanes {
 impl Default for ConvSlots {
     fn default() -> Self {
         ConvSlots {
-            qw: FusedQuant::new(),
+            wp: WeightPanels::default(),
             qa: FusedQuant::new(),
             qe: FusedQuant::new(),
             wt_planes: empty_planes(),
@@ -177,7 +205,6 @@ impl Default for ConvSlots {
             at_planes: empty_planes(),
             at_sg_exp: Vec::new(),
             at_sg_man: Vec::new(),
-            pw_fwd: PackedWeights::default(),
             pw_wgrad: PackedWeights::default(),
             pw_dgrad: PackedWeights::default(),
             label_fwd: String::new(),
@@ -204,6 +231,9 @@ pub struct StepArena {
     pub(crate) gslots: Vec<Option<Vec<f32>>>,
     /// stochastic-rounding offset scratch, shared by every quantize
     pub(crate) offsets: Vec<f32>,
+    /// forward-only serving mode: the per-conv [`WeightPanels`] are
+    /// quantized+packed on first use and then replayed verbatim
+    pub(crate) weights_frozen: bool,
 }
 
 impl StepArena {
@@ -232,6 +262,7 @@ impl StepArena {
             uses: Vec::new(),
             gslots: Vec::new(),
             offsets: Vec::new(),
+            weights_frozen: false,
         }
     }
 
@@ -239,6 +270,21 @@ impl StepArena {
     /// allocating. Idempotent; call at the end of every step.
     pub fn end_step(&mut self) {
         self.pool.strict = true;
+    }
+
+    /// Switch the arena into quantize-once serving mode: every conv's
+    /// [`WeightPanels`] is filled on its first forward and then reused
+    /// verbatim by all later forwards. Only valid for eval-style
+    /// forwards (no RNG — the deterministic rounding path consumes no
+    /// offsets, so skipping the weight quantize is bit-neutral) while
+    /// the parameters stay fixed; the executor keeps requantizing when
+    /// an RNG is present, so a frozen arena fed into a training step
+    /// degrades safely instead of reusing stale stochastic planes.
+    /// The pool is deliberately left non-strict: serving coalesces
+    /// variable batch sizes, and each new size class simply warms up
+    /// on first sight.
+    pub fn freeze_weights(&mut self) {
+        self.weights_frozen = true;
     }
 
     /// The pre-formatted dispatch label of conv node `node`, pass
@@ -267,6 +313,15 @@ pub enum StepMem<'a> {
 impl StepMem<'_> {
     pub(crate) fn is_arena(&self) -> bool {
         matches!(self, StepMem::Arena(_))
+    }
+
+    /// Whether the backing arena is in quantize-once serving mode
+    /// (see [`StepArena::freeze_weights`]). Heap mode never is.
+    pub(crate) fn weights_frozen(&self) -> bool {
+        match self {
+            StepMem::Heap => false,
+            StepMem::Arena(a) => a.weights_frozen,
+        }
     }
 
     /// A zero-filled `f32` buffer of exactly `len` elements.

@@ -1063,6 +1063,15 @@ impl Executor<'_> {
     /// weight panel packs once into its persistent buffer, and the
     /// engine runs into a pooled output. Values are bit-identical to
     /// `spec.forward(&qw, &qa, ..)` on freshly quantized tensors.
+    ///
+    /// When the arena is weight-frozen (serving) and the conv's
+    /// [`WeightPanels`](crate::nn::arena::WeightPanels) are ready, the
+    /// weight quantize+pack is skipped entirely and the cached planes
+    /// and panels are replayed. That skip is bit-neutral only for
+    /// RNG-free (evaluation) forwards — with no RNG the weight
+    /// [`offsets_dyn`] draws nothing and nearest rounding makes the
+    /// cached planes identical to a requantize — so the cache is
+    /// bypassed whenever an RNG is present.
     #[allow(clippy::too_many_arguments)]
     fn arena_conv_forward(
         &self,
@@ -1076,32 +1085,41 @@ impl Executor<'_> {
         audit: &mut StepAudit,
         slot: usize,
     ) -> Vec<f32> {
+        // only a deterministic (RNG-free) quantize may populate or reuse
+        // the frozen cache: stochastic weight planes differ per draw
+        let deterministic = rng.is_none();
         let mut cs = mem.take_conv_slots(i);
+        let refresh_w = !(mem.weights_frozen() && deterministic && cs.wp.ready);
         let mut off = mem.take_offsets();
-        let wcfg = offsets_dyn(self.qcfg, rng.as_deref_mut(), l.w.len(), &mut off);
-        quantize_into_planes(&l.w, &[l.co, l.ci, l.k, l.k], &wcfg, &off, &mut cs.qw);
+        if refresh_w {
+            let wcfg = offsets_dyn(self.qcfg, rng.as_deref_mut(), l.w.len(), &mut off);
+            quantize_into_planes(&l.w, &[l.co, l.ci, l.k, l.k], &wcfg, &off, &mut cs.wp.qw);
+        }
         let acfg = offsets_dyn(self.qcfg, rng.as_deref_mut(), x.data.len(), &mut off);
         quantize_into_planes(&x.data, &[n, x.c, x.h, x.w], &acfg, &off, &mut cs.qa);
-        pack::pack_weights_into(
-            &cs.qw.planes,
-            l.co,
-            l.ci * l.k * l.k,
-            self.threads,
-            &mut cs.pw_fwd,
-        );
+        if refresh_w {
+            pack::pack_weights_into(
+                &cs.wp.qw.planes,
+                l.co,
+                l.ci * l.k * l.k,
+                self.threads,
+                &mut cs.wp.pw,
+            );
+            cs.wp.ready = deterministic;
+        }
         let (ho, wo) = (spec.out_h(), spec.out_w());
         let mut z = mem.take_f32(n * l.co * ho * wo);
         let au = with_label(&cs.label_fwd, || {
-            spec::run_engine_view(
-                OperandView::of_fused(&cs.qw),
-                &cs.qw.planes,
+            spec.forward_view(
+                OperandView::of_fused(&cs.wp.qw),
+                &cs.wp.qw.planes,
                 OperandView::of_fused(&cs.qa),
                 &cs.qa.planes,
                 n,
                 l.co,
-                spec.forward_dims(l.ci),
+                l.ci,
                 self.threads,
-                &cs.pw_fwd,
+                &cs.wp.pw,
                 &mut z,
             )
         });
@@ -1200,10 +1218,17 @@ impl Executor<'_> {
 
         if let Some(dx_slot) = dx_slot {
             // dgrad: stationary kernel-flipped W^T [Ci, Co, Kh, Kw], gathered E
-            planes::transpose01_planes(&cs.qw.planes, l.co, l.ci, l.k * l.k, true, &mut cs.wt_planes);
+            planes::transpose01_planes(
+                &cs.wp.qw.planes,
+                l.co,
+                l.ci,
+                l.k * l.k,
+                true,
+                &mut cs.wt_planes,
+            );
             planes::transpose01_groups(
-                &cs.qw.sg_exp,
-                &cs.qw.sg_man,
+                &cs.wp.qw.sg_exp,
+                &cs.wp.qw.sg_man,
                 l.co,
                 l.ci,
                 &mut cs.wt_sg_exp,
@@ -1220,10 +1245,10 @@ impl Executor<'_> {
             let au = with_label(&cs.label_dgrad, || {
                 spec::run_engine_view(
                     OperandView {
-                        s_t: cs.qw.s_t,
+                        s_t: cs.wp.qw.s_t,
                         sg_exp: &cs.wt_sg_exp,
                         sg_man: &cs.wt_sg_man,
-                        fmt: cs.qw.planes.fmt,
+                        fmt: cs.wp.qw.planes.fmt,
                     },
                     &cs.wt_planes,
                     OperandView::of_fused(&cs.qe),

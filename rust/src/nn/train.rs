@@ -298,10 +298,32 @@ impl NativeModel {
         lr: f32,
         seed: i64,
     ) -> (f32, f32) {
+        let (loss, acc) = self.forward_backward_quiet(images, labels, seed);
+        self.finish_step_quiet(lr);
+        (loss, acc)
+    }
+
+    /// The forward+backward half of [`Self::train_step_quiet`]: one full
+    /// Alg. 1 pass on the zero-alloc arena path, leaving the gradients in
+    /// the persistent scratch ([`Self::step_grads`]) and the parameters
+    /// untouched. The coordinator's step loop runs this, inspects and
+    /// possibly mutates the gradients (health guard, fault injection),
+    /// then commits with [`Self::finish_step_quiet`] or abandons the step
+    /// with [`Self::discard_step_quiet`] — the committed sequence is the
+    /// literal body of [`Self::train_step_quiet`], so it is bit-identical
+    /// to the fused call, which in turn is bit-identical to
+    /// [`Self::loss_and_grads`] + [`Self::apply_update`]
+    /// (`rust/tests/zero_alloc.rs`).
+    pub fn forward_backward_quiet(
+        &mut self,
+        images: &[f32],
+        labels: &[i32],
+        seed: i64,
+    ) -> (f32, f32) {
         self.enable_step_arena();
         let n = labels.len();
         let mut rng = Pcg32::new(seed as u64, 0x51e9_a1b2);
-        let NativeModel { graph, qcfg, optimizer, scratch, threads, classes, .. } = self;
+        let NativeModel { graph, qcfg, scratch, threads, classes, .. } = self;
         let s = scratch.as_mut().expect("enable_step_arena ran above");
         let ex = Executor { graph: &*graph, qcfg, threads: *threads };
         let mut mem = StepMem::Arena(&mut s.arena);
@@ -312,12 +334,44 @@ impl NativeModel {
         s.grads.fill(0.0);
         ex.backward_mem(&mut s.tape, dlogits, n, &mut rng, &mut s.grads, &mut s.audit, &mut mem);
         s.audit.roll_up();
-        drop(mem);
+        (loss, acc)
+    }
+
+    /// The gradients left behind by the last
+    /// [`Self::forward_backward_quiet`], laid out like [`Self::state`].
+    pub fn step_grads(&self) -> &[f32] {
+        &self.scratch.as_ref().expect("forward_backward_quiet has not run").grads
+    }
+
+    /// Mutable access to [`Self::step_grads`] (fault injection mutates
+    /// the gradients in place between backward and update).
+    pub fn step_grads_mut(&mut self) -> &mut Vec<f32> {
+        &mut self.scratch.as_mut().expect("forward_backward_quiet has not run").grads
+    }
+
+    /// Commit the step started by [`Self::forward_backward_quiet`]: apply
+    /// the scratch gradients through the optimizer and seal the arena
+    /// warm-up. Same operation sequence as the tail of the fused
+    /// [`Self::train_step_quiet`].
+    pub fn finish_step_quiet(&mut self, lr: f32) {
+        let NativeModel { graph, optimizer, scratch, .. } = self;
+        let s = scratch.as_mut().expect("forward_backward_quiet has not run");
         graph.state_into(&mut s.state);
         optimizer.step(&mut s.state, &s.grads, lr);
         graph.load_state(&s.state).expect("state length is stable");
         s.arena.end_step();
-        (loss, acc)
+    }
+
+    /// Abandon the step started by [`Self::forward_backward_quiet`]
+    /// without touching the parameters (divergence rollback discards the
+    /// poisoned step before restoring the last good checkpoint). Still
+    /// seals the arena warm-up: the executor buffers were all recycled by
+    /// the backward pass, so the next step replays from the pool whether
+    /// or not this one committed.
+    pub fn discard_step_quiet(&mut self) {
+        if let Some(s) = self.scratch.as_mut() {
+            s.arena.end_step();
+        }
     }
 
     /// Evaluate one batch: forward with deterministic nearest rounding,
@@ -327,6 +381,18 @@ impl NativeModel {
         let logits = self.executor().forward(images, labels.len(), None, None, &mut audit);
         let (loss, acc, _) = softmax_ce(&logits, labels, self.classes);
         (loss, acc)
+    }
+
+    /// The raw logits + audit of an [`Self::eval_batch`]-style forward
+    /// (deterministic nearest rounding, no tape, heap memory). This is
+    /// the bit-identity oracle the inference server is pinned against:
+    /// a served forward over the same batch must reproduce these logits
+    /// and all five audit counters exactly (`rust/tests/serve.rs`).
+    pub fn eval_logits(&self, images: &[f32], n: usize) -> (Vec<f32>, StepAudit) {
+        let mut audit = StepAudit::default();
+        let logits = self.executor().forward(images, n, None, None, &mut audit);
+        audit.roll_up();
+        (logits, audit)
     }
 }
 
@@ -455,6 +521,55 @@ mod tests {
             (loss.to_bits(), m.state())
         };
         assert_eq!(run_fused(), run_split(), "the split step must be bit-identical");
+    }
+
+    #[test]
+    fn split_quiet_step_matches_fused_quiet_step_bitwise() {
+        // the coordinator's health-guarded loop (forward_backward_quiet ->
+        // inspect step_grads -> finish_step_quiet) must be bit-identical
+        // to the fused arena step, which zero_alloc.rs pins against the
+        // allocating loss_and_grads path
+        let (images, labels) = batch(3, 6);
+        let run_fused = |steps: usize| {
+            let mut m = native_model("cnn_t", QuantConfig::default(), 9).unwrap();
+            m.enable_step_arena();
+            let mut out = (0, Vec::new());
+            for s in 0..steps {
+                let (loss, _) = m.train_step_quiet(&images, &labels, 0.05, 21 + s as i64);
+                out = (loss.to_bits(), m.state());
+            }
+            (out.0, out.1, m.last_audit().unwrap().clone())
+        };
+        let run_split = |steps: usize| {
+            let mut m = native_model("cnn_t", QuantConfig::default(), 9).unwrap();
+            m.enable_step_arena();
+            let mut out = (0, Vec::new());
+            for s in 0..steps {
+                let (loss, _) = m.forward_backward_quiet(&images, &labels, 21 + s as i64);
+                assert_eq!(m.step_grads().len(), m.state_len());
+                m.finish_step_quiet(0.05);
+                out = (loss.to_bits(), m.state());
+            }
+            (out.0, out.1, m.last_audit().unwrap().clone())
+        };
+        // two steps so the second runs on a warm (strict) arena
+        assert_eq!(run_fused(2), run_split(2), "split quiet step must be bit-identical");
+    }
+
+    #[test]
+    fn discard_step_quiet_leaves_parameters_untouched() {
+        let (images, labels) = batch(3, 6);
+        let mut m = native_model("cnn_t", QuantConfig::default(), 9).unwrap();
+        m.enable_step_arena();
+        let before = m.state();
+        let (loss, _) = m.forward_backward_quiet(&images, &labels, 21);
+        assert!(loss.is_finite());
+        m.discard_step_quiet();
+        assert_eq!(m.state(), before, "a discarded step must not move the parameters");
+        // the next committed step still runs cleanly on the sealed arena
+        let (loss2, _) = m.train_step_quiet(&images, &labels, 0.05, 22);
+        assert!(loss2.is_finite());
+        assert_ne!(m.state(), before);
     }
 
     #[test]

@@ -1,0 +1,176 @@
+//! The coalescing request queue between client reader threads and the
+//! single model thread.
+//!
+//! Readers [`Batcher::push`] items as frames arrive; the model thread
+//! calls [`Batcher::next_batch`], which blocks for the first item, then
+//! holds the batch open up to a deadline (`serve_batch_wait_us`) hoping
+//! to coalesce more — the latency/throughput trade the paper's batched
+//! forward makes worthwhile (one packed-panel pass over N images costs
+//! far less than N passes over one). FIFO order is preserved, which is
+//! what makes per-stream response ordering trivial downstream.
+//!
+//! Generic over the item type so the unit tests below exercise the
+//! blocking/coalescing logic without a model; the server instantiates it
+//! with its crate-private `Item` (requests + in-order error reports).
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// One inference request as queued: which connection it came from, the
+/// client's request id, the flat image, and when it was enqueued (the
+/// served-latency clock starts here).
+pub struct Request {
+    pub conn: usize,
+    pub id: u64,
+    pub image: Vec<f32>,
+    pub enqueued: Instant,
+}
+
+struct Queue<T> {
+    pending: VecDeque<T>,
+    closed: bool,
+}
+
+/// A blocking multi-producer single-consumer coalescing queue.
+pub struct Batcher<T> {
+    q: Mutex<Queue<T>>,
+    cv: Condvar,
+}
+
+impl<T> Default for Batcher<T> {
+    fn default() -> Self {
+        Batcher { q: Mutex::new(Queue { pending: VecDeque::new(), closed: false }), cv: Condvar::new() }
+    }
+}
+
+impl<T> Batcher<T> {
+    pub fn new() -> Batcher<T> {
+        Batcher::default()
+    }
+
+    /// Enqueue one item (any reader thread).
+    pub fn push(&self, item: T) {
+        let mut q = self.q.lock().expect("batcher lock");
+        q.pending.push_back(item);
+        self.cv.notify_all();
+    }
+
+    /// Mark the queue closed: producers stop, [`Self::next_batch`] drains
+    /// what is pending and then returns `None`.
+    pub fn close(&self) {
+        self.q.lock().expect("batcher lock").closed = true;
+        self.cv.notify_all();
+    }
+
+    pub fn is_closed(&self) -> bool {
+        self.q.lock().expect("batcher lock").closed
+    }
+
+    /// Dequeue the next batch, FIFO: blocks until at least one item is
+    /// pending (or `None` when closed and drained), then keeps the batch
+    /// open up to `wait` for more arrivals, capped at `max` items. A
+    /// closed queue dispatches immediately — no point waiting for
+    /// stragglers that cannot come.
+    pub fn next_batch(&self, max: usize, wait: Duration) -> Option<Vec<T>> {
+        let max = max.max(1);
+        let mut q = self.q.lock().expect("batcher lock");
+        while q.pending.is_empty() {
+            if q.closed {
+                return None;
+            }
+            q = self.cv.wait(q).expect("batcher lock");
+        }
+        let deadline = Instant::now() + wait;
+        while q.pending.len() < max && !q.closed {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            let (back, timeout) = self.cv.wait_timeout(q, deadline - now).expect("batcher lock");
+            q = back;
+            if timeout.timed_out() {
+                break;
+            }
+        }
+        let take = q.pending.len().min(max);
+        Some(q.pending.drain(..take).collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    const NO_WAIT: Duration = Duration::from_micros(0);
+
+    #[test]
+    fn drains_fifo_in_max_sized_batches() {
+        let b = Batcher::new();
+        for i in 0..5 {
+            b.push(i);
+        }
+        b.close();
+        assert_eq!(b.next_batch(2, NO_WAIT), Some(vec![0, 1]));
+        assert_eq!(b.next_batch(2, NO_WAIT), Some(vec![2, 3]));
+        assert_eq!(b.next_batch(2, NO_WAIT), Some(vec![4]));
+        assert_eq!(b.next_batch(2, NO_WAIT), None, "closed + drained");
+        assert_eq!(b.next_batch(2, NO_WAIT), None, "None is sticky");
+    }
+
+    #[test]
+    fn empty_closed_queue_returns_none_without_blocking() {
+        let b: Batcher<u32> = Batcher::new();
+        b.close();
+        assert!(b.is_closed());
+        assert_eq!(b.next_batch(8, Duration::from_secs(60)), None);
+    }
+
+    #[test]
+    fn coalesces_items_that_arrive_within_the_wait_window() {
+        let b = Arc::new(Batcher::new());
+        let producer = {
+            let b = Arc::clone(&b);
+            std::thread::spawn(move || {
+                b.push(1);
+                std::thread::sleep(Duration::from_millis(5));
+                b.push(2);
+                b.close();
+            })
+        };
+        // a generous window: both items must land in one batch
+        let batch = b.next_batch(8, Duration::from_secs(10)).unwrap();
+        producer.join().unwrap();
+        assert_eq!(batch, vec![1, 2], "second item must coalesce into the open batch");
+        assert_eq!(b.next_batch(8, NO_WAIT), None);
+    }
+
+    #[test]
+    fn blocks_until_the_first_item_arrives() {
+        let b = Arc::new(Batcher::new());
+        let producer = {
+            let b = Arc::clone(&b);
+            std::thread::spawn(move || {
+                std::thread::sleep(Duration::from_millis(5));
+                b.push(7);
+            })
+        };
+        // zero coalescing wait still blocks for the FIRST item
+        let batch = b.next_batch(4, NO_WAIT).unwrap();
+        producer.join().unwrap();
+        assert_eq!(batch, vec![7]);
+    }
+
+    #[test]
+    fn full_batch_dispatches_without_waiting_out_the_window() {
+        let b = Batcher::new();
+        for i in 0..3 {
+            b.push(i);
+        }
+        let t0 = Instant::now();
+        let batch = b.next_batch(3, Duration::from_secs(60)).unwrap();
+        assert_eq!(batch, vec![0, 1, 2]);
+        assert!(t0.elapsed() < Duration::from_secs(30), "must not sleep out the window");
+    }
+}

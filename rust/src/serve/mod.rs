@@ -1,0 +1,37 @@
+//! Batched low-bit inference serving — the forward-only deployment path.
+//!
+//! The paper's energy argument (Eq. 7 shift-MACs instead of FP multiplies)
+//! applies to the forward pass alone, and serving amortizes what training
+//! cannot: with fixed weights, dynamic weight quantization is a pure
+//! function of the parameters, so the decoded signed-frac/shift planes
+//! and the packed forward panels are computed ONCE per model and reused
+//! by every request. The pieces:
+//!
+//! * [`model`] — [`model::ServedModel`]: a [`crate::nn::NativeModel`]
+//!   plus a weight-frozen step arena ([`crate::nn::StepArena`]); the
+//!   steady-state `infer_batch` quantizes no weights, packs no panels and
+//!   allocates (asymptotically) nothing. Bit-identical to
+//!   `NativeModel::eval_batch` on the same inputs — values and all audit
+//!   counters (pinned by `rust/tests/serve.rs`).
+//! * [`batcher`] — [`batcher::Batcher`]: a blocking coalescing queue;
+//!   concurrent client streams enqueue, the single model thread dequeues
+//!   batches up to `serve_batch_max`, holding an open batch
+//!   `serve_batch_wait_us` for stragglers.
+//! * [`server`] — the protocol (one JSON object per
+//!   [`crate::util::frame`] length-prefixed frame) over two transports:
+//!   [`server::serve_stream`] (stdin/stdout, `mls-train serve`) and
+//!   [`server::serve_tcp`] ([`std::net::TcpListener`], one framed
+//!   connection per client).
+//!
+//! `benches/bench_serve.rs` measures the two structural claims —
+//! `cached_vs_requantize_latency` (quantize-once wins) and
+//! `batched_vs_single_throughput` (coalescing wins) — into
+//! `BENCH_serve.json`.
+
+pub mod batcher;
+pub mod model;
+pub mod server;
+
+pub use batcher::{Batcher, Request};
+pub use model::ServedModel;
+pub use server::{serve_stream, serve_tcp, ServeOptions, ServeStats};

@@ -1,0 +1,130 @@
+//! The quantize-once served model: a trained [`NativeModel`] behind a
+//! weight-frozen step arena.
+//!
+//! Training re-quantizes weights every step because they change every
+//! step. At serve time they never change, so the first `infer_batch`
+//! quantizes each conv's weights into its persistent
+//! [`crate::nn::arena`] plane slots and packs the forward panels once;
+//! [`crate::nn::StepArena::freeze_weights`] then lets every later
+//! deterministic forward skip straight to the Eq. 7 packed-GEMM engine.
+//! Eval-mode quantization draws no RNG (nearest rounding), so skipping
+//! it is invisible to the arithmetic: the served output stays
+//! bit-identical to the heap-path [`NativeModel::eval_logits`] oracle,
+//! values and audit counters both.
+//!
+//! The arena deliberately never enters strict mode ([`crate::nn::arena`]):
+//! coalesced batches vary in size, so the pool must stay allowed to grow
+//! a new size class when a new batch size first appears (steady state at
+//! a given size is still zero-alloc).
+
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::coordinator::Checkpoint;
+use crate::mls::quantizer::QuantConfig;
+use crate::nn::graph::Executor;
+use crate::nn::{native_model, NativeModel, StepArena, StepAudit, StepMem};
+use crate::util::json::Json;
+
+pub struct ServedModel {
+    model: NativeModel,
+    arena: StepArena,
+    audit: StepAudit,
+    threads: usize,
+}
+
+impl ServedModel {
+    /// Wrap an already-constructed model (fresh init or restored state).
+    pub fn from_model(model: NativeModel, threads: usize) -> ServedModel {
+        let mut arena = StepArena::for_graph(&model.graph);
+        arena.freeze_weights();
+        ServedModel { model, arena, audit: StepAudit::default(), threads: threads.max(1) }
+    }
+
+    /// A freshly-initialized model (benchmarks and smoke tests: no
+    /// checkpoint needed, weights are the seeded init).
+    pub fn fresh(model_name: &str, cfg_name: &str, seed: u64, threads: usize) -> Result<ServedModel> {
+        let qcfg = QuantConfig::parse_name(cfg_name)?;
+        Ok(ServedModel::from_model(native_model(model_name, qcfg, seed)?, threads))
+    }
+
+    /// Load a trained model from a step checkpoint written by the
+    /// coordinator ([`crate::coordinator::checkpoint`]). The model name,
+    /// quant config and init seed come from the checkpoint's own config
+    /// echo — serving needs no copy of the training config, and unlike
+    /// resume there is no whole-echo equality requirement.
+    pub fn from_checkpoint(path: &Path, threads: usize) -> Result<ServedModel> {
+        let ckpt = Checkpoint::load_file(path)?;
+        let echo = Json::parse(&ckpt.config_echo)
+            .map_err(|e| anyhow!("checkpoint config echo is not JSON: {e}"))?;
+        let field = |k: &str| {
+            echo.get(k)
+                .and_then(|v| v.as_str())
+                .map(str::to_string)
+                .ok_or_else(|| anyhow!("checkpoint config echo has no {k:?} field"))
+        };
+        let model_name = field("model")?;
+        let cfg_name = field("cfg")?;
+        let seed: u64 = field("seed")?.parse().context("checkpoint config echo seed")?;
+        let qcfg = QuantConfig::parse_name(&cfg_name)?;
+        let mut model = native_model(&model_name, qcfg, seed)?;
+        model
+            .load_state(&ckpt.state)
+            .with_context(|| format!("checkpoint state for model {model_name:?}"))?;
+        Ok(ServedModel::from_model(model, threads))
+    }
+
+    /// Deterministic batched forward into `logits_out`
+    /// (`[n, classes]`, row-major). First call per batch size warms the
+    /// arena and (once ever) quantizes + packs the weights; steady state
+    /// reuses everything.
+    pub fn infer_batch(&mut self, images: &[f32], n: usize, logits_out: &mut Vec<f32>) {
+        let ServedModel { model, arena, audit, threads } = self;
+        let ex = Executor { graph: &model.graph, qcfg: &model.qcfg, threads: *threads };
+        let mut mem = StepMem::Arena(arena);
+        let logits = ex.forward_mem(images, n, None, None, audit, &mut mem);
+        audit.roll_up();
+        logits_out.clear();
+        logits_out.extend_from_slice(&logits);
+        mem.recycle_f32(logits);
+    }
+
+    /// The audit of the most recent [`Self::infer_batch`] (all five
+    /// counters; forward-only, so wgrad/dgrad stay zero).
+    pub fn last_audit(&self) -> &StepAudit {
+        &self.audit
+    }
+
+    /// Toggle the quantize-once weight cache (on by construction). Off,
+    /// every forward re-quantizes and re-packs — the `bench_serve`
+    /// baseline for the `cached_vs_requantize_latency` ratio; values are
+    /// bit-identical either way (nearest rounding is deterministic).
+    pub fn set_weight_cache(&mut self, enabled: bool) {
+        self.arena.weights_frozen = enabled;
+    }
+
+    /// The wrapped model (tests: the `eval_logits` oracle).
+    pub fn model(&self) -> &NativeModel {
+        &self.model
+    }
+
+    /// Elements per request image (`C*H*W` of the model input).
+    pub fn input_elems(&self) -> usize {
+        let (c, h, w) = self.model.input;
+        c * h * w
+    }
+
+    /// Logits per request.
+    pub fn classes(&self) -> usize {
+        self.model.classes
+    }
+
+    pub fn name(&self) -> &str {
+        &self.model.name
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+}

@@ -1,0 +1,495 @@
+//! The serve protocol and its two transports.
+//!
+//! Every message is one JSON object in one length-prefixed frame
+//! ([`crate::util::frame`]: 4-byte LE length + payload). Client -> server:
+//!
+//! * `{"id": <u53>, "image": [<C*H*W floats>]}` — one inference request;
+//! * `{"cmd": "shutdown"}` — stop the server (drains pending requests).
+//!
+//! Server -> client, in per-stream FIFO order:
+//!
+//! * `{"id": .., "argmax": .., "batch": <coalesced batch size>,
+//!   "latency_us": .., "logits": [..]}` — logits are exact: f32 values
+//!   printed as shortest-round-trip f64, so a client parsing them back
+//!   recovers the served bits (pinned in `tests/serve.rs`);
+//! * `{"id": .. | null, "error": "..."}` — a malformed frame. JSON-level
+//!   garbage is recoverable (the frame boundary survives, the stream
+//!   continues); a framing-level error is not — after reporting it the
+//!   stream is dropped, since the byte position is unknowable.
+//!
+//! [`serve_stream`] runs one framed stream (CLI: stdin/stdout);
+//! [`serve_tcp`] accepts N concurrent connections, all feeding one
+//! [`Batcher`] and one model thread, responses demuxed back per
+//! connection.
+
+use std::collections::HashMap;
+use std::io::{self, Read, Write};
+use std::net::{Shutdown, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use super::batcher::{Batcher, Request};
+use super::model::ServedModel;
+use crate::coordinator::TrainConfig;
+use crate::util::frame;
+use crate::util::json::Json;
+
+/// Serve-loop knobs (the `serve_*` config registry keys).
+#[derive(Clone, Debug)]
+pub struct ServeOptions {
+    /// max requests coalesced into one forward batch
+    pub batch_max: usize,
+    /// how long an open batch waits for stragglers
+    pub batch_wait: Duration,
+    /// frame-size cap (a corrupt length prefix must not drive an alloc)
+    pub max_frame: usize,
+}
+
+impl Default for ServeOptions {
+    fn default() -> Self {
+        ServeOptions {
+            batch_max: 8,
+            batch_wait: Duration::from_micros(200),
+            max_frame: 1 << 22,
+        }
+    }
+}
+
+impl ServeOptions {
+    pub fn from_config(c: &TrainConfig) -> ServeOptions {
+        ServeOptions {
+            batch_max: c.serve_batch_max.max(1),
+            batch_wait: Duration::from_micros(c.serve_batch_wait_us),
+            ..ServeOptions::default()
+        }
+    }
+}
+
+/// Per-request service records, aggregated by the dispatch loop
+/// (`bench_serve` and the CLI exit summary read these).
+#[derive(Clone, Debug, Default)]
+pub struct ServeStats {
+    pub requests: u64,
+    pub batches: u64,
+    /// enqueue -> response-built latency, one entry per served request
+    pub latency_us: Vec<u64>,
+    /// coalesced batch size each request rode in, parallel to `latency_us`
+    pub batch_sizes: Vec<usize>,
+}
+
+impl ServeStats {
+    /// Latency percentile in microseconds (nearest-rank on the sorted
+    /// records); 0 when nothing was served.
+    pub fn latency_percentile_us(&self, p: f64) -> u64 {
+        if self.latency_us.is_empty() {
+            return 0;
+        }
+        let mut v = self.latency_us.clone();
+        v.sort_unstable();
+        let idx = ((p / 100.0) * (v.len() - 1) as f64).round() as usize;
+        v[idx.min(v.len() - 1)]
+    }
+
+    pub fn mean_batch(&self) -> f64 {
+        if self.batch_sizes.is_empty() {
+            return 0.0;
+        }
+        self.batch_sizes.iter().sum::<usize>() as f64 / self.batch_sizes.len() as f64
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "served {} requests in {} batches (mean batch {:.2}), latency p50 {}us p99 {}us",
+            self.requests,
+            self.batches,
+            self.mean_batch(),
+            self.latency_percentile_us(50.0),
+            self.latency_percentile_us(99.0)
+        )
+    }
+}
+
+/// One queued unit of work: an inference request, or a malformed-input
+/// report that must be answered in stream order.
+pub(crate) enum Item {
+    Req(Request),
+    Error { conn: usize, id: Option<u64>, error: String },
+}
+
+enum Parsed {
+    Shutdown,
+    Req { id: u64, image: Vec<f32> },
+}
+
+/// Parse one request frame. Errors carry the request id when one was
+/// recoverable from the payload, so the client can correlate.
+fn parse_request(payload: &[u8], expect_elems: usize) -> Result<Parsed, (Option<u64>, String)> {
+    let text = std::str::from_utf8(payload)
+        .map_err(|e| (None, format!("frame payload is not UTF-8: {e}")))?;
+    let j = Json::parse(text).map_err(|e| (None, format!("frame payload is not JSON: {e}")))?;
+    if let Some(cmd) = j.get("cmd").and_then(|v| v.as_str()) {
+        if cmd == "shutdown" {
+            return Ok(Parsed::Shutdown);
+        }
+        return Err((None, format!("unknown cmd {cmd:?} (have [\"shutdown\"])")));
+    }
+    let id = j
+        .get("id")
+        .and_then(|v| v.as_f64())
+        .filter(|v| *v >= 0.0 && v.fract() == 0.0)
+        .map(|v| v as u64)
+        .ok_or_else(|| (None, "request has no non-negative integer \"id\"".to_string()))?;
+    let image = j
+        .get("image")
+        .ok_or_else(|| (Some(id), "request has no \"image\" array".to_string()))?
+        .f32s()
+        .map_err(|e| (Some(id), format!("bad \"image\": {e}")))?;
+    if image.len() != expect_elems {
+        return Err((
+            Some(id),
+            format!("\"image\" has {} elements, model input wants {expect_elems}", image.len()),
+        ));
+    }
+    Ok(Parsed::Req { id, image })
+}
+
+fn argmax(row: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, &x) in row.iter().enumerate() {
+        if x > row[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+fn response_json(id: u64, class: usize, batch: usize, latency_us: u64, logits: &[f32]) -> Json {
+    let mut m = std::collections::BTreeMap::new();
+    m.insert("id".to_string(), Json::Num(id as f64));
+    m.insert("argmax".to_string(), Json::Num(class as f64));
+    m.insert("batch".to_string(), Json::Num(batch as f64));
+    m.insert("latency_us".to_string(), Json::Num(latency_us as f64));
+    m.insert(
+        "logits".to_string(),
+        Json::Arr(logits.iter().map(|&v| Json::Num(v as f64)).collect()),
+    );
+    Json::Obj(m)
+}
+
+fn error_json(id: Option<u64>, error: &str) -> Json {
+    let mut m = std::collections::BTreeMap::new();
+    m.insert("id".to_string(), id.map_or(Json::Null, |v| Json::Num(v as f64)));
+    m.insert("error".to_string(), Json::Str(error.to_string()));
+    Json::Obj(m)
+}
+
+/// Where responses go: the single stream writer, or the per-connection
+/// TCP writer map.
+trait Sink {
+    fn send(&mut self, conn: usize, payload: &[u8]) -> io::Result<()>;
+    fn flush(&mut self) -> io::Result<()> {
+        Ok(())
+    }
+}
+
+struct StreamSink<'a, W: Write> {
+    w: &'a mut W,
+}
+
+impl<W: Write> Sink for StreamSink<'_, W> {
+    fn send(&mut self, _conn: usize, payload: &[u8]) -> io::Result<()> {
+        frame::write_frame(self.w, payload)
+    }
+
+    fn flush(&mut self) -> io::Result<()> {
+        self.w.flush()
+    }
+}
+
+struct TcpSink<'a> {
+    writers: &'a Mutex<HashMap<usize, TcpStream>>,
+}
+
+impl Sink for TcpSink<'_> {
+    fn send(&mut self, conn: usize, payload: &[u8]) -> io::Result<()> {
+        let mut map = self.writers.lock().expect("writer map lock");
+        let w = map
+            .get_mut(&conn)
+            .ok_or_else(|| io::Error::new(io::ErrorKind::NotFound, "connection gone"))?;
+        frame::write_frame(w, payload)
+    }
+}
+
+/// One stream's read half: frames -> parsed items -> the batcher.
+/// Returns `true` when the stream asked for server shutdown.
+fn read_loop(
+    mut reader: impl Read,
+    conn: usize,
+    expect_elems: usize,
+    max_frame: usize,
+    batcher: &Batcher<Item>,
+) -> bool {
+    loop {
+        match frame::read_frame(&mut reader, max_frame) {
+            Ok(None) => return false,
+            Err(e) => {
+                // the byte position after a framing error is unknowable —
+                // report it, then drop the stream rather than serve
+                // garbage from a desynchronized frame boundary
+                batcher.push(Item::Error { conn, id: None, error: format!("frame error: {e}") });
+                return false;
+            }
+            Ok(Some(payload)) => match parse_request(&payload, expect_elems) {
+                Ok(Parsed::Shutdown) => return true,
+                Ok(Parsed::Req { id, image }) => batcher.push(Item::Req(Request {
+                    conn,
+                    id,
+                    image,
+                    enqueued: Instant::now(),
+                })),
+                // JSON-level garbage keeps the frame boundary intact:
+                // answer with an error and keep serving the stream
+                Err((id, error)) => batcher.push(Item::Error { conn, id, error }),
+            },
+        }
+    }
+}
+
+/// The single model thread: coalesced batches in, framed responses out,
+/// per-stream FIFO order preserved (the batcher is FIFO and responses
+/// are emitted in item order).
+fn dispatch_loop(
+    model: &mut ServedModel,
+    batcher: &Batcher<Item>,
+    opts: &ServeOptions,
+    sink: &mut dyn Sink,
+) -> ServeStats {
+    let mut stats = ServeStats::default();
+    let classes = model.classes();
+    let elems = model.input_elems();
+    let mut images: Vec<f32> = Vec::new();
+    let mut logits: Vec<f32> = Vec::new();
+    while let Some(batch) = batcher.next_batch(opts.batch_max, opts.batch_wait) {
+        let n = batch.iter().filter(|it| matches!(it, Item::Req(_))).count();
+        if n > 0 {
+            images.clear();
+            for it in &batch {
+                if let Item::Req(r) = it {
+                    images.extend_from_slice(&r.image);
+                }
+            }
+            debug_assert_eq!(images.len(), n * elems);
+            model.infer_batch(&images, n, &mut logits);
+            stats.batches += 1;
+        }
+        let mut k = 0;
+        for it in &batch {
+            match it {
+                Item::Req(r) => {
+                    let row = &logits[k * classes..(k + 1) * classes];
+                    k += 1;
+                    let latency_us = r.enqueued.elapsed().as_micros() as u64;
+                    let resp = response_json(r.id, argmax(row), n, latency_us, row);
+                    if let Err(e) = sink.send(r.conn, resp.to_string_compact().as_bytes()) {
+                        eprintln!("[serve] conn {}: dropping response {}: {e}", r.conn, r.id);
+                    }
+                    stats.requests += 1;
+                    stats.latency_us.push(latency_us);
+                    stats.batch_sizes.push(n);
+                }
+                Item::Error { conn, id, error } => {
+                    let payload = error_json(*id, error).to_string_compact();
+                    if let Err(e) = sink.send(*conn, payload.as_bytes()) {
+                        eprintln!("[serve] conn {conn}: dropping error response: {e}");
+                    }
+                }
+            }
+        }
+        if let Err(e) = sink.flush() {
+            eprintln!("[serve] flush: {e}");
+        }
+    }
+    stats
+}
+
+/// Serve one framed stream (the `serve_mode=jsonl` CLI path: stdin in,
+/// stdout out). Returns when the stream reaches EOF or sends
+/// `{"cmd":"shutdown"}`, after draining every pending request.
+pub fn serve_stream<R, W>(
+    model: &mut ServedModel,
+    reader: R,
+    writer: &mut W,
+    opts: &ServeOptions,
+) -> Result<ServeStats>
+where
+    R: Read + Send + 'static,
+    W: Write,
+{
+    let batcher = Arc::new(Batcher::<Item>::new());
+    let expect_elems = model.input_elems();
+    let max_frame = opts.max_frame;
+    let reader_thread = {
+        let batcher = Arc::clone(&batcher);
+        std::thread::spawn(move || {
+            let _shutdown = read_loop(reader, 0, expect_elems, max_frame, &batcher);
+            // single-stream mode: EOF and shutdown both end the server
+            batcher.close();
+        })
+    };
+    let mut sink = StreamSink { w: writer };
+    let stats = dispatch_loop(model, &batcher, opts, &mut sink);
+    reader_thread.join().map_err(|_| anyhow::anyhow!("serve reader thread panicked"))?;
+    Ok(stats)
+}
+
+/// Serve N concurrent TCP connections, each carrying the same framing,
+/// all coalescing into one model. Runs until some connection sends
+/// `{"cmd":"shutdown"}`; pending requests are drained first.
+pub fn serve_tcp(
+    model: &mut ServedModel,
+    listener: TcpListener,
+    opts: &ServeOptions,
+) -> Result<ServeStats> {
+    let addr = listener.local_addr()?;
+    let batcher = Arc::new(Batcher::<Item>::new());
+    let writers: Arc<Mutex<HashMap<usize, TcpStream>>> = Arc::new(Mutex::new(HashMap::new()));
+    let stop = Arc::new(AtomicBool::new(false));
+    let reader_threads: Arc<Mutex<Vec<std::thread::JoinHandle<()>>>> =
+        Arc::new(Mutex::new(Vec::new()));
+    let expect_elems = model.input_elems();
+    let max_frame = opts.max_frame;
+
+    let accept_thread = {
+        let batcher = Arc::clone(&batcher);
+        let writers = Arc::clone(&writers);
+        let stop = Arc::clone(&stop);
+        let reader_threads = Arc::clone(&reader_threads);
+        std::thread::spawn(move || {
+            let mut next_conn = 0usize;
+            loop {
+                let stream = match listener.accept() {
+                    Ok((s, _)) => s,
+                    Err(e) => {
+                        if !stop.load(Ordering::SeqCst) {
+                            eprintln!("[serve] accept failed: {e}");
+                        }
+                        break;
+                    }
+                };
+                if stop.load(Ordering::SeqCst) {
+                    break; // the shutdown self-connection (or a late client)
+                }
+                let conn = next_conn;
+                next_conn += 1;
+                let write_half = match stream.try_clone() {
+                    Ok(w) => w,
+                    Err(e) => {
+                        eprintln!("[serve] conn {conn}: clone failed: {e}");
+                        continue;
+                    }
+                };
+                writers.lock().expect("writer map lock").insert(conn, write_half);
+                let batcher = Arc::clone(&batcher);
+                let stop = Arc::clone(&stop);
+                reader_threads.lock().expect("reader list lock").push(std::thread::spawn(
+                    move || {
+                        if read_loop(stream, conn, expect_elems, max_frame, &batcher) {
+                            // shutdown: stop accepting, drain, and poke the
+                            // accept loop awake with a throwaway connection
+                            stop.store(true, Ordering::SeqCst);
+                            batcher.close();
+                            let _ = TcpStream::connect(addr);
+                        }
+                    },
+                ));
+            }
+        })
+    };
+
+    let mut sink = TcpSink { writers: &writers };
+    let stats = dispatch_loop(model, &batcher, opts, &mut sink);
+
+    // teardown: the accept loop is already stopping (stop + self-connect
+    // from the shutdown reader); unblock any reader still in read() by
+    // closing its socket, then join everything
+    stop.store(true, Ordering::SeqCst);
+    let _ = TcpStream::connect(addr);
+    accept_thread.join().map_err(|_| anyhow::anyhow!("serve accept thread panicked"))?;
+    for w in writers.lock().expect("writer map lock").values() {
+        let _ = w.shutdown(Shutdown::Both);
+    }
+    let handles: Vec<_> = reader_threads.lock().expect("reader list lock").drain(..).collect();
+    for h in handles {
+        h.join().map_err(|_| anyhow::anyhow!("serve reader thread panicked"))?;
+    }
+    Ok(stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_request_accepts_the_protocol_shapes() {
+        let ok = parse_request(br#"{"id": 7, "image": [1.5, -2.0]}"#, 2).unwrap();
+        match ok {
+            Parsed::Req { id, image } => {
+                assert_eq!(id, 7);
+                assert_eq!(image, vec![1.5, -2.0]);
+            }
+            Parsed::Shutdown => panic!("not a shutdown"),
+        }
+        assert!(matches!(
+            parse_request(br#"{"cmd": "shutdown"}"#, 2).unwrap(),
+            Parsed::Shutdown
+        ));
+    }
+
+    #[test]
+    fn parse_request_rejects_malformed_payloads_with_context() {
+        let (id, e) = parse_request(b"\xff\xfe", 2).unwrap_err();
+        assert!(id.is_none() && e.contains("UTF-8"), "{e}");
+        let (id, e) = parse_request(b"{not json", 2).unwrap_err();
+        assert!(id.is_none() && e.contains("JSON"), "{e}");
+        let (id, e) = parse_request(br#"{"image": [1]}"#, 1).unwrap_err();
+        assert!(id.is_none() && e.contains("id"), "{e}");
+        let (id, e) = parse_request(br#"{"id": -3, "image": [1]}"#, 1).unwrap_err();
+        assert!(id.is_none() && e.contains("id"), "negative id: {e}");
+        let (id, e) = parse_request(br#"{"id": 4}"#, 1).unwrap_err();
+        assert_eq!(id, Some(4));
+        assert!(e.contains("image"), "{e}");
+        let (id, e) = parse_request(br#"{"id": 4, "image": [1, 2, 3]}"#, 2).unwrap_err();
+        assert_eq!(id, Some(4), "length mismatch keeps the id");
+        assert!(e.contains("3 elements") && e.contains('2'), "{e}");
+        let (id, e) = parse_request(br#"{"cmd": "reboot"}"#, 2).unwrap_err();
+        assert!(id.is_none() && e.contains("reboot"), "{e}");
+    }
+
+    #[test]
+    fn argmax_takes_the_first_maximum() {
+        assert_eq!(argmax(&[0.1, 3.0, -2.0]), 1);
+        assert_eq!(argmax(&[5.0, 5.0, 1.0]), 0, "ties break to the lowest index");
+        assert_eq!(argmax(&[-1.0]), 0);
+    }
+
+    #[test]
+    fn response_logits_round_trip_bit_exactly_through_json() {
+        // f32 -> f64 is exact, and Json prints f64 shortest-round-trip:
+        // the client recovers the served bits (the contract tests/serve.rs
+        // leans on end to end)
+        let logits = [1.0f32, -0.33333334, f32::MIN_POSITIVE, 7.21e-30, -0.0];
+        let resp = response_json(9, 0, 4, 123, &logits);
+        let back = Json::parse(&resp.to_string_compact()).unwrap();
+        let got = back.get("logits").unwrap().f32s().unwrap();
+        for (a, b) in logits.iter().zip(&got) {
+            assert_eq!(a.to_bits(), b.to_bits(), "{a} vs {b}");
+        }
+        assert_eq!(back.get("id").and_then(|v| v.as_f64()), Some(9.0));
+        assert_eq!(back.get("batch").and_then(|v| v.as_f64()), Some(4.0));
+        let err = error_json(None, "boom").to_string_compact();
+        assert!(err.contains("null") && err.contains("boom"), "{err}");
+    }
+}

@@ -1,0 +1,102 @@
+//! Length-prefixed framing for the serve protocol: every message on a
+//! stream (stdin/stdout or one TCP connection) is a 4-byte little-endian
+//! length followed by that many payload bytes. The payload is one JSON
+//! object ([`crate::serve::server`] defines the request/response shapes);
+//! the framing layer itself is payload-agnostic.
+//!
+//! Error discipline (pinned in the tests below and `tests/serve.rs`):
+//!
+//! * EOF exactly at a frame boundary is a clean end-of-stream
+//!   (`Ok(None)`), the normal way a client hangs up;
+//! * EOF mid-prefix or mid-payload is a truncated frame
+//!   ([`std::io::ErrorKind::UnexpectedEof`]);
+//! * a length above `max_len` is rejected BEFORE allocating
+//!   ([`std::io::ErrorKind::InvalidData`]) — a corrupt or hostile prefix
+//!   must not drive a huge allocation.
+
+use std::io::{self, Read, Write};
+
+/// Write one frame: 4-byte LE length prefix, then the payload.
+pub fn write_frame(w: &mut impl Write, payload: &[u8]) -> io::Result<()> {
+    let len = u32::try_from(payload.len())
+        .map_err(|_| io::Error::new(io::ErrorKind::InvalidData, "frame payload exceeds u32"))?;
+    w.write_all(&len.to_le_bytes())?;
+    w.write_all(payload)?;
+    Ok(())
+}
+
+/// Read one frame. `Ok(None)` on clean EOF (stream closed between
+/// frames); errors on truncation mid-frame or a length above `max_len`.
+pub fn read_frame(r: &mut impl Read, max_len: usize) -> io::Result<Option<Vec<u8>>> {
+    let mut prefix = [0u8; 4];
+    // hand-rolled first read so EOF-at-boundary and EOF-mid-prefix are
+    // distinguishable (read_exact collapses both into UnexpectedEof)
+    let mut got = 0;
+    while got < prefix.len() {
+        match r.read(&mut prefix[got..])? {
+            0 if got == 0 => return Ok(None),
+            0 => {
+                return Err(io::Error::new(
+                    io::ErrorKind::UnexpectedEof,
+                    format!("truncated frame: EOF after {got} of 4 length-prefix bytes"),
+                ))
+            }
+            n => got += n,
+        }
+    }
+    let len = u32::from_le_bytes(prefix) as usize;
+    if len > max_len {
+        return Err(io::Error::new(
+            io::ErrorKind::InvalidData,
+            format!("frame length {len} exceeds the {max_len}-byte limit"),
+        ));
+    }
+    let mut payload = vec![0u8; len];
+    r.read_exact(&mut payload).map_err(|e| {
+        io::Error::new(
+            io::ErrorKind::UnexpectedEof,
+            format!("truncated frame: wanted {len} payload bytes: {e}"),
+        )
+    })?;
+    Ok(Some(payload))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    #[test]
+    fn round_trips_frames_in_order() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, b"hello").unwrap();
+        write_frame(&mut buf, b"").unwrap();
+        write_frame(&mut buf, &[0u8, 255, 7]).unwrap();
+        let mut r = Cursor::new(buf);
+        assert_eq!(read_frame(&mut r, 1024).unwrap().as_deref(), Some(&b"hello"[..]));
+        assert_eq!(read_frame(&mut r, 1024).unwrap().as_deref(), Some(&b""[..]));
+        assert_eq!(read_frame(&mut r, 1024).unwrap().as_deref(), Some(&[0u8, 255, 7][..]));
+        assert!(read_frame(&mut r, 1024).unwrap().is_none(), "clean EOF at boundary");
+        assert!(read_frame(&mut r, 1024).unwrap().is_none(), "EOF is sticky");
+    }
+
+    #[test]
+    fn truncation_is_an_unexpected_eof() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, b"payload").unwrap();
+        for cut in [1, 3, 4, 6, buf.len() - 1] {
+            let mut r = Cursor::new(buf[..cut].to_vec());
+            let err = read_frame(&mut r, 1024).unwrap_err();
+            assert_eq!(err.kind(), io::ErrorKind::UnexpectedEof, "cut at {cut}: {err}");
+        }
+    }
+
+    #[test]
+    fn oversized_length_is_rejected_without_allocating() {
+        let mut buf = (u32::MAX).to_le_bytes().to_vec();
+        buf.extend_from_slice(b"x");
+        let err = read_frame(&mut Cursor::new(buf), 1 << 20).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::InvalidData);
+        assert!(err.to_string().contains("exceeds"), "{err}");
+    }
+}

@@ -22,10 +22,13 @@
 //! * [`fsio`] — crash-durable atomic file replacement (fsync file +
 //!   parent directory around the rename),
 //! * [`fault`] — the deterministic `MLS_FAULT=<site>@step<k>[:seed]`
-//!   fault-injection harness the crash-safety tests drive.
+//!   fault-injection harness the crash-safety tests drive,
+//! * [`frame`] — length-prefixed message framing for the serve protocol
+//!   (stdin/jsonl and TCP share it).
 
 pub mod bench;
 pub mod fault;
+pub mod frame;
 pub mod fsio;
 pub mod json;
 pub mod parallel;

@@ -1,0 +1,378 @@
+//! End-to-end contracts of the inference server ([`mls_train::serve`]):
+//!
+//! 1. A served forward on the quantize-once weight/panel cache is
+//!    **bit-identical** to the heap-path [`NativeModel::eval_logits`]
+//!    oracle on the same batch — logits bits and all five audit
+//!    counters — across {1, 2, 8} worker threads and every SIMD
+//!    dispatch level this CPU supports, with the weight cache on or
+//!    off, on a fresh model or one restored from a step checkpoint.
+//! 2. The framed protocol round-trips: per-stream FIFO response order,
+//!    coalesced-batch demux (each response's `batch` field names the
+//!    group it rode in, and the group's logits match the oracle on
+//!    exactly that coalesced batch), logits transported bit-exactly
+//!    through JSON.
+//! 3. Malformed input is contained: JSON-level garbage gets an error
+//!    response and the stream continues; a framing-level error (length
+//!    prefix pointing past the bytes) gets an error and the stream is
+//!    dropped.
+//!
+//! [`NativeModel::eval_logits`]: mls_train::nn::train::NativeModel::eval_logits
+
+use std::collections::BTreeMap;
+use std::io::Cursor;
+use std::net::{TcpListener, TcpStream};
+use std::sync::mpsc;
+use std::time::Duration;
+
+use mls_train::coordinator::{train_native, TrainConfig};
+use mls_train::data::{streams, DatasetConfig, SynthCifar};
+use mls_train::mls::quantizer::QuantConfig;
+use mls_train::nn::train::native_model;
+use mls_train::serve::{serve_stream, serve_tcp, ServeOptions, ServedModel};
+use mls_train::util::frame;
+use mls_train::util::json::Json;
+use mls_train::util::simd::{self, Level};
+
+/// The paper's default quantized config — the one the server exists for.
+const CFG: &str = "e2m4_gnc_eg8mg1_sr";
+
+fn images(n: usize) -> Vec<f32> {
+    let ds = SynthCifar::new(DatasetConfig { noise: 1.0, seed: 5, ..Default::default() });
+    ds.batch(n, streams::TEST, 0).0
+}
+
+fn req_frame(id: u64, image: &[f32]) -> Vec<u8> {
+    let mut m = BTreeMap::new();
+    m.insert("id".to_string(), Json::Num(id as f64));
+    m.insert(
+        "image".to_string(),
+        Json::Arr(image.iter().map(|&v| Json::Num(v as f64)).collect()),
+    );
+    let mut buf = Vec::new();
+    frame::write_frame(&mut buf, Json::Obj(m).to_string_compact().as_bytes()).unwrap();
+    buf
+}
+
+fn shutdown_frame() -> Vec<u8> {
+    let mut buf = Vec::new();
+    frame::write_frame(&mut buf, br#"{"cmd": "shutdown"}"#).unwrap();
+    buf
+}
+
+/// Parse every response frame out of a finished writer buffer.
+fn read_responses(buf: &[u8]) -> Vec<Json> {
+    let mut r = buf;
+    let mut out = Vec::new();
+    while let Some(p) = frame::read_frame(&mut r, 1 << 22).unwrap() {
+        out.push(Json::parse(std::str::from_utf8(&p).unwrap()).unwrap());
+    }
+    out
+}
+
+fn get_u64(j: &Json, key: &str) -> u64 {
+    j.get(key).and_then(|v| v.as_f64()).unwrap_or_else(|| panic!("no {key} in {j:?}")) as u64
+}
+
+fn assert_bits_eq(got: &[f32], want: &[f32], tag: &str) {
+    assert_eq!(got.len(), want.len(), "{tag}: length");
+    for (i, (a, b)) in got.iter().zip(want).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "{tag}: logit {i}: {a} vs {b}");
+    }
+}
+
+/// Contract 1: the cached served forward reproduces the eval oracle
+/// exactly — bits and audit — at every thread count and SIMD level.
+#[test]
+fn served_forward_is_bit_identical_to_the_eval_oracle() {
+    let imgs = images(4);
+    let prev = simd::active();
+    for threads in [1usize, 2, 8] {
+        for level in Level::supported() {
+            simd::set_level(level);
+            let mut served = ServedModel::fresh("cnn_t", CFG, 9, threads).unwrap();
+            let mut logits = Vec::new();
+            // first call quantizes + packs the weights; SECOND call is
+            // the cached steady state under test
+            served.infer_batch(&imgs, 4, &mut logits);
+            served.infer_batch(&imgs, 4, &mut logits);
+            let (oracle, oracle_audit) = served.model().eval_logits(&imgs, 4);
+            let tag = format!("threads={threads} simd={level:?}");
+            assert_bits_eq(&logits, &oracle, &tag);
+            assert_eq!(served.last_audit(), &oracle_audit, "{tag}: audit counters");
+        }
+    }
+    simd::set_level(prev);
+}
+
+/// Contract 1, cache axis: repeated serves and the requantize baseline
+/// (`set_weight_cache(false)`) all produce the same bits — nearest
+/// rounding is deterministic, the cache only saves work.
+#[test]
+fn weight_cache_toggle_never_changes_the_bits() {
+    let imgs = images(2);
+    let mut served = ServedModel::fresh("cnn_t", CFG, 3, 2).unwrap();
+    let (mut cached, mut repeat, mut uncached) = (Vec::new(), Vec::new(), Vec::new());
+    served.infer_batch(&imgs, 2, &mut cached);
+    served.infer_batch(&imgs, 2, &mut repeat);
+    assert_bits_eq(&repeat, &cached, "second cached serve");
+    served.set_weight_cache(false);
+    served.infer_batch(&imgs, 2, &mut uncached);
+    assert_bits_eq(&uncached, &cached, "requantize-every-call baseline");
+    let audit_uncached = served.last_audit().clone();
+    served.set_weight_cache(true);
+    served.infer_batch(&imgs, 2, &mut repeat);
+    assert_bits_eq(&repeat, &cached, "re-frozen cache");
+    assert_eq!(served.last_audit(), &audit_uncached, "audit counters ignore the cache");
+}
+
+/// Contract 1, checkpoint axis: a model served from a coordinator step
+/// checkpoint is bit-identical to one rebuilt from the run's final state.
+#[test]
+fn checkpoint_and_final_state_serve_identical_logits() {
+    let dir = std::env::temp_dir().join("mls_serve_test").join("ckpt_parity");
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+
+    let mut config = TrainConfig::default();
+    config.model = "cnn_t".to_string();
+    config.cfg_name = CFG.to_string();
+    config.seed = 11;
+    config.steps = 2;
+    config.batch = 2;
+    config.checkpoint_every = 1;
+    config.out_dir = Some(dir.to_string_lossy().into_owned());
+    let result = train_native(&config).unwrap();
+
+    let ckpt_path = dir.join(format!("cnn_t_{CFG}_s11.ckpt.bin"));
+    let mut from_ckpt = ServedModel::from_checkpoint(&ckpt_path, 2).unwrap();
+
+    let mut model = native_model("cnn_t", QuantConfig::parse_name(CFG).unwrap(), 11).unwrap();
+    model.load_state(&result.final_state).unwrap();
+    let mut from_state = ServedModel::from_model(model, 2);
+
+    let imgs = images(3);
+    let (mut a, mut b) = (Vec::new(), Vec::new());
+    from_ckpt.infer_batch(&imgs, 3, &mut a);
+    from_state.infer_batch(&imgs, 3, &mut b);
+    assert_bits_eq(&a, &b, "checkpoint vs final_state");
+    assert_eq!(from_ckpt.last_audit(), from_state.last_audit(), "audit counters");
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Contract 2, unbatched: `batch_max = 1` serves each request alone, in
+/// FIFO order, each response bit-identical to the single-image oracle.
+#[test]
+fn serve_stream_answers_in_fifo_order_with_exact_logits() {
+    let mut served = ServedModel::fresh("cnn_t", CFG, 7, 2).unwrap();
+    let elems = served.input_elems();
+    let classes = served.classes();
+    let imgs = images(3);
+
+    let mut input = Vec::new();
+    for (i, id) in [5u64, 6, 7].iter().enumerate() {
+        input.extend_from_slice(&req_frame(*id, &imgs[i * elems..(i + 1) * elems]));
+    }
+    input.extend_from_slice(&shutdown_frame());
+
+    let opts = ServeOptions { batch_max: 1, batch_wait: Duration::ZERO, ..Default::default() };
+    let mut out = Vec::new();
+    let stats = serve_stream(&mut served, Cursor::new(input), &mut out, &opts).unwrap();
+    assert_eq!(stats.requests, 3);
+    assert_eq!(stats.batches, 3, "batch_max=1 must never coalesce");
+
+    let resps = read_responses(&out);
+    assert_eq!(resps.len(), 3);
+    for (i, (resp, id)) in resps.iter().zip([5u64, 6, 7]).enumerate() {
+        let row = &imgs[i * elems..(i + 1) * elems];
+        let (oracle, _) = served.model().eval_logits(row, 1);
+        assert_eq!(get_u64(resp, "id"), id, "FIFO response order");
+        assert_eq!(get_u64(resp, "batch"), 1);
+        assert_eq!(get_u64(resp, "argmax") as usize, argmax(&oracle), "served class");
+        let logits = resp.get("logits").unwrap().f32s().unwrap();
+        assert_eq!(logits.len(), classes);
+        assert_bits_eq(&logits, &oracle, "logits through JSON");
+    }
+}
+
+/// Contract 2, coalesced: whatever grouping the batcher lands on, each
+/// response names its group size and the group's logits match the
+/// oracle run on exactly that coalesced batch (BN uses batch statistics,
+/// so the group composition is part of the answer — this is the demux
+/// contract).
+#[test]
+fn coalesced_batches_demux_back_to_the_right_requests() {
+    let mut served = ServedModel::fresh("cnn_t", CFG, 7, 2).unwrap();
+    let elems = served.input_elems();
+    let classes = served.classes();
+    let imgs = images(4);
+
+    let mut input = Vec::new();
+    for (i, id) in [1u64, 2, 3, 4].iter().enumerate() {
+        input.extend_from_slice(&req_frame(*id, &imgs[i * elems..(i + 1) * elems]));
+    }
+    input.extend_from_slice(&shutdown_frame());
+
+    // a generous window: the whole pre-buffered stream normally lands in
+    // one batch, but the contract below holds for ANY grouping
+    let opts =
+        ServeOptions { batch_max: 8, batch_wait: Duration::from_millis(500), ..Default::default() };
+    let mut out = Vec::new();
+    let stats = serve_stream(&mut served, Cursor::new(input), &mut out, &opts).unwrap();
+    assert_eq!(stats.requests, 4);
+
+    let resps = read_responses(&out);
+    assert_eq!(resps.len(), 4);
+    let mut i = 0;
+    while i < resps.len() {
+        let n = get_u64(&resps[i], "batch") as usize;
+        assert!(n >= 1 && i + n <= resps.len(), "batch {n} at response {i}");
+        let group = &imgs[i * elems..(i + n) * elems];
+        let (oracle, _) = served.model().eval_logits(group, n);
+        for k in 0..n {
+            let resp = &resps[i + k];
+            assert_eq!(get_u64(resp, "id"), (i + k) as u64 + 1, "FIFO across the batch");
+            assert_eq!(get_u64(resp, "batch") as usize, n, "every rider reports its group");
+            let logits = resp.get("logits").unwrap().f32s().unwrap();
+            let row = &oracle[k * classes..(k + 1) * classes];
+            assert_bits_eq(&logits, row, &format!("demuxed row {k} of batch at {i}"));
+        }
+        i += n;
+    }
+}
+
+/// Contract 3a: JSON-level garbage inside a well-formed frame gets an
+/// error response (id echoed when recoverable) and the stream keeps
+/// serving.
+#[test]
+fn malformed_json_gets_an_error_and_the_stream_continues() {
+    let mut served = ServedModel::fresh("cnn_t", CFG, 7, 1).unwrap();
+    let elems = served.input_elems();
+    let imgs = images(2);
+
+    let mut input = Vec::new();
+    input.extend_from_slice(&req_frame(1, &imgs[..elems]));
+    frame::write_frame(&mut input, b"{this is not json").unwrap();
+    frame::write_frame(&mut input, br#"{"id": 9, "image": [1.0]}"#).unwrap(); // wrong length
+    input.extend_from_slice(&req_frame(2, &imgs[elems..2 * elems]));
+    input.extend_from_slice(&shutdown_frame());
+
+    let opts = ServeOptions { batch_max: 8, batch_wait: Duration::ZERO, ..Default::default() };
+    let mut out = Vec::new();
+    let stats = serve_stream(&mut served, Cursor::new(input), &mut out, &opts).unwrap();
+    assert_eq!(stats.requests, 2, "both good requests around the garbage were served");
+
+    let resps = read_responses(&out);
+    assert_eq!(resps.len(), 4, "two answers + two errors, in stream order");
+    assert_eq!(get_u64(&resps[0], "id"), 1);
+    assert!(resps[0].get("error").is_none());
+    assert!(matches!(resps[1].get("id"), Some(Json::Null)), "unparseable: no id to echo");
+    assert!(resps[1].get("error").and_then(|e| e.as_str()).unwrap().contains("JSON"));
+    assert_eq!(get_u64(&resps[2], "id"), 9, "length mismatch echoes the id");
+    assert!(resps[2].get("error").and_then(|e| e.as_str()).unwrap().contains("elements"));
+    assert_eq!(get_u64(&resps[3], "id"), 2, "stream continued after both");
+    assert!(resps[3].get("error").is_none());
+}
+
+/// Contract 3b: a frame whose length prefix points past the actual bytes
+/// is a framing error — one error response, then the stream is dropped
+/// (the byte position is unknowable), after serving what came before.
+#[test]
+fn truncated_frame_reports_a_frame_error_and_drops_the_stream() {
+    let mut served = ServedModel::fresh("cnn_t", CFG, 7, 1).unwrap();
+    let elems = served.input_elems();
+    let imgs = images(1);
+
+    let mut input = Vec::new();
+    input.extend_from_slice(&req_frame(8, &imgs[..elems]));
+    input.extend_from_slice(&100u32.to_le_bytes()); // promises 100 bytes...
+    input.extend_from_slice(b"only ten b"); // ...delivers 10, then EOF
+
+    let opts = ServeOptions { batch_max: 8, batch_wait: Duration::ZERO, ..Default::default() };
+    let mut out = Vec::new();
+    let stats = serve_stream(&mut served, Cursor::new(input), &mut out, &opts).unwrap();
+    assert_eq!(stats.requests, 1);
+
+    let resps = read_responses(&out);
+    assert_eq!(resps.len(), 2);
+    assert_eq!(get_u64(&resps[0], "id"), 8);
+    assert!(resps[0].get("error").is_none());
+    assert!(matches!(resps[1].get("id"), Some(Json::Null)));
+    assert!(resps[1].get("error").and_then(|e| e.as_str()).unwrap().contains("frame error"));
+}
+
+/// Contract 2 over TCP: two concurrent connections coalesce into one
+/// model, responses demux back to the connection that asked, and
+/// `{"cmd":"shutdown"}` from either stops the server cleanly.
+#[test]
+fn tcp_serves_concurrent_connections_and_shuts_down() {
+    let mut served = ServedModel::fresh("cnn_t", CFG, 7, 2).unwrap();
+    let elems = served.input_elems();
+    let imgs = images(2);
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+
+    let (a_done_tx, a_done_rx) = mpsc::channel::<()>();
+    let img_a = imgs[..elems].to_vec();
+    let client_a = std::thread::spawn(move || {
+        let mut s = TcpStream::connect(addr).unwrap();
+        s.write_all_frames(&req_frame(10, &img_a));
+        let resp = s.read_one_response();
+        a_done_tx.send(()).unwrap();
+        resp
+    });
+    let img_b = imgs[elems..2 * elems].to_vec();
+    let client_b = std::thread::spawn(move || {
+        // strictly after A has its answer: shutdown must not race A's
+        // request into a closed queue
+        a_done_rx.recv().unwrap();
+        let mut s = TcpStream::connect(addr).unwrap();
+        s.write_all_frames(&req_frame(20, &img_b));
+        let resp = s.read_one_response();
+        s.write_all_frames(&shutdown_frame());
+        resp
+    });
+
+    let opts = ServeOptions::default();
+    let stats = serve_tcp(&mut served, listener, &opts).unwrap();
+    assert_eq!(stats.requests, 2);
+
+    let resp_a = client_a.join().unwrap();
+    let resp_b = client_b.join().unwrap();
+    assert_eq!(get_u64(&resp_a, "id"), 10, "connection A got A's answer");
+    assert_eq!(get_u64(&resp_b, "id"), 20, "connection B got B's answer");
+    for resp in [&resp_a, &resp_b] {
+        let logits = resp.get("logits").unwrap().f32s().unwrap();
+        assert_eq!(logits.len(), served.classes());
+        assert_eq!(get_u64(resp, "argmax") as usize, argmax(&logits));
+    }
+}
+
+fn argmax(row: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, &x) in row.iter().enumerate() {
+        if x > row[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+/// Tiny client-side helpers for the TCP test.
+trait ClientExt {
+    fn write_all_frames(&mut self, bytes: &[u8]);
+    fn read_one_response(&mut self) -> Json;
+}
+
+impl ClientExt for TcpStream {
+    fn write_all_frames(&mut self, bytes: &[u8]) {
+        use std::io::Write;
+        self.write_all(bytes).unwrap();
+        self.flush().unwrap();
+    }
+
+    fn read_one_response(&mut self) -> Json {
+        let payload = frame::read_frame(self, 1 << 22).unwrap().expect("a response frame");
+        Json::parse(std::str::from_utf8(&payload).unwrap()).unwrap()
+    }
+}

@@ -43,6 +43,18 @@ def render(path):
         context.append(
             f"warm arena step: {bytes_per_step:g} heap bytes ({verdict})"
         )
+    if report.get("p50_us") is not None:
+        # bench_serve: the served-request latency floor on the
+        # quantize-once cache (enqueue-free, warm batch-1 forwards)
+        context.append(
+            f"served latency p50 {report['p50_us']:.1f}us"
+            f" / p99 {report.get('p99_us', 0):.1f}us"
+        )
+    bytes_per_request = report.get("bytes_allocated_per_request")
+    if bytes_per_request is not None:
+        context.append(
+            f"warm served request: {bytes_per_request:g} heap bytes"
+        )
     lines.append(", ".join(context))
     lines.append("")
     ratios = report.get("ratios") or {}
